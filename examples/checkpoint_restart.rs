@@ -1,0 +1,57 @@
+//! Checkpoint/restart (§4.1): pause a study mid-way (here: fail half the
+//! tasks on purpose), then resume — only the unfinished work re-runs.
+//!
+//! ```text
+//! cargo run --release --example checkpoint_restart
+//! ```
+
+use papas::study::Study;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let dir = std::env::temp_dir().join("papas_ckpt_example");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    // Tasks 1..6 sleep; tasks where marker file is absent fail on the
+    // first run (simulating a fault), succeed on the second.
+    let marker = dir.join("recovered");
+    let study_file = dir.join("faulty.yaml");
+    std::fs::write(
+        &study_file,
+        format!(
+            "work:\n  \
+               n: [1, 2, 3, 4, 5, 6]\n  \
+               command: /bin/sh -c \"test $((${{n}} % 2)) -eq 0 || test -f {} \"\n",
+            marker.display()
+        ),
+    )?;
+
+    let study = Study::from_file(&study_file)?.with_db_root(dir.join(".papas"));
+    println!("run 1 (half the tasks fault):");
+    let r1 = study.run_local(2)?;
+    println!(
+        "  completed={} failed={} (checkpoint keeps the {} successes)",
+        r1.completed, r1.failed, r1.completed
+    );
+    assert_eq!(r1.completed, 3);
+    assert_eq!(r1.failed, 3);
+
+    // "Fix the environment" and resume: only the 3 failures re-run.
+    std::fs::write(&marker, "ok")?;
+    println!("run 2 (resume from checkpoint):");
+    let r2 = study.run_local(2)?;
+    println!(
+        "  completed={} restored={} failed={}",
+        r2.completed, r2.restored, r2.failed
+    );
+    assert_eq!(r2.restored, 3, "previous successes restored, not re-run");
+    assert_eq!(r2.completed, 3, "only the failures re-ran");
+    assert!(r2.all_ok());
+
+    // A third run does nothing at all.
+    let r3 = study.run_local(2)?;
+    assert_eq!(r3.restored, 6);
+    assert_eq!(r3.completed, 0);
+    println!("run 3: fully restored, nothing executed — checkpoint complete.");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! The §7 performance study: weak/strong scaling of the matmul workload.
+//!
+//! Part 1 parses the paper's verbatim Figure 5 file and enumerates all 88
+//! workflow instances (Figure 6). Part 2 executes the execution-scaled
+//! variant (sizes ≤ 512 — this is a 1-core host) and prints the per-size,
+//! per-thread-count runtimes that a scaling study reports, using the HLO
+//! (Pallas) path where artifacts exist and the native path beyond.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example matmul_scaling
+//! ```
+
+use papas::bench::{fmt_secs, Table};
+use papas::runtime::RuntimeService;
+use papas::study::Study;
+use std::collections::BTreeMap;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // ---- Part 1: the paper's exact file → the 88 instances of Fig 6 ----
+    let full = Study::from_file("studies/matmul_omp.yaml")?;
+    let instances = full.instances()?;
+    println!(
+        "Figure 5 file parsed: {} combinations ({} sizes × {} thread counts)",
+        instances.len(),
+        11,
+        8
+    );
+    assert_eq!(instances.len(), 88, "the paper's 88 executions");
+    println!("first and last instances (Figure 6 content):");
+    println!("  {}", instances.first().unwrap().command_lines()[0]);
+    println!("  {}", instances.last().unwrap().command_lines()[0]);
+
+    // ---- Part 2: execute the scaled study ------------------------------
+    let work = std::env::temp_dir().join("papas_matmul_scaling");
+    let _ = std::fs::remove_dir_all(&work);
+    let study = Study::from_file("studies/matmul_omp_small.yaml")?
+        .with_db_root(work.join(".papas"))
+        .with_runtime(RuntimeService::start("artifacts")?);
+    println!(
+        "\nexecuting scaled study: {} instances (sizes ≤ 512)",
+        study.n_instances()
+    );
+    let report = study.run_local(2)?;
+    assert!(report.all_ok());
+
+    // Aggregate task runtimes by (size, threads) from provenance records.
+    let mut by_key: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    for rec in &report.records {
+        let combo = study.space().combination(rec.instance)?;
+        let size = combo["matmulOMP:args:size"].as_i64().unwrap() as u64;
+        let threads =
+            combo["matmulOMP:environ:OMP_NUM_THREADS"].as_i64().unwrap() as u64;
+        by_key.insert((size, threads), rec.duration());
+    }
+
+    let mut table = Table::new(
+        "matmul scaling (seconds per task; columns = OMP_NUM_THREADS)",
+        &["size", "T=1", "T=2", "T=4", "T=8"],
+    );
+    let sizes: Vec<u64> = vec![16, 32, 64, 128, 256, 512];
+    for &s in &sizes {
+        let cell = |t: u64| {
+            by_key
+                .get(&(s, t))
+                .map(|d| fmt_secs(*d))
+                .unwrap_or_else(|| "-".into())
+        };
+        table.row(&[s.to_string(), cell(1), cell(2), cell(4), cell(8)]);
+    }
+    table.print();
+    println!(
+        "\ntotal: {} tasks, makespan {}, utilization {:.0}%",
+        report.completed,
+        fmt_secs(report.makespan),
+        report.utilization * 100.0
+    );
+    Ok(())
+}

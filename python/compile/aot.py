@@ -1,0 +1,178 @@
+"""AOT compile path: lower every workload variant to HLO TEXT artifacts.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the Rust side's XLA
+(xla_extension 0.5.1, via the `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`). `HloModuleProto::from_text_file` reassigns ids,
+so text round-trips cleanly. See /opt/xla-example/load_hlo.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+
+Emits:
+  artifacts/<name>.hlo.txt      one per workload variant
+  artifacts/manifest.json       registry the Rust runtime loads at startup
+
+Lowering is with return_tuple=True, so every artifact's output is a 1-tuple
+(the Rust side unwraps with to_tuple1()).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul as matmul_kernel
+from .kernels import abm as abm_kernel
+from .kernels import reduce as reduce_kernel
+
+# Matrix sizes compiled to artifacts. The paper's study enumerates
+# 16..16384; we compile the sizes that are practical to *execute* on this
+# host — the full 88-instance grid is still enumerated by the Rust side
+# (Fig 6), with sizes above the cap routed to the native-matmul task.
+MATMUL_SIZES = (16, 32, 64, 128, 256, 512)
+
+# Ward geometries: (n_patients, n_hcw, n_steps). t168 = one week hourly
+# (the paper's NetLogo runs were ~30 min; ours are seconds, the *task
+# shape* is what matters to PaPaS).
+ABM_VARIANTS = (
+    (16, 2, 24),    # tiny: python/rust test variant
+    (32, 4, 72),    # small sweep variant
+    (64, 8, 168),   # the §6 case-study variant (25 instances swept)
+)
+
+# Ensemble-aggregation variants (replicates, steps) over the 6 ABM
+# metrics: one per ABM variant's sweep shape.
+ENSEMBLE_VARIANTS = (
+    (5, 24),     # tiny
+    (5, 72),     # the cdiff_intervention sweep (5 seeds)
+    (25, 168),   # the §6 25-replicate sweep
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> dict:
+    return {"shape": list(shape), "dtype": str(dtype)}
+
+
+def lower_matmul(n: int) -> tuple[str, dict]:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    lowered = jax.jit(model.matmul_fn).lower(spec, spec)
+    meta = {
+        "kind": "matmul",
+        "size": n,
+        "inputs": [_spec((n, n), "f32"), _spec((n, n), "f32")],
+        "outputs": [_spec((n, n), "f32")],
+        "flops": 2 * n * n * n,
+        "tpu_estimate": {
+            "vmem_bytes": matmul_kernel.vmem_footprint_bytes(
+                min(n, 128), min(n, 128), min(n, 128)
+            ),
+            "mxu_utilization": matmul_kernel.mxu_utilization_estimate(
+                min(n, 128), min(n, 128), min(n, 128)
+            ),
+        },
+    }
+    return to_hlo_text(lowered), meta
+
+
+def lower_abm(n_patients: int, n_hcw: int, n_steps: int) -> tuple[str, dict]:
+    run = model.abm_run_fn(n_patients, n_hcw, n_steps)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    params = jax.ShapeDtypeStruct((len(model.PARAM_NAMES),), jnp.float32)
+    lowered = jax.jit(run).lower(seed, params)
+    meta = {
+        "kind": "abm",
+        "n_patients": n_patients,
+        "n_hcw": n_hcw,
+        "n_steps": n_steps,
+        "inputs": [_spec((), "i32"), _spec((len(model.PARAM_NAMES),), "f32")],
+        "outputs": [_spec((n_steps, len(model.METRIC_NAMES)), "f32")],
+        "param_names": list(model.PARAM_NAMES),
+        "metric_names": list(model.METRIC_NAMES),
+        "tpu_estimate": {
+            "vmem_bytes": abm_kernel.vmem_footprint_bytes(n_patients, n_hcw),
+        },
+    }
+    return to_hlo_text(lowered), meta
+
+
+def lower_ensemble(replicates: int, n_steps: int) -> tuple[str, dict]:
+    m = len(model.METRIC_NAMES)
+    spec = jax.ShapeDtypeStruct((replicates, n_steps, m), jnp.float32)
+    lowered = jax.jit(model.ensemble_fn).lower(spec)
+    meta = {
+        "kind": "ensemble",
+        "replicates": replicates,
+        "n_steps": n_steps,
+        "inputs": [_spec((replicates, n_steps, m), "f32")],
+        "outputs": [_spec((n_steps, m, 4), "f32")],
+        "stat_names": list(reduce_kernel.STAT_NAMES),
+        "metric_names": list(model.METRIC_NAMES),
+        "tpu_estimate": {
+            "vmem_bytes": reduce_kernel.vmem_footprint_bytes(
+                replicates, min(n_steps, 32), m
+            ),
+        },
+    }
+    return to_hlo_text(lowered), meta
+
+
+def build_all(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"format": 1, "artifacts": {}}
+
+    jobs = []
+    for n in MATMUL_SIZES:
+        jobs.append((f"matmul_{n}", lambda n=n: lower_matmul(n)))
+    for p, h, t in ABM_VARIANTS:
+        jobs.append(
+            (f"abm_p{p}_h{h}_t{t}", lambda p=p, h=h, t=t: lower_abm(p, h, t))
+        )
+    for r, t in ENSEMBLE_VARIANTS:
+        jobs.append(
+            (f"ensemble_r{r}_t{t}", lambda r=r, t=t: lower_ensemble(r, t))
+        )
+
+    for name, build in jobs:
+        text, meta = build()
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = fname
+        meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        meta["hlo_bytes"] = len(text)
+        manifest["artifacts"][name] = meta
+        print(f"  {name}: {len(text)} chars -> {fname}")
+
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  manifest: {len(manifest['artifacts'])} artifacts -> {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

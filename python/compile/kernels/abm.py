@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: C. difficile ward transmission step (NetLogo substitute).
+
+The paper's §6 case study sweeps a NetLogo agent-based model of C. difficile
+transmission in a healthcare ward (healthcare workers as vectors, per-room
+contamination, patient antibiotic histories). NetLogo iterates per-turtle;
+the TPU-idiomatic formulation vectorizes the per-agent update across the
+patient axis and expresses the HCW<->patient interaction as two small
+matvecs against the visit matrix (H x P) — exactly the part NetLogo does
+with nested ask-loops.
+
+The kernel computes ONE epidemic step given pre-drawn uniforms (randomness
+stays in L2 where jax.random threefry lives); it is a single-block kernel:
+ward sizes (P <= a few hundred) fit VMEM whole, so grid=() and the BlockSpec
+machinery is unnecessary — the win is fusing the whole update into one pass.
+
+interpret=True always (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _abm_step_kernel(
+    status_ref, anti_ref, room_ref, hcw_ref, visits_ref, u_ref, params_ref,
+    new_status_ref, new_room_ref, new_hcw_ref,
+):
+    """Fused one-pass ward update; semantics identical to ref.abm_step_ref."""
+    status = status_ref[...]
+    room = room_ref[...]
+    hcw = hcw_ref[...]
+    visits = visits_ref[...]
+    u = u_ref[...]
+    beta = params_ref[0]
+    alpha = params_ref[1]
+    sigma = params_ref[2]
+    clean = params_ref[3]
+    hygiene = params_ref[4]
+    gamma = params_ref[5]
+    prog = params_ref[6]
+
+    # exposure[p] = sum_h visits[h, p] * hcw[h]   (V^T @ hcw)
+    exposure = jnp.sum(visits * hcw[:, None], axis=0)
+    suscept = jnp.where(
+        status < 0.5, 1.0 + alpha * (anti_ref[...] > 0.0), 0.0
+    )
+    p_col = 1.0 - jnp.exp(-beta * (exposure + room))
+    colonize = (u < p_col * suscept) & (status < 0.5)
+    progress = (u < prog) & (status >= 0.5) & (status < 1.5)
+    new_status = jnp.where(colonize, 1.0, jnp.where(progress, 2.0, status))
+
+    shed = sigma * (new_status >= 0.5)
+    new_room = jnp.clip(room * (1.0 - clean) + shed, 0.0, 1.0)
+
+    # pickup[h] = sum_p visits[h, p] * (room[p] + gamma * carrier[p])
+    load = room + gamma * (new_status >= 0.5)
+    pickup = jnp.sum(visits * load[None, :], axis=1)
+    new_hcw = jnp.clip(hcw * (1.0 - hygiene) + pickup, 0.0, 1.0)
+
+    new_status_ref[...] = new_status
+    new_room_ref[...] = new_room
+    new_hcw_ref[...] = new_hcw
+
+
+@jax.jit
+def abm_step(status, antibiotic, room, hcw, visits, u_col, params):
+    """One ward step via the fused Pallas kernel. See ref.abm_step_ref."""
+    p = status.shape[0]
+    h = hcw.shape[0]
+    return pl.pallas_call(
+        _abm_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+        ),
+        interpret=True,
+    )(status, antibiotic, room, hcw, visits, u_col, params)
+
+
+def vmem_footprint_bytes(n_patients: int, n_hcw: int) -> int:
+    """Whole-ward VMEM residency: all state + visit matrix + outputs (f32)."""
+    per_p = 5  # status, antibiotic, room, uniforms, new_status/new_room amortized
+    return 4 * (
+        per_p * n_patients + 2 * n_hcw + n_hcw * n_patients + 8
+    )

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: tiled matrix multiply (the paper's §7 workload).
+
+The paper's performance study sweeps an OpenMP matmul over matrix sizes and
+thread counts. Our workload equivalent is a TPU-idiomatic Pallas matmul:
+
+  * grid over (M/bm, N/bn) output tiles with a K-loop as the innermost grid
+    axis, accumulating into a VMEM scratch accumulator;
+  * BlockSpec tiles sized for VMEM residency (default 128x128x128 f32 ->
+    3 * 64 KiB = 192 KiB, far below ~16 MiB VMEM);
+  * MXU-shaped inner `jnp.dot` with preferred_element_type=float32 so
+    bf16/f32 inputs both accumulate in f32.
+
+Hardware adaptation note (DESIGN.md section 4): the paper targets CPU/OpenMP,
+not GPU, so there is no warp/threadblock construct to port; we express the
+HBM<->VMEM schedule with BlockSpec instead of OMP scheduling clauses.
+
+interpret=True ALWAYS: the CPU PJRT plugin cannot run Mosaic custom-calls;
+interpret mode lowers to plain HLO so the Rust runtime can execute the
+artifact anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += x_tile @ y_tile; flush on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (dims here are powers of 2)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """C = X @ Y via the tiled Pallas kernel (interpret mode).
+
+    Shapes need not be tile-aligned: block sizes are clamped to divisors of
+    each dimension (all study sizes are powers of two, so blocks stay
+    MXU-friendly powers of two).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, y)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Estimated VMEM residency per grid step: x-tile + y-tile + acc tile.
+
+    Used by DESIGN.md section 8 / EXPERIMENTS.md to report the TPU estimate
+    (interpret mode gives no real TPU timings).
+    """
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of each inner dot that maps onto full 128x128 MXU passes."""
+    eff = 1.0
+    for b in (bm, bn, bk):
+        eff *= min(b, 128) / 128.0
+    return eff

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: replicate-ensemble statistics (the paper's "data
+aggregation" workflow structure, §1 / Bharathi et al.).
+
+A parameter sweep produces R replicate metric series of shape [T, M]
+(e.g. the 25 C. difficile runs of §6). The aggregation stage reduces the
+stack [R, T, M] to per-step ensemble statistics [T, M, 4]:
+mean, unbiased variance, min, max — Welford-free one-pass moments are fine
+in f32 at R ≤ a few hundred.
+
+Kernel shape: grid over T-blocks; each step loads an [R, bt, M] slab into
+VMEM, reduces over the replicate axis in one fused pass. This is the
+post-processing hot-spot PaPaS pipelines run after a sweep (the `abm-agg`
+builtin task on the Rust side).
+
+interpret=True always (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Statistic columns emitted per (step, metric).
+STAT_NAMES = ("mean", "var", "min", "max")
+
+
+def _ensemble_kernel(x_ref, o_ref):
+    """Reduce an [R, bt, M] slab over axis 0 → [bt, M, 4]."""
+    x = x_ref[...]
+    r = x.shape[0]
+    mean = jnp.mean(x, axis=0)
+    # unbiased sample variance (guard r == 1)
+    diff = x - mean[None, :, :]
+    denom = jnp.maximum(r - 1, 1)
+    var = jnp.sum(diff * diff, axis=0) / denom
+    o_ref[..., 0] = mean
+    o_ref[..., 1] = var
+    o_ref[..., 2] = jnp.min(x, axis=0)
+    o_ref[..., 3] = jnp.max(x, axis=0)
+
+
+def _pick_block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def ensemble_stats(x, *, bt: int = 32):
+    """[R, T, M] replicate stack → [T, M, 4] per-step ensemble stats."""
+    r, t, m = x.shape
+    assert r >= 1, "need at least one replicate"
+    bt = _pick_block(t, bt)
+    grid = (t // bt,)
+    return pl.pallas_call(
+        _ensemble_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((r, bt, m), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((bt, m, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m, 4), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+def vmem_footprint_bytes(r: int, bt: int, m: int) -> int:
+    """Slab + output tile residency per grid step (f32)."""
+    return 4 * (r * bt * m + bt * m * 4)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: python/tests/ asserts the Pallas
+kernels (interpret=True) match these within float tolerance across shape /
+dtype / seed sweeps (hypothesis). They are also what the L2 model *means*;
+the kernels are just the fast path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain jnp matmul with f32 accumulation (matches the kernel's acc)."""
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def ensemble_stats_ref(x):
+    """[R, T, M] replicate stack → [T, M, 4] (mean, var, min, max)."""
+    x = x.astype(jnp.float32)
+    r = x.shape[0]
+    mean = jnp.mean(x, axis=0)
+    denom = max(r - 1, 1)
+    var = jnp.sum((x - mean[None]) ** 2, axis=0) / denom
+    return jnp.stack(
+        [mean, var, jnp.min(x, axis=0), jnp.max(x, axis=0)], axis=-1
+    )
+
+
+def abm_step_ref(status, antibiotic, room, hcw, visits, u_col, params):
+    """One C. difficile ward transmission step — reference semantics.
+
+    Args:
+      status:     f32[P]   0=susceptible, 1=colonized, 2=diseased
+      antibiotic: f32[P]   days of antibiotic exposure remaining (>=0)
+      room:       f32[P]   room contamination level in [0, 1]
+      hcw:        f32[H]   healthcare-worker hand contamination in [0, 1]
+      visits:     f32[H,P] 1.0 where HCW h visits patient p this step
+      u_col:      f32[P]   uniform(0,1) draws for colonization events
+      params:     f32[8]   [beta, alpha, sigma, clean, hygiene, gamma,
+                            prog, pad] — transmission rate, antibiotic
+                            susceptibility multiplier, shedding rate, room
+                            cleaning efficacy, HCW hand-hygiene compliance,
+                            patient->HCW pickup factor, colonized->diseased
+                            progression probability, padding.
+
+    Returns:
+      (new_status f32[P], new_room f32[P], new_hcw f32[H])
+    """
+    beta, alpha, sigma, clean, hygiene, gamma, prog = (
+        params[0], params[1], params[2], params[3], params[4], params[5],
+        params[6],
+    )
+    # Exposure delivered to each patient by visiting HCWs:  V^T @ hcw.
+    exposure = jnp.einsum("hp,h->p", visits, hcw)
+    # Antibiotic exposure raises susceptibility of susceptible patients.
+    suscept = jnp.where(status < 0.5, 1.0 + alpha * (antibiotic > 0.0), 0.0)
+    p_col = 1.0 - jnp.exp(-beta * (exposure + room))
+    colonize = (u_col < p_col * suscept) & (status < 0.5)
+    # Susceptible -> colonized via the transmission draw; colonized ->
+    # diseased when the same uniform falls below prog (one-pass kernel).
+    progress = (u_col < prog) & (status >= 0.5) & (status < 1.5)
+    new_status = jnp.where(
+        colonize, 1.0, jnp.where(progress, 2.0, status)
+    )
+    # Shedding into the room by colonized/diseased patients; rooms cleaned.
+    shed = sigma * (new_status >= 0.5)
+    new_room = jnp.clip(room * (1.0 - clean) + shed, 0.0, 1.0)
+    # HCWs pick up from rooms + patients they visited; then hand hygiene.
+    pickup = jnp.einsum("hp,p->h", visits, room + gamma * (new_status >= 0.5))
+    new_hcw = jnp.clip(hcw * (1.0 - hygiene) + pickup, 0.0, 1.0)
+    return new_status, new_room, new_hcw

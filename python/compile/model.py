@@ -1,0 +1,155 @@
+"""L2: the swept workloads as JAX compute graphs (build-time only).
+
+Two workloads, matching the paper's two case studies:
+
+  * `matmul_fn` — §7 performance-study workload (OpenMP matmul
+    substitute). Calls the L1 Pallas tiled-matmul kernel so the kernel
+    lowers into the same HLO artifact.
+  * `abm_run_fn(P, H, T)` — §6 parameter-sweep workload: the C. difficile
+    healthcare-ward agent-based model (NetLogo substitute). `lax.scan` over
+    T steps; each step draws visit patterns / uniforms with threefry
+    counters and applies the L1 fused ward-update kernel. Returns a metrics
+    time series — a single tensor so the Rust runtime deals with exactly
+    one output buffer.
+
+Everything here is lowered ONCE by aot.py into artifacts/*.hlo.txt; Python
+never runs on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.abm import abm_step
+from .kernels.matmul import matmul
+from .kernels.reduce import ensemble_stats
+
+# Index names for the ABM params vector (f32[8]).
+PARAM_NAMES = (
+    "beta",       # transmission rate per unit exposure
+    "alpha",      # antibiotic susceptibility multiplier
+    "sigma",      # shedding rate of carriers into rooms
+    "clean",      # per-step room cleaning efficacy
+    "hygiene",    # HCW hand-hygiene compliance
+    "gamma",      # patient->HCW pickup factor
+    "prog",       # colonized -> diseased progression probability
+    "visit_rate"  # per-(HCW, patient) visit probability per step
+)
+
+# Metrics columns emitted per step (f32[T, 6]).
+METRIC_NAMES = (
+    "n_susceptible", "n_colonized", "n_diseased",
+    "mean_room_contam", "mean_hcw_contam", "n_on_antibiotics",
+)
+
+
+def matmul_fn(x, y):
+    """C = X @ Y through the Pallas kernel (1-tuple for AOT).
+
+    Block-size policy (perf pass, EXPERIMENTS.md §Perf): 128³ tiles keep
+    the MXU shape, but on the interpret/CPU path every grid step pays a
+    dispatch overhead — at n=512 that is 64 steps and the HLO artifact ran
+    1.7× slower than the native baseline. 256³ tiles (768 KiB VMEM, still
+    ≪16 MiB; two full MXU passes per axis) cut n=512 to 8 steps.
+    """
+    n = max(x.shape[0], x.shape[1])
+    b = 256 if n >= 256 else 128
+    return (matmul(x, y, bm=b, bn=b, bk=b),)
+
+
+def _metrics(status, antibiotic, room, hcw):
+    return jnp.stack([
+        jnp.sum(status < 0.5).astype(jnp.float32),
+        jnp.sum((status >= 0.5) & (status < 1.5)).astype(jnp.float32),
+        jnp.sum(status >= 1.5).astype(jnp.float32),
+        jnp.mean(room),
+        jnp.mean(hcw),
+        jnp.sum(antibiotic > 0.0).astype(jnp.float32),
+    ])
+
+
+def abm_init(key, n_patients: int, n_hcw: int, init_colonized: float,
+             init_antibiotic: float):
+    """Initial ward state: a few admitted carriers, some on antibiotics."""
+    k1, k2 = jax.random.split(key)
+    status = (
+        jax.random.uniform(k1, (n_patients,)) < init_colonized
+    ).astype(jnp.float32)
+    antibiotic = jnp.where(
+        jax.random.uniform(k2, (n_patients,)) < init_antibiotic, 3.0, 0.0
+    )
+    room = jnp.zeros((n_patients,), jnp.float32)
+    hcw = jnp.zeros((n_hcw,), jnp.float32)
+    return status, antibiotic, room, hcw
+
+
+def abm_scan_step(carry, key, params, n_patients: int, n_hcw: int):
+    """One epidemic step: draw stochastic inputs, run the fused kernel,
+    then the slow-timescale updates (antibiotic countdown, admissions)."""
+    status, antibiotic, room, hcw = carry
+    kv, ku, ka, kd = jax.random.split(key, 4)
+    visit_rate = params[7]
+    visits = (
+        jax.random.uniform(kv, (n_hcw, n_patients)) < visit_rate
+    ).astype(jnp.float32)
+    u_col = jax.random.uniform(ku, (n_patients,))
+
+    status, room, hcw = abm_step(
+        status, antibiotic, room, hcw, visits, u_col, params
+    )
+
+    # Antibiotic courses: countdown + new prescriptions (fixed 5% / step).
+    new_rx = jax.random.uniform(ka, (n_patients,)) < 0.05
+    antibiotic = jnp.where(new_rx, 3.0, jnp.maximum(antibiotic - 1.0, 0.0))
+
+    # Discharge/admission: 2% of carriers replaced by a fresh susceptible
+    # admission; their room gets a terminal clean.
+    discharge = (jax.random.uniform(kd, (n_patients,)) < 0.02) & (
+        status >= 0.5
+    )
+    status = jnp.where(discharge, 0.0, status)
+    antibiotic = jnp.where(discharge, 0.0, antibiotic)
+    room = jnp.where(discharge, room * 0.1, room)
+
+    carry = (status, antibiotic, room, hcw)
+    return carry, _metrics(status, antibiotic, room, hcw)
+
+
+def abm_run_fn(n_patients: int, n_hcw: int, n_steps: int):
+    """Build the whole-run function for fixed ward geometry.
+
+    Returns fn(seed i32[], params f32[8]) -> (metrics f32[T, 6],)
+    """
+
+    def run(seed, params):
+        key = jax.random.PRNGKey(seed)
+        k_init, k_run = jax.random.split(key)
+        carry = abm_init(k_init, n_patients, n_hcw,
+                         init_colonized=0.10, init_antibiotic=0.30)
+        keys = jax.random.split(k_run, n_steps)
+        _, series = jax.lax.scan(
+            lambda c, k: abm_scan_step(c, k, params, n_patients, n_hcw),
+            carry, keys,
+        )
+        return (series,)
+
+    return run
+
+
+def ensemble_fn(x):
+    """Aggregation workload: replicate stack → per-step ensemble stats
+    (1-tuple for AOT). The sweep post-processing stage of §1's "data
+    aggregation" workflow structure."""
+    return (ensemble_stats(x),)
+
+
+def default_abm_params(**overrides) -> jnp.ndarray:
+    """Baseline parameterization; keyword overrides by PARAM_NAMES."""
+    base = dict(beta=0.35, alpha=1.5, sigma=0.25, clean=0.35, hygiene=0.55,
+                gamma=0.20, prog=0.03, visit_rate=0.12)
+    for k, v in overrides.items():
+        if k not in base:
+            raise KeyError(f"unknown ABM parameter {k!r}")
+        base[k] = v
+    return jnp.array([base[k] for k in PARAM_NAMES], jnp.float32)

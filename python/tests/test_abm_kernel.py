@@ -1,0 +1,105 @@
+"""L1 correctness: the fused ABM ward-update kernel vs the jnp oracle,
+plus the epidemiological invariants the C. difficile model must satisfy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.abm import abm_step, vmem_footprint_bytes
+from compile.kernels.ref import abm_step_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_state(p, h, seed, colonized=0.15, diseased=0.05):
+    rs = np.random.RandomState(seed)
+    u = rs.rand(p)
+    status = np.where(u < colonized, 1.0, np.where(u > 1 - diseased, 2.0, 0.0))
+    return dict(
+        status=status.astype(np.float32),
+        antibiotic=(rs.rand(p) < 0.3).astype(np.float32) * 3.0,
+        room=(rs.rand(p) * 0.3).astype(np.float32),
+        hcw=(rs.rand(h) * 0.2).astype(np.float32),
+        visits=(rs.rand(h, p) < 0.2).astype(np.float32),
+        u_col=rs.rand(p).astype(np.float32),
+    )
+
+
+def default_params(**over):
+    base = dict(beta=0.35, alpha=1.5, sigma=0.25, clean=0.35, hygiene=0.55,
+                gamma=0.20, prog=0.03, pad=0.0)
+    base.update(over)
+    return np.array(list(base.values()), dtype=np.float32)
+
+
+def run_both(state, params):
+    args = [jnp.asarray(state[k]) for k in
+            ("status", "antibiotic", "room", "hcw", "visits", "u_col")]
+    args.append(jnp.asarray(params))
+    return abm_step(*args), abm_step_ref(*args)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.sampled_from([4, 16, 33, 64, 128]),
+    h=st.sampled_from([1, 2, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    beta=st.floats(0.0, 2.0),
+    hygiene=st.floats(0.0, 1.0),
+)
+def test_kernel_matches_ref(p, h, seed, beta, hygiene):
+    state = make_state(p, h, seed)
+    params = default_params(beta=beta, hygiene=hygiene)
+    got, want = run_both(state, params)
+    for g, w, name in zip(got, want, ("status", "room", "hcw")):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-6,
+            err_msg=name,
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.sampled_from([16, 64]), seed=st.integers(0, 2**31 - 1))
+def test_invariants(p, seed):
+    """States stay in {0,1,2}; contamination stays in [0,1]; statuses only
+    move forward (S→C→D) within a step."""
+    state = make_state(p, 8, seed)
+    (status, room, hcw), _ = run_both(state, default_params())
+    status, room, hcw = map(np.asarray, (status, room, hcw))
+    assert set(np.unique(status)).issubset({0.0, 1.0, 2.0})
+    assert (room >= 0).all() and (room <= 1).all()
+    assert (hcw >= 0).all() and (hcw <= 1).all()
+    # no backward transitions within a kernel step
+    assert (status >= state["status"]).all()
+
+
+def test_no_transmission_when_beta_zero():
+    state = make_state(64, 8, 3)
+    params = default_params(beta=0.0, prog=0.0)
+    (status, _, _), _ = run_both(state, params)
+    np.testing.assert_array_equal(np.asarray(status), state["status"])
+
+
+def test_beta_monotonicity():
+    """Higher transmission rate ⇒ at least as many colonizations (same
+    uniforms — a coupling argument)."""
+    state = make_state(256, 8, 11)
+    lo, _ = run_both(state, default_params(beta=0.1))
+    hi, _ = run_both(state, default_params(beta=1.5))
+    n_lo = float(jnp.sum(lo[0] >= 0.5))
+    n_hi = float(jnp.sum(hi[0] >= 0.5))
+    assert n_hi >= n_lo
+
+
+def test_full_hygiene_clears_hcw_pickup_decay():
+    state = make_state(32, 4, 5)
+    state["visits"] = np.zeros_like(state["visits"])  # no visits
+    (_, _, hcw), _ = run_both(state, default_params(hygiene=1.0))
+    np.testing.assert_allclose(np.asarray(hcw), 0.0, atol=1e-7)
+
+
+def test_vmem_estimate_small():
+    # whole-ward state fits VMEM easily even at 4x the study size
+    assert vmem_footprint_bytes(256, 32) < 16 * 2**20

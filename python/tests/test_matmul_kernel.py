@@ -1,0 +1,97 @@
+"""L1 correctness: Pallas tiled matmul vs the pure-jnp oracle.
+
+hypothesis sweeps shapes, block sizes, and dtypes; assert_allclose against
+ref.matmul_ref is the CORE correctness signal for the kernel that every
+matmul artifact embeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    matmul,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(shape, seed, dtype=np.float32):
+    return np.random.RandomState(seed).randn(*shape).astype(dtype)
+
+
+# powers of two cover every study size class without 16k-scale runtimes
+DIMS = st.sampled_from([1, 2, 4, 8, 16, 32, 64, 128, 256])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_across_shapes(m, k, n, seed):
+    x = jnp.asarray(_rand((m, k), seed))
+    y = jnp.asarray(_rand((k, n), seed + 1))
+    got = matmul(x, y)
+    want = matmul_ref(x, y)
+    # Tiled k-blocked accumulation reorders f32 sums vs the one-shot dot;
+    # error grows ~sqrt(k) ulps, so scale the absolute tolerance.
+    atol = 1e-6 * np.sqrt(k) * 4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=atol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([16, 32, 64, 128]),
+    bn=st.sampled_from([16, 32, 64, 128]),
+    bk=st.sampled_from([16, 32, 64, 128]),
+)
+def test_block_shape_invariance(bm, bn, bk):
+    """Any tiling produces the same numbers (the kernel's key invariant)."""
+    x = jnp.asarray(_rand((128, 128), 7))
+    y = jnp.asarray(_rand((128, 128), 8))
+    got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_non_square_and_study_sizes():
+    for m, k, n in [(16, 16, 16), (256, 64, 32), (512, 512, 512)]:
+        x = jnp.asarray(_rand((m, k), m + k))
+        y = jnp.asarray(_rand((k, n), k + n))
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, y)), np.asarray(matmul_ref(x, y)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_bfloat16_inputs_accumulate_in_f32():
+    x = jnp.asarray(_rand((64, 64), 1)).astype(jnp.bfloat16)
+    y = jnp.asarray(_rand((64, 64), 2)).astype(jnp.bfloat16)
+    got = matmul(x, y)
+    want = matmul_ref(x, y)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_contraction_mismatch_rejected():
+    x = jnp.zeros((4, 8), jnp.float32)
+    y = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul(x, y)
+
+
+def test_tpu_estimates():
+    # DESIGN.md §8: default tiles = 192 KiB, far below 16 MiB VMEM
+    assert vmem_footprint_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(64, 128, 128) == 0.5
+    assert mxu_utilization_estimate(16, 16, 16) == (16 / 128) ** 3

@@ -1,0 +1,77 @@
+"""L2 correctness: the whole-run ABM model (lax.scan over the kernel) and
+the matmul model wrapper."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_enable_x64", False)
+
+
+def run(seed, p=16, h=2, t=24, **overrides):
+    fn = model.abm_run_fn(p, h, t)
+    params = model.default_abm_params(**overrides)
+    (series,) = jax.jit(fn)(jnp.int32(seed), params)
+    return np.asarray(series)
+
+
+def test_series_shape_and_columns():
+    s = run(0)
+    assert s.shape == (24, len(model.METRIC_NAMES))
+
+
+def test_determinism_per_seed():
+    np.testing.assert_array_equal(run(7), run(7))
+    assert not np.array_equal(run(7), run(8))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_population_conserved(seed):
+    """S + C + D == n_patients at every step."""
+    p = 32
+    s = run(seed, p=p, h=4, t=24)
+    totals = s[:, 0] + s[:, 1] + s[:, 2]
+    np.testing.assert_allclose(totals, p)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bounded_metrics(seed):
+    s = run(seed)
+    assert (s[:, 3] >= 0).all() and (s[:, 3] <= 1).all()  # room contam
+    assert (s[:, 4] >= 0).all() and (s[:, 4] <= 1).all()  # hcw contam
+    assert (s[:, 5] >= 0).all() and (s[:, 5] <= 16).all() # on antibiotics
+
+
+def test_transmission_parameter_has_effect():
+    """An aggressive parameterization infects more than a protective one
+    (averaged over seeds)."""
+    def mean_carriers(**ov):
+        vals = [run(s, p=64, h=8, t=72, **ov)[-1, 1:3].sum() for s in range(5)]
+        return float(np.mean(vals))
+
+    protective = mean_carriers(beta=0.05, hygiene=0.95, clean=0.9)
+    aggressive = mean_carriers(beta=1.2, hygiene=0.05, clean=0.05)
+    assert aggressive > protective, (aggressive, protective)
+
+
+def test_default_params_and_overrides():
+    p = model.default_abm_params()
+    assert p.shape == (len(model.PARAM_NAMES),)
+    p2 = model.default_abm_params(beta=0.9)
+    assert float(p2[0]) == pytest.approx(0.9)
+    with pytest.raises(KeyError):
+        model.default_abm_params(nope=1.0)
+
+
+def test_matmul_fn_wraps_kernel():
+    x = jnp.asarray(np.random.RandomState(0).randn(32, 32), jnp.float32)
+    (out,) = model.matmul_fn(x, x)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(x) @ np.asarray(x), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,82 @@
+//! FIGURE 5 / §7 — the matmul weak+strong scaling study, executed.
+//!
+//! The paper's study runs `matmul` over sizes 16:*2:16384 and
+//! OMP_NUM_THREADS 1:8 and reports per-task runtimes. This bench runs the
+//! execution-scaled grid (sizes ≤ 512 on this 1-core host) twice:
+//!
+//!   * HLO path — the AOT-compiled Pallas kernel via PJRT;
+//!   * native path — the Rust tiled matmul (the "OpenMP binary").
+//!
+//! It prints the per-(size, threads) seconds matrix for both paths plus
+//! the weak/strong-scaling series a scaling study reads off it. Thread
+//! scaling on 1 core is concurrency-not-parallelism; the *size* scaling
+//! (the study's weak axis) is the meaningful shape here and should grow
+//! ~8× per size doubling (O(n³)) for the native path.
+
+use papas::bench::{fmt_secs, measure, Table};
+use papas::runtime::RuntimeService;
+use papas::tasks::matmul::{generate_inputs, multiply_tiled};
+
+const SIZES: [usize; 6] = [16, 32, 64, 128, 256, 512];
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    // ---------------------------------------------- native path (threads grid)
+    let mut native = Table::new(
+        "§7 scaling — native tiled matmul, seconds per task (rows=size, cols=threads)",
+        &["size", "T=1", "T=2", "T=4", "T=8", "GFLOP/s(T=1)"],
+    );
+    let mut t1_times = Vec::new();
+    for &n in &SIZES {
+        let (a, b) = generate_inputs(n);
+        let mut cells = vec![n.to_string()];
+        let mut t1 = 0.0;
+        for &t in &THREADS {
+            let reps = if n <= 64 { 20 } else if n <= 256 { 5 } else { 2 };
+            let s = measure(1, reps, || multiply_tiled(n, &a, &b, t));
+            if t == 1 {
+                t1 = s.p50;
+            }
+            cells.push(fmt_secs(s.p50));
+        }
+        let gflops = 2.0 * (n as f64).powi(3) / t1 / 1e9;
+        cells.push(format!("{gflops:.2}"));
+        native.row(&cells);
+        t1_times.push(t1);
+    }
+    native.print();
+
+    // weak-scaling shape: runtime ratio per size doubling ≈ 8 (O(n^3))
+    println!("\nsize-doubling runtime ratios (expect → 8 as n grows):");
+    for w in t1_times.windows(2) {
+        print!(" {:.1}", w[1] / w[0]);
+    }
+    println!();
+
+    // ---------------------------------------------- HLO path (Pallas artifact)
+    match RuntimeService::start("artifacts") {
+        Ok(rt) => {
+            let mut hlo = Table::new(
+                "§7 scaling — AOT Pallas/PJRT artifact path",
+                &["size", "t_exec", "native(T=1)", "hlo/native"],
+            );
+            for (i, &n) in SIZES.iter().enumerate() {
+                let (a, b) = generate_inputs(n);
+                let reps = if n <= 128 { 10 } else { 3 };
+                let s = measure(1, reps, || {
+                    rt.run_matmul(n, a.clone(), b.clone()).unwrap()
+                });
+                hlo.row(&[
+                    n.to_string(),
+                    fmt_secs(s.p50),
+                    fmt_secs(t1_times[i]),
+                    format!("{:.2}x", s.p50 / t1_times[i]),
+                ]);
+            }
+            hlo.print();
+            let (compiles, execs) = rt.stats().unwrap();
+            println!("PJRT: {compiles} compiles, {execs} executions (cache works)");
+        }
+        Err(e) => println!("(HLO path skipped: {e})"),
+    }
+}

@@ -1,0 +1,181 @@
+//! Argument parsing for the `papas` CLI (no clap offline).
+
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed flags: positional args + `--key value` / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+/// The recognized subcommands.
+#[derive(Debug)]
+pub enum ParsedCommand {
+    /// `papas run ...`
+    Run(Args),
+    /// `papas resume ...`
+    Resume(Args),
+    /// `papas validate ...`
+    Validate(Args),
+    /// `papas combos ...`
+    Combos(Args),
+    /// `papas viz ...`
+    Viz(Args),
+    /// `papas worker ...`
+    Worker(Args),
+    /// `papas qsim ...`
+    Qsim(Args),
+    /// `papas aggregate ...` (§9 extension: merge instance outputs)
+    Aggregate(Args),
+    /// `papas dax ...` (§9 extension: Pegasus DAX export)
+    Dax(Args),
+    /// `papas status ...` (file-database monitoring view)
+    Status(Args),
+    /// `papas help` / no args.
+    Help,
+}
+
+/// Switches (no value) per subcommand; everything else starting with
+/// `--` takes a value.
+const SWITCHES: &[&str] = &["fresh", "dot", "quiet", "concat", "gantt"];
+
+impl Args {
+    /// Parse a full argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<ParsedCommand> {
+        let Some(cmd) = argv.first() else {
+            return Ok(ParsedCommand::Help);
+        };
+        let rest = Self::parse_rest(&argv[1..])?;
+        match cmd.as_str() {
+            "run" => Ok(ParsedCommand::Run(rest)),
+            "resume" => Ok(ParsedCommand::Resume(rest)),
+            "validate" => Ok(ParsedCommand::Validate(rest)),
+            "combos" => Ok(ParsedCommand::Combos(rest)),
+            "viz" => Ok(ParsedCommand::Viz(rest)),
+            "worker" => Ok(ParsedCommand::Worker(rest)),
+            "qsim" => Ok(ParsedCommand::Qsim(rest)),
+            "aggregate" => Ok(ParsedCommand::Aggregate(rest)),
+            "dax" => Ok(ParsedCommand::Dax(rest)),
+            "status" => Ok(ParsedCommand::Status(rest)),
+            "help" | "--help" | "-h" => Ok(ParsedCommand::Help),
+            other => Err(Error::Exec(format!(
+                "unknown subcommand '{other}' (try 'papas help')"
+            ))),
+        }
+    }
+
+    fn parse_rest(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if SWITCHES.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let value = argv.get(i + 1).ok_or_else(|| {
+                        Error::Exec(format!("option --{name} needs a value"))
+                    })?;
+                    out.options.insert(name.to_string(), value.clone());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Option with a default.
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Parsed numeric option with a default.
+    pub fn opt_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Exec(format!("option --{key}: bad value '{v}'"))
+            }),
+        }
+    }
+
+    /// Is a switch present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// First positional argument or error.
+    pub fn require_positional(&self, what: &str) -> Result<&str> {
+        self.positional
+            .first()
+            .map(String::as_str)
+            .ok_or_else(|| Error::Exec(format!("missing {what}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommands() {
+        assert!(matches!(Args::parse(&sv(&["run", "s.yaml"])).unwrap(), ParsedCommand::Run(_)));
+        assert!(matches!(Args::parse(&sv(&["help"])).unwrap(), ParsedCommand::Help));
+        assert!(matches!(Args::parse(&[]).unwrap(), ParsedCommand::Help));
+        assert!(Args::parse(&sv(&["destroy"])).is_err());
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let ParsedCommand::Run(a) = Args::parse(&sv(&[
+            "run", "study.yaml", "--workers", "4", "--fresh", "extra.yaml",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.positional, vec!["study.yaml", "extra.yaml"]);
+        assert_eq!(a.opt_or("workers", "1"), "4");
+        assert_eq!(a.opt_num::<usize>("workers", 1).unwrap(), 4);
+        assert!(a.has_flag("fresh"));
+        assert!(!a.has_flag("dot"));
+        assert_eq!(a.require_positional("study file").unwrap(), "study.yaml");
+    }
+
+    #[test]
+    fn missing_value_and_bad_number() {
+        assert!(Args::parse(&sv(&["run", "--workers"])).is_err());
+        let ParsedCommand::Run(a) =
+            Args::parse(&sv(&["run", "--workers", "abc"])).unwrap()
+        else {
+            panic!()
+        };
+        assert!(a.opt_num::<usize>("workers", 1).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let ParsedCommand::Run(a) = Args::parse(&sv(&["run", "x"])).unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.opt_or("mode", "local"), "local");
+        assert_eq!(a.opt_num::<u64>("seed", 42).unwrap(), 42);
+        assert!(Args::parse(&sv(&["run"])).is_ok());
+        let ParsedCommand::Run(b) = Args::parse(&sv(&["run"])).unwrap() else {
+            panic!()
+        };
+        assert!(b.require_positional("study file").is_err());
+    }
+}

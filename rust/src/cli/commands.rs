@@ -1,0 +1,430 @@
+//! CLI subcommand implementations.
+
+use super::args::Args;
+use crate::cluster::{BatchJob, ClusterSim, Regime, SimConfig};
+use crate::exec::runner::{RunConfig, TaskRunner};
+use crate::exec::ssh::WorkerDaemon;
+use crate::runtime::RuntimeService;
+use crate::study::Study;
+use crate::tasks::Builtins;
+use crate::util::error::{Error, Result};
+use crate::viz::{render_ascii, render_dot, DagView};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Help text.
+pub const USAGE: &str = "\
+papas — parallel parameter studies (PEARC'18 reproduction)
+
+USAGE:
+  papas run STUDY.yaml [overlay.yaml ...] [--workers N] [--mode local|mpi|ssh]
+            [--nnodes N] [--ppnode P] [--hosts a:p,b:p] [--artifacts DIR]
+            [--db DIR] [--fresh]
+  papas resume STUDY.yaml [...]        continue from the checkpoint
+  papas validate STUDY.yaml [...]      parse + validate, print warnings
+  papas combos STUDY.yaml [--limit N]  enumerate workflow instances (Fig. 6)
+  papas viz STUDY.yaml [--dot]         render the task DAG
+  papas worker --bind HOST:PORT [--artifacts DIR]   SSH-mode worker daemon
+  papas qsim --jobs N --regime optimal|serial|common [--nodes N] [--gantt]
+             [--duration S] [--nnodes N] [--ppnode P] [--seed S]
+  papas aggregate STUDY.yaml [--pattern RE] [--out FILE] [--concat]
+  papas dax STUDY.yaml [--instance N]       Pegasus DAX export (§9)
+  papas status [DB-DIR] [--gantt]           inspect a study database
+  papas help";
+
+fn load_study(a: &Args) -> Result<Study> {
+    load_study_opts(a, /*with_runtime=*/ true)
+}
+
+/// Analysis-only commands (validate/combos/viz/dax) skip PJRT startup.
+fn load_study_opts(a: &Args, with_runtime: bool) -> Result<Study> {
+    if a.positional.is_empty() {
+        return Err(Error::Exec("missing study file".into()));
+    }
+    let paths: Vec<PathBuf> = a.positional.iter().map(PathBuf::from).collect();
+    let mut study = Study::from_files(&paths)?;
+    if let Some(db) = a.options.get("db") {
+        study = study.with_db_root(db);
+    }
+    if !with_runtime {
+        return Ok(study);
+    }
+    if let Some(dir) = a.options.get("artifacts") {
+        study = study.with_runtime(RuntimeService::start(dir)?);
+    } else if std::path::Path::new("artifacts/manifest.json").exists() {
+        study = study.with_runtime(RuntimeService::start("artifacts")?);
+    }
+    Ok(study)
+}
+
+/// `papas run` / `papas resume`.
+pub fn cmd_run(a: &Args, resume: bool) -> Result<()> {
+    let study = load_study(a)?;
+    for w in &study.warnings {
+        eprintln!("warning: {w}");
+    }
+    if a.has_flag("fresh") && !resume {
+        study.clear_checkpoint()?;
+    }
+    let mode = a.opt_or("mode", "local");
+    println!(
+        "study '{}': {} combinations, {} selected instances, mode={mode}",
+        study.name,
+        study.space().len(),
+        study.n_instances()
+    );
+    let report = match mode.as_str() {
+        "local" => study.run_local(a.opt_num("workers", 2)?),
+        "mpi" => study.run_mpi(a.opt_num("nnodes", 1)?, a.opt_num("ppnode", 2)?),
+        "ssh" => {
+            let hosts: Vec<String> = a
+                .opt_or("hosts", "")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            study.run_ssh(&hosts, a.opt_num("workers", 2)?)
+        }
+        other => Err(Error::Exec(format!("unknown mode '{other}'"))),
+    }?;
+    println!(
+        "done: {} completed, {} failed, {} skipped, {} restored | makespan \
+         {:.3}s | utilization {:.0}%",
+        report.completed,
+        report.failed,
+        report.skipped,
+        report.restored,
+        report.makespan,
+        report.utilization * 100.0
+    );
+    if !report.all_ok() {
+        return Err(Error::Exec("some tasks failed".into()));
+    }
+    Ok(())
+}
+
+/// `papas validate`.
+pub fn cmd_validate(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    println!(
+        "OK: {} tasks, {} parameters, {} combinations, {} selected",
+        study.spec.tasks.len(),
+        study.space().params().len(),
+        study.space().len(),
+        study.n_instances()
+    );
+    for w in &study.warnings {
+        println!("warning: {w}");
+    }
+    Ok(())
+}
+
+/// `papas combos` — the Figure 6 enumeration.
+pub fn cmd_combos(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    let limit: usize = a.opt_num("limit", usize::MAX)?;
+    let instances = study.instances()?;
+    for inst in instances.iter().take(limit) {
+        for cmd in inst.command_lines() {
+            println!("{}: {cmd}", inst.display_id());
+        }
+    }
+    println!("# {} workflow instances", instances.len());
+    Ok(())
+}
+
+/// `papas viz`.
+pub fn cmd_viz(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    let instances = study.instances()?;
+    let first = instances
+        .first()
+        .ok_or_else(|| Error::Exec("study has no instances".into()))?;
+    let view = DagView::pending(&first.dag);
+    if a.has_flag("dot") {
+        print!("{}", render_dot(&view, &study.name));
+    } else {
+        print!("{}", render_ascii(&view));
+        println!(
+            "({} instances share this task graph)",
+            instances.len()
+        );
+    }
+    Ok(())
+}
+
+/// `papas worker` — the SSH-mode daemon.
+pub fn cmd_worker(a: &Args) -> Result<()> {
+    let bind = a
+        .options
+        .get("bind")
+        .ok_or_else(|| Error::Exec("worker needs --bind HOST:PORT".into()))?;
+    let builtins = match a.options.get("artifacts") {
+        Some(dir) => Arc::new(Builtins::with_runtime(RuntimeService::start(dir)?)),
+        None => Arc::new(Builtins::without_runtime()),
+    };
+    let runner = Arc::new(TaskRunner::new(
+        builtins,
+        RunConfig {
+            work_root: PathBuf::from(a.opt_or("work", ".papas-worker")),
+            input_root: PathBuf::from(a.opt_or("inputs", ".")),
+        },
+    ));
+    let daemon = WorkerDaemon::bind(bind, runner)?;
+    println!("LISTENING {}", daemon.addr);
+    daemon.serve()
+}
+
+/// `papas qsim` — drive the cluster simulator directly (Figure 1 shapes).
+pub fn cmd_qsim(a: &Args) -> Result<()> {
+    let jobs: usize = a.opt_num("jobs", 25)?;
+    let regime = Regime::parse(&a.opt_or("regime", "common"))
+        .ok_or_else(|| Error::Exec("bad --regime (optimal|serial|common)".into()))?;
+    let nodes: usize = a.opt_num("nodes", 6)?;
+    let duration: f64 = a.opt_num("duration", 1800.0)?;
+    let seed: u64 = a.opt_num("seed", 42)?;
+    let mut sim = ClusterSim::new(SimConfig::new(nodes, regime, seed))?;
+    if a.options.contains_key("nnodes") || a.options.contains_key("ppnode") {
+        // grouped: one job carrying all tasks
+        let n: usize = a.opt_num("nnodes", 1)?;
+        let p: usize = a.opt_num("ppnode", 1)?;
+        sim.submit(BatchJob::uniform("grouped", n, p, jobs, duration))?;
+    } else {
+        for i in 0..jobs {
+            sim.submit(BatchJob::uniform(format!("job{i:02}"), 1, 1, 1, duration))?;
+        }
+    }
+    let traces = sim.run_to_completion();
+    println!("# regime={} nodes={nodes} seed={seed}", regime.name());
+    if a.has_flag("gantt") {
+        print!("{}", crate::viz::render_jobs(&traces, 72));
+    } else {
+        println!("job,name,submit,start,end");
+        for t in &traces {
+            println!("{},{},{:.1},{:.1},{:.1}", t.id, t.name, t.submit, t.start, t.end);
+        }
+    }
+    println!(
+        "# makespan={:.1}s interactions={}",
+        crate::cluster::job::makespan(&traces),
+        crate::cluster::job::scheduler_interactions(&traces)
+    );
+    Ok(())
+}
+
+/// `papas status` — inspect a study's file database (monitoring view).
+pub fn cmd_status(a: &Args) -> Result<()> {
+    let db = PathBuf::from(a.opt_or("db", ".papas"));
+    let db = if a.positional.is_empty() {
+        db
+    } else {
+        // `papas status NAME` → .papas/NAME unless a path was given
+        let p = PathBuf::from(&a.positional[0]);
+        if p.exists() { p } else { db.join(&a.positional[0]) }
+    };
+    let filedb = crate::study::FileDb::open(&db)?;
+    let snap = filedb.load_study_snapshot().map_err(|_| {
+        Error::Store(format!("no study database under {}", db.display()))
+    })?;
+    println!(
+        "study '{}': {} combinations, {} selected",
+        snap.expect_str("name")?,
+        snap.expect_i64("n_combinations")?,
+        snap.expect_i64("n_selected")?
+    );
+    let ckpt = crate::study::Checkpoint::load(&db)?;
+    println!("checkpoint: {} tasks completed", ckpt.done_keys.len());
+    let prov = crate::workflow::provenance::Provenance::open(&db)?;
+    let records = prov.read_records()?;
+    if !records.is_empty() {
+        let ok = records.iter().filter(|r| r.ok).count();
+        println!(
+            "records: {} total, {} ok, {} failed",
+            records.len(),
+            ok,
+            records.len() - ok
+        );
+        if a.has_flag("gantt") {
+            let tail: Vec<_> =
+                records.iter().rev().take(30).rev().cloned().collect();
+            print!("{}", crate::viz::render_records(&tail, 60));
+        }
+    }
+    if db.join("report.json").exists() {
+        let report = std::fs::read_to_string(db.join("report.json"))?;
+        let j = crate::json::parse(&report)?;
+        println!(
+            "last run: {} completed / {} failed / {} restored on {} \
+             (makespan {:.3}s)",
+            j.expect_i64("completed")?,
+            j.expect_i64("failed")?,
+            j.expect_i64("restored")?,
+            j.expect_str("executor")?,
+            j.expect("makespan_s")?.as_f64().unwrap_or(0.0),
+        );
+    }
+    Ok(())
+}
+
+/// `papas aggregate` — the §9 output-aggregation extension.
+pub fn cmd_aggregate(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    let pattern = a.opt_or("pattern", r".*\.csv$");
+    let out = PathBuf::from(a.opt_or("out", "aggregate.csv"));
+    let mode = if a.has_flag("concat") {
+        crate::study::AggregateMode::Concat
+    } else {
+        crate::study::AggregateMode::Csv
+    };
+    let n = crate::study::aggregate(&study, &pattern, mode, &out)?;
+    println!("aggregated {n} files matching '{pattern}' -> {}", out.display());
+    Ok(())
+}
+
+/// `papas dax` — the §9 Pegasus-integration extension.
+pub fn cmd_dax(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    let idx: usize = a.opt_num("instance", 0)?;
+    let instances = study.instances()?;
+    let inst = instances.get(idx).ok_or_else(|| {
+        Error::Exec(format!(
+            "instance {idx} out of range ({} instances)",
+            instances.len()
+        ))
+    })?;
+    print!("{}", crate::viz::render_dax(inst, &study.name));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn study_file(tag: &str, content: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("papas_cli").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("study.yaml");
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    fn args(positional: &[&str], opts: &[(&str, &str)]) -> Args {
+        let mut a = Args::default();
+        a.positional = positional.iter().map(|s| s.to_string()).collect();
+        for (k, v) in opts {
+            a.options.insert(k.to_string(), v.to_string());
+        }
+        a
+    }
+
+    #[test]
+    fn validate_command() {
+        let p = study_file("validate", "t:\n  command: sleep-ms 0\n  v: [1, 2]\n");
+        let a = args(&[p.to_str().unwrap()], &[]);
+        cmd_validate(&a).unwrap();
+    }
+
+    #[test]
+    fn run_command_local() {
+        let p = study_file("run", "t:\n  command: sleep-ms 1\n  v: [1, 2]\n");
+        let db = p.parent().unwrap().join(".papas");
+        let a = args(
+            &[p.to_str().unwrap()],
+            &[("workers", "2"), ("db", db.to_str().unwrap())],
+        );
+        cmd_run(&a, false).unwrap();
+    }
+
+    #[test]
+    fn combos_and_viz() {
+        let p = study_file(
+            "combos",
+            "t:\n  command: sleep-ms ${v}\n  v: [1, 2, 3]\n",
+        );
+        let a = args(&[p.to_str().unwrap()], &[]);
+        cmd_combos(&a).unwrap();
+        cmd_viz(&a).unwrap();
+    }
+
+    #[test]
+    fn qsim_all_regimes() {
+        for regime in ["optimal", "serial", "common"] {
+            let a = args(
+                &[],
+                &[("jobs", "5"), ("regime", regime), ("duration", "10")],
+            );
+            cmd_qsim(&a).unwrap();
+        }
+        // grouped form
+        let a = args(&[], &[("jobs", "5"), ("nnodes", "2"), ("ppnode", "2")]);
+        cmd_qsim(&a).unwrap();
+        // bad regime
+        let a = args(&[], &[("regime", "zzz")]);
+        assert!(cmd_qsim(&a).is_err());
+    }
+
+    #[test]
+    fn missing_study_file() {
+        let a = args(&[], &[]);
+        assert!(cmd_run(&a, false).is_err());
+        assert!(cmd_validate(&a).is_err());
+    }
+
+    #[test]
+    fn status_command_reads_db() {
+        let p = study_file("status", "t:\n  command: sleep-ms 0\n  v: [1, 2]\n");
+        let db = p.parent().unwrap().join(".papas");
+        let run_args = args(
+            &[p.to_str().unwrap()],
+            &[("workers", "1"), ("db", db.to_str().unwrap())],
+        );
+        cmd_run(&run_args, false).unwrap();
+        let mut st = args(&[db.to_str().unwrap()], &[]);
+        cmd_status(&st).unwrap();
+        st.flags.push("gantt".into());
+        cmd_status(&st).unwrap();
+        // nonexistent db errors
+        assert!(cmd_status(&args(&["/no/such/db"], &[])).is_err());
+    }
+
+    #[test]
+    fn aggregate_command() {
+        let p = study_file(
+            "agg",
+            "t:\n  command: /bin/sh -c \"printf 'a,b\\n1,${v}\\n' > o_${v}.csv\"\n  v: [7, 8]\n",
+        );
+        let dir = p.parent().unwrap();
+        let db = dir.join(".papas");
+        cmd_run(
+            &args(&[p.to_str().unwrap()], &[("db", db.to_str().unwrap())]),
+            false,
+        )
+        .unwrap();
+        let out = dir.join("merged.csv");
+        let a = args(
+            &[p.to_str().unwrap()],
+            &[
+                ("db", db.to_str().unwrap()),
+                ("pattern", r"^o_.*\.csv$"),
+                ("out", out.to_str().unwrap()),
+            ],
+        );
+        cmd_aggregate(&a).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.starts_with("instance,combo,a,b"), "{text}");
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn dax_command() {
+        let p = study_file(
+            "dax",
+            "a:\n  command: gen out.bin\n  outfiles:\n    o: out.bin\nb:\n  command: use out.bin\n  after: a\n  infiles:\n    i: out.bin\n",
+        );
+        let a = args(&[p.to_str().unwrap()], &[]);
+        cmd_dax(&a).unwrap();
+        let bad = args(&[p.to_str().unwrap()], &[("instance", "99")]);
+        assert!(cmd_dax(&bad).is_err());
+    }
+}

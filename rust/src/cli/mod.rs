@@ -1,0 +1,51 @@
+//! The `papas` command-line interface (hand-rolled; clap is unavailable
+//! offline).
+//!
+//! ```text
+//! papas run STUDY.yaml [--workers N] [--mode local|mpi|ssh]
+//!                      [--nnodes N] [--ppnode P] [--artifacts DIR]
+//!                      [--db DIR] [--fresh]
+//! papas validate STUDY.yaml [...overlays]
+//! papas combos STUDY.yaml [--limit N]      # Figure 6: enumerate instances
+//! papas viz STUDY.yaml [--dot]
+//! papas resume STUDY.yaml [...run flags]   # alias of run (checkpoint-aware)
+//! papas worker --bind ADDR [--artifacts DIR]
+//! papas qsim --jobs N --regime R [--nodes N] [--duration S] [--seed S]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::{Args, ParsedCommand};
+
+use crate::util::error::Result;
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn main_with(argv: &[String]) -> i32 {
+    match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("papas: error [{}]: {e}", e.subsystem());
+            1
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    match Args::parse(argv)? {
+        ParsedCommand::Run(a) => commands::cmd_run(&a, false),
+        ParsedCommand::Resume(a) => commands::cmd_run(&a, true),
+        ParsedCommand::Validate(a) => commands::cmd_validate(&a),
+        ParsedCommand::Combos(a) => commands::cmd_combos(&a),
+        ParsedCommand::Viz(a) => commands::cmd_viz(&a),
+        ParsedCommand::Worker(a) => commands::cmd_worker(&a),
+        ParsedCommand::Qsim(a) => commands::cmd_qsim(&a),
+        ParsedCommand::Aggregate(a) => commands::cmd_aggregate(&a),
+        ParsedCommand::Dax(a) => commands::cmd_dax(&a),
+        ParsedCommand::Status(a) => commands::cmd_status(&a),
+        ParsedCommand::Help => {
+            println!("{}", commands::USAGE);
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! The PBS-like batch-system facade (§4.3: "a managed cluster ... makes
+//! use of a batch system (e.g., PBS, SGE)").
+//!
+//! `qsub` / `qstat` / `qdel` over the discrete-event simulator: jobs are
+//! queued at the facade's virtual clock, the timeline materializes on
+//! `advance_to_completion`, and `qstat` answers against the materialized
+//! timeline. This mirrors how the real PaPaS cluster engine wraps a batch
+//! CLI while keeping everything virtual and deterministic.
+
+use super::job::{BatchJob, JobTrace};
+use super::simulator::{ClusterSim, SimConfig};
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// qstat answer for one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Submitted, not yet started (at the probe time).
+    Queued,
+    /// Running at the probe time.
+    Running,
+    /// Finished before the probe time.
+    Done,
+    /// Removed via qdel before it started.
+    Deleted,
+}
+
+/// The batch facade.
+pub struct SimBatch {
+    sim: ClusterSim,
+    /// Facade virtual clock: qsub stamps submissions with it.
+    clock: f64,
+    deleted: Vec<usize>,
+    traces: Option<BTreeMap<usize, JobTrace>>,
+}
+
+impl SimBatch {
+    /// New facade over a fresh simulator.
+    pub fn new(config: SimConfig) -> Result<SimBatch> {
+        Ok(SimBatch {
+            sim: ClusterSim::new(config)?,
+            clock: 0.0,
+            deleted: Vec::new(),
+            traces: None,
+        })
+    }
+
+    /// Advance the virtual clock (models the user waiting between
+    /// submissions).
+    pub fn tick(&mut self, seconds: f64) {
+        self.clock += seconds.max(0.0);
+    }
+
+    /// Submit a job (returns the job id). Like PBS, submission is only
+    /// possible before the timeline has been materialized.
+    pub fn qsub(&mut self, job: BatchJob) -> Result<usize> {
+        if self.traces.is_some() {
+            return Err(Error::Cluster(
+                "timeline already materialized; create a new SimBatch".into(),
+            ));
+        }
+        self.sim.submit_at(job, self.clock)
+    }
+
+    /// Delete a queued job.
+    pub fn qdel(&mut self, id: usize) -> Result<()> {
+        if self.traces.is_some() {
+            return Err(Error::Cluster("timeline already materialized".into()));
+        }
+        self.deleted.push(id);
+        Ok(())
+    }
+
+    /// Materialize the timeline and return all traces (submit order).
+    /// Deleted jobs are excluded.
+    pub fn advance_to_completion(&mut self) -> Vec<JobTrace> {
+        if self.traces.is_none() {
+            let all = self.sim.run_to_completion();
+            let kept: BTreeMap<usize, JobTrace> = all
+                .into_iter()
+                .filter(|t| !self.deleted.contains(&t.id))
+                .map(|t| (t.id, t))
+                .collect();
+            self.traces = Some(kept);
+        }
+        self.traces.as_ref().unwrap().values().cloned().collect()
+    }
+
+    /// Probe a job's status at virtual time `t` (after materialization).
+    pub fn qstat(&mut self, id: usize, t: f64) -> Result<JobStatus> {
+        if self.deleted.contains(&id) {
+            return Ok(JobStatus::Deleted);
+        }
+        let traces = match &self.traces {
+            Some(t) => t,
+            None => {
+                self.advance_to_completion();
+                self.traces.as_ref().unwrap()
+            }
+        };
+        let tr = traces
+            .get(&id)
+            .ok_or_else(|| Error::Cluster(format!("unknown job id {id}")))?;
+        Ok(if t < tr.start {
+            JobStatus::Queued
+        } else if t < tr.end {
+            JobStatus::Running
+        } else {
+            JobStatus::Done
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::policy::Regime;
+
+    fn batch() -> SimBatch {
+        SimBatch::new(SimConfig::new(4, Regime::Serial, 1)).unwrap()
+    }
+
+    #[test]
+    fn qsub_qstat_lifecycle() {
+        let mut b = batch();
+        let a = b.qsub(BatchJob::uniform("a", 1, 1, 1, 100.0)).unwrap();
+        let c = b.qsub(BatchJob::uniform("c", 1, 1, 1, 100.0)).unwrap();
+        let traces = b.advance_to_completion();
+        assert_eq!(traces.len(), 2);
+        // serial: a runs [0,100), c runs [100,200) (± jitter)
+        assert_eq!(b.qstat(a, 10.0).unwrap(), JobStatus::Running);
+        assert_eq!(b.qstat(c, 10.0).unwrap(), JobStatus::Queued);
+        assert_eq!(b.qstat(a, 1e6).unwrap(), JobStatus::Done);
+        assert!(b.qstat(999, 0.0).is_err());
+    }
+
+    #[test]
+    fn qdel_removes_job() {
+        let mut b = batch();
+        let a = b.qsub(BatchJob::uniform("a", 1, 1, 1, 50.0)).unwrap();
+        let d = b.qsub(BatchJob::uniform("d", 1, 1, 1, 50.0)).unwrap();
+        b.qdel(d).unwrap();
+        let traces = b.advance_to_completion();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(b.qstat(d, 0.0).unwrap(), JobStatus::Deleted);
+        assert_eq!(b.qstat(a, 1e6).unwrap(), JobStatus::Done);
+    }
+
+    #[test]
+    fn submissions_frozen_after_materialize() {
+        let mut b = batch();
+        b.qsub(BatchJob::uniform("a", 1, 1, 1, 1.0)).unwrap();
+        b.advance_to_completion();
+        assert!(b.qsub(BatchJob::uniform("late", 1, 1, 1, 1.0)).is_err());
+        assert!(b.qdel(0).is_err());
+    }
+
+    #[test]
+    fn clock_staggers_submissions() {
+        let mut b = SimBatch::new(SimConfig::new(8, Regime::Optimal, 1)).unwrap();
+        let a = b.qsub(BatchJob::uniform("a", 1, 1, 1, 10.0)).unwrap();
+        b.tick(100.0);
+        let c = b.qsub(BatchJob::uniform("c", 1, 1, 1, 10.0)).unwrap();
+        let traces = b.advance_to_completion();
+        let ta = traces.iter().find(|t| t.id == a).unwrap();
+        let tc = traces.iter().find(|t| t.id == c).unwrap();
+        assert_eq!(ta.submit, 0.0);
+        assert_eq!(tc.submit, 100.0);
+        assert!(tc.start >= 100.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Batch jobs and their execution traces.
+//!
+//! A batch job requests N nodes × P processes and carries a list of
+//! tasks; PaPaS's grouping (§4.3) is expressed by how many tasks one job
+//! carries: one-task-per-job is the "let the cluster scheduler manage
+//! everything" baseline, all-tasks-in-one-job is the PaPaS MPI-grouped
+//! mode (Figures 3–4 compare exactly these).
+
+/// One simulated task inside a batch job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimTask {
+    /// Display label (e.g. `sim-07`).
+    pub label: String,
+    /// Nominal duration in (virtual) seconds.
+    pub duration: f64,
+}
+
+/// A job submitted to the (simulated) batch system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchJob {
+    /// Job name (for qstat and traces).
+    pub name: String,
+    /// Nodes requested (`nnodes`).
+    pub nnodes: usize,
+    /// Processes per node (`ppnode`).
+    pub ppnode: usize,
+    /// The tasks this job runs through the in-job dispatcher.
+    pub tasks: Vec<SimTask>,
+}
+
+impl BatchJob {
+    /// Worker ranks inside the job.
+    pub fn ranks(&self) -> usize {
+        self.nnodes * self.ppnode
+    }
+
+    /// Convenience: a job named `name` with `count` equal-duration tasks.
+    pub fn uniform(
+        name: impl Into<String>,
+        nnodes: usize,
+        ppnode: usize,
+        count: usize,
+        duration: f64,
+    ) -> BatchJob {
+        let name = name.into();
+        BatchJob {
+            tasks: (0..count)
+                .map(|i| SimTask {
+                    label: format!("{name}-t{i:02}"),
+                    duration,
+                })
+                .collect(),
+            name,
+            nnodes,
+            ppnode,
+        }
+    }
+}
+
+/// A task's executed span within a job (offsets relative to job start).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskTrace {
+    /// Task label.
+    pub label: String,
+    /// Rank that ran it (1-based, matching `exec::mpi`).
+    pub rank: usize,
+    /// Start offset from job start (seconds).
+    pub start: f64,
+    /// End offset from job start (seconds).
+    pub end: f64,
+}
+
+/// A completed job's timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobTrace {
+    /// Submission order index.
+    pub id: usize,
+    /// Job name.
+    pub name: String,
+    /// Submit time (virtual seconds).
+    pub submit: f64,
+    /// Start time (virtual seconds).
+    pub start: f64,
+    /// End time (virtual seconds).
+    pub end: f64,
+    /// Per-task spans (relative to `start`).
+    pub tasks: Vec<TaskTrace>,
+}
+
+impl JobTrace {
+    /// Queue wait before starting.
+    pub fn wait(&self) -> f64 {
+        self.start - self.submit
+    }
+
+    /// Wall duration of the job.
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Scheduler interactions for a set of jobs: the batch system handles a
+/// start and a stop action per job (§3: "for every task the scheduler
+/// has to handle the start and stop actions; this overhead can be reduced
+/// if multiple user jobs are batched together").
+pub fn scheduler_interactions(traces: &[JobTrace]) -> usize {
+    traces.len() * 2
+}
+
+/// Makespan of a set of job traces (first submit → last end).
+pub fn makespan(traces: &[JobTrace]) -> f64 {
+    if traces.is_empty() {
+        return 0.0;
+    }
+    let t0 = traces.iter().map(|t| t.submit).fold(f64::INFINITY, f64::min);
+    let t1 = traces.iter().map(|t| t.end).fold(0.0, f64::max);
+    t1 - t0
+}
+
+/// Absolute start time of every *task* across jobs, sorted — the series
+/// Figure 3 plots ("time begins as soon as a job started execution").
+pub fn task_start_times(traces: &[JobTrace]) -> Vec<f64> {
+    let mut out: Vec<f64> = traces
+        .iter()
+        .flat_map(|j| j.tasks.iter().map(move |t| j.start + t.start))
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+/// Absolute end time of every task across jobs, sorted (Figure 4).
+pub fn task_end_times(traces: &[JobTrace]) -> Vec<f64> {
+    let mut out: Vec<f64> = traces
+        .iter()
+        .flat_map(|j| j.tasks.iter().map(move |t| j.start + t.end))
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_job() {
+        let j = BatchJob::uniform("net", 2, 2, 25, 1800.0);
+        assert_eq!(j.ranks(), 4);
+        assert_eq!(j.tasks.len(), 25);
+        assert_eq!(j.tasks[7].label, "net-t07");
+        assert_eq!(j.tasks[0].duration, 1800.0);
+    }
+
+    #[test]
+    fn trace_helpers() {
+        let traces = vec![
+            JobTrace {
+                id: 0,
+                name: "a".into(),
+                submit: 0.0,
+                start: 5.0,
+                end: 15.0,
+                tasks: vec![TaskTrace {
+                    label: "t".into(),
+                    rank: 1,
+                    start: 0.0,
+                    end: 10.0,
+                }],
+            },
+            JobTrace {
+                id: 1,
+                name: "b".into(),
+                submit: 0.0,
+                start: 20.0,
+                end: 30.0,
+                tasks: vec![TaskTrace {
+                    label: "u".into(),
+                    rank: 1,
+                    start: 2.0,
+                    end: 10.0,
+                }],
+            },
+        ];
+        assert_eq!(traces[0].wait(), 5.0);
+        assert_eq!(traces[1].duration(), 10.0);
+        assert_eq!(scheduler_interactions(&traces), 4);
+        assert_eq!(makespan(&traces), 30.0);
+        assert_eq!(task_start_times(&traces), vec![5.0, 22.0]);
+        assert_eq!(task_end_times(&traces), vec![15.0, 30.0]);
+    }
+}

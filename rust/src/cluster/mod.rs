@@ -1,0 +1,29 @@
+//! The cluster engine (§4.3): an interface to managed (batch) and
+//! unmanaged (SSH) clusters, plus job grouping.
+//!
+//! No PBS cluster exists in this testbed, so the *managed* side is a
+//! *discrete-event cluster simulator* reproducing exactly the properties
+//! the paper's figures measure — queueing discipline, scheduler
+//! interaction counts, start/stop timelines under tenancy regimes — while
+//! the *unmanaged* side (SSH workers) and the in-job MPI dispatcher run
+//! for real (`exec::ssh`, `exec::mpi`). DESIGN.md §3 documents the
+//! substitution.
+//!
+//! Components:
+//! * [`job`] — batch jobs (N nodes × P procs, task lists) and traces;
+//! * [`simulator`] — the event-driven cluster: nodes, FIFO queue,
+//!   tenancy regimes (*optimal*, *serial*, *common* — Figure 1's three
+//!   cases), and the virtual-time in-job dispatcher;
+//! * [`policy`] — regime parameters and delay distributions;
+//! * [`batch`] — the PBS-like `qsub`/`qstat`/`qdel` facade over the
+//!   simulator.
+
+pub mod batch;
+pub mod job;
+pub mod policy;
+pub mod simulator;
+
+pub use batch::{JobStatus, SimBatch};
+pub use job::{BatchJob, JobTrace, SimTask, TaskTrace};
+pub use policy::{Regime, RegimeParams};
+pub use simulator::{ClusterSim, SimConfig};

@@ -1,0 +1,317 @@
+//! The discrete-event cluster simulator.
+//!
+//! Reproduces the *managed cluster* behaviours the paper's figures
+//! measure without a physical PBS cluster: jobs queue FIFO for nodes,
+//! start after a regime-dependent dispatch delay, occupy their nodes for
+//! their duration, and free them on completion. Inside each job, the
+//! task list executes on N×P virtual ranks with the same dynamic
+//! first-free-rank self-scheduling as the real `exec::mpi` dispatcher —
+//! so grouped-job timelines in virtual time have exactly the shape the
+//! real dispatcher produces in wall time.
+//!
+//! Everything is seeded: a given (config, jobs) pair always yields the
+//! same traces, which is what lets EXPERIMENTS.md assert figure shapes.
+
+use super::job::{BatchJob, JobTrace, TaskTrace};
+use super::policy::{Regime, RegimeParams};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Simulator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Compute nodes in the cluster.
+    pub nodes: usize,
+    /// Tenancy regime.
+    pub regime: Regime,
+    /// Regime delay parameters.
+    pub params: RegimeParams,
+    /// PRNG seed (all stochastic draws derive from it).
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// A convenient config for a regime with `nodes` nodes.
+    pub fn new(nodes: usize, regime: Regime, seed: u64) -> SimConfig {
+        SimConfig { nodes, regime, params: RegimeParams::default(), seed }
+    }
+}
+
+/// A submitted-but-not-yet-simulated job.
+struct Pending {
+    id: usize,
+    job: BatchJob,
+    submit: f64,
+}
+
+/// The simulator. Jobs are submitted (optionally at distinct times),
+/// then `run_to_completion` plays the event timeline.
+pub struct ClusterSim {
+    config: SimConfig,
+    queue: Vec<Pending>,
+    next_id: usize,
+}
+
+impl ClusterSim {
+    /// New simulator.
+    pub fn new(config: SimConfig) -> Result<ClusterSim> {
+        if config.nodes == 0 {
+            return Err(Error::Cluster("cluster needs at least one node".into()));
+        }
+        Ok(ClusterSim { config, queue: Vec::new(), next_id: 0 })
+    }
+
+    /// Submit a job at virtual time `submit`. Returns the job id.
+    pub fn submit_at(&mut self, job: BatchJob, submit: f64) -> Result<usize> {
+        if job.nnodes == 0 || job.ppnode == 0 {
+            return Err(Error::Cluster(format!(
+                "job '{}' requests zero nodes or procs",
+                job.name
+            )));
+        }
+        if job.nnodes > self.config.nodes {
+            return Err(Error::Cluster(format!(
+                "job '{}' requests {} nodes; cluster has {}",
+                job.name, job.nnodes, self.config.nodes
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(Pending { id, job, submit });
+        Ok(id)
+    }
+
+    /// Submit at time 0 (the figures submit everything simultaneously).
+    pub fn submit(&mut self, job: BatchJob) -> Result<usize> {
+        self.submit_at(job, 0.0)
+    }
+
+    /// Play the timeline; returns one trace per job, in submit order.
+    pub fn run_to_completion(&mut self) -> Vec<JobTrace> {
+        let mut rng = Rng::new(self.config.seed);
+        // FIFO by (submit time, id).
+        self.queue
+            .sort_by(|a, b| (a.submit, a.id).partial_cmp(&(b.submit, b.id)).unwrap());
+
+        // Common regime: fair-share throttles one user's concurrency to
+        // `user_slots` running jobs; slot_free[i] = when slot i opens.
+        let mut slot_free =
+            vec![0.0f64; self.config.params.user_slots.max(1)];
+        let mut traces = Vec::with_capacity(self.queue.len());
+        // Serial regime: previous job's end gates the next start.
+        let mut serial_prev_end = 0.0f64;
+
+        for p in self.queue.drain(..) {
+            // --- in-job dispatcher schedule (virtual ranks) ---
+            let ranks = p.job.ranks();
+            let mut rank_free = vec![0.0f64; ranks];
+            let mut task_traces = Vec::with_capacity(p.job.tasks.len());
+            for t in &p.job.tasks {
+                // dynamic self-scheduling: earliest-free rank wins
+                let (rank_idx, &free) = rank_free
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                let dur = self.config.params.jitter_duration(
+                    self.config.regime,
+                    t.duration,
+                    &mut rng,
+                );
+                task_traces.push(TaskTrace {
+                    label: t.label.clone(),
+                    rank: rank_idx + 1,
+                    start: free,
+                    end: free + dur,
+                });
+                rank_free[rank_idx] = free + dur;
+            }
+            let job_duration =
+                rank_free.iter().cloned().fold(0.0, f64::max);
+
+            // --- cluster-level start time ---
+            let (start, slot) = match self.config.regime {
+                Regime::Optimal => (p.submit, None),
+                Regime::Serial => (p.submit.max(serial_prev_end), None),
+                Regime::Common => {
+                    // Fair-share: wait for one of this user's slots, then
+                    // pay the stochastic dispatch/queue delay. (Node
+                    // capacity was validated at submit; in a busy multi-
+                    // tenant cluster the user-slot throttle binds first.)
+                    let (slot_idx, &free) = slot_free
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap();
+                    let dispatch =
+                        self.config.params.dispatch_delay(Regime::Common, &mut rng);
+                    (p.submit.max(free) + dispatch, Some(slot_idx))
+                }
+            };
+            let end = start + job_duration;
+
+            // --- occupy resources ---
+            match self.config.regime {
+                Regime::Optimal => {} // unbounded capacity
+                Regime::Serial => serial_prev_end = end,
+                Regime::Common => slot_free[slot.unwrap()] = end,
+            }
+
+            traces.push(JobTrace {
+                id: p.id,
+                name: p.job.name.clone(),
+                submit: p.submit,
+                start,
+                end,
+                tasks: task_traces,
+            });
+        }
+        traces.sort_by_key(|t| t.id);
+        traces
+    }
+
+    /// The configuration in use.
+    pub fn config(&self) -> &SimConfig {
+        &self.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::job::{makespan, scheduler_interactions, task_start_times};
+
+    /// Figure 1's 25 jobs: one task each, duration D.
+    fn jobs_25(d: f64) -> Vec<BatchJob> {
+        (0..25)
+            .map(|i| BatchJob::uniform(format!("job{i:02}"), 1, 1, 1, d))
+            .collect()
+    }
+
+    #[test]
+    fn optimal_regime_all_start_together() {
+        let mut sim =
+            ClusterSim::new(SimConfig::new(25, Regime::Optimal, 1)).unwrap();
+        for j in jobs_25(100.0) {
+            sim.submit(j).unwrap();
+        }
+        let traces = sim.run_to_completion();
+        assert_eq!(traces.len(), 25);
+        assert!(traces.iter().all(|t| t.start == 0.0));
+        assert!(traces.iter().all(|t| (t.end - 100.0).abs() < 1e-9));
+        assert!((makespan(&traces) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serial_regime_back_to_back() {
+        let mut sim =
+            ClusterSim::new(SimConfig::new(25, Regime::Serial, 1)).unwrap();
+        for j in jobs_25(100.0) {
+            sim.submit(j).unwrap();
+        }
+        let traces = sim.run_to_completion();
+        // starts at i * duration (with small jitter on each duration)
+        for w in traces.windows(2) {
+            assert!((w[1].start - w[0].end).abs() < 1e-9, "no gaps");
+        }
+        let total = makespan(&traces);
+        assert!(total > 24.0 * 90.0, "serial total {total}");
+    }
+
+    #[test]
+    fn common_regime_has_variable_delays_and_is_slowest() {
+        let mut sim =
+            ClusterSim::new(SimConfig::new(6, Regime::Common, 42)).unwrap();
+        for j in jobs_25(1800.0) {
+            sim.submit(j).unwrap();
+        }
+        let traces = sim.run_to_completion();
+        let starts: Vec<f64> = traces.iter().map(|t| t.start).collect();
+        // variable gaps between consecutive starts (sorted)
+        let mut sorted = starts.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let gaps: Vec<f64> = sorted.windows(2).map(|w| w[1] - w[0]).collect();
+        let min_gap = gaps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_gap = gaps.iter().cloned().fold(0.0, f64::max);
+        assert!(max_gap > 2.0 * (min_gap + 1.0), "gaps vary: {gaps:?}");
+        // Figure 1: common ends even later than serial (queue waits
+        // dominate when cluster activity is high)
+        let total = makespan(&traces);
+        assert!(total > 25.0 * 1800.0, "total={total}");
+    }
+
+    #[test]
+    fn grouped_job_runs_tasks_in_waves() {
+        // 25 tasks on 2N×2P = 4 ranks → ceil(25/4) = 7 waves
+        let mut sim =
+            ClusterSim::new(SimConfig::new(4, Regime::Optimal, 7)).unwrap();
+        sim.submit(BatchJob::uniform("grouped", 2, 2, 25, 100.0)).unwrap();
+        let traces = sim.run_to_completion();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.tasks.len(), 25);
+        assert!((t.duration() - 700.0).abs() < 1e-9, "{}", t.duration());
+        // 4 tasks start immediately
+        let immediate =
+            t.tasks.iter().filter(|x| x.start == 0.0).count();
+        assert_eq!(immediate, 4);
+        // ranks used: 1..=4
+        let ranks: std::collections::BTreeSet<usize> =
+            t.tasks.iter().map(|x| x.rank).collect();
+        assert_eq!(ranks.len(), 4);
+    }
+
+    #[test]
+    fn grouping_reduces_scheduler_interactions() {
+        // independent: 25 jobs → 50 interactions; grouped: 1 job → 2
+        let mut indep =
+            ClusterSim::new(SimConfig::new(6, Regime::Common, 9)).unwrap();
+        for j in jobs_25(100.0) {
+            indep.submit(j).unwrap();
+        }
+        let ti = indep.run_to_completion();
+        assert_eq!(scheduler_interactions(&ti), 50);
+
+        let mut grouped =
+            ClusterSim::new(SimConfig::new(6, Regime::Common, 9)).unwrap();
+        grouped.submit(BatchJob::uniform("g", 2, 2, 25, 100.0)).unwrap();
+        let tg = grouped.run_to_completion();
+        assert_eq!(scheduler_interactions(&tg), 2);
+        // and the grouped makespan beats the contended independent one
+        assert!(makespan(&tg) < makespan(&ti));
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let run = |seed| {
+            let mut sim =
+                ClusterSim::new(SimConfig::new(6, Regime::Common, seed)).unwrap();
+            for j in jobs_25(300.0) {
+                sim.submit(j).unwrap();
+            }
+            task_start_times(&sim.run_to_completion())
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn submit_validation() {
+        let mut sim =
+            ClusterSim::new(SimConfig::new(2, Regime::Optimal, 1)).unwrap();
+        assert!(sim.submit(BatchJob::uniform("big", 3, 1, 1, 1.0)).is_err());
+        assert!(sim.submit(BatchJob::uniform("zero", 0, 1, 1, 1.0)).is_err());
+        assert!(ClusterSim::new(SimConfig::new(0, Regime::Optimal, 1)).is_err());
+    }
+
+    #[test]
+    fn staggered_submissions_respected() {
+        let mut sim =
+            ClusterSim::new(SimConfig::new(4, Regime::Optimal, 1)).unwrap();
+        sim.submit_at(BatchJob::uniform("late", 1, 1, 1, 10.0), 50.0).unwrap();
+        sim.submit_at(BatchJob::uniform("early", 1, 1, 1, 10.0), 0.0).unwrap();
+        let traces = sim.run_to_completion();
+        let late = traces.iter().find(|t| t.name == "late").unwrap();
+        assert!(late.start >= 50.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Local thread-pool executor: the paper's laptop/workstation mode
+//! ("PaPaS runs easily on a local laptop or workstation", §4.2).
+
+use super::runner::TaskRunner;
+use super::{Completion, Executor};
+use crate::util::error::Result;
+use crate::workflow::ConcreteTask;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// A fixed pool of worker threads pulling from the shared ready channel.
+pub struct LocalPool {
+    runner: Arc<TaskRunner>,
+    workers: usize,
+}
+
+impl LocalPool {
+    /// Pool with `workers` threads (min 1).
+    pub fn new(runner: Arc<TaskRunner>, workers: usize) -> LocalPool {
+        LocalPool { runner, workers: workers.max(1) }
+    }
+}
+
+impl Executor for LocalPool {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn run_all(
+        &self,
+        ready: Receiver<ConcreteTask>,
+        done: Sender<Completion>,
+    ) -> Result<()> {
+        // mpsc receivers are single-consumer; share via a mutex so idle
+        // workers block on the lock + recv (contention is negligible next
+        // to task runtimes).
+        let shared = Arc::new(Mutex::new(ready));
+        std::thread::scope(|s| {
+            for w in 0..self.workers {
+                let shared = shared.clone();
+                let done = done.clone();
+                let runner = self.runner.clone();
+                s.spawn(move || {
+                    let label = format!("local-{w}");
+                    loop {
+                        let task = {
+                            let rx = shared.lock().unwrap();
+                            rx.recv()
+                        };
+                        let Ok(task) = task else { break }; // channel closed
+                        let mut result = runner.run(&task);
+                        result.worker = label.clone();
+                        if done.send((task, result)).is_err() {
+                            break; // scheduler gone
+                        }
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::runner::RunConfig;
+    use crate::tasks::Builtins;
+    use std::collections::BTreeMap;
+    use std::sync::mpsc;
+
+    fn pool(workers: usize) -> LocalPool {
+        let root = std::env::temp_dir().join("papas_localpool");
+        std::fs::create_dir_all(&root).unwrap();
+        LocalPool::new(
+            Arc::new(TaskRunner::new(
+                Arc::new(Builtins::without_runtime()),
+                RunConfig {
+                    work_root: root.join("work"),
+                    input_root: root.join("inputs"),
+                },
+            )),
+            workers,
+        )
+    }
+
+    fn sleep_task(i: u64, ms: u64) -> ConcreteTask {
+        ConcreteTask {
+            instance: i,
+            task_id: "sleep".into(),
+            argv: vec!["sleep-ms".into(), ms.to_string()],
+            env: BTreeMap::new(),
+            infiles: vec![],
+            outfiles: vec![],
+            substitutions: vec![],
+        }
+    }
+
+    #[test]
+    fn executes_all_tasks() {
+        let p = pool(4);
+        let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        for i in 0..20 {
+            tx.send(sleep_task(i, 1)).unwrap();
+        }
+        drop(tx);
+        p.run_all(rx, dtx).unwrap();
+        let results: Vec<Completion> = drx.into_iter().collect();
+        assert_eq!(results.len(), 20);
+        assert!(results.iter().all(|(_, r)| r.ok));
+        // multiple workers were used
+        let workers: std::collections::BTreeSet<&str> =
+            results.iter().map(|(_, r)| r.worker.as_str()).collect();
+        assert!(workers.len() > 1, "{workers:?}");
+    }
+
+    #[test]
+    fn single_worker_is_serial_and_ordered() {
+        let p = pool(1);
+        let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(sleep_task(i, 0)).unwrap();
+        }
+        drop(tx);
+        p.run_all(rx, dtx).unwrap();
+        let order: Vec<u64> = drx.into_iter().map(|(t, _)| t.instance).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn failures_are_reported_not_fatal() {
+        let p = pool(2);
+        let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        let mut bad = sleep_task(0, 0);
+        bad.argv = vec!["sleep-ms".into()]; // missing arg → failure
+        tx.send(bad).unwrap();
+        tx.send(sleep_task(1, 0)).unwrap();
+        drop(tx);
+        p.run_all(rx, dtx).unwrap();
+        let results: Vec<Completion> = drx.into_iter().collect();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results.iter().filter(|(_, r)| r.ok).count(), 1);
+    }
+}

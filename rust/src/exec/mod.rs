@@ -1,0 +1,49 @@
+//! Task executors: how ready tasks actually run.
+//!
+//! Three backends, matching the paper's `parallel` keyword (§5):
+//!
+//! * [`local`] — a worker thread pool on this machine (laptop /
+//!   workstation mode, the paper's default);
+//! * [`mpi`] — the C++-MPI-style task dispatcher (§4.3): one master rank
+//!   assigns tasks to N×P worker ranks over a message-passing protocol —
+//!   the mechanism PaPaS uses to group many user tasks into one cluster
+//!   job;
+//! * [`ssh`] — worker daemons on (un)managed hosts reached over a socket
+//!   protocol; here the daemons are separate OS processes on localhost,
+//!   preserving the process/wire topology without a real cluster.
+//!
+//! All backends consume ready tasks from a channel and report completions
+//! on another; the [`crate::workflow::scheduler`] drives dependency
+//! resolution above them, so scheduling policy and transport are fully
+//! decoupled.
+
+pub mod local;
+pub mod mpi;
+pub mod runner;
+pub mod ssh;
+
+pub use runner::{RunConfig, TaskResult, TaskRunner};
+
+use crate::workflow::ConcreteTask;
+use crate::util::error::Result;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// A completed task notification.
+pub type Completion = (ConcreteTask, TaskResult);
+
+/// An execution backend. `run_all` consumes tasks until the channel
+/// closes, sending one completion per task; it returns once all accepted
+/// tasks have completed. `Sync` because the scheduler calls it from a
+/// scoped thread while retaining a shared reference.
+pub trait Executor: Sync {
+    /// Backend name for provenance records.
+    fn name(&self) -> &'static str;
+    /// Number of concurrent workers.
+    fn workers(&self) -> usize;
+    /// Drain `ready`, executing every task and reporting on `done`.
+    fn run_all(
+        &self,
+        ready: Receiver<ConcreteTask>,
+        done: Sender<Completion>,
+    ) -> Result<()>;
+}

@@ -1,0 +1,335 @@
+//! The MPI-style task dispatcher (§4.3: "the main mechanism for grouping
+//! tasks as single jobs is using a C++ MPI task dispatcher").
+//!
+//! Faithful master/worker MPI shape, transport swapped for in-process
+//! channels (DESIGN.md substitution table):
+//!
+//! * rank 0 is the master: it seeds every worker with one task, then
+//!   reassigns dynamically as DONE messages arrive (first-come
+//!   first-served self-scheduling — the classic MPI dispatcher loop);
+//! * ranks 1..=N×P are workers: `Recv(ASSIGN|STOP)` → run → `Send(DONE)`;
+//! * messages carry MPI-like tags so the protocol reads like the C++ it
+//!   replaces.
+//!
+//! The rank topology mirrors the paper's grouping schemes: a job with
+//! N nodes × P processes-per-node runs N·P worker ranks; `rank_host`
+//! reports which simulated node a rank lives on (provenance + the Fig 3/4
+//! per-node traces).
+
+use super::runner::TaskRunner;
+use super::{Completion, Executor};
+use crate::util::error::{Error, Result};
+use crate::workflow::ConcreteTask;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+
+/// Message tags, mirroring the C++ dispatcher's MPI tags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tag {
+    /// Master → worker: here is a task.
+    Assign,
+    /// Worker → master: task finished (payload: the completion).
+    Done,
+    /// Master → worker: no more work, exit.
+    Stop,
+}
+
+/// Master → worker message.
+enum ToWorker {
+    Assign(ConcreteTask),
+    Stop,
+}
+
+/// Worker → master message.
+struct FromWorker {
+    rank: usize,
+    completion: Completion,
+}
+
+/// Dispatcher configuration: the paper's N×P grouping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grouping {
+    /// Simulated nodes in the cluster job (`nnodes`).
+    pub nnodes: usize,
+    /// Worker processes per node (`ppnode`).
+    pub ppnode: usize,
+}
+
+impl Grouping {
+    /// Total worker ranks (excluding the rank-0 master).
+    pub fn ranks(&self) -> usize {
+        self.nnodes * self.ppnode
+    }
+
+    /// The simulated node a worker rank (1-based) lives on.
+    pub fn rank_host(&self, rank: usize) -> usize {
+        assert!(rank >= 1 && rank <= self.ranks(), "worker rank {rank}");
+        (rank - 1) / self.ppnode
+    }
+}
+
+/// The MPI-style dispatcher.
+pub struct MpiDispatcher {
+    runner: Arc<TaskRunner>,
+    grouping: Grouping,
+}
+
+impl MpiDispatcher {
+    /// New dispatcher with the given N×P grouping.
+    pub fn new(runner: Arc<TaskRunner>, grouping: Grouping) -> Result<Self> {
+        if grouping.nnodes == 0 || grouping.ppnode == 0 {
+            return Err(Error::Exec("grouping needs nnodes, ppnode >= 1".into()));
+        }
+        Ok(MpiDispatcher { runner, grouping })
+    }
+
+    /// The grouping in effect.
+    pub fn grouping(&self) -> Grouping {
+        self.grouping
+    }
+}
+
+impl Executor for MpiDispatcher {
+    fn name(&self) -> &'static str {
+        "mpi"
+    }
+
+    fn workers(&self) -> usize {
+        self.grouping.ranks()
+    }
+
+    fn run_all(
+        &self,
+        ready: Receiver<ConcreteTask>,
+        done: Sender<Completion>,
+    ) -> Result<()> {
+        let nworkers = self.grouping.ranks();
+        // Per-worker ASSIGN channels + one shared DONE channel: the
+        // channel-set *is* the MPI communicator here.
+        let mut to_workers: Vec<Sender<ToWorker>> = Vec::with_capacity(nworkers);
+        let (from_tx, from_rx) = mpsc::channel::<FromWorker>();
+
+        std::thread::scope(|s| -> Result<()> {
+            for rank in 1..=nworkers {
+                let (tx, rx) = mpsc::channel::<ToWorker>();
+                to_workers.push(tx);
+                let from_tx = from_tx.clone();
+                let runner = self.runner.clone();
+                let host = self.grouping.rank_host(rank);
+                s.spawn(move || {
+                    // Worker rank loop: Recv → run → Send(DONE).
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            ToWorker::Stop => break,
+                            ToWorker::Assign(task) => {
+                                let mut result = runner.run(&task);
+                                result.worker = format!("rank{rank}@node{host}");
+                                if from_tx
+                                    .send(FromWorker { rank, completion: (task, result) })
+                                    .is_err()
+                                {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            drop(from_tx);
+
+            // ---- master (rank 0) ----
+            // FIFO idle queue: ranks recycle round-robin, spreading work
+            // across nodes instead of re-hitting the most recent rank.
+            let mut idle: std::collections::VecDeque<usize> =
+                (1..=nworkers).collect();
+            let mut in_flight = 0usize;
+            let mut ready_closed = false;
+
+            loop {
+                // Assign while we have both an idle rank and a ready task.
+                while !idle.is_empty() && !ready_closed {
+                    match ready.try_recv() {
+                        Ok(task) => {
+                            let rank = idle.pop_front().unwrap();
+                            to_workers[rank - 1]
+                                .send(ToWorker::Assign(task))
+                                .map_err(|_| {
+                                    Error::Exec(format!("rank {rank} died"))
+                                })?;
+                            in_flight += 1;
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            ready_closed = true;
+                        }
+                    }
+                }
+
+                if in_flight == 0 {
+                    if ready_closed {
+                        break;
+                    }
+                    // All ranks idle; block for more work.
+                    match ready.recv() {
+                        Ok(task) => {
+                            let rank = idle.pop_front().expect("all idle");
+                            to_workers[rank - 1]
+                                .send(ToWorker::Assign(task))
+                                .map_err(|_| {
+                                    Error::Exec(format!("rank {rank} died"))
+                                })?;
+                            in_flight += 1;
+                        }
+                        Err(_) => break, // closed and drained
+                    }
+                    continue;
+                }
+
+                // Wait for a DONE, then recycle the rank. std mpsc has no
+                // select: when idle ranks remain and the ready stream is
+                // still open, new work can arrive *while* we wait, so
+                // bound the wait and re-poll the ready channel — blocking
+                // indefinitely here serializes trickle-fed queues onto one
+                // rank (found by the DFS-admission tests).
+                let msg = if !idle.is_empty() && !ready_closed {
+                    match from_rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                        Ok(m) => Some(m),
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                } else {
+                    match from_rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    }
+                };
+                if let Some(FromWorker { rank, completion }) = msg {
+                    in_flight -= 1;
+                    idle.push_back(rank);
+                    if done.send(completion).is_err() {
+                        break;
+                    }
+                }
+            }
+
+            // STOP all ranks.
+            for tx in &to_workers {
+                let _ = tx.send(ToWorker::Stop);
+            }
+            Ok(())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::runner::RunConfig;
+    use crate::tasks::Builtins;
+    use std::collections::BTreeMap;
+
+    fn dispatcher(nnodes: usize, ppnode: usize) -> MpiDispatcher {
+        let root = std::env::temp_dir().join("papas_mpi");
+        std::fs::create_dir_all(&root).unwrap();
+        MpiDispatcher::new(
+            Arc::new(TaskRunner::new(
+                Arc::new(Builtins::without_runtime()),
+                RunConfig {
+                    work_root: root.join("work"),
+                    input_root: root.join("inputs"),
+                },
+            )),
+            Grouping { nnodes, ppnode },
+        )
+        .unwrap()
+    }
+
+    fn sleep_task(i: u64, ms: u64) -> ConcreteTask {
+        ConcreteTask {
+            instance: i,
+            task_id: "sim".into(),
+            argv: vec!["sleep-ms".into(), ms.to_string()],
+            env: BTreeMap::new(),
+            infiles: vec![],
+            outfiles: vec![],
+            substitutions: vec![],
+        }
+    }
+
+    #[test]
+    fn grouping_topology() {
+        let g = Grouping { nnodes: 2, ppnode: 2 };
+        assert_eq!(g.ranks(), 4);
+        assert_eq!(g.rank_host(1), 0);
+        assert_eq!(g.rank_host(2), 0);
+        assert_eq!(g.rank_host(3), 1);
+        assert_eq!(g.rank_host(4), 1);
+    }
+
+    #[test]
+    fn paper_grouping_schemes_run_25_tasks() {
+        // The §6 case study: 25 simulations under 2N-2P.
+        let d = dispatcher(2, 2);
+        let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        for i in 0..25 {
+            tx.send(sleep_task(i, 1)).unwrap();
+        }
+        drop(tx);
+        d.run_all(rx, dtx).unwrap();
+        let results: Vec<Completion> = drx.into_iter().collect();
+        assert_eq!(results.len(), 25);
+        assert!(results.iter().all(|(_, r)| r.ok));
+        // all 4 ranks participated and worker labels carry the node
+        let workers: std::collections::BTreeSet<&str> =
+            results.iter().map(|(_, r)| r.worker.as_str()).collect();
+        assert_eq!(workers.len(), 4, "{workers:?}");
+        assert!(workers.iter().any(|w| w.contains("@node0")));
+        assert!(workers.iter().any(|w| w.contains("@node1")));
+    }
+
+    #[test]
+    fn serial_grouping_1n_1p() {
+        let d = dispatcher(1, 1);
+        let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(sleep_task(i, 0)).unwrap();
+        }
+        drop(tx);
+        d.run_all(rx, dtx).unwrap();
+        let results: Vec<Completion> = drx.into_iter().collect();
+        assert_eq!(results.len(), 5);
+        assert!(results.iter().all(|(_, r)| r.worker == "rank1@node0"));
+    }
+
+    #[test]
+    fn dynamic_balancing_under_skew() {
+        // One long task + many short ones: the long task must not
+        // serialize the rest (dynamic self-scheduling property).
+        let d = dispatcher(1, 2);
+        let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        tx.send(sleep_task(0, 50)).unwrap();
+        for i in 1..9 {
+            tx.send(sleep_task(i, 1)).unwrap();
+        }
+        drop(tx);
+        let t0 = std::time::Instant::now();
+        d.run_all(rx, dtx).unwrap();
+        let elapsed = t0.elapsed().as_millis();
+        assert_eq!(drx.into_iter().count(), 9);
+        // serial would be ≥ 58ms on one rank; dynamic two-rank ≈ max(50, 8)
+        assert!(elapsed < 150, "took {elapsed}ms");
+    }
+
+    #[test]
+    fn zero_grouping_rejected() {
+        let root = std::env::temp_dir();
+        let runner = Arc::new(TaskRunner::new(
+            Arc::new(Builtins::without_runtime()),
+            RunConfig { work_root: root.clone(), input_root: root },
+        ));
+        assert!(MpiDispatcher::new(runner, Grouping { nnodes: 0, ppnode: 1 }).is_err());
+    }
+}

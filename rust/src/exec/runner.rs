@@ -1,0 +1,313 @@
+//! Single-task execution: staging, substitution, builtin dispatch or
+//! subprocess spawn, output capture. Shared by every executor backend
+//! (and by the SSH worker daemon on the far side of the wire).
+
+use crate::tasks::Builtins;
+use crate::util::error::{Error, Result};
+use crate::util::stats::Stopwatch;
+use crate::workflow::ConcreteTask;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// How a runner executes tasks.
+pub struct RunConfig {
+    /// Root directory for instance workdirs (`wf-0000/`, ...).
+    pub work_root: PathBuf,
+    /// Directory where declared `infiles` templates are found (staged
+    /// from here into the workdir; the paper's NFS shared-input dir).
+    pub input_root: PathBuf,
+}
+
+impl RunConfig {
+    /// Workdir of one workflow instance.
+    pub fn instance_dir(&self, instance: u64) -> PathBuf {
+        self.work_root.join(format!("wf-{instance:04}"))
+    }
+}
+
+/// Outcome of one task execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskResult {
+    /// Success flag (exit code 0 / builtin Ok).
+    pub ok: bool,
+    /// Exit code (0 for successful builtins, -1 for spawn failures).
+    pub exit_code: i32,
+    /// First ~4 KiB of stdout / builtin summary (provenance).
+    pub stdout: String,
+    /// Error description when `!ok`.
+    pub error: Option<String>,
+    /// Wall-clock duration in seconds (the §4.2 task profiler's datum).
+    pub duration: f64,
+    /// Label of the worker that ran it (filled by the executor).
+    pub worker: String,
+}
+
+impl TaskResult {
+    fn failure(msg: String, duration: f64) -> TaskResult {
+        TaskResult {
+            ok: false,
+            exit_code: -1,
+            stdout: String::new(),
+            error: Some(msg),
+            duration,
+            worker: String::new(),
+        }
+    }
+}
+
+/// Executes single tasks; cheap to share across worker threads.
+pub struct TaskRunner {
+    builtins: Arc<Builtins>,
+    config: RunConfig,
+}
+
+impl TaskRunner {
+    /// New runner.
+    pub fn new(builtins: Arc<Builtins>, config: RunConfig) -> TaskRunner {
+        TaskRunner { builtins, config }
+    }
+
+    /// The run configuration.
+    pub fn config(&self) -> &RunConfig {
+        &self.config
+    }
+
+    /// Execute one task to completion (staging → run → result). Never
+    /// panics on task failure; all failures land in the result.
+    pub fn run(&self, task: &ConcreteTask) -> TaskResult {
+        let sw = Stopwatch::start();
+        match self.run_inner(task) {
+            Ok(r) => r,
+            Err(e) => TaskResult::failure(e.to_string(), sw.elapsed_secs()),
+        }
+    }
+
+    fn run_inner(&self, task: &ConcreteTask) -> Result<TaskResult> {
+        let workdir = self.config.instance_dir(task.instance);
+        std::fs::create_dir_all(&workdir)?;
+        stage_inputs(task, &self.config.input_root, &workdir)?;
+
+        let sw = Stopwatch::start();
+        let argv0 = task
+            .argv
+            .first()
+            .ok_or_else(|| Error::Exec(format!("task '{}' has empty argv", task.key())))?;
+
+        if self.builtins.is_builtin(argv0) {
+            match self.builtins.run(&task.argv, &task.env, &workdir) {
+                Ok(out) => Ok(TaskResult {
+                    ok: true,
+                    exit_code: 0,
+                    stdout: out.summary,
+                    error: None,
+                    duration: sw.elapsed_secs(),
+                    worker: String::new(),
+                }),
+                Err(e) => Ok(TaskResult::failure(e.to_string(), sw.elapsed_secs())),
+            }
+        } else {
+            self.run_subprocess(task, &workdir, sw)
+        }
+    }
+
+    fn run_subprocess(
+        &self,
+        task: &ConcreteTask,
+        workdir: &Path,
+        sw: Stopwatch,
+    ) -> Result<TaskResult> {
+        let output = std::process::Command::new(&task.argv[0])
+            .args(&task.argv[1..])
+            .envs(&task.env)
+            .current_dir(workdir)
+            .stdin(std::process::Stdio::null())
+            .output();
+        let duration = sw.elapsed_secs();
+        match output {
+            Ok(out) => {
+                let code = out.status.code().unwrap_or(-1);
+                let mut stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+                stdout.truncate(4096);
+                Ok(TaskResult {
+                    ok: out.status.success(),
+                    exit_code: code,
+                    stdout,
+                    error: if out.status.success() {
+                        None
+                    } else {
+                        let mut err = String::from_utf8_lossy(&out.stderr).into_owned();
+                        err.truncate(1024);
+                        Some(format!("exit code {code}: {err}"))
+                    },
+                    duration,
+                    worker: String::new(),
+                })
+            }
+            Err(e) => Ok(TaskResult::failure(
+                format!("spawn '{}': {e}", task.argv[0]),
+                duration,
+            )),
+        }
+    }
+}
+
+/// Stage declared infiles into the workdir, applying `substitute`
+/// rewrites (§5: "simple regular expressions for file contents").
+/// Identical inputs shared by all instances live once under
+/// `input_root` — the paper's NFS-directory arrangement — and each
+/// instance gets its own (possibly rewritten) copy.
+fn stage_inputs(task: &ConcreteTask, input_root: &Path, workdir: &Path) -> Result<()> {
+    for (_, rel) in &task.infiles {
+        let src = input_root.join(rel);
+        let dst = workdir.join(rel);
+        if let Some(parent) = dst.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        if !src.exists() {
+            // The file may be produced by an upstream task directly in
+            // the workdir; staging only covers study-provided inputs.
+            if dst.exists() {
+                continue;
+            }
+            return Err(Error::Exec(format!(
+                "task '{}': input file '{}' not found under {} or {}",
+                task.key(),
+                rel,
+                input_root.display(),
+                workdir.display()
+            )));
+        }
+        if task.substitutions.is_empty() {
+            std::fs::copy(&src, &dst)?;
+            continue;
+        }
+        let mut content = std::fs::read_to_string(&src).map_err(|e| {
+            Error::Exec(format!(
+                "read '{}' for substitution: {e}",
+                src.display()
+            ))
+        })?;
+        for (pattern, replacement) in &task.substitutions {
+            let re = regex::Regex::new(pattern).map_err(|e| {
+                Error::Exec(format!("substitute regex '{pattern}': {e}"))
+            })?;
+            content = re.replace_all(&content, replacement.as_str()).into_owned();
+        }
+        std::fs::write(&dst, content)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn runner(root: &Path) -> TaskRunner {
+        TaskRunner::new(
+            Arc::new(Builtins::without_runtime()),
+            RunConfig {
+                work_root: root.join("work"),
+                input_root: root.join("inputs"),
+            },
+        )
+    }
+
+    fn task(argv: &[&str]) -> ConcreteTask {
+        ConcreteTask {
+            instance: 0,
+            task_id: "t".into(),
+            argv: argv.iter().map(|s| s.to_string()).collect(),
+            env: BTreeMap::new(),
+            infiles: vec![],
+            outfiles: vec![],
+            substitutions: vec![],
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("papas_runner").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn builtin_task_runs() {
+        let root = tmp("builtin");
+        let r = runner(&root);
+        let res = r.run(&task(&["sleep-ms", "1"]));
+        assert!(res.ok, "{res:?}");
+        assert_eq!(res.exit_code, 0);
+        assert!(res.duration >= 0.0);
+    }
+
+    #[test]
+    fn subprocess_success_and_failure() {
+        let root = tmp("subproc");
+        let r = runner(&root);
+        let ok = r.run(&task(&["/bin/sh", "-c", "echo hello"]));
+        assert!(ok.ok, "{ok:?}");
+        assert!(ok.stdout.contains("hello"));
+
+        let fail = r.run(&task(&["/bin/sh", "-c", "exit 3"]));
+        assert!(!fail.ok);
+        assert_eq!(fail.exit_code, 3);
+
+        let noexist = r.run(&task(&["/definitely/not/a/binary"]));
+        assert!(!noexist.ok);
+        assert!(noexist.error.as_deref().unwrap_or("").contains("spawn"));
+    }
+
+    #[test]
+    fn env_reaches_subprocess() {
+        let root = tmp("env");
+        let r = runner(&root);
+        let mut t = task(&["/bin/sh", "-c", "echo $PAPAS_X"]);
+        t.env.insert("PAPAS_X".into(), "42".into());
+        let res = r.run(&t);
+        assert!(res.stdout.contains("42"), "{res:?}");
+    }
+
+    #[test]
+    fn staging_with_substitution() {
+        let root = tmp("staging");
+        std::fs::create_dir_all(root.join("inputs")).unwrap();
+        std::fs::write(
+            root.join("inputs/model.xml"),
+            "<param beta=\"0.5\" gamma=\"1\"/>",
+        )
+        .unwrap();
+        let r = runner(&root);
+        let mut t = task(&["/bin/sh", "-c", "cat model.xml"]);
+        t.infiles = vec![("model".into(), "model.xml".into())];
+        t.substitutions =
+            vec![("beta=\"[0-9.]+\"".into(), "beta=\"0.9\"".into())];
+        let res = r.run(&t);
+        assert!(res.ok, "{res:?}");
+        assert!(res.stdout.contains("beta=\"0.9\""), "{}", res.stdout);
+        assert!(res.stdout.contains("gamma=\"1\""));
+        // original untouched
+        let orig = std::fs::read_to_string(root.join("inputs/model.xml")).unwrap();
+        assert!(orig.contains("beta=\"0.5\""));
+    }
+
+    #[test]
+    fn missing_infile_fails_cleanly() {
+        let root = tmp("missing");
+        let r = runner(&root);
+        let mut t = task(&["/bin/true"]);
+        t.infiles = vec![("f".into(), "ghost.dat".into())];
+        let res = r.run(&t);
+        assert!(!res.ok);
+        assert!(res.error.as_deref().unwrap().contains("ghost.dat"));
+    }
+
+    #[test]
+    fn empty_argv_fails_cleanly() {
+        let root = tmp("empty");
+        let r = runner(&root);
+        let res = r.run(&task(&[]));
+        assert!(!res.ok);
+    }
+}

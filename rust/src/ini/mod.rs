@@ -1,0 +1,227 @@
+//! INI-dialect parser for PaPaS parameter files (§4.1: "parameter files
+//! follow either YAML, JSON, or INI-like data serialization formats with
+//! minor constraints").
+//!
+//! Dialect, mapped onto the two-level WDL structure:
+//!
+//! ```ini
+//! [matmulOMP]                       ; a task section
+//! name = Matrix multiply scaling study
+//! command = matmul ${args:size} out.txt
+//!
+//! [matmulOMP.environ]               ; dotted subsection = nested mapping
+//! OMP_NUM_THREADS = 1:8             ; values may be comma-separated lists
+//!
+//! [matmulOMP.args]
+//! size = 16:*2:16384
+//! ```
+//!
+//! * `;` and `#` start comments (full-line or after whitespace);
+//! * `key = value`; a comma-separated value parses to a sequence
+//!   (quoting protects commas);
+//! * `[section]` and one dotted level `[section.sub]`;
+//! * keys before any section header go to the document root.
+
+use crate::util::error::{Error, Location, Result};
+use crate::util::strings::{split_top_level, unquote};
+use crate::wdl::doc::Node;
+
+/// Parse an INI document into the common node model.
+pub fn parse(src: &str) -> Result<Node> {
+    let mut root: Vec<(String, Node)> = Vec::new();
+    // Path of the currently-open section (0, 1, or 2 components).
+    let mut path: Vec<String> = Vec::new();
+
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(Error::parse(
+                    Location::new(lineno, 1),
+                    "unterminated section header",
+                ));
+            }
+            let name = line[1..line.len() - 1].trim();
+            if name.is_empty() {
+                return Err(Error::parse(
+                    Location::new(lineno, 1),
+                    "empty section name",
+                ));
+            }
+            path = name.split('.').map(|s| s.trim().to_string()).collect();
+            if path.len() > 2 || path.iter().any(|p| p.is_empty()) {
+                return Err(Error::parse(
+                    Location::new(lineno, 1),
+                    format!("invalid section path '{name}' (at most one dot)"),
+                ));
+            }
+            // Ensure the section exists even if empty.
+            ensure_path(&mut root, &path);
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(Error::parse(
+                Location::new(lineno, 1),
+                format!("expected 'key = value', found '{line}'"),
+            ));
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(Error::parse(Location::new(lineno, 1), "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim());
+        let target = ensure_path(&mut root, &path);
+        if target.iter().any(|(k, _)| k == key) {
+            return Err(Error::parse(
+                Location::new(lineno, 1),
+                format!("duplicate key '{key}'"),
+            ));
+        }
+        target.push((key.to_string(), value));
+    }
+    Ok(Node::Map(root))
+}
+
+/// Walk/create the mapping at `path` inside the root entry list and
+/// return it for insertion.
+fn ensure_path<'a>(
+    root: &'a mut Vec<(String, Node)>,
+    path: &[String],
+) -> &'a mut Vec<(String, Node)> {
+    let mut cur = root;
+    for comp in path {
+        let idx = match cur.iter().position(|(k, _)| k == comp) {
+            Some(i) => i,
+            None => {
+                cur.push((comp.clone(), Node::Map(Vec::new())));
+                cur.len() - 1
+            }
+        };
+        cur = match &mut cur[idx].1 {
+            Node::Map(m) => m,
+            // A scalar was already stored under this name; replace with a
+            // map (last-write-wins is the INI convention for sections).
+            slot => {
+                *slot = Node::Map(Vec::new());
+                match slot {
+                    Node::Map(m) => m,
+                    _ => unreachable!(),
+                }
+            }
+        };
+    }
+    cur
+}
+
+/// `a, b, c` becomes a sequence; a single token stays scalar.
+fn parse_value(v: &str) -> Node {
+    let parts = split_top_level(v, ',');
+    if parts.len() > 1 {
+        Node::Seq(
+            parts
+                .iter()
+                .map(|p| Node::scalar(unquote(p.trim())))
+                .collect(),
+        )
+    } else {
+        Node::scalar(unquote(v))
+    }
+}
+
+/// Comments: `;` or `#` at line start or preceded by whitespace, outside
+/// quotes.
+fn strip_comment(s: &str) -> &str {
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            ';' | '#' if !in_single && !in_double => {
+                if i == 0 || s[..i].ends_with(' ') || s[..i].ends_with('\t') {
+                    return &s[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = "\
+; PaPaS INI study
+[matmulOMP]
+name = Matrix multiply scaling study
+command = matmul ${args:size} result_${args:size}N.txt
+
+[matmulOMP.environ]
+OMP_NUM_THREADS = 1:8
+
+[matmulOMP.args]
+size = 16, 32, 64
+";
+
+    #[test]
+    fn parses_sections_and_subsections() {
+        let doc = parse(EXAMPLE).unwrap();
+        let task = doc.get("matmulOMP").unwrap();
+        assert_eq!(
+            task.get("name").unwrap().as_scalar(),
+            Some("Matrix multiply scaling study")
+        );
+        assert_eq!(
+            task.get("environ").unwrap().get("OMP_NUM_THREADS").unwrap().as_scalar(),
+            Some("1:8")
+        );
+        let sizes = task.get("args").unwrap().get("size").unwrap().as_seq().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[2].as_scalar(), Some("64"));
+    }
+
+    #[test]
+    fn root_level_keys() {
+        let doc = parse("global = 1\n[s]\nk = v\n").unwrap();
+        assert_eq!(doc.get("global").unwrap().as_scalar(), Some("1"));
+        assert_eq!(doc.get("s").unwrap().get("k").unwrap().as_scalar(), Some("v"));
+    }
+
+    #[test]
+    fn quoted_values_protect_commas_and_comments() {
+        let doc = parse("k = 'a, b' ; note\nj = \"x # y\"\n").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_scalar(), Some("a, b"));
+        assert_eq!(doc.get("j").unwrap().as_scalar(), Some("x # y"));
+    }
+
+    #[test]
+    fn empty_section_is_empty_map() {
+        let doc = parse("[empty]\n").unwrap();
+        assert_eq!(doc.get("empty").unwrap().as_map().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[bad\n").is_err());
+        assert!(parse("[]\n").is_err());
+        assert!(parse("[a.b.c]\n").is_err());
+        assert!(parse("no equals here\n").is_err());
+        assert!(parse("= v\n").is_err());
+        assert!(parse("[s]\nk = 1\nk = 2\n").is_err());
+    }
+
+    #[test]
+    fn interpolation_braces_survive() {
+        let doc = parse("cmd = run ${args:size} ${env:T}\n").unwrap();
+        assert_eq!(
+            doc.get("cmd").unwrap().as_scalar(),
+            Some("run ${args:size} ${env:T}")
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! From-scratch JSON: value model, recursive-descent parser, writer.
+//!
+//! serde is unavailable offline; JSON is load-bearing in three places —
+//! WDL parameter files in JSON form (§4.1 "YAML, JSON, or INI-like"),
+//! the AOT `artifacts/manifest.json` registry, and checkpoint / file-
+//! database records. The parser accepts standard JSON (RFC 8259); the
+//! writer emits deterministic output (sorted object keys) so checkpoint
+//! files diff cleanly.
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::{to_string, to_string_pretty};
+
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A JSON value. Objects are ordered maps (BTreeMap) for deterministic
+/// serialization.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number (kept as f64; integers round-trip up to 2^53).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object with sorted keys.
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Build an object from key/value pairs.
+    pub fn obj(pairs: impl IntoIterator<Item = (String, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().collect())
+    }
+
+    /// Borrow as object map.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Borrow as array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Borrow as string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric value.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Integer value if the number is integral.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && x.abs() < 9.0e15 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    /// Boolean value.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|m| m.get(key))
+    }
+
+    /// Object field lookup that errors with a path-aware message —
+    /// the manifest/checkpoint readers' workhorse.
+    pub fn expect(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| Error::Store(format!("missing field '{key}'")))
+    }
+
+    /// Required string field.
+    pub fn expect_str(&self, key: &str) -> Result<&str> {
+        self.expect(key)?
+            .as_str()
+            .ok_or_else(|| Error::Store(format!("field '{key}' is not a string")))
+    }
+
+    /// Required integer field.
+    pub fn expect_i64(&self, key: &str) -> Result<i64> {
+        self.expect(key)?
+            .as_i64()
+            .ok_or_else(|| Error::Store(format!("field '{key}' is not an integer")))
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Json {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let j = parse(r#"{"a": 1, "b": [true, null], "c": "x"}"#).unwrap();
+        assert_eq!(j.expect_i64("a").unwrap(), 1);
+        assert_eq!(j.get("b").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.expect_str("c").unwrap(), "x");
+        assert!(j.expect("zzz").is_err());
+        assert!(j.expect_str("a").is_err());
+    }
+
+    #[test]
+    fn round_trip_stability() {
+        let src = r#"{"z":1,"a":{"nested":[1,2.5,"s",false,null]}}"#;
+        let once = to_string(&parse(src).unwrap());
+        let twice = to_string(&parse(&once).unwrap());
+        assert_eq!(once, twice);
+        // keys sorted deterministically
+        assert!(once.find("\"a\"").unwrap() < once.find("\"z\"").unwrap());
+    }
+}

@@ -1,0 +1,154 @@
+//! Deterministic JSON writer (sorted keys come free from BTreeMap).
+
+use super::Json;
+use crate::util::strings::fmt_number;
+
+/// Compact serialization.
+pub fn to_string(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out, None, 0);
+    out
+}
+
+/// Pretty serialization with 2-space indent (checkpoints, manifests).
+pub fn to_string_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out, Some(2), 0);
+    out
+}
+
+fn write_value(v: &Json, out: &mut String, indent: Option<usize>, depth: usize) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(x) => write_number(*x, out),
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_value(item, out, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_string(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(val, out, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_number(x: f64, out: &mut String) {
+    if x.is_finite() {
+        out.push_str(&fmt_number(x));
+    } else {
+        // JSON has no Inf/NaN; emit null like Python's json with allow_nan off.
+        out.push_str("null");
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn compact_output() {
+        let j = parse(r#"{"b": [1, 2], "a": "x"}"#).unwrap();
+        assert_eq!(to_string(&j), r#"{"a":"x","b":[1,2]}"#);
+    }
+
+    #[test]
+    fn pretty_output_indents() {
+        let j = parse(r#"{"a": [1]}"#).unwrap();
+        assert_eq!(to_string_pretty(&j), "{\n  \"a\": [\n    1\n  ]\n}");
+    }
+
+    #[test]
+    fn escapes_round_trip() {
+        let j = Json::Str("a\"b\\c\nd\u{0001}".into());
+        assert_eq!(parse(&to_string(&j)).unwrap(), j);
+    }
+
+    fn arb_json(g: &mut Gen, depth: usize) -> Json {
+        let choice = if depth >= 3 { g.i64(0..=3) } else { g.i64(0..=5) };
+        match choice {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool(0.5)),
+            2 => Json::Num(g.i64(-1_000_000..=1_000_000) as f64),
+            3 => Json::Str(g.ident()),
+            4 => Json::Arr(g.vec(0..=4, |g| arb_json(g, depth + 1))),
+            _ => {
+                let mut m = BTreeMap::new();
+                for _ in 0..g.usize(0..=4) {
+                    m.insert(g.ident(), arb_json(g, depth + 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    #[test]
+    fn prop_round_trip() {
+        check("json round-trips", 200, |g| {
+            let j = arb_json(g, 0);
+            assert_eq!(parse(&to_string(&j)).unwrap(), j);
+            assert_eq!(parse(&to_string_pretty(&j)).unwrap(), j);
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! # PaPaS — Parallel Parameter Studies
+//!
+//! A reproduction of *"PaPaS: A Portable, Lightweight, and Generic
+//! Framework for Parallel Parameter Studies"* (Ponce et al., PEARC '18)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the PaPaS coordinator: workflow-description-
+//!   language parsers (YAML / JSON / INI), the parameter combinatorial
+//!   engine (§5.1), the workflow DAG engine (§4.2), executors (local
+//!   thread pool, MPI-style dispatcher, SSH-style TCP workers), the
+//!   cluster engine with a PBS-like batch interface and a discrete-event
+//!   cluster simulator (§4.3), provenance + checkpoint/restart (§4.1),
+//!   and the visualization engine (§4.4).
+//! * **L2/L1 (python/, build-time only)** — the swept workloads (C.
+//!   difficile ward ABM, tiled matmul) as JAX programs calling Pallas
+//!   kernels, AOT-lowered to HLO text artifacts.
+//! * **runtime** — loads `artifacts/*.hlo.txt` via the PJRT C API and
+//!   executes them on the Rust request path; Python never runs at
+//!   request time.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use papas::study::Study;
+//! let study = Study::from_file("studies/matmul_omp.yaml").unwrap();
+//! let report = study.run_local(2).unwrap();
+//! println!("{} workflow instances done", report.completed);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod exec;
+pub mod ini;
+pub mod json;
+pub mod params;
+pub mod runtime;
+pub mod study;
+pub mod tasks;
+pub mod util;
+pub mod viz;
+pub mod wdl;
+pub mod workflow;
+pub mod yamlite;

@@ -1,0 +1,6 @@
+//! `papas` binary: the L3 coordinator CLI.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(papas::cli::main_with(&argv));
+}

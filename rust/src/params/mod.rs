@@ -1,0 +1,21 @@
+//! The parameter combinatorial engine (§5.1 of the paper).
+//!
+//! Every parameter is named and multi-valued; the engine enumerates the
+//! Cartesian product of all parameters, with two modifiers:
+//!
+//! * **fixed** clauses zip listed parameters one-to-one (bijection) into a
+//!   single axis — all members must have the same number of values; and
+//! * **sampling** draws a subset of the full combination space (uniform
+//!   stride or seeded random) instead of enumerating everything.
+//!
+//! Combinations are addressable by index (mixed-radix decode), so sampling
+//! never materializes the full space — a requirement once studies reach
+//! millions of combinations.
+
+pub mod sampling;
+pub mod space;
+pub mod value;
+
+pub use sampling::Sampling;
+pub use space::{Combination, Param, Space};
+pub use value::Value;

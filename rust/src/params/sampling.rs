@@ -1,0 +1,176 @@
+//! Parameter-space sampling (§5 keyword `sampling`): run a subset of the
+//! combination space "based on a given distribution (uniform, random)".
+//!
+//! Sampling operates on combination *indices* (mixed-radix addresses into
+//! [`super::Space`]), so a subset of an astronomically large space costs
+//! O(k), not O(N_W).
+
+use super::space::Space;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// A sampling directive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Sampling {
+    /// `sampling: uniform N` — N evenly-strided combinations covering the
+    /// whole index range (deterministic).
+    Uniform(u64),
+    /// `sampling: random N [seed S]` — N distinct combinations drawn
+    /// uniformly at random with the given seed.
+    Random { count: u64, seed: u64 },
+}
+
+impl Sampling {
+    /// Parse the WDL value of the `sampling` keyword. Accepted forms:
+    /// `uniform N`, `random N`, `random N seed S`.
+    pub fn parse(text: &str) -> Result<Sampling> {
+        let toks: Vec<&str> = text.split_whitespace().collect();
+        let usage = "sampling expects 'uniform N' or 'random N [seed S]'";
+        match toks.as_slice() {
+            ["uniform", n] => Ok(Sampling::Uniform(parse_count(n, usage)?)),
+            ["random", n] => Ok(Sampling::Random {
+                count: parse_count(n, usage)?,
+                seed: 0,
+            }),
+            ["random", n, "seed", s] => Ok(Sampling::Random {
+                count: parse_count(n, usage)?,
+                seed: s
+                    .parse()
+                    .map_err(|_| Error::Params(format!("bad seed '{s}'; {usage}")))?,
+            }),
+            _ => Err(Error::Params(format!("bad sampling '{text}'; {usage}"))),
+        }
+    }
+
+    /// The sample size requested.
+    pub fn count(&self) -> u64 {
+        match self {
+            Sampling::Uniform(n) => *n,
+            Sampling::Random { count, .. } => *count,
+        }
+    }
+
+    /// The sampled combination indices, sorted ascending and distinct.
+    /// A request larger than the space degrades to full enumeration.
+    pub fn indices(&self, space: &Space) -> Vec<u64> {
+        let total = space.len();
+        let k = self.count().min(total);
+        if k == total {
+            return (0..total).collect();
+        }
+        match self {
+            Sampling::Uniform(_) => {
+                // Evenly strided midpoints: floor((i + 0.5) * total / k).
+                (0..k)
+                    .map(|i| ((i as u128 * 2 + 1) * total as u128 / (k as u128 * 2)) as u64)
+                    .collect()
+            }
+            Sampling::Random { seed, .. } => {
+                let mut rng = Rng::new(*seed);
+                if total <= 4 * k as u64 {
+                    // Dense: shuffle-sample over the index range.
+                    let idx =
+                        rng.sample_indices(total as usize, k as usize);
+                    idx.into_iter().map(|i| i as u64).collect()
+                } else {
+                    // Sparse: rejection-sample distinct indices.
+                    let mut seen = std::collections::BTreeSet::new();
+                    while (seen.len() as u64) < k {
+                        seen.insert(rng.below(total));
+                    }
+                    seen.into_iter().collect()
+                }
+            }
+        }
+    }
+}
+
+fn parse_count(s: &str, usage: &str) -> Result<u64> {
+    let n: u64 = s
+        .parse()
+        .map_err(|_| Error::Params(format!("bad sample count '{s}'; {usage}")))?;
+    if n == 0 {
+        return Err(Error::Params("sample count must be positive".into()));
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::space::Param;
+
+    fn space_n(n: usize) -> Space {
+        let vals: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+        Space::cartesian(vec![Param::new("p", vals)]).unwrap()
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Sampling::parse("uniform 10").unwrap(), Sampling::Uniform(10));
+        assert_eq!(
+            Sampling::parse("random 5").unwrap(),
+            Sampling::Random { count: 5, seed: 0 }
+        );
+        assert_eq!(
+            Sampling::parse("random 5 seed 99").unwrap(),
+            Sampling::Random { count: 5, seed: 99 }
+        );
+        assert!(Sampling::parse("gaussian 5").is_err());
+        assert!(Sampling::parse("uniform").is_err());
+        assert!(Sampling::parse("uniform 0").is_err());
+        assert!(Sampling::parse("random 5 seed x").is_err());
+    }
+
+    #[test]
+    fn uniform_is_strided_and_covering() {
+        let s = space_n(100);
+        let idx = Sampling::Uniform(10).indices(&s);
+        assert_eq!(idx.len(), 10);
+        assert!(idx[0] < 10, "first sample near the start: {idx:?}");
+        assert!(*idx.last().unwrap() >= 90, "last sample near the end: {idx:?}");
+        // strictly increasing
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn random_is_distinct_sorted_seeded() {
+        let s = space_n(1000);
+        let a = Sampling::Random { count: 50, seed: 7 }.indices(&s);
+        let b = Sampling::Random { count: 50, seed: 7 }.indices(&s);
+        let c = Sampling::Random { count: 50, seed: 8 }.indices(&s);
+        assert_eq!(a, b, "same seed, same sample");
+        assert_ne!(a, c, "different seed, different sample");
+        assert_eq!(a.len(), 50);
+        for w in a.windows(2) {
+            assert!(w[0] < w[1], "distinct + sorted");
+        }
+        assert!(a.iter().all(|&i| i < 1000));
+    }
+
+    #[test]
+    fn oversampling_degrades_to_full() {
+        let s = space_n(5);
+        assert_eq!(Sampling::Uniform(100).indices(&s), vec![0, 1, 2, 3, 4]);
+        assert_eq!(
+            Sampling::Random { count: 100, seed: 1 }.indices(&s),
+            vec![0, 1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn sparse_random_path() {
+        // total ≫ count triggers the rejection-sampling branch
+        let vals: Vec<String> = (0..1000).map(|i| i.to_string()).collect();
+        let s = Space::cartesian(vec![
+            Param::new("a", vals.clone()),
+            Param::new("b", vals),
+        ])
+        .unwrap(); // 10^6 combinations
+        let idx = Sampling::Random { count: 20, seed: 3 }.indices(&s);
+        assert_eq!(idx.len(), 20);
+        assert!(idx.iter().all(|&i| i < 1_000_000));
+    }
+}

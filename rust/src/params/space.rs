@@ -1,0 +1,335 @@
+//! The parameter space: named multi-valued parameters, fixed (zip)
+//! clauses, Cartesian enumeration, and index-addressable combinations.
+//!
+//! Axes (§5.1): parameters NOT in any fixed clause each form their own
+//! axis; every fixed clause forms ONE axis whose length is the common
+//! value count of its members ("ordered one-to-one mappings"). The total
+//! workflow count is the product of axis lengths:
+//!
+//!   N_W = Π_i N_i           (no fixed clauses)
+//!   W   = { W_1 × W_2 }     (W_2 = the zipped fixed parameters)
+
+use super::value::Value;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A named, multi-valued parameter. Names are scoped paths like
+/// `matmulOMP:args:size` or `matmulOMP:environ:OMP_NUM_THREADS` (the
+/// interpolation engine resolves `${...}` references against them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    /// Fully-scoped parameter name.
+    pub name: String,
+    /// The parameter's values, in declaration order.
+    pub values: Vec<Value>,
+}
+
+impl Param {
+    /// Construct from raw strings.
+    pub fn new(name: impl Into<String>, values: Vec<String>) -> Param {
+        Param {
+            name: name.into(),
+            values: values.into_iter().map(Value::new).collect(),
+        }
+    }
+}
+
+/// One enumerated combination: parameter name → chosen value.
+pub type Combination = BTreeMap<String, Value>;
+
+/// An axis of the enumeration: an independent parameter or a zipped
+/// fixed group.
+#[derive(Debug, Clone)]
+enum Axis {
+    /// Independent parameter (index into `Space::params`).
+    Single(usize),
+    /// Fixed clause: all listed parameters step together.
+    Zip(Vec<usize>),
+}
+
+/// A fully-specified parameter space.
+#[derive(Debug, Clone)]
+pub struct Space {
+    params: Vec<Param>,
+    axes: Vec<Axis>,
+}
+
+impl Space {
+    /// Build a space. `fixed_clauses` lists, per clause, the names of the
+    /// parameters zipped together. Errors on: unknown names, a parameter
+    /// in two clauses, arity mismatch within a clause, empty value lists.
+    pub fn new(params: Vec<Param>, fixed_clauses: &[Vec<String>]) -> Result<Space> {
+        for p in &params {
+            if p.values.is_empty() {
+                return Err(Error::Params(format!(
+                    "parameter '{}' has no values",
+                    p.name
+                )));
+            }
+        }
+        let index: BTreeMap<&str, usize> = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.as_str(), i))
+            .collect();
+        if index.len() != params.len() {
+            return Err(Error::Params("duplicate parameter name".into()));
+        }
+
+        let mut in_clause = vec![false; params.len()];
+        let mut axes = Vec::new();
+        for clause in fixed_clauses {
+            let mut members = Vec::new();
+            for name in clause {
+                let &i = index.get(name.as_str()).ok_or_else(|| {
+                    Error::Params(format!(
+                        "fixed clause references unknown parameter '{name}'"
+                    ))
+                })?;
+                if in_clause[i] {
+                    return Err(Error::Params(format!(
+                        "parameter '{name}' appears in more than one fixed clause"
+                    )));
+                }
+                in_clause[i] = true;
+                members.push(i);
+            }
+            if members.is_empty() {
+                return Err(Error::Params("empty fixed clause".into()));
+            }
+            let n0 = params[members[0]].values.len();
+            for &m in &members[1..] {
+                let n = params[m].values.len();
+                if n != n0 {
+                    return Err(Error::Params(format!(
+                        "fixed clause arity mismatch: '{}' has {} values, '{}' has {}",
+                        params[members[0]].name, n0, params[m].name, n
+                    )));
+                }
+            }
+            axes.push(Axis::Zip(members));
+        }
+        // Independent parameters, in declaration order, become the inner
+        // axes; fixed clauses are outermost (§5.1: "moving all the fixed
+        // parameters into the outermost loop structures").
+        for (i, _) in params.iter().enumerate() {
+            if !in_clause[i] {
+                axes.push(Axis::Single(i));
+            }
+        }
+        Ok(Space { params, axes })
+    }
+
+    /// Space with no fixed clauses.
+    pub fn cartesian(params: Vec<Param>) -> Result<Space> {
+        Space::new(params, &[])
+    }
+
+    /// All parameters (declaration order).
+    pub fn params(&self) -> &[Param] {
+        &self.params
+    }
+
+    /// Total number of combinations N_W.
+    pub fn len(&self) -> u64 {
+        self.axes
+            .iter()
+            .map(|a| self.axis_len(a) as u64)
+            .product()
+    }
+
+    /// True when the space has no axes (no parameters → one empty combo
+    /// by convention, so `is_empty` is about *parameters*).
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    fn axis_len(&self, a: &Axis) -> usize {
+        match a {
+            Axis::Single(i) => self.params[*i].values.len(),
+            Axis::Zip(ms) => self.params[ms[0]].values.len(),
+        }
+    }
+
+    /// Decode combination `idx` (0-based, row-major over axes: the LAST
+    /// axis varies fastest — matching the nested-loop order in §5.1).
+    pub fn combination(&self, idx: u64) -> Result<Combination> {
+        let total = self.len();
+        if idx >= total {
+            return Err(Error::Params(format!(
+                "combination index {idx} out of range (total {total})"
+            )));
+        }
+        let mut combo = Combination::new();
+        let mut rem = idx;
+        // Mixed-radix decode, last axis fastest.
+        let mut digits = vec![0usize; self.axes.len()];
+        for (d, axis) in self.axes.iter().enumerate().rev() {
+            let n = self.axis_len(axis) as u64;
+            digits[d] = (rem % n) as usize;
+            rem /= n;
+        }
+        for (axis, &digit) in self.axes.iter().zip(&digits) {
+            match axis {
+                Axis::Single(i) => {
+                    let p = &self.params[*i];
+                    combo.insert(p.name.clone(), p.values[digit].clone());
+                }
+                Axis::Zip(ms) => {
+                    for &m in ms {
+                        let p = &self.params[m];
+                        combo.insert(p.name.clone(), p.values[digit].clone());
+                    }
+                }
+            }
+        }
+        Ok(combo)
+    }
+
+    /// Iterate all combinations in order.
+    pub fn iter(&self) -> impl Iterator<Item = Combination> + '_ {
+        (0..self.len()).map(|i| {
+            self.combination(i)
+                .expect("index < len is always decodable")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(name: &str, vals: &[&str]) -> Param {
+        Param::new(name, vals.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn paper_matmul_space_is_88() {
+        // Figure 6: 11 sizes × 8 threads = 88 workflow instances.
+        let space = Space::cartesian(vec![
+            p("environ:OMP_NUM_THREADS", &["1", "2", "3", "4", "5", "6", "7", "8"]),
+            p("args:size", &[
+                "16", "32", "64", "128", "256", "512", "1024", "2048",
+                "4096", "8192", "16384",
+            ]),
+        ])
+        .unwrap();
+        assert_eq!(space.len(), 88);
+        let all: Vec<_> = space.iter().collect();
+        assert_eq!(all.len(), 88);
+        // every combination is unique
+        let mut dedup = all.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 88);
+    }
+
+    #[test]
+    fn last_axis_varies_fastest() {
+        let space = Space::cartesian(vec![
+            p("a", &["1", "2"]),
+            p("b", &["x", "y", "z"]),
+        ])
+        .unwrap();
+        let combos: Vec<_> = space.iter().collect();
+        assert_eq!(combos[0]["a"].as_str(), "1");
+        assert_eq!(combos[0]["b"].as_str(), "x");
+        assert_eq!(combos[1]["b"].as_str(), "y");
+        assert_eq!(combos[3]["a"].as_str(), "2");
+        assert_eq!(combos[3]["b"].as_str(), "x");
+    }
+
+    #[test]
+    fn fixed_clause_zips() {
+        // §5.1 example: P2 and P3 in the same fixed clause.
+        let space = Space::new(
+            vec![
+                p("p1", &["a", "b"]),
+                p("p2", &["1", "2", "3"]),
+                p("p3", &["x", "y", "z"]),
+            ],
+            &[vec!["p2".into(), "p3".into()]],
+        )
+        .unwrap();
+        // N = 2 * 3 (not 2 * 3 * 3)
+        assert_eq!(space.len(), 6);
+        for c in space.iter() {
+            // bijection: p2=1 ⇔ p3=x, etc.
+            let i = c["p2"].as_i64().unwrap() as usize - 1;
+            assert_eq!(c["p3"].as_str(), ["x", "y", "z"][i]);
+        }
+    }
+
+    #[test]
+    fn fixed_single_param_is_constant_axis() {
+        // "can be used to specify constant single-valued parameters"
+        let space = Space::new(
+            vec![p("const", &["42"]), p("v", &["1", "2"])],
+            &[vec!["const".into()]],
+        )
+        .unwrap();
+        assert_eq!(space.len(), 2);
+        for c in space.iter() {
+            assert_eq!(c["const"].as_str(), "42");
+        }
+    }
+
+    #[test]
+    fn multiple_fixed_clauses() {
+        let space = Space::new(
+            vec![
+                p("a", &["1", "2"]),
+                p("b", &["u", "v"]),
+                p("c", &["8", "9"]),
+                p("d", &["p", "q"]),
+            ],
+            &[
+                vec!["a".into(), "b".into()],
+                vec!["c".into(), "d".into()],
+            ],
+        )
+        .unwrap();
+        assert_eq!(space.len(), 4); // 2 (a,b zipped) × 2 (c,d zipped)
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Space::cartesian(vec![p("e", &[])]).is_err());
+        assert!(Space::new(
+            vec![p("a", &["1"]), p("b", &["1", "2"])],
+            &[vec!["a".into(), "b".into()]],
+        )
+        .is_err()); // arity mismatch
+        assert!(Space::new(vec![p("a", &["1"])], &[vec!["zz".into()]]).is_err());
+        assert!(Space::new(
+            vec![p("a", &["1"]), p("b", &["1"])],
+            &[vec!["a".into()], vec!["a".into(), "b".into()]],
+        )
+        .is_err()); // a in two clauses
+        assert!(
+            Space::cartesian(vec![p("a", &["1"]), p("a", &["2"])]).is_err()
+        ); // duplicate name
+    }
+
+    #[test]
+    fn empty_space_has_one_empty_combination() {
+        let space = Space::cartesian(vec![]).unwrap();
+        assert_eq!(space.len(), 1);
+        assert!(space.combination(0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn combination_index_round_trip() {
+        let space = Space::cartesian(vec![
+            p("a", &["1", "2", "3"]),
+            p("b", &["x", "y"]),
+            p("c", &["7", "8", "9", "10"]),
+        ])
+        .unwrap();
+        let seq: Vec<_> = space.iter().collect();
+        for (i, c) in seq.iter().enumerate() {
+            assert_eq!(&space.combination(i as u64).unwrap(), c);
+        }
+        assert!(space.combination(space.len()).is_err());
+    }
+}

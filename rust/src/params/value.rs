@@ -1,0 +1,110 @@
+//! Parameter values: raw strings with written-format type inference.
+//!
+//! §5: "All keywords are parsed as strings and values are inferred from
+//! written format." A `Value` therefore *is* a string; the typed views
+//! infer on demand (so `16` works both as the string in a command line and
+//! as the integer a task driver needs).
+
+use std::fmt;
+
+/// A single parameter value (raw string + inference).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Value(pub String);
+
+/// The inferred type of a value's written format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Written like an integer (`-3`, `16`).
+    Int,
+    /// Written like a float (`0.5`, `1e-3`).
+    Float,
+    /// `true` / `false` (case-insensitive).
+    Bool,
+    /// Anything else.
+    Str,
+}
+
+impl Value {
+    /// Wrap a raw string.
+    pub fn new(s: impl Into<String>) -> Value {
+        Value(s.into())
+    }
+
+    /// The raw written form.
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+
+    /// Inferred kind of the written format.
+    pub fn kind(&self) -> Kind {
+        let s = self.0.trim();
+        if s.parse::<i64>().is_ok() {
+            Kind::Int
+        } else if s.parse::<f64>().is_ok() {
+            Kind::Float
+        } else if s.eq_ignore_ascii_case("true") || s.eq_ignore_ascii_case("false") {
+            Kind::Bool
+        } else {
+            Kind::Str
+        }
+    }
+
+    /// Integer view.
+    pub fn as_i64(&self) -> Option<i64> {
+        self.0.trim().parse().ok()
+    }
+
+    /// Float view (integers coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        self.0.trim().parse().ok()
+    }
+
+    /// Boolean view.
+    pub fn as_bool(&self) -> Option<bool> {
+        let s = self.0.trim();
+        if s.eq_ignore_ascii_case("true") {
+            Some(true)
+        } else if s.eq_ignore_ascii_case("false") {
+            Some(false)
+        } else {
+            None
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::new(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_inference() {
+        assert_eq!(Value::new("16").kind(), Kind::Int);
+        assert_eq!(Value::new("-3").kind(), Kind::Int);
+        assert_eq!(Value::new("0.5").kind(), Kind::Float);
+        assert_eq!(Value::new("1e-3").kind(), Kind::Float);
+        assert_eq!(Value::new("TRUE").kind(), Kind::Bool);
+        assert_eq!(Value::new("matmul").kind(), Kind::Str);
+        assert_eq!(Value::new("16N").kind(), Kind::Str);
+    }
+
+    #[test]
+    fn typed_views() {
+        assert_eq!(Value::new(" 42 ").as_i64(), Some(42));
+        assert_eq!(Value::new("2.5").as_f64(), Some(2.5));
+        assert_eq!(Value::new("2.5").as_i64(), None);
+        assert_eq!(Value::new("false").as_bool(), Some(false));
+        assert_eq!(Value::new("yes").as_bool(), None);
+    }
+}

@@ -1,0 +1,195 @@
+//! The artifact registry: `artifacts/manifest.json` describes every
+//! AOT-compiled HLO module (inputs, outputs, workload metadata). The
+//! Rust side treats it as the single source of truth for what can run.
+
+use crate::json::{self, Json};
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor crossing the artifact boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions (row-major).
+    pub shape: Vec<usize>,
+    /// Element type tag as written by aot.py ("f32", "i32").
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .expect("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Runtime("spec.shape not an array".into()))?
+            .iter()
+            .map(|d| {
+                d.as_i64()
+                    .map(|x| x as usize)
+                    .ok_or_else(|| Error::Runtime("bad shape dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { shape, dtype: j.expect_str("dtype")?.to_string() })
+    }
+}
+
+/// Metadata for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Registry name, e.g. `matmul_256` or `abm_p64_h8_t168`.
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: String,
+    /// Workload kind: "matmul" | "abm".
+    pub kind: String,
+    /// Input tensor specs, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs (all artifacts emit a 1-tuple).
+    pub outputs: Vec<TensorSpec>,
+    /// Kind-specific integers (size / n_patients / n_hcw / n_steps ...).
+    pub dims: BTreeMap<String, i64>,
+    /// Nominal FLOP count when the workload defines one (matmul).
+    pub flops: Option<i64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory holding the `.hlo.txt` files.
+    pub dir: PathBuf,
+    /// Artifacts by name.
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                mpath.display()
+            ))
+        })?;
+        let j = json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .expect("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Runtime("manifest.artifacts not an object".into()))?;
+        for (name, meta) in arts {
+            let inputs = meta
+                .expect("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = meta
+                .expect("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let mut dims = BTreeMap::new();
+            if let Some(obj) = meta.as_obj() {
+                for (k, v) in obj {
+                    if let Some(x) = v.as_i64() {
+                        if k != "flops" && k != "hlo_bytes" {
+                            dims.insert(k.clone(), x);
+                        }
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: meta.expect_str("file")?.to_string(),
+                    kind: meta.expect_str("kind")?.to_string(),
+                    inputs,
+                    outputs,
+                    dims,
+                    flops: meta.get("flops").and_then(Json::as_i64),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Look up an artifact, with a helpful error.
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "unknown artifact '{name}' (have: {})",
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Names of artifacts of a given kind, sorted.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+
+    /// The matmul artifact for size `n`, if compiled.
+    pub fn matmul_for_size(&self, n: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.get(&format!("matmul_{n}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Repo-relative artifacts dir (tests run from the crate root).
+    pub fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.artifacts.len() >= 9, "have {}", m.artifacts.len());
+        let mm = m.get("matmul_256").unwrap();
+        assert_eq!(mm.kind, "matmul");
+        assert_eq!(mm.inputs.len(), 2);
+        assert_eq!(mm.inputs[0].shape, vec![256, 256]);
+        assert_eq!(mm.inputs[0].elements(), 65536);
+        assert_eq!(mm.flops, Some(2 * 256 * 256 * 256));
+        assert!(m.hlo_path(mm).exists());
+
+        let abm = m.get("abm_p64_h8_t168").unwrap();
+        assert_eq!(abm.kind, "abm");
+        assert_eq!(abm.dims["n_patients"], 64);
+        assert_eq!(abm.outputs[0].shape, vec![168, 6]);
+        assert_eq!(m.matmul_for_size(512).unwrap().name, "matmul_512");
+        assert!(m.matmul_for_size(7).is_none());
+        assert!(m.of_kind("abm").len() >= 3);
+    }
+
+    #[test]
+    fn missing_manifest_is_clear() {
+        let e = Manifest::load("/nonexistent").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"), "{e}");
+    }
+
+    #[test]
+    fn unknown_artifact_lists_names() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let e = m.get("nope").unwrap_err();
+        assert!(e.to_string().contains("matmul_16"), "{e}");
+    }
+}

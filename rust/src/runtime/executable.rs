@@ -1,0 +1,254 @@
+//! Compiled-executable cache and execution: the hot path of every HLO
+//! task. Compiles each artifact once per process (compile is ~10-100 ms;
+//! tasks run thousands of times) and executes with Literal I/O.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Counters the perf pass and benches read.
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    /// Artifact compilations performed (cache misses).
+    pub compiles: AtomicU64,
+    /// Executions dispatched.
+    pub executions: AtomicU64,
+}
+
+/// A process-wide PJRT runtime: one CPU client + compiled-executable
+/// cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Execution counters.
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT cpu client: {e}")))?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    /// The artifact registry.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        // Compile outside the lock: first touches of different artifacts
+        // can compile concurrently; a duplicate compile of the same
+        // artifact is benign (second insert wins, both work).
+        let meta = self.manifest.get(name)?;
+        let exe = Arc::new(self.compile(meta)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn compile(&self, meta: &ArtifactMeta) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.hlo_path(meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Runtime(format!("non-UTF-8 path {}", path.display()))
+            })?,
+        )
+        .map_err(|e| {
+            Error::Runtime(format!("parse HLO {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        self.client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile '{}': {e}", meta.name)))
+    }
+
+    /// Execute an artifact with Literal inputs; returns the tuple
+    /// elements of the (1-tuple) result as Literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let meta = self.manifest.get(name)?;
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "'{name}' expects {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let exe = self.executable(name)?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute '{name}': {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result of '{name}': {e}")))?;
+        // aot.py lowers with return_tuple=True → always a tuple literal.
+        let elems = lit
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple result of '{name}': {e}")))?;
+        Ok(elems)
+    }
+
+    /// Run a compiled matmul artifact: C = A @ B over f32 square matrices.
+    pub fn run_matmul(&self, n: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .matmul_for_size(n)
+            .ok_or_else(|| Error::Runtime(format!("no matmul artifact for size {n}")))?;
+        let name = meta.name.clone();
+        if a.len() != n * n || b.len() != n * n {
+            return Err(Error::Runtime(format!(
+                "matmul_{n} inputs must be {0}x{0}",
+                n
+            )));
+        }
+        let la = xla::Literal::vec1(a)
+            .reshape(&[n as i64, n as i64])
+            .map_err(|e| Error::Runtime(format!("reshape A: {e}")))?;
+        let lb = xla::Literal::vec1(b)
+            .reshape(&[n as i64, n as i64])
+            .map_err(|e| Error::Runtime(format!("reshape B: {e}")))?;
+        let out = self.execute(&name, &[la, lb])?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("read C: {e}")))
+    }
+
+    /// Run an ensemble-aggregation artifact: a replicate stack
+    /// [R][T][M] (row-major flat) reduces to per-step statistics
+    /// [T][M][4] (mean, var, min, max).
+    pub fn run_ensemble(&self, name: &str, stack: &[f32]) -> Result<EnsembleStats> {
+        let meta = self.manifest.get(name)?;
+        if meta.kind != "ensemble" {
+            return Err(Error::Runtime(format!(
+                "'{name}' is not an ensemble artifact"
+            )));
+        }
+        let ishape = &meta.inputs[0].shape;
+        if stack.len() != meta.inputs[0].elements() {
+            return Err(Error::Runtime(format!(
+                "'{name}' expects {:?} ({} values), got {}",
+                ishape,
+                meta.inputs[0].elements(),
+                stack.len()
+            )));
+        }
+        let lit = xla::Literal::vec1(stack)
+            .reshape(&[ishape[0] as i64, ishape[1] as i64, ishape[2] as i64])
+            .map_err(|e| Error::Runtime(format!("reshape stack: {e}")))?;
+        let out = self.execute(name, &[lit])?;
+        let data = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("read stats: {e}")))?;
+        Ok(EnsembleStats {
+            steps: meta.outputs[0].shape[0],
+            metrics: meta.outputs[0].shape[1],
+            data,
+        })
+    }
+
+    /// Run an ABM artifact: returns the metrics time series, row-major
+    /// [n_steps][n_metrics].
+    pub fn run_abm(
+        &self,
+        name: &str,
+        seed: i32,
+        params: &[f32],
+    ) -> Result<AbmSeries> {
+        let meta = self.manifest.get(name)?;
+        if meta.kind != "abm" {
+            return Err(Error::Runtime(format!("'{name}' is not an abm artifact")));
+        }
+        let n_params = meta.inputs[1].elements();
+        if params.len() != n_params {
+            return Err(Error::Runtime(format!(
+                "'{name}' expects {n_params} params, got {}",
+                params.len()
+            )));
+        }
+        let steps = meta.outputs[0].shape[0];
+        let metrics = meta.outputs[0].shape[1];
+        let lseed = xla::Literal::from(seed);
+        let lparams = xla::Literal::vec1(params);
+        let out = self.execute(name, &[lseed, lparams])?;
+        let data = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("read series: {e}")))?;
+        Ok(AbmSeries { steps, metrics, data })
+    }
+}
+
+/// Per-step ensemble statistics from an aggregation run: [T][M][4]
+/// row-major, stat columns = (mean, var, min, max).
+#[derive(Debug, Clone)]
+pub struct EnsembleStats {
+    /// Steps (rows).
+    pub steps: usize,
+    /// Metrics per step.
+    pub metrics: usize,
+    /// Row-major [steps][metrics][4].
+    pub data: Vec<f32>,
+}
+
+impl EnsembleStats {
+    /// Value at (step, metric, stat) with stat ∈ 0..4.
+    pub fn at(&self, step: usize, metric: usize, stat: usize) -> f32 {
+        self.data[(step * self.metrics + metric) * 4 + stat]
+    }
+}
+
+/// Metrics time series from one ABM run.
+#[derive(Debug, Clone)]
+pub struct AbmSeries {
+    /// Number of steps (rows).
+    pub steps: usize,
+    /// Metrics per step (columns).
+    pub metrics: usize,
+    /// Row-major values.
+    pub data: Vec<f32>,
+}
+
+impl AbmSeries {
+    /// Value at (step, metric).
+    pub fn at(&self, step: usize, metric: usize) -> f32 {
+        self.data[step * self.metrics + metric]
+    }
+
+    /// Final row.
+    pub fn last_row(&self) -> &[f32] {
+        &self.data[(self.steps - 1) * self.metrics..]
+    }
+
+    /// Column index meanings match python model.METRIC_NAMES.
+    pub const N_SUSCEPTIBLE: usize = 0;
+    /// Colonized count column.
+    pub const N_COLONIZED: usize = 1;
+    /// Diseased count column.
+    pub const N_DISEASED: usize = 2;
+    /// Mean room contamination column.
+    pub const MEAN_ROOM: usize = 3;
+    /// Mean HCW contamination column.
+    pub const MEAN_HCW: usize = 4;
+    /// Patients-on-antibiotics column.
+    pub const N_ANTIBIOTICS: usize = 5;
+}

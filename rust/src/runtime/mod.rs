@@ -1,0 +1,16 @@
+//! The PJRT runtime: loads AOT-compiled HLO artifacts and executes them
+//! on the Rust request path. Python never runs here — `make artifacts`
+//! produced `artifacts/*.hlo.txt` + `manifest.json` at build time.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format because the crate's bundled XLA
+//! (xla_extension 0.5.1) rejects jax≥0.5's 64-bit-id serialized protos.
+
+pub mod artifact;
+pub mod executable;
+pub mod service;
+
+pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
+pub use executable::{AbmSeries, Runtime, RuntimeStats};
+pub use service::RuntimeService;

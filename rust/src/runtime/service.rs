@@ -1,0 +1,156 @@
+//! Thread-safe runtime handle.
+//!
+//! The `xla` crate's PJRT wrappers are `!Send`/`!Sync` (Rc + raw
+//! pointers), but PaPaS executors run tasks from many worker threads. The
+//! [`RuntimeService`] owns the [`Runtime`] on a dedicated service thread
+//! and exposes a cloneable, `Send + Sync` handle; requests cross over a
+//! channel as plain data (f32 buffers), never as XLA objects.
+//!
+//! On this 1-core CPU testbed the serialization this imposes on HLO
+//! executions costs nothing — PJRT-CPU executions would contend for the
+//! same core anyway — and it keeps the unsafe count at zero.
+
+use super::artifact::Manifest;
+use super::executable::{AbmSeries, Runtime};
+use crate::util::error::{Error, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Request {
+    Matmul {
+        n: usize,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Abm {
+        name: String,
+        seed: i32,
+        params: Vec<f32>,
+        reply: mpsc::Sender<Result<AbmSeries>>,
+    },
+    Ensemble {
+        name: String,
+        stack: Vec<f32>,
+        reply: mpsc::Sender<Result<super::executable::EnsembleStats>>,
+    },
+    Stats {
+        reply: mpsc::Sender<(u64, u64)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the PJRT runtime service.
+#[derive(Clone)]
+pub struct RuntimeService {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    /// The manifest, loaded eagerly on the caller side (plain data).
+    manifest: Arc<Manifest>,
+}
+
+impl RuntimeService {
+    /// Start the service thread for the artifacts in `dir`.
+    pub fn start(dir: impl Into<PathBuf>) -> Result<RuntimeService> {
+        let dir = dir.into();
+        // Load the manifest here too (cheap, plain data) so lookups don't
+        // round-trip through the service thread.
+        let manifest = Arc::new(Manifest::load(&dir)?);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let runtime = match Runtime::new(&dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Matmul { n, a, b, reply } => {
+                            let _ = reply.send(runtime.run_matmul(n, &a, &b));
+                        }
+                        Request::Abm { name, seed, params, reply } => {
+                            let _ = reply.send(runtime.run_abm(&name, seed, &params));
+                        }
+                        Request::Ensemble { name, stack, reply } => {
+                            let _ = reply.send(runtime.run_ensemble(&name, &stack));
+                        }
+                        Request::Stats { reply } => {
+                            use std::sync::atomic::Ordering;
+                            let _ = reply.send((
+                                runtime.stats.compiles.load(Ordering::Relaxed),
+                                runtime.stats.executions.load(Ordering::Relaxed),
+                            ));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn runtime thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime thread died during init".into()))??;
+        Ok(RuntimeService { tx: Arc::new(Mutex::new(tx)), manifest })
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| Error::Runtime("runtime service stopped".into()))
+    }
+
+    /// The artifact registry (local copy, no round trip).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// C = A @ B through the compiled artifact for size `n`.
+    pub fn run_matmul(&self, n: usize, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Matmul { n, a, b, reply })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime service dropped reply".into()))?
+    }
+
+    /// One ABM run through the named artifact.
+    pub fn run_abm(&self, name: &str, seed: i32, params: Vec<f32>) -> Result<AbmSeries> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Abm { name: name.to_string(), seed, params, reply })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime service dropped reply".into()))?
+    }
+
+    /// Ensemble aggregation through the named artifact.
+    pub fn run_ensemble(
+        &self,
+        name: &str,
+        stack: Vec<f32>,
+    ) -> Result<super::executable::EnsembleStats> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Ensemble { name: name.to_string(), stack, reply })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime service dropped reply".into()))?
+    }
+
+    /// (compiles, executions) so far — the executable-cache counters.
+    pub fn stats(&self) -> Result<(u64, u64)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Stats { reply })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime service dropped reply".into()))
+    }
+
+    /// Stop the service thread (drops are fine too; this is explicit).
+    pub fn shutdown(&self) {
+        let _ = self.send(Request::Shutdown);
+    }
+}

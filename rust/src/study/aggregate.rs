@@ -1,0 +1,160 @@
+//! Output-file aggregation across workflow instances — the §9 extension
+//! the paper left as future work ("the PaPaS design does not support ...
+//! automatic aggregation of files, even if tasks utilize the same names
+//! for output files. Some difficulties ... are content ordering and
+//! parsing tasks correctly (replicated file names)").
+//!
+//! Both difficulties are resolved here by construction: instances are
+//! ordered by combination index (deterministic ordering), and replicated
+//! names cannot collide because every instance owns a private workdir —
+//! the aggregator prefixes each row/file with the instance id and its
+//! parameter values, so the provenance survives the merge.
+
+use super::Study;
+use crate::util::error::{Error, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// How matching files are merged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// CSV-aware: keep one header, prefix rows with `instance` and the
+    /// combination's parameter values.
+    Csv,
+    /// Verbatim: concatenate with `# instance ...` separator lines.
+    Concat,
+}
+
+/// Aggregate every instance's file matching `pattern` (a file-name regex
+/// applied within each instance workdir) into `out_path`. Returns the
+/// number of files merged.
+pub fn aggregate(
+    study: &Study,
+    pattern: &str,
+    mode: Mode,
+    out_path: &Path,
+) -> Result<usize> {
+    let re = regex::Regex::new(pattern)
+        .map_err(|e| Error::Store(format!("aggregate pattern '{pattern}': {e}")))?;
+    let mut merged = 0usize;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(out_path)?);
+    let mut wrote_header = false;
+
+    // Deterministic ordering: combination-index order.
+    for inst in study.instances()? {
+        let dir = study.db_root.join("work").join(format!("wf-{:04}", inst.index));
+        let Ok(entries) = std::fs::read_dir(&dir) else {
+            continue; // instance never ran
+        };
+        let mut files: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| re.is_match(n))
+            })
+            .collect();
+        files.sort();
+        // The combination, as `k=v` pairs for provenance columns.
+        let combo_desc: Vec<String> = inst
+            .combo
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+
+        for f in files {
+            let content = std::fs::read_to_string(&f)?;
+            match mode {
+                Mode::Concat => {
+                    writeln!(
+                        out,
+                        "# instance={} file={} {}",
+                        inst.index,
+                        f.file_name().unwrap().to_string_lossy(),
+                        combo_desc.join(" ")
+                    )?;
+                    out.write_all(content.as_bytes())?;
+                }
+                Mode::Csv => {
+                    let mut lines = content.lines();
+                    let Some(header) = lines.next() else { continue };
+                    if !wrote_header {
+                        writeln!(out, "instance,combo,{header}")?;
+                        wrote_header = true;
+                    }
+                    let combo_col = combo_desc.join(";");
+                    for line in lines {
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        writeln!(out, "{},{combo_col},{line}", inst.index)?;
+                    }
+                }
+            }
+            merged += 1;
+        }
+    }
+    out.flush()?;
+    if merged == 0 {
+        return Err(Error::Store(format!(
+            "aggregate: no files matching '{pattern}' under {}",
+            study.db_root.display()
+        )));
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_study(tag: &str) -> Study {
+        let dir = std::env::temp_dir().join("papas_agg").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("s.yaml"),
+            "t:\n  command: /bin/sh -c \"printf 'step,v\\n0,${x}\\n1,${x}\\n' > out_${x}.csv\"\n  x: [10, 20]\n",
+        )
+        .unwrap();
+        let study = Study::from_file(dir.join("s.yaml"))
+            .unwrap()
+            .with_db_root(dir.join(".papas"));
+        study.run_local(1).unwrap();
+        study
+    }
+
+    #[test]
+    fn csv_aggregation_single_header_with_provenance() {
+        let study = run_study("csv");
+        let out = study.db_root.join("aggregate.csv");
+        let n = aggregate(&study, r"^out_.*\.csv$", Mode::Csv, &out).unwrap();
+        assert_eq!(n, 2);
+        let text = std::fs::read_to_string(&out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "instance,combo,step,v");
+        assert_eq!(lines.len(), 5); // header + 2 rows × 2 instances
+        assert!(lines[1].starts_with("0,t:x=10,0,10"), "{}", lines[1]);
+        assert!(lines[3].starts_with("1,t:x=20,0,20"), "{}", lines[3]);
+    }
+
+    #[test]
+    fn concat_aggregation_keeps_all_content() {
+        let study = run_study("concat");
+        let out = study.db_root.join("aggregate.txt");
+        let n = aggregate(&study, r"\.csv$", Mode::Concat, &out).unwrap();
+        assert_eq!(n, 2);
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(text.matches("# instance=").count(), 2);
+        assert!(text.contains("t:x=10"));
+        assert!(text.contains("step,v"));
+    }
+
+    #[test]
+    fn no_match_is_an_error() {
+        let study = run_study("nomatch");
+        let out = study.db_root.join("agg.csv");
+        assert!(aggregate(&study, r"^nothing\.dat$", Mode::Csv, &out).is_err());
+        assert!(aggregate(&study, r"[invalid", Mode::Csv, &out).is_err());
+    }
+}

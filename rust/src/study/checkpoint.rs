@@ -1,0 +1,127 @@
+//! Checkpoint/restart (§4.1: "PaPaS provides checkpoint-restart
+//! functionality in case of fault or a deliberate pause/stop operation.
+//! A parameter study's state can be saved in a workflow file and reloaded
+//! at a later time.")
+//!
+//! The checkpoint is the set of task keys (`task_id#instance`) that have
+//! completed successfully. On restart the scheduler satisfies those
+//! immediately; everything else re-runs. Writes are atomic
+//! (tmp + rename) so a crash mid-checkpoint never corrupts state.
+
+use crate::json::{self, Json};
+use crate::util::error::{Error, Result};
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// A study checkpoint.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    /// Keys of successfully completed tasks.
+    pub done_keys: BTreeSet<String>,
+}
+
+const FILE: &str = "checkpoint.json";
+
+impl Checkpoint {
+    /// Load the checkpoint under `db_root` (empty when none exists).
+    pub fn load(db_root: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = db_root.as_ref().join(FILE);
+        if !path.exists() {
+            return Ok(Checkpoint::default());
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let j = json::parse(&text)
+            .map_err(|e| Error::Store(format!("corrupt checkpoint: {e}")))?;
+        let done = j
+            .expect("done")?
+            .as_arr()
+            .ok_or_else(|| Error::Store("checkpoint.done not an array".into()))?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        Ok(Checkpoint { done_keys: done })
+    }
+
+    /// Atomically save under `db_root`.
+    pub fn save(&self, db_root: impl AsRef<Path>) -> Result<()> {
+        let root = db_root.as_ref();
+        std::fs::create_dir_all(root)?;
+        let j = Json::obj([
+            ("format".to_string(), Json::from(1i64)),
+            (
+                "done".to_string(),
+                Json::Arr(
+                    self.done_keys
+                        .iter()
+                        .map(|k| Json::from(k.as_str()))
+                        .collect(),
+                ),
+            ),
+        ]);
+        let tmp = root.join(format!("{FILE}.tmp"));
+        std::fs::write(&tmp, json::to_string_pretty(&j))?;
+        std::fs::rename(&tmp, root.join(FILE))?;
+        Ok(())
+    }
+
+    /// Remove any saved checkpoint.
+    pub fn clear(db_root: impl AsRef<Path>) -> Result<()> {
+        let path = db_root.as_ref().join(FILE);
+        if path.exists() {
+            std::fs::remove_file(path)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn root(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("papas_ckpt").join(tag);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn round_trip() {
+        let r = root("rt");
+        let mut c = Checkpoint::default();
+        c.done_keys.insert("a#0".into());
+        c.done_keys.insert("b#12".into());
+        c.save(&r).unwrap();
+        assert_eq!(Checkpoint::load(&r).unwrap(), c);
+    }
+
+    #[test]
+    fn missing_is_empty() {
+        assert!(Checkpoint::load(root("missing")).unwrap().done_keys.is_empty());
+    }
+
+    #[test]
+    fn clear_removes() {
+        let r = root("clear");
+        let mut c = Checkpoint::default();
+        c.done_keys.insert("x#1".into());
+        c.save(&r).unwrap();
+        Checkpoint::clear(&r).unwrap();
+        assert!(Checkpoint::load(&r).unwrap().done_keys.is_empty());
+        Checkpoint::clear(&r).unwrap(); // idempotent
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_an_error() {
+        let r = root("corrupt");
+        std::fs::create_dir_all(&r).unwrap();
+        std::fs::write(r.join(FILE), "{not json").unwrap();
+        assert!(Checkpoint::load(&r).is_err());
+    }
+
+    #[test]
+    fn no_tmp_left_behind() {
+        let r = root("tmp");
+        Checkpoint::default().save(&r).unwrap();
+        assert!(!r.join(format!("{FILE}.tmp")).exists());
+    }
+}

@@ -1,0 +1,106 @@
+//! The study file database (§4.1: "parameter study configurations are
+//! stored in a file database as part of the monitoring activity").
+//!
+//! Layout under `.papas/<study>/`:
+//!
+//! ```text
+//! study.json        the merged source document + load metadata
+//! checkpoint.json   completed task keys (study/checkpoint.rs)
+//! records.jsonl     task profiling records (workflow/provenance.rs)
+//! events.log        timestamped engine events
+//! report.json       last run's summary
+//! work/wf-NNNN/     per-instance working directories
+//! ```
+
+use crate::json::{self, Json};
+use crate::util::error::Result;
+use std::path::{Path, PathBuf};
+
+/// Handle on a study's database directory.
+pub struct FileDb {
+    root: PathBuf,
+}
+
+impl FileDb {
+    /// Open (creating) the database.
+    pub fn open(root: impl AsRef<Path>) -> Result<FileDb> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(root.join("work"))?;
+        Ok(FileDb { root })
+    }
+
+    /// Database root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Store the study configuration snapshot.
+    pub fn store_study(&self, study: &super::Study) -> Result<()> {
+        let j = Json::obj([
+            ("name".to_string(), Json::from(study.name.as_str())),
+            ("document".to_string(), study.doc.to_json()),
+            (
+                "n_combinations".to_string(),
+                Json::from(study.space().len() as i64),
+            ),
+            (
+                "n_selected".to_string(),
+                Json::from(study.n_instances()),
+            ),
+            (
+                "tasks".to_string(),
+                Json::Arr(
+                    study
+                        .spec
+                        .tasks
+                        .iter()
+                        .map(|t| Json::from(t.id.as_str()))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(
+            self.root.join("study.json"),
+            json::to_string_pretty(&j),
+        )?;
+        Ok(())
+    }
+
+    /// Load the stored study snapshot (for `papas status` / tooling).
+    pub fn load_study_snapshot(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.root.join("study.json"))?;
+        json::parse(&text)
+    }
+
+    /// Per-instance working directory.
+    pub fn instance_dir(&self, instance: u64) -> PathBuf {
+        self.root.join("work").join(format!("wf-{instance:04}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::study::Study;
+    use crate::wdl::{parse_str, Format};
+
+    #[test]
+    fn store_and_snapshot() {
+        let dir = std::env::temp_dir().join("papas_filedb/store");
+        let _ = std::fs::remove_dir_all(&dir);
+        let doc = parse_str(
+            "t:\n  command: sleep-ms 0\n  v: [1, 2]\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let study =
+            Study::from_doc("demo".into(), doc, std::env::temp_dir()).unwrap();
+        let db = FileDb::open(&dir).unwrap();
+        db.store_study(&study).unwrap();
+        let snap = db.load_study_snapshot().unwrap();
+        assert_eq!(snap.expect_str("name").unwrap(), "demo");
+        assert_eq!(snap.expect_i64("n_combinations").unwrap(), 2);
+        assert!(db.instance_dir(3).to_string_lossy().contains("wf-0003"));
+        assert!(dir.join("work").is_dir());
+    }
+}

@@ -1,0 +1,332 @@
+//! The parameter study engine (§4.1): the user-facing facade.
+//!
+//! A [`Study`] owns the typed spec, the global parameter space (every
+//! task's parameters, task-scoped, with fixed clauses and sampling
+//! applied), the file database under `.papas/<study>/`, and
+//! checkpoint/restart. `run_local` / `run_mpi` / `run_ssh` drive the
+//! workflow engine over the corresponding executor.
+//!
+//! The "workflow generator Python 3 interface" of the paper maps to this
+//! module's Rust API: embed PaPaS as a library by constructing `Study`
+//! values programmatically (see `examples/`).
+
+pub mod aggregate;
+pub mod checkpoint;
+pub mod filedb;
+
+pub use aggregate::{aggregate, Mode as AggregateMode};
+pub use checkpoint::Checkpoint;
+pub use filedb::FileDb;
+
+use crate::exec::local::LocalPool;
+use crate::exec::mpi::{Grouping, MpiDispatcher};
+use crate::exec::runner::{RunConfig, TaskRunner};
+use crate::exec::ssh::SshPool;
+use crate::exec::Executor;
+use crate::params::{Param, Sampling, Space};
+use crate::tasks::Builtins;
+use crate::util::error::Result;
+use crate::wdl::{self, Node, StudySpec};
+use crate::workflow::{ExecutionReport, WorkflowInstance, WorkflowScheduler};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// A loaded, validated parameter study.
+pub struct Study {
+    /// Study name (file stem or explicit).
+    pub name: String,
+    /// The typed spec.
+    pub spec: StudySpec,
+    /// The merged source document (stored in the file db).
+    pub doc: Node,
+    /// Global parameter space.
+    space: Space,
+    /// Combination indices to run (sampling applied; identity otherwise).
+    selected: Vec<u64>,
+    /// Root of the study's file database (`.papas/<name>`).
+    pub db_root: PathBuf,
+    /// Directory where shared input files live (the "NFS dir").
+    pub input_root: PathBuf,
+    /// Builtins registry (PJRT runtime attached or not).
+    builtins: Arc<Builtins>,
+    /// Validation warnings from load time.
+    pub warnings: Vec<String>,
+}
+
+impl Study {
+    /// Load a study from one or more parameter files (merged in order).
+    pub fn from_files<P: AsRef<Path>>(paths: &[P]) -> Result<Study> {
+        let doc = wdl::merge::load_files(paths)?;
+        let first = paths[0].as_ref();
+        let name = first
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("study")
+            .to_string();
+        let input_root = first
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        Study::from_doc(name, doc, input_root)
+    }
+
+    /// Single-file convenience.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Study> {
+        Study::from_files(&[path])
+    }
+
+    /// Build from an already-parsed document (the library embedding API).
+    pub fn from_doc(name: String, doc: Node, input_root: PathBuf) -> Result<Study> {
+        let spec = StudySpec::from_doc(&doc)?;
+        let warnings = wdl::validate::validate(&spec)?;
+
+        // Assemble the global space: every task's local parameters,
+        // task-scoped; fixed clauses likewise scoped.
+        let mut params: Vec<Param> = Vec::new();
+        let mut fixed: Vec<Vec<String>> = Vec::new();
+        for t in &spec.tasks {
+            for p in t.local_params() {
+                params.push(Param {
+                    name: format!("{}:{}", t.id, p.name),
+                    values: p.values,
+                });
+            }
+            for clause in &t.fixed {
+                fixed.push(clause.iter().map(|n| format!("{}:{n}", t.id)).collect());
+            }
+        }
+        let space = Space::new(params, &fixed)?;
+
+        // Sampling: the study-level sample is the union of task requests
+        // (typically at most one task declares `sampling`).
+        let sampling: Option<&Sampling> =
+            spec.tasks.iter().find_map(|t| t.sampling.as_ref());
+        let selected: Vec<u64> = match sampling {
+            Some(s) => s.indices(&space),
+            None => (0..space.len()).collect(),
+        };
+
+        let db_root = PathBuf::from(".papas").join(&name);
+        Ok(Study {
+            name,
+            spec,
+            doc,
+            space,
+            selected,
+            db_root,
+            input_root,
+            builtins: Arc::new(Builtins::without_runtime()),
+            warnings,
+        })
+    }
+
+    /// Attach a PJRT runtime (enables `matmul` HLO path and `abm`).
+    pub fn with_runtime(mut self, rt: crate::runtime::RuntimeService) -> Study {
+        self.builtins = Arc::new(Builtins::with_runtime(rt));
+        self
+    }
+
+    /// Override the file-database root (tests, benches).
+    pub fn with_db_root(mut self, root: impl Into<PathBuf>) -> Study {
+        self.db_root = root.into();
+        self
+    }
+
+    /// The global combination space.
+    pub fn space(&self) -> &Space {
+        &self.space
+    }
+
+    /// Number of workflow instances that will run (post-sampling).
+    pub fn n_instances(&self) -> usize {
+        self.selected.len()
+    }
+
+    /// Materialize every selected workflow instance.
+    pub fn instances(&self) -> Result<Vec<WorkflowInstance>> {
+        self.selected
+            .iter()
+            .map(|&i| {
+                WorkflowInstance::materialize(
+                    &self.spec,
+                    i,
+                    self.space.combination(i)?,
+                )
+            })
+            .collect()
+    }
+
+    fn runner(&self) -> Arc<TaskRunner> {
+        Arc::new(TaskRunner::new(
+            self.builtins.clone(),
+            RunConfig {
+                work_root: self.db_root.join("work"),
+                input_root: self.input_root.clone(),
+            },
+        ))
+    }
+
+    /// Run on the local thread pool.
+    pub fn run_local(&self, workers: usize) -> Result<ExecutionReport> {
+        let pool = LocalPool::new(self.runner(), workers);
+        self.run_with(&pool)
+    }
+
+    /// Run through the MPI-style dispatcher with an N×P grouping.
+    pub fn run_mpi(&self, nnodes: usize, ppnode: usize) -> Result<ExecutionReport> {
+        let d = MpiDispatcher::new(self.runner(), Grouping { nnodes, ppnode })?;
+        self.run_with(&d)
+    }
+
+    /// Run over SSH-mode workers. Empty `hosts` auto-starts `n_local`
+    /// localhost daemons.
+    pub fn run_ssh(&self, hosts: &[String], n_local: usize) -> Result<ExecutionReport> {
+        let pool = if hosts.is_empty() {
+            SshPool::spawn_local(self.runner(), n_local)?
+        } else {
+            SshPool::connect(hosts.to_vec())?
+        };
+        self.run_with(&pool)
+    }
+
+    /// Run on an arbitrary executor, with checkpointing + provenance.
+    pub fn run_with(&self, executor: &dyn Executor) -> Result<ExecutionReport> {
+        let db = FileDb::open(&self.db_root)?;
+        db.store_study(self)?;
+        let prov = crate::workflow::provenance::Provenance::open(&self.db_root)?;
+        prov.log_event(&format!(
+            "run start: {} instances on {} ({} workers)",
+            self.n_instances(),
+            executor.name(),
+            executor.workers()
+        ))?;
+
+        let instances = self.instances()?;
+        let mut scheduler = WorkflowScheduler::new(&instances);
+        // Checkpoint restore: completed task keys skip execution.
+        let ckpt = Checkpoint::load(&self.db_root)?;
+        scheduler.skip_done = ckpt.done_keys.clone();
+
+        let report = scheduler.run(executor)?;
+
+        // Persist the checkpoint (old done + newly done).
+        let mut done = ckpt.done_keys;
+        for r in &report.records {
+            if r.ok {
+                done.insert(r.key.clone());
+            }
+        }
+        Checkpoint { done_keys: done }.save(&self.db_root)?;
+
+        prov.append_records(&report.records)?;
+        prov.write_report(&report, executor.name())?;
+        prov.log_event(&format!(
+            "run end: {} completed, {} failed, {} skipped, {} restored, \
+             makespan {:.3}s",
+            report.completed, report.failed, report.skipped, report.restored,
+            report.makespan
+        ))?;
+        Ok(report)
+    }
+
+    /// Delete the checkpoint (a fresh `run` will re-execute everything).
+    pub fn clear_checkpoint(&self) -> Result<()> {
+        Checkpoint::clear(&self.db_root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_study(tag: &str, yaml: &str) -> Study {
+        let dir = std::env::temp_dir().join("papas_study").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("study.yaml");
+        std::fs::write(&path, yaml).unwrap();
+        Study::from_file(&path)
+            .unwrap()
+            .with_db_root(dir.join(".papas"))
+    }
+
+    #[test]
+    fn load_run_report() {
+        let s = tmp_study(
+            "basic",
+            "job:\n  command: sleep-ms ${ms}\n  ms: [1, 2, 3]\n",
+        );
+        assert_eq!(s.n_instances(), 3);
+        let report = s.run_local(2).unwrap();
+        assert_eq!(report.completed, 3);
+        assert!(report.all_ok());
+        // provenance landed
+        assert!(s.db_root.join("report.json").exists());
+        assert!(s.db_root.join("records.jsonl").exists());
+        assert!(s.db_root.join("checkpoint.json").exists());
+    }
+
+    #[test]
+    fn checkpoint_restart_skips_done() {
+        let s = tmp_study(
+            "ckpt",
+            "job:\n  command: sleep-ms 1\n  v: [1, 2]\n",
+        );
+        let r1 = s.run_local(1).unwrap();
+        assert_eq!(r1.completed, 2);
+        // second run restores everything from the checkpoint
+        let r2 = s.run_local(1).unwrap();
+        assert_eq!(r2.completed, 0);
+        assert_eq!(r2.restored, 2);
+        // clearing re-runs
+        s.clear_checkpoint().unwrap();
+        let r3 = s.run_local(1).unwrap();
+        assert_eq!(r3.completed, 2);
+    }
+
+    #[test]
+    fn sampling_limits_instances() {
+        let s = tmp_study(
+            "sampling",
+            "job:\n  command: sleep-ms 0\n  v:\n    - 1:100\n  sampling: random 5 seed 3\n",
+        );
+        assert_eq!(s.n_instances(), 5);
+        let report = s.run_local(2).unwrap();
+        assert_eq!(report.completed, 5);
+    }
+
+    #[test]
+    fn ssh_mode_end_to_end() {
+        let s = tmp_study(
+            "sshmode",
+            "job:\n  command: sleep-ms 1\n  v: [1, 2, 3, 4]\n",
+        );
+        let report = s.run_ssh(&[], 2).unwrap();
+        assert_eq!(report.completed, 4);
+        assert!(report
+            .records
+            .iter()
+            .all(|r| r.worker.starts_with("ssh-")));
+    }
+
+    #[test]
+    fn mpi_mode_end_to_end() {
+        let s = tmp_study(
+            "mpimode",
+            "job:\n  command: sleep-ms 1\n  v: [1, 2, 3, 4, 5, 6]\n",
+        );
+        let report = s.run_mpi(2, 2).unwrap();
+        assert_eq!(report.completed, 6);
+        assert!(report.records.iter().all(|r| r.worker.contains("@node")));
+    }
+
+    #[test]
+    fn invalid_study_rejected_at_load() {
+        let dir = std::env::temp_dir().join("papas_study/invalid");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.yaml");
+        std::fs::write(&path, "t:\n  command: run ${nosuch}\n").unwrap();
+        assert!(Study::from_file(&path).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! The §6 parameter-sweep workload: the C. difficile ward agent-based
+//! model (NetLogo BehaviorSpace substitute), executed from its AOT
+//! artifact via PJRT.
+//!
+//! Command form (what the study WDL files interpolate):
+//!
+//! ```text
+//! abm ARTIFACT SEED OUTFILE [name=value ...]
+//! abm abm_p64_h8_t168 ${seed} run_${seed}.csv beta=${beta} hygiene=0.6
+//! ```
+//!
+//! Unspecified parameters take the model defaults (mirroring
+//! `model.default_abm_params` on the Python side). The task writes the
+//! per-step metrics series as CSV — the "BehaviorSpace table output"
+//! equivalent the sweep aggregates afterwards.
+
+use super::{BuiltinOutcome, Builtins};
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// Parameter vector order — MUST match python/compile/model.PARAM_NAMES.
+pub const PARAM_NAMES: [&str; 8] = [
+    "beta", "alpha", "sigma", "clean", "hygiene", "gamma", "prog",
+    "visit_rate",
+];
+
+/// Baseline values — MUST match python/compile/model.default_abm_params.
+pub const PARAM_DEFAULTS: [f32; 8] =
+    [0.35, 1.5, 0.25, 0.35, 0.55, 0.20, 0.03, 0.12];
+
+/// Metric column names — MUST match python/compile/model.METRIC_NAMES.
+pub const METRIC_NAMES: [&str; 6] = [
+    "n_susceptible", "n_colonized", "n_diseased", "mean_room_contam",
+    "mean_hcw_contam", "n_on_antibiotics",
+];
+
+/// Build the params vector from `name=value` overrides.
+pub fn params_from_overrides(overrides: &[(String, f32)]) -> Result<Vec<f32>> {
+    let mut params = PARAM_DEFAULTS.to_vec();
+    for (name, value) in overrides {
+        let idx = PARAM_NAMES
+            .iter()
+            .position(|p| p == name)
+            .ok_or_else(|| {
+                Error::Exec(format!(
+                    "unknown ABM parameter '{name}' (known: {})",
+                    PARAM_NAMES.join(", ")
+                ))
+            })?;
+        params[idx] = *value;
+    }
+    Ok(params)
+}
+
+/// Entry point for the `abm` builtin.
+pub fn run(
+    builtins: &Builtins,
+    argv: &[String],
+    _env: &BTreeMap<String, String>,
+    workdir: &Path,
+) -> Result<BuiltinOutcome> {
+    let usage = "usage: abm ARTIFACT SEED OUTFILE [name=value ...]";
+    let artifact = argv.get(1).ok_or_else(|| Error::Exec(usage.into()))?;
+    let seed: i32 = argv
+        .get(2)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Exec(format!("bad seed; {usage}")))?;
+    let outfile = argv.get(3).ok_or_else(|| Error::Exec(usage.into()))?;
+
+    let mut overrides = Vec::new();
+    for kv in &argv[4..] {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| Error::Exec(format!("bad override '{kv}'; {usage}")))?;
+        let value: f32 = v
+            .parse()
+            .map_err(|_| Error::Exec(format!("bad value in '{kv}'")))?;
+        overrides.push((k.to_string(), value));
+    }
+    let params = params_from_overrides(&overrides)?;
+
+    let rt = builtins.runtime().ok_or_else(|| {
+        Error::Exec("abm builtin requires the PJRT runtime (artifacts dir)".into())
+    })?;
+    let series = rt.run_abm(artifact, seed, params)?;
+
+    // Write the BehaviorSpace-style CSV.
+    let out_path = workdir.join(outfile);
+    let mut f = std::fs::File::create(&out_path)
+        .map_err(|e| Error::Exec(format!("create {}: {e}", out_path.display())))?;
+    let mut w = std::io::BufWriter::new(&mut f);
+    writeln!(w, "step,{}", METRIC_NAMES.join(",")).map_err(io_err)?;
+    for s in 0..series.steps {
+        let row: Vec<String> = (0..series.metrics)
+            .map(|m| format!("{}", series.at(s, m)))
+            .collect();
+        writeln!(w, "{s},{}", row.join(",")).map_err(io_err)?;
+    }
+    drop(w);
+
+    let last = series.last_row();
+    Ok(BuiltinOutcome {
+        summary: format!(
+            "abm {artifact} seed={seed} final: S={} C={} D={} room={:.3}",
+            last[0], last[1], last[2], last[3]
+        ),
+    })
+}
+
+fn io_err(e: std::io::Error) -> Error {
+    Error::Exec(format!("write abm csv: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn override_building() {
+        let p = params_from_overrides(&[]).unwrap();
+        assert_eq!(p, PARAM_DEFAULTS.to_vec());
+        let p2 = params_from_overrides(&[
+            ("beta".into(), 0.9),
+            ("hygiene".into(), 0.1),
+        ])
+        .unwrap();
+        assert_eq!(p2[0], 0.9);
+        assert_eq!(p2[4], 0.1);
+        assert_eq!(p2[1], PARAM_DEFAULTS[1]);
+        assert!(params_from_overrides(&[("nope".into(), 1.0)]).is_err());
+    }
+
+    #[test]
+    fn requires_runtime() {
+        let b = Builtins::without_runtime();
+        let e = b
+            .run(
+                &["abm".into(), "a".into(), "1".into(), "o.csv".into()],
+                &BTreeMap::new(),
+                Path::new("/tmp"),
+            )
+            .unwrap_err();
+        assert!(e.to_string().contains("runtime"), "{e}");
+    }
+
+    #[test]
+    fn arg_validation() {
+        let b = Builtins::without_runtime();
+        let env = BTreeMap::new();
+        assert!(b.run(&["abm".into()], &env, Path::new("/tmp")).is_err());
+        assert!(b
+            .run(
+                &["abm".into(), "a".into(), "notanint".into(), "o".into()],
+                &env,
+                Path::new("/tmp")
+            )
+            .is_err());
+    }
+}

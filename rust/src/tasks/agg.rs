@@ -1,0 +1,175 @@
+//! The aggregation builtin: `abm-agg ARTIFACT OUTFILE CSV [CSV...]`.
+//!
+//! The "data aggregation" stage of a sweep workflow (§1's basic workflow
+//! structures): reads R replicate metric CSVs (as written by the `abm`
+//! builtin), stacks them, and reduces to per-step ensemble statistics
+//! through the AOT-compiled Pallas reduction artifact. Glob-free by
+//! design — the workflow's `after` dependencies deliver exact file names
+//! via interpolation.
+
+use super::{BuiltinOutcome, Builtins};
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// Parse one metrics CSV (header + `step,<metrics...>` rows) into a flat
+/// row-major [T][M] buffer; returns (values, steps, metrics).
+pub fn parse_metrics_csv(text: &str) -> Result<(Vec<f32>, usize, usize)> {
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Exec("empty metrics csv".into()))?;
+    let metrics = header.split(',').count() - 1; // minus the step column
+    if metrics == 0 {
+        return Err(Error::Exec("metrics csv has no metric columns".into()));
+    }
+    let mut out = Vec::new();
+    let mut steps = 0usize;
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut cols = line.split(',');
+        let _step = cols.next();
+        let mut n = 0usize;
+        for c in cols {
+            let v: f32 = c.trim().parse().map_err(|_| {
+                Error::Exec(format!("bad metrics value '{c}' in csv"))
+            })?;
+            out.push(v);
+            n += 1;
+        }
+        if n != metrics {
+            return Err(Error::Exec(format!(
+                "ragged metrics csv: row has {n} values, header {metrics}"
+            )));
+        }
+        steps += 1;
+    }
+    Ok((out, steps, metrics))
+}
+
+/// Entry point for the `abm-agg` builtin.
+pub fn run(
+    builtins: &Builtins,
+    argv: &[String],
+    _env: &BTreeMap<String, String>,
+    workdir: &Path,
+) -> Result<BuiltinOutcome> {
+    let usage = "usage: abm-agg ARTIFACT OUTFILE CSV [CSV...]";
+    let artifact = argv.get(1).ok_or_else(|| Error::Exec(usage.into()))?;
+    let outfile = argv.get(2).ok_or_else(|| Error::Exec(usage.into()))?;
+    let inputs = &argv[3..];
+    if inputs.is_empty() {
+        return Err(Error::Exec(usage.into()));
+    }
+
+    let rt = builtins.runtime().ok_or_else(|| {
+        Error::Exec("abm-agg builtin requires the PJRT runtime".into())
+    })?;
+    let meta = rt.manifest().get(artifact)?;
+    let want_r = *meta.dims.get("replicates").unwrap_or(&0) as usize;
+    if want_r != inputs.len() {
+        return Err(Error::Exec(format!(
+            "'{artifact}' aggregates {want_r} replicates, got {} csv files",
+            inputs.len()
+        )));
+    }
+
+    // Stack the replicate series.
+    let mut stack = Vec::new();
+    let mut shape: Option<(usize, usize)> = None;
+    for rel in inputs {
+        let path = workdir.join(rel);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Exec(format!("read replicate '{}': {e}", path.display()))
+        })?;
+        let (vals, t, m) = parse_metrics_csv(&text)?;
+        match shape {
+            None => shape = Some((t, m)),
+            Some(s) if s != (t, m) => {
+                return Err(Error::Exec(format!(
+                    "replicate '{rel}' shape ({t},{m}) != first replicate {s:?}"
+                )))
+            }
+            _ => {}
+        }
+        stack.extend(vals);
+    }
+    let (t, m) = shape.unwrap();
+
+    let stats = rt.run_ensemble(artifact, stack)?;
+
+    // Write the aggregated CSV: step, then metric.stat wide columns.
+    let metric_names = super::abm::METRIC_NAMES;
+    let out_path = workdir.join(outfile);
+    let f = std::fs::File::create(&out_path)
+        .map_err(|e| Error::Exec(format!("create {}: {e}", out_path.display())))?;
+    let mut w = std::io::BufWriter::new(f);
+    let mut header = vec!["step".to_string()];
+    for mi in 0..m {
+        let base = metric_names.get(mi).copied().unwrap_or("metric");
+        for stat in ["mean", "var", "min", "max"] {
+            header.push(format!("{base}.{stat}"));
+        }
+    }
+    writeln!(w, "{}", header.join(",")).map_err(io_err)?;
+    for s in 0..t {
+        let mut row = vec![s.to_string()];
+        for mi in 0..m {
+            for st in 0..4 {
+                row.push(format!("{}", stats.at(s, mi, st)));
+            }
+        }
+        writeln!(w, "{}", row.join(",")).map_err(io_err)?;
+    }
+
+    Ok(BuiltinOutcome {
+        summary: format!(
+            "abm-agg {artifact}: {} replicates x {t} steps -> {outfile}",
+            inputs.len()
+        ),
+    })
+}
+
+fn io_err(e: std::io::Error) -> Error {
+    Error::Exec(format!("write aggregated csv: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_parsing() {
+        let (v, t, m) =
+            parse_metrics_csv("step,a,b\n0,1,2\n1,3,4\n").unwrap();
+        assert_eq!((t, m), (2, 2));
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn csv_errors() {
+        assert!(parse_metrics_csv("").is_err());
+        assert!(parse_metrics_csv("step\n0\n").is_err());
+        assert!(parse_metrics_csv("step,a\n0,xyz\n").is_err());
+        assert!(parse_metrics_csv("step,a,b\n0,1\n").is_err());
+    }
+
+    #[test]
+    fn requires_runtime_and_args() {
+        let b = Builtins::without_runtime();
+        let env = BTreeMap::new();
+        assert!(b
+            .run(&["abm-agg".into()], &env, Path::new("/tmp"))
+            .is_err());
+        assert!(b
+            .run(
+                &["abm-agg".into(), "x".into(), "o".into(), "a.csv".into()],
+                &env,
+                Path::new("/tmp")
+            )
+            .is_err());
+    }
+}

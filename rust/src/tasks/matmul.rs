@@ -1,0 +1,240 @@
+//! The §7 performance-study workload: `matmul N OUTFILE`.
+//!
+//! Two execution paths, matching DESIGN.md's substitution table:
+//!
+//! * **HLO path** — the AOT-compiled Pallas tiled-matmul artifact via
+//!   PJRT (the paper's compute kernel, L1→L2→runtime composition);
+//! * **native path** — a cache-tiled Rust matmul with a configurable
+//!   thread count honoring `OMP_NUM_THREADS` (the OpenMP-binary
+//!   substitute, and the baseline the benches compare against). Sizes
+//!   with no compiled artifact (the study sweeps to 16384) route here.
+//!
+//! Inputs are deterministic pseudo-random matrices seeded by N, so any
+//! two paths produce identical results for the same N (the correctness
+//! cross-check in rust/tests/runtime_hlo.rs).
+
+use super::{BuiltinOutcome, Builtins};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// Tile edge for the native path (fits L1/L2 cache comfortably).
+const TILE: usize = 64;
+
+/// Entry point for `matmul` / `matmul-native`.
+pub fn run(
+    builtins: &Builtins,
+    argv: &[String],
+    env: &BTreeMap<String, String>,
+    workdir: &Path,
+    force_native: bool,
+) -> Result<BuiltinOutcome> {
+    let usage = "usage: matmul SIZE OUTFILE";
+    let n: usize = argv
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Exec(format!("bad matrix size; {usage}")))?;
+    let outfile = argv.get(2).ok_or_else(|| Error::Exec(usage.into()))?;
+    if n == 0 || n > 1 << 20 {
+        return Err(Error::Exec(format!("matrix size {n} out of range")));
+    }
+    let threads: usize = env
+        .get("OMP_NUM_THREADS")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .max(1);
+
+    let (a, b) = generate_inputs(n);
+    let (c, path_used) = match (force_native, builtins.runtime()) {
+        (false, Some(rt)) if rt.manifest().matmul_for_size(n).is_some() => {
+            (rt.run_matmul(n, a.clone(), b.clone())?, "hlo")
+        }
+        _ => (multiply_tiled(n, &a, &b, threads), "native"),
+    };
+
+    // The paper's matmul writes the result matrix to its second arg; we
+    // write a compact digest header + the checksum (writing 16384² floats
+    // per task would just benchmark the disk).
+    let checksum: f64 = c.iter().map(|&x| x as f64).sum();
+    let out_path = workdir.join(outfile);
+    let mut f = std::fs::File::create(&out_path)
+        .map_err(|e| Error::Exec(format!("create {}: {e}", out_path.display())))?;
+    writeln!(f, "# matmul n={n} threads={threads} path={path_used}")
+        .and_then(|_| writeln!(f, "checksum {checksum:.6e}"))
+        .map_err(|e| Error::Exec(format!("write {}: {e}", out_path.display())))?;
+
+    Ok(BuiltinOutcome {
+        summary: format!(
+            "matmul n={n} threads={threads} path={path_used} checksum={checksum:.6e}"
+        ),
+    })
+}
+
+/// Deterministic inputs: seeded by N so every execution path agrees.
+pub fn generate_inputs(n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0x00AB_3A70_u64.wrapping_mul(0x9E37) ^ n as u64);
+    let gen = |len: usize, r: &mut Rng| -> Vec<f32> {
+        (0..len).map(|_| (r.uniform() as f32) - 0.5).collect()
+    };
+    let a = gen(n * n, &mut rng);
+    let b = gen(n * n, &mut rng);
+    (a, b)
+}
+
+/// Cache-tiled matmul with optional threading (the OpenMP substitute).
+/// Deterministic regardless of thread count (threads split output rows).
+pub fn multiply_tiled(n: usize, a: &[f32], b: &[f32], threads: usize) -> Vec<f32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let mut c = vec![0.0f32; n * n];
+    if threads <= 1 || n < 2 * TILE {
+        multiply_rows(n, a, b, &mut c, 0, n);
+        return c;
+    }
+    // Split the output row range across threads (OpenMP's static schedule).
+    let chunk = n.div_ceil(threads);
+    let mut slices: Vec<&mut [f32]> = Vec::new();
+    let mut rest = c.as_mut_slice();
+    for _ in 0..threads {
+        let take = chunk.min(rest.len() / n) * n;
+        let (head, tail) = rest.split_at_mut(take);
+        slices.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (t, slice) in slices.into_iter().enumerate() {
+            if slice.is_empty() {
+                continue;
+            }
+            let rows = slice.len() / n;
+            let row0 = t * chunk;
+            s.spawn(move || {
+                multiply_rows_into(n, a, b, slice, row0, row0 + rows);
+            });
+        }
+    });
+    c
+}
+
+fn multiply_rows(n: usize, a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize) {
+    let view = &mut c[r0 * n..r1 * n];
+    multiply_rows_into(n, a, b, view, r0, r1);
+}
+
+/// Tiled i-k-j kernel over rows [r0, r1); `c_rows` holds exactly those rows.
+fn multiply_rows_into(
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c_rows: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    for ii in (r0..r1).step_by(TILE) {
+        let i_end = (ii + TILE).min(r1);
+        for kk in (0..n).step_by(TILE) {
+            let k_end = (kk + TILE).min(n);
+            for jj in (0..n).step_by(TILE) {
+                let j_end = (jj + TILE).min(n);
+                for i in ii..i_end {
+                    let crow = &mut c_rows[(i - r0) * n..][..n];
+                    for k in kk..k_end {
+                        let aik = a[i * n + k];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[k * n..][..n];
+                        for j in jj..j_end {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference(n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                for j in 0..n {
+                    c[i * n + j] += a[i * n + k] * b[k * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn tiled_matches_reference() {
+        for n in [1, 7, 16, 65, 130] {
+            let (a, b) = generate_inputs(n);
+            let got = multiply_tiled(n, &a, &b, 1);
+            let want = reference(n, &a, &b);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "n={n}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn threading_is_deterministic() {
+        let n = 150;
+        let (a, b) = generate_inputs(n);
+        let c1 = multiply_tiled(n, &a, &b, 1);
+        let c4 = multiply_tiled(n, &a, &b, 4);
+        let c7 = multiply_tiled(n, &a, &b, 7);
+        assert_eq!(c1, c4);
+        assert_eq!(c1, c7);
+    }
+
+    #[test]
+    fn inputs_deterministic_per_size() {
+        let (a1, _) = generate_inputs(64);
+        let (a2, _) = generate_inputs(64);
+        let (a3, _) = generate_inputs(128);
+        assert_eq!(a1, a2);
+        assert_ne!(a1[..10], a3[..10]);
+    }
+
+    #[test]
+    fn builtin_writes_outfile() {
+        let b = Builtins::without_runtime();
+        let dir = std::env::temp_dir().join("papas_matmul_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut env = BTreeMap::new();
+        env.insert("OMP_NUM_THREADS".to_string(), "2".to_string());
+        let out = b
+            .run(
+                &["matmul".into(), "32".into(), "r32.txt".into()],
+                &env,
+                &dir,
+            )
+            .unwrap();
+        assert!(out.summary.contains("n=32"));
+        assert!(out.summary.contains("threads=2"));
+        assert!(out.summary.contains("path=native")); // no runtime configured
+        let content = std::fs::read_to_string(dir.join("r32.txt")).unwrap();
+        assert!(content.contains("checksum"));
+    }
+
+    #[test]
+    fn bad_args() {
+        let b = Builtins::without_runtime();
+        let env = BTreeMap::new();
+        assert!(b.run(&["matmul".into()], &env, Path::new("/tmp")).is_err());
+        assert!(b
+            .run(&["matmul".into(), "x".into(), "o".into()], &env, Path::new("/tmp"))
+            .is_err());
+        assert!(b
+            .run(&["matmul".into(), "0".into(), "o".into()], &env, Path::new("/tmp"))
+            .is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Built-in task kinds: the workload binaries the paper's studies invoke.
+//!
+//! The paper's parameter files run external programs (`matmul`, NetLogo).
+//! Here, a command whose argv[0] names a *builtin* executes in-process —
+//! this is how AOT-compiled HLO workloads run on the Rust request path
+//! with no Python and no subprocess. Anything not registered falls back
+//! to a real subprocess (`exec::runner`), so arbitrary user commands
+//! still work exactly like in the paper.
+//!
+//! Builtins:
+//!
+//! * `matmul N OUT` — the §7 workload. Runs the PJRT artifact when one
+//!   exists for N (Pallas kernel path); otherwise the native tiled
+//!   implementation. Honors `OMP_NUM_THREADS` via the native path's
+//!   thread pool — the OpenMP substitute.
+//! * `matmul-native N OUT` — force the native path (the "baseline
+//!   comparator" for benches).
+//! * `abm ARTIFACT SEED OUT [key=value...]` — the §6 NetLogo-substitute
+//!   C. difficile ward model via its PJRT artifact; writes the metrics
+//!   CSV; parameter overrides come from the swept `key=value` args.
+//! * `sleep-ms N` — deterministic timing stub used by scheduler tests.
+
+pub mod abm;
+pub mod agg;
+pub mod matmul;
+
+use crate::runtime::RuntimeService;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Outcome of a builtin task.
+#[derive(Debug, Clone, Default)]
+pub struct BuiltinOutcome {
+    /// Human-readable one-line summary (logged as the task's stdout).
+    pub summary: String,
+}
+
+/// The builtin registry; holds the shared PJRT runtime service handle.
+pub struct Builtins {
+    runtime: Option<RuntimeService>,
+}
+
+impl Builtins {
+    /// Registry with a PJRT runtime (full functionality).
+    pub fn with_runtime(runtime: RuntimeService) -> Builtins {
+        Builtins { runtime: Some(runtime) }
+    }
+
+    /// Registry without PJRT (native matmul + sleep only) — used by unit
+    /// tests that must not pay client startup.
+    pub fn without_runtime() -> Builtins {
+        Builtins { runtime: None }
+    }
+
+    /// Is `argv0` a builtin?
+    pub fn is_builtin(&self, argv0: &str) -> bool {
+        matches!(
+            argv0,
+            "matmul" | "matmul-native" | "abm" | "abm-agg" | "sleep-ms"
+        )
+    }
+
+    /// The shared runtime handle, if configured.
+    pub fn runtime(&self) -> Option<&RuntimeService> {
+        self.runtime.as_ref()
+    }
+
+    /// Run a builtin command in-process. `workdir` anchors relative
+    /// output paths; `env` carries the task's environment (builtin tasks
+    /// read it directly instead of mutating process env — the executors
+    /// run many tasks concurrently in one process).
+    pub fn run(
+        &self,
+        argv: &[String],
+        env: &BTreeMap<String, String>,
+        workdir: &Path,
+    ) -> Result<BuiltinOutcome> {
+        let argv0 = argv
+            .first()
+            .ok_or_else(|| Error::Exec("empty command".into()))?
+            .as_str();
+        match argv0 {
+            "matmul" => matmul::run(self, argv, env, workdir, /*force_native=*/ false),
+            "matmul-native" => matmul::run(self, argv, env, workdir, true),
+            "abm" => abm::run(self, argv, env, workdir),
+            "abm-agg" => agg::run(self, argv, env, workdir),
+            "sleep-ms" => {
+                let ms: u64 = argv
+                    .get(1)
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| Error::Exec("sleep-ms requires milliseconds".into()))?;
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(BuiltinOutcome { summary: format!("slept {ms}ms") })
+            }
+            other => Err(Error::Exec(format!("'{other}' is not a builtin"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_builtins() {
+        let b = Builtins::without_runtime();
+        assert!(b.is_builtin("matmul"));
+        assert!(b.is_builtin("abm"));
+        assert!(b.is_builtin("sleep-ms"));
+        assert!(!b.is_builtin("netlogo"));
+        assert!(!b.is_builtin("/bin/echo"));
+    }
+
+    #[test]
+    fn sleep_builtin_runs() {
+        let b = Builtins::without_runtime();
+        let out = b
+            .run(
+                &["sleep-ms".into(), "1".into()],
+                &BTreeMap::new(),
+                Path::new("/tmp"),
+            )
+            .unwrap();
+        assert!(out.summary.contains("1ms"));
+        assert!(b
+            .run(&["sleep-ms".into()], &BTreeMap::new(), Path::new("/tmp"))
+            .is_err());
+    }
+
+    #[test]
+    fn empty_command_errors() {
+        let b = Builtins::without_runtime();
+        assert!(b.run(&[], &BTreeMap::new(), Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! The crate-wide error type.
+//!
+//! One enum, one variant per subsystem, so call sites can match on the
+//! failing layer (parse vs. validation vs. execution vs. runtime) — the
+//! distinction the CLI uses for exit codes and the scheduler uses to
+//! decide retry vs. abort.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors produced by the PaPaS framework, tagged by subsystem.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Lexical / syntactic error in a parameter file (YAML/JSON/INI).
+    #[error("parse error at {location}: {message}")]
+    Parse { location: Location, message: String },
+
+    /// Structurally valid document that violates the WDL specification.
+    #[error("invalid workflow description: {0}")]
+    Wdl(String),
+
+    /// `${...}` interpolation failure (unknown key, cycle, bad scope).
+    #[error("interpolation error: {0}")]
+    Interp(String),
+
+    /// Parameter-space error (empty space, fixed-clause arity mismatch...).
+    #[error("parameter space error: {0}")]
+    Params(String),
+
+    /// Workflow DAG error (cycle, unknown dependency, duplicate task).
+    #[error("workflow error: {0}")]
+    Workflow(String),
+
+    /// Task execution failure (spawn error, non-zero exit, staging error).
+    #[error("execution error: {0}")]
+    Exec(String),
+
+    /// Cluster engine error (unknown job, bad directive, sim invariant).
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    /// PJRT runtime error (artifact missing, compile/execute failure).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Checkpoint / file-database error.
+    #[error("state store error: {0}")]
+    Store(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor for parse errors.
+    pub fn parse(location: Location, message: impl Into<String>) -> Self {
+        Error::Parse { location, message: message.into() }
+    }
+
+    /// Stable subsystem tag (used by the CLI for exit codes and by tests).
+    pub fn subsystem(&self) -> &'static str {
+        match self {
+            Error::Parse { .. } => "parse",
+            Error::Wdl(_) => "wdl",
+            Error::Interp(_) => "interp",
+            Error::Params(_) => "params",
+            Error::Workflow(_) => "workflow",
+            Error::Exec(_) => "exec",
+            Error::Cluster(_) => "cluster",
+            Error::Runtime(_) => "runtime",
+            Error::Store(_) => "store",
+            Error::Io(_) => "io",
+        }
+    }
+
+    /// Whether the scheduler may retry the operation (transient failures).
+    pub fn retryable(&self) -> bool {
+        matches!(self, Error::Exec(_) | Error::Io(_))
+    }
+}
+
+/// A position in a source document, for parser diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Location {
+    /// 1-based line number.
+    pub line: usize,
+    /// 1-based column number.
+    pub col: usize,
+}
+
+impl Location {
+    /// Location at the start of a document.
+    pub const START: Location = Location { line: 1, col: 1 };
+
+    /// New location.
+    pub fn new(line: usize, col: usize) -> Self {
+        Location { line, col }
+    }
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}, col {}", self.line, self.col)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_location() {
+        let e = Error::parse(Location::new(3, 7), "unexpected ':'");
+        let s = e.to_string();
+        assert!(s.contains("line 3"), "{s}");
+        assert!(s.contains("col 7"), "{s}");
+        assert!(s.contains("unexpected ':'"), "{s}");
+    }
+
+    #[test]
+    fn subsystem_tags_are_stable() {
+        assert_eq!(Error::Wdl("x".into()).subsystem(), "wdl");
+        assert_eq!(Error::Runtime("x".into()).subsystem(), "runtime");
+        assert_eq!(
+            Error::parse(Location::START, "x").subsystem(),
+            "parse"
+        );
+    }
+
+    #[test]
+    fn retryability() {
+        assert!(Error::Exec("spawn failed".into()).retryable());
+        assert!(!Error::Wdl("bad keyword".into()).retryable());
+    }
+}

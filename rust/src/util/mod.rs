@@ -1,0 +1,16 @@
+//! Shared substrates: error type, PRNG, timing/stats, string helpers,
+//! and the in-tree property-testing harness.
+//!
+//! These exist because the offline crate registry carries neither `rand`,
+//! `serde`, `criterion`, nor `proptest` — every general-purpose facility
+//! the framework needs is implemented here from scratch (DESIGN.md §5).
+
+pub mod error;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod strings;
+
+pub use error::{Error, Result};
+pub use rng::Rng;
+pub use stats::Summary;

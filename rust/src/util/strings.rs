@@ -1,0 +1,157 @@
+//! Small string helpers shared by the parsers and interpolation engine.
+
+/// True if `s` is a valid WDL identifier: alphanumeric plus `_`, `-`, `.`
+/// (the paper allows "any alphanumeric character" for keywords; we accept
+/// the separators its own examples use, e.g. `OMP_NUM_THREADS`).
+pub fn is_identifier(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'))
+}
+
+/// Split `s` on `sep` at the top level only — separators inside single or
+/// double quotes or inside `${...}` are not split points.
+pub fn split_top_level(s: &str, sep: char) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut chars = s.chars().peekable();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut brace_depth = 0usize;
+    while let Some(c) = chars.next() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '$' if !in_single && chars.peek() == Some(&'{') => {
+                cur.push(c);
+                cur.push(chars.next().unwrap());
+                brace_depth += 1;
+                continue;
+            }
+            '}' if brace_depth > 0 => brace_depth -= 1,
+            c if c == sep && !in_single && !in_double && brace_depth == 0 => {
+                parts.push(cur.clone());
+                cur.clear();
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(c);
+    }
+    parts.push(cur);
+    parts
+}
+
+/// Strip one layer of matching single or double quotes.
+pub fn unquote(s: &str) -> &str {
+    let b = s.as_bytes();
+    if b.len() >= 2
+        && ((b[0] == b'"' && b[b.len() - 1] == b'"')
+            || (b[0] == b'\'' && b[b.len() - 1] == b'\''))
+    {
+        &s[1..s.len() - 1]
+    } else {
+        s
+    }
+}
+
+/// Shell-style tokenization of a command line: whitespace-separated with
+/// single/double-quote grouping. Used by the shell task executor so
+/// commands run without invoking /bin/sh (portability + no injection).
+pub fn shell_split(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut started = false;
+    let mut in_single = false;
+    let mut in_double = false;
+    for c in s.chars() {
+        match c {
+            '\'' if !in_double => {
+                in_single = !in_single;
+                started = true;
+            }
+            '"' if !in_single => {
+                in_double = !in_double;
+                started = true;
+            }
+            c if c.is_whitespace() && !in_single && !in_double => {
+                if started {
+                    out.push(std::mem::take(&mut cur));
+                    started = false;
+                }
+            }
+            c => {
+                cur.push(c);
+                started = true;
+            }
+        }
+    }
+    if started {
+        out.push(cur);
+    }
+    out
+}
+
+/// Format a f64 the way the WDL writes values: integers print without a
+/// trailing `.0` (so interpolated file names look like `result_16N_1T.txt`).
+pub fn fmt_number(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identifiers() {
+        assert!(is_identifier("OMP_NUM_THREADS"));
+        assert!(is_identifier("matmul-omp.v2"));
+        assert!(!is_identifier(""));
+        assert!(!is_identifier("a b"));
+        assert!(!is_identifier("x:y"));
+    }
+
+    #[test]
+    fn split_respects_quotes_and_braces() {
+        assert_eq!(
+            split_top_level("a:b:c", ':'),
+            vec!["a", "b", "c"]
+        );
+        assert_eq!(
+            split_top_level("cmd '${a:b}':rest", ':'),
+            vec!["cmd '${a:b}'", "rest"]
+        );
+        assert_eq!(
+            split_top_level("${x:y}:z", ':'),
+            vec!["${x:y}", "z"]
+        );
+    }
+
+    #[test]
+    fn unquote_strips_one_layer() {
+        assert_eq!(unquote("\"hi\""), "hi");
+        assert_eq!(unquote("'hi'"), "hi");
+        assert_eq!(unquote("hi"), "hi");
+        assert_eq!(unquote("\"'hi'\""), "'hi'");
+    }
+
+    #[test]
+    fn shell_split_groups_quotes() {
+        assert_eq!(
+            shell_split("matmul 16 'out file.txt' --v=\"a b\""),
+            vec!["matmul", "16", "out file.txt", "--v=a b"]
+        );
+        assert_eq!(shell_split("  "), Vec::<String>::new());
+        assert_eq!(shell_split("''"), vec![""]);
+    }
+
+    #[test]
+    fn number_formatting() {
+        assert_eq!(fmt_number(16.0), "16");
+        assert_eq!(fmt_number(0.5), "0.5");
+        assert_eq!(fmt_number(-3.0), "-3");
+    }
+}

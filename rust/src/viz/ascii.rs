@@ -1,0 +1,100 @@
+//! Terminal DAG renderer: topological levels drawn as indented tiers with
+//! state glyphs — the `papas viz` default when no Graphviz is around.
+
+use super::DagView;
+use crate::workflow::TaskState;
+
+fn glyph(state: TaskState) -> char {
+    match state {
+        TaskState::Pending => '·',
+        TaskState::Ready => '○',
+        TaskState::Running => '◐',
+        TaskState::Done => '●',
+        TaskState::Failed => '✗',
+        TaskState::Skipped => '−',
+    }
+}
+
+/// Render the DAG as indented topological tiers:
+///
+/// ```text
+/// ● prep
+///   ● fit        (after: prep)
+///   ● plot       (after: prep)
+///     · report   (after: fit, plot)
+/// ```
+pub fn render_ascii(view: &DagView) -> String {
+    // Tier = longest path from any root.
+    let order = view.dag.topo_order().expect("valid DAG");
+    let mut tier = vec![0usize; view.dag.len()];
+    for &i in &order {
+        for &j in view.dag.dependents(i) {
+            tier[j] = tier[j].max(tier[i] + 1);
+        }
+    }
+    let mut out = String::new();
+    for &i in &order {
+        let indent = "  ".repeat(tier[i]);
+        let deps: Vec<&str> = view
+            .dag
+            .dependencies(i)
+            .iter()
+            .map(|&d| view.dag.name(d))
+            .collect();
+        let after = if deps.is_empty() {
+            String::new()
+        } else {
+            format!("  (after: {})", deps.join(", "))
+        };
+        let note = if view.notes[i].is_empty() {
+            String::new()
+        } else {
+            format!("  [{}]", view.notes[i])
+        };
+        out.push_str(&format!(
+            "{indent}{} {}{after}{note}\n",
+            glyph(view.states[i]),
+            view.dag.name(i)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::DagView;
+    use super::*;
+    use crate::workflow::{Dag, TaskState};
+
+    #[test]
+    fn tiers_and_glyphs() {
+        let dag = Dag::new(&[
+            ("prep".into(), vec![]),
+            ("fit".into(), vec!["prep".into()]),
+            ("report".into(), vec!["fit".into()]),
+        ])
+        .unwrap();
+        let mut v = DagView::pending(&dag);
+        v.states[0] = TaskState::Done;
+        v.states[1] = TaskState::Failed;
+        v.notes[1] = "exit 1".into();
+        let text = render_ascii(&v);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("● prep"));
+        assert!(lines[1].starts_with("  ✗ fit"));
+        assert!(lines[1].contains("(after: prep)"));
+        assert!(lines[1].contains("[exit 1]"));
+        assert!(lines[2].starts_with("    · report"));
+    }
+
+    #[test]
+    fn parallel_roots_same_tier() {
+        let dag =
+            Dag::new(&[("a".into(), vec![]), ("b".into(), vec![])]).unwrap();
+        let text = render_ascii(&DagView::pending(&dag));
+        for line in text.lines() {
+            assert!(line.starts_with('·'), "{line}");
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Graphviz DOT emitter for workflow DAGs ("a workflow visualization can
+//! be viewed and exported in text or common image formats", §4.4 —
+//! render the text with any `dot -Tpng`).
+
+use super::DagView;
+use crate::workflow::TaskState;
+
+/// State → fill color (the monitoring palette).
+fn color(state: TaskState) -> &'static str {
+    match state {
+        TaskState::Pending => "white",
+        TaskState::Ready => "lightyellow",
+        TaskState::Running => "lightblue",
+        TaskState::Done => "palegreen",
+        TaskState::Failed => "lightcoral",
+        TaskState::Skipped => "lightgray",
+    }
+}
+
+/// Render a DAG view as DOT.
+pub fn render_dot(view: &DagView, graph_name: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("digraph \"{}\" {{\n", escape(graph_name)));
+    out.push_str("  rankdir=LR;\n  node [shape=box, style=filled];\n");
+    for i in 0..view.dag.len() {
+        let label = if view.notes[i].is_empty() {
+            view.dag.name(i).to_string()
+        } else {
+            format!("{}\\n{}", view.dag.name(i), view.notes[i])
+        };
+        out.push_str(&format!(
+            "  n{i} [label=\"{}\", fillcolor={}];\n",
+            escape(&label),
+            color(view.states[i])
+        ));
+    }
+    for i in 0..view.dag.len() {
+        for &j in view.dag.dependents(i) {
+            out.push_str(&format!("  n{i} -> n{j};\n"));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn escape(s: &str) -> String {
+    s.replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::DagView;
+    use super::*;
+    use crate::workflow::{Dag, TaskState};
+
+    #[test]
+    fn dot_structure() {
+        let dag = Dag::new(&[
+            ("prep".into(), vec![]),
+            ("sim".into(), vec!["prep".into()]),
+        ])
+        .unwrap();
+        let mut v = DagView::pending(&dag);
+        v.states[0] = TaskState::Done;
+        v.notes[0] = "1.2s".into();
+        let dot = render_dot(&v, "study");
+        assert!(dot.starts_with("digraph \"study\""));
+        assert!(dot.contains("n0 -> n1;"), "{dot}");
+        assert!(dot.contains("fillcolor=palegreen"), "{dot}");
+        assert!(dot.contains("prep\\n1.2s"), "{dot}");
+        assert!(dot.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn quotes_escaped() {
+        let dag = Dag::new(&[("a".into(), vec![])]).unwrap();
+        let v = DagView::pending(&dag);
+        let dot = render_dot(&v, "with \"quotes\"");
+        assert!(dot.contains("with \\\"quotes\\\""));
+    }
+}

@@ -1,0 +1,62 @@
+//! The visualization engine (§4.4): renders workflow DAGs for validation
+//! and monitoring. PyGraphviz is replaced by an in-tree DOT emitter (any
+//! Graphviz can render the output) and an ASCII renderer for terminals.
+
+pub mod ascii;
+pub mod dax;
+pub mod dot;
+pub mod timeline;
+
+pub use ascii::render_ascii;
+pub use dax::render_dax;
+pub use dot::render_dot;
+pub use timeline::{render_jobs, render_records};
+
+use crate::workflow::{Dag, TaskState};
+
+/// A snapshot of a workflow for rendering: the DAG plus each node's
+/// current state (all `Pending` for pre-execution validation views).
+pub struct DagView<'a> {
+    /// The dependency graph.
+    pub dag: &'a Dag,
+    /// Per-node state, indexed like the DAG.
+    pub states: Vec<TaskState>,
+    /// Optional per-node annotation (e.g. measured runtime).
+    pub notes: Vec<String>,
+}
+
+impl<'a> DagView<'a> {
+    /// A pre-execution view (everything pending, no notes).
+    pub fn pending(dag: &'a Dag) -> DagView<'a> {
+        DagView {
+            dag,
+            states: vec![TaskState::Pending; dag.len()],
+            notes: vec![String::new(); dag.len()],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::Dag;
+
+    fn diamond() -> Dag {
+        Dag::new(&[
+            ("a".into(), vec![]),
+            ("b".into(), vec!["a".into()]),
+            ("c".into(), vec!["a".into()]),
+            ("d".into(), vec!["b".into(), "c".into()]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn pending_view_dimensions() {
+        let dag = diamond();
+        let v = DagView::pending(&dag);
+        assert_eq!(v.states.len(), 4);
+        assert_eq!(v.notes.len(), 4);
+        assert!(v.states.iter().all(|s| *s == TaskState::Pending));
+    }
+}

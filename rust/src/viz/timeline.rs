@@ -1,0 +1,139 @@
+//! ASCII Gantt timelines for cluster-sim job traces and task records —
+//! the visual the paper's Figures 1, 3 and 4 are built from.
+
+use crate::cluster::JobTrace;
+use crate::workflow::TaskRecord;
+
+/// Render job traces as a Gantt chart, one row per job:
+///
+/// ```text
+/// job00 |‥‥‥■■■■■■■■        |
+/// job01 |    ‥‥■■■■■■■■     |
+/// ```
+///
+/// `‥` = queued (submit→start), `■` = running, width = `cols` chars.
+pub fn render_jobs(traces: &[JobTrace], cols: usize) -> String {
+    if traces.is_empty() {
+        return String::new();
+    }
+    let t0 = traces.iter().map(|t| t.submit).fold(f64::INFINITY, f64::min);
+    let t1 = traces.iter().map(|t| t.end).fold(0.0f64, f64::max);
+    let span = (t1 - t0).max(1e-9);
+    let scale = |t: f64| (((t - t0) / span) * cols as f64).round() as usize;
+    let name_w = traces.iter().map(|t| t.name.len()).max().unwrap_or(4);
+
+    let mut out = String::new();
+    for t in traces {
+        let q0 = scale(t.submit).min(cols);
+        let r0 = scale(t.start).min(cols);
+        let r1 = scale(t.end).clamp(r0 + 1, cols.max(r0 + 1));
+        let mut row = String::new();
+        for c in 0..cols {
+            row.push(if c >= q0 && c < r0 {
+                '‥'
+            } else if c >= r0 && c < r1 {
+                '■'
+            } else {
+                ' '
+            });
+        }
+        out.push_str(&format!("{:<name_w$} |{row}|\n", t.name));
+    }
+    out.push_str(&format!(
+        "{:<name_w$} |{}|\n",
+        "",
+        time_axis(t0, t1, cols)
+    ));
+    out
+}
+
+/// Render task records (a real run's profiler output) the same way.
+pub fn render_records(records: &[TaskRecord], cols: usize) -> String {
+    if records.is_empty() {
+        return String::new();
+    }
+    let t0 = records.iter().map(|r| r.start).fold(f64::INFINITY, f64::min);
+    let t1 = records.iter().map(|r| r.end).fold(0.0f64, f64::max);
+    let span = (t1 - t0).max(1e-9);
+    let scale = |t: f64| (((t - t0) / span) * cols as f64).round() as usize;
+    let name_w = records.iter().map(|r| r.key.len()).max().unwrap_or(4);
+
+    let mut out = String::new();
+    for r in records {
+        let r0 = scale(r.start).min(cols);
+        let r1 = scale(r.end).clamp(r0 + 1, cols.max(r0 + 1));
+        let glyph = if r.ok { '■' } else { '✗' };
+        let mut row = String::new();
+        for c in 0..cols {
+            row.push(if c >= r0 && c < r1 { glyph } else { ' ' });
+        }
+        out.push_str(&format!("{:<name_w$} |{row}| {}\n", r.key, r.worker));
+    }
+    out
+}
+
+fn time_axis(t0: f64, t1: f64, cols: usize) -> String {
+    let label = format!("0s → {:.0}s", t1 - t0);
+    let mut axis: String = "-".repeat(cols);
+    if label.len() < cols {
+        axis.replace_range(cols - label.len().., &label);
+    }
+    axis
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TaskTrace;
+
+    fn trace(name: &str, submit: f64, start: f64, end: f64) -> JobTrace {
+        JobTrace {
+            id: 0,
+            name: name.into(),
+            submit,
+            start,
+            end,
+            tasks: vec![TaskTrace { label: "t".into(), rank: 1, start: 0.0, end: end - start }],
+        }
+    }
+
+    #[test]
+    fn gantt_rows_reflect_queue_and_run_spans() {
+        let traces = vec![
+            trace("a", 0.0, 0.0, 50.0),
+            trace("b", 0.0, 50.0, 100.0),
+        ];
+        let g = render_jobs(&traces, 20);
+        let lines: Vec<&str> = g.lines().collect();
+        assert_eq!(lines.len(), 3); // two jobs + axis
+        // job a runs in the first half
+        assert!(lines[0].contains('■'));
+        let a_first = lines[0].find('■').unwrap();
+        let b_first = lines[1].find('■').unwrap();
+        assert!(a_first < b_first, "{g}");
+        // job b queued before start
+        assert!(lines[1].contains('‥'), "{g}");
+    }
+
+    #[test]
+    fn record_rows_mark_failures() {
+        let recs = vec![TaskRecord {
+            key: "t#0".into(),
+            task_id: "t".into(),
+            instance: 0,
+            start: 0.0,
+            end: 1.0,
+            worker: "w0".into(),
+            ok: false,
+        }];
+        let g = render_records(&recs, 10);
+        assert!(g.contains('✗'), "{g}");
+        assert!(g.contains("w0"));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(render_jobs(&[], 10), "");
+        assert_eq!(render_records(&[], 10), "");
+    }
+}

@@ -1,0 +1,489 @@
+//! Typed AST for the WDL: document `Node` → [`StudySpec`] / [`TaskSpec`].
+//!
+//! A parameter study is a mapping of task sections; each section holds up
+//! to two levels of keyword/value entries. Predefined keywords configure
+//! the engine; every other keyword declares a *user parameter* whose
+//! values join the combination space and are referenced via `${...}`.
+
+use super::doc::Node;
+use super::range::{self, Expanded};
+use crate::params::{Param, Sampling};
+use crate::util::error::{Error, Result};
+use crate::util::strings::is_identifier;
+
+/// The predefined WDL keywords (§5's list).
+pub const WDL_KEYWORDS: &[&str] = &[
+    "command", "name", "environ", "after", "infiles", "outfiles",
+    "substitute", "parallel", "batch", "nnodes", "ppnode", "hosts",
+    "fixed", "sampling",
+];
+
+/// Parallel execution mode (§5 keyword `parallel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParallelMode {
+    /// Local thread-pool execution (default when unspecified).
+    #[default]
+    Local,
+    /// SSH worker daemons (unmanaged clusters).
+    Ssh,
+    /// MPI-style rank dispatcher (managed clusters / grouped batch jobs).
+    Mpi,
+}
+
+impl ParallelMode {
+    fn parse(s: &str) -> Result<ParallelMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "local" | "" => Ok(ParallelMode::Local),
+            "ssh" => Ok(ParallelMode::Ssh),
+            "mpi" => Ok(ParallelMode::Mpi),
+            other => Err(Error::Wdl(format!(
+                "unknown parallel mode '{other}' (expected local, ssh, or mpi)"
+            ))),
+        }
+    }
+}
+
+/// A `substitute` entry: regex over staged input-file contents, with the
+/// replacement strings forming a parameter axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Substitute {
+    /// The regular expression matched in input files.
+    pub pattern: String,
+    /// The values swept for this pattern (a parameter axis).
+    pub values: Vec<String>,
+}
+
+/// One task section of a parameter study.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TaskSpec {
+    /// Section key — the task's identifier.
+    pub id: String,
+    /// `command` — the command line template (required; "a task is
+    /// identified by the command keyword").
+    pub command: String,
+    /// `name` — human-readable description.
+    pub display_name: Option<String>,
+    /// `after` — prerequisite task ids.
+    pub after: Vec<String>,
+    /// `environ` — environment-variable parameters (name → values).
+    /// Multi-valued entries join the combination space.
+    pub environ: Vec<Param>,
+    /// User-defined parameters: scoped `group:key` (e.g. `args:size`) or
+    /// bare `key`, each with its (possibly range-expanded) values.
+    pub params: Vec<Param>,
+    /// `infiles` — staged input files: arbitrary keyword → path template.
+    pub infiles: Vec<(String, String)>,
+    /// `outfiles` — declared output files: keyword → path template.
+    pub outfiles: Vec<(String, String)>,
+    /// `substitute` — partial-file-content parameters.
+    pub substitute: Vec<Substitute>,
+    /// `parallel` — execution mode.
+    pub parallel: ParallelMode,
+    /// `batch` — batch system name (e.g. `pbs`) when cluster-submitted.
+    pub batch: Option<String>,
+    /// `nnodes` — nodes per cluster job.
+    pub nnodes: Option<u32>,
+    /// `ppnode` — task processes per node.
+    pub ppnode: Option<u32>,
+    /// `hosts` — worker hostnames/addresses for ssh mode.
+    pub hosts: Vec<String>,
+    /// `fixed` clauses — each a list of parameter names zipped together.
+    /// Names are task-local (`args:size`, `environ:OMP_NUM_THREADS`).
+    pub fixed: Vec<Vec<String>>,
+    /// `sampling` — subset selection over this task's combination space.
+    pub sampling: Option<Sampling>,
+}
+
+/// A whole parameter study: ordered task sections.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StudySpec {
+    /// Tasks in declaration order.
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl StudySpec {
+    /// Type a parsed document into a study. Range values expand here
+    /// (`1:8` → 1..8), so downstream layers only see explicit values.
+    pub fn from_doc(doc: &Node) -> Result<StudySpec> {
+        let sections = doc.as_map().ok_or_else(|| {
+            Error::Wdl("top level must be a mapping of task sections".into())
+        })?;
+        if sections.is_empty() {
+            return Err(Error::Wdl("study has no task sections".into()));
+        }
+        let mut tasks = Vec::new();
+        for (id, body) in sections {
+            tasks.push(TaskSpec::from_section(id, body)?);
+        }
+        Ok(StudySpec { tasks })
+    }
+
+    /// Find a task by id.
+    pub fn task(&self, id: &str) -> Option<&TaskSpec> {
+        self.tasks.iter().find(|t| t.id == id)
+    }
+}
+
+impl TaskSpec {
+    /// Type one task section.
+    pub fn from_section(id: &str, body: &Node) -> Result<TaskSpec> {
+        if !is_identifier(id) {
+            return Err(Error::Wdl(format!("invalid task id '{id}'")));
+        }
+        let entries = body.as_map().ok_or_else(|| {
+            Error::Wdl(format!("task '{id}' must be a mapping of keywords"))
+        })?;
+
+        let mut t = TaskSpec { id: id.to_string(), ..TaskSpec::default() };
+        for (key, value) in entries {
+            match key.as_str() {
+                "command" => {
+                    t.command = value
+                        .as_scalar()
+                        .ok_or_else(|| {
+                            Error::Wdl(format!("task '{id}': command must be a string"))
+                        })?
+                        .to_string();
+                }
+                "name" => {
+                    t.display_name = Some(scalar_of(id, "name", value)?);
+                }
+                "after" => {
+                    t.after = string_list(id, "after", value)?;
+                }
+                "environ" => {
+                    for (var, vnode) in map_of(id, "environ", value)? {
+                        t.environ.push(Param::new(
+                            format!("environ:{var}"),
+                            values_of(id, var, vnode)?,
+                        ));
+                    }
+                }
+                "infiles" => {
+                    for (k, vnode) in map_of(id, "infiles", value)? {
+                        t.infiles.push((k.clone(), scalar_of(id, k, vnode)?));
+                    }
+                }
+                "outfiles" => {
+                    for (k, vnode) in map_of(id, "outfiles", value)? {
+                        t.outfiles.push((k.clone(), scalar_of(id, k, vnode)?));
+                    }
+                }
+                "substitute" => {
+                    for (pattern, vnode) in map_of(id, "substitute", value)? {
+                        t.substitute.push(Substitute {
+                            pattern: pattern.clone(),
+                            values: values_of(id, pattern, vnode)?,
+                        });
+                    }
+                }
+                "parallel" => {
+                    t.parallel =
+                        ParallelMode::parse(&scalar_of(id, "parallel", value)?)?;
+                }
+                "batch" => {
+                    t.batch = Some(scalar_of(id, "batch", value)?);
+                }
+                "nnodes" => {
+                    t.nnodes = Some(u32_of(id, "nnodes", value)?);
+                }
+                "ppnode" => {
+                    t.ppnode = Some(u32_of(id, "ppnode", value)?);
+                }
+                "hosts" => {
+                    t.hosts = string_list(id, "hosts", value)?;
+                }
+                "fixed" => {
+                    // One clause (list of names) or a list of clauses.
+                    match value {
+                        Node::Seq(items)
+                            if items.iter().all(|i| i.as_seq().is_some()) =>
+                        {
+                            for item in items {
+                                t.fixed.push(string_list(id, "fixed", item)?);
+                            }
+                        }
+                        _ => t.fixed.push(string_list(id, "fixed", value)?),
+                    }
+                }
+                "sampling" => {
+                    t.sampling =
+                        Some(Sampling::parse(&scalar_of(id, "sampling", value)?)?);
+                }
+                // Any other keyword is a user-defined parameter (§5:
+                // "keywords that are not predefined are considered as
+                // user-defined keywords and can be used in value
+                // interpolations").
+                other => {
+                    if !is_identifier(other) {
+                        return Err(Error::Wdl(format!(
+                            "task '{id}': invalid keyword '{other}'"
+                        )));
+                    }
+                    match value {
+                        // Group of parameters: args: {size: [...]}
+                        Node::Map(sub) => {
+                            for (sk, sv) in sub {
+                                t.params.push(Param::new(
+                                    format!("{other}:{sk}"),
+                                    values_of(id, sk, sv)?,
+                                ));
+                            }
+                        }
+                        // Flat parameter: threads: [...] or threads: 4
+                        _ => {
+                            t.params.push(Param::new(
+                                other.to_string(),
+                                values_of(id, other, value)?,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        if t.command.is_empty() {
+            return Err(Error::Wdl(format!(
+                "task '{id}' has no command (a task is identified by the \
+                 command keyword)"
+            )));
+        }
+        Ok(t)
+    }
+
+    /// All parameter axes of this task (user params + multi-or-single
+    /// valued environ entries + substitute patterns), names scoped
+    /// task-locally. Used by `study` to assemble the global space.
+    pub fn local_params(&self) -> Vec<Param> {
+        let mut out = self.params.clone();
+        out.extend(self.environ.iter().cloned());
+        for s in &self.substitute {
+            out.push(Param::new(
+                format!("substitute:{}", s.pattern),
+                s.values.clone(),
+            ));
+        }
+        out
+    }
+}
+
+fn scalar_of(task: &str, key: &str, node: &Node) -> Result<String> {
+    node.as_scalar()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Wdl(format!("task '{task}': '{key}' must be a scalar")))
+}
+
+fn u32_of(task: &str, key: &str, node: &Node) -> Result<u32> {
+    scalar_of(task, key, node)?.trim().parse().map_err(|_| {
+        Error::Wdl(format!("task '{task}': '{key}' must be a positive integer"))
+    })
+}
+
+fn map_of<'n>(task: &str, key: &str, node: &'n Node) -> Result<&'n [(String, Node)]> {
+    node.as_map()
+        .ok_or_else(|| Error::Wdl(format!("task '{task}': '{key}' must be a mapping")))
+}
+
+fn string_list(task: &str, key: &str, node: &Node) -> Result<Vec<String>> {
+    match node {
+        Node::Scalar(s) => Ok(s
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|p| !p.is_empty())
+            .map(str::to_string)
+            .collect()),
+        Node::Seq(items) => items
+            .iter()
+            .map(|i| {
+                i.as_scalar().map(str::to_string).ok_or_else(|| {
+                    Error::Wdl(format!(
+                        "task '{task}': '{key}' entries must be scalars"
+                    ))
+                })
+            })
+            .collect(),
+        Node::Map(_) => Err(Error::Wdl(format!(
+            "task '{task}': '{key}' must be a list, not a mapping"
+        ))),
+    }
+}
+
+/// Parameter values: a scalar (possibly a range) or a list of scalars
+/// (each possibly a range), flattened in order.
+fn values_of(task: &str, key: &str, node: &Node) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut push = |s: &str| -> Result<()> {
+        match range::expand(s)? {
+            Expanded::Scalar(v) => out.push(v),
+            Expanded::Range(vs) => out.extend(vs),
+        }
+        Ok(())
+    };
+    match node {
+        Node::Scalar(s) => push(s)?,
+        Node::Seq(items) => {
+            for item in items {
+                let s = item.as_scalar().ok_or_else(|| {
+                    Error::Wdl(format!(
+                        "task '{task}': values of '{key}' must be scalars"
+                    ))
+                })?;
+                push(s)?;
+            }
+        }
+        Node::Map(_) => {
+            return Err(Error::Wdl(format!(
+                "task '{task}': parameter '{key}' nests deeper than two \
+                 levels (the WDL allows at most two)"
+            )))
+        }
+    }
+    if out.is_empty() {
+        return Err(Error::Wdl(format!(
+            "task '{task}': parameter '{key}' has no values"
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wdl::{parse_str, Format};
+
+    const FIG5: &str = "\
+matmulOMP:
+  name: Matrix multiply scaling study with OpenMP
+  environ:
+    OMP_NUM_THREADS:
+      - 1:8
+  args:
+    size:
+      - 16:*2:16384
+  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt
+";
+
+    #[test]
+    fn figure5_types_correctly() {
+        let doc = parse_str(FIG5, Format::Yaml).unwrap();
+        let study = StudySpec::from_doc(&doc).unwrap();
+        assert_eq!(study.tasks.len(), 1);
+        let t = &study.tasks[0];
+        assert_eq!(t.id, "matmulOMP");
+        assert_eq!(
+            t.display_name.as_deref(),
+            Some("Matrix multiply scaling study with OpenMP")
+        );
+        assert_eq!(t.environ.len(), 1);
+        assert_eq!(t.environ[0].name, "environ:OMP_NUM_THREADS");
+        assert_eq!(t.environ[0].values.len(), 8); // 1:8 expanded
+        assert_eq!(t.params.len(), 1);
+        assert_eq!(t.params[0].name, "args:size");
+        assert_eq!(t.params[0].values.len(), 11); // 16:*2:16384 expanded
+        // 8 * 11 = the paper's 88 instances
+        let n: usize = t
+            .local_params()
+            .iter()
+            .map(|p| p.values.len())
+            .product();
+        assert_eq!(n, 88);
+    }
+
+    #[test]
+    fn command_required() {
+        let doc = parse_str("t:\n  name: no command\n", Format::Yaml).unwrap();
+        let e = StudySpec::from_doc(&doc).unwrap_err();
+        assert!(e.to_string().contains("command"), "{e}");
+    }
+
+    #[test]
+    fn after_accepts_list_and_scalar() {
+        let doc = parse_str(
+            "a:\n  command: x\nb:\n  command: y\n  after: a\nc:\n  command: z\n  after: [a, b]\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let study = StudySpec::from_doc(&doc).unwrap();
+        assert_eq!(study.task("b").unwrap().after, vec!["a"]);
+        assert_eq!(study.task("c").unwrap().after, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn substitute_becomes_param_axis() {
+        let doc = parse_str(
+            "sim:\n  command: run model.xml\n  infiles:\n    model: model.xml\n  substitute:\n    'beta=[0-9.]+':\n      - beta=0.1\n      - beta=0.2\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t = StudySpec::from_doc(&doc).unwrap().tasks[0].clone();
+        assert_eq!(t.substitute.len(), 1);
+        assert_eq!(t.substitute[0].pattern, "beta=[0-9.]+");
+        let params = t.local_params();
+        let sub = params.iter().find(|p| p.name.starts_with("substitute:")).unwrap();
+        assert_eq!(sub.values.len(), 2);
+    }
+
+    #[test]
+    fn fixed_single_and_multi_clause() {
+        let doc = parse_str(
+            "t:\n  command: c\n  a: [1, 2]\n  b: [3, 4]\n  fixed: [a, b]\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t = &StudySpec::from_doc(&doc).unwrap().tasks[0];
+        assert_eq!(t.fixed, vec![vec!["a".to_string(), "b".to_string()]]);
+
+        let doc2 = parse_str(
+            "t:\n  command: c\n  a: [1, 2]\n  b: [3, 4]\n  c2: [5, 6]\n  d: [7, 8]\n  fixed:\n    - [a, b]\n    - [c2, d]\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t2 = &StudySpec::from_doc(&doc2).unwrap().tasks[0];
+        assert_eq!(t2.fixed.len(), 2);
+    }
+
+    #[test]
+    fn cluster_directives() {
+        let doc = parse_str(
+            "t:\n  command: c\n  parallel: mpi\n  batch: pbs\n  nnodes: 2\n  ppnode: 4\n  hosts: [n0, n1]\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t = &StudySpec::from_doc(&doc).unwrap().tasks[0];
+        assert_eq!(t.parallel, ParallelMode::Mpi);
+        assert_eq!(t.batch.as_deref(), Some("pbs"));
+        assert_eq!(t.nnodes, Some(2));
+        assert_eq!(t.ppnode, Some(4));
+        assert_eq!(t.hosts, vec!["n0", "n1"]);
+        assert!(StudySpec::from_doc(
+            &parse_str("t:\n  command: c\n  parallel: cuda\n", Format::Yaml).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sampling_keyword() {
+        let doc = parse_str(
+            "t:\n  command: c\n  p: [1, 2, 3]\n  sampling: random 2 seed 5\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t = &StudySpec::from_doc(&doc).unwrap().tasks[0];
+        assert_eq!(t.sampling, Some(Sampling::Random { count: 2, seed: 5 }));
+    }
+
+    #[test]
+    fn too_deep_nesting_rejected() {
+        let doc = parse_str(
+            "t:\n  command: c\n  a:\n    b:\n      c:\n        - 1\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let e = StudySpec::from_doc(&doc).unwrap_err();
+        assert!(e.to_string().contains("two levels"), "{e}");
+    }
+
+    #[test]
+    fn empty_study_rejected() {
+        let doc = parse_str("", Format::Yaml).unwrap();
+        assert!(StudySpec::from_doc(&doc).is_err());
+    }
+}

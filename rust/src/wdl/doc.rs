@@ -1,0 +1,132 @@
+//! The common internal document model every parameter-file format parses
+//! into (§5: "Workflow descriptions are transformed into a common internal
+//! format").
+//!
+//! Scalars stay *strings* at this level — per the WDL spec "all keywords
+//! are parsed as strings and values are inferred from written format";
+//! type inference happens in `params::Value`, not in the parsers.
+
+use crate::json::Json;
+use crate::util::strings::fmt_number;
+
+/// A parsed parameter-file node: scalar, sequence, or ordered mapping.
+///
+/// Mappings preserve *source order* (Vec of pairs, not a map) because task
+/// declaration order is meaningful for deterministic workflow ids and for
+/// round-trip fidelity in checkpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    /// A scalar, kept as its raw (unquoted) string form.
+    Scalar(String),
+    /// A sequence of nodes.
+    Seq(Vec<Node>),
+    /// An ordered mapping.
+    Map(Vec<(String, Node)>),
+}
+
+impl Node {
+    /// Scalar constructor.
+    pub fn scalar(s: impl Into<String>) -> Node {
+        Node::Scalar(s.into())
+    }
+
+    /// Borrow as scalar string.
+    pub fn as_scalar(&self) -> Option<&str> {
+        match self {
+            Node::Scalar(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Borrow as sequence.
+    pub fn as_seq(&self) -> Option<&[Node]> {
+        match self {
+            Node::Seq(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Borrow as mapping.
+    pub fn as_map(&self) -> Option<&[(String, Node)]> {
+        match self {
+            Node::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// First value for a key in a mapping.
+    pub fn get(&self, key: &str) -> Option<&Node> {
+        self.as_map()?
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+    }
+
+    /// All keys of a mapping, in source order.
+    pub fn keys(&self) -> Vec<&str> {
+        self.as_map()
+            .map(|m| m.iter().map(|(k, _)| k.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Convert a JSON document (one of the three accepted formats) into
+    /// the common model. JSON objects are key-sorted (BTreeMap), which is
+    /// an acceptable canonical order for JSON-authored studies.
+    pub fn from_json(j: &Json) -> Node {
+        match j {
+            Json::Null => Node::scalar(""),
+            Json::Bool(b) => Node::scalar(if *b { "true" } else { "false" }),
+            Json::Num(x) => Node::scalar(fmt_number(*x)),
+            Json::Str(s) => Node::scalar(s.clone()),
+            Json::Arr(v) => Node::Seq(v.iter().map(Node::from_json).collect()),
+            Json::Obj(m) => Node::Map(
+                m.iter().map(|(k, v)| (k.clone(), Node::from_json(v))).collect(),
+            ),
+        }
+    }
+
+    /// Convert to JSON (checkpoints store the original document).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Node::Scalar(s) => Json::Str(s.clone()),
+            Node::Seq(v) => Json::Arr(v.iter().map(Node::to_json).collect()),
+            Node::Map(m) => {
+                // Order is lost in JSON objects (sorted); checkpoints also
+                // store the format tag so YAML round-trips use yamlite.
+                Json::Obj(
+                    m.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn json_conversion_round_trip() {
+        let j = json::parse(r#"{"a": [1, "x", true], "b": {"c": 2.5}}"#).unwrap();
+        let n = Node::from_json(&j);
+        assert_eq!(n.get("a").unwrap().as_seq().unwrap()[0].as_scalar(), Some("1"));
+        assert_eq!(
+            n.get("b").unwrap().get("c").unwrap().as_scalar(),
+            Some("2.5")
+        );
+        // numbers become canonical scalars; bools become true/false strings
+        assert_eq!(n.get("a").unwrap().as_seq().unwrap()[2].as_scalar(), Some("true"));
+    }
+
+    #[test]
+    fn get_and_keys_preserve_order() {
+        let n = Node::Map(vec![
+            ("z".into(), Node::scalar("1")),
+            ("a".into(), Node::scalar("2")),
+        ]);
+        assert_eq!(n.keys(), vec!["z", "a"]);
+        assert_eq!(n.get("a").unwrap().as_scalar(), Some("2"));
+        assert!(n.get("missing").is_none());
+    }
+}

@@ -1,0 +1,259 @@
+//! `${...}` value interpolation (§5).
+//!
+//! * Intra-task: `${keyword}` and `${keyword:value}` resolve against the
+//!   running task's own parameters (e.g. `${args:size}`).
+//! * Inter-task: `${task:keyword}` and `${task:keyword:value}` resolve
+//!   against another task's parameters.
+//!
+//! Interpolation happens *per combination*: the engine receives the
+//! chosen value of every parameter axis (globally scoped names,
+//! `task:local:path`) and rewrites templates — command lines, environment
+//! values, file paths, substitute replacements. Values may themselves
+//! contain `${...}` (one parameter defined in terms of another); cycles
+//! are detected and reported rather than looping.
+
+use crate::params::{Combination, Value};
+use crate::util::error::{Error, Result};
+
+/// Maximum nested-interpolation depth before declaring a cycle.
+const MAX_DEPTH: usize = 16;
+
+/// Per-combination interpolation context.
+pub struct Interpolator<'a> {
+    /// Id of the task whose templates are being rewritten.
+    pub task_id: &'a str,
+    /// The combination: globally-scoped parameter name → value.
+    pub combo: &'a Combination,
+}
+
+impl<'a> Interpolator<'a> {
+    /// New context.
+    pub fn new(task_id: &'a str, combo: &'a Combination) -> Self {
+        Interpolator { task_id, combo }
+    }
+
+    /// Interpolate every `${...}` reference in `template`.
+    pub fn interpolate(&self, template: &str) -> Result<String> {
+        self.interp_depth(template, 0)
+    }
+
+    fn interp_depth(&self, template: &str, depth: usize) -> Result<String> {
+        if depth > MAX_DEPTH {
+            return Err(Error::Interp(format!(
+                "interpolation exceeds depth {MAX_DEPTH} (cyclic parameter \
+                 definition?) while expanding a template of task \
+                 '{}'", self.task_id
+            )));
+        }
+        let mut out = String::with_capacity(template.len());
+        let bytes = template.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == b'$' && i + 1 < bytes.len() && bytes[i + 1] == b'{' {
+                // find matching close brace (no nesting inside refs)
+                let start = i + 2;
+                let Some(rel) = template[start..].find('}') else {
+                    return Err(Error::Interp(format!(
+                        "unterminated ${{...}} in template '{template}'"
+                    )));
+                };
+                let path = &template[start..start + rel];
+                let value = self.resolve(path)?;
+                let value = value.as_str();
+                // A parameter's value may itself interpolate.
+                if value.contains("${") {
+                    out.push_str(&self.interp_depth(value, depth + 1)?);
+                } else {
+                    out.push_str(value);
+                }
+                i = start + rel + 1;
+            } else if bytes[i] == b'$' && i + 1 < bytes.len() && bytes[i + 1] == b'$' {
+                // `$$` escapes a literal `$`.
+                out.push('$');
+                i += 2;
+            } else {
+                // Copy one full UTF-8 character.
+                let ch_len = utf8_len(bytes[i]);
+                out.push_str(&template[i..i + ch_len]);
+                i += ch_len;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Resolve a reference path (`keyword`, `keyword:value`,
+    /// `task:keyword`, or `task:keyword:value`).
+    fn resolve(&self, path: &str) -> Result<Value> {
+        if path.is_empty() {
+            return Err(Error::Interp("empty ${} reference".into()));
+        }
+        // 1. Task-local: prefix with our own task id.
+        let local = format!("{}:{}", self.task_id, path);
+        if let Some(v) = self.combo.get(&local) {
+            return Ok(v.clone());
+        }
+        // 2. Inter-task: the path already starts with a task id.
+        if let Some(v) = self.combo.get(path) {
+            return Ok(v.clone());
+        }
+        // Diagnose: list close names to help typos.
+        let mut near: Vec<&str> = self
+            .combo
+            .keys()
+            .filter(|k| k.ends_with(path.rsplit(':').next().unwrap_or(path)))
+            .map(String::as_str)
+            .collect();
+        near.truncate(3);
+        Err(Error::Interp(format!(
+            "unresolved reference '${{{path}}}' in task '{}'{}",
+            self.task_id,
+            if near.is_empty() {
+                String::new()
+            } else {
+                format!(" (did you mean one of {near:?}?)")
+            }
+        )))
+    }
+}
+
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF7 => 4,
+        _ => 1,
+    }
+}
+
+/// Collect every `${...}` reference path appearing in a template
+/// (static analysis for validation, before any combination exists).
+pub fn references(template: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = template;
+    while let Some(pos) = rest.find("${") {
+        rest = &rest[pos + 2..];
+        if let Some(end) = rest.find('}') {
+            out.push(rest[..end].to_string());
+            rest = &rest[end + 1..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Value;
+
+    fn combo(pairs: &[(&str, &str)]) -> Combination {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), Value::new(*v)))
+            .collect()
+    }
+
+    #[test]
+    fn figure5_command_line() {
+        // The paper's matmul command with size=16, threads=1:
+        //   matmul 16 result_16N_1T.txt
+        let c = combo(&[
+            ("matmulOMP:args:size", "16"),
+            ("matmulOMP:environ:OMP_NUM_THREADS", "1"),
+        ]);
+        let it = Interpolator::new("matmulOMP", &c);
+        let cmd = it
+            .interpolate(
+                "matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt",
+            )
+            .unwrap();
+        assert_eq!(cmd, "matmul 16 result_16N_1T.txt");
+    }
+
+    #[test]
+    fn intra_task_single_level() {
+        let c = combo(&[("t:threads", "4")]);
+        assert_eq!(
+            Interpolator::new("t", &c).interpolate("run -j ${threads}").unwrap(),
+            "run -j 4"
+        );
+    }
+
+    #[test]
+    fn inter_task_reference() {
+        let c = combo(&[("prep:out:file", "data.bin"), ("sim:steps", "100")]);
+        let it = Interpolator::new("sim", &c);
+        assert_eq!(
+            it.interpolate("sim --in ${prep:out:file} -n ${steps}").unwrap(),
+            "sim --in data.bin -n 100"
+        );
+    }
+
+    #[test]
+    fn local_shadows_inter_task() {
+        // A task with a parameter literally named like another task's id
+        // prefers its own parameter.
+        let c = combo(&[("t:other:x", "LOCAL"), ("other:x", "REMOTE")]);
+        assert_eq!(
+            Interpolator::new("t", &c).interpolate("${other:x}").unwrap(),
+            "LOCAL"
+        );
+    }
+
+    #[test]
+    fn nested_value_interpolation() {
+        let c = combo(&[
+            ("t:stem", "run_${size}"),
+            ("t:size", "64"),
+        ]);
+        assert_eq!(
+            Interpolator::new("t", &c).interpolate("${stem}.log").unwrap(),
+            "run_64.log"
+        );
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let c = combo(&[("t:a", "${b}"), ("t:b", "${a}")]);
+        let e = Interpolator::new("t", &c).interpolate("${a}").unwrap_err();
+        assert!(e.to_string().contains("depth"), "{e}");
+    }
+
+    #[test]
+    fn unresolved_reports_candidates() {
+        let c = combo(&[("t:args:size", "16")]);
+        let e = Interpolator::new("t", &c).interpolate("${args:sizes}").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("args:sizes"), "{msg}");
+    }
+
+    #[test]
+    fn dollar_escape_and_literals() {
+        let c = combo(&[("t:v", "1")]);
+        let it = Interpolator::new("t", &c);
+        assert_eq!(it.interpolate("cost $$5 v=${v}").unwrap(), "cost $5 v=1");
+        assert_eq!(it.interpolate("no refs").unwrap(), "no refs");
+        assert_eq!(it.interpolate("$ alone").unwrap(), "$ alone");
+        assert!(it.interpolate("${unclosed").is_err());
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let c = combo(&[("t:v", "β")]);
+        assert_eq!(
+            Interpolator::new("t", &c).interpolate("β=${v}·x").unwrap(),
+            "β=β·x"
+        );
+    }
+
+    #[test]
+    fn reference_scanner() {
+        assert_eq!(
+            references("a ${x} b ${y:z} $${not} ${w"),
+            vec!["x", "y:z", "not"]
+        );
+        // NOTE: the scanner is for validation hints; it intentionally
+        // reports `$${not}` too (over-approximation is fine there).
+    }
+}

@@ -1,0 +1,127 @@
+//! Multi-file composition (§4.1: "A workflow's description can be divided
+//! across multiple parameter files; this allows composition and
+//! re-usability of task configurations").
+//!
+//! Later files are overlaid onto earlier ones:
+//!
+//! * a *new* task section is appended;
+//! * an *existing* task section merges keyword-by-keyword, the later file
+//!   winning on conflicts (override semantics);
+//! * nested mappings (`environ`, `args`, ...) merge one level deep the
+//!   same way — so a site file can override one environment variable
+//!   without repeating the rest.
+
+use super::doc::Node;
+use crate::util::error::{Error, Result};
+use std::path::Path;
+
+/// Merge `overlay` onto `base` (both must be mappings at the top level).
+pub fn merge_docs(base: &Node, overlay: &Node) -> Result<Node> {
+    let (Some(b), Some(o)) = (base.as_map(), overlay.as_map()) else {
+        return Err(Error::Wdl(
+            "parameter files must have a mapping at the top level".into(),
+        ));
+    };
+    Ok(Node::Map(merge_maps(b, o, /*depth=*/ 0)))
+}
+
+fn merge_maps(
+    base: &[(String, Node)],
+    overlay: &[(String, Node)],
+    depth: usize,
+) -> Vec<(String, Node)> {
+    let mut out: Vec<(String, Node)> = base.to_vec();
+    for (key, oval) in overlay {
+        match out.iter_mut().find(|(k, _)| k == key) {
+            None => out.push((key.clone(), oval.clone())),
+            Some((_, bval)) => {
+                *bval = match (&*bval, oval) {
+                    // Mappings merge recursively (task sections at depth 0,
+                    // two-level entries like environ at depth 1).
+                    (Node::Map(bm), Node::Map(om)) if depth < 2 => {
+                        Node::Map(merge_maps(bm, om, depth + 1))
+                    }
+                    // Everything else: the later file wins.
+                    _ => oval.clone(),
+                };
+            }
+        }
+    }
+    out
+}
+
+/// Parse and merge a list of parameter files, left to right.
+pub fn load_files<P: AsRef<Path>>(paths: &[P]) -> Result<Node> {
+    if paths.is_empty() {
+        return Err(Error::Wdl("no parameter files given".into()));
+    }
+    let mut doc = super::parse_file(paths[0].as_ref())?;
+    for p in &paths[1..] {
+        let overlay = super::parse_file(p.as_ref())?;
+        doc = merge_docs(&doc, &overlay)?;
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wdl::{parse_str, Format};
+
+    fn yaml(s: &str) -> Node {
+        parse_str(s, Format::Yaml).unwrap()
+    }
+
+    #[test]
+    fn new_sections_append() {
+        let base = yaml("a:\n  command: one\n");
+        let over = yaml("b:\n  command: two\n");
+        let merged = merge_docs(&base, &over).unwrap();
+        assert_eq!(merged.keys(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn keyword_override() {
+        let base = yaml("a:\n  command: old\n  name: keep\n");
+        let over = yaml("a:\n  command: new\n");
+        let merged = merge_docs(&base, &over).unwrap();
+        let a = merged.get("a").unwrap();
+        assert_eq!(a.get("command").unwrap().as_scalar(), Some("new"));
+        assert_eq!(a.get("name").unwrap().as_scalar(), Some("keep"));
+    }
+
+    #[test]
+    fn nested_mapping_merges_one_level() {
+        let base = yaml("a:\n  command: c\n  environ:\n    A: 1\n    B: 2\n");
+        let over = yaml("a:\n  environ:\n    B: 99\n    C: 3\n");
+        let merged = merge_docs(&base, &over).unwrap();
+        let env = merged.get("a").unwrap().get("environ").unwrap();
+        assert_eq!(env.get("A").unwrap().as_scalar(), Some("1"));
+        assert_eq!(env.get("B").unwrap().as_scalar(), Some("99"));
+        assert_eq!(env.get("C").unwrap().as_scalar(), Some("3"));
+    }
+
+    #[test]
+    fn sequences_replace_not_concat() {
+        let base = yaml("a:\n  command: c\n  p: [1, 2]\n");
+        let over = yaml("a:\n  p: [9]\n");
+        let merged = merge_docs(&base, &over).unwrap();
+        let p = merged.get("a").unwrap().get("p").unwrap().as_seq().unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].as_scalar(), Some("9"));
+    }
+
+    #[test]
+    fn type_conflict_later_wins() {
+        let base = yaml("a:\n  command: c\n  p: scalar\n");
+        let over = yaml("a:\n  p:\n    sub: 1\n");
+        let merged = merge_docs(&base, &over).unwrap();
+        assert!(merged.get("a").unwrap().get("p").unwrap().as_map().is_some());
+    }
+
+    #[test]
+    fn scalar_top_level_rejected() {
+        let base = yaml("a:\n  command: c\n");
+        assert!(merge_docs(&base, &Node::scalar("x")).is_err());
+    }
+}

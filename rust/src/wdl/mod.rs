@@ -1,0 +1,102 @@
+//! The PaPaS workflow description language (WDL), §5 of the paper.
+//!
+//! A parameter study is a mapping of *tasks* (sections); each task is up
+//! to two levels of keyword/value entries. Predefined keywords (command,
+//! name, environ, after, infiles, outfiles, substitute, parallel, batch,
+//! nnodes, ppnode, hosts, fixed, sampling) drive the engine; any other
+//! keyword is a *user-defined parameter* usable in `${...}` interpolation.
+//!
+//! Pipeline: format parser (`yamlite` / `json` / `ini`) → common `doc::
+//! Node` model → [`ast`] typing → [`validate`] → [`range`] expansion →
+//! `params` combinatorics → [`interp`] per-combination interpolation.
+
+pub mod ast;
+pub mod doc;
+pub mod interp;
+pub mod merge;
+pub mod range;
+pub mod validate;
+
+pub use ast::{StudySpec, TaskSpec, WDL_KEYWORDS};
+pub use doc::Node;
+
+use crate::util::{Error, Result};
+use std::path::Path;
+
+/// Source format of a parameter file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    /// YAML subset (the paper's primary example format, Fig. 5).
+    Yaml,
+    /// JSON (RFC 8259).
+    Json,
+    /// INI dialect with dotted subsections.
+    Ini,
+}
+
+impl Format {
+    /// Infer the format from a file extension; defaults to YAML (the
+    /// paper's canonical format) for unknown extensions.
+    pub fn from_path(path: &Path) -> Format {
+        match path
+            .extension()
+            .and_then(|e| e.to_str())
+            .unwrap_or("")
+            .to_ascii_lowercase()
+            .as_str()
+        {
+            "json" => Format::Json,
+            "ini" | "cfg" | "conf" => Format::Ini,
+            _ => Format::Yaml,
+        }
+    }
+}
+
+/// Parse a document in the given format into the common node model.
+pub fn parse_str(src: &str, format: Format) -> Result<Node> {
+    match format {
+        Format::Yaml => crate::yamlite::parse(src),
+        Format::Json => Ok(Node::from_json(&crate::json::parse(src)?)),
+        Format::Ini => crate::ini::parse(src),
+    }
+}
+
+/// Read and parse a parameter file, inferring the format from its path.
+pub fn parse_file(path: impl AsRef<Path>) -> Result<Node> {
+    let path = path.as_ref();
+    let src = std::fs::read_to_string(path).map_err(|e| {
+        Error::Wdl(format!("cannot read {}: {e}", path.display()))
+    })?;
+    parse_str(&src, Format::from_path(path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_inference() {
+        assert_eq!(Format::from_path(Path::new("a.yaml")), Format::Yaml);
+        assert_eq!(Format::from_path(Path::new("a.yml")), Format::Yaml);
+        assert_eq!(Format::from_path(Path::new("a.json")), Format::Json);
+        assert_eq!(Format::from_path(Path::new("a.ini")), Format::Ini);
+        assert_eq!(Format::from_path(Path::new("noext")), Format::Yaml);
+    }
+
+    #[test]
+    fn same_study_parses_identically_across_formats() {
+        let yaml = "t:\n  command: run x\n  args:\n    n:\n      - 1\n      - 2\n";
+        let json = r#"{"t": {"command": "run x", "args": {"n": ["1", "2"]}}}"#;
+        let ini = "[t]\ncommand = run x\n[t.args]\nn = 1, 2\n";
+        let y = parse_str(yaml, Format::Yaml).unwrap();
+        let j = parse_str(json, Format::Json).unwrap();
+        let i = parse_str(ini, Format::Ini).unwrap();
+        for doc in [&y, &j, &i] {
+            let t = doc.get("t").unwrap();
+            assert_eq!(t.get("command").unwrap().as_scalar(), Some("run x"));
+            let n = t.get("args").unwrap().get("n").unwrap().as_seq().unwrap();
+            assert_eq!(n.len(), 2);
+            assert_eq!(n[1].as_scalar(), Some("2"));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Numeric range expansion (§5: "Ranges with a step size are supported
+//! for numerical values using the notation *start:step:end*").
+//!
+//! Two forms, both inclusive of `end` when the step lands on it exactly:
+//!
+//! * additive       `start:step:end`  e.g. `1:2:9`    → 1, 3, 5, 7, 9
+//! * multiplicative `start:*k:end`    e.g. `16:*2:128` → 16, 32, 64, 128
+//!   (Figure 5 uses `16:*2:16384` for the matmul sizes)
+//! * two-part       `start:end`       step defaults to 1 (Figure 5 uses
+//!   `1:8` for the OpenMP thread counts)
+//!
+//! Ranges expand to integer strings when all produced values are
+//! integral, otherwise to canonical float strings.
+
+use crate::util::error::{Error, Result};
+use crate::util::strings::fmt_number;
+
+/// Result of inspecting a scalar for range syntax.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expanded {
+    /// Not a range — keep as-is.
+    Scalar(String),
+    /// A range that expanded to these values.
+    Range(Vec<String>),
+}
+
+/// Maximum number of values a single range may expand to. A guard against
+/// `0:0.0000001:1e9`-style typos consuming all memory.
+pub const MAX_RANGE_VALUES: usize = 1_000_000;
+
+/// Expand `text` if it uses range syntax; otherwise return it unchanged.
+///
+/// A scalar is treated as a range only when every component parses as a
+/// number (with the middle optionally `*`-prefixed) — so `host:port` or
+/// `a:b:c` stay scalars, matching the spec's "for numerical values".
+pub fn expand(text: &str) -> Result<Expanded> {
+    let parts: Vec<&str> = text.split(':').collect();
+    let (start_s, step_s, end_s) = match parts.as_slice() {
+        [a, b] => (*a, "1", *b),
+        [a, s, b] => (*a, *s, *b),
+        _ => return Ok(Expanded::Scalar(text.to_string())),
+    };
+    let multiplicative = step_s.starts_with('*');
+    let step_num = if multiplicative { &step_s[1..] } else { step_s };
+
+    let (Ok(start), Ok(step), Ok(end)) = (
+        start_s.trim().parse::<f64>(),
+        step_num.trim().parse::<f64>(),
+        end_s.trim().parse::<f64>(),
+    ) else {
+        return Ok(Expanded::Scalar(text.to_string()));
+    };
+
+    let values = if multiplicative {
+        expand_multiplicative(start, step, end)?
+    } else {
+        expand_additive(start, step, end)?
+    };
+    Ok(Expanded::Range(values.into_iter().map(fmt_number).collect()))
+}
+
+fn expand_additive(start: f64, step: f64, end: f64) -> Result<Vec<f64>> {
+    if step == 0.0 {
+        return Err(Error::Wdl(format!("range step is zero: {start}:{step}:{end}")));
+    }
+    if (end - start) * step < 0.0 {
+        return Err(Error::Wdl(format!(
+            "range {start}:{step}:{end} never reaches its end"
+        )));
+    }
+    let n = ((end - start) / step + 1e-9).floor() as usize + 1;
+    if n > MAX_RANGE_VALUES {
+        return Err(Error::Wdl(format!(
+            "range {start}:{step}:{end} expands to {n} values (max {MAX_RANGE_VALUES})"
+        )));
+    }
+    // Recompute each value from start to avoid drift; round near-integers
+    // produced by f64 accumulation (e.g. 0.1 steps).
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let v = start + step * i as f64;
+        let r = (v * 1e9).round() / 1e9;
+        out.push(r);
+    }
+    Ok(out)
+}
+
+fn expand_multiplicative(start: f64, factor: f64, end: f64) -> Result<Vec<f64>> {
+    if start == 0.0 {
+        return Err(Error::Wdl("multiplicative range cannot start at 0".into()));
+    }
+    if factor <= 0.0 || factor == 1.0 {
+        return Err(Error::Wdl(format!(
+            "multiplicative range factor must be positive and != 1, got {factor}"
+        )));
+    }
+    let ascending = factor > 1.0;
+    if (ascending && end < start) || (!ascending && end > start) {
+        return Err(Error::Wdl(format!(
+            "range {start}:*{factor}:{end} never reaches its end"
+        )));
+    }
+    let mut out = Vec::new();
+    let mut v = start;
+    loop {
+        let r = (v * 1e9).round() / 1e9;
+        if (ascending && r > end * (1.0 + 1e-12))
+            || (!ascending && r < end * (1.0 - 1e-12))
+        {
+            break;
+        }
+        out.push(r);
+        if out.len() > MAX_RANGE_VALUES {
+            return Err(Error::Wdl(format!(
+                "range {start}:*{factor}:{end} expands past {MAX_RANGE_VALUES} values"
+            )));
+        }
+        v *= factor;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn range(s: &str) -> Vec<String> {
+        match expand(s).unwrap() {
+            Expanded::Range(v) => v,
+            Expanded::Scalar(x) => panic!("expected range, got scalar {x}"),
+        }
+    }
+
+    fn scalar(s: &str) -> String {
+        match expand(s).unwrap() {
+            Expanded::Scalar(v) => v,
+            Expanded::Range(v) => panic!("expected scalar, got range {v:?}"),
+        }
+    }
+
+    #[test]
+    fn paper_thread_range() {
+        // Figure 5: OMP_NUM_THREADS: 1:8 → 1..8 step 1 (88 = 11 * 8)
+        assert_eq!(range("1:8"), ["1", "2", "3", "4", "5", "6", "7", "8"]);
+    }
+
+    #[test]
+    fn paper_size_range() {
+        // Figure 5: 16:*2:16384 → 11 sizes
+        let v = range("16:*2:16384");
+        assert_eq!(v.len(), 11);
+        assert_eq!(v.first().unwrap(), "16");
+        assert_eq!(v.last().unwrap(), "16384");
+    }
+
+    #[test]
+    fn additive_with_step() {
+        assert_eq!(range("1:2:9"), ["1", "3", "5", "7", "9"]);
+        assert_eq!(range("0:0.25:1"), ["0", "0.25", "0.5", "0.75", "1"]);
+        assert_eq!(range("5:-1:3"), ["5", "4", "3"]);
+        // end not hit exactly: stop below it
+        assert_eq!(range("1:2:8"), ["1", "3", "5", "7"]);
+    }
+
+    #[test]
+    fn multiplicative_descending() {
+        assert_eq!(range("8:*0.5:2"), ["8", "4", "2"]);
+    }
+
+    #[test]
+    fn single_value_range() {
+        assert_eq!(range("3:3"), ["3"]);
+        assert_eq!(range("7:1:7"), ["7"]);
+    }
+
+    #[test]
+    fn non_numeric_stays_scalar() {
+        assert_eq!(scalar("host:port"), "host:port");
+        assert_eq!(scalar("a:b:c"), "a:b:c");
+        assert_eq!(scalar("16:*x:64"), "16:*x:64");
+        assert_eq!(scalar("plain"), "plain");
+        assert_eq!(scalar("1:2:3:4"), "1:2:3:4");
+    }
+
+    #[test]
+    fn bad_ranges_error() {
+        assert!(expand("1:0:5").is_err());        // zero step
+        assert!(expand("5:1:1").is_err());        // wrong direction
+        assert!(expand("1:-1:5").is_err());       // wrong direction
+        assert!(expand("0:*2:8").is_err());       // mult from 0
+        assert!(expand("2:*1:8").is_err());       // factor 1
+        assert!(expand("0:0.0000001:100000").is_err()); // too many values
+    }
+
+    #[test]
+    fn fractional_end_behaviour() {
+        // float steps that don't hit end exactly stop below it
+        assert_eq!(range("0:0.4:1"), ["0", "0.4", "0.8"]);
+    }
+}

@@ -1,0 +1,266 @@
+//! Static validation of a typed study — every check that can run before
+//! any combination is enumerated or any task executed.
+//!
+//! §4.1: "The processing of these files consists of a parsing and syntax
+//! validation step, followed by string interpolation..." — this module is
+//! that validation step. The visualization engine also offers `papas
+//! validate --viz` as "a validation method of the parameter study
+//! configuration prior to any execution taking place" (§4.4).
+
+use super::ast::{ParallelMode, StudySpec};
+use super::interp::references;
+use crate::util::error::{Error, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Validate the study; returns the list of non-fatal warnings.
+pub fn validate(study: &StudySpec) -> Result<Vec<String>> {
+    let mut warnings = Vec::new();
+    let ids: BTreeSet<&str> = study.tasks.iter().map(|t| t.id.as_str()).collect();
+
+    // Duplicate sections are impossible post-parse (parsers reject), but a
+    // merged document could collide task ids with differing case only.
+    if ids.len() != study.tasks.len() {
+        return Err(Error::Wdl("duplicate task ids".into()));
+    }
+
+    // The set of all globally-scoped parameter names for reference checks.
+    let mut global_params: BTreeSet<String> = BTreeSet::new();
+    for t in &study.tasks {
+        for p in t.local_params() {
+            global_params.insert(format!("{}:{}", t.id, p.name));
+        }
+    }
+
+    for t in &study.tasks {
+        // -- dependencies ---------------------------------------------
+        for dep in &t.after {
+            if !ids.contains(dep.as_str()) {
+                return Err(Error::Wdl(format!(
+                    "task '{}' depends on unknown task '{dep}'",
+                    t.id
+                )));
+            }
+            if dep == &t.id {
+                return Err(Error::Wdl(format!(
+                    "task '{}' depends on itself",
+                    t.id
+                )));
+            }
+        }
+
+        // -- fixed clauses reference existing local params -------------
+        let local: BTreeSet<String> =
+            t.local_params().iter().map(|p| p.name.clone()).collect();
+        for clause in &t.fixed {
+            for name in clause {
+                if !local.contains(name) {
+                    return Err(Error::Wdl(format!(
+                        "task '{}': fixed clause references unknown \
+                         parameter '{name}'",
+                        t.id
+                    )));
+                }
+            }
+        }
+
+        // -- substitute patterns must be valid regexes ------------------
+        for s in &t.substitute {
+            regex::Regex::new(&s.pattern).map_err(|e| {
+                Error::Wdl(format!(
+                    "task '{}': substitute pattern '{}' is not a valid \
+                     regular expression: {e}",
+                    t.id, s.pattern
+                ))
+            })?;
+            if t.infiles.is_empty() {
+                warnings.push(format!(
+                    "task '{}': substitute without infiles has no effect",
+                    t.id
+                ));
+            }
+        }
+
+        // -- cluster directives ----------------------------------------
+        if t.nnodes == Some(0) || t.ppnode == Some(0) {
+            return Err(Error::Wdl(format!(
+                "task '{}': nnodes/ppnode must be positive",
+                t.id
+            )));
+        }
+        if t.parallel == ParallelMode::Ssh && t.hosts.is_empty() {
+            warnings.push(format!(
+                "task '{}': parallel=ssh without hosts; defaulting to \
+                 localhost workers",
+                t.id
+            ));
+        }
+        if t.batch.is_some() && t.parallel == ParallelMode::Local {
+            warnings.push(format!(
+                "task '{}': batch system set but parallel=local; the batch \
+                 directive only applies to cluster submission",
+                t.id
+            ));
+        }
+
+        // -- every ${...} reference must be statically resolvable --------
+        let mut templates: Vec<(&str, String)> =
+            vec![("command", t.command.clone())];
+        for (k, v) in t.infiles.iter().chain(t.outfiles.iter()) {
+            templates.push(("file", format!("{k}={v}")));
+        }
+        for s in &t.substitute {
+            for v in &s.values {
+                templates.push(("substitute", v.clone()));
+            }
+        }
+        for p in &t.environ {
+            for v in &p.values {
+                templates.push(("environ", v.as_str().to_string()));
+            }
+        }
+        for (kind, tpl) in &templates {
+            for r in references(tpl) {
+                let local_name = format!("{}:{}", t.id, r);
+                if !global_params.contains(&local_name)
+                    && !global_params.contains(&r)
+                {
+                    return Err(Error::Wdl(format!(
+                        "task '{}': {kind} references '${{{r}}}' which no \
+                         parameter provides",
+                        t.id
+                    )));
+                }
+            }
+        }
+    }
+
+    // -- dependency graph must be acyclic ------------------------------
+    check_acyclic(study)?;
+
+    Ok(warnings)
+}
+
+/// Kahn's algorithm over the `after` edges.
+fn check_acyclic(study: &StudySpec) -> Result<()> {
+    let mut indeg: BTreeMap<&str, usize> =
+        study.tasks.iter().map(|t| (t.id.as_str(), 0)).collect();
+    for t in &study.tasks {
+        for _dep in &t.after {
+            *indeg.get_mut(t.id.as_str()).unwrap() += 1;
+        }
+    }
+    let mut queue: Vec<&str> = indeg
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(&id, _)| id)
+        .collect();
+    let mut done = 0usize;
+    while let Some(id) = queue.pop() {
+        done += 1;
+        for t in &study.tasks {
+            if t.after.iter().any(|d| d == id) {
+                let d = indeg.get_mut(t.id.as_str()).unwrap();
+                *d -= 1;
+                if *d == 0 {
+                    queue.push(&t.id);
+                }
+            }
+        }
+    }
+    if done != study.tasks.len() {
+        let cyclic: Vec<&str> = indeg
+            .iter()
+            .filter(|(_, &d)| d > 0)
+            .map(|(&id, _)| id)
+            .collect();
+        return Err(Error::Wdl(format!(
+            "dependency cycle among tasks {cyclic:?}"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wdl::{parse_str, Format, StudySpec};
+
+    fn study(yaml: &str) -> StudySpec {
+        StudySpec::from_doc(&parse_str(yaml, Format::Yaml).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn figure5_validates_cleanly() {
+        let s = study(
+            "matmulOMP:\n  environ:\n    OMP_NUM_THREADS:\n      - 1:8\n  args:\n    size:\n      - 16:*2:16384\n  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt\n",
+        );
+        assert!(validate(&s).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_dependency() {
+        let s = study("a:\n  command: x\n  after: ghost\n");
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("ghost"), "{e}");
+    }
+
+    #[test]
+    fn self_dependency() {
+        let s = study("a:\n  command: x\n  after: a\n");
+        assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let s = study(
+            "a:\n  command: x\n  after: c\nb:\n  command: y\n  after: a\nc:\n  command: z\n  after: b\n",
+        );
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("cycle"), "{e}");
+    }
+
+    #[test]
+    fn diamond_is_fine() {
+        let s = study(
+            "a:\n  command: w\nb:\n  command: x\n  after: a\nc:\n  command: y\n  after: a\nd:\n  command: z\n  after: [b, c]\n",
+        );
+        assert!(validate(&s).is_ok());
+    }
+
+    #[test]
+    fn unresolved_command_reference() {
+        let s = study("a:\n  command: run ${missing}\n");
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("missing"), "{e}");
+    }
+
+    #[test]
+    fn inter_task_reference_resolves() {
+        let s = study(
+            "prep:\n  command: gen\n  out:\n    file: [data.bin]\nsim:\n  command: run ${prep:out:file}\n  after: prep\n",
+        );
+        assert!(validate(&s).is_ok());
+    }
+
+    #[test]
+    fn bad_substitute_regex() {
+        let s = study(
+            "a:\n  command: x\n  infiles:\n    f: in.xml\n  substitute:\n    '[unclosed':\n      - v\n",
+        );
+        assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn warnings_nonfatal() {
+        let s = study("a:\n  command: x\n  parallel: ssh\n");
+        let w = validate(&s).unwrap();
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("localhost"), "{w:?}");
+    }
+
+    #[test]
+    fn fixed_unknown_param() {
+        let s = study("a:\n  command: x\n  p: [1, 2]\n  fixed: [q]\n");
+        assert!(validate(&s).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Directed acyclic graph of tasks (§4.2: "the task generator takes a
+//! workflow description and constructs a DAG where nodes correspond to
+//! indivisible tasks").
+//!
+//! Edges come from two sources:
+//! * explicit `after` dependencies, and
+//! * inferred file dependencies — task B reading an `infile` that task A
+//!   declares as an `outfile` (the Snakemake-style inference the paper
+//!   cites as related work, applied only *within* a workflow instance).
+
+use crate::util::error::{Error, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A dependency graph over task indices.
+#[derive(Debug, Clone)]
+pub struct Dag {
+    /// Node names (task ids), index-addressed.
+    names: Vec<String>,
+    /// Forward edges: `edges[i]` = nodes that depend on node i.
+    dependents: Vec<BTreeSet<usize>>,
+    /// Reverse edges: `deps[i]` = nodes that node i depends on.
+    dependencies: Vec<BTreeSet<usize>>,
+}
+
+impl Dag {
+    /// Build from (id, dependencies-by-id) pairs. Unknown ids and cycles
+    /// are errors; duplicate edges collapse.
+    pub fn new(nodes: &[(String, Vec<String>)]) -> Result<Dag> {
+        let index: BTreeMap<&str, usize> = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, (id, _))| (id.as_str(), i))
+            .collect();
+        if index.len() != nodes.len() {
+            return Err(Error::Workflow("duplicate task id in DAG".into()));
+        }
+        let n = nodes.len();
+        let mut dag = Dag {
+            names: nodes.iter().map(|(id, _)| id.clone()).collect(),
+            dependents: vec![BTreeSet::new(); n],
+            dependencies: vec![BTreeSet::new(); n],
+        };
+        for (i, (id, deps)) in nodes.iter().enumerate() {
+            for d in deps {
+                let &j = index.get(d.as_str()).ok_or_else(|| {
+                    Error::Workflow(format!(
+                        "task '{id}' depends on unknown task '{d}'"
+                    ))
+                })?;
+                if i == j {
+                    return Err(Error::Workflow(format!(
+                        "task '{id}' depends on itself"
+                    )));
+                }
+                dag.dependencies[i].insert(j);
+                dag.dependents[j].insert(i);
+            }
+        }
+        dag.topo_order()?; // cycle check
+        Ok(dag)
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True if the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Node name by index.
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    /// Index of a node by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Nodes that `i` depends on.
+    pub fn dependencies(&self, i: usize) -> &BTreeSet<usize> {
+        &self.dependencies[i]
+    }
+
+    /// Nodes that depend on `i`.
+    pub fn dependents(&self, i: usize) -> &BTreeSet<usize> {
+        &self.dependents[i]
+    }
+
+    /// Add an edge (dep → node). Used by file-dependency inference after
+    /// initial construction. Errors if it would create a cycle.
+    pub fn add_edge(&mut self, dep: usize, node: usize) -> Result<()> {
+        if dep == node {
+            return Err(Error::Workflow("self edge".into()));
+        }
+        self.dependencies[node].insert(dep);
+        self.dependents[dep].insert(node);
+        if self.topo_order().is_err() {
+            self.dependencies[node].remove(&dep);
+            self.dependents[dep].remove(&node);
+            return Err(Error::Workflow(format!(
+                "edge {} -> {} creates a cycle",
+                self.names[dep], self.names[node]
+            )));
+        }
+        Ok(())
+    }
+
+    /// Kahn topological order; errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let mut indeg: Vec<usize> =
+            self.dependencies.iter().map(|d| d.len()).collect();
+        let mut queue: Vec<usize> =
+            (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        queue.reverse(); // stable source order (pop from the back)
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &j in &self.dependents[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        if order.len() != self.len() {
+            let stuck: Vec<&str> = (0..self.len())
+                .filter(|&i| indeg[i] > 0)
+                .map(|i| self.names[i].as_str())
+                .collect();
+            return Err(Error::Workflow(format!(
+                "dependency cycle among {stuck:?}"
+            )));
+        }
+        Ok(order)
+    }
+
+    /// Roots: nodes with no dependencies.
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&i| self.dependencies[i].is_empty())
+            .collect()
+    }
+
+    /// Longest path length (critical-path depth), in nodes.
+    pub fn depth(&self) -> usize {
+        let order = self.topo_order().expect("validated DAG");
+        let mut d = vec![1usize; self.len()];
+        for &i in &order {
+            for &j in &self.dependents[i] {
+                d[j] = d[j].max(d[i] + 1);
+            }
+        }
+        d.into_iter().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(id: &str, deps: &[&str]) -> (String, Vec<String>) {
+        (id.to_string(), deps.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn linear_chain() {
+        let dag = Dag::new(&[
+            node("a", &[]),
+            node("b", &["a"]),
+            node("c", &["b"]),
+        ])
+        .unwrap();
+        assert_eq!(dag.topo_order().unwrap(), vec![0, 1, 2]);
+        assert_eq!(dag.roots(), vec![0]);
+        assert_eq!(dag.depth(), 3);
+    }
+
+    #[test]
+    fn diamond() {
+        let dag = Dag::new(&[
+            node("a", &[]),
+            node("b", &["a"]),
+            node("c", &["a"]),
+            node("d", &["b", "c"]),
+        ])
+        .unwrap();
+        let order = dag.topo_order().unwrap();
+        let pos = |n: &str| order.iter().position(|&i| dag.name(i) == n).unwrap();
+        assert!(pos("a") < pos("b"));
+        assert!(pos("a") < pos("c"));
+        assert!(pos("b") < pos("d"));
+        assert!(pos("c") < pos("d"));
+        assert_eq!(dag.depth(), 3);
+        assert_eq!(dag.dependents(0).len(), 2);
+    }
+
+    #[test]
+    fn independent_tasks() {
+        let dag = Dag::new(&[node("a", &[]), node("b", &[]), node("c", &[])]).unwrap();
+        assert_eq!(dag.roots().len(), 3);
+        assert_eq!(dag.depth(), 1);
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        assert!(Dag::new(&[node("a", &["b"]), node("b", &["a"])]).is_err());
+        assert!(Dag::new(&[node("a", &["a"])]).is_err());
+    }
+
+    #[test]
+    fn unknown_dep_rejected() {
+        assert!(Dag::new(&[node("a", &["zz"])]).is_err());
+    }
+
+    #[test]
+    fn add_edge_cycle_rolls_back() {
+        let mut dag = Dag::new(&[node("a", &[]), node("b", &["a"])]).unwrap();
+        assert!(dag.add_edge(1, 0).is_err()); // b -> a would cycle
+        // graph unchanged: still a valid order
+        assert_eq!(dag.topo_order().unwrap(), vec![0, 1]);
+        // a legal extra edge works
+        let mut dag2 =
+            Dag::new(&[node("a", &[]), node("b", &[]), node("c", &["b"])]).unwrap();
+        dag2.add_edge(0, 2).unwrap();
+        assert!(dag2.dependencies(2).contains(&0));
+    }
+}

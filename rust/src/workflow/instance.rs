@@ -1,0 +1,152 @@
+//! Workflow instances: one parameter combination applied to the study's
+//! task graph (§4.1: "a workflow corresponds to an instance having a
+//! unique parameter combination").
+
+use super::dag::Dag;
+use super::task::ConcreteTask;
+use crate::params::Combination;
+use crate::util::error::Result;
+use crate::wdl::StudySpec;
+
+/// A materialized workflow: every task of the study instantiated under
+/// one combination, plus the dependency DAG.
+#[derive(Debug, Clone)]
+pub struct WorkflowInstance {
+    /// Combination index within the (possibly sampled) space.
+    pub index: u64,
+    /// The combination itself (globally-scoped names).
+    pub combo: Combination,
+    /// Concrete tasks, ordered as in the study spec (DAG node i =
+    /// tasks[i]).
+    pub tasks: Vec<ConcreteTask>,
+    /// Dependency DAG over `tasks` (explicit `after` + inferred file
+    /// dependencies).
+    pub dag: Dag,
+}
+
+impl WorkflowInstance {
+    /// Materialize instance `index` of `study` under `combo`.
+    pub fn materialize(
+        study: &StudySpec,
+        index: u64,
+        combo: Combination,
+    ) -> Result<WorkflowInstance> {
+        let mut tasks = Vec::with_capacity(study.tasks.len());
+        for spec in &study.tasks {
+            tasks.push(ConcreteTask::materialize(spec, index, &combo)?);
+        }
+        let mut dag = Dag::new(
+            &study
+                .tasks
+                .iter()
+                .map(|t| (t.id.clone(), t.after.clone()))
+                .collect::<Vec<_>>(),
+        )?;
+        // Inferred file dependencies: producer outfile path == consumer
+        // infile path (within this instance; paths are post-interpolation).
+        for (ci, consumer) in tasks.iter().enumerate() {
+            for (_, inpath) in &consumer.infiles {
+                for (pi, producer) in tasks.iter().enumerate() {
+                    if pi == ci {
+                        continue;
+                    }
+                    if producer.outfiles.iter().any(|(_, op)| op == inpath)
+                        && !dag.dependencies(ci).contains(&pi)
+                    {
+                        dag.add_edge(pi, ci)?;
+                    }
+                }
+            }
+        }
+        Ok(WorkflowInstance { index, combo, tasks, dag })
+    }
+
+    /// Short display id, e.g. `wf-0042`.
+    pub fn display_id(&self) -> String {
+        format!("wf-{:04}", self.index)
+    }
+
+    /// The command lines of every task (Figure 6 regenerates these).
+    pub fn command_lines(&self) -> Vec<String> {
+        self.tasks.iter().map(|t| t.argv.join(" ")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{Param, Space};
+    use crate::wdl::{parse_str, Format};
+
+    fn study(yaml: &str) -> StudySpec {
+        StudySpec::from_doc(&parse_str(yaml, Format::Yaml).unwrap()).unwrap()
+    }
+
+    /// Global space for a study: every task's local params, task-scoped.
+    fn global_space(s: &StudySpec) -> Space {
+        let mut params: Vec<Param> = Vec::new();
+        let mut fixed: Vec<Vec<String>> = Vec::new();
+        for t in &s.tasks {
+            for p in t.local_params() {
+                params.push(Param {
+                    name: format!("{}:{}", t.id, p.name),
+                    values: p.values,
+                });
+            }
+            for clause in &t.fixed {
+                fixed.push(
+                    clause.iter().map(|n| format!("{}:{n}", t.id)).collect(),
+                );
+            }
+        }
+        Space::new(params, &fixed).unwrap()
+    }
+
+    #[test]
+    fn figure6_generates_88_instances() {
+        let s = study(
+            "matmulOMP:\n  environ:\n    OMP_NUM_THREADS:\n      - 1:8\n  args:\n    size:\n      - 16:*2:16384\n  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt\n",
+        );
+        let space = global_space(&s);
+        assert_eq!(space.len(), 88);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..space.len() {
+            let inst =
+                WorkflowInstance::materialize(&s, i, space.combination(i).unwrap())
+                    .unwrap();
+            let cmds = inst.command_lines();
+            assert_eq!(cmds.len(), 1);
+            assert!(cmds[0].starts_with("matmul "), "{}", cmds[0]);
+            seen.insert(cmds[0].clone());
+        }
+        assert_eq!(seen.len(), 88, "all command lines unique");
+        // spot-check one of the paper's Figure 6 lines
+        assert!(seen.contains("matmul 16 result_16N_1T.txt"));
+        assert!(seen.contains("matmul 16384 result_16384N_8T.txt"));
+    }
+
+    #[test]
+    fn file_dependency_inferred() {
+        let s = study(
+            "gen:\n  command: make-data\n  outfiles:\n    d: data.bin\nuse:\n  command: consume\n  infiles:\n    d: data.bin\n",
+        );
+        let space = global_space(&s);
+        let inst =
+            WorkflowInstance::materialize(&s, 0, space.combination(0).unwrap())
+                .unwrap();
+        let gen = inst.dag.index_of("gen").unwrap();
+        let use_ = inst.dag.index_of("use").unwrap();
+        assert!(inst.dag.dependencies(use_).contains(&gen));
+    }
+
+    #[test]
+    fn explicit_after_edges_kept() {
+        let s = study("a:\n  command: x\nb:\n  command: y\n  after: a\n");
+        let space = global_space(&s);
+        let inst =
+            WorkflowInstance::materialize(&s, 0, space.combination(0).unwrap())
+                .unwrap();
+        assert_eq!(inst.dag.topo_order().unwrap().len(), 2);
+        assert_eq!(inst.display_id(), "wf-0000");
+    }
+}

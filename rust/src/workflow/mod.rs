@@ -1,0 +1,22 @@
+//! The workflow engine (§4.2): DAG construction, task scheduling and
+//! monitoring, per-task profiling, and provenance.
+//!
+//! A *workflow instance* is one unique parameter combination applied to
+//! the study's task graph. The task generator builds a DAG whose nodes
+//! are indivisible tasks; the task manager tracks states and hands ready
+//! tasks to an executor; the profiler measures every task's runtime
+//! (§4.2: "a task profiler measures each task's runtime"); provenance
+//! records land in the per-workflow file database.
+
+pub mod dag;
+pub mod instance;
+pub mod profiler;
+pub mod provenance;
+pub mod scheduler;
+pub mod task;
+
+pub use dag::Dag;
+pub use instance::WorkflowInstance;
+pub use profiler::{Profiler, TaskRecord};
+pub use scheduler::{ExecutionReport, WorkflowScheduler};
+pub use task::{ConcreteTask, TaskState};

@@ -1,0 +1,227 @@
+//! The task profiler (§4.2: "A task profiler measures each task's
+//! runtime, but currently this only serves as performance feedback to
+//! the user") — plus aggregate statistics the benches and figures use.
+
+use crate::json::Json;
+use crate::util::stats::Summary;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One completed task's measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskRecord {
+    /// `task_id#instance` key.
+    pub key: String,
+    /// Task id.
+    pub task_id: String,
+    /// Workflow instance index.
+    pub instance: u64,
+    /// Start offset from the profiler epoch (seconds).
+    pub start: f64,
+    /// End offset from the profiler epoch (seconds).
+    pub end: f64,
+    /// Which worker/rank executed it (executor-specific label).
+    pub worker: String,
+    /// True if the task succeeded.
+    pub ok: bool,
+}
+
+impl TaskRecord {
+    /// Task duration in seconds.
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+
+    /// Provenance serialization.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("key".to_string(), Json::from(self.key.as_str())),
+            ("task_id".to_string(), Json::from(self.task_id.as_str())),
+            ("instance".to_string(), Json::from(self.instance as i64)),
+            ("start".to_string(), Json::Num(self.start)),
+            ("end".to_string(), Json::Num(self.end)),
+            ("worker".to_string(), Json::from(self.worker.as_str())),
+            ("ok".to_string(), Json::from(self.ok)),
+        ])
+    }
+}
+
+/// Thread-safe collector of task records with a shared wall-clock epoch.
+#[derive(Debug)]
+pub struct Profiler {
+    epoch: Instant,
+    records: Mutex<Vec<TaskRecord>>,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Profiler {
+    /// New profiler; the epoch is "now".
+    pub fn new() -> Profiler {
+        Profiler { epoch: Instant::now(), records: Mutex::new(Vec::new()) }
+    }
+
+    /// Seconds since the epoch (used as task start/end stamps).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a completed task.
+    pub fn record(&self, rec: TaskRecord) {
+        self.records.lock().unwrap().push(rec);
+    }
+
+    /// Convenience: record a task that ran from `start` until now.
+    pub fn record_span(
+        &self,
+        task_id: &str,
+        instance: u64,
+        start: f64,
+        worker: &str,
+        ok: bool,
+    ) {
+        self.record(TaskRecord {
+            key: format!("{task_id}#{instance}"),
+            task_id: task_id.to_string(),
+            instance,
+            start,
+            end: self.now(),
+            worker: worker.to_string(),
+            ok,
+        });
+    }
+
+    /// Snapshot of all records so far (sorted by start time).
+    pub fn snapshot(&self) -> Vec<TaskRecord> {
+        let mut v = self.records.lock().unwrap().clone();
+        v.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        v
+    }
+
+    /// Duration summary across all successful tasks.
+    pub fn summary(&self) -> Summary {
+        let durs: Vec<f64> = self
+            .records
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.ok)
+            .map(|r| r.duration())
+            .collect();
+        Summary::from_samples(&durs)
+    }
+
+    /// Makespan: last end minus first start (0 when empty).
+    pub fn makespan(&self) -> f64 {
+        let recs = self.records.lock().unwrap();
+        let first = recs.iter().map(|r| r.start).fold(f64::INFINITY, f64::min);
+        let last = recs.iter().map(|r| r.end).fold(0.0, f64::max);
+        if recs.is_empty() {
+            0.0
+        } else {
+            last - first
+        }
+    }
+
+    /// Mean worker utilization over the makespan: busy time / (makespan ×
+    /// number of distinct workers). The §6 case study reports ≥70%.
+    pub fn utilization(&self) -> f64 {
+        let recs = self.records.lock().unwrap();
+        if recs.is_empty() {
+            return 0.0;
+        }
+        let busy: f64 = recs.iter().map(|r| r.end - r.start).sum();
+        let workers: std::collections::BTreeSet<&str> =
+            recs.iter().map(|r| r.worker.as_str()).collect();
+        let first = recs.iter().map(|r| r.start).fold(f64::INFINITY, f64::min);
+        let last = recs.iter().map(|r| r.end).fold(0.0, f64::max);
+        let span = last - first;
+        if span <= 0.0 || workers.is_empty() {
+            return 0.0;
+        }
+        (busy / (span * workers.len() as f64)).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn rec(task: &str, inst: u64, start: f64, end: f64, worker: &str) -> TaskRecord {
+        TaskRecord {
+            key: format!("{task}#{inst}"),
+            task_id: task.into(),
+            instance: inst,
+            start,
+            end,
+            worker: worker.into(),
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn makespan_and_summary() {
+        let p = Profiler::new();
+        p.record(rec("a", 0, 0.0, 2.0, "w0"));
+        p.record(rec("a", 1, 1.0, 3.0, "w1"));
+        assert!((p.makespan() - 3.0).abs() < 1e-12);
+        let s = p.summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_two_workers() {
+        let p = Profiler::new();
+        // two workers, each busy 2s over a 4s span → 4/(4*2) = 0.5
+        p.record(rec("a", 0, 0.0, 2.0, "w0"));
+        p.record(rec("a", 1, 2.0, 4.0, "w0"));
+        p.record(rec("a", 2, 0.0, 0.0, "w1")); // zero-length marker
+        let u = p.utilization();
+        assert!(u > 0.49 && u <= 0.51, "u={u}");
+    }
+
+    #[test]
+    fn failed_tasks_excluded_from_summary() {
+        let p = Profiler::new();
+        p.record(TaskRecord { ok: false, ..rec("a", 0, 0.0, 10.0, "w0") });
+        p.record(rec("a", 1, 0.0, 1.0, "w0"));
+        assert_eq!(p.summary().n, 1);
+    }
+
+    #[test]
+    fn snapshot_sorted_and_json() {
+        let p = Profiler::new();
+        p.record(rec("b", 1, 5.0, 6.0, "w0"));
+        p.record(rec("a", 0, 1.0, 2.0, "w0"));
+        let snap = p.snapshot();
+        assert_eq!(snap[0].task_id, "a");
+        let j = snap[0].to_json();
+        assert_eq!(j.expect_str("task_id").unwrap(), "a");
+        assert_eq!(j.expect_i64("instance").unwrap(), 0);
+    }
+
+    #[test]
+    fn empty_profiler() {
+        let p = Profiler::new();
+        assert_eq!(p.makespan(), 0.0);
+        assert_eq!(p.utilization(), 0.0);
+        assert_eq!(p.summary().n, 0);
+    }
+
+    #[test]
+    fn record_span_stamps_now() {
+        let p = Profiler::new();
+        let t0 = p.now();
+        std::thread::sleep(Duration::from_millis(2));
+        p.record_span("t", 3, t0, "w9", true);
+        let r = &p.snapshot()[0];
+        assert!(r.end >= r.start);
+        assert_eq!(r.key, "t#3");
+    }
+}

@@ -1,0 +1,175 @@
+//! Provenance records (§4.2: "workflow engine actions, task/workflow
+//! statistics, and logs are stored in a per-workflow file storage
+//! database; this information is later used to include provenance details
+//! at either workflow completion or a checkpoint").
+//!
+//! Storage format is line-oriented JSON (`records.jsonl`, `events.log`)
+//! under the study's `.papas` directory — append-only, crash-tolerant,
+//! and diffable.
+
+use super::profiler::TaskRecord;
+use super::scheduler::ExecutionReport;
+use crate::json::{self, Json};
+use crate::util::error::{Error, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Writer for one study's provenance files.
+pub struct Provenance {
+    dir: PathBuf,
+}
+
+impl Provenance {
+    /// Open (creating) the provenance store under `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Provenance> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Provenance { dir })
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Append a free-form event line (timestamped).
+    pub fn log_event(&self, event: &str) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.dir.join("events.log"))?;
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        writeln!(f, "{ts:.3} {event}")?;
+        Ok(())
+    }
+
+    /// Append task records to `records.jsonl`.
+    pub fn append_records(&self, records: &[TaskRecord]) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.dir.join("records.jsonl"))?;
+        for r in records {
+            writeln!(f, "{}", json::to_string(&r.to_json()))?;
+        }
+        Ok(())
+    }
+
+    /// Read back all task records.
+    pub fn read_records(&self) -> Result<Vec<TaskRecord>> {
+        let path = self.dir.join("records.jsonl");
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(path)?;
+        let mut out = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let j = json::parse(line)?;
+            out.push(TaskRecord {
+                key: j.expect_str("key")?.to_string(),
+                task_id: j.expect_str("task_id")?.to_string(),
+                instance: j.expect_i64("instance")? as u64,
+                start: j.expect("start")?.as_f64().unwrap_or(0.0),
+                end: j.expect("end")?.as_f64().unwrap_or(0.0),
+                worker: j.expect_str("worker")?.to_string(),
+                ok: j.expect("ok")?.as_bool().unwrap_or(false),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Write the end-of-run report (`report.json`) — the "provenance
+    /// details at workflow completion".
+    pub fn write_report(&self, report: &ExecutionReport, executor: &str) -> Result<()> {
+        let j = Json::obj([
+            ("executor".to_string(), Json::from(executor)),
+            ("completed".to_string(), Json::from(report.completed)),
+            ("failed".to_string(), Json::from(report.failed)),
+            ("skipped".to_string(), Json::from(report.skipped)),
+            ("restored".to_string(), Json::from(report.restored)),
+            ("makespan_s".to_string(), Json::Num(report.makespan)),
+            ("utilization".to_string(), Json::Num(report.utilization)),
+            ("n_records".to_string(), Json::from(report.records.len())),
+        ]);
+        std::fs::write(
+            self.dir.join("report.json"),
+            json::to_string_pretty(&j),
+        )
+        .map_err(|e| Error::Store(format!("write report.json: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(tag: &str) -> Provenance {
+        let d = std::env::temp_dir().join("papas_prov").join(tag);
+        let _ = std::fs::remove_dir_all(&d);
+        Provenance::open(&d).unwrap()
+    }
+
+    fn rec(task: &str, inst: u64) -> TaskRecord {
+        TaskRecord {
+            key: format!("{task}#{inst}"),
+            task_id: task.into(),
+            instance: inst,
+            start: 1.0,
+            end: 2.5,
+            worker: "w0".into(),
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn records_round_trip() {
+        let p = store("records");
+        p.append_records(&[rec("a", 0), rec("b", 1)]).unwrap();
+        p.append_records(&[rec("c", 2)]).unwrap();
+        let back = p.read_records().unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[2].key, "c#2");
+        assert_eq!(back[0].end, 2.5);
+    }
+
+    #[test]
+    fn empty_store_reads_empty() {
+        let p = store("empty");
+        assert!(p.read_records().unwrap().is_empty());
+    }
+
+    #[test]
+    fn events_append() {
+        let p = store("events");
+        p.log_event("study started").unwrap();
+        p.log_event("study finished").unwrap();
+        let text =
+            std::fs::read_to_string(p.dir().join("events.log")).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("study started"));
+    }
+
+    #[test]
+    fn report_written() {
+        let p = store("report");
+        let report = ExecutionReport {
+            completed: 5,
+            failed: 1,
+            skipped: 2,
+            restored: 0,
+            makespan: 1.5,
+            utilization: 0.8,
+            records: vec![],
+        };
+        p.write_report(&report, "local").unwrap();
+        let j = json::parse(
+            &std::fs::read_to_string(p.dir().join("report.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(j.expect_i64("completed").unwrap(), 5);
+        assert_eq!(j.expect_str("executor").unwrap(), "local");
+    }
+}

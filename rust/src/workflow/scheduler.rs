@@ -1,0 +1,489 @@
+//! The task manager / scheduler (§4.2: "a task manager controls the
+//! scheduling and monitoring of tasks").
+//!
+//! Feeds ready tasks (dependencies satisfied) from every workflow
+//! instance to an [`Executor`] and reacts to completions: marking states,
+//! releasing dependents, skipping the downstream of failures, recording
+//! profiling data. Scheduling policy (dependency resolution, failure
+//! propagation, checkpoint skips) is entirely here; transport/parallelism
+//! is entirely in the executor — the §4 separation of workflow engine and
+//! cluster engine.
+
+use super::instance::WorkflowInstance;
+use super::profiler::{Profiler, TaskRecord};
+use super::task::TaskState;
+use crate::exec::{Completion, Executor};
+use crate::util::error::{Error, Result};
+use std::collections::BTreeSet;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Summary of one scheduler run.
+#[derive(Debug, Clone)]
+pub struct ExecutionReport {
+    /// Tasks that finished successfully.
+    pub completed: usize,
+    /// Tasks that failed.
+    pub failed: usize,
+    /// Tasks skipped because a dependency failed.
+    pub skipped: usize,
+    /// Tasks satisfied from the checkpoint without running.
+    pub restored: usize,
+    /// End-to-end makespan in seconds.
+    pub makespan: f64,
+    /// Mean worker utilization (busy / (makespan × workers)).
+    pub utilization: f64,
+    /// Every task measurement, sorted by start time.
+    pub records: Vec<TaskRecord>,
+}
+
+impl ExecutionReport {
+    /// True when nothing failed or was skipped.
+    pub fn all_ok(&self) -> bool {
+        self.failed == 0 && self.skipped == 0
+    }
+}
+
+/// Order in which the workflow set is fed to the executor (§9: "the user
+/// may wish to dictate that the set of workflows will follow a
+/// depth-first or breadth-first execution").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecOrder {
+    /// Instance-major: wf-0's ready tasks before wf-1's — workflow
+    /// instances tend to *complete* early (first results sooner).
+    #[default]
+    DepthFirst,
+    /// Task-major: every instance's first ready task, then the seconds —
+    /// instances progress in lockstep (uniform partial coverage of the
+    /// parameter space early).
+    BreadthFirst,
+}
+
+/// Scheduler over a set of materialized workflow instances.
+pub struct WorkflowScheduler<'a> {
+    instances: &'a [WorkflowInstance],
+    profiler: Arc<Profiler>,
+    /// Task keys (`task_id#instance`) already completed in a previous run
+    /// (checkpoint restore): satisfied immediately, never re-executed.
+    pub skip_done: BTreeSet<String>,
+    /// Feed order across instances.
+    pub order: ExecOrder,
+}
+
+impl<'a> WorkflowScheduler<'a> {
+    /// New scheduler (depth-first order).
+    pub fn new(instances: &'a [WorkflowInstance]) -> Self {
+        WorkflowScheduler {
+            instances,
+            profiler: Arc::new(Profiler::new()),
+            skip_done: BTreeSet::new(),
+            order: ExecOrder::DepthFirst,
+        }
+    }
+
+    /// The profiler (shared, inspectable after `run`).
+    pub fn profiler(&self) -> Arc<Profiler> {
+        self.profiler.clone()
+    }
+
+    /// Execute everything on `executor`; blocks until all tasks reach a
+    /// terminal state.
+    pub fn run(&self, executor: &dyn Executor) -> Result<ExecutionReport> {
+        // Flat task addressing: (instance idx, node idx) → global id.
+        let mut offsets = Vec::with_capacity(self.instances.len());
+        let mut total = 0usize;
+        for inst in self.instances {
+            offsets.push(total);
+            total += inst.tasks.len();
+        }
+        let gid = |wi: usize, node: usize| offsets[wi] + node;
+
+        let mut state = vec![TaskState::Pending; total];
+        let mut unmet = vec![0usize; total];
+        // Non-terminal tasks left per instance (drives DFS opening).
+        let mut remaining: Vec<usize> =
+            self.instances.iter().map(|i| i.tasks.len()).collect();
+        let mut restored = 0usize;
+
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+
+        for (wi, inst) in self.instances.iter().enumerate() {
+            for node in 0..inst.tasks.len() {
+                unmet[gid(wi, node)] = inst.dag.dependencies(node).len();
+            }
+        }
+
+        // §9 execution order: BreadthFirst opens every instance up front
+        // (lockstep progress); DepthFirst opens at most `workers`
+        // instances and admits the next only when one fully terminates —
+        // early instances complete before late ones begin.
+        let open_limit = match self.order {
+            ExecOrder::DepthFirst => executor.workers().max(1),
+            ExecOrder::BreadthFirst => self.instances.len(),
+        };
+
+        let report = std::thread::scope(|s| -> Result<ExecutionReport> {
+            // The executor drains ready_rx on its own threads.
+            let exec_handle = s.spawn(move || executor.run_all(ready_rx, done_tx));
+
+            let mut completed = 0usize;
+            let mut failed = 0usize;
+            let mut skipped = 0usize;
+            let mut in_flight = 0usize;
+            let mut next_to_open = 0usize;
+            let mut open_active = 0usize;
+
+            // Release dependents of a completed node; returns tasks to send.
+            let mut release =
+                |wi: usize,
+                 node: usize,
+                 ok: bool,
+                 state: &mut Vec<TaskState>,
+                 unmet: &mut Vec<usize>,
+                 remaining: &mut Vec<usize>,
+                 restored: &mut usize|
+                 -> Vec<super::task::ConcreteTask> {
+                    let inst = &self.instances[wi];
+                    let mut to_send = Vec::new();
+                    let mut stack: Vec<(usize, bool)> = inst
+                        .dag
+                        .dependents(node)
+                        .iter()
+                        .map(|&d| (d, ok))
+                        .collect();
+                    while let Some((d, parent_ok)) = stack.pop() {
+                        let g = gid(wi, d);
+                        if state[g].is_terminal() {
+                            continue;
+                        }
+                        if !parent_ok {
+                            // Failure cascades: skip this and its subtree.
+                            state[g] = TaskState::Skipped;
+                            skipped += 1;
+                            remaining[wi] -= 1;
+                            let t = &inst.tasks[d];
+                            self.profiler.record(TaskRecord {
+                                key: t.key(),
+                                task_id: t.task_id.clone(),
+                                instance: t.instance,
+                                start: self.profiler.now(),
+                                end: self.profiler.now(),
+                                worker: "-".into(),
+                                ok: false,
+                            });
+                            stack.extend(
+                                inst.dag.dependents(d).iter().map(|&x| (x, false)),
+                            );
+                            continue;
+                        }
+                        unmet[g] -= 1;
+                        if unmet[g] == 0 {
+                            if self.skip_done.contains(&inst.tasks[d].key()) {
+                                state[g] = TaskState::Done;
+                                *restored += 1;
+                                remaining[wi] -= 1;
+                                // restored deps release recursively
+                                stack.extend(
+                                    inst.dag.dependents(d).iter().map(|&x| (x, true)),
+                                );
+                            } else {
+                                state[g] = TaskState::Ready;
+                                to_send.push(inst.tasks[d].clone());
+                            }
+                        }
+                    }
+                    to_send
+                };
+
+            // Admission loop: open instances up to the limit, seeding
+            // each one's dependency-free tasks (restore cascades run
+            // through `release` for checkpointed roots).
+            macro_rules! admit {
+                () => {
+                    while open_active < open_limit
+                        && next_to_open < self.instances.len()
+                    {
+                        let wi = next_to_open;
+                        next_to_open += 1;
+                        let inst = &self.instances[wi];
+                        let mut sends = Vec::new();
+                        for node in 0..inst.tasks.len() {
+                            let g = gid(wi, node);
+                            if unmet[g] != 0 || state[g] != TaskState::Pending {
+                                continue;
+                            }
+                            if self.skip_done.contains(&inst.tasks[node].key()) {
+                                state[g] = TaskState::Done;
+                                restored += 1;
+                                remaining[wi] -= 1;
+                                sends.extend(release(
+                                    wi, node, true, &mut state, &mut unmet,
+                                    &mut remaining, &mut restored,
+                                ));
+                            } else {
+                                state[g] = TaskState::Ready;
+                                sends.push(inst.tasks[node].clone());
+                            }
+                        }
+                        if remaining[wi] > 0 {
+                            open_active += 1;
+                        }
+                        for t in sends {
+                            ready_tx.send(t).map_err(|_| {
+                                Error::Workflow("executor hung up".into())
+                            })?;
+                            in_flight += 1;
+                        }
+                    }
+                };
+            }
+            admit!();
+
+            // Main completion loop.
+            while in_flight > 0 {
+                let (task, result) = done_rx
+                    .recv()
+                    .map_err(|_| Error::Workflow("executor dropped done channel".into()))?;
+                in_flight -= 1;
+                let wi = self
+                    .instances
+                    .iter()
+                    .position(|i| i.index == task.instance)
+                    .ok_or_else(|| {
+                        Error::Workflow(format!("unknown instance {}", task.instance))
+                    })?;
+                let node = self.instances[wi]
+                    .dag
+                    .index_of(&task.task_id)
+                    .ok_or_else(|| {
+                        Error::Workflow(format!("unknown task '{}'", task.task_id))
+                    })?;
+                let g = gid(wi, node);
+                state[g] = if result.ok { TaskState::Done } else { TaskState::Failed };
+                remaining[wi] -= 1;
+                if result.ok {
+                    completed += 1;
+                } else {
+                    failed += 1;
+                }
+                let end = self.profiler.now();
+                self.profiler.record(TaskRecord {
+                    key: task.key(),
+                    task_id: task.task_id.clone(),
+                    instance: task.instance,
+                    start: (end - result.duration).max(0.0),
+                    end,
+                    worker: result.worker.clone(),
+                    ok: result.ok,
+                });
+                for t in release(
+                    wi, node, result.ok, &mut state, &mut unmet,
+                    &mut remaining, &mut restored,
+                ) {
+                    ready_tx
+                        .send(t)
+                        .map_err(|_| Error::Workflow("executor hung up".into()))?;
+                    in_flight += 1;
+                }
+                if remaining[wi] == 0 {
+                    open_active -= 1;
+                    admit!();
+                }
+            }
+            drop(ready_tx); // executor drains and exits
+            exec_handle
+                .join()
+                .map_err(|_| Error::Workflow("executor panicked".into()))??;
+
+            Ok(ExecutionReport {
+                completed,
+                failed,
+                skipped,
+                restored,
+                makespan: self.profiler.makespan(),
+                utilization: self.profiler.utilization(),
+                records: self.profiler.snapshot(),
+            })
+        })?;
+
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::local::LocalPool;
+    use crate::exec::runner::{RunConfig, TaskRunner};
+    use crate::tasks::Builtins;
+    use crate::wdl::{parse_str, Format, StudySpec};
+    use crate::params::{Param, Space};
+
+    fn instances_for(yaml: &str, limit: u64) -> Vec<WorkflowInstance> {
+        let study =
+            StudySpec::from_doc(&parse_str(yaml, Format::Yaml).unwrap()).unwrap();
+        let mut params: Vec<Param> = Vec::new();
+        let mut fixed = Vec::new();
+        for t in &study.tasks {
+            for p in t.local_params() {
+                params.push(Param {
+                    name: format!("{}:{}", t.id, p.name),
+                    values: p.values,
+                });
+            }
+            for c in &t.fixed {
+                fixed.push(c.iter().map(|n| format!("{}:{n}", t.id)).collect());
+            }
+        }
+        let space = Space::new(params, &fixed).unwrap();
+        (0..space.len().min(limit))
+            .map(|i| {
+                WorkflowInstance::materialize(&study, i, space.combination(i).unwrap())
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    fn pool(workers: usize, tag: &str) -> LocalPool {
+        let root = std::env::temp_dir().join("papas_sched").join(tag);
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        LocalPool::new(
+            Arc::new(TaskRunner::new(
+                Arc::new(Builtins::without_runtime()),
+                RunConfig {
+                    work_root: root.join("work"),
+                    input_root: root.join("inputs"),
+                },
+            )),
+            workers,
+        )
+    }
+
+    #[test]
+    fn runs_parameter_sweep() {
+        let instances = instances_for(
+            "job:\n  command: sleep-ms ${ms}\n  ms: [1, 2, 1, 2]\n",
+            64,
+        );
+        assert_eq!(instances.len(), 4);
+        let sched = WorkflowScheduler::new(&instances);
+        let report = sched.run(&pool(2, "sweep")).unwrap();
+        assert_eq!(report.completed, 4);
+        assert!(report.all_ok());
+        assert_eq!(report.records.len(), 4);
+        assert!(report.makespan > 0.0);
+    }
+
+    #[test]
+    fn respects_dependencies() {
+        let instances = instances_for(
+            "a:\n  command: sleep-ms 5\nb:\n  command: sleep-ms 1\n  after: a\n",
+            1,
+        );
+        let sched = WorkflowScheduler::new(&instances);
+        let report = sched.run(&pool(2, "deps")).unwrap();
+        assert_eq!(report.completed, 2);
+        let recs = &report.records;
+        let a = recs.iter().find(|r| r.task_id == "a").unwrap();
+        let b = recs.iter().find(|r| r.task_id == "b").unwrap();
+        assert!(b.start >= a.end - 1e-3, "b started before a ended");
+    }
+
+    #[test]
+    fn failure_skips_dependents() {
+        let instances = instances_for(
+            "bad:\n  command: sleep-ms\nmid:\n  command: sleep-ms 1\n  after: bad\nleaf:\n  command: sleep-ms 1\n  after: mid\nfree:\n  command: sleep-ms 1\n",
+            1,
+        );
+        let sched = WorkflowScheduler::new(&instances);
+        let report = sched.run(&pool(2, "fail")).unwrap();
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.skipped, 2);
+        assert_eq!(report.completed, 1); // `free` still ran
+        assert!(!report.all_ok());
+    }
+
+    #[test]
+    fn checkpoint_skip_restores() {
+        let instances = instances_for(
+            "a:\n  command: sleep-ms 1\nb:\n  command: sleep-ms 1\n  after: a\n",
+            1,
+        );
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.skip_done.insert("a#0".to_string());
+        let report = sched.run(&pool(1, "ckpt")).unwrap();
+        assert_eq!(report.restored, 1);
+        assert_eq!(report.completed, 1); // only b executed
+        assert!(report.records.iter().all(|r| r.task_id == "b"));
+    }
+
+    #[test]
+    fn breadth_first_interleaves_instances() {
+        // two-task chains across 3 instances on one worker: BFS runs all
+        // first tasks before any second task.
+        let instances = instances_for(
+            "a:\n  command: sleep-ms ${v}\n  v: [0, 0, 0]\nb:\n  command: sleep-ms 0\n  after: a\n",
+            3,
+        );
+        assert_eq!(instances.len(), 3);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.order = ExecOrder::BreadthFirst;
+        let report = sched.run(&pool(1, "bfs")).unwrap();
+        assert_eq!(report.completed, 6);
+        let first_b = report
+            .records
+            .iter()
+            .filter(|r| r.task_id == "b")
+            .map(|r| r.start)
+            .fold(f64::INFINITY, f64::min);
+        let last_a = report
+            .records
+            .iter()
+            .filter(|r| r.task_id == "a")
+            .map(|r| r.end)
+            .fold(0.0, f64::max);
+        assert!(
+            first_b >= last_a - 1e-3,
+            "BFS: all a's before any b (first_b={first_b}, last_a={last_a})"
+        );
+    }
+
+    #[test]
+    fn depth_first_completes_instances_early() {
+        let instances = instances_for(
+            "a:\n  command: sleep-ms ${v}\n  v: [0, 0, 0]\nb:\n  command: sleep-ms 0\n  after: a\n",
+            3,
+        );
+        let sched = WorkflowScheduler::new(&instances); // default DFS
+        let report = sched.run(&pool(1, "dfs")).unwrap();
+        assert_eq!(report.completed, 6);
+        // instance 0's b finishes before instance 2's a starts
+        let b0_end = report
+            .records
+            .iter()
+            .find(|r| r.task_id == "b" && r.instance == 0)
+            .unwrap()
+            .end;
+        let a2_start = report
+            .records
+            .iter()
+            .find(|r| r.task_id == "a" && r.instance == 2)
+            .unwrap()
+            .start;
+        assert!(b0_end <= a2_start + 1e-3, "b0={b0_end} a2={a2_start}");
+    }
+
+    #[test]
+    fn fully_restored_study_runs_nothing() {
+        let instances =
+            instances_for("a:\n  command: sleep-ms 1\n", 1);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.skip_done.insert("a#0".to_string());
+        let report = sched.run(&pool(1, "allckpt")).unwrap();
+        assert_eq!(report.restored, 1);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.records.len(), 0);
+    }
+}

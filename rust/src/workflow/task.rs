@@ -1,0 +1,284 @@
+//! Concrete tasks: a task spec with one combination's values substituted,
+//! ready for an executor. Plus the task state machine the task manager
+//! tracks (§4.2).
+
+use crate::json::Json;
+use crate::params::Combination;
+use crate::util::error::Result;
+use crate::util::strings::shell_split;
+use crate::wdl::interp::Interpolator;
+use crate::wdl::TaskSpec;
+use std::collections::BTreeMap;
+
+/// Lifecycle of a task inside the task manager.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting on dependencies.
+    Pending,
+    /// Dependencies met, queued for an executor.
+    Ready,
+    /// Handed to a worker.
+    Running,
+    /// Finished successfully.
+    Done,
+    /// Finished unsuccessfully.
+    Failed,
+    /// A dependency failed; this task will never run.
+    Skipped,
+}
+
+impl TaskState {
+    /// Terminal states never change again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, TaskState::Done | TaskState::Failed | TaskState::Skipped)
+    }
+
+    /// Stable lowercase label (viz colors, provenance records).
+    pub fn label(self) -> &'static str {
+        match self {
+            TaskState::Pending => "pending",
+            TaskState::Ready => "ready",
+            TaskState::Running => "running",
+            TaskState::Done => "done",
+            TaskState::Failed => "failed",
+            TaskState::Skipped => "skipped",
+        }
+    }
+}
+
+/// A fully-interpolated, executable task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConcreteTask {
+    /// Workflow-instance index (which combination).
+    pub instance: u64,
+    /// Task id within the study.
+    pub task_id: String,
+    /// Tokenized command line (argv[0] may name a builtin task kind).
+    pub argv: Vec<String>,
+    /// Environment variables to set.
+    pub env: BTreeMap<String, String>,
+    /// Staged input files: (keyword, interpolated path).
+    pub infiles: Vec<(String, String)>,
+    /// Declared output files: (keyword, interpolated path).
+    pub outfiles: Vec<(String, String)>,
+    /// Content substitutions applied to staged infiles:
+    /// (regex pattern, chosen replacement).
+    pub substitutions: Vec<(String, String)>,
+}
+
+impl ConcreteTask {
+    /// Instantiate `spec` under `combo` (globally-scoped values).
+    pub fn materialize(
+        spec: &TaskSpec,
+        instance: u64,
+        combo: &Combination,
+    ) -> Result<ConcreteTask> {
+        let it = Interpolator::new(&spec.id, combo);
+        let command = it.interpolate(&spec.command)?;
+        let argv = shell_split(&command);
+
+        let mut env = BTreeMap::new();
+        for p in &spec.environ {
+            let var = p
+                .name
+                .strip_prefix("environ:")
+                .unwrap_or(&p.name)
+                .to_string();
+            // The chosen value for this combination, itself interpolated.
+            let chosen = combo
+                .get(&format!("{}:{}", spec.id, p.name))
+                .map(|v| v.as_str().to_string())
+                .unwrap_or_default();
+            env.insert(var, it.interpolate(&chosen)?);
+        }
+
+        let mut infiles = Vec::new();
+        for (k, tpl) in &spec.infiles {
+            infiles.push((k.clone(), it.interpolate(tpl)?));
+        }
+        let mut outfiles = Vec::new();
+        for (k, tpl) in &spec.outfiles {
+            outfiles.push((k.clone(), it.interpolate(tpl)?));
+        }
+
+        let mut substitutions = Vec::new();
+        for s in &spec.substitute {
+            let chosen = combo
+                .get(&format!("{}:substitute:{}", spec.id, s.pattern))
+                .map(|v| v.as_str().to_string())
+                .unwrap_or_default();
+            substitutions.push((s.pattern.clone(), it.interpolate(&chosen)?));
+        }
+
+        Ok(ConcreteTask {
+            instance,
+            task_id: spec.id.clone(),
+            argv,
+            env,
+            infiles,
+            outfiles,
+            substitutions,
+        })
+    }
+
+    /// Unique key of this task within the study.
+    pub fn key(&self) -> String {
+        format!("{}#{}", self.task_id, self.instance)
+    }
+
+    /// Serialize for the SSH wire protocol / checkpoint store.
+    pub fn to_json(&self) -> Json {
+        let pair_arr = |ps: &[(String, String)]| {
+            Json::Arr(
+                ps.iter()
+                    .map(|(a, b)| {
+                        Json::Arr(vec![Json::from(a.as_str()), Json::from(b.as_str())])
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj([
+            ("instance".to_string(), Json::from(self.instance as i64)),
+            ("task_id".to_string(), Json::from(self.task_id.as_str())),
+            (
+                "argv".to_string(),
+                Json::Arr(self.argv.iter().map(|a| Json::from(a.as_str())).collect()),
+            ),
+            (
+                "env".to_string(),
+                Json::Obj(
+                    self.env
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(v.as_str())))
+                        .collect(),
+                ),
+            ),
+            ("infiles".to_string(), pair_arr(&self.infiles)),
+            ("outfiles".to_string(), pair_arr(&self.outfiles)),
+            ("substitutions".to_string(), pair_arr(&self.substitutions)),
+        ])
+    }
+
+    /// Deserialize (SSH worker side).
+    pub fn from_json(j: &Json) -> Result<ConcreteTask> {
+        let pairs = |key: &str| -> Result<Vec<(String, String)>> {
+            j.expect(key)?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| {
+                    let a = p.as_arr().and_then(|a| a.first()?.as_str().map(str::to_string));
+                    let b = p.as_arr().and_then(|a| a.get(1)?.as_str().map(str::to_string));
+                    match (a, b) {
+                        (Some(a), Some(b)) => Ok((a, b)),
+                        _ => Err(crate::util::Error::Store(format!(
+                            "bad pair list '{key}'"
+                        ))),
+                    }
+                })
+                .collect()
+        };
+        Ok(ConcreteTask {
+            instance: j.expect_i64("instance")? as u64,
+            task_id: j.expect_str("task_id")?.to_string(),
+            argv: j
+                .expect("argv")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|a| a.as_str().map(str::to_string))
+                .collect(),
+            env: j
+                .expect("env")?
+                .as_obj()
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| {
+                            v.as_str().map(|s| (k.clone(), s.to_string()))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+            infiles: pairs("infiles")?,
+            outfiles: pairs("outfiles")?,
+            substitutions: pairs("substitutions")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Value;
+    use crate::wdl::{parse_str, Format, StudySpec};
+
+    fn combo(pairs: &[(&str, &str)]) -> Combination {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), Value::new(*v)))
+            .collect()
+    }
+
+    fn fig5_spec() -> TaskSpec {
+        let doc = parse_str(
+            "matmulOMP:\n  environ:\n    OMP_NUM_THREADS:\n      - 1:8\n  args:\n    size:\n      - 16:*2:16384\n  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        StudySpec::from_doc(&doc).unwrap().tasks[0].clone()
+    }
+
+    #[test]
+    fn materialize_figure5_instance() {
+        let spec = fig5_spec();
+        let c = combo(&[
+            ("matmulOMP:args:size", "256"),
+            ("matmulOMP:environ:OMP_NUM_THREADS", "4"),
+        ]);
+        let t = ConcreteTask::materialize(&spec, 7, &c).unwrap();
+        assert_eq!(
+            t.argv,
+            vec!["matmul", "256", "result_256N_4T.txt"]
+        );
+        assert_eq!(t.env.get("OMP_NUM_THREADS").map(String::as_str), Some("4"));
+        assert_eq!(t.key(), "matmulOMP#7");
+    }
+
+    #[test]
+    fn state_machine_labels() {
+        assert!(TaskState::Done.is_terminal());
+        assert!(TaskState::Skipped.is_terminal());
+        assert!(!TaskState::Running.is_terminal());
+        assert_eq!(TaskState::Ready.label(), "ready");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let spec = fig5_spec();
+        let c = combo(&[
+            ("matmulOMP:args:size", "16"),
+            ("matmulOMP:environ:OMP_NUM_THREADS", "2"),
+        ]);
+        let t = ConcreteTask::materialize(&spec, 0, &c).unwrap();
+        let back = ConcreteTask::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn substitute_and_files_interpolate() {
+        let doc = parse_str(
+            "sim:\n  command: run model.xml\n  beta: [0.1, 0.2]\n  infiles:\n    model: model_${beta}.xml\n  outfiles:\n    out: result_${beta}.csv\n  substitute:\n    'beta=\\S+':\n      - beta=${beta}\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let spec = StudySpec::from_doc(&doc).unwrap().tasks[0].clone();
+        let c = combo(&[
+            ("sim:beta", "0.2"),
+            ("sim:substitute:beta=\\S+", "beta=0.2"),
+        ]);
+        let t = ConcreteTask::materialize(&spec, 1, &c).unwrap();
+        assert_eq!(t.infiles[0].1, "model_0.2.xml");
+        assert_eq!(t.outfiles[0].1, "result_0.2.csv");
+        assert_eq!(t.substitutions[0], ("beta=\\S+".to_string(), "beta=0.2".to_string()));
+    }
+}

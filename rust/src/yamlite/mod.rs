@@ -1,0 +1,437 @@
+//! YAML-subset parser ("yamlite") for PaPaS parameter files.
+//!
+//! Implements exactly the constructs the WDL specification in §5 of the
+//! paper requires (and that its Figure 5 example uses):
+//!
+//!   * block mappings `key: value`, nested by indentation (spaces or tabs,
+//!     tabs count as one indent column);
+//!   * block sequences `- item`, including sequence items that open an
+//!     inline mapping (`- command: ...` continued at deeper indent);
+//!   * `#` line comments and blank lines anywhere;
+//!   * single/double-quoted scalars (quotes stripped; parameter files are
+//!     simple by design, so no escape processing inside quotes);
+//!   * flow sequences `[a, b, c]` as values (convenience, used by `after`).
+//!
+//! Deliberately NOT implemented (the paper's WDL forbids or never uses
+//! them): anchors/aliases, multi-document streams, block scalars (`|`,
+//! `>`), complex keys, type tags. Feeding such input produces a parse
+//! error rather than silent misinterpretation.
+//!
+//! Scalars are kept as raw strings; `params::Value` does type inference
+//! ("values are inferred from written format").
+
+use crate::util::error::{Error, Location, Result};
+use crate::util::strings::{split_top_level, unquote};
+use crate::wdl::doc::Node;
+
+/// Parse a yamlite document into the common node model.
+/// An empty / comment-only document parses to an empty map.
+pub fn parse(src: &str) -> Result<Node> {
+    let lines = logical_lines(src)?;
+    if lines.is_empty() {
+        return Ok(Node::Map(Vec::new()));
+    }
+    let mut p = BlockParser { lines: &lines, pos: 0 };
+    let root_indent = lines[0].indent;
+    let node = p.block(root_indent)?;
+    if p.pos != lines.len() {
+        let l = &lines[p.pos];
+        return Err(Error::parse(
+            Location::new(l.lineno, l.indent + 1),
+            "unexpected de-indentation or mixed structure at top level",
+        ));
+    }
+    Ok(node)
+}
+
+/// One significant source line.
+#[derive(Debug)]
+struct Line {
+    /// 1-based source line number (diagnostics).
+    lineno: usize,
+    /// Indent width in columns.
+    indent: usize,
+    /// Content with comments and trailing whitespace stripped.
+    text: String,
+}
+
+/// Strip comments/blanks, compute indents. Rejects non-leading tabs mixed
+/// into indentation after spaces (a classic YAML footgun).
+fn logical_lines(src: &str) -> Result<Vec<Line>> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let mut indent = 0usize;
+        let mut seen_space = false;
+        let mut rest_start = 0usize;
+        for (bi, b) in raw.bytes().enumerate() {
+            match b {
+                b' ' => {
+                    indent += 1;
+                    seen_space = true;
+                }
+                b'\t' => {
+                    if seen_space {
+                        return Err(Error::parse(
+                            Location::new(lineno, bi + 1),
+                            "tab after spaces in indentation",
+                        ));
+                    }
+                    indent += 1;
+                }
+                _ => {
+                    rest_start = bi;
+                    break;
+                }
+            }
+            rest_start = bi + 1;
+        }
+        let content = strip_comment(&raw[rest_start..]).trim_end().to_string();
+        if content.is_empty() {
+            continue;
+        }
+        out.push(Line { lineno, indent, text: content });
+    }
+    Ok(out)
+}
+
+/// Remove a `#` comment that is not inside quotes.
+fn strip_comment(s: &str) -> &str {
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '#' if !in_single && !in_double => {
+                // YAML requires '#' to start the line or follow whitespace.
+                if i == 0 || s[..i].ends_with(' ') || s[..i].ends_with('\t') {
+                    return &s[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    s
+}
+
+struct BlockParser<'a> {
+    lines: &'a [Line],
+    pos: usize,
+}
+
+impl<'a> BlockParser<'a> {
+    fn peek(&self) -> Option<&'a Line> {
+        self.lines.get(self.pos)
+    }
+
+    fn err(&self, line: &Line, msg: impl Into<String>) -> Error {
+        Error::parse(Location::new(line.lineno, line.indent + 1), msg)
+    }
+
+    /// Parse the block starting at `indent` (a map or a sequence).
+    fn block(&mut self, indent: usize) -> Result<Node> {
+        let first = self.peek().expect("block called at end");
+        if first.text.starts_with('-')
+            && (first.text == "-" || first.text[1..].starts_with(' '))
+        {
+            self.sequence(indent)
+        } else {
+            self.mapping(indent)
+        }
+    }
+
+    fn sequence(&mut self, indent: usize) -> Result<Node> {
+        let mut items = Vec::new();
+        while let Some(line) = self.peek() {
+            if line.indent < indent {
+                break;
+            }
+            if line.indent > indent {
+                return Err(self.err(line, "unexpected indent in sequence"));
+            }
+            if !(line.text.starts_with("- ") || line.text == "-") {
+                break; // sibling mapping key ends the sequence
+            }
+            let lineno = line.lineno;
+            let item_text = line.text[1..].trim_start().to_string();
+            // Column where the item's content begins — nested lines of this
+            // item must be indented past the dash.
+            let item_indent = indent + (line.text.len() - item_text.len());
+            self.pos += 1;
+            if item_text.is_empty() {
+                // `-` alone: nested block on the following lines.
+                match self.peek() {
+                    Some(next) if next.indent > indent => {
+                        let child_indent = next.indent;
+                        items.push(self.block(child_indent)?);
+                    }
+                    _ => items.push(Node::scalar("")),
+                }
+            } else if let Some((key, val)) = split_mapping_entry(&item_text) {
+                // `- key: ...` opens an inline mapping.
+                items.push(self.inline_map_item(key, val, item_indent, lineno)?);
+            } else {
+                items.push(parse_flow_scalar(&item_text));
+            }
+        }
+        Ok(Node::Seq(items))
+    }
+
+    /// A sequence item of the form `- key: value` plus continuation lines
+    /// indented to the item's content column.
+    fn inline_map_item(
+        &mut self,
+        key: String,
+        val: Option<String>,
+        item_indent: usize,
+        lineno: usize,
+    ) -> Result<Node> {
+        let mut entries = Vec::new();
+        let first_val = self.entry_value(val, item_indent, lineno)?;
+        entries.push((key, first_val));
+        while let Some(line) = self.peek() {
+            if line.indent != item_indent {
+                break;
+            }
+            let Some((k, v)) = split_mapping_entry(&line.text) else {
+                return Err(self.err(line, "expected 'key: value' in mapping"));
+            };
+            let lineno = line.lineno;
+            self.pos += 1;
+            let value = self.entry_value(v, item_indent, lineno)?;
+            entries.push((k, value));
+        }
+        Ok(Node::Map(entries))
+    }
+
+    fn mapping(&mut self, indent: usize) -> Result<Node> {
+        let mut entries: Vec<(String, Node)> = Vec::new();
+        while let Some(line) = self.peek() {
+            if line.indent < indent {
+                break;
+            }
+            if line.indent > indent {
+                return Err(self.err(line, "unexpected indent in mapping"));
+            }
+            if line.text.starts_with("- ") || line.text == "-" {
+                return Err(self.err(line, "sequence item in mapping context"));
+            }
+            let Some((key, val)) = split_mapping_entry(&line.text) else {
+                return Err(self.err(
+                    line,
+                    format!("expected 'key: value', found '{}'", line.text),
+                ));
+            };
+            if entries.iter().any(|(k, _)| *k == key) {
+                return Err(self.err(line, format!("duplicate key '{key}'")));
+            }
+            let lineno = line.lineno;
+            self.pos += 1;
+            let value = self.entry_value(val, indent, lineno)?;
+            entries.push((key, value));
+        }
+        Ok(Node::Map(entries))
+    }
+
+    /// The value of a mapping entry: inline scalar, or a nested block on
+    /// the following deeper-indented lines.
+    fn entry_value(
+        &mut self,
+        inline: Option<String>,
+        parent_indent: usize,
+        lineno: usize,
+    ) -> Result<Node> {
+        match inline {
+            Some(text) => Ok(parse_flow_scalar(&text)),
+            None => match self.peek() {
+                Some(next) if next.indent > parent_indent => {
+                    let child_indent = next.indent;
+                    self.block(child_indent)
+                }
+                _ => {
+                    // `key:` with nothing nested = empty scalar (paper's
+                    // files use this for placeholder sections).
+                    let _ = lineno;
+                    Ok(Node::scalar(""))
+                }
+            },
+        }
+    }
+}
+
+/// Split `key: value` / `key:` lines. Returns None when the line is not a
+/// mapping entry (e.g. the scalar `1:8` — no space after the colon).
+fn split_mapping_entry(text: &str) -> Option<(String, Option<String>)> {
+    // Quoted keys: "a: b": value
+    if text.starts_with('"') || text.starts_with('\'') {
+        let quote = text.chars().next().unwrap();
+        let end = text[1..].find(quote)? + 1;
+        let rest = &text[end + 1..];
+        let key = unquote(&text[..=end]).to_string();
+        let rest = rest.trim_start();
+        if let Some(v) = rest.strip_prefix(':') {
+            let v = v.trim();
+            return Some((
+                key,
+                if v.is_empty() { None } else { Some(v.to_string()) },
+            ));
+        }
+        return None;
+    }
+    // Unquoted: the first `: ` (or trailing `:`) outside ${...} splits.
+    let parts = split_top_level(text, ':');
+    if parts.len() < 2 {
+        return None;
+    }
+    let key = parts[0].trim();
+    if key.is_empty() || key.contains(' ') {
+        return None;
+    }
+    let rest = text[key.len() + 1..].trim();
+    if rest.is_empty() {
+        return Some((key.to_string(), None));
+    }
+    // `1:8` (range syntax) is NOT a mapping: require a space after ':'.
+    if !text[key.len() + 1..].starts_with(' ') {
+        return None;
+    }
+    Some((key.to_string(), Some(rest.to_string())))
+}
+
+/// Parse an inline value: flow sequence `[a, b]` or plain/quoted scalar.
+fn parse_flow_scalar(text: &str) -> Node {
+    let t = text.trim();
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        if inner.trim().is_empty() {
+            return Node::Seq(Vec::new());
+        }
+        return Node::Seq(
+            split_top_level(inner, ',')
+                .iter()
+                .map(|s| Node::scalar(unquote(s.trim())))
+                .collect(),
+        );
+    }
+    Node::scalar(unquote(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Figure 5 example, verbatim structure.
+    const FIG5: &str = "\
+matmulOMP:
+  name: Matrix multiply scaling study with OpenMP
+  environ:
+    OMP_NUM_THREADS:
+      - 1:8
+  args:
+    size:
+      - 16:*2:16384
+  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt
+";
+
+    #[test]
+    fn parses_figure5() {
+        let doc = parse(FIG5).unwrap();
+        let task = doc.get("matmulOMP").unwrap();
+        assert_eq!(
+            task.get("name").unwrap().as_scalar().unwrap(),
+            "Matrix multiply scaling study with OpenMP"
+        );
+        let threads = task
+            .get("environ").unwrap()
+            .get("OMP_NUM_THREADS").unwrap()
+            .as_seq().unwrap();
+        assert_eq!(threads[0].as_scalar(), Some("1:8"));
+        let size = task.get("args").unwrap().get("size").unwrap();
+        assert_eq!(size.as_seq().unwrap()[0].as_scalar(), Some("16:*2:16384"));
+        assert!(task
+            .get("command").unwrap()
+            .as_scalar().unwrap()
+            .starts_with("matmul ${args:size}"));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = parse("# header\n\na: 1 # trailing\n\n# tail\nb: x#notcomment\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_scalar(), Some("1"));
+        assert_eq!(doc.get("b").unwrap().as_scalar(), Some("x#notcomment"));
+    }
+
+    #[test]
+    fn sequences_of_scalars_and_maps() {
+        let doc = parse(
+            "tasks:\n  - one\n  - command: echo hi\n    name: greeter\n  - two\n",
+        )
+        .unwrap();
+        let tasks = doc.get("tasks").unwrap().as_seq().unwrap();
+        assert_eq!(tasks[0].as_scalar(), Some("one"));
+        assert_eq!(tasks[1].get("command").unwrap().as_scalar(), Some("echo hi"));
+        assert_eq!(tasks[1].get("name").unwrap().as_scalar(), Some("greeter"));
+        assert_eq!(tasks[2].as_scalar(), Some("two"));
+    }
+
+    #[test]
+    fn flow_sequence_values() {
+        let doc = parse("after: [prep, 'build step', gen]\nempty: []\n").unwrap();
+        let after = doc.get("after").unwrap().as_seq().unwrap();
+        assert_eq!(after[1].as_scalar(), Some("build step"));
+        assert_eq!(doc.get("empty").unwrap().as_seq().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn range_scalars_not_mistaken_for_maps() {
+        let doc = parse("vals:\n  - 1:8\n  - 16:*2:64\n").unwrap();
+        let vals = doc.get("vals").unwrap().as_seq().unwrap();
+        assert_eq!(vals[0].as_scalar(), Some("1:8"));
+        assert_eq!(vals[1].as_scalar(), Some("16:*2:64"));
+    }
+
+    #[test]
+    fn nested_empty_value_is_empty_scalar() {
+        let doc = parse("a:\nb: 2\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_scalar(), Some(""));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let e = parse("a: 1\na: 2\n").unwrap_err();
+        assert!(e.to_string().contains("duplicate key"), "{e}");
+    }
+
+    #[test]
+    fn bad_indent_rejected_with_location() {
+        let e = parse("a: 1\n   stray\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn tab_after_space_rejected() {
+        assert!(parse("a:\n \tb: 1\n").is_err());
+    }
+
+    #[test]
+    fn quoted_scalars_strip_quotes() {
+        let doc = parse("a: 'hello: world'\nb: \"x # y\"\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_scalar(), Some("hello: world"));
+        assert_eq!(doc.get("b").unwrap().as_scalar(), Some("x # y"));
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let doc = parse("a:\n  b:\n    c:\n      - d: 1\n        e: 2\n").unwrap();
+        let item = &doc.get("a").unwrap().get("b").unwrap().get("c").unwrap().as_seq().unwrap()[0];
+        assert_eq!(item.get("d").unwrap().as_scalar(), Some("1"));
+        assert_eq!(item.get("e").unwrap().as_scalar(), Some("2"));
+    }
+
+    #[test]
+    fn empty_document() {
+        assert_eq!(parse("").unwrap(), Node::Map(vec![]));
+        assert_eq!(parse("# only comments\n").unwrap(), Node::Map(vec![]));
+    }
+}

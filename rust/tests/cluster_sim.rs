@@ -1,0 +1,179 @@
+//! Integration: the cluster engine reproduces the *shapes* of the
+//! paper's Figures 1, 3, and 4 (the EXPERIMENTS.md assertions live here
+//! so a regression breaks the build, not just the benches' output).
+
+use papas::cluster::job::{
+    makespan, scheduler_interactions, task_end_times, task_start_times,
+};
+use papas::cluster::{BatchJob, ClusterSim, Regime, SimBatch, SimConfig};
+
+const THIRTY_MIN: f64 = 1800.0;
+
+/// 25 one-task jobs (the paper's 25 NetLogo simulations, independent).
+fn independent_25() -> Vec<BatchJob> {
+    (0..25)
+        .map(|i| BatchJob::uniform(format!("sim{i:02}"), 1, 1, 1, THIRTY_MIN))
+        .collect()
+}
+
+fn run(nodes: usize, regime: Regime, seed: u64, jobs: Vec<BatchJob>) -> Vec<papas::cluster::JobTrace> {
+    let mut sim = ClusterSim::new(SimConfig::new(nodes, regime, seed)).unwrap();
+    for j in jobs {
+        sim.submit(j).unwrap();
+    }
+    sim.run_to_completion()
+}
+
+// ---------------------------------------------------------------- Figure 1
+
+#[test]
+fn fig1_optimal_every_job_starts_and_ends_together() {
+    let traces = run(25, Regime::Optimal, 1, independent_25());
+    let starts: Vec<f64> = traces.iter().map(|t| t.start).collect();
+    let ends: Vec<f64> = traces.iter().map(|t| t.end).collect();
+    assert!(starts.iter().all(|&s| s == 0.0));
+    assert!(ends.iter().all(|&e| (e - THIRTY_MIN).abs() < 1e-9));
+}
+
+#[test]
+fn fig1_serial_runs_one_at_a_time_without_gaps() {
+    let traces = run(25, Regime::Serial, 1, independent_25());
+    let mut sorted = traces.clone();
+    sorted.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    for w in sorted.windows(2) {
+        assert!((w[1].start - w[0].end).abs() < 1e-9, "no inter-job delay");
+    }
+    let total = makespan(&traces);
+    assert!(total >= 24.0 * THIRTY_MIN * 0.9, "≈ 25 × 30 min, got {total}");
+}
+
+#[test]
+fn fig1_common_is_worst_with_irregular_delays() {
+    let traces = run(6, Regime::Common, 42, independent_25());
+    let total = makespan(&traces);
+    let optimal = THIRTY_MIN;
+    let serial = 25.0 * THIRTY_MIN;
+    // Figure 1's shape: common extends past even the serial case — queue
+    // waits between consecutive starts dominate on a busy cluster.
+    assert!(total > optimal * 1.5, "worse than optimal: {total}");
+    assert!(total > serial, "common ends after serial: {total}");
+    // irregular: consecutive start gaps differ widely
+    let mut starts: Vec<f64> = traces.iter().map(|t| t.start).collect();
+    starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let gaps: Vec<f64> = starts.windows(2).map(|w| w[1] - w[0]).collect();
+    let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+        / gaps.len() as f64;
+    assert!(var.sqrt() > 0.2 * mean, "delays vary (cv > 0.2)");
+}
+
+// ------------------------------------------------------------ Figures 3 & 4
+
+/// The paper's grouping schemes as (name, nnodes, ppnode).
+const SCHEMES: [(&str, usize, usize); 4] =
+    [("1N-1P", 1, 1), ("1N-2P", 1, 2), ("2N-1P", 2, 1), ("2N-2P", 2, 2)];
+
+fn grouped(scheme: (usize, usize)) -> BatchJob {
+    BatchJob::uniform("papas-group", scheme.0, scheme.1, 25, THIRTY_MIN)
+}
+
+#[test]
+fn fig3_scheduler_start_times_have_greatest_variability() {
+    // independent submission on the contended cluster
+    let indep = run(6, Regime::Common, 7, independent_25());
+    let spread = |starts: &[f64]| {
+        starts.iter().cloned().fold(0.0, f64::max)
+            - starts.iter().cloned().fold(f64::INFINITY, f64::min)
+    };
+    let indep_spread = spread(&task_start_times(&indep));
+
+    // every grouped scheme has a *smaller* start spread
+    for (name, n, p) in SCHEMES {
+        let traces = run(6, Regime::Common, 7, vec![grouped((n, p))]);
+        let s = spread(&task_start_times(&traces));
+        assert!(
+            s < indep_spread,
+            "{name}: grouped spread {s} ≥ scheduler spread {indep_spread}"
+        );
+    }
+}
+
+#[test]
+fn fig4_grouping_reduces_completion_time_and_interactions() {
+    let indep = run(6, Regime::Common, 21, independent_25());
+    let indep_makespan = makespan(&indep);
+    assert_eq!(scheduler_interactions(&indep), 50);
+
+    let mut results = Vec::new();
+    for (name, n, p) in SCHEMES {
+        let traces = run(6, Regime::Common, 21, vec![grouped((n, p))]);
+        assert_eq!(scheduler_interactions(&traces), 2, "{name}");
+        results.push((name, n * p, makespan(&traces)));
+    }
+    // the paper's finding: the multi-node schemes (2N-*) are best...
+    let best = results
+        .iter()
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .unwrap();
+    assert!(best.0.starts_with("2N"), "best scheme is multi-node: {best:?}");
+    // ...and every grouped scheme with >1 rank beats independent submission
+    for (name, ranks, ms) in &results {
+        if *ranks > 1 {
+            assert!(
+                ms < &indep_makespan,
+                "{name} ({ms}s) should beat scheduler-managed ({indep_makespan}s)"
+            );
+        }
+    }
+    // more ranks ⇒ shorter grouped makespan (monotone in this regime)
+    let ms_of = |ranks: usize| {
+        results.iter().find(|r| r.1 == ranks).map(|r| r.2)
+    };
+    if let (Some(m1), Some(m4)) = (ms_of(1), ms_of(4)) {
+        assert!(m4 < m1);
+    }
+}
+
+#[test]
+fn fig4_utilization_stays_high_in_grouped_mode() {
+    // utilization within the grouped job: busy rank-time / (ranks × span)
+    for (name, n, p) in SCHEMES {
+        let traces = run(6, Regime::Common, 3, vec![grouped((n, p))]);
+        let job = &traces[0];
+        let busy: f64 = job.tasks.iter().map(|t| t.end - t.start).sum();
+        let util = busy / ((n * p) as f64 * job.duration());
+        assert!(
+            util > 0.70,
+            "{name}: utilization {util:.2} below the paper's 70% floor"
+        );
+    }
+}
+
+#[test]
+fn fig4_ends_are_wavefronted_not_straggled() {
+    // grouped 2N-2P: ends come in ~7 waves of ≤4
+    let traces = run(6, Regime::Optimal, 5, vec![grouped((2, 2))]);
+    let ends = task_end_times(&traces);
+    assert_eq!(ends.len(), 25);
+    // last end ≈ ceil(25/4)=7 waves × 30 min
+    let last = ends.last().unwrap();
+    assert!((last - 7.0 * THIRTY_MIN).abs() < 1e-6, "{last}");
+}
+
+// ------------------------------------------------------------- batch facade
+
+#[test]
+fn pbs_facade_over_the_simulator() {
+    let mut batch = SimBatch::new(SimConfig::new(4, Regime::Serial, 1)).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..5 {
+        ids.push(batch.qsub(BatchJob::uniform(format!("j{i}"), 1, 1, 1, 60.0)).unwrap());
+    }
+    batch.qdel(ids[4]).unwrap();
+    let traces = batch.advance_to_completion();
+    assert_eq!(traces.len(), 4);
+    use papas::cluster::JobStatus;
+    assert_eq!(batch.qstat(ids[0], 30.0).unwrap(), JobStatus::Running);
+    assert_eq!(batch.qstat(ids[3], 30.0).unwrap(), JobStatus::Queued);
+    assert_eq!(batch.qstat(ids[4], 30.0).unwrap(), JobStatus::Deleted);
+}

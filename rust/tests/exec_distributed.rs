@@ -1,0 +1,157 @@
+//! Integration: the distributed executors under load and under failure —
+//! MPI-dispatcher rank behaviour and SSH-mode wire execution, driven
+//! through real studies.
+
+use papas::study::Study;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("papas_dist").join(tag);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write_study(dir: &std::path::Path, yaml: &str) -> Study {
+    std::fs::write(dir.join("s.yaml"), yaml).unwrap();
+    Study::from_file(dir.join("s.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"))
+}
+
+#[test]
+fn mpi_grouping_schemes_match_rank_topology() {
+    for (n, p) in [(1usize, 1usize), (1, 4), (2, 2), (4, 1)] {
+        let dir = tmp(&format!("mpi_{n}x{p}"));
+        let study = write_study(
+            &dir,
+            "t:\n  command: sleep-ms 2\n  v:\n    - 1:12\n",
+        );
+        let report = study.run_mpi(n, p).unwrap();
+        assert_eq!(report.completed, 12);
+        // worker labels rankR@nodeH with H < n, 1 <= R <= n*p
+        let mut nodes = std::collections::BTreeSet::new();
+        for r in &report.records {
+            let (rank, node) = r
+                .worker
+                .trim_start_matches("rank")
+                .split_once("@node")
+                .unwrap();
+            let rank: usize = rank.parse().unwrap();
+            let node: usize = node.parse().unwrap();
+            assert!(rank >= 1 && rank <= n * p);
+            assert!(node < n);
+            nodes.insert(node);
+        }
+        if n * p <= 12 {
+            assert_eq!(nodes.len(), n, "all nodes participate");
+        }
+    }
+}
+
+#[test]
+fn mpi_dynamic_balancing_on_skewed_durations() {
+    let dir = tmp("mpi_skew");
+    // one 400ms straggler + eleven 10ms tasks over 4 ranks (durations are
+    // real sleeps, so the gap survives heavy CPU contention in CI)
+    let study = write_study(
+        &dir,
+        "t:\n  command: sleep-ms ${ms}\n  ms: [400, 10, 10, 10, 10, 10, 10, 10, 10, 10, 10, 10]\n",
+    );
+    let report = study.run_mpi(2, 2).unwrap();
+    assert_eq!(report.completed, 12);
+    // dynamic dispatch: the straggler's rank ran fewer tasks than the
+    // busiest rank (static block assignment would give 3 each), and the
+    // straggler did not serialize the rest — short tasks completed while
+    // it was still running.
+    let mut per_worker = std::collections::BTreeMap::new();
+    for r in &report.records {
+        *per_worker.entry(r.worker.clone()).or_insert(0usize) += 1;
+    }
+    let max = per_worker.values().max().unwrap();
+    let min = per_worker.values().min().unwrap();
+    assert!(max > min, "dynamic imbalance expected: {per_worker:?}");
+    // The rank that drew the 80ms straggler (task instance 0) handled
+    // fewer tasks than the busiest rank — static 3/3/3/3 would not.
+    let straggler_rank = &report
+        .records
+        .iter()
+        .find(|r| r.instance == 0)
+        .unwrap()
+        .worker;
+    assert!(
+        per_worker[straggler_rank] < *max,
+        "straggler rank not relieved: {per_worker:?}"
+    );
+}
+
+#[test]
+fn ssh_workers_execute_a_study_over_tcp() {
+    let dir = tmp("ssh_study");
+    let study = write_study(
+        &dir,
+        "t:\n  command: /bin/sh -c \"echo v=${v}\"\n  v:\n    - 1:10\n",
+    );
+    let report = study.run_ssh(&[], 3).unwrap();
+    assert_eq!(report.completed, 10);
+    let hosts: std::collections::BTreeSet<String> = report
+        .records
+        .iter()
+        .map(|r| r.worker.clone())
+        .collect();
+    assert_eq!(hosts.len(), 3, "all daemons used: {hosts:?}");
+    assert!(hosts.iter().all(|h| h.contains("127.0.0.1")));
+}
+
+#[test]
+fn ssh_task_failures_travel_the_wire() {
+    let dir = tmp("ssh_fail");
+    let study = write_study(
+        &dir,
+        "t:\n  command: /bin/sh -c \"exit ${code}\"\n  code: [0, 1, 0, 2]\n",
+    );
+    let report = study.run_ssh(&[], 2).unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.failed, 2);
+}
+
+#[test]
+fn executors_agree_on_results() {
+    // same study, three executors → identical outputs (modulo timing)
+    let mk = |tag: &str| {
+        let dir = tmp(tag);
+        write_study(
+            &dir,
+            "t:\n  command: /bin/sh -c \"echo ${a}-${b} > out_${a}_${b}.txt\"\n  a: [1, 2]\n  b: [x, y]\n",
+        )
+    };
+    let collect = |study: &Study| -> Vec<String> {
+        let mut outs = Vec::new();
+        for i in 0..study.n_instances() as u64 {
+            let d = study.db_root.join("work").join(format!("wf-{i:04}"));
+            for e in std::fs::read_dir(&d).unwrap() {
+                let p = e.unwrap().path();
+                if p.extension().is_some_and(|x| x == "txt") {
+                    outs.push(format!(
+                        "{}:{}",
+                        p.file_name().unwrap().to_string_lossy(),
+                        std::fs::read_to_string(&p).unwrap().trim()
+                    ));
+                }
+            }
+        }
+        outs.sort();
+        outs
+    };
+
+    let s_local = mk("agree_local");
+    s_local.run_local(2).unwrap();
+    let s_mpi = mk("agree_mpi");
+    s_mpi.run_mpi(2, 1).unwrap();
+    let s_ssh = mk("agree_ssh");
+    s_ssh.run_ssh(&[], 2).unwrap();
+
+    let a = collect(&s_local);
+    assert_eq!(a, collect(&s_mpi));
+    assert_eq!(a, collect(&s_ssh));
+    assert_eq!(a.len(), 4);
+}

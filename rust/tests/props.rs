@@ -1,0 +1,293 @@
+//! Property-based tests on coordinator invariants, via the in-tree
+//! harness (`util::proptest`): the combinatorial engine, interpolation,
+//! DAG scheduling, parser round-trips, and the cluster simulator.
+
+use papas::cluster::{BatchJob, ClusterSim, Regime, SimConfig};
+use papas::params::{Param, Sampling, Space};
+use papas::util::proptest::{check, Gen};
+use papas::wdl::interp::Interpolator;
+use papas::wdl::range;
+use papas::workflow::Dag;
+use papas::{ini, yamlite};
+use std::collections::BTreeSet;
+
+fn arb_params(g: &mut Gen, max_params: usize, max_values: usize) -> Vec<Param> {
+    let n = g.usize(1..=max_params);
+    (0..n)
+        .map(|i| {
+            let vals = g.vec(1..=max_values, |g| g.i64(0..=999).to_string());
+            Param::new(format!("p{i}"), vals)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cartesian_product_count_and_uniqueness() {
+    check("N_W = Π N_i and all combos unique", 80, |g| {
+        let params = arb_params(g, 4, 5);
+        let expect: u64 = params.iter().map(|p| p.values.len() as u64).product();
+        let space = Space::cartesian(params).unwrap();
+        assert_eq!(space.len(), expect);
+        let all: BTreeSet<String> = space
+            .iter()
+            .map(|c| format!("{c:?}"))
+            .collect();
+        assert_eq!(all.len() as u64, expect);
+    });
+}
+
+#[test]
+fn prop_fixed_clause_reduces_count_and_preserves_bijection() {
+    check("fixed zip: N = N_other × N_zip", 60, |g| {
+        let n_vals = g.usize(1..=4);
+        let a = Param::new("a", (0..n_vals).map(|i| i.to_string()).collect());
+        let b = Param::new("b", (0..n_vals).map(|i| format!("b{i}")).collect());
+        let free_vals = g.usize(1..=4);
+        let c = Param::new("c", (0..free_vals).map(|i| i.to_string()).collect());
+        let space = Space::new(
+            vec![a, b, c],
+            &[vec!["a".into(), "b".into()]],
+        )
+        .unwrap();
+        assert_eq!(space.len(), (n_vals * free_vals) as u64);
+        for combo in space.iter() {
+            // bijection holds in every combination
+            let ai: usize = combo["a"].as_str().parse().unwrap();
+            assert_eq!(combo["b"].as_str(), format!("b{ai}"));
+        }
+    });
+}
+
+#[test]
+fn prop_sampling_is_subset_and_within_bounds() {
+    check("sampling ⊆ index space, sorted, distinct", 60, |g| {
+        let params = arb_params(g, 3, 6);
+        let space = Space::cartesian(params).unwrap();
+        let k = g.usize(1..=30) as u64;
+        let sampling = if g.bool(0.5) {
+            Sampling::Uniform(k)
+        } else {
+            Sampling::Random { count: k, seed: g.i64(0..=1000) as u64 }
+        };
+        let idx = sampling.indices(&space);
+        assert_eq!(idx.len() as u64, k.min(space.len()));
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(idx.iter().all(|&i| i < space.len()));
+    });
+}
+
+#[test]
+fn prop_range_expansion_monotone_and_bounded() {
+    check("additive ranges: sorted, within [start, end]", 100, |g| {
+        let start = g.i64(-50..=50);
+        let step = g.i64(1..=9);
+        let end = start + g.i64(0..=200);
+        let text = format!("{start}:{step}:{end}");
+        match range::expand(&text).unwrap() {
+            range::Expanded::Range(vals) => {
+                let nums: Vec<f64> =
+                    vals.iter().map(|v| v.parse().unwrap()).collect();
+                assert!(nums[0] == start as f64);
+                for w in nums.windows(2) {
+                    assert!((w[1] - w[0] - step as f64).abs() < 1e-9);
+                }
+                assert!(*nums.last().unwrap() <= end as f64);
+                // count formula
+                assert_eq!(
+                    nums.len() as i64,
+                    (end - start) / step + 1
+                );
+            }
+            range::Expanded::Scalar(s) => panic!("expected range, got {s}"),
+        }
+    });
+}
+
+#[test]
+fn prop_interpolation_resolves_all_local_refs() {
+    check("every declared param interpolates", 60, |g| {
+        let n = g.usize(1..=6);
+        let combo: papas::params::Combination = (0..n)
+            .map(|i| {
+                (
+                    format!("t:k{i}"),
+                    papas::params::Value::new(g.i64(0..=999).to_string()),
+                )
+            })
+            .collect();
+        let it = Interpolator::new("t", &combo);
+        let template: String = (0..n)
+            .map(|i| format!("${{k{i}}}"))
+            .collect::<Vec<_>>()
+            .join("-");
+        let out = it.interpolate(&template).unwrap();
+        let parts: Vec<&str> = out.split('-').collect();
+        assert_eq!(parts.len(), n);
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(*p, combo[&format!("t:k{i}")].as_str());
+        }
+    });
+}
+
+#[test]
+fn prop_random_dag_topo_order_valid() {
+    check("topological order respects every edge", 80, |g| {
+        let n = g.usize(1..=12);
+        // random DAG: node i may depend on a subset of 0..i (acyclic by
+        // construction)
+        let nodes: Vec<(String, Vec<String>)> = (0..n)
+            .map(|i| {
+                let deps: Vec<String> = (0..i)
+                    .filter(|_| g.bool(0.3))
+                    .map(|j| format!("n{j}"))
+                    .collect();
+                (format!("n{i}"), deps)
+            })
+            .collect();
+        let dag = Dag::new(&nodes).unwrap();
+        let order = dag.topo_order().unwrap();
+        assert_eq!(order.len(), n);
+        let pos: Vec<usize> = {
+            let mut p = vec![0; n];
+            for (rank, &i) in order.iter().enumerate() {
+                p[i] = rank;
+            }
+            p
+        };
+        for i in 0..n {
+            for &d in dag.dependencies(i) {
+                assert!(pos[d] < pos[i], "edge {d}->{i} violated");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_yaml_ini_scalar_values_round_trip() {
+    check("generated studies parse identically in yaml and ini", 60, |g| {
+        let nkeys = g.usize(1..=5);
+        let keys: Vec<String> =
+            (0..nkeys).map(|i| format!("k{i}")).collect();
+        let vals: Vec<String> =
+            (0..nkeys).map(|_| g.ident()).collect();
+        let mut yaml = String::from("task:\n");
+        let mut ini_text = String::from("[task]\n");
+        for (k, v) in keys.iter().zip(&vals) {
+            yaml.push_str(&format!("  {k}: {v}\n"));
+            ini_text.push_str(&format!("{k} = {v}\n"));
+        }
+        let y = yamlite::parse(&yaml).unwrap();
+        let i = ini::parse(&ini_text).unwrap();
+        for (k, v) in keys.iter().zip(&vals) {
+            assert_eq!(
+                y.get("task").unwrap().get(k).unwrap().as_scalar(),
+                Some(v.as_str())
+            );
+            assert_eq!(
+                i.get("task").unwrap().get(k).unwrap().as_scalar(),
+                Some(v.as_str())
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_conservation_laws() {
+    check("sim: every job runs all tasks; no overlap per rank", 40, |g| {
+        let regime = *g.choose(&[Regime::Optimal, Regime::Serial, Regime::Common]);
+        let nodes = g.usize(2..=8);
+        let njobs = g.usize(1..=6);
+        let seed = g.i64(0..=10_000) as u64;
+        let mut sim = ClusterSim::new(SimConfig::new(nodes, regime, seed)).unwrap();
+        let mut expected_tasks = 0usize;
+        for j in 0..njobs {
+            let nn = g.usize(1..=nodes.min(2));
+            let pp = g.usize(1..=2);
+            let nt = g.usize(1..=10);
+            expected_tasks += nt;
+            sim.submit(BatchJob::uniform(format!("j{j}"), nn, pp, nt, 10.0))
+                .unwrap();
+        }
+        let traces = sim.run_to_completion();
+        let total: usize = traces.iter().map(|t| t.tasks.len()).sum();
+        assert_eq!(total, expected_tasks);
+        for t in &traces {
+            assert!(t.start >= t.submit);
+            assert!(t.end >= t.start);
+            // per-rank task spans never overlap
+            let mut per_rank: std::collections::BTreeMap<usize, Vec<(f64, f64)>> =
+                Default::default();
+            for task in &t.tasks {
+                assert!(task.end > task.start);
+                per_rank.entry(task.rank).or_default().push((task.start, task.end));
+            }
+            for spans in per_rank.values_mut() {
+                spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for w in spans.windows(2) {
+                    assert!(w[1].0 >= w[0].1 - 1e-9, "rank overlap: {spans:?}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_parsers_never_panic_on_garbage() {
+    // Robustness: arbitrary byte soup must yield Ok or Err, never a
+    // panic, from any of the three front-ends (they face user files).
+    check("parsers are total", 300, |g| {
+        let len = g.usize(0..=200);
+        let charset: Vec<char> =
+            "ab:任- \t\n#{}[]\"'$,=0.5*\u{1F600}\\".chars().collect();
+        let doc: String = (0..len).map(|_| *g.choose(&charset)).collect();
+        let _ = papas::yamlite::parse(&doc);
+        let _ = papas::ini::parse(&doc);
+        let _ = papas::json::parse(&doc);
+        // and the full WDL pipeline on top of whatever parsed
+        if let Ok(node) = papas::yamlite::parse(&doc) {
+            let _ = papas::wdl::StudySpec::from_doc(&node);
+        }
+    });
+}
+
+#[test]
+fn prop_interpolation_never_panics() {
+    check("interpolation is total", 200, |g| {
+        let len = g.usize(0..=60);
+        let charset: Vec<char> = "ab{}$:x ".chars().collect();
+        let tpl: String = (0..len).map(|_| *g.choose(&charset)).collect();
+        let combo: papas::params::Combination = [(
+            "t:a".to_string(),
+            papas::params::Value::new("v"),
+        )]
+        .into_iter()
+        .collect();
+        let _ = Interpolator::new("t", &combo).interpolate(&tpl);
+    });
+}
+
+#[test]
+fn prop_json_writer_parser_inverse() {
+    // (heavier arbitrary-JSON round trip lives in the json module's unit
+    // tests; this checks the study-relevant shape: nested obj/arr of
+    // strings & ints)
+    check("study-shaped json round-trips", 80, |g| {
+        use papas::json::{parse, to_string, Json};
+        let mut obj = std::collections::BTreeMap::new();
+        for _ in 0..g.usize(0..=5) {
+            let key = g.ident();
+            let val = if g.bool(0.5) {
+                Json::Str(g.ident())
+            } else {
+                Json::Arr(
+                    g.vec(0..=4, |g| Json::Num(g.i64(-100..=100) as f64)),
+                )
+            };
+            obj.insert(key, val);
+        }
+        let j = Json::Obj(obj);
+        assert_eq!(parse(&to_string(&j)).unwrap(), j);
+    });
+}

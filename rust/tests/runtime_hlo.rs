@@ -1,0 +1,138 @@
+//! Integration: the AOT bridge. Loads real `artifacts/*.hlo.txt` through
+//! the PJRT runtime and checks numerics against the in-Rust reference —
+//! the end-to-end proof that python-compiled Pallas kernels execute
+//! correctly on the Rust request path.
+//!
+//! Requires `make artifacts` to have run (the Makefile test target
+//! guarantees it).
+
+use papas::runtime::{AbmSeries, Runtime, RuntimeService};
+use papas::tasks::matmul::{generate_inputs, multiply_tiled};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn matmul_artifact_matches_native_reference() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    for n in [16usize, 64, 256] {
+        let (a, b) = generate_inputs(n);
+        let hlo = rt.run_matmul(n, &a, &b).unwrap();
+        let native = multiply_tiled(n, &a, &b, 1);
+        assert_eq!(hlo.len(), n * n);
+        let max_err = hlo
+            .iter()
+            .zip(&native)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        // Pallas f32 accumulation vs native f32: tight tolerance scaled by k
+        assert!(max_err < 1e-3 * n as f32, "n={n}: max_err={max_err}");
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let (a, b) = generate_inputs(32);
+    for _ in 0..5 {
+        rt.run_matmul(32, &a, &b).unwrap();
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(rt.stats.compiles.load(Ordering::Relaxed), 1);
+    assert_eq!(rt.stats.executions.load(Ordering::Relaxed), 5);
+}
+
+#[test]
+fn abm_artifact_runs_and_metrics_are_sane() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let params = papas::tasks::abm::PARAM_DEFAULTS.to_vec();
+    let series = rt.run_abm("abm_p16_h2_t24", 7, &params).unwrap();
+    assert_eq!(series.steps, 24);
+    assert_eq!(series.metrics, 6);
+    for s in 0..series.steps {
+        let total = series.at(s, AbmSeries::N_SUSCEPTIBLE)
+            + series.at(s, AbmSeries::N_COLONIZED)
+            + series.at(s, AbmSeries::N_DISEASED);
+        assert_eq!(total, 16.0, "population conserved at step {s}");
+        let room = series.at(s, AbmSeries::MEAN_ROOM);
+        assert!((0.0..=1.0).contains(&room));
+    }
+}
+
+#[test]
+fn abm_is_deterministic_per_seed_and_varies_across_seeds() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let params = papas::tasks::abm::PARAM_DEFAULTS.to_vec();
+    let a = rt.run_abm("abm_p16_h2_t24", 3, &params).unwrap();
+    let b = rt.run_abm("abm_p16_h2_t24", 3, &params).unwrap();
+    let c = rt.run_abm("abm_p16_h2_t24", 4, &params).unwrap();
+    assert_eq!(a.data, b.data, "same seed, same series");
+    assert_ne!(a.data, c.data, "different seed, different series");
+}
+
+#[test]
+fn abm_parameters_change_dynamics() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let mut aggressive = papas::tasks::abm::PARAM_DEFAULTS.to_vec();
+    aggressive[0] = 1.5; // beta
+    aggressive[4] = 0.05; // hygiene
+    let mut protective = papas::tasks::abm::PARAM_DEFAULTS.to_vec();
+    protective[0] = 0.02;
+    protective[4] = 0.98;
+    // average final carriers over seeds
+    let mean_carriers = |params: &Vec<f32>| -> f32 {
+        (0..4)
+            .map(|seed| {
+                let s = rt.run_abm("abm_p32_h4_t72", seed, params).unwrap();
+                s.last_row()[1] + s.last_row()[2]
+            })
+            .sum::<f32>()
+            / 4.0
+    };
+    let agg = mean_carriers(&aggressive);
+    let pro = mean_carriers(&protective);
+    assert!(agg > pro, "aggressive {agg} vs protective {pro}");
+}
+
+#[test]
+fn runtime_error_paths() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let (a, b) = generate_inputs(16);
+    assert!(rt.run_matmul(48, &a, &b).is_err()); // no artifact for 48
+    assert!(rt.run_matmul(16, &a[..4], &b).is_err()); // wrong shape
+    assert!(rt.run_abm("matmul_16", 0, &[0.0; 8]).is_err()); // wrong kind
+    assert!(rt.run_abm("abm_p16_h2_t24", 0, &[0.0; 3]).is_err()); // wrong params
+    assert!(Runtime::new("/no/such/dir").is_err());
+}
+
+#[test]
+fn service_handle_is_thread_safe() {
+    let svc = RuntimeService::start(artifacts_dir()).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let (a, b) = generate_inputs(32);
+            let out = svc.run_matmul(32, a, b).unwrap();
+            assert_eq!(out.len(), 32 * 32);
+            t
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (compiles, execs) = svc.stats().unwrap();
+    assert_eq!(compiles, 1, "cache shared across threads");
+    assert_eq!(execs, 4);
+    svc.shutdown();
+}
+
+#[test]
+fn manifest_registry_contents() {
+    let svc = RuntimeService::start(artifacts_dir()).unwrap();
+    let m = svc.manifest();
+    assert!(m.matmul_for_size(512).is_some());
+    assert!(m.matmul_for_size(16384).is_none(), "big sizes are native-path");
+    assert_eq!(m.of_kind("abm").len(), 3);
+}

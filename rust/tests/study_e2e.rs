@@ -1,0 +1,203 @@
+//! Integration: whole studies through the whole stack — multi-task
+//! pipelines with dependencies, the shipped study files, the PJRT
+//! workloads, checkpointing across executors.
+
+use papas::runtime::RuntimeService;
+use papas::study::Study;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("papas_e2e").join(tag);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn repo(path: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(path)
+}
+
+fn artifacts() -> RuntimeService {
+    RuntimeService::start(repo("artifacts")).unwrap()
+}
+
+#[test]
+fn pipeline_study_runs_dependencies_in_order() {
+    let dir = tmp("pipeline");
+    let study = Study::from_file(repo("studies/pipeline.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"))
+        .with_runtime(artifacts());
+    // 2 betas × 2 seeds = 4 instances × 3 tasks = 12 task executions
+    assert_eq!(study.n_instances(), 4);
+    let report = study.run_local(2).unwrap();
+    assert!(report.all_ok(), "{report:?}");
+    assert_eq!(report.completed, 12);
+    // ordering: within each instance gen < sim < post
+    for i in 0..4u64 {
+        let rec = |task: &str| {
+            report
+                .records
+                .iter()
+                .find(|r| r.instance == i && r.task_id == task)
+                .unwrap()
+        };
+        assert!(rec("gen").end <= rec("sim").start + 1e-3);
+        assert!(rec("sim").end <= rec("post").start + 1e-3);
+    }
+    // post's summary exists and counts header + 24 steps = 25 lines
+    let combo = study.space().combination(0).unwrap();
+    let beta = combo["gen:beta"].as_str();
+    let seed = combo["sim:seed"].as_str();
+    let summary = std::fs::read_to_string(
+        dir.join(".papas/work/wf-0000")
+            .join(format!("summary_{beta}_{seed}.txt")),
+    )
+    .unwrap();
+    assert_eq!(summary.trim(), "25");
+}
+
+#[test]
+fn cdiff_intervention_sweep_runs_on_hlo() {
+    let dir = tmp("cdiff");
+    let study = Study::from_file(repo("studies/cdiff_intervention.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"))
+        .with_runtime(artifacts());
+    assert_eq!(study.n_instances(), 120);
+    let report = study.run_local(2).unwrap();
+    assert!(report.all_ok(), "failed={} skipped={}", report.failed, report.skipped);
+    assert_eq!(report.completed, 120);
+    // real dynamics: at least one run shows colonization
+    let mut any_colonized = false;
+    for i in 0..study.n_instances() as u64 {
+        let wdir = dir.join(".papas/work").join(format!("wf-{i:04}"));
+        let csv = std::fs::read_dir(&wdir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .find(|e| e.path().extension().is_some_and(|x| x == "csv"))
+            .unwrap();
+        let text = std::fs::read_to_string(csv.path()).unwrap();
+        let last = text.lines().last().unwrap();
+        let colonized: f64 = last.split(',').nth(2).unwrap().parse().unwrap();
+        if colonized > 0.0 {
+            any_colonized = true;
+            break;
+        }
+    }
+    assert!(any_colonized);
+}
+
+#[test]
+fn ensemble_aggregation_workflow() {
+    // five replicate ABM runs fan in to the Pallas reduction artifact
+    let dir = tmp("ensemble");
+    let study = Study::from_file(repo("studies/cdiff_ensemble.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"))
+        .with_runtime(artifacts());
+    assert_eq!(study.n_instances(), 2); // two betas
+    let report = study.run_local(2).unwrap();
+    assert!(report.all_ok(), "{report:?}");
+    assert_eq!(report.completed, 12); // (5 reps + 1 agg) × 2
+
+    for (i, beta) in [(0u64, "0.2"), (1u64, "0.5")] {
+        let path = dir
+            .join(".papas/work")
+            .join(format!("wf-{i:04}"))
+            .join(format!("ensemble_beta{beta}.csv"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("step,n_susceptible.mean,n_susceptible.var"));
+        let rows: Vec<&str> = lines.collect();
+        assert_eq!(rows.len(), 24);
+        // population invariants survive aggregation: mean S+C+D = 16,
+        // min <= mean <= max for every metric
+        for row in &rows {
+            let cols: Vec<f64> =
+                row.split(',').skip(1).map(|v| v.parse().unwrap()).collect();
+            let mean_total = cols[0] + cols[4] + cols[8];
+            assert!((mean_total - 16.0).abs() < 1e-3, "{row}");
+            for m in 0..6 {
+                let (mean, _var, min, max) =
+                    (cols[m * 4], cols[m * 4 + 1], cols[m * 4 + 2], cols[m * 4 + 3]);
+                assert!(min <= mean + 1e-4 && mean <= max + 1e-4, "{row}");
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_is_executor_portable() {
+    // run half on the local pool, resume on the MPI dispatcher
+    let dir = tmp("xckpt");
+    std::fs::write(
+        dir.join("s.yaml"),
+        "t:\n  command: sleep-ms 1\n  v: [1, 2, 3, 4]\n",
+    )
+    .unwrap();
+    let study = Study::from_file(dir.join("s.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    let r1 = study.run_local(2).unwrap();
+    assert_eq!(r1.completed, 4);
+    let r2 = study.run_mpi(1, 2).unwrap();
+    assert_eq!(r2.restored, 4);
+    assert_eq!(r2.completed, 0);
+}
+
+#[test]
+fn matmul_small_study_hlo_and_native_paths() {
+    let dir = tmp("matmul");
+    let study = Study::from_file(repo("studies/matmul_omp_small.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"))
+        .with_runtime(artifacts());
+    // 6 sizes × 8 threads = 48
+    assert_eq!(study.n_instances(), 48);
+    let report = study.run_local(2).unwrap();
+    assert!(report.all_ok());
+    // outputs written with the interpolated names of Figure 6
+    let f = dir.join(".papas/work/wf-0000/result_16N_1T.txt");
+    let text = std::fs::read_to_string(&f).unwrap();
+    assert!(text.contains("path=hlo"), "size 16 should use the artifact: {text}");
+}
+
+#[test]
+fn failure_injection_partial_study() {
+    let dir = tmp("failinj");
+    std::fs::write(
+        dir.join("s.yaml"),
+        "work:\n  command: /bin/sh -c \"test ${v} -lt 3\"\n  v: [1, 2, 3, 4]\n",
+    )
+    .unwrap();
+    let study = Study::from_file(dir.join("s.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    let report = study.run_local(2).unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.failed, 2);
+    // resume re-runs only the failures
+    let r2 = study.run_local(2).unwrap();
+    assert_eq!(r2.restored, 2);
+    assert_eq!(r2.failed, 2, "still failing");
+}
+
+#[test]
+fn report_and_provenance_files_complete() {
+    let dir = tmp("prov");
+    std::fs::write(dir.join("s.yaml"), "t:\n  command: sleep-ms 1\n  v: [1, 2]\n")
+        .unwrap();
+    let study = Study::from_file(dir.join("s.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    study.run_local(1).unwrap();
+    for f in ["study.json", "checkpoint.json", "records.jsonl", "events.log", "report.json"] {
+        assert!(dir.join(".papas").join(f).exists(), "{f}");
+    }
+    let snap = std::fs::read_to_string(dir.join(".papas/study.json")).unwrap();
+    assert!(snap.contains("n_combinations"));
+    let events = std::fs::read_to_string(dir.join(".papas/events.log")).unwrap();
+    assert!(events.contains("run start"));
+    assert!(events.contains("run end"));
+}
