@@ -31,14 +31,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         study.space().len()
     );
 
-    // Enumerate the workflow instances (what Figure 6 shows for matmul).
-    for inst in study.instances()? {
+    // Enumerate the workflow instances (what Figure 6 shows for matmul),
+    // streamed one at a time from the lazy source.
+    for inst in study.source().iter() {
+        let inst = inst?;
         println!("  {} -> {}", inst.display_id(), inst.command_lines()[0]);
     }
 
-    // The task DAG (single node here).
-    let instances = study.instances()?;
-    println!("\ntask graph:\n{}", render_ascii(&DagView::pending(&instances[0].dag)));
+    // The task DAG (single node here) — materialize just one instance.
+    let first = study.instance_at(0)?;
+    println!("\ntask graph:\n{}", render_ascii(&DagView::pending(&first.dag)));
 
     // Run on 2 local workers.
     let report = study.run_local(2)?;

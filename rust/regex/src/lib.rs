@@ -1,0 +1,538 @@
+//! A small, dependency-free stand-in for the `regex` crate, providing the
+//! subset of its API that PaPaS uses: `Regex::new`, `is_match`, and
+//! `replace_all`. The real crate is unavailable offline, so this
+//! implements a classic Thompson-NFA ("Pike VM") engine — linear time in
+//! `pattern × text`, no backtracking blowups.
+//!
+//! Supported syntax: literals, `.`, `*`, `+`, `?`, alternation `|`,
+//! groups `(...)` / `(?:...)` (non-capturing; replacements are literal),
+//! character classes `[...]` with ranges and `^` negation, the Perl
+//! classes `\d \D \s \S \w \W`, anchors `^` and `$`, and `\`-escaped
+//! metacharacters. Matching is leftmost-longest.
+
+use std::borrow::Cow;
+use std::fmt;
+
+/// Regex compilation error (message-only, `Display`-compatible with the
+/// real crate's error type for the purposes of `format!("{e}")`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// A compiled regular expression.
+#[derive(Debug, Clone)]
+pub struct Regex {
+    prog: Vec<Inst>,
+    pattern: String,
+}
+
+// ---------------------------------------------------------------- AST --
+
+#[derive(Debug, Clone)]
+enum Node {
+    Char(char),
+    Any,
+    Class { neg: bool, items: Vec<ClassItem> },
+    Start,
+    End,
+    Seq(Vec<Node>),
+    Alt(Box<Node>, Box<Node>),
+    Repeat { node: Box<Node>, min: u8, unbounded: bool },
+}
+
+#[derive(Debug, Clone)]
+enum ClassItem {
+    Ch(char),
+    Range(char, char),
+    Perl(char), // d D s S w W
+}
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn parse_alt(&mut self) -> Result<Node, Error> {
+        let mut node = self.parse_seq()?;
+        while self.peek() == Some('|') {
+            self.bump();
+            let rhs = self.parse_seq()?;
+            node = Node::Alt(Box::new(node), Box::new(rhs));
+        }
+        Ok(node)
+    }
+
+    fn parse_seq(&mut self) -> Result<Node, Error> {
+        let mut items: Vec<Node> = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            let atom = self.parse_atom()?;
+            let atom = self.parse_postfix(atom)?;
+            items.push(atom);
+        }
+        Ok(Node::Seq(items))
+    }
+
+    fn parse_postfix(&mut self, atom: Node) -> Result<Node, Error> {
+        let Some(c) = self.peek() else { return Ok(atom) };
+        let (min, unbounded) = match c {
+            '*' => (0, true),
+            '+' => (1, true),
+            '?' => (0, false),
+            _ => return Ok(atom),
+        };
+        self.bump();
+        if matches!(atom, Node::Start | Node::End) {
+            return Err(Error(format!("nothing to repeat before '{c}'")));
+        }
+        // a trailing lazy marker (`*?`, `+?`, `??`) is accepted and
+        // ignored: the VM is leftmost-longest, so laziness cannot change
+        // is_match / replace_all boundaries for the patterns we serve
+        if self.peek() == Some('?') {
+            self.bump();
+        }
+        Ok(Node::Repeat { node: Box::new(atom), min, unbounded })
+    }
+
+    fn parse_atom(&mut self) -> Result<Node, Error> {
+        let c = self.bump().ok_or_else(|| Error("unexpected end".into()))?;
+        match c {
+            '(' => {
+                // swallow the non-capturing marker; captures are not
+                // supported, so all groups behave identically
+                if self.peek() == Some('?') {
+                    self.bump();
+                    if self.peek() == Some(':') {
+                        self.bump();
+                    } else {
+                        return Err(Error(
+                            "only (?:...) groups are supported".into(),
+                        ));
+                    }
+                }
+                let inner = self.parse_alt()?;
+                if self.bump() != Some(')') {
+                    return Err(Error("unclosed group '('".into()));
+                }
+                Ok(inner)
+            }
+            '[' => self.parse_class(),
+            '.' => Ok(Node::Any),
+            '^' => Ok(Node::Start),
+            '$' => Ok(Node::End),
+            '*' | '+' | '?' => Err(Error(format!("nothing to repeat before '{c}'"))),
+            '\\' => self.parse_escape(),
+            other => Ok(Node::Char(other)),
+        }
+    }
+
+    fn parse_escape(&mut self) -> Result<Node, Error> {
+        let c = self
+            .bump()
+            .ok_or_else(|| Error("dangling '\\' at end of pattern".into()))?;
+        match c {
+            'd' | 'D' | 's' | 'S' | 'w' | 'W' => Ok(Node::Class {
+                neg: false,
+                items: vec![ClassItem::Perl(c)],
+            }),
+            'n' => Ok(Node::Char('\n')),
+            't' => Ok(Node::Char('\t')),
+            'r' => Ok(Node::Char('\r')),
+            other => Ok(Node::Char(other)),
+        }
+    }
+
+    fn parse_class(&mut self) -> Result<Node, Error> {
+        let mut neg = false;
+        if self.peek() == Some('^') {
+            neg = true;
+            self.bump();
+        }
+        let mut items = Vec::new();
+        let mut first = true;
+        loop {
+            let Some(c) = self.bump() else {
+                return Err(Error("unclosed character class '['".into()));
+            };
+            if c == ']' && !first {
+                break;
+            }
+            first = false;
+            let lo = if c == '\\' {
+                let e = self.bump().ok_or_else(|| {
+                    Error("dangling '\\' in character class".into())
+                })?;
+                match e {
+                    'd' | 'D' | 's' | 'S' | 'w' | 'W' => {
+                        items.push(ClassItem::Perl(e));
+                        continue;
+                    }
+                    'n' => '\n',
+                    't' => '\t',
+                    'r' => '\r',
+                    other => other,
+                }
+            } else {
+                c
+            };
+            // range `a-z` (a trailing '-' is a literal)
+            if self.peek() == Some('-')
+                && self.chars.get(self.pos + 1).is_some_and(|&c| c != ']')
+            {
+                self.bump(); // '-'
+                let hi = self.bump().unwrap();
+                let hi = if hi == '\\' {
+                    self.bump().ok_or_else(|| {
+                        Error("dangling '\\' in character class".into())
+                    })?
+                } else {
+                    hi
+                };
+                if hi < lo {
+                    return Err(Error(format!(
+                        "invalid class range '{lo}-{hi}'"
+                    )));
+                }
+                items.push(ClassItem::Range(lo, hi));
+            } else {
+                items.push(ClassItem::Ch(lo));
+            }
+        }
+        if items.is_empty() {
+            return Err(Error("empty character class".into()));
+        }
+        Ok(Node::Class { neg, items })
+    }
+}
+
+// ------------------------------------------------------ Thompson NFA --
+
+#[derive(Debug, Clone)]
+enum Inst {
+    Char(char),
+    Any,
+    Class { neg: bool, items: Vec<ClassItem> },
+    Start,
+    End,
+    Split(usize, usize),
+    Jmp(usize),
+    Match,
+}
+
+fn class_matches(neg: bool, items: &[ClassItem], c: char) -> bool {
+    let hit = items.iter().any(|it| match it {
+        ClassItem::Ch(x) => *x == c,
+        ClassItem::Range(lo, hi) => *lo <= c && c <= *hi,
+        ClassItem::Perl(p) => match p {
+            'd' => c.is_ascii_digit(),
+            'D' => !c.is_ascii_digit(),
+            's' => c.is_whitespace(),
+            'S' => !c.is_whitespace(),
+            'w' => c.is_alphanumeric() || c == '_',
+            'W' => !(c.is_alphanumeric() || c == '_'),
+            _ => false,
+        },
+    });
+    hit != neg
+}
+
+fn compile(node: &Node, prog: &mut Vec<Inst>) {
+    match node {
+        Node::Char(c) => prog.push(Inst::Char(*c)),
+        Node::Any => prog.push(Inst::Any),
+        Node::Class { neg, items } => {
+            prog.push(Inst::Class { neg: *neg, items: items.clone() })
+        }
+        Node::Start => prog.push(Inst::Start),
+        Node::End => prog.push(Inst::End),
+        Node::Seq(items) => {
+            for it in items {
+                compile(it, prog);
+            }
+        }
+        Node::Alt(a, b) => {
+            let split = prog.len();
+            prog.push(Inst::Jmp(0)); // placeholder → Split
+            compile(a, prog);
+            let jmp = prog.len();
+            prog.push(Inst::Jmp(0)); // placeholder → Jmp(end)
+            let b_start = prog.len();
+            compile(b, prog);
+            let end = prog.len();
+            prog[split] = Inst::Split(split + 1, b_start);
+            prog[jmp] = Inst::Jmp(end);
+        }
+        Node::Repeat { node, min, unbounded } => {
+            match (*min, *unbounded) {
+                (0, false) => {
+                    // e? : Split(body, end)
+                    let split = prog.len();
+                    prog.push(Inst::Jmp(0));
+                    compile(node, prog);
+                    let end = prog.len();
+                    prog[split] = Inst::Split(split + 1, end);
+                }
+                (0, true) => {
+                    // e* : L: Split(body, end); body; Jmp(L)
+                    let l = prog.len();
+                    prog.push(Inst::Jmp(0));
+                    compile(node, prog);
+                    prog.push(Inst::Jmp(l));
+                    let end = prog.len();
+                    prog[l] = Inst::Split(l + 1, end);
+                }
+                (_, true) => {
+                    // e+ : L: body; Split(L, end)
+                    let l = prog.len();
+                    compile(node, prog);
+                    let split = prog.len();
+                    prog.push(Inst::Split(l, split + 1));
+                }
+                (_, false) => unreachable!("parser emits 0/1-min repeats"),
+            }
+        }
+    }
+}
+
+impl Regex {
+    /// Compile a pattern.
+    pub fn new(pattern: &str) -> Result<Regex, Error> {
+        let mut p = Parser { chars: pattern.chars().collect(), pos: 0 };
+        let ast = p.parse_alt()?;
+        if p.pos != p.chars.len() {
+            // only reachable via an unbalanced ')'
+            return Err(Error("unmatched ')'".into()));
+        }
+        let mut prog = Vec::new();
+        compile(&ast, &mut prog);
+        prog.push(Inst::Match);
+        Ok(Regex { prog, pattern: pattern.to_string() })
+    }
+
+    /// The source pattern.
+    pub fn as_str(&self) -> &str {
+        &self.pattern
+    }
+
+    /// True when the pattern matches anywhere in `text`.
+    pub fn is_match(&self, text: &str) -> bool {
+        let chars: Vec<char> = text.chars().collect();
+        (0..=chars.len()).any(|start| self.match_at(&chars, start).is_some())
+    }
+
+    /// Replace every non-overlapping match with `rep` (literal — `$N`
+    /// capture references are not supported by this stand-in).
+    pub fn replace_all<'t>(&self, text: &'t str, rep: &str) -> Cow<'t, str> {
+        let chars: Vec<char> = text.chars().collect();
+        let mut out = String::new();
+        let mut pos = 0usize;
+        let mut changed = false;
+        while pos <= chars.len() {
+            match self.match_at(&chars, pos) {
+                Some(end) => {
+                    changed = true;
+                    out.push_str(rep);
+                    if end == pos {
+                        // empty match: emit the next char and advance
+                        if pos < chars.len() {
+                            out.push(chars[pos]);
+                        }
+                        pos += 1;
+                    } else {
+                        pos = end;
+                    }
+                }
+                None => {
+                    if pos < chars.len() {
+                        out.push(chars[pos]);
+                    }
+                    pos += 1;
+                }
+            }
+        }
+        if changed {
+            Cow::Owned(out)
+        } else {
+            Cow::Borrowed(text)
+        }
+    }
+
+    /// Pike-VM simulation from a fixed start offset; returns the longest
+    /// match end (in chars) or None.
+    fn match_at(&self, chars: &[char], start: usize) -> Option<usize> {
+        let n = self.prog.len();
+        let mut current: Vec<usize> = Vec::with_capacity(n);
+        let mut on_current = vec![false; n];
+        let mut best: Option<usize> = None;
+
+        let mut add = |list: &mut Vec<usize>,
+                       on: &mut Vec<bool>,
+                       pc: usize,
+                       at: usize,
+                       text_len: usize,
+                       best: &mut Option<usize>| {
+            // iterative epsilon closure
+            let mut stack = vec![pc];
+            while let Some(pc) = stack.pop() {
+                if on[pc] {
+                    continue;
+                }
+                on[pc] = true;
+                match &self.prog[pc] {
+                    Inst::Split(a, b) => {
+                        stack.push(*a);
+                        stack.push(*b);
+                    }
+                    Inst::Jmp(t) => stack.push(*t),
+                    Inst::Start => {
+                        if at == 0 {
+                            stack.push(pc + 1);
+                        }
+                    }
+                    Inst::End => {
+                        if at == text_len {
+                            stack.push(pc + 1);
+                        }
+                    }
+                    Inst::Match => {
+                        *best = Some(match *best {
+                            Some(b) => b.max(at),
+                            None => at,
+                        });
+                    }
+                    _ => list.push(pc),
+                }
+            }
+        };
+
+        add(&mut current, &mut on_current, 0, start, chars.len(), &mut best);
+        let mut at = start;
+        while at < chars.len() && !current.is_empty() {
+            let c = chars[at];
+            let mut next: Vec<usize> = Vec::with_capacity(n);
+            let mut on_next = vec![false; n];
+            for &pc in &current {
+                let consumed = match &self.prog[pc] {
+                    Inst::Char(x) => *x == c,
+                    Inst::Any => true,
+                    Inst::Class { neg, items } => class_matches(*neg, items, c),
+                    _ => false,
+                };
+                if consumed {
+                    add(
+                        &mut next,
+                        &mut on_next,
+                        pc + 1,
+                        at + 1,
+                        chars.len(),
+                        &mut best,
+                    );
+                }
+            }
+            current = next;
+            on_current = on_next;
+            at += 1;
+        }
+        let _ = on_current;
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_and_anchors() {
+        let re = Regex::new("^o_.*\\.csv$").unwrap();
+        assert!(re.is_match("o_7.csv"));
+        assert!(!re.is_match("x_o_7.csv"));
+        assert!(!re.is_match("o_7.csvx"));
+        assert!(Regex::new(".*\\.csv$").unwrap().is_match("anything.csv"));
+    }
+
+    #[test]
+    fn classes_and_perl_escapes() {
+        let re = Regex::new("beta=\"[0-9.]+\"").unwrap();
+        assert!(re.is_match("x beta=\"0.25\" y"));
+        assert!(!re.is_match("beta=\"\""));
+        let re = Regex::new("beta=\\S+").unwrap();
+        assert!(re.is_match("beta=0.5"));
+        assert!(!re.is_match("beta= 0.5"));
+        assert!(Regex::new("[^a-z]").unwrap().is_match("A"));
+        assert!(!Regex::new("[^a-z]").unwrap().is_match("abc"));
+        assert!(Regex::new("\\d+").unwrap().is_match("a42b"));
+    }
+
+    #[test]
+    fn quantifiers_and_alternation() {
+        let re = Regex::new("ab?c").unwrap();
+        assert!(re.is_match("ac"));
+        assert!(re.is_match("abc"));
+        assert!(!re.is_match("abbc"));
+        let re = Regex::new("(cat|dog)s?").unwrap();
+        assert!(re.is_match("cats"));
+        assert!(re.is_match("dog"));
+        assert!(!re.is_match("cow"));
+    }
+
+    #[test]
+    fn replace_all_is_greedy_and_nonoverlapping() {
+        let re = Regex::new("beta=\"[0-9.]+\"").unwrap();
+        let out = re.replace_all("<run beta=\"0.5\" steps=\"100\"/>", "beta=\"0.9\"");
+        assert_eq!(out, "<run beta=\"0.9\" steps=\"100\"/>");
+        let re = Regex::new("a+").unwrap();
+        assert_eq!(re.replace_all("aa b aaa", "X"), "X b X");
+        // no match borrows the input
+        let re = Regex::new("zzz").unwrap();
+        assert!(matches!(re.replace_all("abc", "X"), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Regex::new("[").is_err());
+        assert!(Regex::new("(unclosed").is_err());
+        assert!(Regex::new("a)").is_err());
+        assert!(Regex::new("*x").is_err());
+        assert!(Regex::new("x\\").is_err());
+        assert!(Regex::new("[z-a]").is_err());
+        let e = Regex::new("[").unwrap_err();
+        assert!(format!("{e}").contains("regex parse error"));
+    }
+
+    #[test]
+    fn leftmost_longest() {
+        let re = Regex::new("a|ab").unwrap();
+        // longest at the leftmost position
+        assert_eq!(re.replace_all("ab", "X"), "X");
+    }
+
+    #[test]
+    fn empty_pattern_matches_everywhere() {
+        let re = Regex::new("").unwrap();
+        assert!(re.is_match("abc"));
+        assert_eq!(re.replace_all("ab", "-"), "-a-b-");
+    }
+}

@@ -25,6 +25,8 @@ pub enum ParsedCommand {
     Validate(Args),
     /// `papas combos ...`
     Combos(Args),
+    /// `papas instance STUDY.yaml IDX` (materialize exactly one instance)
+    Instance(Args),
     /// `papas viz ...`
     Viz(Args),
     /// `papas worker ...`
@@ -57,6 +59,7 @@ impl Args {
             "resume" => Ok(ParsedCommand::Resume(rest)),
             "validate" => Ok(ParsedCommand::Validate(rest)),
             "combos" => Ok(ParsedCommand::Combos(rest)),
+            "instance" => Ok(ParsedCommand::Instance(rest)),
             "viz" => Ok(ParsedCommand::Viz(rest)),
             "worker" => Ok(ParsedCommand::Worker(rest)),
             "qsim" => Ok(ParsedCommand::Qsim(rest)),

@@ -9,6 +9,7 @@ use crate::study::Study;
 use crate::tasks::Builtins;
 use crate::util::error::{Error, Result};
 use crate::viz::{render_ascii, render_dot, DagView};
+use crate::workflow::ExecOrder;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -19,10 +20,12 @@ papas — parallel parameter studies (PEARC'18 reproduction)
 USAGE:
   papas run STUDY.yaml [overlay.yaml ...] [--workers N] [--mode local|mpi|ssh]
             [--nnodes N] [--ppnode P] [--hosts a:p,b:p] [--artifacts DIR]
-            [--db DIR] [--fresh]
+            [--db DIR] [--fresh] [--shard I/N] [--order dfs|bfs] [--window N]
   papas resume STUDY.yaml [...]        continue from the checkpoint
   papas validate STUDY.yaml [...]      parse + validate, print warnings
-  papas combos STUDY.yaml [--limit N]  enumerate workflow instances (Fig. 6)
+  papas combos STUDY.yaml [--limit N] [--shard I/N]
+                                       stream workflow instances (Fig. 6)
+  papas instance STUDY.yaml IDX        materialize exactly one instance
   papas viz STUDY.yaml [--dot]         render the task DAG
   papas worker --bind HOST:PORT [--artifacts DIR]   SSH-mode worker daemon
   papas qsim --jobs N --regime optimal|serial|common [--nodes N] [--gantt]
@@ -46,6 +49,24 @@ fn load_study_opts(a: &Args, with_runtime: bool) -> Result<Study> {
     if let Some(db) = a.options.get("db") {
         study = study.with_db_root(db);
     }
+    if let Some(shard) = a.options.get("shard") {
+        let s = crate::workflow::Shard::parse(shard)?;
+        study = study.shard(s.index, s.count)?;
+    }
+    if let Some(order) = a.options.get("order") {
+        study = study.with_order(match order.as_str() {
+            "dfs" | "depth" | "depth-first" => ExecOrder::DepthFirst,
+            "bfs" | "breadth" | "breadth-first" => ExecOrder::BreadthFirst,
+            other => {
+                return Err(Error::Exec(format!(
+                    "unknown --order '{other}' (dfs|bfs)"
+                )))
+            }
+        });
+    }
+    if a.options.contains_key("window") {
+        study = study.with_window(a.opt_num("window", 0usize)?.max(1));
+    }
     if !with_runtime {
         return Ok(study);
     }
@@ -67,11 +88,17 @@ pub fn cmd_run(a: &Args, resume: bool) -> Result<()> {
         study.clear_checkpoint()?;
     }
     let mode = a.opt_or("mode", "local");
+    let shard = study.shard_config();
     println!(
-        "study '{}': {} combinations, {} selected instances, mode={mode}",
+        "study '{}': {} combinations, {} selected instances{}, mode={mode}",
         study.name,
         study.space().len(),
-        study.n_instances()
+        study.n_instances(),
+        if shard.is_whole() {
+            String::new()
+        } else {
+            format!(" (shard {shard})")
+        }
     );
     let report = match mode.as_str() {
         "local" => study.run_local(a.opt_num("workers", 2)?),
@@ -119,27 +146,57 @@ pub fn cmd_validate(a: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `papas combos` — the Figure 6 enumeration.
+/// `papas combos` — the Figure 6 enumeration, streamed: instances are
+/// materialized one at a time and dropped after printing, so a `--limit`
+/// over a huge space costs O(limit), not O(N_W).
 pub fn cmd_combos(a: &Args) -> Result<()> {
     let study = load_study_opts(a, false)?;
-    let limit: usize = a.opt_num("limit", usize::MAX)?;
-    let instances = study.instances()?;
-    for inst in instances.iter().take(limit) {
+    let limit: u64 = a.opt_num("limit", u64::MAX)?;
+    let source = study.source();
+    for inst in source.iter().take(limit.min(source.len()) as usize) {
+        let inst = inst?;
         for cmd in inst.command_lines() {
             println!("{}: {cmd}", inst.display_id());
         }
     }
-    println!("# {} workflow instances", instances.len());
+    println!("# {} workflow instances", source.len());
     Ok(())
 }
 
-/// `papas viz`.
+/// `papas instance STUDY.yaml IDX` — materialize exactly one workflow
+/// instance (the IDX-th of the selection) without touching the rest of
+/// the space.
+pub fn cmd_instance(a: &Args) -> Result<()> {
+    // The trailing positional is the index; the rest are study files.
+    let mut a = a.clone();
+    let idx: u64 = if a.positional.len() > 1 {
+        let raw = a.positional.pop().unwrap();
+        raw.parse().map_err(|_| {
+            Error::Exec(format!("bad instance index '{raw}'"))
+        })?
+    } else {
+        a.opt_num("index", 0)?
+    };
+    let study = load_study_opts(&a, false)?;
+    let inst = study.instance_at(idx)?;
+    println!("{} (combination {})", inst.display_id(), inst.index);
+    for (k, v) in &inst.combo {
+        println!("  {k} = {v}");
+    }
+    for cmd in inst.command_lines() {
+        println!("  $ {cmd}");
+    }
+    Ok(())
+}
+
+/// `papas viz` — all instances share one task graph, so only the first
+/// is materialized.
 pub fn cmd_viz(a: &Args) -> Result<()> {
     let study = load_study_opts(a, false)?;
-    let instances = study.instances()?;
-    let first = instances
-        .first()
-        .ok_or_else(|| Error::Exec("study has no instances".into()))?;
+    if study.n_instances() == 0 {
+        return Err(Error::Exec("study has no instances".into()));
+    }
+    let first = study.instance_at(0)?;
     let view = DagView::pending(&first.dag);
     if a.has_flag("dot") {
         print!("{}", render_dot(&view, &study.name));
@@ -147,7 +204,7 @@ pub fn cmd_viz(a: &Args) -> Result<()> {
         print!("{}", render_ascii(&view));
         println!(
             "({} instances share this task graph)",
-            instances.len()
+            study.n_instances()
         );
     }
     Ok(())
@@ -281,18 +338,15 @@ pub fn cmd_aggregate(a: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `papas dax` — the §9 Pegasus-integration extension.
+/// `papas dax` — the §9 Pegasus-integration extension. Materializes only
+/// the requested instance, not the whole selection.
 pub fn cmd_dax(a: &Args) -> Result<()> {
     let study = load_study_opts(a, false)?;
-    let idx: usize = a.opt_num("instance", 0)?;
-    let instances = study.instances()?;
-    let inst = instances.get(idx).ok_or_else(|| {
-        Error::Exec(format!(
-            "instance {idx} out of range ({} instances)",
-            instances.len()
-        ))
-    })?;
-    print!("{}", crate::viz::render_dax(inst, &study.name));
+    let idx: u64 = a.opt_num("instance", 0)?;
+    // instance_at reports out-of-range indices itself; other errors
+    // (interpolation failures etc.) propagate undisguised.
+    let inst = study.instance_at(idx)?;
+    print!("{}", crate::viz::render_dax(&inst, &study.name));
     Ok(())
 }
 
@@ -345,6 +399,73 @@ mod tests {
         let a = args(&[p.to_str().unwrap()], &[]);
         cmd_combos(&a).unwrap();
         cmd_viz(&a).unwrap();
+        // streamed --limit and --shard compose
+        let a = args(&[p.to_str().unwrap()], &[("limit", "1")]);
+        cmd_combos(&a).unwrap();
+        let a = args(&[p.to_str().unwrap()], &[("shard", "1/2")]);
+        cmd_combos(&a).unwrap();
+        let a = args(&[p.to_str().unwrap()], &[("shard", "9/2")]);
+        assert!(cmd_combos(&a).is_err());
+    }
+
+    #[test]
+    fn instance_command_materializes_one() {
+        let p = study_file(
+            "instance",
+            "t:\n  command: sleep-ms ${v}\n  v: [1, 2, 3]\n",
+        );
+        cmd_instance(&args(&[p.to_str().unwrap(), "1"], &[])).unwrap();
+        // default index 0 when no positional
+        cmd_instance(&args(&[p.to_str().unwrap()], &[])).unwrap();
+        assert!(cmd_instance(&args(&[p.to_str().unwrap(), "99"], &[])).is_err());
+        assert!(cmd_instance(&args(&[p.to_str().unwrap(), "xyz"], &[])).is_err());
+    }
+
+    #[test]
+    fn run_command_sharded_splits_and_composes() {
+        let p = study_file(
+            "shardrun",
+            "t:\n  command: sleep-ms 1\n  v: [1, 2, 3, 4]\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        let dbs = db.to_str().unwrap();
+        for shard in ["0/2", "1/2"] {
+            let a = args(
+                &[p.to_str().unwrap()],
+                &[("workers", "2"), ("db", dbs), ("shard", shard)],
+            );
+            cmd_run(&a, false).unwrap();
+        }
+        // both shards checkpointed into one db: a full resume re-runs
+        // nothing (checkpoint has all 4 keys)
+        let a = args(&[p.to_str().unwrap()], &[("workers", "2"), ("db", dbs)]);
+        cmd_run(&a, true).unwrap();
+        let ckpt = crate::study::Checkpoint::load(&db).unwrap();
+        assert_eq!(ckpt.done_keys.len(), 4);
+    }
+
+    #[test]
+    fn run_command_order_and_window_flags() {
+        let p = study_file(
+            "orderwin",
+            "t:\n  command: sleep-ms 1\n  v: [1, 2, 3]\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        let a = args(
+            &[p.to_str().unwrap()],
+            &[
+                ("workers", "2"),
+                ("db", db.to_str().unwrap()),
+                ("order", "bfs"),
+                ("window", "2"),
+            ],
+        );
+        cmd_run(&a, false).unwrap();
+        let bad = args(
+            &[p.to_str().unwrap()],
+            &[("db", db.to_str().unwrap()), ("order", "sideways")],
+        );
+        assert!(cmd_run(&bad, false).is_err());
     }
 
     #[test]

@@ -37,6 +37,7 @@ fn run(argv: &[String]) -> Result<()> {
         ParsedCommand::Resume(a) => commands::cmd_run(&a, true),
         ParsedCommand::Validate(a) => commands::cmd_validate(&a),
         ParsedCommand::Combos(a) => commands::cmd_combos(&a),
+        ParsedCommand::Instance(a) => commands::cmd_instance(&a),
         ParsedCommand::Viz(a) => commands::cmd_viz(&a),
         ParsedCommand::Worker(a) => commands::cmd_worker(&a),
         ParsedCommand::Qsim(a) => commands::cmd_qsim(&a),

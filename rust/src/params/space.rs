@@ -186,14 +186,66 @@ impl Space {
         Ok(combo)
     }
 
-    /// Iterate all combinations in order.
-    pub fn iter(&self) -> impl Iterator<Item = Combination> + '_ {
-        (0..self.len()).map(|i| {
-            self.combination(i)
-                .expect("index < len is always decodable")
-        })
+    /// Iterate all combinations in order — a lazy cursor; nothing is
+    /// materialized up front.
+    pub fn iter(&self) -> Combinations<'_> {
+        self.combinations()
+    }
+
+    /// Lazy cursor over every combination (index order).
+    pub fn combinations(&self) -> Combinations<'_> {
+        Combinations { space: self, next: 0, end: self.len() }
+    }
+
+    /// Lazy cursor over the index range `start..end` (clamped to the
+    /// space). Each step is one O(#axes) mixed-radix decode; skipping is
+    /// O(1) because combinations are index-addressed.
+    pub fn combinations_range(&self, start: u64, end: u64) -> Combinations<'_> {
+        let total = self.len();
+        let end = end.min(total);
+        Combinations { space: self, next: start.min(end), end }
     }
 }
+
+/// Streaming cursor over a contiguous index range of a [`Space`] — the
+/// iterator behind [`Space::iter`]. Holds O(1) state: decoding happens
+/// per `next()` call via [`Space::combination`].
+#[derive(Debug, Clone)]
+pub struct Combinations<'a> {
+    space: &'a Space,
+    next: u64,
+    end: u64,
+}
+
+impl Iterator for Combinations<'_> {
+    type Item = Combination;
+
+    fn next(&mut self) -> Option<Combination> {
+        if self.next >= self.end {
+            return None;
+        }
+        let c = self
+            .space
+            .combination(self.next)
+            .expect("index < len is always decodable");
+        self.next += 1;
+        Some(c)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = (self.end - self.next) as usize;
+        (n, Some(n))
+    }
+
+    fn nth(&mut self, n: usize) -> Option<Combination> {
+        // index addressing makes skipping free — no decode per skipped
+        // combination (clamped so `len()` never underflows)
+        self.next = self.next.saturating_add(n as u64).min(self.end);
+        self.next()
+    }
+}
+
+impl ExactSizeIterator for Combinations<'_> {}
 
 #[cfg(test)]
 mod tests {
@@ -316,6 +368,25 @@ mod tests {
         let space = Space::cartesian(vec![]).unwrap();
         assert_eq!(space.len(), 1);
         assert!(space.combination(0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn cursor_is_lazy_and_skippable() {
+        let space = Space::cartesian(vec![
+            p("a", &["1", "2", "3"]),
+            p("b", &["x", "y"]),
+        ])
+        .unwrap();
+        let mut it = space.combinations();
+        assert_eq!(it.len(), 6);
+        let c = it.nth(4).unwrap(); // index 4 = a=3, b=x
+        assert_eq!(c["a"].as_str(), "3");
+        assert_eq!(c["b"].as_str(), "x");
+        assert_eq!(it.len(), 1);
+        // range cursor, clamped
+        let tail: Vec<_> = space.combinations_range(4, 100).collect();
+        assert_eq!(tail.len(), 2);
+        assert!(space.combinations_range(9, 12).next().is_none());
     }
 
     #[test]

@@ -40,8 +40,10 @@ pub fn aggregate(
     let mut out = std::io::BufWriter::new(std::fs::File::create(out_path)?);
     let mut wrote_header = false;
 
-    // Deterministic ordering: combination-index order.
-    for inst in study.instances()? {
+    // Deterministic ordering: combination-index order, streamed one
+    // instance at a time from the lazy source.
+    for inst in study.source().iter() {
+        let inst = inst?;
         let dir = study.db_root.join("work").join(format!("wf-{:04}", inst.index));
         let Ok(entries) = std::fs::read_dir(&dir) else {
             continue; // instance never ran

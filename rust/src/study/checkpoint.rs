@@ -7,6 +7,15 @@
 //! completed successfully. On restart the scheduler satisfies those
 //! immediately; everything else re-runs. Writes are atomic
 //! (tmp + rename) so a crash mid-checkpoint never corrupts state.
+//!
+//! Keys use **global** combination indices, which sharded runs preserve
+//! (`papas run --shard I/N`), so checkpoints written by different shards
+//! of the same study never collide and compose by plain union — either
+//! by pointing shards at one shared `--db` directory (each run re-loads
+//! and merges before saving; writers that finish at the *same instant*
+//! can still lose the race between load and rename, so prefer staggered
+//! finishes or a resume pass), or explicitly via [`Checkpoint::merge`]
+//! when each node kept its own database.
 
 use crate::json::{self, Json};
 use crate::util::error::{Error, Result};
@@ -42,7 +51,11 @@ impl Checkpoint {
         Ok(Checkpoint { done_keys: done })
     }
 
-    /// Atomically save under `db_root`.
+    /// Atomically save under `db_root`. The tmp file is suffixed with
+    /// this process id so concurrent writers (shards sharing a db) can
+    /// never rename each other's half-written tmp into place; between
+    /// two simultaneous savers the last rename wins, which is why
+    /// callers re-load and merge immediately before saving.
     pub fn save(&self, db_root: impl AsRef<Path>) -> Result<()> {
         let root = db_root.as_ref();
         std::fs::create_dir_all(root)?;
@@ -58,10 +71,19 @@ impl Checkpoint {
                 ),
             ),
         ]);
-        let tmp = root.join(format!("{FILE}.tmp"));
+        let tmp = root.join(format!("{FILE}.tmp.{}", std::process::id()));
         std::fs::write(&tmp, json::to_string_pretty(&j))?;
         std::fs::rename(&tmp, root.join(FILE))?;
         Ok(())
+    }
+
+    /// Union `other` into this checkpoint (multi-node shard merges:
+    /// shards share global instance indices, so keys never collide —
+    /// the union is exactly the whole-study checkpoint).
+    pub fn merge(&mut self, other: &Checkpoint) {
+        for k in &other.done_keys {
+            self.done_keys.insert(k.clone());
+        }
     }
 
     /// Remove any saved checkpoint.
@@ -111,6 +133,21 @@ mod tests {
     }
 
     #[test]
+    fn merge_unions_shard_checkpoints() {
+        let mut shard0 = Checkpoint::default();
+        shard0.done_keys.insert("t#0".into());
+        shard0.done_keys.insert("t#2".into());
+        let mut shard1 = Checkpoint::default();
+        shard1.done_keys.insert("t#1".into());
+        shard1.done_keys.insert("t#3".into());
+        shard0.merge(&shard1);
+        assert_eq!(shard0.done_keys.len(), 4);
+        // idempotent
+        shard0.merge(&shard1);
+        assert_eq!(shard0.done_keys.len(), 4);
+    }
+
+    #[test]
     fn corrupt_checkpoint_is_an_error() {
         let r = root("corrupt");
         std::fs::create_dir_all(&r).unwrap();
@@ -122,6 +159,11 @@ mod tests {
     fn no_tmp_left_behind() {
         let r = root("tmp");
         Checkpoint::default().save(&r).unwrap();
-        assert!(!r.join(format!("{FILE}.tmp")).exists());
+        let leftovers = std::fs::read_dir(&r)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp"))
+            .count();
+        assert_eq!(leftovers, 0);
     }
 }

@@ -43,9 +43,11 @@ impl FileDb {
                 "n_combinations".to_string(),
                 Json::from(study.space().len() as i64),
             ),
+            // Whole-study numbers: stable when concurrent shards share
+            // one database (each run's shard is logged to events.log).
             (
                 "n_selected".to_string(),
-                Json::from(study.n_instances()),
+                Json::from(study.selection().len() as i64),
             ),
             (
                 "tasks".to_string(),

@@ -6,9 +6,30 @@
 //! checkpoint/restart. `run_local` / `run_mpi` / `run_ssh` drive the
 //! workflow engine over the corresponding executor.
 //!
+//! Instances are **streamed**, never bulk-materialized: [`Study::source`]
+//! returns a lazy [`InstanceSource`] cursor over the selected combination
+//! indices, the scheduler admits instances from it into a bounded
+//! in-flight window, and [`Study::instance_at`] decodes exactly one
+//! instance in O(#params). Peak memory is independent of the space size —
+//! a 10M-combination study starts its first task immediately.
+//!
+//! [`Study::shard`] restricts a study to a deterministic 1-of-N slice of
+//! its selection, so independent nodes split one study with no
+//! coordination (`papas run --shard I/N`). Instances keep global indices
+//! under sharding, so checkpoint keys compose across shards by union —
+//! see [`Checkpoint::merge`].
+//!
 //! The "workflow generator Python 3 interface" of the paper maps to this
 //! module's Rust API: embed PaPaS as a library by constructing `Study`
-//! values programmatically (see `examples/`).
+//! values programmatically (see `examples/`), e.g.
+//!
+//! ```no_run
+//! # use papas::study::Study;
+//! let study = Study::from_file("studies/matmul_omp.yaml").unwrap();
+//! for inst in study.source().iter().take(10) {
+//!     println!("{}", inst.unwrap().command_lines()[0]);
+//! }
+//! ```
 
 pub mod aggregate;
 pub mod checkpoint;
@@ -27,7 +48,10 @@ use crate::params::{Param, Sampling, Space};
 use crate::tasks::Builtins;
 use crate::util::error::Result;
 use crate::wdl::{self, Node, StudySpec};
-use crate::workflow::{ExecutionReport, WorkflowInstance, WorkflowScheduler};
+use crate::workflow::{
+    ExecOrder, ExecutionReport, InstanceSource, Selection, Shard,
+    WorkflowInstance, WorkflowScheduler,
+};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -41,8 +65,12 @@ pub struct Study {
     pub doc: Node,
     /// Global parameter space.
     space: Space,
-    /// Combination indices to run (sampling applied; identity otherwise).
-    selected: Vec<u64>,
+    /// Combination indices to run (sampling applied; `All` otherwise —
+    /// O(1) storage for unsampled studies of any size).
+    selection: Selection,
+    /// Which 1-of-N slice of the selection this process runs (`0/1` =
+    /// the whole study).
+    shard: Shard,
     /// Root of the study's file database (`.papas/<name>`).
     pub db_root: PathBuf,
     /// Directory where shared input files live (the "NFS dir").
@@ -51,6 +79,12 @@ pub struct Study {
     builtins: Arc<Builtins>,
     /// Validation warnings from load time.
     pub warnings: Vec<String>,
+    /// Feed order across instances (§9 depth-first/breadth-first).
+    pub order: ExecOrder,
+    /// Explicit in-flight instance window; `None` = policy default
+    /// (executor width for depth-first, a large fixed window for
+    /// breadth-first).
+    pub window: Option<usize>,
 }
 
 impl Study {
@@ -101,9 +135,9 @@ impl Study {
         // (typically at most one task declares `sampling`).
         let sampling: Option<&Sampling> =
             spec.tasks.iter().find_map(|t| t.sampling.as_ref());
-        let selected: Vec<u64> = match sampling {
-            Some(s) => s.indices(&space),
-            None => (0..space.len()).collect(),
+        let selection = match sampling {
+            Some(s) => Selection::Explicit(s.indices(&space)),
+            None => Selection::All { total: space.len() },
         };
 
         let db_root = PathBuf::from(".papas").join(&name);
@@ -112,11 +146,14 @@ impl Study {
             spec,
             doc,
             space,
-            selected,
+            selection,
+            shard: Shard::default(),
             db_root,
             input_root,
             builtins: Arc::new(Builtins::without_runtime()),
             warnings,
+            order: ExecOrder::default(),
+            window: None,
         })
     }
 
@@ -132,28 +169,66 @@ impl Study {
         self
     }
 
+    /// Set the instance feed order (depth-first/breadth-first).
+    pub fn with_order(mut self, order: ExecOrder) -> Study {
+        self.order = order;
+        self
+    }
+
+    /// Cap the scheduler's in-flight instance window explicitly.
+    pub fn with_window(mut self, window: usize) -> Study {
+        self.window = Some(window);
+        self
+    }
+
+    /// Restrict this study to shard `index` of `count`: a deterministic
+    /// strided 1-of-N slice of the selection. Shards over all `index`
+    /// values partition the study exactly; instances keep their global
+    /// combination indices, so checkpoints from different shards compose
+    /// by union.
+    pub fn shard(mut self, index: u64, count: u64) -> Result<Study> {
+        self.shard = Shard::new(index, count)?;
+        Ok(self)
+    }
+
     /// The global combination space.
     pub fn space(&self) -> &Space {
         &self.space
     }
 
-    /// Number of workflow instances that will run (post-sampling).
-    pub fn n_instances(&self) -> usize {
-        self.selected.len()
+    /// The selected combination indices (pre-shard).
+    pub fn selection(&self) -> &Selection {
+        &self.selection
     }
 
-    /// Materialize every selected workflow instance.
+    /// This process's shard (`0/1` unless [`Study::shard`] was applied).
+    pub fn shard_config(&self) -> Shard {
+        self.shard
+    }
+
+    /// The lazy instance source: everything downstream (scheduler, CLI
+    /// enumeration, aggregation) pulls instances from this cursor one at
+    /// a time. This is the library embedding point for custom drivers.
+    pub fn source(&self) -> InstanceSource<'_> {
+        InstanceSource::new(&self.spec, &self.space, &self.selection, self.shard)
+    }
+
+    /// Number of workflow instances that will run (post-sampling,
+    /// post-shard).
+    pub fn n_instances(&self) -> usize {
+        self.source().len() as usize
+    }
+
+    /// Materialize the `pos`-th selected workflow instance — and only it.
+    pub fn instance_at(&self, pos: u64) -> Result<WorkflowInstance> {
+        self.source().get(pos)
+    }
+
+    /// Materialize every selected workflow instance. Prefer
+    /// [`Study::source`] — this exists for small studies and tests; it
+    /// holds the whole selection in memory.
     pub fn instances(&self) -> Result<Vec<WorkflowInstance>> {
-        self.selected
-            .iter()
-            .map(|&i| {
-                WorkflowInstance::materialize(
-                    &self.spec,
-                    i,
-                    self.space.combination(i)?,
-                )
-            })
-            .collect()
+        self.source().iter().collect()
     }
 
     fn runner(&self) -> Arc<TaskRunner> {
@@ -195,28 +270,37 @@ impl Study {
         db.store_study(self)?;
         let prov = crate::workflow::provenance::Provenance::open(&self.db_root)?;
         prov.log_event(&format!(
-            "run start: {} instances on {} ({} workers)",
+            "run start: {} instances (shard {}) on {} ({} workers)",
             self.n_instances(),
+            self.shard,
             executor.name(),
             executor.workers()
         ))?;
 
-        let instances = self.instances()?;
-        let mut scheduler = WorkflowScheduler::new(&instances);
+        // Streaming: the scheduler pulls instances from the lazy source
+        // as window slots open — the full selection is never resident.
+        let source = self.source();
+        let mut scheduler = WorkflowScheduler::from_source(source.iter());
+        scheduler.order = self.order;
+        scheduler.window = self.window;
         // Checkpoint restore: completed task keys skip execution.
         let ckpt = Checkpoint::load(&self.db_root)?;
         scheduler.skip_done = ckpt.done_keys.clone();
 
         let report = scheduler.run(executor)?;
 
-        // Persist the checkpoint (old done + newly done).
-        let mut done = ckpt.done_keys;
+        // Persist the checkpoint: re-read the file and union everything —
+        // start-of-run keys, keys another process (a concurrent shard
+        // sharing this db) wrote while we ran, and our newly done tasks.
+        // Shard keys never collide, so the union is exact.
+        let mut merged = Checkpoint::load(&self.db_root)?;
+        merged.merge(&ckpt);
         for r in &report.records {
             if r.ok {
-                done.insert(r.key.clone());
+                merged.done_keys.insert(r.key.clone());
             }
         }
-        Checkpoint { done_keys: done }.save(&self.db_root)?;
+        merged.save(&self.db_root)?;
 
         prov.append_records(&report.records)?;
         prov.write_report(&report, executor.name())?;
@@ -318,6 +402,82 @@ mod tests {
         let report = s.run_mpi(2, 2).unwrap();
         assert_eq!(report.completed, 6);
         assert!(report.records.iter().all(|r| r.worker.contains("@node")));
+    }
+
+    #[test]
+    fn sharded_runs_compose_via_the_checkpoint() {
+        // Split one 6-instance study across 2 "nodes" sharing a file
+        // database; the union of their checkpoints covers everything.
+        let yaml = "job:\n  command: sleep-ms 1\n  v: [1, 2, 3, 4, 5, 6]\n";
+        let s0 = tmp_study("shard0", yaml).shard(0, 2).unwrap();
+        let s1 = Study::from_file(
+            std::env::temp_dir().join("papas_study/shard0/study.yaml"),
+        )
+        .unwrap()
+        .with_db_root(std::env::temp_dir().join("papas_study/shard0/.papas"))
+        .shard(1, 2)
+        .unwrap();
+
+        assert_eq!(s0.n_instances(), 3);
+        assert_eq!(s1.n_instances(), 3);
+        let r0 = s0.run_local(2).unwrap();
+        assert_eq!(r0.completed, 3);
+        let r1 = s1.run_local(2).unwrap();
+        assert_eq!(r1.completed, 3);
+
+        // A whole-study resume restores every task from the combined
+        // checkpoint — shards used global indices, so keys composed.
+        let full = Study::from_file(
+            std::env::temp_dir().join("papas_study/shard0/study.yaml"),
+        )
+        .unwrap()
+        .with_db_root(std::env::temp_dir().join("papas_study/shard0/.papas"));
+        let r = full.run_local(2).unwrap();
+        assert_eq!(r.restored, 6);
+        assert_eq!(r.completed, 0);
+    }
+
+    #[test]
+    fn shard_validation_and_instance_at() {
+        let s = tmp_study(
+            "shardv",
+            "job:\n  command: sleep-ms ${v}\n  v: [1, 2, 3, 4, 5]\n",
+        );
+        assert!(s.shard_config().is_whole());
+        let inst = s.instance_at(3).unwrap();
+        assert_eq!(inst.index, 3);
+        assert!(s.instance_at(5).is_err());
+        let s = s.shard(2, 3).unwrap();
+        // positions 2 of 5 strided by 3: global indices 2, 5? no — 2 then
+        // 2+3=5 is out of range, so exactly one instance: index 2
+        assert_eq!(s.n_instances(), 1);
+        assert_eq!(s.instance_at(0).unwrap().index, 2);
+        assert!(Study::from_file(
+            std::env::temp_dir().join("papas_study/shardv/study.yaml")
+        )
+        .unwrap()
+        .shard(3, 3)
+        .is_err());
+    }
+
+    #[test]
+    fn streaming_run_bounds_open_instances() {
+        let vals: Vec<String> = (0..32).map(|i| i.to_string()).collect();
+        let s = tmp_study(
+            "bounded",
+            &format!(
+                "job:\n  command: sleep-ms 0\n  v: [{}]\n",
+                vals.join(", ")
+            ),
+        );
+        assert_eq!(s.n_instances(), 32);
+        let report = s.run_local(2).unwrap();
+        assert_eq!(report.completed, 32);
+        assert!(
+            report.peak_open <= 2,
+            "streaming window exceeded: {}",
+            report.peak_open
+        );
     }
 
     #[test]

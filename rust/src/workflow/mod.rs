@@ -7,16 +7,24 @@
 //! tasks to an executor; the profiler measures every task's runtime
 //! (§4.2: "a task profiler measures each task's runtime"); provenance
 //! records land in the per-workflow file database.
+//!
+//! Instances flow through the engine as a *stream*: [`source`] holds the
+//! lazy [`InstanceSource`] cursor (and [`Shard`] partitioning) that
+//! materializes instances on demand, and [`scheduler`] admits them into
+//! a bounded in-flight window — the engine never holds the whole
+//! parameter space in memory.
 
 pub mod dag;
 pub mod instance;
 pub mod profiler;
 pub mod provenance;
 pub mod scheduler;
+pub mod source;
 pub mod task;
 
 pub use dag::Dag;
 pub use instance::WorkflowInstance;
 pub use profiler::{Profiler, TaskRecord};
-pub use scheduler::{ExecutionReport, WorkflowScheduler};
+pub use scheduler::{ExecOrder, ExecutionReport, WorkflowScheduler};
+pub use source::{InstanceCursor, InstanceSource, Selection, Shard};
 pub use task::{ConcreteTask, TaskState};

@@ -90,6 +90,7 @@ impl Provenance {
             ("failed".to_string(), Json::from(report.failed)),
             ("skipped".to_string(), Json::from(report.skipped)),
             ("restored".to_string(), Json::from(report.restored)),
+            ("peak_open".to_string(), Json::from(report.peak_open)),
             ("makespan_s".to_string(), Json::Num(report.makespan)),
             ("utilization".to_string(), Json::Num(report.utilization)),
             ("n_records".to_string(), Json::from(report.records.len())),
@@ -160,6 +161,7 @@ mod tests {
             failed: 1,
             skipped: 2,
             restored: 0,
+            peak_open: 3,
             makespan: 1.5,
             utilization: 0.8,
             records: vec![],

@@ -1,22 +1,35 @@
 //! The task manager / scheduler (§4.2: "a task manager controls the
 //! scheduling and monitoring of tasks").
 //!
-//! Feeds ready tasks (dependencies satisfied) from every workflow
-//! instance to an [`Executor`] and reacts to completions: marking states,
-//! releasing dependents, skipping the downstream of failures, recording
-//! profiling data. Scheduling policy (dependency resolution, failure
-//! propagation, checkpoint skips) is entirely here; transport/parallelism
-//! is entirely in the executor — the §4 separation of workflow engine and
-//! cluster engine.
+//! Feeds ready tasks (dependencies satisfied) to an [`Executor`] and
+//! reacts to completions: marking states, releasing dependents, skipping
+//! the downstream of failures, recording profiling data. Scheduling
+//! policy (dependency resolution, failure propagation, checkpoint skips)
+//! is entirely here; transport/parallelism is entirely in the executor —
+//! the §4 separation of workflow engine and cluster engine.
+//!
+//! The scheduler is *streaming*: it pulls [`WorkflowInstance`]s from a
+//! lazy source (see [`super::source::InstanceSource`]) and keeps per-task
+//! state only for the instances currently open — a bounded in-flight
+//! window (executor width for [`ExecOrder::DepthFirst`], a configurable
+//! window for [`ExecOrder::BreadthFirst`]). Peak memory is
+//! O(window × tasks-per-instance), independent of the parameter-space
+//! size, so a 10M-combination study starts its first task immediately.
 
 use super::instance::WorkflowInstance;
 use super::profiler::{Profiler, TaskRecord};
-use super::task::TaskState;
+use super::task::{ConcreteTask, TaskState};
 use crate::exec::{Completion, Executor};
 use crate::util::error::{Error, Result};
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc;
 use std::sync::Arc;
+
+/// Default in-flight instance window for breadth-first order. Breadth
+/// semantics want "every instance progresses in lockstep"; bounding the
+/// lockstep group keeps memory flat on huge studies while preserving the
+/// paper's behavior for any study that fits the window.
+pub const DEFAULT_BREADTH_WINDOW: usize = 1024;
 
 /// Summary of one scheduler run.
 #[derive(Debug, Clone)]
@@ -29,6 +42,9 @@ pub struct ExecutionReport {
     pub skipped: usize,
     /// Tasks satisfied from the checkpoint without running.
     pub restored: usize,
+    /// Peak number of simultaneously open (materialized, non-terminal)
+    /// workflow instances — the streaming residency bound.
+    pub peak_open: usize,
     /// End-to-end makespan in seconds.
     pub makespan: f64,
     /// Mean worker utilization (busy / (makespan × workers)).
@@ -50,34 +66,88 @@ impl ExecutionReport {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecOrder {
     /// Instance-major: wf-0's ready tasks before wf-1's — workflow
-    /// instances tend to *complete* early (first results sooner).
+    /// instances tend to *complete* early (first results sooner). The
+    /// window is the executor's worker count.
     #[default]
     DepthFirst,
-    /// Task-major: every instance's first ready task, then the seconds —
-    /// instances progress in lockstep (uniform partial coverage of the
-    /// parameter space early).
+    /// Task-major: every open instance's first ready task, then the
+    /// seconds — instances progress in lockstep (uniform partial coverage
+    /// of the parameter space early), within a sliding window of
+    /// [`DEFAULT_BREADTH_WINDOW`] instances (override via `window`).
     BreadthFirst,
 }
 
-/// Scheduler over a set of materialized workflow instances.
+/// One open instance's scheduling state. Created when the instance is
+/// admitted from the source, dropped the moment its last task reaches a
+/// terminal state — this struct is the entirety of per-instance memory.
+struct OpenInstance {
+    inst: WorkflowInstance,
+    state: Vec<TaskState>,
+    unmet: Vec<usize>,
+    /// Non-terminal tasks left; 0 means the instance is finished.
+    remaining: usize,
+}
+
+impl OpenInstance {
+    fn new(inst: WorkflowInstance) -> OpenInstance {
+        let n = inst.tasks.len();
+        let unmet = (0..n).map(|i| inst.dag.dependencies(i).len()).collect();
+        OpenInstance {
+            inst,
+            state: vec![TaskState::Pending; n],
+            unmet,
+            remaining: n,
+        }
+    }
+}
+
+/// Running tallies across the whole run.
+#[derive(Default)]
+struct Tally {
+    completed: usize,
+    failed: usize,
+    skipped: usize,
+    restored: usize,
+    peak_open: usize,
+}
+
+/// Scheduler over a stream of workflow instances.
+///
+/// Construct with [`WorkflowScheduler::from_source`] for streaming
+/// (bounded-memory) operation, or [`WorkflowScheduler::new`] over a
+/// materialized slice (tests, small embeddings).
 pub struct WorkflowScheduler<'a> {
-    instances: &'a [WorkflowInstance],
+    source: Box<dyn Iterator<Item = Result<WorkflowInstance>> + 'a>,
     profiler: Arc<Profiler>,
     /// Task keys (`task_id#instance`) already completed in a previous run
     /// (checkpoint restore): satisfied immediately, never re-executed.
     pub skip_done: BTreeSet<String>,
     /// Feed order across instances.
     pub order: ExecOrder,
+    /// Explicit in-flight instance window; `None` picks the policy
+    /// default (executor workers for depth-first,
+    /// [`DEFAULT_BREADTH_WINDOW`] for breadth-first).
+    pub window: Option<usize>,
 }
 
 impl<'a> WorkflowScheduler<'a> {
-    /// New scheduler (depth-first order).
+    /// Scheduler over an already-materialized slice (depth-first order).
     pub fn new(instances: &'a [WorkflowInstance]) -> Self {
+        Self::from_source(instances.iter().cloned().map(Ok))
+    }
+
+    /// Scheduler pulling lazily from `source` (depth-first order). The
+    /// source is consumed incrementally: an instance is materialized only
+    /// when the window has room for it.
+    pub fn from_source(
+        source: impl Iterator<Item = Result<WorkflowInstance>> + 'a,
+    ) -> Self {
         WorkflowScheduler {
-            instances,
+            source: Box::new(source),
             profiler: Arc::new(Profiler::new()),
             skip_done: BTreeSet::new(),
             order: ExecOrder::DepthFirst,
+            window: None,
         }
     }
 
@@ -86,186 +156,160 @@ impl<'a> WorkflowScheduler<'a> {
         self.profiler.clone()
     }
 
-    /// Execute everything on `executor`; blocks until all tasks reach a
-    /// terminal state.
-    pub fn run(&self, executor: &dyn Executor) -> Result<ExecutionReport> {
-        // Flat task addressing: (instance idx, node idx) → global id.
-        let mut offsets = Vec::with_capacity(self.instances.len());
-        let mut total = 0usize;
-        for inst in self.instances {
-            offsets.push(total);
-            total += inst.tasks.len();
+    /// Release dependents of terminal `node`; returns tasks to send.
+    /// Failure cascades transitively mark dependents skipped; restored
+    /// (checkpointed) dependents release recursively.
+    fn release(
+        &self,
+        open: &mut OpenInstance,
+        node: usize,
+        ok: bool,
+        tally: &mut Tally,
+    ) -> Vec<ConcreteTask> {
+        let mut to_send = Vec::new();
+        let mut stack: Vec<(usize, bool)> = open
+            .inst
+            .dag
+            .dependents(node)
+            .iter()
+            .map(|&d| (d, ok))
+            .collect();
+        while let Some((d, parent_ok)) = stack.pop() {
+            if open.state[d].is_terminal() {
+                continue;
+            }
+            if !parent_ok {
+                // Failure cascades: skip this and its subtree.
+                open.state[d] = TaskState::Skipped;
+                tally.skipped += 1;
+                open.remaining -= 1;
+                let t = &open.inst.tasks[d];
+                self.profiler.record(TaskRecord {
+                    key: t.key(),
+                    task_id: t.task_id.clone(),
+                    instance: t.instance,
+                    start: self.profiler.now(),
+                    end: self.profiler.now(),
+                    worker: "-".into(),
+                    ok: false,
+                });
+                stack.extend(
+                    open.inst.dag.dependents(d).iter().map(|&x| (x, false)),
+                );
+                continue;
+            }
+            open.unmet[d] -= 1;
+            if open.unmet[d] == 0 {
+                if self.skip_done.contains(&open.inst.tasks[d].key()) {
+                    open.state[d] = TaskState::Done;
+                    tally.restored += 1;
+                    open.remaining -= 1;
+                    stack.extend(
+                        open.inst.dag.dependents(d).iter().map(|&x| (x, true)),
+                    );
+                } else {
+                    open.state[d] = TaskState::Ready;
+                    to_send.push(open.inst.tasks[d].clone());
+                }
+            }
         }
-        let gid = |wi: usize, node: usize| offsets[wi] + node;
+        to_send
+    }
 
-        let mut state = vec![TaskState::Pending; total];
-        let mut unmet = vec![0usize; total];
-        // Non-terminal tasks left per instance (drives DFS opening).
-        let mut remaining: Vec<usize> =
-            self.instances.iter().map(|i| i.tasks.len()).collect();
-        let mut restored = 0usize;
+    /// Seed a freshly admitted instance: mark dependency-free tasks ready
+    /// (or restore them from the checkpoint, cascading); returns tasks to
+    /// send.
+    fn seed(&self, open: &mut OpenInstance, tally: &mut Tally) -> Vec<ConcreteTask> {
+        let mut sends = Vec::new();
+        for node in 0..open.inst.tasks.len() {
+            if open.unmet[node] != 0 || open.state[node] != TaskState::Pending {
+                continue;
+            }
+            if self.skip_done.contains(&open.inst.tasks[node].key()) {
+                open.state[node] = TaskState::Done;
+                tally.restored += 1;
+                open.remaining -= 1;
+                sends.extend(self.release(open, node, true, tally));
+            } else {
+                open.state[node] = TaskState::Ready;
+                sends.push(open.inst.tasks[node].clone());
+            }
+        }
+        sends
+    }
+
+    /// Execute everything on `executor`; blocks until all tasks reach a
+    /// terminal state. Instances are admitted incrementally: at most
+    /// `window` are open (materialized) at any moment.
+    pub fn run(&mut self, executor: &dyn Executor) -> Result<ExecutionReport> {
+        let window = self
+            .window
+            .unwrap_or(match self.order {
+                ExecOrder::DepthFirst => executor.workers(),
+                ExecOrder::BreadthFirst => DEFAULT_BREADTH_WINDOW,
+            })
+            .max(1);
 
         let (ready_tx, ready_rx) = mpsc::channel();
         let (done_tx, done_rx) = mpsc::channel::<Completion>();
-
-        for (wi, inst) in self.instances.iter().enumerate() {
-            for node in 0..inst.tasks.len() {
-                unmet[gid(wi, node)] = inst.dag.dependencies(node).len();
-            }
-        }
-
-        // §9 execution order: BreadthFirst opens every instance up front
-        // (lockstep progress); DepthFirst opens at most `workers`
-        // instances and admits the next only when one fully terminates —
-        // early instances complete before late ones begin.
-        let open_limit = match self.order {
-            ExecOrder::DepthFirst => executor.workers().max(1),
-            ExecOrder::BreadthFirst => self.instances.len(),
-        };
 
         let report = std::thread::scope(|s| -> Result<ExecutionReport> {
             // The executor drains ready_rx on its own threads.
             let exec_handle = s.spawn(move || executor.run_all(ready_rx, done_tx));
 
-            let mut completed = 0usize;
-            let mut failed = 0usize;
-            let mut skipped = 0usize;
+            // Open instances, keyed by global combination index. This map
+            // is the only instance storage in the whole run.
+            let mut open: BTreeMap<u64, OpenInstance> = BTreeMap::new();
+            let mut tally = Tally::default();
             let mut in_flight = 0usize;
-            let mut next_to_open = 0usize;
-            let mut open_active = 0usize;
+            let mut source_dry = false;
 
-            // Release dependents of a completed node; returns tasks to send.
-            let mut release =
-                |wi: usize,
-                 node: usize,
-                 ok: bool,
-                 state: &mut Vec<TaskState>,
-                 unmet: &mut Vec<usize>,
-                 remaining: &mut Vec<usize>,
-                 restored: &mut usize|
-                 -> Vec<super::task::ConcreteTask> {
-                    let inst = &self.instances[wi];
-                    let mut to_send = Vec::new();
-                    let mut stack: Vec<(usize, bool)> = inst
-                        .dag
-                        .dependents(node)
-                        .iter()
-                        .map(|&d| (d, ok))
-                        .collect();
-                    while let Some((d, parent_ok)) = stack.pop() {
-                        let g = gid(wi, d);
-                        if state[g].is_terminal() {
-                            continue;
-                        }
-                        if !parent_ok {
-                            // Failure cascades: skip this and its subtree.
-                            state[g] = TaskState::Skipped;
-                            skipped += 1;
-                            remaining[wi] -= 1;
-                            let t = &inst.tasks[d];
-                            self.profiler.record(TaskRecord {
-                                key: t.key(),
-                                task_id: t.task_id.clone(),
-                                instance: t.instance,
-                                start: self.profiler.now(),
-                                end: self.profiler.now(),
-                                worker: "-".into(),
-                                ok: false,
-                            });
-                            stack.extend(
-                                inst.dag.dependents(d).iter().map(|&x| (x, false)),
-                            );
-                            continue;
-                        }
-                        unmet[g] -= 1;
-                        if unmet[g] == 0 {
-                            if self.skip_done.contains(&inst.tasks[d].key()) {
-                                state[g] = TaskState::Done;
-                                *restored += 1;
-                                remaining[wi] -= 1;
-                                // restored deps release recursively
-                                stack.extend(
-                                    inst.dag.dependents(d).iter().map(|&x| (x, true)),
-                                );
-                            } else {
-                                state[g] = TaskState::Ready;
-                                to_send.push(inst.tasks[d].clone());
-                            }
-                        }
+            loop {
+                // Admission: top the window up from the lazy source.
+                // Fully-restored instances pass through without counting
+                // against the window.
+                while !source_dry && open.len() < window {
+                    let Some(next) = self.source.next() else {
+                        source_dry = true;
+                        break;
+                    };
+                    let mut o = OpenInstance::new(next?);
+                    let sends = self.seed(&mut o, &mut tally);
+                    let index = o.inst.index;
+                    if o.remaining > 0 {
+                        open.insert(index, o);
+                        tally.peak_open = tally.peak_open.max(open.len());
                     }
-                    to_send
-                };
-
-            // Admission loop: open instances up to the limit, seeding
-            // each one's dependency-free tasks (restore cascades run
-            // through `release` for checkpointed roots).
-            macro_rules! admit {
-                () => {
-                    while open_active < open_limit
-                        && next_to_open < self.instances.len()
-                    {
-                        let wi = next_to_open;
-                        next_to_open += 1;
-                        let inst = &self.instances[wi];
-                        let mut sends = Vec::new();
-                        for node in 0..inst.tasks.len() {
-                            let g = gid(wi, node);
-                            if unmet[g] != 0 || state[g] != TaskState::Pending {
-                                continue;
-                            }
-                            if self.skip_done.contains(&inst.tasks[node].key()) {
-                                state[g] = TaskState::Done;
-                                restored += 1;
-                                remaining[wi] -= 1;
-                                sends.extend(release(
-                                    wi, node, true, &mut state, &mut unmet,
-                                    &mut remaining, &mut restored,
-                                ));
-                            } else {
-                                state[g] = TaskState::Ready;
-                                sends.push(inst.tasks[node].clone());
-                            }
-                        }
-                        if remaining[wi] > 0 {
-                            open_active += 1;
-                        }
-                        for t in sends {
-                            ready_tx.send(t).map_err(|_| {
-                                Error::Workflow("executor hung up".into())
-                            })?;
-                            in_flight += 1;
-                        }
+                    for t in sends {
+                        ready_tx.send(t).map_err(|_| {
+                            Error::Workflow("executor hung up".into())
+                        })?;
+                        in_flight += 1;
                     }
-                };
-            }
-            admit!();
+                }
 
-            // Main completion loop.
-            while in_flight > 0 {
-                let (task, result) = done_rx
-                    .recv()
-                    .map_err(|_| Error::Workflow("executor dropped done channel".into()))?;
+                if in_flight == 0 {
+                    break;
+                }
+
+                // React to one completion.
+                let (task, result) = done_rx.recv().map_err(|_| {
+                    Error::Workflow("executor dropped done channel".into())
+                })?;
                 in_flight -= 1;
-                let wi = self
-                    .instances
-                    .iter()
-                    .position(|i| i.index == task.instance)
-                    .ok_or_else(|| {
-                        Error::Workflow(format!("unknown instance {}", task.instance))
-                    })?;
-                let node = self.instances[wi]
-                    .dag
-                    .index_of(&task.task_id)
-                    .ok_or_else(|| {
-                        Error::Workflow(format!("unknown task '{}'", task.task_id))
-                    })?;
-                let g = gid(wi, node);
-                state[g] = if result.ok { TaskState::Done } else { TaskState::Failed };
-                remaining[wi] -= 1;
+                let o = open.get_mut(&task.instance).ok_or_else(|| {
+                    Error::Workflow(format!("unknown instance {}", task.instance))
+                })?;
+                let node = o.inst.dag.index_of(&task.task_id).ok_or_else(|| {
+                    Error::Workflow(format!("unknown task '{}'", task.task_id))
+                })?;
+                o.state[node] =
+                    if result.ok { TaskState::Done } else { TaskState::Failed };
+                o.remaining -= 1;
                 if result.ok {
-                    completed += 1;
+                    tally.completed += 1;
                 } else {
-                    failed += 1;
+                    tally.failed += 1;
                 }
                 let end = self.profiler.now();
                 self.profiler.record(TaskRecord {
@@ -277,18 +321,18 @@ impl<'a> WorkflowScheduler<'a> {
                     worker: result.worker.clone(),
                     ok: result.ok,
                 });
-                for t in release(
-                    wi, node, result.ok, &mut state, &mut unmet,
-                    &mut remaining, &mut restored,
-                ) {
+                let sends = self.release(o, node, result.ok, &mut tally);
+                let finished = o.remaining == 0;
+                for t in sends {
                     ready_tx
                         .send(t)
                         .map_err(|_| Error::Workflow("executor hung up".into()))?;
                     in_flight += 1;
                 }
-                if remaining[wi] == 0 {
-                    open_active -= 1;
-                    admit!();
+                if finished {
+                    // Drop the instance's state immediately — the window
+                    // slot is reused by the admission loop above.
+                    open.remove(&task.instance);
                 }
             }
             drop(ready_tx); // executor drains and exits
@@ -297,10 +341,11 @@ impl<'a> WorkflowScheduler<'a> {
                 .map_err(|_| Error::Workflow("executor panicked".into()))??;
 
             Ok(ExecutionReport {
-                completed,
-                failed,
-                skipped,
-                restored,
+                completed: tally.completed,
+                failed: tally.failed,
+                skipped: tally.skipped,
+                restored: tally.restored,
+                peak_open: tally.peak_open,
                 makespan: self.profiler.makespan(),
                 utilization: self.profiler.utilization(),
                 records: self.profiler.snapshot(),
@@ -316,9 +361,9 @@ mod tests {
     use super::*;
     use crate::exec::local::LocalPool;
     use crate::exec::runner::{RunConfig, TaskRunner};
+    use crate::params::{Param, Space};
     use crate::tasks::Builtins;
     use crate::wdl::{parse_str, Format, StudySpec};
-    use crate::params::{Param, Space};
 
     fn instances_for(yaml: &str, limit: u64) -> Vec<WorkflowInstance> {
         let study =
@@ -368,7 +413,7 @@ mod tests {
             64,
         );
         assert_eq!(instances.len(), 4);
-        let sched = WorkflowScheduler::new(&instances);
+        let mut sched = WorkflowScheduler::new(&instances);
         let report = sched.run(&pool(2, "sweep")).unwrap();
         assert_eq!(report.completed, 4);
         assert!(report.all_ok());
@@ -382,7 +427,7 @@ mod tests {
             "a:\n  command: sleep-ms 5\nb:\n  command: sleep-ms 1\n  after: a\n",
             1,
         );
-        let sched = WorkflowScheduler::new(&instances);
+        let mut sched = WorkflowScheduler::new(&instances);
         let report = sched.run(&pool(2, "deps")).unwrap();
         assert_eq!(report.completed, 2);
         let recs = &report.records;
@@ -397,7 +442,7 @@ mod tests {
             "bad:\n  command: sleep-ms\nmid:\n  command: sleep-ms 1\n  after: bad\nleaf:\n  command: sleep-ms 1\n  after: mid\nfree:\n  command: sleep-ms 1\n",
             1,
         );
-        let sched = WorkflowScheduler::new(&instances);
+        let mut sched = WorkflowScheduler::new(&instances);
         let report = sched.run(&pool(2, "fail")).unwrap();
         assert_eq!(report.failed, 1);
         assert_eq!(report.skipped, 2);
@@ -456,7 +501,7 @@ mod tests {
             "a:\n  command: sleep-ms ${v}\n  v: [0, 0, 0]\nb:\n  command: sleep-ms 0\n  after: a\n",
             3,
         );
-        let sched = WorkflowScheduler::new(&instances); // default DFS
+        let mut sched = WorkflowScheduler::new(&instances); // default DFS
         let report = sched.run(&pool(1, "dfs")).unwrap();
         assert_eq!(report.completed, 6);
         // instance 0's b finishes before instance 2's a starts
@@ -485,5 +530,78 @@ mod tests {
         assert_eq!(report.restored, 1);
         assert_eq!(report.completed, 0);
         assert_eq!(report.records.len(), 0);
+    }
+
+    #[test]
+    fn streaming_residency_is_bounded_by_the_window() {
+        // 64 instances through 2 workers: depth-first keeps at most 2
+        // instances materialized at any moment.
+        let vals = (0..64).map(|_| "0").collect::<Vec<_>>().join(", ");
+        let instances = instances_for(
+            &format!("job:\n  command: sleep-ms ${{ms}}\n  ms: [{vals}]\n"),
+            1000,
+        );
+        assert_eq!(instances.len(), 64);
+        let mut sched = WorkflowScheduler::new(&instances);
+        let report = sched.run(&pool(2, "window")).unwrap();
+        assert_eq!(report.completed, 64);
+        assert!(
+            report.peak_open <= 2,
+            "peak_open {} exceeds the 2-worker window",
+            report.peak_open
+        );
+    }
+
+    #[test]
+    fn explicit_window_caps_breadth_first() {
+        let instances = instances_for(
+            "a:\n  command: sleep-ms ${v}\n  v: [0, 0, 0, 0, 0, 0]\n",
+            1000,
+        );
+        assert_eq!(instances.len(), 6);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.order = ExecOrder::BreadthFirst;
+        sched.window = Some(2);
+        let report = sched.run(&pool(1, "bfswin")).unwrap();
+        assert_eq!(report.completed, 6);
+        assert!(report.peak_open <= 2, "peak_open {}", report.peak_open);
+    }
+
+    #[test]
+    fn streaming_source_errors_propagate() {
+        let good = instances_for("a:\n  command: sleep-ms 0\n", 1);
+        let source = good
+            .into_iter()
+            .map(Ok)
+            .chain(std::iter::once(Err(Error::Workflow("boom".into()))));
+        let mut sched = WorkflowScheduler::from_source(source);
+        assert!(sched.run(&pool(1, "srcerr")).is_err());
+    }
+
+    #[test]
+    fn from_source_streams_without_a_vec() {
+        // Build instances on the fly — no backing Vec anywhere.
+        let study = StudySpec::from_doc(
+            &parse_str("job:\n  command: sleep-ms ${ms}\n  ms: [0, 1]\n", Format::Yaml)
+                .unwrap(),
+        )
+        .unwrap();
+        let mut params: Vec<Param> = Vec::new();
+        for t in &study.tasks {
+            for p in t.local_params() {
+                params.push(Param {
+                    name: format!("{}:{}", t.id, p.name),
+                    values: p.values,
+                });
+            }
+        }
+        let space = Space::cartesian(params).unwrap();
+        let source = (0..space.len()).map(|i| {
+            WorkflowInstance::materialize(&study, i, space.combination(i)?)
+        });
+        let mut sched = WorkflowScheduler::from_source(source);
+        let report = sched.run(&pool(2, "stream")).unwrap();
+        assert_eq!(report.completed, 2);
+        assert!(report.all_ok());
     }
 }

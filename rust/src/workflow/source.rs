@@ -1,0 +1,380 @@
+//! Lazy instance materialization: the streaming spine between the
+//! parameter engine and the scheduler.
+//!
+//! The seed engine materialized the *entire* Cartesian product into a
+//! `Vec<WorkflowInstance>` before the first task ran, so memory scaled
+//! with N_W and a 10M-combination study died before scheduling started.
+//! [`InstanceSource`] replaces that: a cursor over the study's selected
+//! combination indices that decodes each [`WorkflowInstance`] on demand
+//! via [`Space::combination`]'s mixed-radix index addressing. Peak
+//! residency is now bounded by the scheduler's in-flight window, not by
+//! the parameter space.
+//!
+//! [`Shard`] partitions the same index stream deterministically
+//! (positions `i, i+n, i+2n, …` of the selection), so independent nodes
+//! can split one study with `papas run --shard I/N` and zero
+//! coordination. Instances keep their *global* combination indices under
+//! sharding, which means checkpoint keys (`task_id#instance`) from
+//! different shards never collide and compose by plain union.
+
+use super::instance::WorkflowInstance;
+use crate::params::Space;
+use crate::util::error::{Error, Result};
+use crate::wdl::StudySpec;
+
+/// Which combination indices of a [`Space`] a study will run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Selection {
+    /// Every combination: indices `0..total`. O(1) storage regardless of
+    /// the space size — the common (unsampled) case.
+    All {
+        /// Total combination count of the space.
+        total: u64,
+    },
+    /// An explicit sorted list of distinct indices (sampling applied).
+    Explicit(Vec<u64>),
+}
+
+impl Selection {
+    /// Number of selected indices.
+    pub fn len(&self) -> u64 {
+        match self {
+            Selection::All { total } => *total,
+            Selection::Explicit(v) => v.len() as u64,
+        }
+    }
+
+    /// True when nothing is selected.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The global combination index at selection position `pos`.
+    pub fn index_at(&self, pos: u64) -> Option<u64> {
+        match self {
+            Selection::All { total } => (pos < *total).then_some(pos),
+            Selection::Explicit(v) => v.get(pos as usize).copied(),
+        }
+    }
+
+    /// Iterate the selected global indices in order.
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.iter_shard(Shard::default())
+    }
+
+    /// Iterate the global indices belonging to `shard`: selection
+    /// positions `shard.index, shard.index + shard.count, …`.
+    pub fn iter_shard(&self, shard: Shard) -> impl Iterator<Item = u64> + '_ {
+        let len = self.len();
+        (shard.index..len)
+            .step_by(shard.count.max(1) as usize)
+            .map(move |pos| {
+                self.index_at(pos)
+                    .expect("position < selection length is addressable")
+            })
+    }
+
+    /// Number of indices in `shard` of this selection.
+    pub fn shard_len(&self, shard: Shard) -> u64 {
+        let len = self.len();
+        let step = shard.count.max(1);
+        if shard.index >= len {
+            0
+        } else {
+            (len - shard.index + step - 1) / step
+        }
+    }
+}
+
+/// A deterministic 1-of-N slice of a selection (strided over selection
+/// positions). `Shard::default()` is the whole selection (`0/1`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// This shard's number, `0 <= index < count`.
+    pub index: u64,
+    /// Total number of shards.
+    pub count: u64,
+}
+
+impl Default for Shard {
+    fn default() -> Self {
+        Shard { index: 0, count: 1 }
+    }
+}
+
+impl Shard {
+    /// Validated constructor: `count >= 1`, `index < count`.
+    pub fn new(index: u64, count: u64) -> Result<Shard> {
+        if count == 0 {
+            return Err(Error::Params("shard count must be >= 1".into()));
+        }
+        if index >= count {
+            return Err(Error::Params(format!(
+                "shard index {index} out of range (count {count})"
+            )));
+        }
+        Ok(Shard { index, count })
+    }
+
+    /// Parse the CLI form `I/N` (e.g. `--shard 2/8`).
+    pub fn parse(text: &str) -> Result<Shard> {
+        let usage = "expected I/N with 0 <= I < N, e.g. --shard 2/8";
+        let (i, n) = text
+            .split_once('/')
+            .ok_or_else(|| Error::Params(format!("bad shard '{text}': {usage}")))?;
+        let index: u64 = i.trim().parse().map_err(|_| {
+            Error::Params(format!("bad shard index '{i}': {usage}"))
+        })?;
+        let count: u64 = n.trim().parse().map_err(|_| {
+            Error::Params(format!("bad shard count '{n}': {usage}"))
+        })?;
+        Shard::new(index, count)
+    }
+
+    /// True when this is the whole-study shard `0/1`.
+    pub fn is_whole(&self) -> bool {
+        self.count == 1
+    }
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// A lazy, index-addressable source of workflow instances: the study's
+/// spec + space + selection (+ shard), materializing one instance per
+/// request. Copyable — it borrows the study, holds no instance state.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceSource<'a> {
+    spec: &'a StudySpec,
+    space: &'a Space,
+    selection: &'a Selection,
+    shard: Shard,
+}
+
+impl<'a> InstanceSource<'a> {
+    /// New source over `selection` of `space`, restricted to `shard`.
+    pub fn new(
+        spec: &'a StudySpec,
+        space: &'a Space,
+        selection: &'a Selection,
+        shard: Shard,
+    ) -> InstanceSource<'a> {
+        InstanceSource { spec, space, selection, shard }
+    }
+
+    /// Number of instances this source will yield (post-shard).
+    pub fn len(&self) -> u64 {
+        self.selection.shard_len(self.shard)
+    }
+
+    /// True when the source yields nothing.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The shard this source is restricted to.
+    pub fn shard(&self) -> Shard {
+        self.shard
+    }
+
+    /// Global combination index of the `pos`-th instance of this source.
+    pub fn global_index(&self, pos: u64) -> Option<u64> {
+        if pos >= self.len() {
+            return None;
+        }
+        self.selection
+            .index_at(self.shard.index + pos * self.shard.count)
+    }
+
+    /// Materialize the `pos`-th instance of this source — and nothing
+    /// else. O(#params) per call, independent of the space size.
+    pub fn get(&self, pos: u64) -> Result<WorkflowInstance> {
+        let index = self.global_index(pos).ok_or_else(|| {
+            Error::Params(format!(
+                "instance {pos} out of range ({} instances)",
+                self.len()
+            ))
+        })?;
+        WorkflowInstance::materialize(
+            self.spec,
+            index,
+            self.space.combination(index)?,
+        )
+    }
+
+    /// Streaming cursor over every instance of this source, in
+    /// selection order.
+    pub fn iter(&self) -> InstanceCursor<'a> {
+        InstanceCursor { source: *self, next: 0, end: self.len() }
+    }
+}
+
+/// The iterator behind [`InstanceSource::iter`]: materializes instances
+/// one at a time; dropping it early costs nothing.
+#[derive(Debug, Clone)]
+pub struct InstanceCursor<'a> {
+    source: InstanceSource<'a>,
+    next: u64,
+    end: u64,
+}
+
+impl Iterator for InstanceCursor<'_> {
+    type Item = Result<WorkflowInstance>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.next >= self.end {
+            return None;
+        }
+        let item = self.source.get(self.next);
+        self.next += 1;
+        Some(item)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = (self.end - self.next) as usize;
+        (n, Some(n))
+    }
+
+    fn nth(&mut self, n: usize) -> Option<Self::Item> {
+        // O(1) skip: the cursor is index-addressed, no decoding needed
+        // (clamped so `len()` never underflows)
+        self.next = self.next.saturating_add(n as u64).min(self.end);
+        self.next()
+    }
+}
+
+impl ExactSizeIterator for InstanceCursor<'_> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Param;
+    use crate::wdl::{parse_str, Format};
+    use std::collections::BTreeSet;
+
+    fn fig5() -> (StudySpec, Space) {
+        let doc = parse_str(
+            "matmulOMP:\n  environ:\n    OMP_NUM_THREADS:\n      - 1:8\n  args:\n    size:\n      - 16:*2:16384\n  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let spec = StudySpec::from_doc(&doc).unwrap();
+        let mut params: Vec<Param> = Vec::new();
+        for t in &spec.tasks {
+            for p in t.local_params() {
+                params.push(Param {
+                    name: format!("{}:{}", t.id, p.name),
+                    values: p.values,
+                });
+            }
+        }
+        let space = Space::cartesian(params).unwrap();
+        (spec, space)
+    }
+
+    #[test]
+    fn streams_fig6_88_instances_lazily() {
+        let (spec, space) = fig5();
+        let sel = Selection::All { total: space.len() };
+        let src = InstanceSource::new(&spec, &space, &sel, Shard::default());
+        assert_eq!(src.len(), 88);
+        let mut seen = BTreeSet::new();
+        for (i, inst) in src.iter().enumerate() {
+            let inst = inst.unwrap();
+            assert_eq!(inst.index, i as u64);
+            seen.insert(inst.command_lines()[0].clone());
+        }
+        assert_eq!(seen.len(), 88);
+        assert!(seen.contains("matmul 16 result_16N_1T.txt"));
+        assert!(seen.contains("matmul 16384 result_16384N_8T.txt"));
+    }
+
+    #[test]
+    fn get_materializes_only_the_requested_index() {
+        let (spec, space) = fig5();
+        let sel = Selection::All { total: space.len() };
+        let src = InstanceSource::new(&spec, &space, &sel, Shard::default());
+        let inst = src.get(87).unwrap();
+        assert_eq!(inst.index, 87);
+        assert!(src.get(88).is_err());
+    }
+
+    #[test]
+    fn shards_partition_exactly() {
+        let (spec, space) = fig5();
+        let sel = Selection::All { total: space.len() };
+        for n in [1u64, 2, 3, 7, 88, 100] {
+            let mut union = BTreeSet::new();
+            let mut total = 0u64;
+            for i in 0..n {
+                let shard = Shard::new(i, n).unwrap();
+                let src = InstanceSource::new(&spec, &space, &sel, shard);
+                total += src.len();
+                for pos in 0..src.len() {
+                    let idx = src.global_index(pos).unwrap();
+                    assert!(union.insert(idx), "shard overlap at index {idx}");
+                }
+            }
+            assert_eq!(total, 88, "{n} shards must cover exactly once");
+            assert_eq!(union.len(), 88);
+        }
+    }
+
+    #[test]
+    fn sharded_instances_keep_global_indices() {
+        let (spec, space) = fig5();
+        let sel = Selection::All { total: space.len() };
+        let shard = Shard::new(1, 4).unwrap();
+        let src = InstanceSource::new(&spec, &space, &sel, shard);
+        let first = src.get(0).unwrap();
+        assert_eq!(first.index, 1, "shard 1/4 starts at global index 1");
+        let second = src.get(1).unwrap();
+        assert_eq!(second.index, 5, "strided by 4");
+    }
+
+    #[test]
+    fn explicit_selection_shards_over_positions() {
+        let sel = Selection::Explicit(vec![3, 10, 20, 40, 77]);
+        assert_eq!(sel.len(), 5);
+        let a: Vec<u64> = sel.iter_shard(Shard::new(0, 2).unwrap()).collect();
+        let b: Vec<u64> = sel.iter_shard(Shard::new(1, 2).unwrap()).collect();
+        assert_eq!(a, vec![3, 20, 77]);
+        assert_eq!(b, vec![10, 40]);
+        assert_eq!(sel.shard_len(Shard::new(0, 2).unwrap()), 3);
+        assert_eq!(sel.shard_len(Shard::new(1, 2).unwrap()), 2);
+    }
+
+    #[test]
+    fn shard_parse_and_validate() {
+        assert_eq!(Shard::parse("2/8").unwrap(), Shard { index: 2, count: 8 });
+        assert_eq!(Shard::parse("0/1").unwrap(), Shard::default());
+        assert!(Shard::parse("8/8").is_err());
+        assert!(Shard::parse("1/0").is_err());
+        assert!(Shard::parse("x/2").is_err());
+        assert!(Shard::parse("3").is_err());
+        assert_eq!(format!("{}", Shard::new(2, 8).unwrap()), "2/8");
+        assert!(Shard::default().is_whole());
+    }
+
+    #[test]
+    fn cursor_nth_skips_without_decoding() {
+        let (spec, space) = fig5();
+        let sel = Selection::All { total: space.len() };
+        let src = InstanceSource::new(&spec, &space, &sel, Shard::default());
+        let mut it = src.iter();
+        let inst = it.nth(50).unwrap().unwrap();
+        assert_eq!(inst.index, 50);
+        assert_eq!(it.len(), 37); // 88 - 51
+    }
+
+    #[test]
+    fn empty_shard_tail() {
+        let sel = Selection::Explicit(vec![1, 2]);
+        // 5 shards over 2 positions: shards 2..5 are empty
+        assert_eq!(sel.shard_len(Shard::new(4, 5).unwrap()), 0);
+        assert_eq!(sel.iter_shard(Shard::new(4, 5).unwrap()).count(), 0);
+    }
+}

@@ -4,12 +4,23 @@
 
 use papas::cluster::{BatchJob, ClusterSim, Regime, SimConfig};
 use papas::params::{Param, Sampling, Space};
+use papas::study::Study;
 use papas::util::proptest::{check, Gen};
 use papas::wdl::interp::Interpolator;
 use papas::wdl::range;
-use papas::workflow::Dag;
+use papas::wdl::{parse_str, Format};
+use papas::workflow::{Dag, Selection, Shard, WorkflowInstance};
 use papas::{ini, yamlite};
 use std::collections::BTreeSet;
+
+/// The paper's Figure 5 study (88 instances in Figure 6) — the anchor
+/// case for streaming/sharding equivalence.
+const FIG5_YAML: &str = "matmulOMP:\n  environ:\n    OMP_NUM_THREADS:\n      - 1:8\n  args:\n    size:\n      - 16:*2:16384\n  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt\n";
+
+fn fig5_study() -> Study {
+    let doc = parse_str(FIG5_YAML, Format::Yaml).unwrap();
+    Study::from_doc("fig6".into(), doc, std::env::temp_dir()).unwrap()
+}
 
 fn arb_params(g: &mut Gen, max_params: usize, max_values: usize) -> Vec<Param> {
     let n = g.usize(1..=max_params);
@@ -76,6 +87,101 @@ fn prop_sampling_is_subset_and_within_bounds() {
         }
         assert!(idx.iter().all(|&i| i < space.len()));
     });
+}
+
+#[test]
+fn prop_shards_partition_selection() {
+    check("∪ shard(i,n) == selection; shards pairwise disjoint", 60, |g| {
+        let params = arb_params(g, 3, 5);
+        let space = Space::cartesian(params).unwrap();
+        let selection = if g.bool(0.5) {
+            Selection::All { total: space.len() }
+        } else {
+            let k = g.usize(1..=20) as u64;
+            Selection::Explicit(
+                Sampling::Random { count: k, seed: g.i64(0..=999) as u64 }
+                    .indices(&space),
+            )
+        };
+        let full: BTreeSet<u64> = selection.iter().collect();
+        let n = g.usize(1..=6) as u64;
+        let mut merged: Vec<u64> = Vec::new();
+        for i in 0..n {
+            let shard = Shard::new(i, n).unwrap();
+            let part: Vec<u64> = selection.iter_shard(shard).collect();
+            assert_eq!(
+                part.len() as u64,
+                selection.shard_len(shard),
+                "shard_len disagrees with the iterator"
+            );
+            merged.extend(part);
+        }
+        assert_eq!(merged.len() as u64, selection.len(), "shards must cover");
+        let merged_set: BTreeSet<u64> = merged.iter().copied().collect();
+        assert_eq!(merged_set.len(), merged.len(), "shards overlap");
+        assert_eq!(merged_set, full, "union differs from the selection");
+    });
+}
+
+#[test]
+fn prop_streaming_cursor_equals_index_addressing() {
+    check("space cursor yields combination(i) for every i", 40, |g| {
+        let params = arb_params(g, 3, 5);
+        let space = Space::cartesian(params).unwrap();
+        let mut count = 0u64;
+        for (i, c) in space.combinations().enumerate() {
+            assert_eq!(space.combination(i as u64).unwrap(), c);
+            count += 1;
+        }
+        assert_eq!(count, space.len());
+    });
+}
+
+#[test]
+fn streamed_enumeration_matches_eager_fig6_anchor() {
+    // Figure 6's 88 instances: the streamed source must yield instances
+    // identical to the old eager materialize-everything path.
+    let study = fig5_study();
+    assert_eq!(study.n_instances(), 88);
+    let eager: Vec<WorkflowInstance> = (0..study.space().len())
+        .map(|i| {
+            WorkflowInstance::materialize(
+                &study.spec,
+                i,
+                study.space().combination(i).unwrap(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let streamed: Vec<WorkflowInstance> =
+        study.source().iter().map(|r| r.unwrap()).collect();
+    assert_eq!(eager.len(), streamed.len());
+    for (e, s) in eager.iter().zip(&streamed) {
+        assert_eq!(e.index, s.index);
+        assert_eq!(e.combo, s.combo);
+        assert_eq!(e.tasks, s.tasks, "instance {} diverged", e.index);
+        assert_eq!(e.command_lines(), s.command_lines());
+    }
+}
+
+#[test]
+fn sharded_sources_cover_fig6_exactly_once() {
+    for n in [2u64, 3, 5, 88] {
+        let mut seen = BTreeSet::new();
+        for i in 0..n {
+            let study = fig5_study().shard(i, n).unwrap();
+            for inst in study.source().iter() {
+                let inst = inst.unwrap();
+                assert!(
+                    seen.insert(inst.command_lines()[0].clone()),
+                    "duplicate instance across shards ({i}/{n})"
+                );
+            }
+        }
+        assert_eq!(seen.len(), 88, "{n} shards must cover all 88 instances");
+        assert!(seen.contains("matmul 16 result_16N_1T.txt"));
+        assert!(seen.contains("matmul 16384 result_16384N_8T.txt"));
+    }
 }
 
 #[test]
