@@ -180,7 +180,7 @@ pub fn cmd_instance(a: &Args) -> Result<()> {
     let study = load_study_opts(&a, false)?;
     let inst = study.instance_at(idx)?;
     println!("{} (combination {})", inst.display_id(), inst.index);
-    for (k, v) in &inst.combo {
+    for (k, v) in inst.combo.pairs() {
         println!("  {k} = {v}");
     }
     for cmd in inst.command_lines() {

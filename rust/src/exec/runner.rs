@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 /// How a runner executes tasks.
 pub struct RunConfig {
-    /// Root directory for instance workdirs (`wf-0000/`, ...).
+    /// Root directory for instance workdirs (`wf-00000000/`, ...).
     pub work_root: PathBuf,
     /// Directory where declared `infiles` templates are found (staged
     /// from here into the workdir; the paper's NFS shared-input dir).
@@ -19,9 +19,15 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
-    /// Workdir of one workflow instance.
+    /// Workdir of one workflow instance. 8 digits keep names fixed-width
+    /// and lexicographically ordered up to 100M instances. This is the
+    /// write path and stays a pure string format — no filesystem probes
+    /// per task. Read-only paths over possibly pre-widening databases
+    /// (4-digit `wf-NNNN`) go through `filedb::resolve_instance_dir`;
+    /// checkpoints from that one-commit-old layout are not resumable
+    /// here — re-run with `--fresh` (outputs remain aggregatable).
     pub fn instance_dir(&self, instance: u64) -> PathBuf {
-        self.work_root.join(format!("wf-{instance:04}"))
+        self.work_root.join(format!("wf-{instance:08}"))
     }
 }
 

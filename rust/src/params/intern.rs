@@ -1,0 +1,210 @@
+//! Interned axis-value tables and compact indexed combinations — the
+//! data layer of the compile-once/instantiate-many pipeline.
+//!
+//! A [`super::space::Space`] names every parameter with an owned `String`
+//! and decodes each combination into a `BTreeMap<String, Value>`: fine at
+//! 88 instances, dominant engine cost at 1M. [`ValueTable`] interns every
+//! axis value once (per-parameter `Arc<str>` tables, shared by every
+//! instance) so a combination shrinks to its per-axis digit vector and a
+//! value lookup is two array indexes — no string keys, no map, no clone.
+//!
+//! [`ParamRef`] is the compile-time resolution of one `${...}` reference:
+//! *which axis digit* selects the value and *which parameter's* table
+//! holds it. The WDL compiler (`wdl::compile`) resolves reference paths
+//! to `ParamRef`s once per study; instantiation then never touches a
+//! parameter name again.
+
+use super::space::{Combination, Space};
+use super::value::Value;
+use std::sync::Arc;
+
+/// A compile-time-resolved reference to one parameter of a [`Space`]:
+/// `digits[axis]` selects the value index inside parameter `param`'s
+/// interned table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamRef {
+    /// Axis whose digit selects the value (zipped parameters share one).
+    pub axis: u32,
+    /// Parameter index in declaration order (= `Space::params()` order).
+    pub param: u32,
+}
+
+/// Per-parameter interned value tables of a [`Space`], plus the
+/// name-resolution and iteration metadata the compiled pipeline needs.
+/// Built once per study, shared by every instance via `Arc`.
+#[derive(Debug)]
+pub struct ValueTable {
+    /// Fully-scoped parameter names, declaration order.
+    names: Vec<Arc<str>>,
+    /// Interned values: `values[param][digit]`.
+    values: Vec<Vec<Arc<str>>>,
+    /// Axis of each parameter (zip members share an axis).
+    axis_of: Vec<u32>,
+    /// Parameter indices sorted by name (binary-search resolution and
+    /// name-ordered iteration, matching `Combination`'s BTreeMap order).
+    by_name: Vec<u32>,
+    /// Number of axes (= expected digit-vector length).
+    n_axes: usize,
+}
+
+impl ValueTable {
+    /// Intern every axis value of `space`.
+    pub fn build(space: &Space) -> ValueTable {
+        let params = space.params();
+        let names: Vec<Arc<str>> =
+            params.iter().map(|p| Arc::from(p.name.as_str())).collect();
+        let values: Vec<Vec<Arc<str>>> = params
+            .iter()
+            .map(|p| p.values.iter().map(|v| Arc::from(v.as_str())).collect())
+            .collect();
+        let axis_of: Vec<u32> =
+            space.param_axes().into_iter().map(|a| a as u32).collect();
+        let mut by_name: Vec<u32> = (0..params.len() as u32).collect();
+        by_name.sort_by(|&a, &b| names[a as usize].cmp(&names[b as usize]));
+        ValueTable {
+            names,
+            values,
+            axis_of,
+            by_name,
+            n_axes: space.n_axes(),
+        }
+    }
+
+    /// Number of parameters.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True when the space had no parameters.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Number of axes (= digit-vector length of every combination).
+    pub fn n_axes(&self) -> usize {
+        self.n_axes
+    }
+
+    /// Resolve a fully-scoped parameter name to its [`ParamRef`].
+    pub fn resolve(&self, name: &str) -> Option<ParamRef> {
+        let i = self
+            .by_name
+            .binary_search_by(|&p| self.names[p as usize].as_ref().cmp(name))
+            .ok()?;
+        let param = self.by_name[i];
+        Some(ParamRef { axis: self.axis_of[param as usize], param })
+    }
+
+    /// The parameter name of index `param`.
+    pub fn name(&self, param: u32) -> &str {
+        &self.names[param as usize]
+    }
+
+    /// All parameter names, sorted (diagnostics: typo hints).
+    pub fn names_sorted(&self) -> impl Iterator<Item = &str> {
+        self.by_name.iter().map(|&p| self.names[p as usize].as_ref())
+    }
+
+    /// The interned values of parameter `param`.
+    pub fn values_of(&self, param: u32) -> &[Arc<str>] {
+        &self.values[param as usize]
+    }
+
+    /// The value `r` selects under `digits` — two array indexes.
+    pub fn value(&self, r: ParamRef, digits: &[u32]) -> &Arc<str> {
+        &self.values[r.param as usize][digits[r.axis as usize] as usize]
+    }
+
+    /// `(name, value)` pairs of the combination `digits` encodes, in
+    /// name order (the same order a `Combination` BTreeMap iterates).
+    pub fn pairs<'a>(
+        &'a self,
+        digits: &'a [u32],
+    ) -> impl Iterator<Item = (&'a str, &'a str)> + 'a {
+        self.by_name.iter().map(move |&p| {
+            let d = digits[self.axis_of[p as usize] as usize] as usize;
+            (self.names[p as usize].as_ref(), self.values[p as usize][d].as_ref())
+        })
+    }
+
+    /// Expand `digits` back into an owned string-keyed [`Combination`]
+    /// (display paths and naive-equivalence tests only — the hot path
+    /// never calls this).
+    pub fn combination(&self, digits: &[u32]) -> Combination {
+        self.pairs(digits)
+            .map(|(k, v)| (k.to_string(), Value::new(v)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Param;
+
+    fn space() -> Space {
+        Space::new(
+            vec![
+                Param::new("t:a", vec!["1".into(), "2".into()]),
+                Param::new("t:b", vec!["x".into(), "y".into(), "z".into()]),
+                Param::new("t:c", vec!["p".into(), "q".into(), "r".into()]),
+            ],
+            &[vec!["t:b".into(), "t:c".into()]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn resolve_and_value_lookup() {
+        let s = space();
+        let t = ValueTable::build(&s);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.n_axes(), 2); // zip(b,c) + a
+        let a = t.resolve("t:a").unwrap();
+        let b = t.resolve("t:b").unwrap();
+        let c = t.resolve("t:c").unwrap();
+        assert!(t.resolve("t:zz").is_none());
+        // b and c share the zip axis; a has its own
+        assert_eq!(b.axis, c.axis);
+        assert_ne!(a.axis, b.axis);
+        // digits line up with Space::digits for every index
+        for idx in 0..s.len() {
+            let digits = s.digits(idx).unwrap();
+            let combo = s.combination(idx).unwrap();
+            assert_eq!(t.value(a, &digits).as_ref(), combo["t:a"].as_str());
+            assert_eq!(t.value(b, &digits).as_ref(), combo["t:b"].as_str());
+            assert_eq!(t.value(c, &digits).as_ref(), combo["t:c"].as_str());
+        }
+    }
+
+    #[test]
+    fn pairs_match_btreemap_order_and_roundtrip() {
+        let s = space();
+        let t = ValueTable::build(&s);
+        for idx in 0..s.len() {
+            let digits = s.digits(idx).unwrap();
+            let expect = s.combination(idx).unwrap();
+            let got: Vec<(String, String)> = t
+                .pairs(&digits)
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect();
+            let want: Vec<(String, String)> = expect
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_str().to_string()))
+                .collect();
+            assert_eq!(got, want);
+            assert_eq!(t.combination(&digits), expect);
+        }
+    }
+
+    #[test]
+    fn values_are_interned_once() {
+        let s = space();
+        let t = ValueTable::build(&s);
+        let r = t.resolve("t:a").unwrap();
+        let v1 = Arc::clone(t.value(r, &[0, 0]));
+        let v2 = Arc::clone(t.value(r, &[1, 0]));
+        assert!(Arc::ptr_eq(&v1, &v2), "same digit must share one Arc");
+        assert_eq!(v1.as_ref(), "1");
+    }
+}

@@ -12,10 +12,12 @@
 //! never materializes the full space — a requirement once studies reach
 //! millions of combinations.
 
+pub mod intern;
 pub mod sampling;
 pub mod space;
 pub mod value;
 
+pub use intern::{ParamRef, ValueTable};
 pub use sampling::Sampling;
 pub use space::{Combination, Param, Space};
 pub use value::Value;

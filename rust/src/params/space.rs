@@ -151,25 +151,54 @@ impl Space {
         }
     }
 
-    /// Decode combination `idx` (0-based, row-major over axes: the LAST
-    /// axis varies fastest — matching the nested-loop order in §5.1).
-    pub fn combination(&self, idx: u64) -> Result<Combination> {
+    /// Number of axes (independent parameters + one per fixed clause).
+    pub fn n_axes(&self) -> usize {
+        self.axes.len()
+    }
+
+    /// For each parameter (declaration order), the axis whose digit
+    /// selects its value. Zipped parameters map to their shared axis.
+    pub fn param_axes(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.params.len()];
+        for (a, axis) in self.axes.iter().enumerate() {
+            match axis {
+                Axis::Single(i) => out[*i] = a,
+                Axis::Zip(ms) => {
+                    for &m in ms {
+                        out[m] = a;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Mixed-radix decode of combination `idx` into per-axis digits
+    /// (last axis varies fastest — the nested-loop order in §5.1). The
+    /// compiled materialization pipeline works directly on these digits;
+    /// [`Space::combination`] expands them into a string-keyed map.
+    pub fn digits(&self, idx: u64) -> Result<Vec<u32>> {
         let total = self.len();
         if idx >= total {
             return Err(Error::Params(format!(
                 "combination index {idx} out of range (total {total})"
             )));
         }
-        let mut combo = Combination::new();
         let mut rem = idx;
-        // Mixed-radix decode, last axis fastest.
-        let mut digits = vec![0usize; self.axes.len()];
+        let mut digits = vec![0u32; self.axes.len()];
         for (d, axis) in self.axes.iter().enumerate().rev() {
             let n = self.axis_len(axis) as u64;
-            digits[d] = (rem % n) as usize;
+            digits[d] = (rem % n) as u32;
             rem /= n;
         }
-        for (axis, &digit) in self.axes.iter().zip(&digits) {
+        Ok(digits)
+    }
+
+    /// Expand per-axis `digits` into an owned name → value map.
+    pub fn combination_from_digits(&self, digits: &[u32]) -> Combination {
+        let mut combo = Combination::new();
+        for (axis, &digit) in self.axes.iter().zip(digits) {
+            let digit = digit as usize;
             match axis {
                 Axis::Single(i) => {
                     let p = &self.params[*i];
@@ -183,7 +212,13 @@ impl Space {
                 }
             }
         }
-        Ok(combo)
+        combo
+    }
+
+    /// Decode combination `idx` (0-based, row-major over axes: the LAST
+    /// axis varies fastest — matching the nested-loop order in §5.1).
+    pub fn combination(&self, idx: u64) -> Result<Combination> {
+        Ok(self.combination_from_digits(&self.digits(idx)?))
     }
 
     /// Iterate all combinations in order — a lazy cursor; nothing is

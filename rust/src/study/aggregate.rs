@@ -10,7 +10,7 @@
 //! the aggregator prefixes each row/file with the instance id and its
 //! parameter values, so the provenance survives the merge.
 
-use super::Study;
+use super::{FileDb, Study};
 use crate::util::error::{Error, Result};
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -39,12 +39,15 @@ pub fn aggregate(
     let mut merged = 0usize;
     let mut out = std::io::BufWriter::new(std::fs::File::create(out_path)?);
     let mut wrote_header = false;
+    // Read-only handle: aggregation must work against archived
+    // databases, so nothing is created.
+    let db = FileDb::at(&study.db_root);
 
     // Deterministic ordering: combination-index order, streamed one
     // instance at a time from the lazy source.
     for inst in study.source().iter() {
         let inst = inst?;
-        let dir = study.db_root.join("work").join(format!("wf-{:04}", inst.index));
+        let dir = db.existing_instance_dir(inst.index);
         let Ok(entries) = std::fs::read_dir(&dir) else {
             continue; // instance never ran
         };
@@ -60,7 +63,8 @@ pub fn aggregate(
         // The combination, as `k=v` pairs for provenance columns.
         let combo_desc: Vec<String> = inst
             .combo
-            .iter()
+            .pairs()
+            .into_iter()
             .map(|(k, v)| format!("{k}={v}"))
             .collect();
 
@@ -150,6 +154,38 @@ mod tests {
         assert_eq!(text.matches("# instance=").count(), 2);
         assert!(text.contains("t:x=10"));
         assert!(text.contains("step,v"));
+    }
+
+    #[test]
+    fn legacy_4digit_workdirs_still_aggregate() {
+        // A database written before the wf-{:08} widening must stay
+        // aggregatable via the read-side fallback.
+        let dir = std::env::temp_dir().join("papas_agg").join("legacy");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("s.yaml"),
+            "t:\n  command: sleep-ms 0\n  x: [10, 20]\n",
+        )
+        .unwrap();
+        let study = Study::from_file(dir.join("s.yaml"))
+            .unwrap()
+            .with_db_root(dir.join(".papas"));
+        for (i, x) in [(0u64, 10), (1, 20)] {
+            let wd = dir.join(".papas/work").join(format!("wf-{i:04}"));
+            std::fs::create_dir_all(&wd).unwrap();
+            std::fs::write(
+                wd.join(format!("out_{x}.csv")),
+                format!("a,b\n1,{x}\n"),
+            )
+            .unwrap();
+        }
+        let out = dir.join("agg.csv");
+        let n = aggregate(&study, r"^out_.*\.csv$", Mode::Csv, &out).unwrap();
+        assert_eq!(n, 2);
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("t:x=10"), "{text}");
+        assert!(text.contains("t:x=20"), "{text}");
     }
 
     #[test]

@@ -9,12 +9,32 @@
 //! records.jsonl     task profiling records (workflow/provenance.rs)
 //! events.log        timestamped engine events
 //! report.json       last run's summary
-//! work/wf-NNNN/     per-instance working directories
+//! work/wf-NNNNNNNN/     per-instance working directories
 //! ```
 
 use crate::json::{self, Json};
 use crate::util::error::Result;
 use std::path::{Path, PathBuf};
+
+/// Resolve the workdir of `instance` under a `work/` directory: the
+/// 8-digit `wf-NNNNNNNN` name, unless only the pre-widening 4-digit
+/// directory exists. The single definition of the read-side naming +
+/// fallback policy (used by [`FileDb::existing_instance_dir`]). The
+/// runner's *write* path always uses the 8-digit layout with no
+/// filesystem probes — so a database half-written under the old layout
+/// stays aggregatable/inspectable, but resuming its checkpoint will not
+/// find upstream outputs in the legacy dirs; re-run such studies with
+/// `--fresh` (the layout shipped in exactly one pre-release commit).
+pub fn resolve_instance_dir(work: &Path, instance: u64) -> PathBuf {
+    let dir = work.join(format!("wf-{instance:08}"));
+    if !dir.exists() {
+        let legacy = work.join(format!("wf-{instance:04}"));
+        if legacy.is_dir() {
+            return legacy;
+        }
+    }
+    dir
+}
 
 /// Handle on a study's database directory.
 pub struct FileDb {
@@ -27,6 +47,13 @@ impl FileDb {
         let root = root.as_ref().to_path_buf();
         std::fs::create_dir_all(root.join("work"))?;
         Ok(FileDb { root })
+    }
+
+    /// Handle on an existing database — nothing is created. For
+    /// read-only paths (aggregation, inspection) that must work against
+    /// archived or read-only-mounted databases.
+    pub fn at(root: impl AsRef<Path>) -> FileDb {
+        FileDb { root: root.as_ref().to_path_buf() }
     }
 
     /// Database root.
@@ -74,9 +101,17 @@ impl FileDb {
         json::parse(&text)
     }
 
-    /// Per-instance working directory.
+    /// Per-instance working directory (8-digit: fixed width and
+    /// lexicographic order hold beyond 10k instances).
     pub fn instance_dir(&self, instance: u64) -> PathBuf {
-        self.root.join("work").join(format!("wf-{instance:04}"))
+        self.root.join("work").join(format!("wf-{instance:08}"))
+    }
+
+    /// The workdir that actually holds `instance`'s files: the 8-digit
+    /// name, falling back to an existing pre-widening 4-digit directory
+    /// (see [`resolve_instance_dir`]). Use this for every read path.
+    pub fn existing_instance_dir(&self, instance: u64) -> PathBuf {
+        resolve_instance_dir(&self.root.join("work"), instance)
     }
 }
 
@@ -102,7 +137,7 @@ mod tests {
         let snap = db.load_study_snapshot().unwrap();
         assert_eq!(snap.expect_str("name").unwrap(), "demo");
         assert_eq!(snap.expect_i64("n_combinations").unwrap(), 2);
-        assert!(db.instance_dir(3).to_string_lossy().contains("wf-0003"));
+        assert!(db.instance_dir(3).to_string_lossy().contains("wf-00000003"));
         assert!(dir.join("work").is_dir());
     }
 }

@@ -13,6 +13,14 @@
 //! instance in O(#params). Peak memory is independent of the space size —
 //! a 10M-combination study starts its first task immediately.
 //!
+//! Materialization is **compiled once per study** (`wdl::compile`):
+//! templates are pre-parsed into literal/reference segments, `${...}`
+//! paths are axis-resolved, axis values interned, and the structural DAG
+//! hoisted — so each streamed instance is assembled by value plugging
+//! rather than re-interpolation. [`Study::source_naive`] /
+//! [`Study::instance_at_naive`] expose the reference path for
+//! equivalence tests and benchmarks.
+//!
 //! [`Study::shard`] restricts a study to a deterministic 1-of-N slice of
 //! its selection, so independent nodes split one study with no
 //! coordination (`papas run --shard I/N`). Instances keep global indices
@@ -47,7 +55,7 @@ use crate::exec::Executor;
 use crate::params::{Param, Sampling, Space};
 use crate::tasks::Builtins;
 use crate::util::error::Result;
-use crate::wdl::{self, Node, StudySpec};
+use crate::wdl::{self, CompiledStudy, Node, StudySpec};
 use crate::workflow::{
     ExecOrder, ExecutionReport, InstanceSource, Selection, Shard,
     WorkflowInstance, WorkflowScheduler,
@@ -68,6 +76,11 @@ pub struct Study {
     /// Combination indices to run (sampling applied; `All` otherwise —
     /// O(1) storage for unsampled studies of any size).
     selection: Selection,
+    /// The compiled materialization pipeline (templates pre-parsed,
+    /// references axis-resolved, structural DAG hoisted). `None` only
+    /// when compilation failed — then every path falls back to naive
+    /// per-instance interpolation and a load warning says why.
+    compiled: Option<CompiledStudy>,
     /// Which 1-of-N slice of the selection this process runs (`0/1` =
     /// the whole study).
     shard: Shard,
@@ -112,7 +125,7 @@ impl Study {
     /// Build from an already-parsed document (the library embedding API).
     pub fn from_doc(name: String, doc: Node, input_root: PathBuf) -> Result<Study> {
         let spec = StudySpec::from_doc(&doc)?;
-        let warnings = wdl::validate::validate(&spec)?;
+        let mut warnings = wdl::validate::validate(&spec)?;
 
         // Assemble the global space: every task's local parameters,
         // task-scoped; fixed clauses likewise scoped.
@@ -140,6 +153,21 @@ impl Study {
             None => Selection::All { total: space.len() },
         };
 
+        // Compile once per study: templates pre-parsed, references
+        // resolved against the space, the structural DAG hoisted. A
+        // compile failure is not fatal — the naive path still runs —
+        // but it is surfaced as a warning.
+        let compiled = match CompiledStudy::compile(&spec, &space) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                warnings.push(format!(
+                    "compiled materialization disabled ({e}); \
+                     falling back to naive per-instance interpolation"
+                ));
+                None
+            }
+        };
+
         let db_root = PathBuf::from(".papas").join(&name);
         Ok(Study {
             name,
@@ -147,6 +175,7 @@ impl Study {
             doc,
             space,
             selection,
+            compiled,
             shard: Shard::default(),
             db_root,
             input_root,
@@ -209,8 +238,26 @@ impl Study {
     /// The lazy instance source: everything downstream (scheduler, CLI
     /// enumeration, aggregation) pulls instances from this cursor one at
     /// a time. This is the library embedding point for custom drivers.
+    /// Serves the compiled instantiate phase whenever compilation
+    /// succeeded (always, for valid studies).
     pub fn source(&self) -> InstanceSource<'_> {
+        let src = self.source_naive();
+        match &self.compiled {
+            Some(c) => src.with_compiled(c),
+            None => src,
+        }
+    }
+
+    /// The same source pinned to the naive per-instance interpolation
+    /// path — the reference semantics. Exists so tests and benches can
+    /// assert/measure compiled ≡ naive.
+    pub fn source_naive(&self) -> InstanceSource<'_> {
         InstanceSource::new(&self.spec, &self.space, &self.selection, self.shard)
+    }
+
+    /// The compiled pipeline, when compilation succeeded.
+    pub fn compiled(&self) -> Option<&CompiledStudy> {
+        self.compiled.as_ref()
     }
 
     /// Number of workflow instances that will run (post-sampling,
@@ -222,6 +269,12 @@ impl Study {
     /// Materialize the `pos`-th selected workflow instance — and only it.
     pub fn instance_at(&self, pos: u64) -> Result<WorkflowInstance> {
         self.source().get(pos)
+    }
+
+    /// Naive-path counterpart of [`Study::instance_at`] (equivalence
+    /// tests and benchmarks).
+    pub fn instance_at_naive(&self, pos: u64) -> Result<WorkflowInstance> {
+        self.source_naive().get(pos)
     }
 
     /// Materialize every selected workflow instance. Prefer
@@ -478,6 +531,23 @@ mod tests {
             "streaming window exceeded: {}",
             report.peak_open
         );
+    }
+
+    #[test]
+    fn compiled_pipeline_active_and_equivalent() {
+        let s = tmp_study(
+            "compiled",
+            "job:\n  command: sleep-ms ${ms}\n  ms: [1, 2, 3]\n",
+        );
+        assert!(s.compiled().is_some(), "valid studies always compile");
+        assert!(s.source().is_compiled());
+        assert!(!s.source_naive().is_compiled());
+        for i in 0..3 {
+            let a = s.instance_at(i).unwrap();
+            let b = s.instance_at_naive(i).unwrap();
+            assert_eq!(a.tasks, b.tasks);
+            assert_eq!(a.combo, b.combo);
+        }
     }
 
     #[test]

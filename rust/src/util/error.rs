@@ -11,47 +11,73 @@ use std::fmt;
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors produced by the PaPaS framework, tagged by subsystem.
-#[derive(Debug, thiserror::Error)]
+/// (`Display`/`Error`/`From` are hand-implemented — no proc-macro crates
+/// are available offline.)
+#[derive(Debug)]
 pub enum Error {
     /// Lexical / syntactic error in a parameter file (YAML/JSON/INI).
-    #[error("parse error at {location}: {message}")]
     Parse { location: Location, message: String },
 
     /// Structurally valid document that violates the WDL specification.
-    #[error("invalid workflow description: {0}")]
     Wdl(String),
 
     /// `${...}` interpolation failure (unknown key, cycle, bad scope).
-    #[error("interpolation error: {0}")]
     Interp(String),
 
     /// Parameter-space error (empty space, fixed-clause arity mismatch...).
-    #[error("parameter space error: {0}")]
     Params(String),
 
     /// Workflow DAG error (cycle, unknown dependency, duplicate task).
-    #[error("workflow error: {0}")]
     Workflow(String),
 
     /// Task execution failure (spawn error, non-zero exit, staging error).
-    #[error("execution error: {0}")]
     Exec(String),
 
     /// Cluster engine error (unknown job, bad directive, sim invariant).
-    #[error("cluster error: {0}")]
     Cluster(String),
 
     /// PJRT runtime error (artifact missing, compile/execute failure).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Checkpoint / file-database error.
-    #[error("state store error: {0}")]
     Store(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse { location, message } => {
+                write!(f, "parse error at {location}: {message}")
+            }
+            Error::Wdl(m) => write!(f, "invalid workflow description: {m}"),
+            Error::Interp(m) => write!(f, "interpolation error: {m}"),
+            Error::Params(m) => write!(f, "parameter space error: {m}"),
+            Error::Workflow(m) => write!(f, "workflow error: {m}"),
+            Error::Exec(m) => write!(f, "execution error: {m}"),
+            Error::Cluster(m) => write!(f, "cluster error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Store(m) => write!(f, "state store error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 impl Error {

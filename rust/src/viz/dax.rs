@@ -100,7 +100,7 @@ mod tests {
         let dax = render_dax(&instance(), "demo");
         assert!(dax.starts_with("<?xml"));
         assert!(dax.contains("<adag"));
-        assert!(dax.contains("name=\"demo-wf-0000\""));
+        assert!(dax.contains("name=\"demo-wf-00000000\""));
         assert!(dax.contains("<job id=\"ID0000000\" name=\"make\""));
         assert!(dax.contains("<job id=\"ID0000001\" name=\"consume\""));
         assert!(dax.contains("<argument>data.bin --n 1</argument>"));

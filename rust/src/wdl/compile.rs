@@ -1,0 +1,835 @@
+//! Compile-once, instantiate-many materialization.
+//!
+//! The naive path re-scans every template string byte-by-byte for every
+//! instance, re-resolves `${...}` paths through string-keyed map lookups,
+//! and rebuilds the dependency DAG — identical *shape* work repeated N_W
+//! times. [`CompiledStudy`] hoists all of it to a single compile phase:
+//!
+//! * every template (commands, environ values, infile/outfile paths,
+//!   substitute replacements) is pre-parsed into a segment list of
+//!   `Lit(text)` / `Ref(axis-resolved parameter)` — `$$` escapes are
+//!   unescaped at compile time;
+//! * `${...}` reference paths are resolved against the parameter space
+//!   once, including nested value-in-value references, which are
+//!   pre-compiled per value with cycle/depth checks done here so the
+//!   per-instance path never re-checks them;
+//! * axis values are interned into per-axis `Arc<str>` tables
+//!   ([`ValueTable`]), so a combination is a compact digit vector;
+//! * the structural (`after`-edge) DAG is built once; file-inference
+//!   edges between *ref-free* path templates are instance-invariant and
+//!   also computed once — only pairs involving a parameterized path are
+//!   re-checked per instance.
+//!
+//! [`CompiledStudy::instantiate`] is then a pure value-plugging loop:
+//! index lookups plus one pre-sized `String` assembly per template, and
+//! an `Arc` bump for the DAG whenever no parameterized file edges exist.
+//! The naive path ([`crate::workflow::WorkflowInstance::materialize`])
+//! stays available so tests can assert compiled ≡ naive.
+
+use super::ast::StudySpec;
+use super::interp::{utf8_len, MAX_DEPTH};
+use crate::params::{ParamRef, Space, ValueTable};
+use crate::util::error::{Error, Result};
+use crate::util::strings::shell_split;
+use crate::workflow::dag::Dag;
+use crate::workflow::instance::{Combo, WorkflowInstance};
+use crate::workflow::task::ConcreteTask;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+/// One piece of a pre-parsed template.
+#[derive(Debug, Clone)]
+enum Seg {
+    /// Literal text, `$$` already unescaped.
+    Lit(Box<str>),
+    /// Plain value plug: every value of the referenced parameter is
+    /// `${...}`-free, so instantiation pushes the interned value as-is.
+    Ref(ParamRef),
+    /// Value-in-value plug: some value of the referenced parameter
+    /// contains `${...}`; `exp` indexes the per-value pre-compiled
+    /// templates in [`CompiledStudy::expansions`].
+    Expand {
+        /// The referenced parameter (selects which value is plugged).
+        pref: ParamRef,
+        /// Expansion-table index holding one pre-compiled [`Tpl`] per
+        /// value of the parameter.
+        exp: u32,
+    },
+}
+
+/// A compiled template: segments plus pre-size metadata.
+#[derive(Debug, Clone)]
+pub struct Tpl {
+    segs: Vec<Seg>,
+    /// Upper bound of the assembled length over every combination
+    /// (literal bytes + each reference's longest value), computed at
+    /// compile time so per-instance assembly is a single traversal into
+    /// a never-reallocating `String`.
+    max_len: usize,
+    /// Deepest value-in-value nesting below this template (compile-time
+    /// stand-in for the naive path's per-instance depth counter).
+    height: usize,
+}
+
+impl Tpl {
+    /// A template holding `text` verbatim (no unescaping — mirrors the
+    /// naive path, which pushes `${...}`-free values untouched).
+    fn verbatim(text: &str) -> Tpl {
+        if text.is_empty() {
+            return Tpl { segs: Vec::new(), max_len: 0, height: 0 };
+        }
+        Tpl {
+            segs: vec![Seg::Lit(text.into())],
+            max_len: text.len(),
+            height: 0,
+        }
+    }
+
+    /// A single-`Expand` template (environ / substitute chosen values).
+    fn expansion(pref: ParamRef, exp: u32, height: usize, max_len: usize) -> Tpl {
+        Tpl {
+            segs: vec![Seg::Expand { pref, exp }],
+            max_len,
+            height: height + 1,
+        }
+    }
+
+    /// The template's text when it references no parameter at all.
+    fn const_text(&self) -> Option<&str> {
+        match self.segs.as_slice() {
+            [] => Some(""),
+            [Seg::Lit(s)] => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Per-value pre-compiled templates of one parameter (one entry per
+/// value, same order as the interned value table).
+#[derive(Debug)]
+struct Expansion {
+    tpls: Vec<Tpl>,
+    height: usize,
+    /// Longest assembled length over the parameter's values.
+    max_len: usize,
+}
+
+/// How a task's argv is produced per instance, cheapest plan first.
+#[derive(Debug)]
+enum ArgvPlan {
+    /// Ref-free command: tokenized once, cloned per instance.
+    Const(Vec<String>),
+    /// Tokenization is instance-invariant (no quotes in the template, no
+    /// plugged value contains whitespace/quotes/empties): one pre-sized
+    /// assembly per argument, no re-tokenization.
+    PerArg(Vec<Tpl>),
+    /// A plugged value could change token boundaries: assemble the full
+    /// command line and tokenize it (the naive path's semantics).
+    Split,
+}
+
+/// One task with every template pre-parsed.
+#[derive(Debug)]
+struct CompiledTask {
+    id: String,
+    command: Tpl,
+    argv_plan: ArgvPlan,
+    /// (variable name, full-interpolation template of the chosen value).
+    env: Vec<(String, Tpl)>,
+    infiles: Vec<(String, Tpl)>,
+    outfiles: Vec<(String, Tpl)>,
+    /// (regex pattern, full-interpolation template of the replacement).
+    substitutions: Vec<(String, Tpl)>,
+}
+
+/// A producer-outfile / consumer-infile pair whose paths are
+/// parameterized: its file edge must be re-checked per instance.
+#[derive(Debug, Clone, Copy)]
+struct DynPair {
+    producer: usize,
+    outfile: usize,
+    consumer: usize,
+    infile: usize,
+}
+
+/// A study compiled for the instantiate-many hot path.
+#[derive(Debug)]
+pub struct CompiledStudy {
+    table: Arc<ValueTable>,
+    tasks: Vec<CompiledTask>,
+    expansions: Vec<Expansion>,
+    /// `after` edges + instance-invariant (ref-free) file edges.
+    base_dag: Arc<Dag>,
+    /// File-edge candidates that depend on parameter values.
+    dynamic_pairs: Vec<DynPair>,
+}
+
+/// How a parameter's values are pre-expanded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Mode {
+    /// Inside a template: `${...}`-free values plug verbatim.
+    Nested,
+    /// Environ/substitute chosen values: always fully interpolated
+    /// (`$$` unescapes even without any `${...}`).
+    Full,
+}
+
+/// Compile-phase state: memoized per-(task, parameter, mode) expansions
+/// with in-progress tracking for cycle detection.
+struct Compiler<'a> {
+    spec: &'a StudySpec,
+    table: &'a ValueTable,
+    expansions: Vec<Expansion>,
+    memo: BTreeMap<(usize, u32, Mode), u32>,
+    in_progress: BTreeSet<(usize, u32, Mode)>,
+}
+
+impl<'a> Compiler<'a> {
+    /// Resolve a `${path}` reference for task `task` — the shared
+    /// precedence walk (`interp::resolve_path`), looked up against the
+    /// interned name table instead of a combination map.
+    fn resolve(&self, task: usize, path: &str) -> Result<ParamRef> {
+        super::interp::resolve_path(
+            &self.spec.tasks[task].id,
+            path,
+            |key| self.table.resolve(key),
+            |tail| {
+                self.table
+                    .names_sorted()
+                    .filter(|k| k.ends_with(tail))
+                    .map(str::to_string)
+                    .collect()
+            },
+        )
+    }
+
+    /// Pre-parse one template into segments (the compile-time mirror of
+    /// `Interpolator::interp_depth`'s scanner).
+    fn compile_template(&mut self, task: usize, template: &str) -> Result<Tpl> {
+        let mut segs: Vec<Seg> = Vec::new();
+        let mut lit = String::new();
+        let mut max_len = 0usize;
+        let mut height = 0usize;
+        let bytes = template.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == b'$' && i + 1 < bytes.len() && bytes[i + 1] == b'{' {
+                let start = i + 2;
+                let Some(rel) = template[start..].find('}') else {
+                    return Err(Error::Interp(format!(
+                        "unterminated ${{...}} in template '{template}'"
+                    )));
+                };
+                let path = &template[start..start + rel];
+                let pref = self.resolve(task, path)?;
+                if !lit.is_empty() {
+                    max_len += lit.len();
+                    segs.push(Seg::Lit(std::mem::take(&mut lit).into()));
+                }
+                let needs_expand = self
+                    .table
+                    .values_of(pref.param)
+                    .iter()
+                    .any(|v| v.contains("${"));
+                if needs_expand {
+                    let exp = self.expand(task, pref.param, Mode::Nested)?;
+                    let e = &self.expansions[exp as usize];
+                    height = height.max(e.height + 1);
+                    max_len += e.max_len;
+                    segs.push(Seg::Expand { pref, exp });
+                } else {
+                    max_len += longest_value(self.table, pref.param);
+                    segs.push(Seg::Ref(pref));
+                }
+                i = start + rel + 1;
+            } else if bytes[i] == b'$' && i + 1 < bytes.len() && bytes[i + 1] == b'$' {
+                // `$$` escapes a literal `$` — resolved here, once.
+                lit.push('$');
+                i += 2;
+            } else {
+                let ch_len = utf8_len(bytes[i]);
+                lit.push_str(&template[i..i + ch_len]);
+                i += ch_len;
+            }
+        }
+        if !lit.is_empty() {
+            max_len += lit.len();
+            segs.push(Seg::Lit(lit.into()));
+        }
+        Ok(Tpl { segs, max_len, height })
+    }
+
+    /// Pre-compile every value of `param` (memoized). Cycles in
+    /// value-in-value references are caught here — instantiation never
+    /// re-checks them.
+    fn expand(&mut self, task: usize, param: u32, mode: Mode) -> Result<u32> {
+        let key = (task, param, mode);
+        if let Some(&e) = self.memo.get(&key) {
+            return Ok(e);
+        }
+        if !self.in_progress.insert(key) {
+            return Err(Error::Interp(format!(
+                "cyclic parameter definition while expanding '{}' in task \
+                 '{}'",
+                self.table.name(param),
+                self.spec.tasks[task].id
+            )));
+        }
+        let values: Vec<Arc<str>> = self.table.values_of(param).to_vec();
+        let mut tpls = Vec::with_capacity(values.len());
+        let mut height = 0usize;
+        let mut max_len = 0usize;
+        for v in &values {
+            let t = if mode == Mode::Full || v.contains("${") {
+                let t = self.compile_template(task, v)?;
+                height = height.max(t.height);
+                t
+            } else {
+                Tpl::verbatim(v)
+            };
+            max_len = max_len.max(t.max_len);
+            tpls.push(t);
+        }
+        self.in_progress.remove(&key);
+        let exp = self.expansions.len() as u32;
+        self.expansions.push(Expansion { tpls, height, max_len });
+        self.memo.insert(key, exp);
+        Ok(exp)
+    }
+
+    /// Mirror the naive path's depth budget at compile time.
+    fn check_depth(&self, height: usize, context: &str) -> Result<()> {
+        if height > MAX_DEPTH {
+            return Err(Error::Interp(format!(
+                "interpolation exceeds depth {MAX_DEPTH} (cyclic parameter \
+                 definition?) while compiling {context}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Full-interpolation template of a chosen environ/substitute value.
+    fn chosen_value_tpl(&mut self, task: usize, scoped: &str) -> Result<Tpl> {
+        let pref = self.table.resolve(scoped).ok_or_else(|| {
+            Error::Interp(format!(
+                "parameter '{scoped}' missing from the combination space"
+            ))
+        })?;
+        let exp = self.expand(task, pref.param, Mode::Full)?;
+        let e = &self.expansions[exp as usize];
+        let (height, max_len) = (e.height, e.max_len);
+        // The naive path interpolates the chosen value at depth 0, so
+        // the budget applies to the value's own nesting.
+        self.check_depth(height, &format!("values of '{scoped}'"))?;
+        Ok(Tpl::expansion(pref, exp, height, max_len))
+    }
+}
+
+/// Longest value of `param` in bytes (pre-size upper bound for a `Ref`).
+fn longest_value(table: &ValueTable, param: u32) -> usize {
+    table
+        .values_of(param)
+        .iter()
+        .map(|v| v.len())
+        .max()
+        .unwrap_or(0)
+}
+
+/// Try to tokenize a command template once, at compile time. Succeeds
+/// when token boundaries cannot depend on plugged values: the template's
+/// literals contain no quote characters, every referenced parameter is
+/// plain (`Ref`, not value-in-value), and no value is empty or contains
+/// whitespace/quotes. Returns one template per argument; `None` means
+/// the per-instance tokenizer must run.
+fn presplit_argv(command: &Tpl, table: &ValueTable) -> Option<Vec<Tpl>> {
+    for seg in &command.segs {
+        match seg {
+            Seg::Lit(s) => {
+                if s.contains('\'') || s.contains('"') {
+                    return None;
+                }
+            }
+            Seg::Ref(r) => {
+                let unsafe_value = table.values_of(r.param).iter().any(|v| {
+                    v.is_empty()
+                        || v.chars()
+                            .any(|c| c.is_whitespace() || c == '\'' || c == '"')
+                });
+                if unsafe_value {
+                    return None;
+                }
+            }
+            // A value-in-value expansion could assemble anything.
+            Seg::Expand { .. } => return None,
+        }
+    }
+
+    let mut args: Vec<Tpl> = Vec::new();
+    let mut cur: Vec<Seg> = Vec::new();
+    let mut cur_max = 0usize;
+    let mut flush = |cur: &mut Vec<Seg>, cur_max: &mut usize, args: &mut Vec<Tpl>| {
+        if !cur.is_empty() {
+            args.push(Tpl {
+                segs: std::mem::take(cur),
+                max_len: std::mem::take(cur_max),
+                height: 0,
+            });
+        }
+    };
+    for seg in &command.segs {
+        match seg {
+            Seg::Lit(s) => {
+                let mut piece = String::new();
+                for ch in s.chars() {
+                    if ch.is_whitespace() {
+                        if !piece.is_empty() {
+                            cur_max += piece.len();
+                            cur.push(Seg::Lit(
+                                std::mem::take(&mut piece).into(),
+                            ));
+                        }
+                        flush(&mut cur, &mut cur_max, &mut args);
+                    } else {
+                        piece.push(ch);
+                    }
+                }
+                if !piece.is_empty() {
+                    cur_max += piece.len();
+                    cur.push(Seg::Lit(piece.into()));
+                }
+            }
+            Seg::Ref(r) => {
+                cur_max += longest_value(table, r.param);
+                cur.push(seg.clone());
+            }
+            // Unreachable: the validation loop above bailed on Expand.
+            Seg::Expand { .. } => return None,
+        }
+    }
+    flush(&mut cur, &mut cur_max, &mut args);
+    Some(args)
+}
+
+impl CompiledStudy {
+    /// Compile `spec` against its combination `space`. All template
+    /// parsing, reference resolution, nesting checks, and structural DAG
+    /// construction happen here, once.
+    pub fn compile(spec: &StudySpec, space: &Space) -> Result<CompiledStudy> {
+        let table = Arc::new(ValueTable::build(space));
+        let mut c = Compiler {
+            spec,
+            table: &table,
+            expansions: Vec::new(),
+            memo: BTreeMap::new(),
+            in_progress: BTreeSet::new(),
+        };
+
+        let mut tasks = Vec::with_capacity(spec.tasks.len());
+        for (ti, t) in spec.tasks.iter().enumerate() {
+            let command = c.compile_template(ti, &t.command)?;
+            c.check_depth(
+                command.height,
+                &format!("the command of task '{}'", t.id),
+            )?;
+            let argv_plan = match command.const_text() {
+                Some(text) => ArgvPlan::Const(shell_split(text)),
+                None => match presplit_argv(&command, &table) {
+                    Some(args) => ArgvPlan::PerArg(args),
+                    None => ArgvPlan::Split,
+                },
+            };
+
+            let mut env = Vec::with_capacity(t.environ.len());
+            for p in &t.environ {
+                let var = p
+                    .name
+                    .strip_prefix("environ:")
+                    .unwrap_or(&p.name)
+                    .to_string();
+                let scoped = format!("{}:{}", t.id, p.name);
+                env.push((var, c.chosen_value_tpl(ti, &scoped)?));
+            }
+
+            let mut infiles = Vec::with_capacity(t.infiles.len());
+            for (k, tpl) in &t.infiles {
+                let tp = c.compile_template(ti, tpl)?;
+                c.check_depth(
+                    tp.height,
+                    &format!("the infiles of task '{}'", t.id),
+                )?;
+                infiles.push((k.clone(), tp));
+            }
+            let mut outfiles = Vec::with_capacity(t.outfiles.len());
+            for (k, tpl) in &t.outfiles {
+                let tp = c.compile_template(ti, tpl)?;
+                c.check_depth(
+                    tp.height,
+                    &format!("the outfiles of task '{}'", t.id),
+                )?;
+                outfiles.push((k.clone(), tp));
+            }
+
+            let mut substitutions = Vec::with_capacity(t.substitute.len());
+            for s in &t.substitute {
+                let scoped = format!("{}:substitute:{}", t.id, s.pattern);
+                substitutions
+                    .push((s.pattern.clone(), c.chosen_value_tpl(ti, &scoped)?));
+            }
+
+            tasks.push(CompiledTask {
+                id: t.id.clone(),
+                command,
+                argv_plan,
+                env,
+                infiles,
+                outfiles,
+                substitutions,
+            });
+        }
+        // Consume the compiler (ends its borrow of `table`).
+        let Compiler { expansions, .. } = c;
+
+        // Structural DAG: explicit `after` edges, built once.
+        let mut base = Dag::new(
+            &spec
+                .tasks
+                .iter()
+                .map(|t| (t.id.clone(), t.after.clone()))
+                .collect::<Vec<_>>(),
+        )?;
+
+        // File-dependency inference, split by template constness:
+        // ref-free producer/consumer path pairs are instance-invariant —
+        // matched here, once. Pairs touching a parameterized path are
+        // recorded for the per-instance check.
+        let mut dynamic_pairs = Vec::new();
+        for (ci, consumer) in tasks.iter().enumerate() {
+            for (ii, (_, itpl)) in consumer.infiles.iter().enumerate() {
+                for (pi, producer) in tasks.iter().enumerate() {
+                    if pi == ci {
+                        continue;
+                    }
+                    for (oi, (_, otpl)) in producer.outfiles.iter().enumerate()
+                    {
+                        match (itpl.const_text(), otpl.const_text()) {
+                            (Some(a), Some(b)) => {
+                                if a == b && !base.has_edge(pi, ci) {
+                                    base.add_edge(pi, ci)?;
+                                }
+                            }
+                            _ => dynamic_pairs.push(DynPair {
+                                producer: pi,
+                                outfile: oi,
+                                consumer: ci,
+                                infile: ii,
+                            }),
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(CompiledStudy {
+            table,
+            tasks,
+            expansions,
+            base_dag: Arc::new(base),
+            dynamic_pairs,
+        })
+    }
+
+    /// The study's interned value tables.
+    pub fn table(&self) -> &Arc<ValueTable> {
+        &self.table
+    }
+
+    /// True when every inferred file edge is instance-invariant (the DAG
+    /// is shared by `Arc` across all instances).
+    pub fn dag_is_shared(&self) -> bool {
+        self.dynamic_pairs.is_empty()
+    }
+
+    fn eval_into(&self, tpl: &Tpl, digits: &[u32], out: &mut String) {
+        for seg in &tpl.segs {
+            match seg {
+                Seg::Lit(s) => out.push_str(s),
+                Seg::Ref(r) => out.push_str(self.table.value(*r, digits)),
+                Seg::Expand { pref, exp } => {
+                    let d = digits[pref.axis as usize] as usize;
+                    self.eval_into(
+                        &self.expansions[*exp as usize].tpls[d],
+                        digits,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Assemble one template: a single traversal into a `String` sized
+    /// by the compile-time upper bound — no parsing, no lookups by name,
+    /// no reallocation, no error paths.
+    fn eval(&self, tpl: &Tpl, digits: &[u32]) -> String {
+        let mut out = String::with_capacity(tpl.max_len);
+        self.eval_into(tpl, digits, &mut out);
+        out
+    }
+
+    /// Instantiate combination `index` (pre-decoded into per-axis
+    /// `digits`): pure value plugging. Only a dynamic file edge that
+    /// would create a cycle can error.
+    pub fn instantiate(&self, index: u64, digits: &[u32]) -> Result<WorkflowInstance> {
+        let mut tasks = Vec::with_capacity(self.tasks.len());
+        for ct in &self.tasks {
+            let argv = match &ct.argv_plan {
+                ArgvPlan::Const(a) => a.clone(),
+                ArgvPlan::PerArg(args) => {
+                    args.iter().map(|t| self.eval(t, digits)).collect()
+                }
+                ArgvPlan::Split => {
+                    shell_split(&self.eval(&ct.command, digits))
+                }
+            };
+            let mut env = std::collections::BTreeMap::new();
+            for (var, tpl) in &ct.env {
+                env.insert(var.clone(), self.eval(tpl, digits));
+            }
+            let infiles = ct
+                .infiles
+                .iter()
+                .map(|(k, t)| (k.clone(), self.eval(t, digits)))
+                .collect();
+            let outfiles = ct
+                .outfiles
+                .iter()
+                .map(|(k, t)| (k.clone(), self.eval(t, digits)))
+                .collect();
+            let substitutions = ct
+                .substitutions
+                .iter()
+                .map(|(p, t)| (p.clone(), self.eval(t, digits)))
+                .collect();
+            tasks.push(ConcreteTask {
+                instance: index,
+                task_id: ct.id.clone(),
+                argv,
+                env,
+                infiles,
+                outfiles,
+                substitutions,
+            });
+        }
+
+        // Dynamic file edges: clone-on-write — the shared base DAG is
+        // cloned only for instances where a parameterized path pair
+        // actually matches (and the edge isn't already structural).
+        let mut own: Option<Dag> = None;
+        for pair in &self.dynamic_pairs {
+            let inpath = &tasks[pair.consumer].infiles[pair.infile].1;
+            let outpath = &tasks[pair.producer].outfiles[pair.outfile].1;
+            if inpath != outpath {
+                continue;
+            }
+            let current: &Dag = own.as_ref().unwrap_or(&self.base_dag);
+            if !current.has_edge(pair.producer, pair.consumer) {
+                own.get_or_insert_with(|| (*self.base_dag).clone())
+                    .add_edge(pair.producer, pair.consumer)?;
+            }
+        }
+        let dag = match own {
+            Some(d) => Arc::new(d),
+            None => Arc::clone(&self.base_dag),
+        };
+
+        Ok(WorkflowInstance {
+            index,
+            combo: Combo::Indexed {
+                digits: digits.to_vec(),
+                table: Arc::clone(&self.table),
+            },
+            tasks,
+            dag,
+        })
+    }
+
+    /// Decode + instantiate in one call.
+    pub fn instantiate_at(&self, space: &Space, index: u64) -> Result<WorkflowInstance> {
+        self.instantiate(index, &space.digits(index)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Param;
+    use crate::wdl::{parse_str, Format};
+
+    fn load(yaml: &str) -> (StudySpec, Space) {
+        let spec =
+            StudySpec::from_doc(&parse_str(yaml, Format::Yaml).unwrap()).unwrap();
+        let mut params: Vec<Param> = Vec::new();
+        let mut fixed: Vec<Vec<String>> = Vec::new();
+        for t in &spec.tasks {
+            for p in t.local_params() {
+                params.push(Param {
+                    name: format!("{}:{}", t.id, p.name),
+                    values: p.values,
+                });
+            }
+            for clause in &t.fixed {
+                fixed.push(
+                    clause.iter().map(|n| format!("{}:{n}", t.id)).collect(),
+                );
+            }
+        }
+        let space = Space::new(params, &fixed).unwrap();
+        (spec, space)
+    }
+
+    fn assert_equivalent(yaml: &str) {
+        let (spec, space) = load(yaml);
+        let compiled = CompiledStudy::compile(&spec, &space).unwrap();
+        for i in 0..space.len() {
+            let naive = WorkflowInstance::materialize(
+                &spec,
+                i,
+                space.combination(i).unwrap(),
+            )
+            .unwrap();
+            let fast = compiled.instantiate_at(&space, i).unwrap();
+            assert_eq!(naive.tasks, fast.tasks, "instance {i} diverged");
+            assert_eq!(naive.combo, fast.combo, "combo {i} diverged");
+            for n in 0..naive.dag.len() {
+                assert_eq!(
+                    naive.dag.dependencies(n),
+                    fast.dag.dependencies(n),
+                    "dag deps of node {n} diverged at instance {i}"
+                );
+            }
+        }
+    }
+
+    const FIG5: &str = "matmulOMP:\n  environ:\n    OMP_NUM_THREADS:\n      - 1:8\n  args:\n    size:\n      - 16:*2:16384\n  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt\n";
+
+    #[test]
+    fn figure5_compiled_equals_naive_for_all_88() {
+        assert_equivalent(FIG5);
+    }
+
+    #[test]
+    fn figure5_shares_one_dag_arc() {
+        let (spec, space) = load(FIG5);
+        let c = CompiledStudy::compile(&spec, &space).unwrap();
+        assert!(c.dag_is_shared());
+        let a = c.instantiate_at(&space, 0).unwrap();
+        let b = c.instantiate_at(&space, 87).unwrap();
+        assert!(Arc::ptr_eq(&a.dag, &b.dag), "instances must share the DAG");
+    }
+
+    #[test]
+    fn nested_value_in_value_and_escapes() {
+        assert_equivalent(
+            "t:\n  command: run ${stem}.log cost $$${v}\n  stem: [run_${v}]\n  v: [64, 128]\n",
+        );
+    }
+
+    #[test]
+    fn env_and_substitute_full_interpolation() {
+        assert_equivalent(
+            "sim:\n  command: run model.xml\n  beta: [0.1, 0.2]\n  environ:\n    TAG: [b_${beta}]\n  infiles:\n    model: model_${beta}.xml\n  outfiles:\n    out: result_${beta}.csv\n  substitute:\n    'beta=\\S+':\n      - beta=${beta}\n",
+        );
+    }
+
+    #[test]
+    fn const_file_edges_precomputed_and_dynamic_edges_rechecked() {
+        // const-const pair → edge lives in the shared base DAG
+        let (spec, space) = load(
+            "gen:\n  command: make-data\n  outfiles:\n    d: data.bin\nuse:\n  command: consume\n  infiles:\n    d: data.bin\n",
+        );
+        let c = CompiledStudy::compile(&spec, &space).unwrap();
+        assert!(c.dag_is_shared());
+        let inst = c.instantiate_at(&space, 0).unwrap();
+        let gen = inst.dag.index_of("gen").unwrap();
+        let use_ = inst.dag.index_of("use").unwrap();
+        assert!(inst.dag.has_edge(gen, use_));
+
+        // parameterized pair → re-checked per instance, still equivalent
+        assert_equivalent(
+            "gen:\n  command: make-data\n  v: [1, 2]\n  outfiles:\n    d: data_${v}.bin\nuse:\n  command: consume\n  infiles:\n    d: data_${gen:v}.bin\n",
+        );
+        let (spec, space) = load(
+            "gen:\n  command: make-data\n  v: [1, 2]\n  outfiles:\n    d: data_${v}.bin\nuse:\n  command: consume\n  infiles:\n    d: data_${gen:v}.bin\n",
+        );
+        let c = CompiledStudy::compile(&spec, &space).unwrap();
+        assert!(!c.dag_is_shared());
+        let inst = c.instantiate_at(&space, 0).unwrap();
+        let gen = inst.dag.index_of("gen").unwrap();
+        let use_ = inst.dag.index_of("use").unwrap();
+        assert!(inst.dag.has_edge(gen, use_));
+    }
+
+    #[test]
+    fn cyclic_values_rejected_at_compile_time() {
+        let (spec, space) =
+            load("t:\n  command: run ${a}\n  a: [x${b}]\n  b: [y${a}]\n");
+        let e = CompiledStudy::compile(&spec, &space).unwrap_err();
+        assert!(e.to_string().contains("cyclic"), "{e}");
+    }
+
+    #[test]
+    fn unresolved_reference_rejected_at_compile_time() {
+        let (spec, space) = load("t:\n  command: run ${nope}\n  v: [1]\n");
+        let e = CompiledStudy::compile(&spec, &space).unwrap_err();
+        assert!(e.to_string().contains("unresolved"), "{e}");
+    }
+
+    #[test]
+    fn const_command_is_pretokenized() {
+        let (spec, space) =
+            load("t:\n  command: echo 'a b' $$HOME\n  v: [1, 2]\n");
+        let c = CompiledStudy::compile(&spec, &space).unwrap();
+        let inst = c.instantiate_at(&space, 0).unwrap();
+        assert_eq!(inst.tasks[0].argv, vec!["echo", "a b", "$HOME"]);
+        assert_equivalent("t:\n  command: echo 'a b' $$HOME\n  v: [1, 2]\n");
+    }
+
+    #[test]
+    fn values_with_quotes_and_spaces_tokenize_identically() {
+        assert_equivalent(
+            "t:\n  command: run ${v} end\n  v: [\"a b\", plain]\n",
+        );
+    }
+
+    #[test]
+    fn empty_value_falls_back_to_per_instance_tokenization() {
+        // An empty plugged value collapses a token in the naive path; the
+        // pre-split plan must bail so both paths tokenize identically.
+        let spec = StudySpec {
+            tasks: vec![crate::wdl::TaskSpec {
+                id: "t".to_string(),
+                command: "run ${v} end".to_string(),
+                params: vec![Param::new(
+                    "v",
+                    vec![String::new(), "x".to_string()],
+                )],
+                ..Default::default()
+            }],
+        };
+        let space = Space::cartesian(vec![Param::new(
+            "t:v",
+            vec![String::new(), "x".to_string()],
+        )])
+        .unwrap();
+        let c = CompiledStudy::compile(&spec, &space).unwrap();
+        for i in 0..2 {
+            let naive = WorkflowInstance::materialize(
+                &spec,
+                i,
+                space.combination(i).unwrap(),
+            )
+            .unwrap();
+            let fast = c.instantiate_at(&space, i).unwrap();
+            assert_eq!(naive.tasks, fast.tasks, "instance {i}");
+        }
+    }
+}

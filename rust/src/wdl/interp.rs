@@ -15,8 +15,9 @@
 use crate::params::{Combination, Value};
 use crate::util::error::{Error, Result};
 
-/// Maximum nested-interpolation depth before declaring a cycle.
-const MAX_DEPTH: usize = 16;
+/// Maximum nested-interpolation depth before declaring a cycle. Shared
+/// with `wdl::compile`, which enforces the same budget at compile time.
+pub const MAX_DEPTH: usize = 16;
 
 /// Per-combination interpolation context.
 pub struct Interpolator<'a> {
@@ -84,39 +85,60 @@ impl<'a> Interpolator<'a> {
     /// Resolve a reference path (`keyword`, `keyword:value`,
     /// `task:keyword`, or `task:keyword:value`).
     fn resolve(&self, path: &str) -> Result<Value> {
-        if path.is_empty() {
-            return Err(Error::Interp("empty ${} reference".into()));
-        }
-        // 1. Task-local: prefix with our own task id.
-        let local = format!("{}:{}", self.task_id, path);
-        if let Some(v) = self.combo.get(&local) {
-            return Ok(v.clone());
-        }
-        // 2. Inter-task: the path already starts with a task id.
-        if let Some(v) = self.combo.get(path) {
-            return Ok(v.clone());
-        }
-        // Diagnose: list close names to help typos.
-        let mut near: Vec<&str> = self
-            .combo
-            .keys()
-            .filter(|k| k.ends_with(path.rsplit(':').next().unwrap_or(path)))
-            .map(String::as_str)
-            .collect();
-        near.truncate(3);
-        Err(Error::Interp(format!(
-            "unresolved reference '${{{path}}}' in task '{}'{}",
+        resolve_path(
             self.task_id,
-            if near.is_empty() {
-                String::new()
-            } else {
-                format!(" (did you mean one of {near:?}?)")
-            }
-        )))
+            path,
+            |key| self.combo.get(key).cloned(),
+            |tail| {
+                self.combo
+                    .keys()
+                    .filter(|k| k.ends_with(tail))
+                    .cloned()
+                    .collect()
+            },
+        )
     }
 }
 
-fn utf8_len(b: u8) -> usize {
+/// The reference-resolution precedence shared by this naive interpolator
+/// and the WDL compiler (`wdl::compile`): **task-local first**
+/// (`task:path`), then **global** (`path` already carries a task id).
+/// Both paths must resolve identically for compiled ≡ naive to hold, so
+/// the walk — and the typo-hint diagnostic — live here, parameterized
+/// over the lookup. `near` lists candidate names ending in the path's
+/// last segment (at most 3 are shown).
+pub(crate) fn resolve_path<T>(
+    task_id: &str,
+    path: &str,
+    lookup: impl Fn(&str) -> Option<T>,
+    near: impl FnOnce(&str) -> Vec<String>,
+) -> Result<T> {
+    if path.is_empty() {
+        return Err(Error::Interp("empty ${} reference".into()));
+    }
+    // 1. Task-local: prefix with the referencing task's id.
+    if let Some(v) = lookup(&format!("{task_id}:{path}")) {
+        return Ok(v);
+    }
+    // 2. Inter-task: the path already starts with a task id.
+    if let Some(v) = lookup(path) {
+        return Ok(v);
+    }
+    // Diagnose: list close names to help typos.
+    let tail = path.rsplit(':').next().unwrap_or(path);
+    let mut near = near(tail);
+    near.truncate(3);
+    Err(Error::Interp(format!(
+        "unresolved reference '${{{path}}}' in task '{task_id}'{}",
+        if near.is_empty() {
+            String::new()
+        } else {
+            format!(" (did you mean one of {near:?}?)")
+        }
+    )))
+}
+
+pub(crate) fn utf8_len(b: u8) -> usize {
     match b {
         0xC0..=0xDF => 2,
         0xE0..=0xEF => 3,

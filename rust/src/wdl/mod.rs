@@ -8,9 +8,12 @@
 //!
 //! Pipeline: format parser (`yamlite` / `json` / `ini`) → common `doc::
 //! Node` model → [`ast`] typing → [`validate`] → [`range`] expansion →
-//! `params` combinatorics → [`interp`] per-combination interpolation.
+//! `params` combinatorics → [`compile`] (templates pre-parsed once per
+//! study, instances assembled by value plugging) with [`interp`] as the
+//! per-combination naive reference path.
 
 pub mod ast;
+pub mod compile;
 pub mod doc;
 pub mod interp;
 pub mod merge;
@@ -18,6 +21,7 @@ pub mod range;
 pub mod validate;
 
 pub use ast::{StudySpec, TaskSpec, WDL_KEYWORDS};
+pub use compile::CompiledStudy;
 pub use doc::Node;
 
 use crate::util::{Error, Result};

@@ -90,6 +90,12 @@ impl Dag {
         &self.dependents[i]
     }
 
+    /// True when the edge `dep → node` already exists. O(log E) — use
+    /// this in inference loops instead of scanning a dependency list.
+    pub fn has_edge(&self, dep: usize, node: usize) -> bool {
+        self.dependencies[node].contains(&dep)
+    }
+
     /// Add an edge (dep → node). Used by file-dependency inference after
     /// initial construction. Errors if it would create a cycle.
     pub fn add_edge(&mut self, dep: usize, node: usize) -> Result<()> {
@@ -227,5 +233,13 @@ mod tests {
             Dag::new(&[node("a", &[]), node("b", &[]), node("c", &["b"])]).unwrap();
         dag2.add_edge(0, 2).unwrap();
         assert!(dag2.dependencies(2).contains(&0));
+    }
+
+    #[test]
+    fn has_edge_queries() {
+        let dag = Dag::new(&[node("a", &[]), node("b", &["a"])]).unwrap();
+        assert!(dag.has_edge(0, 1));
+        assert!(!dag.has_edge(1, 0));
+        assert!(!dag.has_edge(0, 0));
     }
 }

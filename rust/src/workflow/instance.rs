@@ -1,12 +1,108 @@
 //! Workflow instances: one parameter combination applied to the study's
 //! task graph (§4.1: "a workflow corresponds to an instance having a
 //! unique parameter combination").
+//!
+//! Two materialization paths produce the same [`WorkflowInstance`]:
+//!
+//! * the **naive** path ([`WorkflowInstance::materialize`]) re-parses
+//!   every template and rebuilds the DAG per instance — the reference
+//!   semantics, kept for tests and as a fallback; and
+//! * the **compiled** path (`wdl::compile::CompiledStudy::instantiate`),
+//!   which plugs interned axis values into pre-parsed templates and
+//!   shares the pre-built structural DAG — the hot path at scale.
+//!
+//! [`Combo`] abstracts the combination over both: an owned string map
+//! (naive) or a compact per-axis digit vector plus a shared interned
+//! [`ValueTable`] (compiled). Equality is semantic, so compiled ≡ naive
+//! assertions compare cleanly.
 
 use super::dag::Dag;
 use super::task::ConcreteTask;
-use crate::params::Combination;
+use crate::params::{Combination, ValueTable};
 use crate::util::error::Result;
 use crate::wdl::StudySpec;
+use std::sync::Arc;
+
+/// The parameter combination of one instance — owned map (naive path) or
+/// digits + shared interned table (compiled path).
+#[derive(Debug, Clone)]
+pub enum Combo {
+    /// Owned `name → value` map, as decoded by `Space::combination`.
+    Map(Combination),
+    /// Compact form: per-axis digit vector; values live once in the
+    /// study-wide interned table.
+    Indexed {
+        /// Per-axis value indices (mixed-radix digits of the
+        /// combination index).
+        digits: Vec<u32>,
+        /// The study's interned value tables (shared by all instances).
+        table: Arc<ValueTable>,
+    },
+}
+
+impl Combo {
+    /// The chosen value of a fully-scoped parameter name.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        match self {
+            Combo::Map(m) => m.get(name).map(|v| v.as_str()),
+            Combo::Indexed { digits, table } => {
+                let r = table.resolve(name)?;
+                Some(table.value(r, digits).as_ref())
+            }
+        }
+    }
+
+    /// `(name, value)` pairs in name order (both representations agree).
+    pub fn pairs(&self) -> Vec<(&str, &str)> {
+        match self {
+            Combo::Map(m) => {
+                m.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect()
+            }
+            Combo::Indexed { digits, table } => table.pairs(digits).collect(),
+        }
+    }
+
+    /// Number of parameters in the combination.
+    pub fn len(&self) -> usize {
+        match self {
+            Combo::Map(m) => m.len(),
+            Combo::Indexed { table, .. } => table.len(),
+        }
+    }
+
+    /// True when the study has no parameters.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into an owned string-keyed map (display/tests only).
+    pub fn to_map(&self) -> Combination {
+        match self {
+            Combo::Map(m) => m.clone(),
+            Combo::Indexed { digits, table } => table.combination(digits),
+        }
+    }
+}
+
+impl PartialEq for Combo {
+    /// Semantic equality: the same `name → value` mapping, regardless of
+    /// representation (so naive and compiled instances compare equal).
+    fn eq(&self, other: &Combo) -> bool {
+        match (self, other) {
+            (Combo::Map(a), Combo::Map(b)) => a == b,
+            _ => {
+                self.len() == other.len()
+                    && self.pairs().into_iter().eq(other.pairs())
+            }
+        }
+    }
+}
+
+impl From<Combination> for Combo {
+    fn from(m: Combination) -> Combo {
+        Combo::Map(m)
+    }
+}
 
 /// A materialized workflow: every task of the study instantiated under
 /// one combination, plus the dependency DAG.
@@ -15,17 +111,19 @@ pub struct WorkflowInstance {
     /// Combination index within the (possibly sampled) space.
     pub index: u64,
     /// The combination itself (globally-scoped names).
-    pub combo: Combination,
+    pub combo: Combo,
     /// Concrete tasks, ordered as in the study spec (DAG node i =
     /// tasks[i]).
     pub tasks: Vec<ConcreteTask>,
     /// Dependency DAG over `tasks` (explicit `after` + inferred file
-    /// dependencies).
-    pub dag: Dag,
+    /// dependencies). Instances whose file edges are instance-invariant
+    /// share one `Arc` under the compiled path.
+    pub dag: Arc<Dag>,
 }
 
 impl WorkflowInstance {
-    /// Materialize instance `index` of `study` under `combo`.
+    /// Materialize instance `index` of `study` under `combo` — the naive
+    /// reference path: every template re-interpolated, the DAG rebuilt.
     pub fn materialize(
         study: &StudySpec,
         index: u64,
@@ -51,19 +149,25 @@ impl WorkflowInstance {
                         continue;
                     }
                     if producer.outfiles.iter().any(|(_, op)| op == inpath)
-                        && !dag.dependencies(ci).contains(&pi)
+                        && !dag.has_edge(pi, ci)
                     {
                         dag.add_edge(pi, ci)?;
                     }
                 }
             }
         }
-        Ok(WorkflowInstance { index, combo, tasks, dag })
+        Ok(WorkflowInstance {
+            index,
+            combo: Combo::Map(combo),
+            tasks,
+            dag: Arc::new(dag),
+        })
     }
 
-    /// Short display id, e.g. `wf-0042`.
+    /// Short display id, e.g. `wf-00000042` (8 digits keep workdir names
+    /// fixed-width and lexicographically ordered beyond 10k instances).
     pub fn display_id(&self) -> String {
-        format!("wf-{:04}", self.index)
+        format!("wf-{:08}", self.index)
     }
 
     /// The command lines of every task (Figure 6 regenerates these).
@@ -137,6 +241,7 @@ mod tests {
         let gen = inst.dag.index_of("gen").unwrap();
         let use_ = inst.dag.index_of("use").unwrap();
         assert!(inst.dag.dependencies(use_).contains(&gen));
+        assert!(inst.dag.has_edge(gen, use_));
     }
 
     #[test]
@@ -147,6 +252,25 @@ mod tests {
             WorkflowInstance::materialize(&s, 0, space.combination(0).unwrap())
                 .unwrap();
         assert_eq!(inst.dag.topo_order().unwrap().len(), 2);
-        assert_eq!(inst.display_id(), "wf-0000");
+        assert_eq!(inst.display_id(), "wf-00000000");
+    }
+
+    #[test]
+    fn combo_representations_compare_semantically() {
+        let s = study("t:\n  command: run ${v}\n  v: [1, 2]\n");
+        let space = global_space(&s);
+        let table = Arc::new(crate::params::ValueTable::build(&space));
+        let map = Combo::Map(space.combination(1).unwrap());
+        let idx = Combo::Indexed {
+            digits: space.digits(1).unwrap(),
+            table,
+        };
+        assert_eq!(map, idx);
+        assert_eq!(map.get("t:v"), Some("2"));
+        assert_eq!(idx.get("t:v"), Some("2"));
+        assert_eq!(idx.get("t:nope"), None);
+        assert_eq!(map.pairs(), idx.pairs());
+        assert_eq!(map.to_map(), idx.to_map());
+        assert_eq!(idx.len(), 1);
     }
 }

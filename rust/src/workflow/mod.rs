@@ -23,7 +23,7 @@ pub mod source;
 pub mod task;
 
 pub use dag::Dag;
-pub use instance::WorkflowInstance;
+pub use instance::{Combo, WorkflowInstance};
 pub use profiler::{Profiler, TaskRecord};
 pub use scheduler::{ExecOrder, ExecutionReport, WorkflowScheduler};
 pub use source::{InstanceCursor, InstanceSource, Selection, Shard};

@@ -20,7 +20,7 @@
 use super::instance::WorkflowInstance;
 use crate::params::Space;
 use crate::util::error::{Error, Result};
-use crate::wdl::StudySpec;
+use crate::wdl::{CompiledStudy, StudySpec};
 
 /// Which combination indices of a [`Space`] a study will run.
 #[derive(Debug, Clone, PartialEq)]
@@ -146,23 +146,42 @@ impl std::fmt::Display for Shard {
 /// A lazy, index-addressable source of workflow instances: the study's
 /// spec + space + selection (+ shard), materializing one instance per
 /// request. Copyable — it borrows the study, holds no instance state.
+///
+/// When a [`CompiledStudy`] is attached ([`InstanceSource::with_compiled`])
+/// each request runs the compiled instantiate phase — index lookups plus
+/// pre-sized string assembly — instead of the naive re-interpolation
+/// path. Both paths yield identical instances (asserted by the
+/// `compiled ≡ naive` property tests).
 #[derive(Debug, Clone, Copy)]
 pub struct InstanceSource<'a> {
     spec: &'a StudySpec,
     space: &'a Space,
     selection: &'a Selection,
     shard: Shard,
+    compiled: Option<&'a CompiledStudy>,
 }
 
 impl<'a> InstanceSource<'a> {
-    /// New source over `selection` of `space`, restricted to `shard`.
+    /// New source over `selection` of `space`, restricted to `shard`
+    /// (naive materialization; see [`InstanceSource::with_compiled`]).
     pub fn new(
         spec: &'a StudySpec,
         space: &'a Space,
         selection: &'a Selection,
         shard: Shard,
     ) -> InstanceSource<'a> {
-        InstanceSource { spec, space, selection, shard }
+        InstanceSource { spec, space, selection, shard, compiled: None }
+    }
+
+    /// Serve instances from the compiled materialization pipeline.
+    pub fn with_compiled(mut self, compiled: &'a CompiledStudy) -> Self {
+        self.compiled = Some(compiled);
+        self
+    }
+
+    /// True when requests run the compiled instantiate phase.
+    pub fn is_compiled(&self) -> bool {
+        self.compiled.is_some()
     }
 
     /// Number of instances this source will yield (post-shard).
@@ -190,7 +209,8 @@ impl<'a> InstanceSource<'a> {
     }
 
     /// Materialize the `pos`-th instance of this source — and nothing
-    /// else. O(#params) per call, independent of the space size.
+    /// else. O(#params) per call, independent of the space size. Runs
+    /// the compiled instantiate phase when one is attached.
     pub fn get(&self, pos: u64) -> Result<WorkflowInstance> {
         let index = self.global_index(pos).ok_or_else(|| {
             Error::Params(format!(
@@ -198,11 +218,14 @@ impl<'a> InstanceSource<'a> {
                 self.len()
             ))
         })?;
-        WorkflowInstance::materialize(
-            self.spec,
-            index,
-            self.space.combination(index)?,
-        )
+        match self.compiled {
+            Some(c) => c.instantiate_at(self.space, index),
+            None => WorkflowInstance::materialize(
+                self.spec,
+                index,
+                self.space.combination(index)?,
+            ),
+        }
     }
 
     /// Streaming cursor over every instance of this source, in
@@ -368,6 +391,24 @@ mod tests {
         let inst = it.nth(50).unwrap().unwrap();
         assert_eq!(inst.index, 50);
         assert_eq!(it.len(), 37); // 88 - 51
+    }
+
+    #[test]
+    fn compiled_source_yields_identical_instances() {
+        let (spec, space) = fig5();
+        let sel = Selection::All { total: space.len() };
+        let compiled = crate::wdl::CompiledStudy::compile(&spec, &space).unwrap();
+        let naive = InstanceSource::new(&spec, &space, &sel, Shard::default());
+        let fast = naive.with_compiled(&compiled);
+        assert!(fast.is_compiled() && !naive.is_compiled());
+        for pos in [0u64, 1, 43, 87] {
+            let a = naive.get(pos).unwrap();
+            let b = fast.get(pos).unwrap();
+            assert_eq!(a.tasks, b.tasks);
+            assert_eq!(a.combo, b.combo);
+            assert_eq!(a.command_lines(), b.command_lines());
+        }
+        assert!(fast.get(88).is_err());
     }
 
     #[test]

@@ -127,7 +127,7 @@ fn executors_agree_on_results() {
     let collect = |study: &Study| -> Vec<String> {
         let mut outs = Vec::new();
         for i in 0..study.n_instances() as u64 {
-            let d = study.db_root.join("work").join(format!("wf-{i:04}"));
+            let d = study.db_root.join("work").join(format!("wf-{i:08}"));
             for e in std::fs::read_dir(&d).unwrap() {
                 let p = e.unwrap().path();
                 if p.extension().is_some_and(|x| x == "txt") {

@@ -6,9 +6,10 @@ use papas::cluster::{BatchJob, ClusterSim, Regime, SimConfig};
 use papas::params::{Param, Sampling, Space};
 use papas::study::Study;
 use papas::util::proptest::{check, Gen};
+use papas::wdl::ast::Substitute;
 use papas::wdl::interp::Interpolator;
 use papas::wdl::range;
-use papas::wdl::{parse_str, Format};
+use papas::wdl::{parse_str, CompiledStudy, Format, StudySpec, TaskSpec};
 use papas::workflow::{Dag, Selection, Shard, WorkflowInstance};
 use papas::{ini, yamlite};
 use std::collections::BTreeSet;
@@ -181,6 +182,137 @@ fn sharded_sources_cover_fig6_exactly_once() {
         assert_eq!(seen.len(), 88, "{n} shards must cover all 88 instances");
         assert!(seen.contains("matmul 16 result_16N_1T.txt"));
         assert!(seen.contains("matmul 16384 result_16384N_8T.txt"));
+    }
+}
+
+/// Random study for compiled ≡ naive equivalence: two tasks whose
+/// templates mix literals, `$$` escapes, intra- and inter-task `${...}`
+/// refs, and values that themselves interpolate (nested `${a}` inside
+/// the value of `${b}`, acyclic by construction: param i only references
+/// params j < i).
+fn arb_study(g: &mut Gen) -> (StudySpec, Space) {
+    let n_params = g.usize(1..=3);
+    let mut params: Vec<Param> = Vec::new();
+    for i in 0..n_params {
+        let vals = g.vec(1..=3, |g| {
+            let mut v = g.ident();
+            if i > 0 && g.bool(0.4) {
+                // nested value-in-value reference to an earlier param
+                let j = g.usize(0..=i - 1);
+                v.push_str(&format!("_${{p{j}}}"));
+            }
+            if g.bool(0.25) {
+                v.push_str("$$x"); // escaped dollar inside a value
+            }
+            v
+        });
+        params.push(Param::new(format!("p{i}"), vals));
+    }
+
+    let mut command = String::from("run");
+    for i in 0..n_params {
+        command.push_str(&format!(" ${{p{i}}}"));
+    }
+    if g.bool(0.5) {
+        command.push_str(" cost $$5"); // escaped dollar in a template
+    }
+
+    let mut producer = TaskSpec {
+        id: "t0".to_string(),
+        command,
+        params,
+        ..TaskSpec::default()
+    };
+    if g.bool(0.5) {
+        producer.environ.push(Param::new(
+            "environ:EV",
+            vec![format!("e_${{p0}}"), "plain$$v".to_string()],
+        ));
+    }
+    if g.bool(0.5) {
+        producer
+            .outfiles
+            .push(("d".to_string(), "data_${p0}.bin".to_string()));
+    }
+    if g.bool(0.4) {
+        producer.substitute.push(Substitute {
+            pattern: "x=\\S+".to_string(),
+            values: vec!["x=${p0}".to_string(), "x=$$fixed".to_string()],
+        });
+    }
+
+    let mut consumer = TaskSpec {
+        id: "t1".to_string(),
+        command: "consume ${q0} from ${t0:p0}".to_string(),
+        params: vec![Param::new("q0", g.vec(1..=2, |g| g.ident()))],
+        ..TaskSpec::default()
+    };
+    if !producer.outfiles.is_empty() && g.bool(0.6) {
+        // parameterized file edge: re-inferred per instance
+        consumer
+            .infiles
+            .push(("d".to_string(), "data_${t0:p0}.bin".to_string()));
+    }
+    if g.bool(0.3) {
+        consumer.after.push("t0".to_string());
+    }
+
+    let spec = StudySpec { tasks: vec![producer, consumer] };
+    let mut scoped: Vec<Param> = Vec::new();
+    for t in &spec.tasks {
+        for p in t.local_params() {
+            scoped.push(Param {
+                name: format!("{}:{}", t.id, p.name),
+                values: p.values,
+            });
+        }
+    }
+    let space = Space::cartesian(scoped).unwrap();
+    (spec, space)
+}
+
+#[test]
+fn prop_compiled_instantiation_is_byte_identical_to_naive() {
+    check("compiled ≡ naive ConcreteTasks", 50, |g| {
+        let (spec, space) = arb_study(g);
+        let compiled = CompiledStudy::compile(&spec, &space).unwrap();
+        for i in 0..space.len() {
+            let naive = WorkflowInstance::materialize(
+                &spec,
+                i,
+                space.combination(i).unwrap(),
+            )
+            .unwrap();
+            let fast = compiled.instantiate(i, &space.digits(i).unwrap()).unwrap();
+            // byte-identical argv, env, files, substitutions
+            assert_eq!(naive.tasks, fast.tasks, "instance {i} diverged");
+            assert_eq!(naive.combo, fast.combo, "combo {i} diverged");
+            assert_eq!(naive.command_lines(), fast.command_lines());
+            assert_eq!(naive.dag.len(), fast.dag.len());
+            for n in 0..naive.dag.len() {
+                assert_eq!(
+                    naive.dag.dependencies(n),
+                    fast.dag.dependencies(n),
+                    "dag deps of node {n} diverged at instance {i}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn fig6_command_lines_byte_identical_under_compiled_path() {
+    // The Figure 6 matmul study's 88 instances: the compiled pipeline
+    // must regenerate every command line byte-for-byte.
+    let study = fig5_study();
+    assert!(study.compiled().is_some(), "fig5 must compile");
+    assert!(study.source().is_compiled());
+    for i in 0..study.n_instances() as u64 {
+        let fast = study.instance_at(i).unwrap();
+        let naive = study.instance_at_naive(i).unwrap();
+        assert_eq!(fast.command_lines(), naive.command_lines());
+        assert_eq!(fast.tasks, naive.tasks, "instance {i} diverged");
+        assert_eq!(fast.combo, naive.combo);
     }
 }
 

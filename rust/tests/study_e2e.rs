@@ -49,7 +49,7 @@ fn pipeline_study_runs_dependencies_in_order() {
     let beta = combo["gen:beta"].as_str();
     let seed = combo["sim:seed"].as_str();
     let summary = std::fs::read_to_string(
-        dir.join(".papas/work/wf-0000")
+        dir.join(".papas/work/wf-00000000")
             .join(format!("summary_{beta}_{seed}.txt")),
     )
     .unwrap();
@@ -70,7 +70,7 @@ fn cdiff_intervention_sweep_runs_on_hlo() {
     // real dynamics: at least one run shows colonization
     let mut any_colonized = false;
     for i in 0..study.n_instances() as u64 {
-        let wdir = dir.join(".papas/work").join(format!("wf-{i:04}"));
+        let wdir = dir.join(".papas/work").join(format!("wf-{i:08}"));
         let csv = std::fs::read_dir(&wdir)
             .unwrap()
             .filter_map(|e| e.ok())
@@ -103,7 +103,7 @@ fn ensemble_aggregation_workflow() {
     for (i, beta) in [(0u64, "0.2"), (1u64, "0.5")] {
         let path = dir
             .join(".papas/work")
-            .join(format!("wf-{i:04}"))
+            .join(format!("wf-{i:08}"))
             .join(format!("ensemble_beta{beta}.csv"));
         let text = std::fs::read_to_string(&path).unwrap();
         let mut lines = text.lines();
@@ -158,7 +158,7 @@ fn matmul_small_study_hlo_and_native_paths() {
     let report = study.run_local(2).unwrap();
     assert!(report.all_ok());
     // outputs written with the interpolated names of Figure 6
-    let f = dir.join(".papas/work/wf-0000/result_16N_1T.txt");
+    let f = dir.join(".papas/work/wf-00000000/result_16N_1T.txt");
     let text = std::fs::read_to_string(&f).unwrap();
     assert!(text.contains("path=hlo"), "size 16 should use the artifact: {text}");
 }

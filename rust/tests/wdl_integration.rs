@@ -135,7 +135,7 @@ fn substitute_parameter_rewrites_staged_file() {
         let text = std::fs::read_to_string(
             dir.join(".papas")
                 .join("work")
-                .join(format!("wf-{i:04}"))
+                .join(format!("wf-{i:08}"))
                 .join("seen_a.txt"),
         )
         .unwrap();
