@@ -45,7 +45,8 @@ pub enum ParsedCommand {
 
 /// Switches (no value) per subcommand; everything else starting with
 /// `--` takes a value.
-const SWITCHES: &[&str] = &["fresh", "dot", "quiet", "concat", "gantt"];
+const SWITCHES: &[&str] =
+    &["fresh", "dot", "quiet", "concat", "gantt", "resume", "complete-only"];
 
 impl Args {
     /// Parse a full argv (without the program name).
@@ -154,7 +155,24 @@ mod tests {
         assert_eq!(a.opt_num::<usize>("workers", 1).unwrap(), 4);
         assert!(a.has_flag("fresh"));
         assert!(!a.has_flag("dot"));
+        assert!(!a.has_flag("resume"));
         assert_eq!(a.require_positional("study file").unwrap(), "study.yaml");
+    }
+
+    #[test]
+    fn fault_flags_parse_as_switch_and_options() {
+        let ParsedCommand::Run(a) = Args::parse(&sv(&[
+            "run", "s.yaml", "--resume", "--timeout", "30", "--retries", "2",
+            "--on-failure", "retry-budget:5", "--backoff", "100",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert!(a.has_flag("resume"));
+        assert_eq!(a.opt_num::<f64>("timeout", 0.0).unwrap(), 30.0);
+        assert_eq!(a.opt_num::<u32>("retries", 0).unwrap(), 2);
+        assert_eq!(a.opt_or("on-failure", "continue"), "retry-budget:5");
+        assert_eq!(a.opt_num::<u64>("backoff", 0).unwrap(), 100);
     }
 
     #[test]

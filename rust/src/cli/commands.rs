@@ -21,6 +21,8 @@ USAGE:
   papas run STUDY.yaml [overlay.yaml ...] [--workers N] [--mode local|mpi|ssh]
             [--nnodes N] [--ppnode P] [--hosts a:p,b:p] [--artifacts DIR]
             [--db DIR] [--fresh] [--shard I/N] [--order dfs|bfs] [--window N]
+            [--timeout S] [--retries N] [--backoff MS] [--resume]
+            [--on-failure fail-fast|continue|retry-budget:N]
   papas resume STUDY.yaml [...]        continue from the checkpoint
   papas validate STUDY.yaml [...]      parse + validate, print warnings
   papas combos STUDY.yaml [--limit N] [--shard I/N]
@@ -31,6 +33,7 @@ USAGE:
   papas qsim --jobs N --regime optimal|serial|common [--nodes N] [--gantt]
              [--duration S] [--nnodes N] [--ppnode P] [--seed S]
   papas aggregate STUDY.yaml [--pattern RE] [--out FILE] [--concat]
+                  [--complete-only]
   papas dax STUDY.yaml [--instance N]       Pegasus DAX export (§9)
   papas status [DB-DIR] [--gantt]           inspect a study database
   papas help";
@@ -67,6 +70,26 @@ fn load_study_opts(a: &Args, with_runtime: bool) -> Result<Study> {
     if a.options.contains_key("window") {
         study = study.with_window(a.opt_num("window", 0usize)?.max(1));
     }
+    if a.options.contains_key("timeout") {
+        let secs: f64 = a.opt_num("timeout", 0.0)?;
+        if !secs.is_finite() || secs <= 0.0 {
+            return Err(Error::Exec(format!(
+                "--timeout must be positive seconds, got '{secs}'"
+            )));
+        }
+        study = study.with_timeout(secs);
+    }
+    if a.options.contains_key("retries") {
+        study = study.with_retries(a.opt_num("retries", 0u32)?);
+    }
+    if let Some(raw) = a.options.get("on-failure") {
+        let policy = crate::exec::FailurePolicy::parse(raw)
+            .map_err(Error::Exec)?;
+        study = study.with_policy(policy);
+    }
+    if a.options.contains_key("backoff") {
+        study = study.with_backoff_ms(a.opt_num("backoff", 0u64)?);
+    }
     if !with_runtime {
         return Ok(study);
     }
@@ -78,14 +101,27 @@ fn load_study_opts(a: &Args, with_runtime: bool) -> Result<Study> {
     Ok(study)
 }
 
-/// `papas run` / `papas resume`.
+/// `papas run` / `papas resume` (`papas run --resume` is the explicit
+/// spelling of the latter).
 pub fn cmd_run(a: &Args, resume: bool) -> Result<()> {
+    let resume = resume || a.has_flag("resume");
     let study = load_study(a)?;
     for w in &study.warnings {
         eprintln!("warning: {w}");
     }
     if a.has_flag("fresh") && !resume {
         study.clear_checkpoint()?;
+    }
+    if resume {
+        let ckpt = crate::study::Checkpoint::load(&study.db_root)?;
+        if !ckpt.done_keys.is_empty() || !ckpt.failed_keys.is_empty() {
+            println!(
+                "resume: {} tasks already done (skipped), {} previously \
+                 failed will re-run",
+                ckpt.done_keys.len(),
+                ckpt.failed_keys.len()
+            );
+        }
     }
     let mode = a.opt_or("mode", "local");
     let shard = study.shard_config();
@@ -115,15 +151,23 @@ pub fn cmd_run(a: &Args, resume: bool) -> Result<()> {
         other => Err(Error::Exec(format!("unknown mode '{other}'"))),
     }?;
     println!(
-        "done: {} completed, {} failed, {} skipped, {} restored | makespan \
+        "done: {} completed, {} failed, {} skipped, {} restored{} | makespan \
          {:.3}s | utilization {:.0}%",
         report.completed,
         report.failed,
         report.skipped,
         report.restored,
+        if report.halted { " | HALTED (fail-fast)" } else { "" },
         report.makespan,
         report.utilization * 100.0
     );
+    if report.halted {
+        return Err(Error::Exec(
+            "run halted by fail-fast; re-run with --resume to continue the \
+             remainder"
+                .into(),
+        ));
+    }
     if !report.all_ok() {
         return Err(Error::Exec("some tasks failed".into()));
     }
@@ -290,8 +334,38 @@ pub fn cmd_status(a: &Args) -> Result<()> {
         snap.expect_i64("n_selected")?
     );
     let ckpt = crate::study::Checkpoint::load(&db)?;
-    println!("checkpoint: {} tasks completed", ckpt.done_keys.len());
+    println!(
+        "checkpoint: {} tasks completed, {} failed terminally",
+        ckpt.done_keys.len(),
+        ckpt.failed_keys.len()
+    );
     let prov = crate::workflow::provenance::Provenance::open(&db)?;
+    let attempts = prov.read_attempts()?;
+    if !attempts.is_empty() {
+        let retries = attempts.iter().filter(|a| a.attempt > 1).count();
+        let mut by_class: std::collections::BTreeMap<&str, usize> =
+            std::collections::BTreeMap::new();
+        for a in &attempts {
+            if let Some(c) = a.class {
+                *by_class.entry(c.label()).or_insert(0) += 1;
+            }
+        }
+        let classes = by_class
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "attempts: {} total, {} retries{}",
+            attempts.len(),
+            retries,
+            if classes.is_empty() {
+                String::new()
+            } else {
+                format!(" | failures by class: {classes}")
+            }
+        );
+    }
     let records = prov.read_records()?;
     if !records.is_empty() {
         let ok = records.iter().filter(|r| r.ok).count();
@@ -333,7 +407,13 @@ pub fn cmd_aggregate(a: &Args) -> Result<()> {
     } else {
         crate::study::AggregateMode::Csv
     };
-    let n = crate::study::aggregate(&study, &pattern, mode, &out)?;
+    let n = crate::study::aggregate_filtered(
+        &study,
+        &pattern,
+        mode,
+        &out,
+        a.has_flag("complete-only"),
+    )?;
     println!("aggregated {n} files matching '{pattern}' -> {}", out.display());
     Ok(())
 }
@@ -466,6 +546,61 @@ mod tests {
             &[("db", db.to_str().unwrap()), ("order", "sideways")],
         );
         assert!(cmd_run(&bad, false).is_err());
+    }
+
+    #[test]
+    fn run_command_fail_fast_then_resume_runs_remainder() {
+        let p = study_file(
+            "failfastcli",
+            // v=3 fails until the unlock marker appears next to work/
+            "t:\n  command: /bin/sh -c \"test ${v} -ne 3 || test -f ../unlock\"\n  v: [1, 2, 3, 4, 5]\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        let dbs = db.to_str().unwrap();
+        let a = args(
+            &[p.to_str().unwrap()],
+            &[
+                ("workers", "1"),
+                ("db", dbs),
+                ("on-failure", "fail-fast"),
+            ],
+        );
+        // halted: the run errors and tells the user to resume
+        let err = cmd_run(&a, false).unwrap_err();
+        assert!(err.to_string().contains("fail-fast"), "{err}");
+        let ckpt = crate::study::Checkpoint::load(&db).unwrap();
+        assert_eq!(ckpt.done_keys.len(), 2); // v=1, v=2 only
+        assert!(ckpt.failed_keys.contains("t#2"));
+
+        // unblock v=3 and resume: only the remainder runs
+        std::fs::write(db.join("work/unlock"), "").unwrap();
+        let mut a = args(&[p.to_str().unwrap()], &[("workers", "1"), ("db", dbs)]);
+        a.flags.push("resume".into());
+        cmd_run(&a, false).unwrap();
+        let ckpt = crate::study::Checkpoint::load(&db).unwrap();
+        assert_eq!(ckpt.done_keys.len(), 5);
+        assert!(ckpt.failed_keys.is_empty());
+    }
+
+    #[test]
+    fn run_command_retries_flaky_task_and_status_reports_attempts() {
+        let p = study_file(
+            "flakycli",
+            // first attempt plants a marker and fails; the retry passes
+            "t:\n  command: /bin/sh -c \"test -f done_${v} || { touch done_${v}; exit 1; }\"\n  retries: 1\n  v: [1, 2]\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        let a = args(
+            &[p.to_str().unwrap()],
+            &[("workers", "2"), ("db", db.to_str().unwrap())],
+        );
+        cmd_run(&a, false).unwrap();
+        let prov = crate::workflow::Provenance::open(&db).unwrap();
+        let attempts = prov.read_attempts().unwrap();
+        assert_eq!(attempts.len(), 4); // 2 instances × (1 fail + 1 ok)
+        assert_eq!(attempts.iter().filter(|r| r.will_retry).count(), 2);
+        // the status view summarizes the attempt log without erroring
+        cmd_status(&args(&[db.to_str().unwrap()], &[])).unwrap();
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Fault model of the execution engine: how task failures are
+//! classified, when they are retried, and what the study does about
+//! them.
+//!
+//! The paper positions PaPaS for multi-tenant systems where PaPaS "will
+//! run as user processes" — task failures, stragglers, and preemption
+//! are normal operating conditions there, not exceptions. This module
+//! holds the three vocabulary types the rest of the engine shares:
+//!
+//! * [`ErrorClass`] — why an attempt failed (spawn / timeout / nonzero /
+//!   killed), recorded verbatim in the per-task attempt log;
+//! * [`FailurePolicy`] — the study-level reaction to a terminal task
+//!   failure (`fail-fast` | `continue` | `retry-budget N`), settable via
+//!   the WDL `on_failure` key or `papas run --on-failure`;
+//! * [`backoff_delay`] — the exponential backoff schedule between retry
+//!   attempts of one task.
+//!
+//! Per-task knobs (`timeout`, `retries`) travel on
+//! [`crate::workflow::ConcreteTask`]; enforcement is split between the
+//! runner (timeouts: kill + reap) and the scheduler (retries, policies).
+
+use std::fmt;
+use std::time::Duration;
+
+/// Why a task attempt failed. `None` on a [`super::TaskResult`] means
+/// the attempt succeeded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// The task never ran: spawn failure, staging error, empty argv.
+    Spawn,
+    /// The task exceeded its wall-clock `timeout` and was killed + reaped.
+    Timeout,
+    /// The task ran to completion with a non-zero exit code (or a
+    /// builtin returned an error).
+    NonZero,
+    /// The task was terminated by an external signal.
+    Killed,
+}
+
+impl ErrorClass {
+    /// Stable lowercase label (attempt log, provenance, CLI output).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorClass::Spawn => "spawn",
+            ErrorClass::Timeout => "timeout",
+            ErrorClass::NonZero => "nonzero",
+            ErrorClass::Killed => "killed",
+        }
+    }
+
+    /// Parse a stable label back (attempt-log deserialization).
+    pub fn parse(s: &str) -> Option<ErrorClass> {
+        match s {
+            "spawn" => Some(ErrorClass::Spawn),
+            "timeout" => Some(ErrorClass::Timeout),
+            "nonzero" => Some(ErrorClass::NonZero),
+            "killed" => Some(ErrorClass::Killed),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ErrorClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Study-level reaction to a terminal task failure.
+///
+/// Declared once per study (the WDL `on_failure` key on any task — the
+/// first declaration wins — or `papas run --on-failure ...`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FailurePolicy {
+    /// Stop admitting work at the first terminal failure: pending
+    /// retries are cancelled, no new instances enter the window, and the
+    /// run drains what is already in flight. Retries never happen under
+    /// fail-fast.
+    FailFast,
+    /// Record the failure, skip its dependents, keep going (the
+    /// default). Tasks retry only when they declare `retries`.
+    #[default]
+    Continue,
+    /// Like `continue`, plus a study-wide budget of N extra attempts
+    /// shared by all failing tasks. A task with its own `retries` key is
+    /// still capped per-task; a task without one may draw on the budget
+    /// freely. Once the budget is spent, failures become terminal.
+    RetryBudget(u32),
+}
+
+impl FailurePolicy {
+    /// Parse `fail-fast` | `continue` | `retry-budget N` (also accepts
+    /// `retry-budget:N` and `retry-budget=N`). Returns a plain message
+    /// so callers can wrap it in their own subsystem error.
+    pub fn parse(s: &str) -> std::result::Result<FailurePolicy, String> {
+        let norm = s.trim().to_ascii_lowercase();
+        match norm.as_str() {
+            "fail-fast" | "failfast" | "fail_fast" => {
+                return Ok(FailurePolicy::FailFast)
+            }
+            "continue" => return Ok(FailurePolicy::Continue),
+            _ => {}
+        }
+        let rest = norm
+            .strip_prefix("retry-budget")
+            .or_else(|| norm.strip_prefix("retry_budget"))
+            .ok_or_else(|| {
+                format!(
+                    "unknown failure policy '{s}' (expected fail-fast, \
+                     continue, or retry-budget N)"
+                )
+            })?;
+        let digits = rest.trim_start_matches([' ', ':', '=']).trim();
+        digits
+            .parse()
+            .map(FailurePolicy::RetryBudget)
+            .map_err(|_| {
+                format!("retry-budget needs a non-negative count, got '{s}'")
+            })
+    }
+}
+
+impl fmt::Display for FailurePolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FailurePolicy::FailFast => f.write_str("fail-fast"),
+            FailurePolicy::Continue => f.write_str("continue"),
+            FailurePolicy::RetryBudget(n) => write!(f, "retry-budget {n}"),
+        }
+    }
+}
+
+/// Ceiling of the exponential backoff schedule.
+const BACKOFF_CAP_MS: u64 = 60_000;
+
+/// Delay before retry attempt `attempt + 1`, given that `attempt`
+/// executions have already happened: `base × 2^(attempt-1)`, capped at
+/// [`BACKOFF_CAP_MS`]. A zero base disables backoff entirely (the
+/// hermetic-test configuration — no sleeps anywhere).
+pub fn backoff_delay(base_ms: u64, attempt: u32) -> Duration {
+    if base_ms == 0 {
+        return Duration::ZERO;
+    }
+    let shift = attempt.saturating_sub(1).min(16);
+    Duration::from_millis(base_ms.saturating_mul(1u64 << shift).min(BACKOFF_CAP_MS))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_class_labels_round_trip() {
+        for c in [
+            ErrorClass::Spawn,
+            ErrorClass::Timeout,
+            ErrorClass::NonZero,
+            ErrorClass::Killed,
+        ] {
+            assert_eq!(ErrorClass::parse(c.label()), Some(c));
+        }
+        assert_eq!(ErrorClass::parse("exploded"), None);
+    }
+
+    #[test]
+    fn policy_parse_accepts_all_spellings() {
+        assert_eq!(
+            FailurePolicy::parse("fail-fast").unwrap(),
+            FailurePolicy::FailFast
+        );
+        assert_eq!(
+            FailurePolicy::parse("continue").unwrap(),
+            FailurePolicy::Continue
+        );
+        for s in ["retry-budget 5", "retry-budget:5", "retry-budget=5", "RETRY-BUDGET 5"] {
+            assert_eq!(
+                FailurePolicy::parse(s).unwrap(),
+                FailurePolicy::RetryBudget(5),
+                "{s}"
+            );
+        }
+        assert!(FailurePolicy::parse("panic").is_err());
+        assert!(FailurePolicy::parse("retry-budget lots").is_err());
+    }
+
+    #[test]
+    fn policy_display_round_trips_through_parse() {
+        for p in [
+            FailurePolicy::FailFast,
+            FailurePolicy::Continue,
+            FailurePolicy::RetryBudget(7),
+        ] {
+            assert_eq!(FailurePolicy::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff_delay(0, 1), Duration::ZERO);
+        assert_eq!(backoff_delay(100, 1), Duration::from_millis(100));
+        assert_eq!(backoff_delay(100, 2), Duration::from_millis(200));
+        assert_eq!(backoff_delay(100, 3), Duration::from_millis(400));
+        assert_eq!(backoff_delay(100, 32), Duration::from_millis(BACKOFF_CAP_MS));
+        assert_eq!(backoff_delay(u64::MAX, 9), Duration::from_millis(BACKOFF_CAP_MS));
+    }
+}

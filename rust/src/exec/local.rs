@@ -2,22 +2,31 @@
 //! ("PaPaS runs easily on a local laptop or workstation", §4.2).
 
 use super::runner::TaskRunner;
-use super::{Completion, Executor};
+use super::{Completion, Executor, TaskExec};
 use crate::util::error::Result;
 use crate::workflow::ConcreteTask;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 /// A fixed pool of worker threads pulling from the shared ready channel.
+/// Generic over the single-task execution backend ([`TaskExec`]): the
+/// production [`TaskRunner`], or a deterministic
+/// [`super::scripted::Script`] in hermetic tests — the pool's
+/// fan-out/ordering behavior is identical either way.
 pub struct LocalPool {
-    runner: Arc<TaskRunner>,
+    exec: Arc<dyn TaskExec>,
     workers: usize,
 }
 
 impl LocalPool {
-    /// Pool with `workers` threads (min 1).
+    /// Pool with `workers` threads (min 1) over the production runner.
     pub fn new(runner: Arc<TaskRunner>, workers: usize) -> LocalPool {
-        LocalPool { runner, workers: workers.max(1) }
+        LocalPool::with_exec(runner, workers)
+    }
+
+    /// Pool over an arbitrary task-execution backend.
+    pub fn with_exec(exec: Arc<dyn TaskExec>, workers: usize) -> LocalPool {
+        LocalPool { exec, workers: workers.max(1) }
     }
 }
 
@@ -43,7 +52,7 @@ impl Executor for LocalPool {
             for w in 0..self.workers {
                 let shared = shared.clone();
                 let done = done.clone();
-                let runner = self.runner.clone();
+                let exec = self.exec.clone();
                 s.spawn(move || {
                     let label = format!("local-{w}");
                     loop {
@@ -52,7 +61,7 @@ impl Executor for LocalPool {
                             rx.recv()
                         };
                         let Ok(task) = task else { break }; // channel closed
-                        let mut result = runner.run(&task);
+                        let mut result = exec.exec(&task);
                         result.worker = label.clone();
                         if done.send((task, result)).is_err() {
                             break; // scheduler gone
@@ -97,6 +106,8 @@ mod tests {
             infiles: vec![],
             outfiles: vec![],
             substitutions: vec![],
+            timeout: None,
+            retries: 0,
         }
     }
 

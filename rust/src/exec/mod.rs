@@ -16,17 +16,39 @@
 //! on another; the [`crate::workflow::scheduler`] drives dependency
 //! resolution above them, so scheduling policy and transport are fully
 //! decoupled.
+//!
+//! A fourth backend, [`scripted`], replays a deterministic script of
+//! outcomes through the same worker loop — the hermetic test double for
+//! the whole fault path (timeouts, retries, failure policies, resume).
+//! The fault vocabulary itself ([`ErrorClass`], [`FailurePolicy`],
+//! backoff) lives in [`fault`].
 
+pub mod fault;
 pub mod local;
 pub mod mpi;
 pub mod runner;
+pub mod scripted;
 pub mod ssh;
 
+pub use fault::{backoff_delay, ErrorClass, FailurePolicy};
 pub use runner::{RunConfig, TaskResult, TaskRunner};
+pub use scripted::{Outcome, Script, ScriptedExecutor};
 
 use crate::workflow::ConcreteTask;
 use crate::util::error::Result;
 use std::sync::mpsc::{Receiver, Sender};
+
+/// Executes one task to completion, synchronously. [`TaskRunner`] is the
+/// production implementation (staging, builtins, subprocesses with
+/// timeout kill + reap); [`Script`] is the deterministic in-process
+/// implementation the hermetic tests run against. Worker pools are
+/// generic over this, so parallelism/ordering invariants are testable
+/// without spawning anything.
+pub trait TaskExec: Send + Sync {
+    /// Run `task`, never panicking on task failure — all failures land
+    /// in the result.
+    fn exec(&self, task: &ConcreteTask) -> TaskResult;
+}
 
 /// A completed task notification.
 pub type Completion = (ConcreteTask, TaskResult);

@@ -253,6 +253,8 @@ mod tests {
             infiles: vec![],
             outfiles: vec![],
             substitutions: vec![],
+            timeout: None,
+            retries: 0,
         }
     }
 

@@ -1,13 +1,17 @@
 //! Single-task execution: staging, substitution, builtin dispatch or
-//! subprocess spawn, output capture. Shared by every executor backend
-//! (and by the SSH worker daemon on the far side of the wire).
+//! subprocess spawn, output capture, wall-clock timeout enforcement
+//! (kill + reap). Shared by every executor backend (and by the SSH
+//! worker daemon on the far side of the wire).
 
+use super::fault::ErrorClass;
+use super::TaskExec;
 use crate::tasks::Builtins;
 use crate::util::error::{Error, Result};
 use crate::util::stats::Stopwatch;
 use crate::workflow::ConcreteTask;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// How a runner executes tasks.
 pub struct RunConfig {
@@ -31,17 +35,21 @@ impl RunConfig {
     }
 }
 
-/// Outcome of one task execution.
+/// Outcome of one task execution attempt.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskResult {
     /// Success flag (exit code 0 / builtin Ok).
     pub ok: bool,
-    /// Exit code (0 for successful builtins, -1 for spawn failures).
+    /// Exit code (0 for successful builtins, -1 for spawn failures,
+    /// timeouts, and signal deaths).
     pub exit_code: i32,
     /// First ~4 KiB of stdout / builtin summary (provenance).
     pub stdout: String,
     /// Error description when `!ok`.
     pub error: Option<String>,
+    /// Failure classification when `!ok` (spawn/timeout/nonzero/killed);
+    /// `None` on success.
+    pub class: Option<ErrorClass>,
     /// Wall-clock duration in seconds (the §4.2 task profiler's datum).
     pub duration: f64,
     /// Label of the worker that ran it (filled by the executor).
@@ -49,12 +57,17 @@ pub struct TaskResult {
 }
 
 impl TaskResult {
-    fn failure(msg: String, duration: f64) -> TaskResult {
+    pub(crate) fn failure(
+        msg: String,
+        duration: f64,
+        class: ErrorClass,
+    ) -> TaskResult {
         TaskResult {
             ok: false,
             exit_code: -1,
             stdout: String::new(),
             error: Some(msg),
+            class: Some(class),
             duration,
             worker: String::new(),
         }
@@ -84,7 +97,13 @@ impl TaskRunner {
         let sw = Stopwatch::start();
         match self.run_inner(task) {
             Ok(r) => r,
-            Err(e) => TaskResult::failure(e.to_string(), sw.elapsed_secs()),
+            // Pre-execution failures (staging, empty argv): the task
+            // never started — classified as spawn.
+            Err(e) => TaskResult::failure(
+                e.to_string(),
+                sw.elapsed_secs(),
+                ErrorClass::Spawn,
+            ),
         }
     }
 
@@ -100,16 +119,23 @@ impl TaskRunner {
             .ok_or_else(|| Error::Exec(format!("task '{}' has empty argv", task.key())))?;
 
         if self.builtins.is_builtin(argv0) {
+            // Builtins run in-process: a thread cannot be killed, so the
+            // wall-clock `timeout` applies to subprocess tasks only.
             match self.builtins.run(&task.argv, &task.env, &workdir) {
                 Ok(out) => Ok(TaskResult {
                     ok: true,
                     exit_code: 0,
                     stdout: out.summary,
                     error: None,
+                    class: None,
                     duration: sw.elapsed_secs(),
                     worker: String::new(),
                 }),
-                Err(e) => Ok(TaskResult::failure(e.to_string(), sw.elapsed_secs())),
+                Err(e) => Ok(TaskResult::failure(
+                    e.to_string(),
+                    sw.elapsed_secs(),
+                    ErrorClass::NonZero,
+                )),
             }
         } else {
             self.run_subprocess(task, &workdir, sw)
@@ -117,6 +143,19 @@ impl TaskRunner {
     }
 
     fn run_subprocess(
+        &self,
+        task: &ConcreteTask,
+        workdir: &Path,
+        sw: Stopwatch,
+    ) -> Result<TaskResult> {
+        match task.timeout {
+            None => self.run_subprocess_blocking(task, workdir, sw),
+            Some(limit) => self.run_subprocess_deadline(task, workdir, sw, limit),
+        }
+    }
+
+    /// The no-timeout path: one blocking `output()` call.
+    fn run_subprocess_blocking(
         &self,
         task: &ConcreteTask,
         workdir: &Path,
@@ -130,30 +169,171 @@ impl TaskRunner {
             .output();
         let duration = sw.elapsed_secs();
         match output {
-            Ok(out) => {
-                let code = out.status.code().unwrap_or(-1);
-                let mut stdout = String::from_utf8_lossy(&out.stdout).into_owned();
-                stdout.truncate(4096);
-                Ok(TaskResult {
-                    ok: out.status.success(),
-                    exit_code: code,
-                    stdout,
-                    error: if out.status.success() {
-                        None
-                    } else {
-                        let mut err = String::from_utf8_lossy(&out.stderr).into_owned();
-                        err.truncate(1024);
-                        Some(format!("exit code {code}: {err}"))
-                    },
-                    duration,
-                    worker: String::new(),
-                })
-            }
+            Ok(out) => Ok(classify_exit(out.status, &out.stdout, &out.stderr, duration)),
             Err(e) => Ok(TaskResult::failure(
                 format!("spawn '{}': {e}", task.argv[0]),
                 duration,
+                ErrorClass::Spawn,
             )),
         }
+    }
+
+    /// The timeout path: spawn with piped output, drain the pipes on
+    /// helper threads (a chatty child must not deadlock against the wait
+    /// loop), poll `try_wait` until the deadline, then kill + reap.
+    fn run_subprocess_deadline(
+        &self,
+        task: &ConcreteTask,
+        workdir: &Path,
+        sw: Stopwatch,
+        limit: f64,
+    ) -> Result<TaskResult> {
+        use std::io::Read;
+        use std::process::{Command, Stdio};
+
+        let spawned = Command::new(&task.argv[0])
+            .args(&task.argv[1..])
+            .envs(&task.env)
+            .current_dir(workdir)
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn();
+        let mut child = match spawned {
+            Ok(c) => c,
+            Err(e) => {
+                return Ok(TaskResult::failure(
+                    format!("spawn '{}': {e}", task.argv[0]),
+                    sw.elapsed_secs(),
+                    ErrorClass::Spawn,
+                ))
+            }
+        };
+        let mut out_pipe = child.stdout.take().expect("stdout piped");
+        let mut err_pipe = child.stderr.take().expect("stderr piped");
+        let out_h = std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            let _ = out_pipe.read_to_end(&mut buf);
+            buf
+        });
+        let err_h = std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            let _ = err_pipe.read_to_end(&mut buf);
+            buf
+        });
+
+        let deadline = Instant::now() + Duration::from_secs_f64(limit.max(0.0));
+        let mut poll = Duration::from_micros(200);
+        let status = loop {
+            match child.try_wait() {
+                Ok(Some(st)) => break Some(st),
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        break None;
+                    }
+                    std::thread::sleep(poll);
+                    // Escalate the poll interval: tight for short tasks,
+                    // cheap for long ones.
+                    poll = (poll * 2).min(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    let _ = child.kill();
+                    let _ = child.wait(); // reap
+                    let _ = out_h.join();
+                    let _ = err_h.join();
+                    return Ok(TaskResult::failure(
+                        format!("wait '{}': {e}", task.argv[0]),
+                        sw.elapsed_secs(),
+                        ErrorClass::Spawn,
+                    ));
+                }
+            }
+        };
+        if status.is_none() {
+            // Timeout: kill, then wait() to reap — no zombie survives.
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        let stdout = out_h.join().unwrap_or_default();
+        let stderr = err_h.join().unwrap_or_default();
+        let duration = sw.elapsed_secs();
+        match status {
+            Some(st) => Ok(classify_exit(st, &stdout, &stderr, duration)),
+            None => {
+                let mut r = TaskResult::failure(
+                    format!("timed out after {limit}s (killed + reaped)"),
+                    duration,
+                    ErrorClass::Timeout,
+                );
+                r.stdout = truncated(&stdout, 4096);
+                Ok(r)
+            }
+        }
+    }
+}
+
+impl TaskExec for TaskRunner {
+    fn exec(&self, task: &ConcreteTask) -> TaskResult {
+        self.run(task)
+    }
+}
+
+/// Lossy-decode and cap captured output. The cap is a byte budget;
+/// the cut backs up to a char boundary (a fixed-index `truncate`
+/// panics mid-UTF-8-character and would kill the worker thread).
+fn truncated(bytes: &[u8], cap: usize) -> String {
+    let mut s = String::from_utf8_lossy(bytes).into_owned();
+    if s.len() > cap {
+        let mut end = cap;
+        while end > 0 && !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        s.truncate(end);
+    }
+    s
+}
+
+/// Build the result for a reaped exit status: success, non-zero exit, or
+/// death by external signal (`code()` is `None`).
+fn classify_exit(
+    status: std::process::ExitStatus,
+    stdout: &[u8],
+    stderr: &[u8],
+    duration: f64,
+) -> TaskResult {
+    let stdout = truncated(stdout, 4096);
+    if status.success() {
+        return TaskResult {
+            ok: true,
+            exit_code: 0,
+            stdout,
+            error: None,
+            class: None,
+            duration,
+            worker: String::new(),
+        };
+    }
+    let err_tail = truncated(stderr, 1024);
+    let (exit_code, class, error) = match status.code() {
+        Some(code) => (
+            code,
+            ErrorClass::NonZero,
+            format!("exit code {code}: {err_tail}"),
+        ),
+        None => (
+            -1,
+            ErrorClass::Killed,
+            format!("killed by signal: {err_tail}"),
+        ),
+    };
+    TaskResult {
+        ok: false,
+        exit_code,
+        stdout,
+        error: Some(error),
+        class: Some(class),
+        duration,
+        worker: String::new(),
     }
 }
 
@@ -228,6 +408,8 @@ mod tests {
             infiles: vec![],
             outfiles: vec![],
             substitutions: vec![],
+            timeout: None,
+            retries: 0,
         }
     }
 
@@ -245,6 +427,7 @@ mod tests {
         let res = r.run(&task(&["sleep-ms", "1"]));
         assert!(res.ok, "{res:?}");
         assert_eq!(res.exit_code, 0);
+        assert_eq!(res.class, None);
         assert!(res.duration >= 0.0);
     }
 
@@ -255,14 +438,17 @@ mod tests {
         let ok = r.run(&task(&["/bin/sh", "-c", "echo hello"]));
         assert!(ok.ok, "{ok:?}");
         assert!(ok.stdout.contains("hello"));
+        assert_eq!(ok.class, None);
 
         let fail = r.run(&task(&["/bin/sh", "-c", "exit 3"]));
         assert!(!fail.ok);
         assert_eq!(fail.exit_code, 3);
+        assert_eq!(fail.class, Some(ErrorClass::NonZero));
 
         let noexist = r.run(&task(&["/definitely/not/a/binary"]));
         assert!(!noexist.ok);
         assert!(noexist.error.as_deref().unwrap_or("").contains("spawn"));
+        assert_eq!(noexist.class, Some(ErrorClass::Spawn));
     }
 
     #[test]
@@ -273,6 +459,66 @@ mod tests {
         t.env.insert("PAPAS_X".into(), "42".into());
         let res = r.run(&t);
         assert!(res.stdout.contains("42"), "{res:?}");
+    }
+
+    #[test]
+    fn timeout_kills_and_reaps_hung_subprocess() {
+        let root = tmp("timeout");
+        let r = runner(&root);
+        let mut t = task(&["/bin/sh", "-c", "echo started; sleep 30"]);
+        t.timeout = Some(0.1);
+        let sw = Stopwatch::start();
+        let res = r.run(&t);
+        let elapsed = sw.elapsed_secs();
+        assert!(!res.ok, "{res:?}");
+        assert_eq!(res.class, Some(ErrorClass::Timeout));
+        assert_eq!(res.exit_code, -1);
+        assert!(res.error.as_deref().unwrap().contains("timed out"));
+        // partial output captured before the kill
+        assert!(res.stdout.contains("started"), "{res:?}");
+        // killed promptly — nowhere near the 30s sleep
+        assert!(elapsed < 5.0, "took {elapsed}s");
+    }
+
+    #[test]
+    fn fast_task_beats_its_timeout() {
+        let root = tmp("fasttimeout");
+        let r = runner(&root);
+        let mut t = task(&["/bin/sh", "-c", "echo quick"]);
+        t.timeout = Some(10.0);
+        let res = r.run(&t);
+        assert!(res.ok, "{res:?}");
+        assert!(res.stdout.contains("quick"));
+        // failures under a timeout still classify as nonzero
+        let mut f = task(&["/bin/sh", "-c", "echo oops >&2; exit 7"]);
+        f.timeout = Some(10.0);
+        let res = r.run(&f);
+        assert_eq!(res.exit_code, 7);
+        assert_eq!(res.class, Some(ErrorClass::NonZero));
+        assert!(res.error.as_deref().unwrap().contains("oops"));
+    }
+
+    #[test]
+    fn truncation_respects_char_boundaries() {
+        // 2000 three-byte chars = 6000 bytes; 4096 % 3 == 1, so a naive
+        // byte-index truncate would panic mid-character.
+        let s = "€".repeat(2000);
+        let t = truncated(s.as_bytes(), 4096);
+        assert!(t.len() <= 4096);
+        assert!(!t.is_empty());
+        assert!(t.chars().all(|c| c == '€'));
+        // short output passes through untouched
+        assert_eq!(truncated("ok".as_bytes(), 4096), "ok");
+    }
+
+    #[test]
+    fn signal_death_classified_as_killed() {
+        let root = tmp("signal");
+        let r = runner(&root);
+        let res = r.run(&task(&["/bin/sh", "-c", "kill -9 $$"]));
+        assert!(!res.ok);
+        assert_eq!(res.class, Some(ErrorClass::Killed));
+        assert_eq!(res.exit_code, -1);
     }
 
     #[test]
@@ -307,6 +553,7 @@ mod tests {
         let res = r.run(&t);
         assert!(!res.ok);
         assert!(res.error.as_deref().unwrap().contains("ghost.dat"));
+        assert_eq!(res.class, Some(ErrorClass::Spawn));
     }
 
     #[test]
@@ -315,5 +562,6 @@ mod tests {
         let r = runner(&root);
         let res = r.run(&task(&[]));
         assert!(!res.ok);
+        assert_eq!(res.class, Some(ErrorClass::Spawn));
     }
 }

@@ -1,0 +1,341 @@
+//! Deterministic in-process executor for hermetic fault testing.
+//!
+//! [`ScriptedExecutor`] is a real [`Executor`] — it sits behind the same
+//! channel protocol and the same [`LocalPool`] worker loop as production
+//! local execution — but instead of spawning subprocesses it consults a
+//! [`Script`] of predetermined [`Outcome`]s: succeed, fail with an exit
+//! code, fail N times then succeed, hang until the simulated timeout, or
+//! fail to spawn. Durations are simulated, never slept, so every
+//! retry/timeout/policy/resume path of the engine can be exercised with
+//! no subprocesses and no wall-clock dependence.
+//!
+//! The script doubles as a journal: it counts executions per task key
+//! and records the order in which tasks reached a worker, which is what
+//! the `LocalPool` ordering/parallelism invariant tests assert against.
+
+use super::local::LocalPool;
+use super::runner::TaskResult;
+use super::{Completion, ErrorClass, Executor, TaskExec};
+use crate::util::error::Result;
+use crate::workflow::ConcreteTask;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// What happens when a scripted task reaches a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Exit 0.
+    Succeed,
+    /// Exit with this (non-zero) code on every attempt.
+    Fail(i32),
+    /// Fail (exit 1) for the first N attempts, then succeed — the
+    /// canonical flaky task.
+    FlakyThenOk(u32),
+    /// Wedge until the task's wall-clock `timeout` fires: the result is
+    /// a timeout kill, with the simulated duration equal to the timeout.
+    /// A hang with no timeout configured is reported as killed by the
+    /// harness (a real one would stall forever).
+    Hang,
+    /// The binary could not be started at all.
+    SpawnError,
+}
+
+/// A deterministic script of task outcomes, keyed by full task key
+/// (`task_id#instance`), falling back to bare `task_id`, falling back to
+/// the default outcome.
+#[derive(Debug)]
+pub struct Script {
+    outcomes: BTreeMap<String, Outcome>,
+    default: Outcome,
+    /// Simulated per-attempt duration (seconds) reported in results.
+    sim_duration: f64,
+    counts: Mutex<BTreeMap<String, u32>>,
+    journal: Mutex<Vec<String>>,
+}
+
+impl Default for Script {
+    fn default() -> Self {
+        Script::new()
+    }
+}
+
+impl Script {
+    /// Everything succeeds until told otherwise.
+    pub fn new() -> Script {
+        Script {
+            outcomes: BTreeMap::new(),
+            default: Outcome::Succeed,
+            sim_duration: 0.001,
+            counts: Mutex::new(BTreeMap::new()),
+            journal: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Script `outcome` for `key` — a full `task_id#instance` key or a
+    /// bare `task_id` (applies to every instance of that task).
+    pub fn on(mut self, key: impl Into<String>, outcome: Outcome) -> Script {
+        self.outcomes.insert(key.into(), outcome);
+        self
+    }
+
+    /// Outcome for every task the script does not name.
+    pub fn default_outcome(mut self, outcome: Outcome) -> Script {
+        self.default = outcome;
+        self
+    }
+
+    /// Simulated duration reported per attempt (seconds).
+    pub fn sim_duration(mut self, secs: f64) -> Script {
+        self.sim_duration = secs;
+        self
+    }
+
+    /// How many times `key` (full `task_id#instance`) reached a worker.
+    pub fn executions(&self, key: &str) -> u32 {
+        self.counts.lock().unwrap().get(key).copied().unwrap_or(0)
+    }
+
+    /// Total executions across every task.
+    pub fn total_executions(&self) -> u32 {
+        self.counts.lock().unwrap().values().sum()
+    }
+
+    /// Task keys in the order workers picked them up.
+    pub fn journal(&self) -> Vec<String> {
+        self.journal.lock().unwrap().clone()
+    }
+
+    fn outcome_for(&self, task: &ConcreteTask, key: &str) -> Outcome {
+        self.outcomes
+            .get(key)
+            .or_else(|| self.outcomes.get(&task.task_id))
+            .copied()
+            .unwrap_or(self.default)
+    }
+
+    fn ok_result(&self, duration: f64) -> TaskResult {
+        TaskResult {
+            ok: true,
+            exit_code: 0,
+            stdout: String::new(),
+            error: None,
+            class: None,
+            duration,
+            worker: String::new(),
+        }
+    }
+
+    fn fail_result(
+        &self,
+        exit_code: i32,
+        class: ErrorClass,
+        error: String,
+        duration: f64,
+    ) -> TaskResult {
+        TaskResult {
+            ok: false,
+            exit_code,
+            stdout: String::new(),
+            error: Some(error),
+            class: Some(class),
+            duration,
+            worker: String::new(),
+        }
+    }
+}
+
+impl TaskExec for Script {
+    fn exec(&self, task: &ConcreteTask) -> TaskResult {
+        let key = task.key();
+        let attempt = {
+            let mut counts = self.counts.lock().unwrap();
+            let n = counts.entry(key.clone()).or_insert(0);
+            *n += 1;
+            *n
+        };
+        self.journal.lock().unwrap().push(key.clone());
+
+        match self.outcome_for(task, &key) {
+            Outcome::Succeed => self.ok_result(self.sim_duration),
+            Outcome::Fail(code) => self.fail_result(
+                code,
+                ErrorClass::NonZero,
+                format!("scripted failure: exit code {code}"),
+                self.sim_duration,
+            ),
+            Outcome::FlakyThenOk(n) if attempt <= n => self.fail_result(
+                1,
+                ErrorClass::NonZero,
+                format!("scripted flake {attempt}/{n}: exit code 1"),
+                self.sim_duration,
+            ),
+            Outcome::FlakyThenOk(_) => self.ok_result(self.sim_duration),
+            Outcome::Hang => match task.timeout {
+                Some(limit) => self.fail_result(
+                    -1,
+                    ErrorClass::Timeout,
+                    format!(
+                        "timed out after {limit}s (scripted hang: killed + \
+                         reaped)"
+                    ),
+                    limit,
+                ),
+                None => self.fail_result(
+                    -1,
+                    ErrorClass::Killed,
+                    "scripted hang with no timeout configured — killed by \
+                     the test harness"
+                        .into(),
+                    self.sim_duration,
+                ),
+            },
+            Outcome::SpawnError => self.fail_result(
+                -1,
+                ErrorClass::Spawn,
+                format!("spawn '{}': scripted spawn failure", task.key()),
+                0.0,
+            ),
+        }
+    }
+}
+
+/// An [`Executor`] that replays a [`Script`] through the production
+/// [`LocalPool`] worker loop — same channels, same fan-out, zero
+/// subprocesses, zero sleeps.
+pub struct ScriptedExecutor {
+    pool: LocalPool,
+    script: Arc<Script>,
+}
+
+impl ScriptedExecutor {
+    /// Executor over `script` with `workers` concurrent workers.
+    pub fn new(script: Arc<Script>, workers: usize) -> ScriptedExecutor {
+        ScriptedExecutor {
+            pool: LocalPool::with_exec(script.clone(), workers),
+            script,
+        }
+    }
+
+    /// The shared script (execution counts + journal).
+    pub fn script(&self) -> &Arc<Script> {
+        &self.script
+    }
+}
+
+impl Executor for ScriptedExecutor {
+    fn name(&self) -> &'static str {
+        "scripted"
+    }
+
+    fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    fn run_all(
+        &self,
+        ready: Receiver<ConcreteTask>,
+        done: Sender<Completion>,
+    ) -> Result<()> {
+        self.pool.run_all(ready, done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap as Map;
+    use std::sync::mpsc;
+
+    fn task(id: &str, instance: u64) -> ConcreteTask {
+        ConcreteTask {
+            instance,
+            task_id: id.into(),
+            argv: vec!["work".into()],
+            env: Map::new(),
+            infiles: vec![],
+            outfiles: vec![],
+            substitutions: vec![],
+            timeout: None,
+            retries: 0,
+        }
+    }
+
+    #[test]
+    fn outcome_precedence_key_then_task_then_default() {
+        let s = Script::new()
+            .default_outcome(Outcome::Fail(9))
+            .on("a", Outcome::Succeed)
+            .on("a#1", Outcome::Fail(3));
+        assert!(s.exec(&task("a", 0)).ok); // task-level
+        assert_eq!(s.exec(&task("a", 1)).exit_code, 3); // key-level wins
+        let r = s.exec(&task("b", 0)); // default
+        assert_eq!(r.exit_code, 9);
+        assert_eq!(r.class, Some(ErrorClass::NonZero));
+    }
+
+    #[test]
+    fn flaky_counts_attempts_per_key() {
+        let s = Script::new().on("f", Outcome::FlakyThenOk(2));
+        assert!(!s.exec(&task("f", 0)).ok);
+        assert!(!s.exec(&task("f", 0)).ok);
+        assert!(s.exec(&task("f", 0)).ok);
+        // other instances flake independently
+        assert!(!s.exec(&task("f", 1)).ok);
+        assert_eq!(s.executions("f#0"), 3);
+        assert_eq!(s.executions("f#1"), 1);
+        assert_eq!(s.total_executions(), 4);
+    }
+
+    #[test]
+    fn hang_honors_simulated_timeout() {
+        let s = Script::new().on("h", Outcome::Hang);
+        let mut t = task("h", 0);
+        t.timeout = Some(2.5);
+        let r = s.exec(&t);
+        assert!(!r.ok);
+        assert_eq!(r.class, Some(ErrorClass::Timeout));
+        assert_eq!(r.duration, 2.5);
+        // no timeout: killed by the harness instead of stalling the test
+        let r = s.exec(&task("h", 1));
+        assert_eq!(r.class, Some(ErrorClass::Killed));
+    }
+
+    #[test]
+    fn scripted_executor_drains_all_tasks_in_parallel() {
+        let script = Arc::new(Script::new());
+        let exec = ScriptedExecutor::new(script.clone(), 4);
+        assert_eq!(exec.name(), "scripted");
+        assert_eq!(exec.workers(), 4);
+        let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        for i in 0..20 {
+            tx.send(task("t", i)).unwrap();
+        }
+        drop(tx);
+        exec.run_all(rx, dtx).unwrap();
+        let results: Vec<Completion> = drx.into_iter().collect();
+        assert_eq!(results.len(), 20);
+        assert!(results.iter().all(|(_, r)| r.ok));
+        assert_eq!(script.total_executions(), 20);
+        let workers: std::collections::BTreeSet<&str> =
+            results.iter().map(|(_, r)| r.worker.as_str()).collect();
+        assert!(workers.len() > 1, "{workers:?}");
+    }
+
+    #[test]
+    fn single_worker_journal_preserves_send_order() {
+        let script = Arc::new(Script::new());
+        let exec = ScriptedExecutor::new(script.clone(), 1);
+        let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        for i in 0..6 {
+            tx.send(task("t", i)).unwrap();
+        }
+        drop(tx);
+        exec.run_all(rx, dtx).unwrap();
+        drop(drx);
+        let expect: Vec<String> = (0..6).map(|i| format!("t#{i}")).collect();
+        assert_eq!(script.journal(), expect);
+    }
+}

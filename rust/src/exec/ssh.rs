@@ -72,6 +72,10 @@ fn result_to_json(r: &TaskResult) -> Json {
             "error".to_string(),
             r.error.as_deref().map(Json::from).unwrap_or(Json::Null),
         ),
+        (
+            "class".to_string(),
+            r.class.map(|c| Json::from(c.label())).unwrap_or(Json::Null),
+        ),
         ("duration".to_string(), Json::Num(r.duration)),
         ("worker".to_string(), Json::from(r.worker.as_str())),
     ])
@@ -83,6 +87,10 @@ fn result_from_json(j: &Json) -> Result<TaskResult> {
         exit_code: j.expect_i64("exit_code")? as i32,
         stdout: j.expect_str("stdout")?.to_string(),
         error: j.get("error").and_then(Json::as_str).map(str::to_string),
+        class: j
+            .get("class")
+            .and_then(Json::as_str)
+            .and_then(crate::exec::ErrorClass::parse),
         duration: j.expect("duration")?.as_f64().unwrap_or(0.0),
         worker: j.expect_str("worker")?.to_string(),
     })
@@ -250,6 +258,7 @@ impl Executor for SshPool {
                             exit_code: -1,
                             stdout: String::new(),
                             error: Some(format!("wire error: {e}")),
+                            class: Some(crate::exec::ErrorClass::Spawn),
                             duration: 0.0,
                             worker: String::new(),
                         });
@@ -298,6 +307,8 @@ mod tests {
             infiles: vec![],
             outfiles: vec![],
             substitutions: vec![],
+            timeout: None,
+            retries: 0,
         }
     }
 

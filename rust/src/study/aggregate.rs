@@ -10,7 +10,7 @@
 //! the aggregator prefixes each row/file with the instance id and its
 //! parameter values, so the provenance survives the merge.
 
-use super::{FileDb, Study};
+use super::{Checkpoint, FileDb, Study};
 use crate::util::error::{Error, Result};
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -34,6 +34,21 @@ pub fn aggregate(
     mode: Mode,
     out_path: &Path,
 ) -> Result<usize> {
+    aggregate_filtered(study, pattern, mode, out_path, false)
+}
+
+/// [`aggregate`] with an optional completeness filter: when
+/// `complete_only` is set, instances with any task key missing from the
+/// checkpoint's `done_keys` are skipped — failed or interrupted
+/// instances contribute no partial outputs to the merge (`papas
+/// aggregate --complete-only`).
+pub fn aggregate_filtered(
+    study: &Study,
+    pattern: &str,
+    mode: Mode,
+    out_path: &Path,
+    complete_only: bool,
+) -> Result<usize> {
     let re = regex::Regex::new(pattern)
         .map_err(|e| Error::Store(format!("aggregate pattern '{pattern}': {e}")))?;
     let mut merged = 0usize;
@@ -42,11 +57,25 @@ pub fn aggregate(
     // Read-only handle: aggregation must work against archived
     // databases, so nothing is created.
     let db = FileDb::at(&study.db_root);
+    let ckpt = if complete_only {
+        Some(Checkpoint::load(&study.db_root)?)
+    } else {
+        None
+    };
 
     // Deterministic ordering: combination-index order, streamed one
     // instance at a time from the lazy source.
     for inst in study.source().iter() {
         let inst = inst?;
+        if let Some(ckpt) = &ckpt {
+            let complete = inst
+                .tasks
+                .iter()
+                .all(|t| ckpt.done_keys.contains(&t.key()));
+            if !complete {
+                continue;
+            }
+        }
         let dir = db.existing_instance_dir(inst.index);
         let Ok(entries) = std::fs::read_dir(&dir) else {
             continue; // instance never ran
@@ -186,6 +215,38 @@ mod tests {
         let text = std::fs::read_to_string(&out).unwrap();
         assert!(text.contains("t:x=10"), "{text}");
         assert!(text.contains("t:x=20"), "{text}");
+    }
+
+    #[test]
+    fn complete_only_skips_failed_instances() {
+        let dir = std::env::temp_dir().join("papas_agg").join("complete");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // x=20 writes its csv but exits non-zero: a partial instance
+        std::fs::write(
+            dir.join("s.yaml"),
+            "t:\n  command: /bin/sh -c \"printf 'a,b\\n1,${x}\\n' > out_${x}.csv; test ${x} -ne 20\"\n  x: [10, 20]\n",
+        )
+        .unwrap();
+        let study = Study::from_file(dir.join("s.yaml"))
+            .unwrap()
+            .with_db_root(dir.join(".papas"));
+        let report = study.run_local(1).unwrap();
+        assert_eq!(report.failed, 1);
+        let out = dir.join("agg.csv");
+        // unfiltered: both instances' files merge
+        let n =
+            aggregate_filtered(&study, r"^out_.*\.csv$", Mode::Csv, &out, false)
+                .unwrap();
+        assert_eq!(n, 2);
+        // complete-only: the failed instance's partial output is skipped
+        let n =
+            aggregate_filtered(&study, r"^out_.*\.csv$", Mode::Csv, &out, true)
+                .unwrap();
+        assert_eq!(n, 1);
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("t:x=10"), "{text}");
+        assert!(!text.contains("t:x=20"), "{text}");
     }
 
     #[test]

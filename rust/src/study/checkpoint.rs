@@ -3,33 +3,50 @@
 //! A parameter study's state can be saved in a workflow file and reloaded
 //! at a later time.")
 //!
-//! The checkpoint is the set of task keys (`task_id#instance`) that have
-//! completed successfully. On restart the scheduler satisfies those
-//! immediately; everything else re-runs. Writes are atomic
-//! (tmp + rename) so a crash mid-checkpoint never corrupts state.
+//! The checkpoint folds every *terminal* task outcome: `done_keys` holds
+//! the task keys (`task_id#instance`) that completed successfully —
+//! restart satisfies those immediately — and `failed_keys` records keys
+//! whose last attempt failed terminally, so `papas run --resume` can
+//! report exactly what will re-run (failed and incomplete work re-runs;
+//! done work never does). Writes are atomic (tmp + rename) so a crash
+//! mid-checkpoint never corrupts state, and the fault engine saves
+//! incrementally during a run, so a killed run resumes from its last
+//! strides rather than from zero.
 //!
 //! Keys use **global** combination indices, which sharded runs preserve
 //! (`papas run --shard I/N`), so checkpoints written by different shards
-//! of the same study never collide and compose by plain union — either
-//! by pointing shards at one shared `--db` directory (each run re-loads
-//! and merges before saving; writers that finish at the *same instant*
-//! can still lose the race between load and rename, so prefer staggered
-//! finishes or a resume pass), or explicitly via [`Checkpoint::merge`]
-//! when each node kept its own database.
+//! of the same study never collide and compose by [`Checkpoint::merge`] —
+//! an idempotent, commutative union in which a success recorded anywhere
+//! beats a stale failure recorded elsewhere. Shards pointed at one shared
+//! `--db` directory serialize their read-modify-write through
+//! [`Checkpoint::commit`], which takes a short-lived lock file around the
+//! load → merge → rename sequence, closing the two-writers race the
+//! plain `load` + `save` pair would have.
 
 use crate::json::{self, Json};
 use crate::util::error::{Error, Result};
 use std::collections::BTreeSet;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 /// A study checkpoint.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Checkpoint {
     /// Keys of successfully completed tasks.
     pub done_keys: BTreeSet<String>,
+    /// Keys whose most recent terminal outcome was a failure (disjoint
+    /// from `done_keys` by construction — success wins).
+    pub failed_keys: BTreeSet<String>,
 }
 
 const FILE: &str = "checkpoint.json";
+const LOCK: &str = "checkpoint.lock";
+
+/// How long a commit waits for the lock before proceeding lock-free
+/// (availability over strictness — the pre-lock behavior).
+const LOCK_WAIT: Duration = Duration::from_secs(5);
+/// A lock file older than this is considered abandoned by a dead writer.
+const LOCK_STALE: Duration = Duration::from_secs(30);
 
 impl Checkpoint {
     /// Load the checkpoint under `db_root` (empty when none exists).
@@ -41,35 +58,40 @@ impl Checkpoint {
         let text = std::fs::read_to_string(&path)?;
         let j = json::parse(&text)
             .map_err(|e| Error::Store(format!("corrupt checkpoint: {e}")))?;
-        let done = j
-            .expect("done")?
-            .as_arr()
-            .ok_or_else(|| Error::Store("checkpoint.done not an array".into()))?
-            .iter()
-            .filter_map(|v| v.as_str().map(str::to_string))
-            .collect();
-        Ok(Checkpoint { done_keys: done })
+        let keys = |field: &Json| -> BTreeSet<String> {
+            field
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect()
+        };
+        let done_field = j.expect("done")?;
+        if done_field.as_arr().is_none() {
+            return Err(Error::Store("checkpoint.done not an array".into()));
+        }
+        let done = keys(done_field);
+        // `failed` arrived with format 2; older files simply lack it.
+        let mut failed = j.get("failed").map(keys).unwrap_or_default();
+        failed.retain(|k| !done.contains(k));
+        Ok(Checkpoint { done_keys: done, failed_keys: failed })
     }
 
     /// Atomically save under `db_root`. The tmp file is suffixed with
     /// this process id so concurrent writers (shards sharing a db) can
-    /// never rename each other's half-written tmp into place; between
-    /// two simultaneous savers the last rename wins, which is why
-    /// callers re-load and merge immediately before saving.
+    /// never rename each other's half-written tmp into place; writers
+    /// that must not lose each other's keys go through
+    /// [`Checkpoint::commit`] instead of racing bare saves.
     pub fn save(&self, db_root: impl AsRef<Path>) -> Result<()> {
         let root = db_root.as_ref();
         std::fs::create_dir_all(root)?;
+        let arr = |keys: &BTreeSet<String>| {
+            Json::Arr(keys.iter().map(|k| Json::from(k.as_str())).collect())
+        };
         let j = Json::obj([
-            ("format".to_string(), Json::from(1i64)),
-            (
-                "done".to_string(),
-                Json::Arr(
-                    self.done_keys
-                        .iter()
-                        .map(|k| Json::from(k.as_str()))
-                        .collect(),
-                ),
-            ),
+            ("format".to_string(), Json::from(2i64)),
+            ("done".to_string(), arr(&self.done_keys)),
+            ("failed".to_string(), arr(&self.failed_keys)),
         ]);
         let tmp = root.join(format!("{FILE}.tmp.{}", std::process::id()));
         std::fs::write(&tmp, json::to_string_pretty(&j))?;
@@ -77,22 +99,110 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Union `other` into this checkpoint (multi-node shard merges:
-    /// shards share global instance indices, so keys never collide —
-    /// the union is exactly the whole-study checkpoint).
+    /// Union `other` into this checkpoint. Idempotent and commutative:
+    /// `merge(a, b) == merge(b, a)`, and merging the same checkpoint
+    /// twice changes nothing. A key marked done on either side ends up
+    /// done (and never failed) — shards share global instance indices,
+    /// so the union over all shards is exactly the whole-study
+    /// checkpoint.
     pub fn merge(&mut self, other: &Checkpoint) {
         for k in &other.done_keys {
             self.done_keys.insert(k.clone());
         }
+        for k in &other.failed_keys {
+            self.failed_keys.insert(k.clone());
+        }
+        let done = &self.done_keys;
+        self.failed_keys.retain(|k| !done.contains(k));
     }
 
-    /// Remove any saved checkpoint.
+    /// Serialized read-modify-write: under the checkpoint lock, load the
+    /// on-disk checkpoint, merge this one into it, save the union, and
+    /// return it. Concurrent shard completions that both commit keep
+    /// both sets of keys — neither rename wins over the other's work.
+    /// If the lock cannot be acquired within [`LOCK_WAIT`] (or a crashed
+    /// writer left a stale lock), the commit proceeds lock-free, which
+    /// degrades to the old last-rename-wins behavior instead of
+    /// deadlocking the run.
+    pub fn commit(&self, db_root: impl AsRef<Path>) -> Result<Checkpoint> {
+        let root = db_root.as_ref();
+        std::fs::create_dir_all(root)?;
+        let guard = LockGuard::acquire(root.join(LOCK));
+        let mut merged = Checkpoint::load(root)?;
+        merged.merge(self);
+        merged.save(root)?;
+        drop(guard);
+        Ok(merged)
+    }
+
+    /// Remove any saved checkpoint (and a stray lock, if present).
     pub fn clear(db_root: impl AsRef<Path>) -> Result<()> {
-        let path = db_root.as_ref().join(FILE);
-        if path.exists() {
-            std::fs::remove_file(path)?;
+        for name in [FILE, LOCK] {
+            let path = db_root.as_ref().join(name);
+            if path.exists() {
+                std::fs::remove_file(path)?;
+            }
         }
         Ok(())
+    }
+}
+
+/// Holder of the checkpoint lock file; dropping releases it. `None`
+/// inside means the lock wait timed out and the caller proceeded
+/// lock-free.
+struct LockGuard {
+    path: Option<PathBuf>,
+}
+
+impl LockGuard {
+    fn acquire(path: PathBuf) -> LockGuard {
+        let deadline = Instant::now() + LOCK_WAIT;
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(_) => return LockGuard { path: Some(path) },
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    // Reap a lock abandoned by a dead writer. Claim it
+                    // by atomic rename first: exactly one contender's
+                    // rename succeeds and removes it, so a reaper can
+                    // never delete the *fresh* lock another contender
+                    // just created in its place.
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|m| m.elapsed().ok())
+                        .is_some_and(|age| age > LOCK_STALE);
+                    if stale {
+                        let claimed = path.with_extension(format!(
+                            "stale.{}",
+                            std::process::id()
+                        ));
+                        if std::fs::rename(&path, &claimed).is_ok() {
+                            let _ = std::fs::remove_file(&claimed);
+                        }
+                        continue;
+                    }
+                    if Instant::now() >= deadline {
+                        return LockGuard { path: None };
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                // Unwritable db dir etc.: proceed lock-free, the save
+                // itself will surface the real error.
+                Err(_) => return LockGuard { path: None },
+            }
+        }
+    }
+}
+
+impl Drop for LockGuard {
+    fn drop(&mut self) {
+        if let Some(path) = &self.path {
+            let _ = std::fs::remove_file(path);
+        }
     }
 }
 
@@ -106,14 +216,33 @@ mod tests {
         d
     }
 
+    fn ckpt(done: &[&str], failed: &[&str]) -> Checkpoint {
+        Checkpoint {
+            done_keys: done.iter().map(|s| s.to_string()).collect(),
+            failed_keys: failed.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
     #[test]
     fn round_trip() {
         let r = root("rt");
-        let mut c = Checkpoint::default();
-        c.done_keys.insert("a#0".into());
-        c.done_keys.insert("b#12".into());
+        let c = ckpt(&["a#0", "b#12"], &["c#3"]);
         c.save(&r).unwrap();
         assert_eq!(Checkpoint::load(&r).unwrap(), c);
+    }
+
+    #[test]
+    fn format1_files_without_failed_still_load() {
+        let r = root("v1");
+        std::fs::create_dir_all(&r).unwrap();
+        std::fs::write(
+            r.join(FILE),
+            r#"{"format": 1, "done": ["a#0", "a#1"]}"#,
+        )
+        .unwrap();
+        let c = Checkpoint::load(&r).unwrap();
+        assert_eq!(c.done_keys.len(), 2);
+        assert!(c.failed_keys.is_empty());
     }
 
     #[test]
@@ -124,8 +253,7 @@ mod tests {
     #[test]
     fn clear_removes() {
         let r = root("clear");
-        let mut c = Checkpoint::default();
-        c.done_keys.insert("x#1".into());
+        let c = ckpt(&["x#1"], &[]);
         c.save(&r).unwrap();
         Checkpoint::clear(&r).unwrap();
         assert!(Checkpoint::load(&r).unwrap().done_keys.is_empty());
@@ -134,17 +262,56 @@ mod tests {
 
     #[test]
     fn merge_unions_shard_checkpoints() {
-        let mut shard0 = Checkpoint::default();
-        shard0.done_keys.insert("t#0".into());
-        shard0.done_keys.insert("t#2".into());
-        let mut shard1 = Checkpoint::default();
-        shard1.done_keys.insert("t#1".into());
-        shard1.done_keys.insert("t#3".into());
+        let mut shard0 = ckpt(&["t#0", "t#2"], &[]);
+        let shard1 = ckpt(&["t#1", "t#3"], &[]);
         shard0.merge(&shard1);
         assert_eq!(shard0.done_keys.len(), 4);
         // idempotent
         shard0.merge(&shard1);
         assert_eq!(shard0.done_keys.len(), 4);
+    }
+
+    #[test]
+    fn merge_success_beats_stale_failure_both_directions() {
+        // a saw t#1 fail; b later saw it succeed
+        let mut ab = ckpt(&["t#0"], &["t#1"]);
+        ab.merge(&ckpt(&["t#1"], &[]));
+        assert!(ab.done_keys.contains("t#1"));
+        assert!(ab.failed_keys.is_empty());
+        // commutative: the other order agrees
+        let mut ba = ckpt(&["t#1"], &[]);
+        ba.merge(&ckpt(&["t#0"], &["t#1"]));
+        assert_eq!(ab, ba);
+    }
+
+    #[test]
+    fn commit_preserves_concurrent_writers_keys() {
+        let r = root("commit");
+        // shard 0 commits, then shard 1 — the file holds the union even
+        // though neither ever saw the other's in-memory checkpoint.
+        ckpt(&["t#0"], &["t#2"]).commit(&r).unwrap();
+        let merged = ckpt(&["t#1", "t#2"], &[]).commit(&r).unwrap();
+        assert_eq!(merged, ckpt(&["t#0", "t#1", "t#2"], &[]));
+        assert_eq!(Checkpoint::load(&r).unwrap(), merged);
+        // no lock left behind
+        assert!(!r.join(LOCK).exists());
+    }
+
+    #[test]
+    fn lock_contention_resolves_when_the_holder_releases() {
+        let r = root("lockwait");
+        std::fs::create_dir_all(&r).unwrap();
+        std::fs::write(r.join(LOCK), "").unwrap();
+        let r2 = r.clone();
+        let holder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let _ = std::fs::remove_file(r2.join(LOCK));
+        });
+        // commit blocks briefly on the held lock, then proceeds
+        let merged = ckpt(&["x#0"], &[]).commit(&r).unwrap();
+        holder.join().unwrap();
+        assert!(merged.done_keys.contains("x#0"));
+        assert!(!r.join(LOCK).exists());
     }
 
     #[test]

@@ -5,7 +5,11 @@
 //!
 //! ```text
 //! study.json        the merged source document + load metadata
-//! checkpoint.json   completed task keys (study/checkpoint.rs)
+//! checkpoint.json   terminal task outcomes: done + failed keys
+//!                   (study/checkpoint.rs; saved incrementally mid-run)
+//! attempts.jsonl    per-task attempt log: one line per execution
+//!                   attempt with exit code, duration, and error class
+//!                   spawn/timeout/nonzero/killed (workflow/provenance.rs)
 //! records.jsonl     task profiling records (workflow/provenance.rs)
 //! events.log        timestamped engine events
 //! report.json       last run's summary
@@ -112,6 +116,11 @@ impl FileDb {
     /// (see [`resolve_instance_dir`]). Use this for every read path.
     pub fn existing_instance_dir(&self, instance: u64) -> PathBuf {
         resolve_instance_dir(&self.root.join("work"), instance)
+    }
+
+    /// Path of the per-task attempt log (`attempts.jsonl`).
+    pub fn attempts_path(&self) -> PathBuf {
+        self.root.join(crate::workflow::provenance::ATTEMPTS_FILE)
     }
 }
 

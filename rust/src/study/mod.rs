@@ -43,7 +43,7 @@ pub mod aggregate;
 pub mod checkpoint;
 pub mod filedb;
 
-pub use aggregate::{aggregate, Mode as AggregateMode};
+pub use aggregate::{aggregate, aggregate_filtered, Mode as AggregateMode};
 pub use checkpoint::Checkpoint;
 pub use filedb::FileDb;
 
@@ -51,17 +51,25 @@ use crate::exec::local::LocalPool;
 use crate::exec::mpi::{Grouping, MpiDispatcher};
 use crate::exec::runner::{RunConfig, TaskRunner};
 use crate::exec::ssh::SshPool;
-use crate::exec::Executor;
+use crate::exec::{Executor, FailurePolicy};
 use crate::params::{Param, Sampling, Space};
 use crate::tasks::Builtins;
 use crate::util::error::Result;
 use crate::wdl::{self, CompiledStudy, Node, StudySpec};
 use crate::workflow::{
-    ExecOrder, ExecutionReport, InstanceSource, Selection, Shard,
-    WorkflowInstance, WorkflowScheduler,
+    AttemptRecord, ExecOrder, ExecutionReport, InstanceSource, Selection,
+    Shard, WorkflowInstance, WorkflowScheduler,
 };
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Minimum number of terminal task outcomes between incremental
+/// checkpoint commits. The actual stride grows with the checkpoint size
+/// (commit when ≥ max(this, keys/8) new outcomes accrued), so total
+/// checkpoint I/O over a run stays near-linear in the study size while
+/// a killed run still resumes from near where it died.
+const CHECKPOINT_STRIDE: usize = 64;
 
 /// A loaded, validated parameter study.
 pub struct Study {
@@ -98,6 +106,15 @@ pub struct Study {
     /// (executor width for depth-first, a large fixed window for
     /// breadth-first).
     pub window: Option<usize>,
+    /// Study-level failure policy (WDL `on_failure`; first declaring
+    /// task wins; overridable via `--on-failure`).
+    pub policy: FailurePolicy,
+    /// Base retry backoff in milliseconds (`--backoff`; 0 = immediate).
+    pub backoff_ms: u64,
+    /// `--timeout` override: replaces every task's own `timeout`.
+    timeout_override: Option<f64>,
+    /// `--retries` override: replaces every task's own `retries`.
+    retries_override: Option<u32>,
 }
 
 impl Study {
@@ -168,6 +185,34 @@ impl Study {
             }
         };
 
+        // Failure policy: like sampling, the first task declaring
+        // `on_failure` sets the study-level policy.
+        let policy = spec
+            .tasks
+            .iter()
+            .find_map(|t| t.on_failure)
+            .unwrap_or_default();
+
+        // Timeouts are enforced by kill+reap on subprocesses; builtins
+        // run in-process and cannot be killed — surface that instead of
+        // silently ignoring the key. (Needs the builtin registry, so
+        // this check lives here rather than in wdl::validate.)
+        let builtins = Arc::new(Builtins::without_runtime());
+        for t in &spec.tasks {
+            if t.timeout.is_some() {
+                if let Some(tok) = t.command.split_whitespace().next() {
+                    if builtins.is_builtin(tok) {
+                        warnings.push(format!(
+                            "task '{}': timeout applies to subprocess \
+                             commands only; builtin '{tok}' runs \
+                             in-process and cannot be killed",
+                            t.id
+                        ));
+                    }
+                }
+            }
+        }
+
         let db_root = PathBuf::from(".papas").join(&name);
         Ok(Study {
             name,
@@ -179,10 +224,14 @@ impl Study {
             shard: Shard::default(),
             db_root,
             input_root,
-            builtins: Arc::new(Builtins::without_runtime()),
+            builtins,
             warnings,
             order: ExecOrder::default(),
             window: None,
+            policy,
+            backoff_ms: 0,
+            timeout_override: None,
+            retries_override: None,
         })
     }
 
@@ -207,6 +256,32 @@ impl Study {
     /// Cap the scheduler's in-flight instance window explicitly.
     pub fn with_window(mut self, window: usize) -> Study {
         self.window = Some(window);
+        self
+    }
+
+    /// Override the study-level failure policy (`--on-failure`).
+    pub fn with_policy(mut self, policy: FailurePolicy) -> Study {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the base retry backoff in milliseconds (`--backoff`).
+    pub fn with_backoff_ms(mut self, ms: u64) -> Study {
+        self.backoff_ms = ms;
+        self
+    }
+
+    /// Apply a wall-clock timeout (seconds) to every task, overriding
+    /// per-task WDL `timeout` keys (`--timeout`).
+    pub fn with_timeout(mut self, secs: f64) -> Study {
+        self.timeout_override = Some(secs);
+        self
+    }
+
+    /// Apply a retry count to every task, overriding per-task WDL
+    /// `retries` keys (`--retries`).
+    pub fn with_retries(mut self, retries: u32) -> Study {
+        self.retries_override = Some(retries);
         self
     }
 
@@ -318,49 +393,110 @@ impl Study {
     }
 
     /// Run on an arbitrary executor, with checkpointing + provenance.
+    ///
+    /// Every execution attempt (retried or terminal) is appended to the
+    /// study's `attempts.jsonl` as it finishes, and terminal outcomes
+    /// fold into the checkpoint incrementally (committed every
+    /// [`CHECKPOINT_STRIDE`] outcomes and once at the end, through the
+    /// locked [`Checkpoint::commit`]), so an interrupted run resumes
+    /// from near where it died and re-runs only failed or incomplete
+    /// instances.
     pub fn run_with(&self, executor: &dyn Executor) -> Result<ExecutionReport> {
         let db = FileDb::open(&self.db_root)?;
         db.store_study(self)?;
         let prov = crate::workflow::provenance::Provenance::open(&self.db_root)?;
         prov.log_event(&format!(
-            "run start: {} instances (shard {}) on {} ({} workers)",
+            "run start: {} instances (shard {}) on {} ({} workers), \
+             on-failure {}",
             self.n_instances(),
             self.shard,
             executor.name(),
-            executor.workers()
+            executor.workers(),
+            self.policy
         ))?;
 
         // Streaming: the scheduler pulls instances from the lazy source
         // as window slots open — the full selection is never resident.
+        // CLI-level fault overrides replace per-task knobs at admission.
         let source = self.source();
-        let mut scheduler = WorkflowScheduler::from_source(source.iter());
+        let (t_over, r_over) = (self.timeout_override, self.retries_override);
+        let iter = source.iter().map(move |inst| {
+            let mut inst = inst?;
+            if t_over.is_some() || r_over.is_some() {
+                for task in &mut inst.tasks {
+                    if let Some(secs) = t_over {
+                        task.timeout = Some(secs);
+                    }
+                    if let Some(n) = r_over {
+                        task.retries = n;
+                    }
+                }
+            }
+            Ok(inst)
+        });
+
+        // Checkpoint restore: completed task keys skip execution; the
+        // loaded checkpoint stays live and accumulates this run's
+        // terminal outcomes. (`live` is declared before the scheduler so
+        // the attempt hook's borrow of it outlives the scheduler on
+        // every exit path.)
+        let ckpt = Checkpoint::load(&self.db_root)?;
+        let skip_done = ckpt.done_keys.clone();
+        let attempt_log = prov.attempt_log()?;
+        let live = Mutex::new(ckpt);
+        let live_ref = &live;
+        let terminal_seen = AtomicUsize::new(0);
+        let last_commit = AtomicUsize::new(0);
+        let stride_root = self.db_root.clone();
+
+        let mut scheduler = WorkflowScheduler::from_source(iter);
         scheduler.order = self.order;
         scheduler.window = self.window;
-        // Checkpoint restore: completed task keys skip execution.
-        let ckpt = Checkpoint::load(&self.db_root)?;
-        scheduler.skip_done = ckpt.done_keys.clone();
+        scheduler.policy = self.policy;
+        scheduler.backoff_ms = self.backoff_ms;
+        scheduler.skip_done = skip_done;
+        scheduler.on_attempt = Some(Box::new(move |rec: &AttemptRecord| {
+            // Best-effort: a full disk must not abort the run itself.
+            let _ = attempt_log.append(rec);
+            if rec.will_retry {
+                return;
+            }
+            let mut c = live_ref.lock().unwrap();
+            if rec.ok {
+                c.done_keys.insert(rec.key.clone());
+                c.failed_keys.remove(&rec.key);
+            } else if !c.done_keys.contains(&rec.key) {
+                c.failed_keys.insert(rec.key.clone());
+            }
+            // Adaptive stride: each snapshot rewrite must be "paid for"
+            // by proportionally many new outcomes, keeping cumulative
+            // checkpoint I/O near-linear over huge studies.
+            let n = terminal_seen.fetch_add(1, Ordering::Relaxed) + 1;
+            let since = n - last_commit.load(Ordering::Relaxed);
+            let keys = c.done_keys.len() + c.failed_keys.len();
+            if since >= CHECKPOINT_STRIDE.max(keys / 8) {
+                last_commit.store(n, Ordering::Relaxed);
+                let _ = c.commit(&stride_root);
+            }
+        }));
 
         let report = scheduler.run(executor)?;
+        drop(scheduler); // release the attempt hook's borrow of `live`
 
-        // Persist the checkpoint: re-read the file and union everything —
-        // start-of-run keys, keys another process (a concurrent shard
-        // sharing this db) wrote while we ran, and our newly done tasks.
-        // Shard keys never collide, so the union is exact.
-        let mut merged = Checkpoint::load(&self.db_root)?;
-        merged.merge(&ckpt);
-        for r in &report.records {
-            if r.ok {
-                merged.done_keys.insert(r.key.clone());
-            }
-        }
-        merged.save(&self.db_root)?;
+        // Final checkpoint: locked load-merge-save, so concurrent shards
+        // sharing this db never lose each other's keys.
+        live.into_inner().unwrap().commit(&self.db_root)?;
 
         prov.append_records(&report.records)?;
         prov.write_report(&report, executor.name())?;
         prov.log_event(&format!(
-            "run end: {} completed, {} failed, {} skipped, {} restored, \
+            "run end: {} completed, {} failed, {} skipped, {} restored{}, \
              makespan {:.3}s",
-            report.completed, report.failed, report.skipped, report.restored,
+            report.completed,
+            report.failed,
+            report.skipped,
+            report.restored,
+            if report.halted { " (halted: fail-fast)" } else { "" },
             report.makespan
         ))?;
         Ok(report)
@@ -548,6 +684,116 @@ mod tests {
             assert_eq!(a.tasks, b.tasks);
             assert_eq!(a.combo, b.combo);
         }
+    }
+
+    #[test]
+    fn scripted_flaky_retry_and_resume_end_to_end() {
+        use crate::exec::{Outcome, Script, ScriptedExecutor};
+        let s = tmp_study(
+            "fault",
+            "job:\n  command: work ${v}\n  retries: 3\n  v: [1, 2, 3, 4]\n",
+        );
+        // instance 1 fails twice then succeeds; instance 2 always fails
+        let script = Arc::new(
+            Script::new()
+                .on("job#1", Outcome::FlakyThenOk(2))
+                .on("job#2", Outcome::Fail(5)),
+        );
+        let report =
+            s.run_with(&ScriptedExecutor::new(script.clone(), 2)).unwrap();
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.failed, 1);
+        assert_eq!(script.executions("job#1"), 3);
+        assert_eq!(script.executions("job#2"), 4); // 1 + 3 retries
+        // the attempt log holds the full history
+        let prov = crate::workflow::Provenance::open(&s.db_root).unwrap();
+        let attempts = prov.read_attempts().unwrap();
+        assert_eq!(attempts.iter().filter(|a| a.key == "job#1").count(), 3);
+        assert_eq!(
+            attempts.iter().filter(|a| a.key == "job#1" && a.will_retry).count(),
+            2
+        );
+        // terminal outcomes folded into the checkpoint
+        let ckpt = Checkpoint::load(&s.db_root).unwrap();
+        assert_eq!(ckpt.done_keys.len(), 3);
+        assert!(ckpt.failed_keys.contains("job#2"));
+        // resume: only the failed instance re-runs, now succeeding
+        let script2 = Arc::new(Script::new());
+        let r2 =
+            s.run_with(&ScriptedExecutor::new(script2.clone(), 2)).unwrap();
+        assert_eq!(r2.restored, 3);
+        assert_eq!(r2.completed, 1);
+        assert_eq!(script2.total_executions(), 1);
+        assert_eq!(script2.executions("job#2"), 1);
+        let ckpt = Checkpoint::load(&s.db_root).unwrap();
+        assert_eq!(ckpt.done_keys.len(), 4);
+        assert!(ckpt.failed_keys.is_empty());
+    }
+
+    #[test]
+    fn cli_overrides_replace_task_knobs_at_admission() {
+        use crate::exec::{Outcome, Script, ScriptedExecutor};
+        // no WDL retries — the override alone enables the retry
+        let s = tmp_study(
+            "override",
+            "job:\n  command: work ${v}\n  v: [1, 2]\n",
+        )
+        .with_retries(2)
+        .with_timeout(5.0);
+        let script =
+            Arc::new(Script::new().on("job#0", Outcome::FlakyThenOk(2)));
+        let report =
+            s.run_with(&ScriptedExecutor::new(script.clone(), 1)).unwrap();
+        assert!(report.all_ok(), "{report:?}");
+        assert_eq!(script.executions("job#0"), 3);
+    }
+
+    #[test]
+    fn fail_fast_study_halts_and_resumes_the_remainder() {
+        use crate::exec::{FailurePolicy, Outcome, Script, ScriptedExecutor};
+        let s = tmp_study(
+            "failfast",
+            "job:\n  command: work ${v}\n  v: [1, 2, 3, 4, 5, 6]\n",
+        )
+        .with_policy(FailurePolicy::FailFast);
+        let script = Arc::new(Script::new().on("job#2", Outcome::Fail(1)));
+        let r1 =
+            s.run_with(&ScriptedExecutor::new(script.clone(), 1)).unwrap();
+        assert!(r1.halted);
+        assert_eq!(r1.completed, 2);
+        assert_eq!(script.executions("job#5"), 0);
+        // resume under the default policy: only the remainder runs
+        let s2 = Study::from_file(
+            std::env::temp_dir().join("papas_study/failfast/study.yaml"),
+        )
+        .unwrap()
+        .with_db_root(std::env::temp_dir().join("papas_study/failfast/.papas"));
+        let script2 = Arc::new(Script::new());
+        let r2 =
+            s2.run_with(&ScriptedExecutor::new(script2.clone(), 1)).unwrap();
+        assert_eq!(r2.restored, 2);
+        assert_eq!(r2.completed, 4); // the failure + the never-admitted
+        assert_eq!(script2.executions("job#0"), 0);
+        assert_eq!(script2.executions("job#2"), 1);
+    }
+
+    #[test]
+    fn builtin_with_timeout_warns_at_load() {
+        let s = tmp_study(
+            "bwarn",
+            "job:\n  command: sleep-ms ${ms}\n  timeout: 1\n  ms: [1]\n",
+        );
+        assert!(
+            s.warnings.iter().any(|w| w.contains("in-process")),
+            "{:?}",
+            s.warnings
+        );
+        // subprocess commands with a timeout stay warning-free
+        let s = tmp_study(
+            "bwarn2",
+            "job:\n  command: /bin/true\n  timeout: 1\n  ms: [1]\n",
+        );
+        assert!(s.warnings.is_empty(), "{:?}", s.warnings);
     }
 
     #[test]

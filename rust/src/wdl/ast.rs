@@ -7,15 +7,17 @@
 
 use super::doc::Node;
 use super::range::{self, Expanded};
+use crate::exec::fault::FailurePolicy;
 use crate::params::{Param, Sampling};
 use crate::util::error::{Error, Result};
 use crate::util::strings::is_identifier;
 
-/// The predefined WDL keywords (§5's list).
+/// The predefined WDL keywords (§5's list, extended with the
+/// fault-handling keys `timeout` / `retries` / `on_failure`).
 pub const WDL_KEYWORDS: &[&str] = &[
     "command", "name", "environ", "after", "infiles", "outfiles",
     "substitute", "parallel", "batch", "nnodes", "ppnode", "hosts",
-    "fixed", "sampling",
+    "fixed", "sampling", "timeout", "retries", "on_failure",
 ];
 
 /// Parallel execution mode (§5 keyword `parallel`).
@@ -92,6 +94,14 @@ pub struct TaskSpec {
     pub fixed: Vec<Vec<String>>,
     /// `sampling` — subset selection over this task's combination space.
     pub sampling: Option<Sampling>,
+    /// `timeout` — wall-clock limit in seconds per execution of this
+    /// task (kill + reap on expiry).
+    pub timeout: Option<f64>,
+    /// `retries` — extra attempts allowed after a failure.
+    pub retries: Option<u32>,
+    /// `on_failure` — the study-level failure policy. Declared on any
+    /// task; the first declaration wins (like `sampling`).
+    pub on_failure: Option<FailurePolicy>,
 }
 
 /// A whole parameter study: ordered task sections.
@@ -209,6 +219,31 @@ impl TaskSpec {
                 "sampling" => {
                     t.sampling =
                         Some(Sampling::parse(&scalar_of(id, "sampling", value)?)?);
+                }
+                "timeout" => {
+                    let raw = scalar_of(id, "timeout", value)?;
+                    let secs: f64 = raw.trim().parse().map_err(|_| {
+                        Error::Wdl(format!(
+                            "task '{id}': timeout must be a number of seconds"
+                        ))
+                    })?;
+                    if !secs.is_finite() || secs <= 0.0 {
+                        return Err(Error::Wdl(format!(
+                            "task '{id}': timeout must be positive, got \
+                             '{raw}'"
+                        )));
+                    }
+                    t.timeout = Some(secs);
+                }
+                "retries" => {
+                    t.retries = Some(u32_of(id, "retries", value)?);
+                }
+                "on_failure" => {
+                    let raw = scalar_of(id, "on_failure", value)?;
+                    t.on_failure =
+                        Some(FailurePolicy::parse(&raw).map_err(|m| {
+                            Error::Wdl(format!("task '{id}': on_failure: {m}"))
+                        })?);
                 }
                 // Any other keyword is a user-defined parameter (§5:
                 // "keywords that are not predefined are considered as
@@ -457,6 +492,31 @@ matmulOMP:
             &parse_str("t:\n  command: c\n  parallel: cuda\n", Format::Yaml).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn fault_keywords_parse() {
+        let doc = parse_str(
+            "t:\n  command: c\n  timeout: 30.5\n  retries: 3\n  on_failure: retry-budget 12\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t = &StudySpec::from_doc(&doc).unwrap().tasks[0];
+        assert_eq!(t.timeout, Some(30.5));
+        assert_eq!(t.retries, Some(3));
+        assert_eq!(t.on_failure, Some(FailurePolicy::RetryBudget(12)));
+        // they are keywords, not user parameter axes
+        assert!(t.params.is_empty());
+
+        for bad in [
+            "t:\n  command: c\n  timeout: -1\n",
+            "t:\n  command: c\n  timeout: soon\n",
+            "t:\n  command: c\n  retries: many\n",
+            "t:\n  command: c\n  on_failure: explode\n",
+        ] {
+            let doc = parse_str(bad, Format::Yaml).unwrap();
+            assert!(StudySpec::from_doc(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -140,6 +140,10 @@ struct CompiledTask {
     outfiles: Vec<(String, Tpl)>,
     /// (regex pattern, full-interpolation template of the replacement).
     substitutions: Vec<(String, Tpl)>,
+    /// Wall-clock timeout (seconds) — instance-invariant, copied through.
+    timeout: Option<f64>,
+    /// Extra attempts after failure — instance-invariant, copied through.
+    retries: u32,
 }
 
 /// A producer-outfile / consumer-infile pair whose paths are
@@ -484,6 +488,8 @@ impl CompiledStudy {
                 infiles,
                 outfiles,
                 substitutions,
+                timeout: t.timeout,
+                retries: t.retries.unwrap_or(0),
             });
         }
         // Consume the compiler (ends its borrow of `table`).
@@ -617,6 +623,8 @@ impl CompiledStudy {
                 infiles,
                 outfiles,
                 substitutions,
+                timeout: ct.timeout,
+                retries: ct.retries,
             });
         }
 
@@ -724,6 +732,17 @@ mod tests {
         let a = c.instantiate_at(&space, 0).unwrap();
         let b = c.instantiate_at(&space, 87).unwrap();
         assert!(Arc::ptr_eq(&a.dag, &b.dag), "instances must share the DAG");
+    }
+
+    #[test]
+    fn fault_knobs_survive_compilation() {
+        let yaml = "t:\n  command: run ${v}\n  v: [1, 2]\n  timeout: 9.5\n  retries: 2\n";
+        assert_equivalent(yaml);
+        let (spec, space) = load(yaml);
+        let c = CompiledStudy::compile(&spec, &space).unwrap();
+        let inst = c.instantiate_at(&space, 1).unwrap();
+        assert_eq!(inst.tasks[0].timeout, Some(9.5));
+        assert_eq!(inst.tasks[0].retries, 2);
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! A parameter study is a mapping of *tasks* (sections); each task is up
 //! to two levels of keyword/value entries. Predefined keywords (command,
 //! name, environ, after, infiles, outfiles, substitute, parallel, batch,
-//! nnodes, ppnode, hosts, fixed, sampling) drive the engine; any other
-//! keyword is a *user-defined parameter* usable in `${...}` interpolation.
+//! nnodes, ppnode, hosts, fixed, sampling, timeout, retries, on_failure)
+//! drive the engine; any other keyword is a *user-defined parameter*
+//! usable in `${...}` interpolation.
 //!
 //! Pipeline: format parser (`yamlite` / `json` / `ini`) → common `doc::
 //! Node` model → [`ast`] typing → [`validate`] → [`range`] expansion →

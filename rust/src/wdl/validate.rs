@@ -134,6 +134,37 @@ pub fn validate(study: &StudySpec) -> Result<Vec<String>> {
         }
     }
 
+    // -- fault-handling keys -------------------------------------------
+    // on_failure is study-level (first declaration wins, like sampling):
+    // disagreeing declarations are legal but almost certainly a mistake.
+    let policies: Vec<(&str, crate::exec::FailurePolicy)> = study
+        .tasks
+        .iter()
+        .filter_map(|t| t.on_failure.map(|p| (t.id.as_str(), p)))
+        .collect();
+    if let Some((first_id, first)) = policies.first() {
+        for (id, p) in &policies[1..] {
+            if p != first {
+                warnings.push(format!(
+                    "task '{id}' declares on_failure '{p}' but task \
+                     '{first_id}' already set the study policy to \
+                     '{first}'; the first declaration wins"
+                ));
+            }
+        }
+        if *first == crate::exec::FailurePolicy::FailFast {
+            for t in &study.tasks {
+                if t.retries.unwrap_or(0) > 0 {
+                    warnings.push(format!(
+                        "task '{}': retries have no effect under \
+                         on_failure fail-fast",
+                        t.id
+                    ));
+                }
+            }
+        }
+    }
+
     // -- dependency graph must be acyclic ------------------------------
     check_acyclic(study)?;
 
@@ -256,6 +287,27 @@ mod tests {
         let w = validate(&s).unwrap();
         assert_eq!(w.len(), 1);
         assert!(w[0].contains("localhost"), "{w:?}");
+    }
+
+    #[test]
+    fn conflicting_on_failure_warns() {
+        let s = study(
+            "a:\n  command: x\n  on_failure: fail-fast\n  retries: 2\nb:\n  command: y\n  on_failure: continue\n",
+        );
+        let w = validate(&s).unwrap();
+        assert!(
+            w.iter().any(|m| m.contains("first declaration wins")),
+            "{w:?}"
+        );
+        assert!(
+            w.iter().any(|m| m.contains("no effect under")),
+            "{w:?}"
+        );
+        // agreeing declarations are silent
+        let s = study(
+            "a:\n  command: x\n  on_failure: continue\nb:\n  command: y\n  on_failure: continue\n",
+        );
+        assert!(validate(&s).unwrap().is_empty());
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod task;
 pub use dag::Dag;
 pub use instance::{Combo, WorkflowInstance};
 pub use profiler::{Profiler, TaskRecord};
+pub use provenance::{AttemptLog, AttemptRecord, Provenance};
 pub use scheduler::{ExecOrder, ExecutionReport, WorkflowScheduler};
 pub use source::{InstanceCursor, InstanceSource, Selection, Shard};
 pub use task::{ConcreteTask, TaskState};

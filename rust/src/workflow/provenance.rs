@@ -3,16 +3,130 @@
 //! database; this information is later used to include provenance details
 //! at either workflow completion or a checkpoint").
 //!
-//! Storage format is line-oriented JSON (`records.jsonl`, `events.log`)
-//! under the study's `.papas` directory — append-only, crash-tolerant,
-//! and diffable.
+//! Storage format is line-oriented JSON (`records.jsonl`, `events.log`,
+//! `attempts.jsonl`) under the study's `.papas` directory — append-only,
+//! crash-tolerant, and diffable.
+//!
+//! `attempts.jsonl` is the fault engine's structured per-task attempt
+//! log: one [`AttemptRecord`] per execution attempt (including retried
+//! ones), carrying the exit code, duration, and error class
+//! (spawn/timeout/nonzero/killed). It is appended *as attempts finish*,
+//! so a crashed run still leaves a full account of what was tried.
 
 use super::profiler::TaskRecord;
 use super::scheduler::ExecutionReport;
+use crate::exec::ErrorClass;
 use crate::json::{self, Json};
 use crate::util::error::{Error, Result};
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One execution attempt of one task — a line of `attempts.jsonl`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttemptRecord {
+    /// `task_id#instance` key.
+    pub key: String,
+    /// Task id.
+    pub task_id: String,
+    /// Workflow instance index.
+    pub instance: u64,
+    /// 1-based attempt number for this key within the run.
+    pub attempt: u32,
+    /// Did this attempt succeed?
+    pub ok: bool,
+    /// True when the scheduler re-queued the task after this failed
+    /// attempt — i.e. this outcome is *not* terminal.
+    pub will_retry: bool,
+    /// Exit code (-1 for spawn failures, timeouts, signal deaths).
+    pub exit_code: i32,
+    /// Wall-clock duration of the attempt in seconds.
+    pub duration: f64,
+    /// Failure class when `!ok` (spawn/timeout/nonzero/killed).
+    pub class: Option<ErrorClass>,
+    /// Error description when `!ok`.
+    pub error: Option<String>,
+    /// Worker that ran the attempt.
+    pub worker: String,
+}
+
+impl AttemptRecord {
+    /// Attempt-log serialization.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("key".to_string(), Json::from(self.key.as_str())),
+            ("task_id".to_string(), Json::from(self.task_id.as_str())),
+            ("instance".to_string(), Json::from(self.instance as i64)),
+            ("attempt".to_string(), Json::from(self.attempt as i64)),
+            ("ok".to_string(), Json::from(self.ok)),
+            ("will_retry".to_string(), Json::from(self.will_retry)),
+            ("exit_code".to_string(), Json::from(self.exit_code as i64)),
+            ("duration".to_string(), Json::Num(self.duration)),
+            (
+                "class".to_string(),
+                self.class.map(|c| Json::from(c.label())).unwrap_or(Json::Null),
+            ),
+            (
+                "error".to_string(),
+                self.error.as_deref().map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("worker".to_string(), Json::from(self.worker.as_str())),
+        ])
+    }
+
+    /// Attempt-log deserialization.
+    pub fn from_json(j: &Json) -> Result<AttemptRecord> {
+        Ok(AttemptRecord {
+            key: j.expect_str("key")?.to_string(),
+            task_id: j.expect_str("task_id")?.to_string(),
+            instance: j.expect_i64("instance")? as u64,
+            attempt: j.expect_i64("attempt")? as u32,
+            ok: j.expect("ok")?.as_bool().unwrap_or(false),
+            will_retry: j
+                .get("will_retry")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            exit_code: j.expect_i64("exit_code")? as i32,
+            duration: j.expect("duration")?.as_f64().unwrap_or(0.0),
+            class: j
+                .get("class")
+                .and_then(Json::as_str)
+                .and_then(ErrorClass::parse),
+            error: j.get("error").and_then(Json::as_str).map(str::to_string),
+            worker: j.expect_str("worker")?.to_string(),
+        })
+    }
+}
+
+/// Append-only writer for `attempts.jsonl`, shareable across the
+/// scheduler's completion loop (interior mutability — the scheduler hook
+/// takes `&self`).
+pub struct AttemptLog {
+    file: Mutex<std::fs::File>,
+}
+
+/// File name of the attempt log under the study database.
+pub const ATTEMPTS_FILE: &str = "attempts.jsonl";
+
+impl AttemptLog {
+    /// Open (creating) the attempt log under `dir` in append mode.
+    pub fn open(dir: impl AsRef<Path>) -> Result<AttemptLog> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(ATTEMPTS_FILE))?;
+        Ok(AttemptLog { file: Mutex::new(file) })
+    }
+
+    /// Append one attempt record (one line, flushed by the OS).
+    pub fn append(&self, rec: &AttemptRecord) -> Result<()> {
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{}", json::to_string(&rec.to_json()))?;
+        Ok(())
+    }
+}
 
 /// Writer for one study's provenance files.
 pub struct Provenance {
@@ -81,6 +195,24 @@ impl Provenance {
         Ok(out)
     }
 
+    /// Open the append-only per-task attempt log (`attempts.jsonl`).
+    pub fn attempt_log(&self) -> Result<AttemptLog> {
+        AttemptLog::open(&self.dir)
+    }
+
+    /// Read back every attempt record (empty when no attempts logged).
+    pub fn read_attempts(&self) -> Result<Vec<AttemptRecord>> {
+        let path = self.dir.join(ATTEMPTS_FILE);
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(path)?;
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|line| AttemptRecord::from_json(&json::parse(line)?))
+            .collect()
+    }
+
     /// Write the end-of-run report (`report.json`) — the "provenance
     /// details at workflow completion".
     pub fn write_report(&self, report: &ExecutionReport, executor: &str) -> Result<()> {
@@ -90,6 +222,7 @@ impl Provenance {
             ("failed".to_string(), Json::from(report.failed)),
             ("skipped".to_string(), Json::from(report.skipped)),
             ("restored".to_string(), Json::from(report.restored)),
+            ("halted".to_string(), Json::from(report.halted)),
             ("peak_open".to_string(), Json::from(report.peak_open)),
             ("makespan_s".to_string(), Json::Num(report.makespan)),
             ("utilization".to_string(), Json::Num(report.utilization)),
@@ -161,6 +294,7 @@ mod tests {
             failed: 1,
             skipped: 2,
             restored: 0,
+            halted: false,
             peak_open: 3,
             makespan: 1.5,
             utilization: 0.8,
@@ -173,5 +307,45 @@ mod tests {
         .unwrap();
         assert_eq!(j.expect_i64("completed").unwrap(), 5);
         assert_eq!(j.expect_str("executor").unwrap(), "local");
+        assert!(!j.expect("halted").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn attempt_log_round_trip() {
+        let p = store("attempts");
+        let log = p.attempt_log().unwrap();
+        let fail = AttemptRecord {
+            key: "t#4".into(),
+            task_id: "t".into(),
+            instance: 4,
+            attempt: 1,
+            ok: false,
+            will_retry: true,
+            exit_code: 3,
+            duration: 0.25,
+            class: Some(ErrorClass::NonZero),
+            error: Some("exit code 3".into()),
+            worker: "local-0".into(),
+        };
+        let ok = AttemptRecord {
+            attempt: 2,
+            ok: true,
+            will_retry: false,
+            exit_code: 0,
+            class: None,
+            error: None,
+            ..fail.clone()
+        };
+        log.append(&fail).unwrap();
+        log.append(&ok).unwrap();
+        let back = p.read_attempts().unwrap();
+        assert_eq!(back, vec![fail, ok]);
+        assert_eq!(back[0].class.unwrap().label(), "nonzero");
+    }
+
+    #[test]
+    fn empty_attempt_log_reads_empty() {
+        let p = store("noattempts");
+        assert!(p.read_attempts().unwrap().is_empty());
     }
 }

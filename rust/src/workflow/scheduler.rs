@@ -18,12 +18,14 @@
 
 use super::instance::WorkflowInstance;
 use super::profiler::{Profiler, TaskRecord};
+use super::provenance::AttemptRecord;
 use super::task::{ConcreteTask, TaskState};
-use crate::exec::{Completion, Executor};
+use crate::exec::{backoff_delay, Completion, Executor, FailurePolicy};
 use crate::util::error::{Error, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Default in-flight instance window for breadth-first order. Breadth
 /// semantics want "every instance progresses in lockstep"; bounding the
@@ -42,6 +44,10 @@ pub struct ExecutionReport {
     pub skipped: usize,
     /// Tasks satisfied from the checkpoint without running.
     pub restored: usize,
+    /// True when a fail-fast policy stopped the run early: admission
+    /// ceased at the first terminal failure and the remaining instances
+    /// never ran (a later `--resume` picks them up).
+    pub halted: bool,
     /// Peak number of simultaneously open (materialized, non-terminal)
     /// workflow instances — the streaming residency bound.
     pub peak_open: usize,
@@ -84,6 +90,8 @@ struct OpenInstance {
     inst: WorkflowInstance,
     state: Vec<TaskState>,
     unmet: Vec<usize>,
+    /// Execution attempts made per task (retries included).
+    attempts: Vec<u32>,
     /// Non-terminal tasks left; 0 means the instance is finished.
     remaining: usize,
 }
@@ -96,9 +104,16 @@ impl OpenInstance {
             inst,
             state: vec![TaskState::Pending; n],
             unmet,
+            attempts: vec![0; n],
             remaining: n,
         }
     }
+}
+
+/// A failed task waiting out its retry backoff before re-dispatch.
+struct PendingRetry {
+    due: Instant,
+    task: ConcreteTask,
 }
 
 /// Running tallies across the whole run.
@@ -128,6 +143,16 @@ pub struct WorkflowScheduler<'a> {
     /// default (executor workers for depth-first,
     /// [`DEFAULT_BREADTH_WINDOW`] for breadth-first).
     pub window: Option<usize>,
+    /// Study-level failure policy: what a terminal task failure does to
+    /// the rest of the run, and when per-task `retries` apply.
+    pub policy: FailurePolicy,
+    /// Base retry backoff in milliseconds (`0` = immediate re-dispatch);
+    /// doubles per attempt, see [`backoff_delay`].
+    pub backoff_ms: u64,
+    /// Observer invoked for *every* execution attempt, terminal or
+    /// retried, as it completes — the study layer hangs the attempt log
+    /// and the incremental checkpoint off this.
+    pub on_attempt: Option<Box<dyn Fn(&AttemptRecord) + 'a>>,
 }
 
 impl<'a> WorkflowScheduler<'a> {
@@ -148,6 +173,9 @@ impl<'a> WorkflowScheduler<'a> {
             skip_done: BTreeSet::new(),
             order: ExecOrder::DepthFirst,
             window: None,
+            policy: FailurePolicy::default(),
+            backoff_ms: 0,
+            on_attempt: None,
         }
     }
 
@@ -239,8 +267,13 @@ impl<'a> WorkflowScheduler<'a> {
     }
 
     /// Execute everything on `executor`; blocks until all tasks reach a
-    /// terminal state. Instances are admitted incrementally: at most
-    /// `window` are open (materialized) at any moment.
+    /// terminal state (or, under fail-fast, until the in-flight work
+    /// drains after the first terminal failure). Instances are admitted
+    /// incrementally: at most `window` are open (materialized) at any
+    /// moment. Failed tasks re-dispatch under the failure policy with
+    /// exponential backoff, without ever blocking the window — a retried
+    /// task occupies its original window slot, so a wedged or flaky
+    /// instance cannot stall admission of its neighbors.
     pub fn run(&mut self, executor: &dyn Executor) -> Result<ExecutionReport> {
         let window = self
             .window
@@ -263,12 +296,15 @@ impl<'a> WorkflowScheduler<'a> {
             let mut tally = Tally::default();
             let mut in_flight = 0usize;
             let mut source_dry = false;
+            let mut halted = false;
+            let mut retry_queue: Vec<PendingRetry> = Vec::new();
+            let mut budget_used: u32 = 0;
 
             loop {
                 // Admission: top the window up from the lazy source.
                 // Fully-restored instances pass through without counting
-                // against the window.
-                while !source_dry && open.len() < window {
+                // against the window. Fail-fast halts admission for good.
+                while !halted && !source_dry && open.len() < window {
                     let Some(next) = self.source.next() else {
                         source_dry = true;
                         break;
@@ -288,14 +324,58 @@ impl<'a> WorkflowScheduler<'a> {
                     }
                 }
 
-                if in_flight == 0 {
-                    break;
+                // Re-dispatch every retry whose backoff has elapsed.
+                let now = Instant::now();
+                let mut i = 0;
+                while i < retry_queue.len() {
+                    if retry_queue[i].due <= now {
+                        let p = retry_queue.swap_remove(i);
+                        ready_tx.send(p.task).map_err(|_| {
+                            Error::Workflow("executor hung up".into())
+                        })?;
+                        in_flight += 1;
+                    } else {
+                        i += 1;
+                    }
                 }
 
-                // React to one completion.
-                let (task, result) = done_rx.recv().map_err(|_| {
-                    Error::Workflow("executor dropped done channel".into())
-                })?;
+                if in_flight == 0 && retry_queue.is_empty() {
+                    break;
+                }
+                if in_flight == 0 {
+                    // Only backed-off retries remain: sleep out the
+                    // earliest deadline, then re-dispatch above.
+                    let due =
+                        retry_queue.iter().map(|p| p.due).min().expect("nonempty");
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    continue;
+                }
+
+                // React to one completion (bounded wait while a backoff
+                // deadline pends, so due retries dispatch on time).
+                let (task, result) = if retry_queue.is_empty() {
+                    done_rx.recv().map_err(|_| {
+                        Error::Workflow("executor dropped done channel".into())
+                    })?
+                } else {
+                    let due =
+                        retry_queue.iter().map(|p| p.due).min().expect("nonempty");
+                    let wait = due
+                        .saturating_duration_since(Instant::now())
+                        .max(Duration::from_millis(1));
+                    match done_rx.recv_timeout(wait) {
+                        Ok(m) => m,
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            return Err(Error::Workflow(
+                                "executor dropped done channel".into(),
+                            ))
+                        }
+                    }
+                };
                 in_flight -= 1;
                 let o = open.get_mut(&task.instance).ok_or_else(|| {
                     Error::Workflow(format!("unknown instance {}", task.instance))
@@ -303,14 +383,29 @@ impl<'a> WorkflowScheduler<'a> {
                 let node = o.inst.dag.index_of(&task.task_id).ok_or_else(|| {
                     Error::Workflow(format!("unknown task '{}'", task.task_id))
                 })?;
-                o.state[node] =
-                    if result.ok { TaskState::Done } else { TaskState::Failed };
-                o.remaining -= 1;
-                if result.ok {
-                    tally.completed += 1;
-                } else {
-                    tally.failed += 1;
+                o.attempts[node] += 1;
+                let attempt = o.attempts[node];
+
+                // Retry decision: per-task `retries` under the study
+                // policy. Under retry-budget, a task without its own cap
+                // may draw on the shared budget freely.
+                let will_retry = !result.ok
+                    && !halted
+                    && match self.policy {
+                        FailurePolicy::FailFast => false,
+                        FailurePolicy::Continue => attempt <= task.retries,
+                        FailurePolicy::RetryBudget(n) => {
+                            (task.retries == 0 || attempt <= task.retries)
+                                && budget_used < n
+                        }
+                    };
+                if will_retry {
+                    if let FailurePolicy::RetryBudget(_) = self.policy {
+                        budget_used += 1;
+                    }
                 }
+
+                // Profile + log every attempt, retried or terminal.
                 let end = self.profiler.now();
                 self.profiler.record(TaskRecord {
                     key: task.key(),
@@ -321,13 +416,65 @@ impl<'a> WorkflowScheduler<'a> {
                     worker: result.worker.clone(),
                     ok: result.ok,
                 });
+                if let Some(hook) = &self.on_attempt {
+                    hook(&AttemptRecord {
+                        key: task.key(),
+                        task_id: task.task_id.clone(),
+                        instance: task.instance,
+                        attempt,
+                        ok: result.ok,
+                        will_retry,
+                        exit_code: result.exit_code,
+                        duration: result.duration,
+                        class: result.class,
+                        error: result.error.clone(),
+                        worker: result.worker.clone(),
+                    });
+                }
+
+                if will_retry {
+                    // Non-terminal: the task keeps its window slot and
+                    // goes back to the executor after its backoff.
+                    let delay = backoff_delay(self.backoff_ms, attempt);
+                    if delay.is_zero() {
+                        ready_tx.send(task).map_err(|_| {
+                            Error::Workflow("executor hung up".into())
+                        })?;
+                        in_flight += 1;
+                    } else {
+                        retry_queue.push(PendingRetry {
+                            due: Instant::now() + delay,
+                            task,
+                        });
+                    }
+                    continue;
+                }
+
+                // Terminal outcome.
+                o.state[node] =
+                    if result.ok { TaskState::Done } else { TaskState::Failed };
+                o.remaining -= 1;
+                if result.ok {
+                    tally.completed += 1;
+                } else {
+                    tally.failed += 1;
+                    if self.policy == FailurePolicy::FailFast {
+                        // Stop the window: nothing new is admitted or
+                        // released; in-flight work drains and the run
+                        // returns with `halted` set.
+                        halted = true;
+                        source_dry = true;
+                    }
+                }
                 let sends = self.release(o, node, result.ok, &mut tally);
                 let finished = o.remaining == 0;
-                for t in sends {
-                    ready_tx
-                        .send(t)
-                        .map_err(|_| Error::Workflow("executor hung up".into()))?;
-                    in_flight += 1;
+                if !halted {
+                    for t in sends {
+                        ready_tx.send(t).map_err(|_| {
+                            Error::Workflow("executor hung up".into())
+                        })?;
+                        in_flight += 1;
+                    }
                 }
                 if finished {
                     // Drop the instance's state immediately — the window
@@ -345,6 +492,7 @@ impl<'a> WorkflowScheduler<'a> {
                 failed: tally.failed,
                 skipped: tally.skipped,
                 restored: tally.restored,
+                halted,
                 peak_open: tally.peak_open,
                 makespan: self.profiler.makespan(),
                 utilization: self.profiler.utilization(),
@@ -361,9 +509,11 @@ mod tests {
     use super::*;
     use crate::exec::local::LocalPool;
     use crate::exec::runner::{RunConfig, TaskRunner};
+    use crate::exec::{ErrorClass, Outcome, Script, ScriptedExecutor};
     use crate::params::{Param, Space};
     use crate::tasks::Builtins;
     use crate::wdl::{parse_str, Format, StudySpec};
+    use std::sync::Mutex;
 
     fn instances_for(yaml: &str, limit: u64) -> Vec<WorkflowInstance> {
         let study =
@@ -565,6 +715,166 @@ mod tests {
         let report = sched.run(&pool(1, "bfswin")).unwrap();
         assert_eq!(report.completed, 6);
         assert!(report.peak_open <= 2, "peak_open {}", report.peak_open);
+    }
+
+    #[test]
+    fn flaky_task_retries_until_success_and_logs_attempts() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  retries: 3\n  v: [0, 0]\n",
+            10,
+        );
+        assert_eq!(instances[0].tasks[0].retries, 3);
+        let script = Arc::new(Script::new().on("job#0", Outcome::FlakyThenOk(2)));
+        let exec = ScriptedExecutor::new(script.clone(), 2);
+        let log: Mutex<Vec<AttemptRecord>> = Mutex::new(Vec::new());
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.on_attempt =
+            Some(Box::new(|r| log.lock().unwrap().push(r.clone())));
+        let report = sched.run(&exec).unwrap();
+        drop(sched);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.failed, 0);
+        assert!(report.all_ok());
+        assert!(!report.halted);
+        assert_eq!(script.executions("job#0"), 3);
+        assert_eq!(script.executions("job#1"), 1);
+        let attempts = log.into_inner().unwrap();
+        let flaky: Vec<&AttemptRecord> =
+            attempts.iter().filter(|a| a.key == "job#0").collect();
+        assert_eq!(flaky.len(), 3);
+        assert!(!flaky[0].ok && flaky[0].will_retry);
+        assert_eq!(flaky[0].attempt, 1);
+        assert_eq!(flaky[0].class, Some(ErrorClass::NonZero));
+        assert!(!flaky[1].ok && flaky[1].will_retry);
+        assert!(flaky[2].ok && !flaky[2].will_retry);
+        assert_eq!(flaky[2].attempt, 3);
+    }
+
+    #[test]
+    fn retries_exhausted_fails_terminally() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  retries: 2\n  v: [0]\n",
+            10,
+        );
+        let script = Arc::new(Script::new().default_outcome(Outcome::Fail(9)));
+        let exec = ScriptedExecutor::new(script.clone(), 1);
+        let report = WorkflowScheduler::new(&instances).run(&exec).unwrap();
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.completed, 0);
+        assert_eq!(script.executions("job#0"), 3); // 1 + 2 retries
+    }
+
+    #[test]
+    fn fail_fast_stops_the_window() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  v: [0, 0, 0, 0, 0, 0]\n",
+            10,
+        );
+        assert_eq!(instances.len(), 6);
+        let script = Arc::new(Script::new().on("job#2", Outcome::Fail(7)));
+        let exec = ScriptedExecutor::new(script.clone(), 1); // window = 1
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.policy = FailurePolicy::FailFast;
+        let report = sched.run(&exec).unwrap();
+        assert!(report.halted);
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.completed, 2); // instances 0, 1 only
+        // instances beyond the failure never reached a worker
+        for i in 3..6 {
+            assert_eq!(script.executions(&format!("job#{i}")), 0, "job#{i}");
+        }
+    }
+
+    #[test]
+    fn fail_fast_never_retries_even_with_retries_declared() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  retries: 5\n  v: [0]\n",
+            10,
+        );
+        let script = Arc::new(Script::new().default_outcome(Outcome::Fail(1)));
+        let exec = ScriptedExecutor::new(script.clone(), 1);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.policy = FailurePolicy::FailFast;
+        let report = sched.run(&exec).unwrap();
+        assert!(report.halted);
+        assert_eq!(script.executions("job#0"), 1);
+    }
+
+    #[test]
+    fn retry_budget_exhausts_across_the_study() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  v: [0, 0, 0]\n",
+            10,
+        );
+        // every attempt fails; no per-task retries — budget-driven only
+        let script = Arc::new(Script::new().default_outcome(Outcome::Fail(1)));
+        let exec = ScriptedExecutor::new(script.clone(), 1);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.policy = FailurePolicy::RetryBudget(4);
+        let report = sched.run(&exec).unwrap();
+        assert_eq!(report.failed, 3);
+        assert_eq!(report.completed, 0);
+        assert!(!report.halted);
+        // 3 first attempts + exactly 4 budget-funded retries
+        assert_eq!(script.total_executions(), 7);
+    }
+
+    #[test]
+    fn retry_budget_rescues_flaky_tasks_without_per_task_retries() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  v: [0, 0]\n",
+            10,
+        );
+        let script =
+            Arc::new(Script::new().default_outcome(Outcome::FlakyThenOk(1)));
+        let exec = ScriptedExecutor::new(script.clone(), 2);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.policy = FailurePolicy::RetryBudget(10);
+        let report = sched.run(&exec).unwrap();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.failed, 0);
+        assert_eq!(script.total_executions(), 4); // each flaked once
+    }
+
+    #[test]
+    fn simulated_hang_times_out_and_window_proceeds() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  timeout: 2\n  v: [0, 0, 0, 0]\n",
+            10,
+        );
+        assert_eq!(instances[0].tasks[0].timeout, Some(2.0));
+        let script = Arc::new(Script::new().on("job#1", Outcome::Hang));
+        let exec = ScriptedExecutor::new(script.clone(), 2);
+        let log: Mutex<Vec<AttemptRecord>> = Mutex::new(Vec::new());
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.on_attempt =
+            Some(Box::new(|r| log.lock().unwrap().push(r.clone())));
+        let report = sched.run(&exec).unwrap();
+        drop(sched);
+        // the wedged instance did not stall the others
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.failed, 1);
+        let attempts = log.into_inner().unwrap();
+        let hung = attempts.iter().find(|a| a.key == "job#1").unwrap();
+        assert_eq!(hung.class, Some(ErrorClass::Timeout));
+        assert_eq!(hung.duration, 2.0);
+    }
+
+    #[test]
+    fn backoff_delays_are_honored_without_stalling() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  retries: 2\n  v: [0]\n",
+            10,
+        );
+        let script = Arc::new(Script::new().on("job#0", Outcome::FlakyThenOk(2)));
+        let exec = ScriptedExecutor::new(script.clone(), 1);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.backoff_ms = 1; // 1ms, 2ms — real but tiny
+        let t0 = Instant::now();
+        let report = sched.run(&exec).unwrap();
+        assert_eq!(report.completed, 1);
+        assert_eq!(script.executions("job#0"), 3);
+        assert!(t0.elapsed() >= Duration::from_millis(3));
     }
 
     #[test]

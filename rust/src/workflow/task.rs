@@ -64,6 +64,13 @@ pub struct ConcreteTask {
     /// Content substitutions applied to staged infiles:
     /// (regex pattern, chosen replacement).
     pub substitutions: Vec<(String, String)>,
+    /// Wall-clock timeout in seconds (WDL `timeout` / `--timeout`);
+    /// `None` = unlimited. Enforced by the runner: kill + reap.
+    pub timeout: Option<f64>,
+    /// Extra attempts allowed after a failure (WDL `retries` /
+    /// `--retries`). Enforced by the scheduler under the study's
+    /// failure policy.
+    pub retries: u32,
 }
 
 impl ConcreteTask {
@@ -118,6 +125,8 @@ impl ConcreteTask {
             infiles,
             outfiles,
             substitutions,
+            timeout: spec.timeout,
+            retries: spec.retries.unwrap_or(0),
         })
     }
 
@@ -156,6 +165,11 @@ impl ConcreteTask {
             ("infiles".to_string(), pair_arr(&self.infiles)),
             ("outfiles".to_string(), pair_arr(&self.outfiles)),
             ("substitutions".to_string(), pair_arr(&self.substitutions)),
+            (
+                "timeout".to_string(),
+                self.timeout.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("retries".to_string(), Json::from(self.retries as i64)),
         ])
     }
 
@@ -202,6 +216,9 @@ impl ConcreteTask {
             infiles: pairs("infiles")?,
             outfiles: pairs("outfiles")?,
             substitutions: pairs("substitutions")?,
+            // Absent on frames from pre-fault-engine peers: default off.
+            timeout: j.get("timeout").and_then(Json::as_f64),
+            retries: j.get("retries").and_then(Json::as_i64).unwrap_or(0) as u32,
         })
     }
 }
@@ -261,6 +278,24 @@ mod tests {
         ]);
         let t = ConcreteTask::materialize(&spec, 0, &c).unwrap();
         let back = ConcreteTask::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn fault_knobs_round_trip_and_default_off() {
+        let spec = fig5_spec();
+        let c = combo(&[
+            ("matmulOMP:args:size", "16"),
+            ("matmulOMP:environ:OMP_NUM_THREADS", "2"),
+        ]);
+        let mut t = ConcreteTask::materialize(&spec, 0, &c).unwrap();
+        assert_eq!(t.timeout, None);
+        assert_eq!(t.retries, 0);
+        t.timeout = Some(12.5);
+        t.retries = 3;
+        let back = ConcreteTask::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.timeout, Some(12.5));
+        assert_eq!(back.retries, 3);
         assert_eq!(t, back);
     }
 

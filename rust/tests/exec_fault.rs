@@ -1,0 +1,273 @@
+//! Hermetic fault-engine integration tests: every retry / timeout /
+//! failure-policy / resume path of the execution engine, exercised
+//! through the public `Study` API against the deterministic
+//! `ScriptedExecutor` — no subprocesses, no sleeps, no wall-clock
+//! dependence.
+
+use papas::exec::{
+    Completion, ErrorClass, Executor, FailurePolicy, Outcome, Script,
+    ScriptedExecutor,
+};
+use papas::study::{Checkpoint, Study};
+use papas::workflow::{ConcreteTask, Provenance};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+fn tmp_study(tag: &str, yaml: &str) -> Study {
+    let dir = std::env::temp_dir().join("papas_fault").join(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("study.yaml");
+    std::fs::write(&path, yaml).unwrap();
+    Study::from_file(&path)
+        .unwrap()
+        .with_db_root(dir.join(".papas"))
+}
+
+fn reload(tag: &str) -> Study {
+    let dir = std::env::temp_dir().join("papas_fault").join(tag);
+    Study::from_file(dir.join("study.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"))
+}
+
+/// The acceptance scenario: a task that always fails twice completes
+/// under `retries: 3`, and the attempt log shows exactly 3 attempts.
+#[test]
+fn fails_twice_completes_under_three_retries_with_full_attempt_log() {
+    let s = tmp_study(
+        "acceptance",
+        "sim:\n  command: run ${v}\n  retries: 3\n  v: [10, 20, 30]\n",
+    );
+    let script = Arc::new(Script::new().on("sim#1", Outcome::FlakyThenOk(2)));
+    let report = s.run_with(&ScriptedExecutor::new(script.clone(), 2)).unwrap();
+    assert!(report.all_ok(), "{report:?}");
+    assert_eq!(report.completed, 3);
+    assert_eq!(script.executions("sim#1"), 3);
+
+    let attempts = Provenance::open(&s.db_root).unwrap().read_attempts().unwrap();
+    let flaky: Vec<_> = attempts.iter().filter(|a| a.key == "sim#1").collect();
+    assert_eq!(flaky.len(), 3, "attempt log must show 3 attempts");
+    assert_eq!(
+        flaky.iter().map(|a| a.attempt).collect::<Vec<_>>(),
+        vec![1, 2, 3]
+    );
+    assert!(flaky[0].will_retry && !flaky[0].ok);
+    assert_eq!(flaky[0].class, Some(ErrorClass::NonZero));
+    assert_eq!(flaky[0].exit_code, 1);
+    assert!(flaky[2].ok && !flaky[2].will_retry);
+    // untouched tasks ran exactly once, successfully
+    assert_eq!(attempts.iter().filter(|a| a.key == "sim#0").count(), 1);
+}
+
+/// The other half of the acceptance criterion: after an interrupted
+/// (fail-fast-halted) run, `--resume` executes only the incomplete
+/// instances.
+#[test]
+fn resume_after_interruption_executes_only_the_remainder() {
+    let s = tmp_study(
+        "resume",
+        "sim:\n  command: run ${v}\n  v: [0, 1, 2, 3, 4, 5, 6, 7]\n",
+    )
+    .with_policy(FailurePolicy::FailFast);
+    // serial worker: instances 0..3 complete, 3 fails, 4.. never admitted
+    let script = Arc::new(Script::new().on("sim#3", Outcome::Fail(2)));
+    let r1 = s.run_with(&ScriptedExecutor::new(script.clone(), 1)).unwrap();
+    assert!(r1.halted);
+    assert_eq!(r1.completed, 3);
+    for i in 4..8 {
+        assert_eq!(script.executions(&format!("sim#{i}")), 0);
+    }
+    let ckpt = Checkpoint::load(&s.db_root).unwrap();
+    assert_eq!(ckpt.done_keys.len(), 3);
+    assert!(ckpt.failed_keys.contains("sim#3"));
+
+    // resume (fresh process: reload the study): only sim#3..sim#7 run
+    let s2 = reload("resume");
+    let script2 = Arc::new(Script::new());
+    let r2 = s2.run_with(&ScriptedExecutor::new(script2.clone(), 2)).unwrap();
+    assert_eq!(r2.restored, 3);
+    assert_eq!(r2.completed, 5);
+    assert_eq!(script2.total_executions(), 5);
+    for i in 0..3 {
+        assert_eq!(script2.executions(&format!("sim#{i}")), 0, "re-ran sim#{i}");
+    }
+    assert!(Checkpoint::load(&s2.db_root).unwrap().failed_keys.is_empty());
+}
+
+/// Failure-policy matrix, one scenario per policy over the same script.
+#[test]
+fn failure_policy_matrix() {
+    let yaml = "sim:\n  command: run ${v}\n  v: [0, 1, 2, 3, 4, 5]\n";
+
+    // fail-fast: stops the window at the first failure
+    let s = tmp_study("matrix_ff", yaml).with_policy(FailurePolicy::FailFast);
+    let script = Arc::new(Script::new().on("sim#2", Outcome::Fail(1)));
+    let r = s.run_with(&ScriptedExecutor::new(script.clone(), 1)).unwrap();
+    assert!(r.halted);
+    assert_eq!(r.completed, 2);
+    assert_eq!(r.failed, 1);
+    assert_eq!(script.total_executions(), 3);
+
+    // continue: records the failure and proceeds through the study
+    let s = tmp_study("matrix_cont", yaml); // Continue is the default
+    let script = Arc::new(Script::new().on("sim#2", Outcome::Fail(1)));
+    let r = s.run_with(&ScriptedExecutor::new(script.clone(), 1)).unwrap();
+    assert!(!r.halted);
+    assert_eq!(r.completed, 5);
+    assert_eq!(r.failed, 1);
+    assert_eq!(script.total_executions(), 6);
+
+    // retry-budget N: shared budget funds retries, then exhausts
+    let s = tmp_study("matrix_budget", yaml)
+        .with_policy(FailurePolicy::RetryBudget(3));
+    let script = Arc::new(
+        Script::new()
+            .on("sim#1", Outcome::Fail(1))
+            .on("sim#4", Outcome::FlakyThenOk(1)),
+    );
+    let r = s.run_with(&ScriptedExecutor::new(script.clone(), 1)).unwrap();
+    // serial order: always-failing sim#1 drains the whole budget (3
+    // retries), so sim#4's one-off flake finds nothing left and fails.
+    assert!(!r.halted);
+    assert_eq!(r.failed + r.completed, 6);
+    // exactly 6 first attempts + 3 budget-funded retries happened
+    assert_eq!(script.total_executions(), 9);
+}
+
+/// A wedged task under `timeout` is reported as a timeout kill and does
+/// not stall the in-flight window.
+#[test]
+fn hang_with_timeout_is_killed_and_neighbors_proceed() {
+    let s = tmp_study(
+        "hang",
+        "sim:\n  command: run ${v}\n  timeout: 1.5\n  v: [0, 1, 2, 3, 4, 5, 6, 7]\n",
+    );
+    let script = Arc::new(Script::new().on("sim#0", Outcome::Hang));
+    let r = s.run_with(&ScriptedExecutor::new(script.clone(), 2)).unwrap();
+    assert_eq!(r.completed, 7);
+    assert_eq!(r.failed, 1);
+    let attempts = Provenance::open(&s.db_root).unwrap().read_attempts().unwrap();
+    let hung = attempts.iter().find(|a| a.key == "sim#0").unwrap();
+    assert_eq!(hung.class, Some(ErrorClass::Timeout));
+    assert_eq!(hung.duration, 1.5);
+    assert!(hung.error.as_deref().unwrap().contains("timed out"));
+}
+
+/// Spawn failures carry their own error class through the attempt log.
+#[test]
+fn spawn_failures_classified_in_attempt_log() {
+    let s = tmp_study("spawn", "sim:\n  command: run ${v}\n  v: [0, 1]\n");
+    let script = Arc::new(Script::new().on("sim#1", Outcome::SpawnError));
+    let r = s.run_with(&ScriptedExecutor::new(script, 1)).unwrap();
+    assert_eq!(r.failed, 1);
+    let attempts = Provenance::open(&s.db_root).unwrap().read_attempts().unwrap();
+    let bad = attempts.iter().find(|a| a.key == "sim#1").unwrap();
+    assert_eq!(bad.class, Some(ErrorClass::Spawn));
+    assert_eq!(bad.exit_code, -1);
+}
+
+/// Dependent tasks are skipped when their parent exhausts its retries,
+/// and the attempt log only contains tasks that actually executed.
+#[test]
+fn exhausted_parent_skips_dependents() {
+    let s = tmp_study(
+        "cascade",
+        "gen:\n  command: make ${v}\n  retries: 1\n  v: [0, 1]\nuse:\n  command: consume ${gen:v}\n  after: gen\n",
+    );
+    let script = Arc::new(Script::new().on("gen#0", Outcome::Fail(1)));
+    let r = s.run_with(&ScriptedExecutor::new(script.clone(), 2)).unwrap();
+    assert_eq!(r.failed, 1);
+    assert_eq!(r.skipped, 1); // use#0 never ran
+    assert_eq!(r.completed, 2); // gen#1, use#1
+    assert_eq!(script.executions("gen#0"), 2); // 1 + 1 retry
+    assert_eq!(script.executions("use#0"), 0);
+}
+
+/// LocalPool invariants via the scripted backend: full drain across
+/// parallel workers, serial ordering on one worker, failure isolation.
+#[test]
+fn local_pool_invariants_via_scripted_executor() {
+    fn task(i: u64) -> ConcreteTask {
+        ConcreteTask {
+            instance: i,
+            task_id: "w".into(),
+            argv: vec!["work".into()],
+            env: Default::default(),
+            infiles: vec![],
+            outfiles: vec![],
+            substitutions: vec![],
+            timeout: None,
+            retries: 0,
+        }
+    }
+
+    // parallel drain: every task completes, multiple workers used
+    let script = Arc::new(Script::new());
+    let exec = ScriptedExecutor::new(script.clone(), 4);
+    let (tx, rx) = mpsc::channel();
+    let (dtx, drx) = mpsc::channel();
+    for i in 0..32 {
+        tx.send(task(i)).unwrap();
+    }
+    drop(tx);
+    exec.run_all(rx, dtx).unwrap();
+    let results: Vec<Completion> = drx.into_iter().collect();
+    assert_eq!(results.len(), 32);
+    assert!(results.iter().all(|(_, r)| r.ok));
+    let workers: std::collections::BTreeSet<&str> =
+        results.iter().map(|(_, r)| r.worker.as_str()).collect();
+    assert!(workers.len() > 1, "{workers:?}");
+    assert_eq!(script.total_executions(), 32);
+
+    // serial ordering: one worker executes in send order
+    let script = Arc::new(Script::new());
+    let exec = ScriptedExecutor::new(script.clone(), 1);
+    let (tx, rx) = mpsc::channel();
+    let (dtx, drx) = mpsc::channel();
+    for i in 0..8 {
+        tx.send(task(i)).unwrap();
+    }
+    drop(tx);
+    exec.run_all(rx, dtx).unwrap();
+    drop(drx);
+    let expect: Vec<String> = (0..8).map(|i| format!("w#{i}")).collect();
+    assert_eq!(script.journal(), expect);
+
+    // failure isolation: one scripted failure doesn't poison the pool
+    let script = Arc::new(Script::new().on("w#3", Outcome::Fail(9)));
+    let exec = ScriptedExecutor::new(script, 2);
+    let (tx, rx) = mpsc::channel();
+    let (dtx, drx) = mpsc::channel();
+    for i in 0..6 {
+        tx.send(task(i)).unwrap();
+    }
+    drop(tx);
+    exec.run_all(rx, dtx).unwrap();
+    let results: Vec<Completion> = drx.into_iter().collect();
+    assert_eq!(results.len(), 6);
+    assert_eq!(results.iter().filter(|(_, r)| !r.ok).count(), 1);
+}
+
+/// The incremental checkpoint folds failures back out once they succeed
+/// on a later run, and done/failed sets stay disjoint throughout.
+#[test]
+fn checkpoint_folds_terminal_outcomes_across_runs() {
+    let s = tmp_study(
+        "fold",
+        "sim:\n  command: run ${v}\n  v: [0, 1, 2]\n",
+    );
+    let script = Arc::new(Script::new().default_outcome(Outcome::Fail(1)));
+    let r = s.run_with(&ScriptedExecutor::new(script, 2)).unwrap();
+    assert_eq!(r.failed, 3);
+    let ckpt = Checkpoint::load(&s.db_root).unwrap();
+    assert!(ckpt.done_keys.is_empty());
+    assert_eq!(ckpt.failed_keys.len(), 3);
+
+    let s2 = reload("fold");
+    let r = s2.run_with(&ScriptedExecutor::new(Arc::new(Script::new()), 2)).unwrap();
+    assert_eq!(r.completed, 3);
+    let ckpt = Checkpoint::load(&s2.db_root).unwrap();
+    assert_eq!(ckpt.done_keys.len(), 3);
+    assert!(ckpt.failed_keys.is_empty(), "{ckpt:?}");
+}

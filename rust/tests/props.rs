@@ -507,6 +507,100 @@ fn prop_interpolation_never_panics() {
 }
 
 #[test]
+fn prop_checkpoint_merge_is_commutative_and_idempotent() {
+    use papas::study::Checkpoint;
+    check(
+        "merge(a,b)==merge(b,a); merge(a,a)==a; done beats failed",
+        80,
+        |g| {
+            let keys = |g: &mut Gen| -> Vec<String> {
+                g.vec(1..=12, |g| format!("t#{}", g.i64(0..=20)))
+            };
+            let mk = |done: Vec<String>, failed: Vec<String>| {
+                let mut c = Checkpoint::default();
+                c.done_keys.extend(done);
+                for k in failed {
+                    if !c.done_keys.contains(&k) {
+                        c.failed_keys.insert(k);
+                    }
+                }
+                c
+            };
+            let a = mk(keys(g), keys(g));
+            let b = mk(keys(g), keys(g));
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba, "merge must be commutative");
+            let mut aa = a.clone();
+            aa.merge(&a);
+            assert_eq!(aa, a, "merge must be idempotent");
+            // re-merging inputs into the union changes nothing
+            let mut again = ab.clone();
+            again.merge(&a);
+            again.merge(&b);
+            assert_eq!(again, ab);
+            // a key done anywhere is never failed in the union
+            assert!(
+                ab.done_keys.intersection(&ab.failed_keys).next().is_none(),
+                "done and failed must stay disjoint"
+            );
+        },
+    );
+}
+
+#[test]
+fn prop_resume_after_shard_merge_never_reruns_completed_instances() {
+    use papas::exec::{Script, ScriptedExecutor};
+    use papas::study::Checkpoint;
+    use papas::workflow::WorkflowScheduler;
+    use std::sync::Arc;
+    check(
+        "∪ shard checkpoints restores everything; zero re-executions",
+        12,
+        |g| {
+            let study = fig5_study();
+            let total = study.n_instances() as u64; // 88
+            let n = g.usize(1..=5) as u64;
+            // each shard "ran to completion": its checkpoint holds the
+            // task keys of exactly its instances
+            let mut shard_ckpts: Vec<Checkpoint> = (0..n)
+                .map(|i| {
+                    let shard = Shard::new(i, n).unwrap();
+                    let mut c = Checkpoint::default();
+                    for idx in study.selection().iter_shard(shard) {
+                        c.done_keys.insert(format!("matmulOMP#{idx}"));
+                    }
+                    c
+                })
+                .collect();
+            // merge in a random order — the result must not depend on it
+            let mut merged = Checkpoint::default();
+            while !shard_ckpts.is_empty() {
+                let i = g.usize(0..=shard_ckpts.len() - 1);
+                merged.merge(&shard_ckpts.swap_remove(i));
+            }
+            assert_eq!(merged.done_keys.len() as u64, total);
+            // resume over the merged checkpoint: nothing re-executes
+            let script = Arc::new(Script::new());
+            let exec = ScriptedExecutor::new(script.clone(), 2);
+            let source = study.source();
+            let mut sched = WorkflowScheduler::from_source(source.iter());
+            sched.skip_done = merged.done_keys.clone();
+            let report = sched.run(&exec).unwrap();
+            assert_eq!(report.restored as u64, total);
+            assert_eq!(report.completed, 0);
+            assert_eq!(
+                script.total_executions(),
+                0,
+                "resume re-ran a completed instance"
+            );
+        },
+    );
+}
+
+#[test]
 fn prop_json_writer_parser_inverse() {
     // (heavier arbitrary-JSON round trip lives in the json module's unit
     // tests; this checks the study-relevant shape: nested obj/arr of

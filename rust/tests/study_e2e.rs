@@ -184,6 +184,62 @@ fn failure_injection_partial_study() {
 }
 
 #[test]
+fn flaky_subprocess_retries_to_success() {
+    // Real subprocesses: the first attempt plants a marker in the
+    // instance workdir and fails; the retry finds it and passes.
+    let dir = tmp("flaky_real");
+    std::fs::write(
+        dir.join("s.yaml"),
+        "t:\n  command: /bin/sh -c \"test -f done_${v} || { touch done_${v}; exit 1; }\"\n  retries: 2\n  v: [1, 2, 3]\n",
+    )
+    .unwrap();
+    let study = Study::from_file(dir.join("s.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    let report = study.run_local(2).unwrap();
+    assert!(report.all_ok(), "{report:?}");
+    assert_eq!(report.completed, 3);
+    // every instance took exactly 2 attempts (1 fail + 1 ok)
+    assert_eq!(report.records.len(), 6);
+    let prov = papas::workflow::Provenance::open(&study.db_root).unwrap();
+    let attempts = prov.read_attempts().unwrap();
+    assert_eq!(attempts.len(), 6);
+    assert_eq!(attempts.iter().filter(|a| a.will_retry).count(), 3);
+}
+
+#[test]
+fn hung_subprocess_killed_by_timeout_and_study_completes() {
+    let dir = tmp("hang_real");
+    std::fs::write(
+        dir.join("s.yaml"),
+        "t:\n  command: /bin/sh -c \"test ${v} -ne 2 || sleep 30\"\n  timeout: 0.3\n  v: [1, 2, 3, 4]\n",
+    )
+    .unwrap();
+    let study = Study::from_file(dir.join("s.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    let t0 = std::time::Instant::now();
+    let report = study.run_local(2).unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert_eq!(report.completed, 3);
+    assert_eq!(report.failed, 1);
+    // the 30s sleeper was killed + reaped, not waited out
+    assert!(elapsed < 10.0, "took {elapsed}s");
+    let prov = papas::workflow::Provenance::open(&study.db_root).unwrap();
+    let hung = prov
+        .read_attempts()
+        .unwrap()
+        .into_iter()
+        .find(|a| !a.ok)
+        .unwrap();
+    assert_eq!(hung.class.unwrap().label(), "timeout");
+    // resume re-runs only the timed-out instance
+    let r2 = study.run_local(2).unwrap();
+    assert_eq!(r2.restored, 3);
+    assert_eq!(r2.failed, 1);
+}
+
+#[test]
 fn report_and_provenance_files_complete() {
     let dir = tmp("prov");
     std::fs::write(dir.join("s.yaml"), "t:\n  command: sleep-ms 1\n  v: [1, 2]\n")
@@ -192,7 +248,14 @@ fn report_and_provenance_files_complete() {
         .unwrap()
         .with_db_root(dir.join(".papas"));
     study.run_local(1).unwrap();
-    for f in ["study.json", "checkpoint.json", "records.jsonl", "events.log", "report.json"] {
+    for f in [
+        "study.json",
+        "checkpoint.json",
+        "attempts.jsonl",
+        "records.jsonl",
+        "events.log",
+        "report.json",
+    ] {
         assert!(dir.join(".papas").join(f).exists(), "{f}");
     }
     let snap = std::fs::read_to_string(dir.join(".papas/study.json")).unwrap();
