@@ -1,14 +1,19 @@
 //! A small, dependency-free stand-in for the `regex` crate, providing the
-//! subset of its API that PaPaS uses: `Regex::new`, `is_match`, and
-//! `replace_all`. The real crate is unavailable offline, so this
-//! implements a classic Thompson-NFA ("Pike VM") engine — linear time in
-//! `pattern × text`, no backtracking blowups.
+//! subset of its API that PaPaS uses: `Regex::new`, `is_match`,
+//! `replace_all`, and `captures`. The real crate is unavailable offline,
+//! so this implements a classic Thompson-NFA ("Pike VM") engine — linear
+//! time in `pattern × text`, no backtracking blowups — for the boolean /
+//! replacement paths, plus a bounded backtracking matcher for submatch
+//! extraction (`captures`), which the Pike VM cannot report.
 //!
 //! Supported syntax: literals, `.`, `*`, `+`, `?`, alternation `|`,
-//! groups `(...)` / `(?:...)` (non-capturing; replacements are literal),
-//! character classes `[...]` with ranges and `^` negation, the Perl
-//! classes `\d \D \s \S \w \W`, anchors `^` and `$`, and `\`-escaped
-//! metacharacters. Matching is leftmost-longest.
+//! capturing groups `(...)` and non-capturing `(?:...)` (replacements
+//! are literal either way), character classes `[...]` with ranges and
+//! `^` negation, the Perl classes `\d \D \s \S \w \W`, anchors `^` and
+//! `$`, and `\`-escaped metacharacters. `is_match`/`replace_all` are
+//! leftmost-longest; `captures` is leftmost-greedy (the backtracker's
+//! natural order), which agrees on every anchored or unambiguous
+//! pattern the engine serves.
 
 use std::borrow::Cow;
 use std::fmt;
@@ -31,6 +36,9 @@ impl std::error::Error for Error {}
 pub struct Regex {
     prog: Vec<Inst>,
     pattern: String,
+    /// Number of capturing groups (slots 2i/2i+1 per group i, 1-based;
+    /// slots 0/1 hold the whole match).
+    n_groups: usize,
 }
 
 // ---------------------------------------------------------------- AST --
@@ -45,6 +53,9 @@ enum Node {
     Seq(Vec<Node>),
     Alt(Box<Node>, Box<Node>),
     Repeat { node: Box<Node>, min: u8, unbounded: bool },
+    /// Capturing group `(...)`; the index is 1-based (group 0 is the
+    /// whole match).
+    Group(usize, Box<Node>),
 }
 
 #[derive(Debug, Clone)]
@@ -57,6 +68,9 @@ enum ClassItem {
 struct Parser {
     chars: Vec<char>,
     pos: usize,
+    /// Capturing groups seen so far (assigns 1-based indices in order of
+    /// their opening parenthesis, like the real crate).
+    n_groups: usize,
 }
 
 impl Parser {
@@ -120,23 +134,32 @@ impl Parser {
         let c = self.bump().ok_or_else(|| Error("unexpected end".into()))?;
         match c {
             '(' => {
-                // swallow the non-capturing marker; captures are not
-                // supported, so all groups behave identically
-                if self.peek() == Some('?') {
+                // `(?:...)` groups only; a bare `(` opens a capturing
+                // group and claims the next 1-based group index.
+                let capture = if self.peek() == Some('?') {
                     self.bump();
                     if self.peek() == Some(':') {
                         self.bump();
+                        false
                     } else {
                         return Err(Error(
                             "only (?:...) groups are supported".into(),
                         ));
                     }
-                }
+                } else {
+                    self.n_groups += 1;
+                    true
+                };
+                let idx = self.n_groups;
                 let inner = self.parse_alt()?;
                 if self.bump() != Some(')') {
                     return Err(Error("unclosed group '('".into()));
                 }
-                Ok(inner)
+                if capture {
+                    Ok(Node::Group(idx, Box::new(inner)))
+                } else {
+                    Ok(inner)
+                }
             }
             '[' => self.parse_class(),
             '.' => Ok(Node::Any),
@@ -238,8 +261,19 @@ enum Inst {
     End,
     Split(usize, usize),
     Jmp(usize),
+    /// Record the current position into a capture slot (group i begins
+    /// at slot 2i and ends at 2i+1). An epsilon transition for the Pike
+    /// VM; the backtracker records positions.
+    Save(usize),
     Match,
 }
+
+/// Base step budget of one `captures` call (all start offsets combined;
+/// grown linearly for long inputs — see `captures`) against exponential
+/// blowup / empty-body star loops; a pattern that exhausts it reports
+/// "no match" rather than wedging a worker (metric-extraction patterns
+/// are tiny).
+const STEP_LIMIT: usize = 1_000_000;
 
 fn class_matches(neg: bool, items: &[ClassItem], c: char) -> bool {
     let hit = items.iter().any(|it| match it {
@@ -284,6 +318,11 @@ fn compile(node: &Node, prog: &mut Vec<Inst>) {
             prog[split] = Inst::Split(split + 1, b_start);
             prog[jmp] = Inst::Jmp(end);
         }
+        Node::Group(idx, inner) => {
+            prog.push(Inst::Save(2 * idx));
+            compile(inner, prog);
+            prog.push(Inst::Save(2 * idx + 1));
+        }
         Node::Repeat { node, min, unbounded } => {
             match (*min, *unbounded) {
                 (0, false) => {
@@ -319,7 +358,8 @@ fn compile(node: &Node, prog: &mut Vec<Inst>) {
 impl Regex {
     /// Compile a pattern.
     pub fn new(pattern: &str) -> Result<Regex, Error> {
-        let mut p = Parser { chars: pattern.chars().collect(), pos: 0 };
+        let mut p =
+            Parser { chars: pattern.chars().collect(), pos: 0, n_groups: 0 };
         let ast = p.parse_alt()?;
         if p.pos != p.chars.len() {
             // only reachable via an unbalanced ')'
@@ -328,7 +368,15 @@ impl Regex {
         let mut prog = Vec::new();
         compile(&ast, &mut prog);
         prog.push(Inst::Match);
-        Ok(Regex { prog, pattern: pattern.to_string() })
+        Ok(Regex { prog, pattern: pattern.to_string(), n_groups: p.n_groups })
+    }
+
+    /// Number of capture groups including the implicit whole-match
+    /// group 0 — always ≥ 1, matching the real crate's
+    /// `Regex::captures_len` contract so callers survive a swap to the
+    /// real dependency.
+    pub fn captures_len(&self) -> usize {
+        self.n_groups + 1
     }
 
     /// The source pattern.
@@ -406,6 +454,8 @@ impl Regex {
                         stack.push(*b);
                     }
                     Inst::Jmp(t) => stack.push(*t),
+                    // Position bookkeeping is a no-op for the boolean VM.
+                    Inst::Save(_) => stack.push(pc + 1),
                     Inst::Start => {
                         if at == 0 {
                             stack.push(pc + 1);
@@ -457,6 +507,205 @@ impl Regex {
         }
         let _ = on_current;
         best
+    }
+
+    /// Leftmost match with submatch extraction: the first start offset
+    /// (in chars) at which the backtracking matcher succeeds. Returns
+    /// `None` when nothing matches (or when a pathological pattern
+    /// exhausts the step budget — this is a stand-in, not RE2).
+    pub fn captures<'t>(&self, text: &'t str) -> Option<Captures<'t>> {
+        let chars: Vec<char> = text.chars().collect();
+        // char index → byte offset, so slots slice the original &str.
+        let mut byte_of: Vec<usize> = Vec::with_capacity(chars.len() + 1);
+        let mut b = 0usize;
+        for c in &chars {
+            byte_of.push(b);
+            b += c.len_utf8();
+        }
+        byte_of.push(b);
+        // One step budget shared across every start offset — per-start
+        // budgets would multiply by the text length and a pathological
+        // pattern could stall a caller for minutes. Scaled with the
+        // input so that merely *scanning* a long text (≥1 step per
+        // failing start) can never exhaust it before a late match.
+        let limit = STEP_LIMIT.max(8 * (chars.len() + 1));
+        let mut steps = 0usize;
+        for start in 0..=chars.len() {
+            if let Some(slots) =
+                self.backtrack_at(&chars, start, &mut steps, limit)
+            {
+                return Some(Captures { text, slots, byte_of });
+            }
+            if steps > limit {
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Iterative backtracking VM from a fixed start offset. Greedy
+    /// (`Split` prefers its first branch, which the compiler points at
+    /// the repeat body), with an explicit choice-point stack and a save
+    /// trail so group slots rewind on backtrack. `steps` is the caller's
+    /// running budget (capped at `limit`), shared across start offsets.
+    fn backtrack_at(
+        &self,
+        chars: &[char],
+        start: usize,
+        steps: &mut usize,
+        limit: usize,
+    ) -> Option<Vec<Option<usize>>> {
+        struct Choice {
+            pc: usize,
+            at: usize,
+            trail_len: usize,
+        }
+
+        let mut slots: Vec<Option<usize>> = vec![None; 2 * (self.n_groups + 1)];
+        slots[0] = Some(start);
+        let mut trail: Vec<(usize, Option<usize>)> = Vec::new();
+        let mut alts: Vec<Choice> = Vec::new();
+        let (mut pc, mut at) = (0usize, start);
+        loop {
+            *steps += 1;
+            if *steps > limit {
+                return None;
+            }
+            let ok = match &self.prog[pc] {
+                Inst::Char(x) => {
+                    if at < chars.len() && chars[at] == *x {
+                        at += 1;
+                        pc += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Inst::Any => {
+                    if at < chars.len() {
+                        at += 1;
+                        pc += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Inst::Class { neg, items } => {
+                    if at < chars.len() && class_matches(*neg, items, chars[at]) {
+                        at += 1;
+                        pc += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Inst::Start => {
+                    if at == 0 {
+                        pc += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Inst::End => {
+                    if at == chars.len() {
+                        pc += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Inst::Split(a, b) => {
+                    alts.push(Choice { pc: *b, at, trail_len: trail.len() });
+                    pc = *a;
+                    true
+                }
+                Inst::Jmp(t) => {
+                    pc = *t;
+                    true
+                }
+                Inst::Save(slot) => {
+                    trail.push((*slot, slots[*slot]));
+                    slots[*slot] = Some(at);
+                    pc += 1;
+                    true
+                }
+                Inst::Match => {
+                    slots[1] = Some(at);
+                    return Some(slots);
+                }
+            };
+            if !ok {
+                let c = alts.pop()?;
+                while trail.len() > c.trail_len {
+                    let (slot, old) = trail.pop().expect("trail underflow");
+                    slots[slot] = old;
+                }
+                pc = c.pc;
+                at = c.at;
+            }
+        }
+    }
+}
+
+/// One submatch: a resolved slice of the searched text.
+#[derive(Debug, Clone, Copy)]
+pub struct Match<'t> {
+    text: &'t str,
+    start: usize,
+    end: usize,
+}
+
+impl<'t> Match<'t> {
+    /// The matched text.
+    pub fn as_str(&self) -> &'t str {
+        &self.text[self.start..self.end]
+    }
+
+    /// Byte offset of the match start.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Byte offset just past the match end.
+    pub fn end(&self) -> usize {
+        self.end
+    }
+}
+
+/// The capture groups of one successful match. Group 0 is the whole
+/// match; groups that did not participate return `None`.
+#[derive(Debug, Clone)]
+pub struct Captures<'t> {
+    text: &'t str,
+    /// Char positions: slot 2i = group i start, 2i+1 = group i end.
+    slots: Vec<Option<usize>>,
+    /// Char index → byte offset (one extra entry for the text end).
+    byte_of: Vec<usize>,
+}
+
+impl<'t> Captures<'t> {
+    /// The i-th group (0 = whole match).
+    pub fn get(&self, i: usize) -> Option<Match<'t>> {
+        let (s, e) = (*self.slots.get(2 * i)?, *self.slots.get(2 * i + 1)?);
+        match (s, e) {
+            (Some(s), Some(e)) => Some(Match {
+                text: self.text,
+                start: self.byte_of[s],
+                end: self.byte_of[e],
+            }),
+            _ => None,
+        }
+    }
+
+    /// Number of groups including the implicit whole-match group 0.
+    pub fn len(&self) -> usize {
+        self.slots.len() / 2
+    }
+
+    /// Never empty: group 0 always exists on a successful match.
+    pub fn is_empty(&self) -> bool {
+        false
     }
 }
 
@@ -534,5 +783,79 @@ mod tests {
         let re = Regex::new("").unwrap();
         assert!(re.is_match("abc"));
         assert_eq!(re.replace_all("ab", "-"), "-a-b-");
+    }
+
+    #[test]
+    fn captures_extract_groups() {
+        let re = Regex::new(r"checksum=([-+0-9.eE]+)").unwrap();
+        assert_eq!(re.captures_len(), 2); // group 0 + one explicit group
+        let c = re
+            .captures("matmul n=64 threads=2 checksum=1.234560e3 done")
+            .unwrap();
+        assert_eq!(c.get(0).unwrap().as_str(), "checksum=1.234560e3");
+        assert_eq!(c.get(1).unwrap().as_str(), "1.234560e3");
+        assert_eq!(c.len(), 2);
+        assert!(re.captures("no metric here").is_none());
+    }
+
+    #[test]
+    fn captures_multiple_and_nested_groups() {
+        let re = Regex::new(r"(\w+)=(\d+(\.\d+)?)").unwrap();
+        assert_eq!(re.captures_len(), 4);
+        let c = re.captures("x time=12.75 y").unwrap();
+        assert_eq!(c.get(1).unwrap().as_str(), "time");
+        assert_eq!(c.get(2).unwrap().as_str(), "12.75");
+        assert_eq!(c.get(3).unwrap().as_str(), ".75");
+        // optional group absent → None, others still report
+        let c = re.captures("n=42").unwrap();
+        assert_eq!(c.get(2).unwrap().as_str(), "42");
+        assert!(c.get(3).is_none());
+        assert!(c.get(9).is_none());
+    }
+
+    #[test]
+    fn captures_is_leftmost() {
+        let re = Regex::new(r"(\d+)").unwrap();
+        let c = re.captures("a 10 b 20").unwrap();
+        assert_eq!(c.get(1).unwrap().as_str(), "10");
+    }
+
+    #[test]
+    fn captures_alternation_and_anchors() {
+        let re = Regex::new(r"^(cat|dog)s?$").unwrap();
+        let c = re.captures("dogs").unwrap();
+        assert_eq!(c.get(1).unwrap().as_str(), "dog");
+        assert!(re.captures("catfish").is_none());
+        // non-capturing groups claim no slot
+        let re = Regex::new(r"(?:val|v)=(\d+)").unwrap();
+        assert_eq!(re.captures_len(), 2);
+        let c = re.captures("v=7").unwrap();
+        assert_eq!(c.get(1).unwrap().as_str(), "7");
+    }
+
+    #[test]
+    fn captures_greedy_with_backtracking() {
+        let re = Regex::new(r"(.*)=(\d+)").unwrap();
+        // greedy .* must back off to let the digits match
+        let c = re.captures("a=b=42").unwrap();
+        assert_eq!(c.get(1).unwrap().as_str(), "a=b");
+        assert_eq!(c.get(2).unwrap().as_str(), "42");
+    }
+
+    #[test]
+    fn captures_multibyte_offsets() {
+        let re = Regex::new(r"€(\d+)").unwrap();
+        let c = re.captures("cost €42 total").unwrap();
+        assert_eq!(c.get(0).unwrap().as_str(), "€42");
+        assert_eq!(c.get(1).unwrap().as_str(), "42");
+        assert_eq!(&"cost €42 total"[c.get(1).unwrap().start()..c.get(1).unwrap().end()], "42");
+    }
+
+    #[test]
+    fn capturing_groups_leave_boolean_paths_unchanged() {
+        // Save instructions are epsilon transitions for the Pike VM.
+        let re = Regex::new(r"(a+)(b+)").unwrap();
+        assert!(re.is_match("xxaabbyy"));
+        assert_eq!(re.replace_all("aab ab", "X"), "X X");
     }
 }

@@ -39,14 +39,22 @@ pub enum ParsedCommand {
     Dax(Args),
     /// `papas status ...` (file-database monitoring view)
     Status(Args),
+    /// `papas harvest ...` (backfill the typed result store post-hoc)
+    Harvest(Args),
+    /// `papas query ...` (filter/group/aggregate captured results)
+    Query(Args),
+    /// `papas report ...` (per-axis performance summary with speedup)
+    Report(Args),
     /// `papas help` / no args.
     Help,
 }
 
 /// Switches (no value) per subcommand; everything else starting with
 /// `--` takes a value.
-const SWITCHES: &[&str] =
-    &["fresh", "dot", "quiet", "concat", "gantt", "resume", "complete-only"];
+const SWITCHES: &[&str] = &[
+    "fresh", "dot", "quiet", "concat", "gantt", "resume", "complete-only",
+    "desc",
+];
 
 impl Args {
     /// Parse a full argv (without the program name).
@@ -67,6 +75,9 @@ impl Args {
             "aggregate" => Ok(ParsedCommand::Aggregate(rest)),
             "dax" => Ok(ParsedCommand::Dax(rest)),
             "status" => Ok(ParsedCommand::Status(rest)),
+            "harvest" => Ok(ParsedCommand::Harvest(rest)),
+            "query" => Ok(ParsedCommand::Query(rest)),
+            "report" => Ok(ParsedCommand::Report(rest)),
             "help" | "--help" | "-h" => Ok(ParsedCommand::Help),
             other => Err(Error::Exec(format!(
                 "unknown subcommand '{other}' (try 'papas help')"
@@ -140,6 +151,35 @@ mod tests {
         assert!(matches!(Args::parse(&sv(&["help"])).unwrap(), ParsedCommand::Help));
         assert!(matches!(Args::parse(&[]).unwrap(), ParsedCommand::Help));
         assert!(Args::parse(&sv(&["destroy"])).is_err());
+        assert!(matches!(
+            Args::parse(&sv(&["harvest", "s.yaml"])).unwrap(),
+            ParsedCommand::Harvest(_)
+        ));
+        assert!(matches!(
+            Args::parse(&sv(&["query", "s.yaml"])).unwrap(),
+            ParsedCommand::Query(_)
+        ));
+        assert!(matches!(
+            Args::parse(&sv(&["report", "s.yaml"])).unwrap(),
+            ParsedCommand::Report(_)
+        ));
+    }
+
+    #[test]
+    fn query_flags_parse() {
+        let ParsedCommand::Query(a) = Args::parse(&sv(&[
+            "query", "s.yaml", "--where", "threads==4 && wall_time<2",
+            "--by", "threads,size", "--metric", "wall_time", "--format",
+            "csv", "--top", "5", "--sort", "wall_time", "--desc",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.opt_or("where", ""), "threads==4 && wall_time<2");
+        assert_eq!(a.opt_or("by", ""), "threads,size");
+        assert_eq!(a.opt_or("format", "table"), "csv");
+        assert_eq!(a.opt_num::<usize>("top", 0).unwrap(), 5);
+        assert!(a.has_flag("desc"));
     }
 
     #[test]

@@ -35,7 +35,17 @@ USAGE:
   papas aggregate STUDY.yaml [--pattern RE] [--out FILE] [--concat]
                   [--complete-only]
   papas dax STUDY.yaml [--instance N]       Pegasus DAX export (§9)
-  papas status [DB-DIR] [--gantt]           inspect a study database
+  papas status [DB-DIR] [--gantt] [--format text|json]
+                                            inspect a study database
+  papas harvest STUDY.yaml [--db DIR]       backfill typed results from
+                                            attempts.jsonl + workdirs
+  papas query STUDY.yaml [--where EXPR] [--by AXES] [--metric NAMES]
+              [--sort METRIC] [--desc] [--top K] [--format table|csv|json]
+                                            filter/group captured results
+  papas report STUDY.yaml --metric M --by AXIS [--baseline AXIS=V]
+               [--where EXPR] [--format text|json]
+                                            per-axis performance summary
+                                            (mean/std, speedup, efficiency)
   papas help";
 
 fn load_study(a: &Args) -> Result<Study> {
@@ -314,7 +324,10 @@ pub fn cmd_qsim(a: &Args) -> Result<()> {
 }
 
 /// `papas status` — inspect a study's file database (monitoring view).
+/// `--format json` emits the same summary as one machine-readable JSON
+/// document (CI gates, external dashboards).
 pub fn cmd_status(a: &Args) -> Result<()> {
+    use crate::json::Json;
     let db = PathBuf::from(a.opt_or("db", ".papas"));
     let db = if a.positional.is_empty() {
         db
@@ -323,33 +336,112 @@ pub fn cmd_status(a: &Args) -> Result<()> {
         let p = PathBuf::from(&a.positional[0]);
         if p.exists() { p } else { db.join(&a.positional[0]) }
     };
+    let as_json = match a.opt_or("format", "text").as_str() {
+        "text" => false,
+        "json" => true,
+        other => {
+            return Err(Error::Exec(format!(
+                "unknown --format '{other}' (text|json)"
+            )))
+        }
+    };
     let filedb = crate::study::FileDb::open(&db)?;
     let snap = filedb.load_study_snapshot().map_err(|_| {
         Error::Store(format!("no study database under {}", db.display()))
     })?;
+    let ckpt = crate::study::Checkpoint::load(&db)?;
+    let prov = crate::workflow::provenance::Provenance::open(&db)?;
+    let attempts = prov.read_attempts()?;
+    let retries = attempts.iter().filter(|a| a.attempt > 1).count();
+    let mut by_class: std::collections::BTreeMap<&str, usize> =
+        std::collections::BTreeMap::new();
+    for at in &attempts {
+        if let Some(c) = at.class {
+            *by_class.entry(c.label()).or_insert(0) += 1;
+        }
+    }
+    let records = prov.read_records()?;
+    let records_ok = records.iter().filter(|r| r.ok).count();
+    let last_run: Option<Json> = if db.join("report.json").exists() {
+        Some(crate::json::parse(&std::fs::read_to_string(
+            db.join("report.json"),
+        )?)?)
+    } else {
+        None
+    };
+
+    if as_json {
+        let j = Json::obj([
+            ("name".to_string(), snap.expect("name")?.clone()),
+            (
+                "n_combinations".to_string(),
+                snap.expect("n_combinations")?.clone(),
+            ),
+            ("n_selected".to_string(), snap.expect("n_selected")?.clone()),
+            (
+                "checkpoint".to_string(),
+                Json::obj([
+                    ("done".to_string(), Json::from(ckpt.done_keys.len())),
+                    ("failed".to_string(), Json::from(ckpt.failed_keys.len())),
+                ]),
+            ),
+            (
+                "attempts".to_string(),
+                Json::obj([
+                    ("total".to_string(), Json::from(attempts.len())),
+                    ("retries".to_string(), Json::from(retries)),
+                    (
+                        "failures_by_class".to_string(),
+                        Json::Obj(
+                            by_class
+                                .iter()
+                                .map(|(k, v)| (k.to_string(), Json::from(*v)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "records".to_string(),
+                Json::obj([
+                    ("total".to_string(), Json::from(records.len())),
+                    ("ok".to_string(), Json::from(records_ok)),
+                    (
+                        "failed".to_string(),
+                        Json::from(records.len() - records_ok),
+                    ),
+                ]),
+            ),
+            (
+                "last_run".to_string(),
+                last_run.clone().unwrap_or(Json::Null),
+            ),
+            (
+                "results".to_string(),
+                match crate::results::store::stored_row_count(&db) {
+                    Some(n) => {
+                        Json::obj([("rows".to_string(), Json::from(n))])
+                    }
+                    None => Json::Null,
+                },
+            ),
+        ]);
+        println!("{}", crate::json::to_string_pretty(&j));
+        return Ok(());
+    }
+
     println!(
         "study '{}': {} combinations, {} selected",
         snap.expect_str("name")?,
         snap.expect_i64("n_combinations")?,
         snap.expect_i64("n_selected")?
     );
-    let ckpt = crate::study::Checkpoint::load(&db)?;
     println!(
         "checkpoint: {} tasks completed, {} failed terminally",
         ckpt.done_keys.len(),
         ckpt.failed_keys.len()
     );
-    let prov = crate::workflow::provenance::Provenance::open(&db)?;
-    let attempts = prov.read_attempts()?;
     if !attempts.is_empty() {
-        let retries = attempts.iter().filter(|a| a.attempt > 1).count();
-        let mut by_class: std::collections::BTreeMap<&str, usize> =
-            std::collections::BTreeMap::new();
-        for a in &attempts {
-            if let Some(c) = a.class {
-                *by_class.entry(c.label()).or_insert(0) += 1;
-            }
-        }
         let classes = by_class
             .iter()
             .map(|(k, v)| format!("{k}={v}"))
@@ -366,14 +458,12 @@ pub fn cmd_status(a: &Args) -> Result<()> {
             }
         );
     }
-    let records = prov.read_records()?;
     if !records.is_empty() {
-        let ok = records.iter().filter(|r| r.ok).count();
         println!(
             "records: {} total, {} ok, {} failed",
             records.len(),
-            ok,
-            records.len() - ok
+            records_ok,
+            records.len() - records_ok
         );
         if a.has_flag("gantt") {
             let tail: Vec<_> =
@@ -381,9 +471,7 @@ pub fn cmd_status(a: &Args) -> Result<()> {
             print!("{}", crate::viz::render_records(&tail, 60));
         }
     }
-    if db.join("report.json").exists() {
-        let report = std::fs::read_to_string(db.join("report.json"))?;
-        let j = crate::json::parse(&report)?;
+    if let Some(j) = &last_run {
         println!(
             "last run: {} completed / {} failed / {} restored on {} \
              (makespan {:.3}s)",
@@ -415,6 +503,119 @@ pub fn cmd_aggregate(a: &Args) -> Result<()> {
         a.has_flag("complete-only"),
     )?;
     println!("aggregated {n} files matching '{pattern}' -> {}", out.display());
+    Ok(())
+}
+
+/// `papas harvest` — backfill the typed result store from the attempt
+/// log and the instance workdirs (post-hoc capture).
+pub fn cmd_harvest(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    let table = crate::results::harvest(&study)?;
+    let db = crate::study::FileDb::at(&study.db_root);
+    println!(
+        "harvested {} result rows × {} metric columns -> {} (+ columnar \
+         snapshot {})",
+        table.len(),
+        table.schema().metrics.len(),
+        db.results_path().display(),
+        db.results_columns_path().display(),
+    );
+    Ok(())
+}
+
+/// Load the study's result table, harvesting on demand when **no store
+/// exists at all** (first `papas query` after a run without a
+/// `capture:` block). An *existing but unloadable* store propagates its
+/// error instead — harvest rewrites `results.jsonl`, and a query must
+/// never destructively replace previously captured values (file metrics
+/// whose workdirs are gone would re-extract as missing).
+fn load_results(
+    study: &crate::study::Study,
+) -> Result<(crate::results::CaptureEngine, crate::results::ResultTable)> {
+    let engine = study.capture_engine()?;
+    let db = crate::study::FileDb::at(&study.db_root);
+    if !db.results_path().exists() && !db.results_columns_path().exists() {
+        let t = crate::results::harvest(study)?;
+        eprintln!(
+            "note: no result store found; harvested {} rows from \
+             attempts.jsonl",
+            t.len()
+        );
+        return Ok((engine, t));
+    }
+    let t = crate::results::ResultTable::load(&study.db_root, engine.schema())?;
+    Ok((engine, t))
+}
+
+/// `papas query` — filter/group/aggregate the captured result set.
+pub fn cmd_query(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    let (engine, table) = load_results(&study)?;
+    let format = crate::results::Format::parse(&a.opt_or("format", "table"))?;
+    let top = match a.options.get("top") {
+        Some(_) => Some(a.opt_num::<usize>("top", 0)?),
+        None => None,
+    };
+    let query = crate::results::Query::parse(
+        engine.schema(),
+        study.space(),
+        &a.opt_or("where", ""),
+        &a.opt_or("by", ""),
+        &a.opt_or("metric", ""),
+        a.options.get("sort").map(String::as_str),
+        a.has_flag("desc"),
+        top,
+    )?;
+    if query.by.is_empty() {
+        let rows = crate::results::run_flat(&table, study.space(), &query);
+        print!(
+            "{}",
+            crate::results::render_flat(&rows, engine.schema(), &query, format)
+        );
+        if format == crate::results::Format::Table {
+            println!("# {} rows of {}", rows.len(), table.len());
+        }
+    } else {
+        let groups =
+            crate::results::run_grouped(&table, study.space(), &query)?;
+        print!("{}", crate::results::render_groups(&groups, format));
+        if format == crate::results::Format::Table {
+            println!("# {} groups over {} rows", groups.len(), table.len());
+        }
+    }
+    Ok(())
+}
+
+/// `papas report` — the §6-style performance summary: one axis, one
+/// metric, mean/std per axis value, speedup + parallel efficiency
+/// against `--baseline AXIS=VALUE`, and an ASCII trend.
+pub fn cmd_report(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    let (engine, table) = load_results(&study)?;
+    let metric = a.opt_or("metric", "wall_time");
+    let by = a.options.get("by").ok_or_else(|| {
+        Error::Exec("report needs --by AXIS (e.g. --by threads)".into())
+    })?;
+    let report = crate::results::build_report(
+        &table,
+        study.space(),
+        engine.schema(),
+        &metric,
+        by,
+        a.options.get("baseline").map(String::as_str),
+        &a.opt_or("where", ""),
+    )?;
+    match a.opt_or("format", "text").as_str() {
+        "text" => print!("{}", report.render_text()),
+        "json" => {
+            println!("{}", crate::json::to_string_pretty(&report.to_json()))
+        }
+        other => {
+            return Err(Error::Exec(format!(
+                "unknown --format '{other}' (text|json)"
+            )))
+        }
+    }
     Ok(())
 }
 
@@ -642,6 +843,84 @@ mod tests {
         cmd_status(&st).unwrap();
         // nonexistent db errors
         assert!(cmd_status(&args(&["/no/such/db"], &[])).is_err());
+    }
+
+    #[test]
+    fn harvest_query_report_commands() {
+        let p = study_file(
+            "results",
+            // score = 10×v, plus a per-instance output file
+            "t:\n  command: /bin/sh -c \"echo score=${v}0; printf 'sum %s0\\n' ${v} > out.txt\"\n  v: [1, 2, 3]\n  capture:\n    score: stdout score=([0-9.]+)\n    fsum: file out\\.txt sum ([0-9.]+)\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        let dbs = db.to_str().unwrap();
+        cmd_run(&args(&[p.to_str().unwrap()], &[("db", dbs)]), false).unwrap();
+        // live capture already produced the store; harvest rebuilds it
+        assert!(db.join("results.jsonl").exists());
+        cmd_harvest(&args(&[p.to_str().unwrap()], &[("db", dbs)])).unwrap();
+        assert!(db.join("results_columns.json").exists());
+
+        // queries execute in every format, grouped and flat
+        for (opts, _) in [
+            (vec![("db", dbs), ("where", "v==2"), ("format", "csv")], 1),
+            (vec![("db", dbs), ("by", "v"), ("metric", "score")], 3),
+            (vec![("db", dbs), ("format", "json")], 3),
+            (
+                vec![
+                    ("db", dbs),
+                    ("sort", "score"),
+                    ("top", "2"),
+                    ("format", "table"),
+                ],
+                2,
+            ),
+        ] {
+            let a = args(&[p.to_str().unwrap()], &opts);
+            cmd_query(&a).unwrap();
+        }
+        // bad clauses error cleanly
+        assert!(cmd_query(&args(
+            &[p.to_str().unwrap()],
+            &[("db", dbs), ("where", "ghost==1")]
+        ))
+        .is_err());
+
+        // report with a baseline over the captured metric
+        cmd_report(&args(
+            &[p.to_str().unwrap()],
+            &[("db", dbs), ("metric", "score"), ("by", "v"), ("baseline", "v=1")],
+        ))
+        .unwrap();
+        cmd_report(&args(
+            &[p.to_str().unwrap()],
+            &[("db", dbs), ("metric", "score"), ("by", "v"), ("format", "json")],
+        ))
+        .unwrap();
+        assert!(cmd_report(&args(&[p.to_str().unwrap()], &[("db", dbs)]))
+            .is_err()); // --by required
+    }
+
+    #[test]
+    fn status_format_json_is_machine_readable() {
+        let p = study_file(
+            "statusjson",
+            "t:\n  command: sleep-ms 0\n  v: [1, 2]\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        cmd_run(
+            &args(&[p.to_str().unwrap()], &[("db", db.to_str().unwrap())]),
+            false,
+        )
+        .unwrap();
+        // text and json both succeed; bad format errors
+        cmd_status(&args(&[db.to_str().unwrap()], &[])).unwrap();
+        cmd_status(&args(&[db.to_str().unwrap()], &[("format", "json")]))
+            .unwrap();
+        assert!(cmd_status(&args(
+            &[db.to_str().unwrap()],
+            &[("format", "yaml")]
+        ))
+        .is_err());
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //! papas resume STUDY.yaml [...run flags]   # alias of run (checkpoint-aware)
 //! papas worker --bind ADDR [--artifacts DIR]
 //! papas qsim --jobs N --regime R [--nodes N] [--duration S] [--seed S]
+//! papas harvest STUDY.yaml                 # backfill typed results
+//! papas query STUDY.yaml [--where ...] [--by ...]   # query results
+//! papas report STUDY.yaml --metric M --by AXIS      # perf summary
 //! ```
 
 pub mod args;
@@ -44,6 +47,9 @@ fn run(argv: &[String]) -> Result<()> {
         ParsedCommand::Aggregate(a) => commands::cmd_aggregate(&a),
         ParsedCommand::Dax(a) => commands::cmd_dax(&a),
         ParsedCommand::Status(a) => commands::cmd_status(&a),
+        ParsedCommand::Harvest(a) => commands::cmd_harvest(&a),
+        ParsedCommand::Query(a) => commands::cmd_query(&a),
+        ParsedCommand::Report(a) => commands::cmd_report(&a),
         ParsedCommand::Help => {
             println!("{}", commands::USAGE);
             Ok(())

@@ -48,6 +48,10 @@ pub enum Outcome {
 pub struct Script {
     outcomes: BTreeMap<String, Outcome>,
     default: Outcome,
+    /// Scripted stdout per key (same key/task/default-free precedence as
+    /// outcomes), attached to every attempt's result — lets the results
+    /// engine's stdout captures run hermetically.
+    stdouts: BTreeMap<String, String>,
     /// Simulated per-attempt duration (seconds) reported in results.
     sim_duration: f64,
     counts: Mutex<BTreeMap<String, u32>>,
@@ -66,6 +70,7 @@ impl Script {
         Script {
             outcomes: BTreeMap::new(),
             default: Outcome::Succeed,
+            stdouts: BTreeMap::new(),
             sim_duration: 0.001,
             counts: Mutex::new(BTreeMap::new()),
             journal: Mutex::new(Vec::new()),
@@ -82,6 +87,17 @@ impl Script {
     /// Outcome for every task the script does not name.
     pub fn default_outcome(mut self, outcome: Outcome) -> Script {
         self.default = outcome;
+        self
+    }
+
+    /// Scripted stdout for `key` (full `task_id#instance` or bare
+    /// `task_id`), reported on every attempt of matching tasks.
+    pub fn stdout_on(
+        mut self,
+        key: impl Into<String>,
+        text: impl Into<String>,
+    ) -> Script {
+        self.stdouts.insert(key.into(), text.into());
         self
     }
 
@@ -112,6 +128,14 @@ impl Script {
             .or_else(|| self.outcomes.get(&task.task_id))
             .copied()
             .unwrap_or(self.default)
+    }
+
+    fn stdout_for(&self, task: &ConcreteTask, key: &str) -> String {
+        self.stdouts
+            .get(key)
+            .or_else(|| self.stdouts.get(&task.task_id))
+            .cloned()
+            .unwrap_or_default()
     }
 
     fn ok_result(&self, duration: f64) -> TaskResult {
@@ -156,7 +180,7 @@ impl TaskExec for Script {
         };
         self.journal.lock().unwrap().push(key.clone());
 
-        match self.outcome_for(task, &key) {
+        let mut result = match self.outcome_for(task, &key) {
             Outcome::Succeed => self.ok_result(self.sim_duration),
             Outcome::Fail(code) => self.fail_result(
                 code,
@@ -196,7 +220,9 @@ impl TaskExec for Script {
                 format!("spawn '{}': scripted spawn failure", task.key()),
                 0.0,
             ),
-        }
+        };
+        result.stdout = self.stdout_for(task, &key);
+        result
     }
 }
 
@@ -285,6 +311,16 @@ mod tests {
         assert_eq!(s.executions("f#0"), 3);
         assert_eq!(s.executions("f#1"), 1);
         assert_eq!(s.total_executions(), 4);
+    }
+
+    #[test]
+    fn scripted_stdout_attaches_to_results() {
+        let s = Script::new()
+            .stdout_on("a", "GFLOPS=2.5\n")
+            .stdout_on("a#1", "GFLOPS=9.0\n");
+        assert_eq!(s.exec(&task("a", 0)).stdout, "GFLOPS=2.5\n");
+        assert_eq!(s.exec(&task("a", 1)).stdout, "GFLOPS=9.0\n");
+        assert_eq!(s.exec(&task("b", 0)).stdout, "");
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub mod exec;
 pub mod ini;
 pub mod json;
 pub mod params;
+pub mod results;
 pub mod runtime;
 pub mod study;
 pub mod tasks;

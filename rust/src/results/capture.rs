@@ -1,0 +1,539 @@
+//! Typed metric capture: the WDL `capture:` block and its compiled
+//! extraction engine.
+//!
+//! A task section may declare named metrics extracted from its outputs:
+//!
+//! ```yaml
+//! matmulPerf:
+//!   command: matmul ${args:size} result_${args:size}.txt
+//!   capture:
+//!     checksum: stdout checksum=([-+0-9.eE]+)
+//!     file_sum: file result_.*\.txt checksum ([-+0-9.eE]+)
+//! ```
+//!
+//! Spec grammar (scalar value per metric name):
+//!
+//! * `stdout PATTERN` — regex over the attempt's captured stdout; the
+//!   first capture group if the pattern has one, else the whole match;
+//! * `file NAME_REGEX` — the first workdir file whose *name* matches
+//!   `NAME_REGEX` (sorted order), whole content parsed as a number;
+//! * `file NAME_REGEX PATTERN` — same file selection, value extracted by
+//!   `PATTERN` from the content.
+//!
+//! Extracted text types itself: numeric when it parses as f64, string
+//! otherwise ([`MetricValue::of_text`]). The built-in metrics
+//! (`wall_time`, `attempts`, `exit_code`, `exit_class`) come from the
+//! attempt log and need no declaration — declaring a capture under a
+//! built-in name is a validation error.
+//!
+//! Specs are compiled once per study ([`CaptureSet::compile`], carried on
+//! the [`crate::wdl::CompiledStudy`] like `timeout`/`retries`), and the
+//! [`CaptureEngine`] turns terminal attempt records into typed
+//! [`Row`]s — live from the scheduler's `on_attempt` hook, or post-hoc
+//! via `papas harvest`.
+
+use super::schema::{is_builtin_metric, MetricValue, Row, Schema, BUILTIN_METRICS};
+use crate::params::Space;
+use crate::util::error::{Error, Result};
+use crate::util::strings::is_identifier;
+use crate::wdl::StudySpec;
+use crate::workflow::AttemptRecord;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Where a captured metric's raw text comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SourceSpec {
+    /// Regex over the attempt's captured stdout.
+    Stdout {
+        /// The extraction pattern (group 1 if present, else the match).
+        pattern: String,
+    },
+    /// A workdir file selected by name.
+    File {
+        /// Regex over file *names* in the instance workdir; the first
+        /// match in sorted order is read.
+        name_pattern: String,
+        /// Extraction pattern over the content; `None` = whole file.
+        pattern: Option<String>,
+    },
+}
+
+/// One declared metric of a task's `capture:` block (AST level — flows
+/// ast → validate → compile like the fault keys).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaptureSpec {
+    /// Metric (column) name.
+    pub name: String,
+    /// Extraction source.
+    pub source: SourceSpec,
+}
+
+impl CaptureSpec {
+    /// Parse one `name: spec` entry of a `capture:` block.
+    pub fn parse(task: &str, name: &str, raw: &str) -> Result<CaptureSpec> {
+        if !is_identifier(name) {
+            return Err(Error::Wdl(format!(
+                "task '{task}': capture metric name '{name}' is not an \
+                 identifier"
+            )));
+        }
+        if is_builtin_metric(name) {
+            return Err(Error::Wdl(format!(
+                "task '{task}': capture metric '{name}' shadows a built-in \
+                 result column ({}) — built-ins are always captured and \
+                 need no declaration",
+                BUILTIN_METRICS.join(", ")
+            )));
+        }
+        let raw = raw.trim();
+        let (kind, rest) = match raw.split_once(char::is_whitespace) {
+            Some((k, r)) => (k, r.trim()),
+            None => (raw, ""),
+        };
+        let source = match kind {
+            "stdout" => {
+                if rest.is_empty() {
+                    return Err(Error::Wdl(format!(
+                        "task '{task}': capture '{name}': `stdout` needs a \
+                         pattern (capture: {name}: stdout PATTERN)"
+                    )));
+                }
+                SourceSpec::Stdout { pattern: rest.to_string() }
+            }
+            "file" => {
+                if rest.is_empty() {
+                    return Err(Error::Wdl(format!(
+                        "task '{task}': capture '{name}': `file` needs a \
+                         file-name regex (capture: {name}: file NAME_RE \
+                         [PATTERN])"
+                    )));
+                }
+                match rest.split_once(char::is_whitespace) {
+                    Some((f, p)) => SourceSpec::File {
+                        name_pattern: f.to_string(),
+                        pattern: Some(p.trim().to_string()),
+                    },
+                    None => SourceSpec::File {
+                        name_pattern: rest.to_string(),
+                        pattern: None,
+                    },
+                }
+            }
+            other => {
+                return Err(Error::Wdl(format!(
+                    "task '{task}': capture '{name}': unknown source \
+                     '{other}' (expected `stdout PATTERN` or `file \
+                     NAME_RE [PATTERN]`)"
+                )))
+            }
+        };
+        Ok(CaptureSpec { name: name.to_string(), source })
+    }
+}
+
+/// One metric with its patterns compiled.
+#[derive(Debug)]
+struct CompiledCapture {
+    name: String,
+    source: CompiledSource,
+}
+
+#[derive(Debug)]
+enum CompiledSource {
+    Stdout(regex::Regex),
+    File { name: regex::Regex, content: Option<regex::Regex> },
+}
+
+/// Largest output file the extractor will read (a metric lives in the
+/// first megabyte or it is not a metric).
+const MAX_CAPTURE_FILE: u64 = 1 << 20;
+
+/// A task's `capture:` block with every pattern compiled — built once
+/// per study by `wdl::compile` (or directly from the spec on the naive
+/// fallback path) and shared via `Arc`.
+#[derive(Debug)]
+pub struct CaptureSet {
+    metrics: Vec<CompiledCapture>,
+}
+
+impl CaptureSet {
+    /// Compile a task's capture declarations. Duplicate metric names
+    /// within one task are rejected here (validate reports them with
+    /// task context).
+    pub fn compile(task: &str, specs: &[CaptureSpec]) -> Result<CaptureSet> {
+        let compile_re = |name: &str, pat: &str| -> Result<regex::Regex> {
+            regex::Regex::new(pat).map_err(|e| {
+                Error::Wdl(format!(
+                    "task '{task}': capture '{name}': bad pattern \
+                     '{pat}': {e}"
+                ))
+            })
+        };
+        let mut metrics = Vec::with_capacity(specs.len());
+        for (i, s) in specs.iter().enumerate() {
+            if specs[..i].iter().any(|p| p.name == s.name) {
+                return Err(Error::Wdl(format!(
+                    "task '{task}': capture metric '{}' declared twice",
+                    s.name
+                )));
+            }
+            let source = match &s.source {
+                SourceSpec::Stdout { pattern } => {
+                    CompiledSource::Stdout(compile_re(&s.name, pattern)?)
+                }
+                SourceSpec::File { name_pattern, pattern } => {
+                    CompiledSource::File {
+                        name: compile_re(&s.name, name_pattern)?,
+                        content: pattern
+                            .as_deref()
+                            .map(|p| compile_re(&s.name, p))
+                            .transpose()?,
+                    }
+                }
+            };
+            metrics.push(CompiledCapture { name: s.name.clone(), source });
+        }
+        Ok(CaptureSet { metrics })
+    }
+
+    /// Declared metric names, declaration order.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.metrics.iter().map(|m| m.name.as_str())
+    }
+
+    /// Number of declared metrics.
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    /// True when the task declared no captures.
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Extract every declared metric from one attempt's stdout and
+    /// workdir. Extraction never fails — a source that matches nothing
+    /// yields [`MetricValue::Missing`].
+    pub fn extract(&self, stdout: &str, workdir: &Path) -> Vec<MetricValue> {
+        self.metrics
+            .iter()
+            .map(|m| match &m.source {
+                CompiledSource::Stdout(re) => extract_with(re, stdout),
+                CompiledSource::File { name, content } => {
+                    match read_matching_file(workdir, name) {
+                        Some(text) => match content {
+                            Some(re) => extract_with(re, &text),
+                            // Pattern-less `file` is a *numeric* read:
+                            // non-numeric content yields Missing rather
+                            // than embedding a whole (≤1 MiB) file as a
+                            // string cell in every row and output.
+                            None => match text.trim().parse::<f64>() {
+                                Ok(x) if x.is_finite() => MetricValue::Num(x),
+                                _ => MetricValue::Missing,
+                            },
+                        },
+                        None => MetricValue::Missing,
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// Group 1 if the pattern declares one, else the whole match. A pattern
+/// *with* groups whose group 1 did not participate in the match (e.g.
+/// the group sits in the other alternation branch) yields `Missing` —
+/// never the whole match, which would record junk as a value.
+fn extract_with(re: &regex::Regex, text: &str) -> MetricValue {
+    match re.captures(text) {
+        Some(c) => {
+            // captures_len counts the implicit group 0 (real-crate
+            // contract): > 1 means the pattern declares its own group.
+            let m = if re.captures_len() > 1 { c.get(1) } else { c.get(0) };
+            match m {
+                Some(m) => MetricValue::of_text(m.as_str()),
+                None => MetricValue::Missing,
+            }
+        }
+        None => MetricValue::Missing,
+    }
+}
+
+/// First file (sorted by name) in `workdir` whose name matches `re`,
+/// read as text; oversized or unreadable files count as no match.
+fn read_matching_file(workdir: &Path, re: &regex::Regex) -> Option<String> {
+    let entries = std::fs::read_dir(workdir).ok()?;
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().to_str().map(str::to_string))
+        .filter(|n| re.is_match(n))
+        .collect();
+    names.sort();
+    for n in names {
+        let path = workdir.join(&n);
+        if let Ok(meta) = std::fs::metadata(&path) {
+            if meta.len() > MAX_CAPTURE_FILE {
+                continue;
+            }
+        }
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            return Some(text);
+        }
+    }
+    None
+}
+
+/// Per-task column mapping of one study's capture declarations.
+struct TaskCaptures {
+    set: Arc<CaptureSet>,
+    /// Schema column of each metric in the set, parallel to set order.
+    columns: Vec<usize>,
+}
+
+/// The study-wide capture engine: the result [`Schema`] plus every
+/// task's compiled capture set, ready to turn terminal
+/// [`AttemptRecord`]s into [`Row`]s.
+pub struct CaptureEngine {
+    schema: Schema,
+    tasks: BTreeMap<String, TaskCaptures>,
+}
+
+impl CaptureEngine {
+    /// Build the engine for `spec` over `space`. `precompiled` supplies
+    /// the per-task [`CaptureSet`]s hoisted by `wdl::compile` (task id →
+    /// set); tasks absent from it compile here (the naive fallback
+    /// path).
+    pub fn new(
+        spec: &StudySpec,
+        space: &Space,
+        mut precompiled: BTreeMap<String, Arc<CaptureSet>>,
+    ) -> Result<CaptureEngine> {
+        // Metric columns: builtins, then the declared union in
+        // declaration order.
+        let mut metrics: Vec<String> =
+            BUILTIN_METRICS.iter().map(|m| m.to_string()).collect();
+        let mut sets: BTreeMap<String, Arc<CaptureSet>> = BTreeMap::new();
+        for t in &spec.tasks {
+            let set = match precompiled.remove(&t.id) {
+                Some(s) => s,
+                None => Arc::new(CaptureSet::compile(&t.id, &t.capture)?),
+            };
+            for name in set.names() {
+                if !metrics.iter().any(|m| m == name) {
+                    metrics.push(name.to_string());
+                }
+            }
+            sets.insert(t.id.clone(), set);
+        }
+        let schema = Schema {
+            params: space.params().iter().map(|p| p.name.clone()).collect(),
+            axis_of: space.param_axes(),
+            n_axes: space.n_axes(),
+            metrics,
+        };
+        let tasks = sets
+            .into_iter()
+            .map(|(id, set)| {
+                let columns = set
+                    .names()
+                    .map(|n| schema.metric_index(n).expect("declared metric in schema"))
+                    .collect();
+                (id, TaskCaptures { set, columns })
+            })
+            .collect();
+        Ok(CaptureEngine { schema, tasks })
+    }
+
+    /// The result schema this engine produces rows for.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// True when any task declares a `capture:` block (the live-capture
+    /// trigger; builtin-only studies still harvest post-hoc).
+    pub fn any_declared(&self) -> bool {
+        self.tasks.values().any(|t| !t.set.is_empty())
+    }
+
+    /// Build the result row for one *terminal* attempt: digits from the
+    /// instance index, builtins from the record, declared metrics
+    /// extracted from the record's stdout and the instance workdir.
+    pub fn row_for(
+        &self,
+        rec: &AttemptRecord,
+        digits: Vec<u32>,
+        workdir: &Path,
+    ) -> Row {
+        let mut values = vec![MetricValue::Missing; self.schema.metrics.len()];
+        // Builtins occupy the first columns in BUILTIN_METRICS order.
+        values[0] = MetricValue::Num(rec.duration);
+        values[1] = MetricValue::Num(rec.attempt as f64);
+        values[2] = MetricValue::Num(rec.exit_code as f64);
+        values[3] = MetricValue::Str(
+            rec.class.map(|c| c.label().to_string()).unwrap_or_else(|| "ok".into()),
+        );
+        if let Some(tc) = self.tasks.get(&rec.task_id) {
+            for (slot, v) in tc
+                .columns
+                .iter()
+                .zip(tc.set.extract(&rec.stdout, workdir))
+            {
+                values[*slot] = v;
+            }
+        }
+        Row { instance: rec.instance, task_id: rec.task_id.clone(), digits, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ErrorClass;
+    use crate::params::Param;
+    use crate::wdl::{parse_str, Format};
+
+    fn spec(yaml: &str) -> StudySpec {
+        StudySpec::from_doc(&parse_str(yaml, Format::Yaml).unwrap()).unwrap()
+    }
+
+    fn rec(task: &str, instance: u64, stdout: &str) -> AttemptRecord {
+        AttemptRecord {
+            key: format!("{task}#{instance}"),
+            task_id: task.into(),
+            instance,
+            attempt: 2,
+            ok: true,
+            will_retry: false,
+            exit_code: 0,
+            duration: 1.25,
+            class: None,
+            error: None,
+            worker: "w0".into(),
+            stdout: stdout.into(),
+        }
+    }
+
+    #[test]
+    fn spec_grammar_parses_and_rejects() {
+        let s = CaptureSpec::parse("t", "gf", "stdout GFLOPS=([0-9.]+)").unwrap();
+        assert_eq!(
+            s.source,
+            SourceSpec::Stdout { pattern: "GFLOPS=([0-9.]+)".into() }
+        );
+        let s = CaptureSpec::parse("t", "rt", "file out\\.txt").unwrap();
+        assert_eq!(
+            s.source,
+            SourceSpec::File { name_pattern: "out\\.txt".into(), pattern: None }
+        );
+        let s =
+            CaptureSpec::parse("t", "ck", "file out_.*\\.txt checksum ([0-9.e+-]+)")
+                .unwrap();
+        assert_eq!(
+            s.source,
+            SourceSpec::File {
+                name_pattern: "out_.*\\.txt".into(),
+                pattern: Some("checksum ([0-9.e+-]+)".into()),
+            }
+        );
+        for bad in [
+            ("bad name", "x y", "stdout a"),
+            ("builtin", "wall_time", "stdout a"),
+            ("no pattern", "m", "stdout"),
+            ("no file", "m", "file"),
+            ("unknown", "m", "grep a"),
+        ] {
+            assert!(
+                CaptureSpec::parse("t", bad.1, bad.2).is_err(),
+                "{:?}",
+                bad
+            );
+        }
+    }
+
+    #[test]
+    fn compile_rejects_bad_regex_and_duplicates() {
+        let s1 = CaptureSpec::parse("t", "m", "stdout [unclosed").unwrap();
+        assert!(CaptureSet::compile("t", &[s1]).is_err());
+        let a = CaptureSpec::parse("t", "m", "stdout a(b)").unwrap();
+        let b = CaptureSpec::parse("t", "m", "stdout c(d)").unwrap();
+        let e = CaptureSet::compile("t", &[a, b]).unwrap_err();
+        assert!(e.to_string().contains("twice"), "{e}");
+    }
+
+    #[test]
+    fn extraction_from_stdout_and_files() {
+        let dir = std::env::temp_dir().join("papas_capture/extract");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("out_16.txt"), "# header\nchecksum 3.5e2\n")
+            .unwrap();
+        std::fs::write(dir.join("plain.txt"), " 42.5 \n").unwrap();
+        let specs = [
+            CaptureSpec::parse("t", "ck", "stdout checksum=([-+0-9.eE]+)").unwrap(),
+            CaptureSpec::parse("t", "path", "stdout path=(\\w+)").unwrap(),
+            CaptureSpec::parse("t", "fck", "file out_.*\\.txt checksum ([-+0-9.eE]+)")
+                .unwrap(),
+            CaptureSpec::parse("t", "plain", "file plain\\.txt").unwrap(),
+            CaptureSpec::parse("t", "ghost", "file nothing\\.dat").unwrap(),
+            CaptureSpec::parse("t", "nomatch", "stdout zebra=(\\d+)").unwrap(),
+        ];
+        let set = CaptureSet::compile("t", &specs).unwrap();
+        let vals =
+            set.extract("matmul n=16 path=native checksum=1.25e3 end", &dir);
+        assert_eq!(vals[0], MetricValue::Num(1250.0));
+        assert_eq!(vals[1], MetricValue::Str("native".into()));
+        assert_eq!(vals[2], MetricValue::Num(350.0));
+        assert_eq!(vals[3], MetricValue::Num(42.5));
+        assert_eq!(vals[4], MetricValue::Missing);
+        assert_eq!(vals[5], MetricValue::Missing);
+    }
+
+    #[test]
+    fn engine_builds_schema_and_rows() {
+        let s = spec(
+            "a:\n  command: run ${v}\n  v: [1, 2]\n  capture:\n    m: stdout m=(\\d+)\nb:\n  command: run2\n  capture:\n    m: stdout m=(\\d+)\n    extra: stdout x=(\\d+)\n",
+        );
+        let space = Space::cartesian(vec![Param::new(
+            "a:v",
+            vec!["1".into(), "2".into()],
+        )])
+        .unwrap();
+        let eng = CaptureEngine::new(&s, &space, BTreeMap::new()).unwrap();
+        assert!(eng.any_declared());
+        // builtins first, then the declared union without duplicates
+        assert_eq!(
+            eng.schema().metrics,
+            vec!["wall_time", "attempts", "exit_code", "exit_class", "m", "extra"]
+        );
+        let dir = std::env::temp_dir().join("papas_capture/engine");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let row = eng.row_for(&rec("a", 1, "m=7 x=9"), vec![1], &dir);
+        assert_eq!(row.digits, vec![1]);
+        assert_eq!(row.values[0], MetricValue::Num(1.25)); // wall_time
+        assert_eq!(row.values[1], MetricValue::Num(2.0)); // attempts
+        assert_eq!(row.values[3], MetricValue::Str("ok".into()));
+        assert_eq!(row.values[4], MetricValue::Num(7.0)); // m
+        assert_eq!(row.values[5], MetricValue::Missing); // extra: not task a's
+        // a failed attempt carries its class
+        let mut fail = rec("b", 0, "m=1 x=2");
+        fail.ok = false;
+        fail.exit_code = 3;
+        fail.class = Some(ErrorClass::NonZero);
+        let row = eng.row_for(&fail, vec![0], &dir);
+        assert_eq!(row.values[2], MetricValue::Num(3.0));
+        assert_eq!(row.values[3], MetricValue::Str("nonzero".into()));
+        assert_eq!(row.values[5], MetricValue::Num(2.0));
+    }
+
+    #[test]
+    fn engine_without_declarations_is_builtin_only() {
+        let s = spec("t:\n  command: run\n");
+        let space = Space::cartesian(vec![]).unwrap();
+        let eng = CaptureEngine::new(&s, &space, BTreeMap::new()).unwrap();
+        assert!(!eng.any_declared());
+        assert_eq!(eng.schema().metrics.len(), BUILTIN_METRICS.len());
+    }
+}

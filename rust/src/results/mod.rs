@@ -1,0 +1,41 @@
+//! The results engine: typed metric capture, a columnar study store,
+//! and a query/report pipeline.
+//!
+//! PaPaS exists to run parameter and performance studies; this subsystem
+//! makes the *outcome* of a study a first-class, queryable dataset
+//! instead of a pile of workdirs (the layer OACIS's results database and
+//! parasweep's sweep-mapping provide in related systems):
+//!
+//! * [`capture`] — the WDL `capture:` block declares named metrics
+//!   extracted from task outputs (stdout/file regexes); built-ins
+//!   (`wall_time`, `attempts`, `exit_code`, `exit_class`) ride along
+//!   from the attempt log automatically. Specs compile once per study.
+//! * [`schema`] / [`store`] — one row per (instance × task ×
+//!   final-attempt); parameter coordinates stored as interned axis
+//!   digits (reusing `params::intern`), metrics as typed cells.
+//!   Persisted as an append-only `results.jsonl` (written live from the
+//!   scheduler's `on_attempt` hook) plus a columnar
+//!   `results_columns.json` snapshot; `papas harvest` backfills both
+//!   post-hoc from `attempts.jsonl` + the instance workdirs.
+//! * [`query`] — filter (`param==value`, metric ranges), group-by over
+//!   parameter axes, aggregations (mean/std/min/median/max), sorted
+//!   top-k; table/CSV/JSON output (`papas query`).
+//! * [`report`] — per-axis performance summaries with derived speedup
+//!   and parallel efficiency against a named baseline group, plus an
+//!   ASCII trend (`papas report`) — the paper's §6 analysis from a
+//!   finished study with no hand-written scripts.
+
+pub mod capture;
+pub mod query;
+pub mod report;
+pub mod schema;
+pub mod store;
+
+pub use capture::{CaptureEngine, CaptureSet, CaptureSpec, SourceSpec};
+pub use query::{
+    filter_rows, render_flat, render_groups, run_flat, run_grouped, Filter,
+    Format, GroupRow, Query,
+};
+pub use report::{build_report, Report, ReportRow};
+pub use schema::{MetricValue, Row, Schema, BUILTIN_METRICS};
+pub use store::{harvest, snapshot_from_log, ResultLog, ResultTable};

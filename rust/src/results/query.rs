@@ -1,0 +1,739 @@
+//! Query layer over a [`ResultTable`]: filter → group → aggregate →
+//! sort/top-k, plus table/CSV/JSON rendering for `papas query`.
+//!
+//! Filters and group-bys address **parameter axes** by (suffix-resolved)
+//! name and compare against axis *digits* — a `threads==4` filter
+//! resolves "4" to its interned digit once and then scans a `u32`
+//! column, never touching strings. Metric filters compare numerically.
+//!
+//! ```text
+//! papas query study.yaml --where 'threads==4 && wall_time<2.5' \
+//!     --by size --metric wall_time --format csv
+//! ```
+//!
+//! Aggregations reuse [`crate::util::stats::Summary`] (n, mean, sample
+//! stddev, min, median, max). The whole layer is pure in-memory — the
+//! hermetic property suite drives it against a naive full-scan
+//! reference with zero subprocesses.
+
+use super::schema::{MetricValue, Schema};
+use super::store::ResultTable;
+use crate::json::{self, Json};
+use crate::params::Space;
+use crate::util::error::{Error, Result};
+use crate::util::stats::Summary;
+use crate::util::strings::csv_field;
+
+/// Comparison operators of `--where` clauses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    /// `==`
+    Eq,
+    /// `!=`
+    Ne,
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+}
+
+impl CmpOp {
+    fn apply(self, a: f64, b: f64) -> bool {
+        match self {
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+        }
+    }
+}
+
+/// One resolved filter clause.
+#[derive(Debug, Clone)]
+pub enum Filter {
+    /// Axis digit comparison (`==`/`!=` only). `digit` is `None` when
+    /// the literal is not a value of the axis — `==` then matches
+    /// nothing and `!=` everything.
+    Param {
+        /// Axis index (into the row digit vector).
+        axis: usize,
+        /// Negated (`!=`) comparison?
+        negate: bool,
+        /// Interned digit of the compared value, if it exists.
+        digit: Option<u32>,
+    },
+    /// Numeric metric comparison; missing / non-numeric cells never
+    /// match.
+    Metric {
+        /// Metric column index.
+        metric: usize,
+        /// Comparison operator.
+        op: CmpOp,
+        /// Right-hand literal.
+        value: f64,
+    },
+}
+
+/// A parsed query: conjunction of filters, optional group-by axes,
+/// metrics to aggregate, and output shaping.
+#[derive(Debug, Clone, Default)]
+pub struct Query {
+    /// Conjunctive filter clauses.
+    pub filters: Vec<Filter>,
+    /// Group-by: (param index, axis index) pairs, in request order.
+    pub by: Vec<(usize, usize)>,
+    /// Metric columns to report (grouped mode aggregates these).
+    pub metrics: Vec<usize>,
+    /// Sort key: a metric column (rows: its value; groups: its mean).
+    pub sort: Option<usize>,
+    /// Sort descending?
+    pub desc: bool,
+    /// Keep only the first K output rows/groups after sorting.
+    pub top: Option<usize>,
+}
+
+impl Query {
+    /// Parse CLI query pieces against `schema` + `space`. `where_expr`
+    /// is a `&&`-conjunction of `name OP literal` clauses; `by` and
+    /// `metrics` are comma-separated names (empty `metrics` = every
+    /// metric column).
+    pub fn parse(
+        schema: &Schema,
+        space: &Space,
+        where_expr: &str,
+        by: &str,
+        metrics: &str,
+        sort: Option<&str>,
+        desc: bool,
+        top: Option<usize>,
+    ) -> Result<Query> {
+        let mut q = Query { desc, top, ..Query::default() };
+        // Clauses split on `&&` only — a comma may legitimately appear
+        // inside a compared parameter value.
+        for clause in
+            where_expr.split("&&").map(str::trim).filter(|c| !c.is_empty())
+        {
+            q.filters.push(parse_clause(schema, space, clause)?);
+        }
+        for name in by.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let p = schema.resolve_param(name)?;
+            q.by.push((p, schema.axis_of[p]));
+        }
+        q.metrics = match metrics.trim() {
+            "" => (0..schema.metrics.len()).collect(),
+            list => list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|name| {
+                    schema.metric_index(name).ok_or_else(|| {
+                        Error::Store(format!(
+                            "no metric named '{name}' (columns: {})",
+                            schema.metrics.join(", ")
+                        ))
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+        if let Some(name) = sort {
+            let m = schema.metric_index(name).ok_or_else(|| {
+                Error::Store(format!("--sort: no metric named '{name}'"))
+            })?;
+            q.sort = Some(m);
+            // Grouped queries sort by the metric's aggregate, which only
+            // exists if it was aggregated — requesting `--sort` implies
+            // the metric, so add it rather than silently not sorting.
+            if !q.metrics.contains(&m) {
+                q.metrics.push(m);
+            }
+        }
+        Ok(q)
+    }
+}
+
+/// Parse one `name OP literal` clause.
+fn parse_clause(schema: &Schema, space: &Space, clause: &str) -> Result<Filter> {
+    // Two-char operators first so `<=` does not parse as `<` + `=...`.
+    const OPS: &[(&str, CmpOp)] = &[
+        ("==", CmpOp::Eq),
+        ("!=", CmpOp::Ne),
+        ("<=", CmpOp::Le),
+        (">=", CmpOp::Ge),
+        ("<", CmpOp::Lt),
+        (">", CmpOp::Gt),
+    ];
+    let (name, op, lit) = OPS
+        .iter()
+        .find_map(|(sym, op)| {
+            clause
+                .split_once(sym)
+                .map(|(n, v)| {
+                    (n.trim(), *op, v.trim().trim_matches(|c| c == '\'' || c == '"'))
+                })
+        })
+        .ok_or_else(|| {
+            Error::Store(format!(
+                "bad filter clause '{clause}' (expected NAME OP VALUE with \
+                 OP one of == != < <= > >=)"
+            ))
+        })?;
+    if name.is_empty() || lit.is_empty() {
+        return Err(Error::Store(format!("bad filter clause '{clause}'")));
+    }
+    // Metric names win on collision-free exact match; otherwise try a
+    // parameter axis, then a metric.
+    if let Some(m) = schema.metric_index(name) {
+        let value: f64 = lit.parse().map_err(|_| {
+            Error::Store(format!(
+                "filter '{clause}': metric comparisons need a numeric \
+                 literal, got '{lit}'"
+            ))
+        })?;
+        return Ok(Filter::Metric { metric: m, op, value });
+    }
+    let p = schema.resolve_param(name)?;
+    let negate = match op {
+        CmpOp::Eq => false,
+        CmpOp::Ne => true,
+        _ => {
+            return Err(Error::Store(format!(
+                "filter '{clause}': parameter axes support only == and != \
+                 (values are categorical; capture a metric for ranges)"
+            )))
+        }
+    };
+    let digit = space.params()[p]
+        .values
+        .iter()
+        .position(|v| v == lit)
+        .map(|d| d as u32);
+    Ok(Filter::Param { axis: schema.axis_of[p], negate, digit })
+}
+
+/// Rows (by table index) surviving the filter conjunction.
+pub fn filter_rows(table: &ResultTable, filters: &[Filter]) -> Vec<usize> {
+    (0..table.len())
+        .filter(|&i| {
+            filters.iter().all(|f| match f {
+                Filter::Param { axis, negate, digit } => {
+                    let hit = digit.is_some_and(|d| table.digit(*axis, i) == d);
+                    hit != *negate
+                }
+                Filter::Metric { metric, op, value } => table
+                    .value(*metric, i)
+                    .as_f64()
+                    .is_some_and(|x| op.apply(x, *value)),
+            })
+        })
+        .collect()
+}
+
+/// One output group of a grouped query.
+#[derive(Debug, Clone)]
+pub struct GroupRow {
+    /// Group key: `(param name, value)` pairs in `--by` order.
+    pub key: Vec<(String, String)>,
+    /// Digits of the group key, `--by` order (report layer uses these).
+    pub key_digits: Vec<u32>,
+    /// Rows in the group.
+    pub n: usize,
+    /// Aggregates per requested metric: `(metric name, summary over the
+    /// numeric cells)`.
+    pub stats: Vec<(String, Summary)>,
+}
+
+/// Execute a grouped query: filter, bucket by the `--by` axis digits,
+/// summarize each requested metric per bucket. Buckets order by their
+/// digit tuple (= axis declaration order of values).
+pub fn run_grouped(
+    table: &ResultTable,
+    space: &Space,
+    q: &Query,
+) -> Result<Vec<GroupRow>> {
+    if q.by.is_empty() {
+        return Err(Error::Store("grouped query needs --by AXES".into()));
+    }
+    let schema = table.schema();
+    let rows = filter_rows(table, &q.filters);
+    let mut buckets: std::collections::BTreeMap<Vec<u32>, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for i in rows {
+        let key: Vec<u32> = q.by.iter().map(|&(_, a)| table.digit(a, i)).collect();
+        buckets.entry(key).or_default().push(i);
+    }
+    let mut out = Vec::with_capacity(buckets.len());
+    for (digits, members) in buckets {
+        let key = q
+            .by
+            .iter()
+            .zip(&digits)
+            .map(|(&(p, _), &d)| {
+                (
+                    schema.params[p].clone(),
+                    space.params()[p].values[d as usize].clone(),
+                )
+            })
+            .collect();
+        let stats = q
+            .metrics
+            .iter()
+            .map(|&m| {
+                let xs: Vec<f64> = members
+                    .iter()
+                    .filter_map(|&i| table.value(m, i).as_f64())
+                    .collect();
+                (schema.metrics[m].clone(), Summary::from_samples(&xs))
+            })
+            .collect();
+        out.push(GroupRow { key, key_digits: digits, n: members.len(), stats });
+    }
+    sort_and_truncate_groups(&mut out, q);
+    Ok(out)
+}
+
+/// Total order over sort keys with NaN (missing/non-numeric cells)
+/// **always last**, in both directions — reversing a whole sorted vec
+/// would promote missing rows to the front of a `--desc --top K`
+/// selection. Total (via `total_cmp`), so `sort_by` never sees an
+/// inconsistent comparator (a partial order can panic on Rust ≥ 1.81).
+fn cmp_sort_key(x: f64, y: f64, desc: bool) -> std::cmp::Ordering {
+    match (x.is_nan(), y.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => {
+            let o = x.total_cmp(&y);
+            if desc {
+                o.reverse()
+            } else {
+                o
+            }
+        }
+    }
+}
+
+fn sort_and_truncate_groups(groups: &mut Vec<GroupRow>, q: &Query) {
+    if let Some(m) = q.sort {
+        let pos = q.metrics.iter().position(|&x| x == m);
+        if let Some(pos) = pos {
+            groups.sort_by(|a, b| {
+                cmp_sort_key(a.stats[pos].1.mean, b.stats[pos].1.mean, q.desc)
+            });
+        }
+    }
+    if let Some(k) = q.top {
+        groups.truncate(k);
+    }
+}
+
+/// A decoded flat row of an ungrouped query.
+#[derive(Debug, Clone)]
+pub struct FlatRow {
+    /// Global combination index.
+    pub instance: u64,
+    /// Task id.
+    pub task_id: String,
+    /// `(param name, value)` pairs, schema order.
+    pub params: Vec<(String, String)>,
+    /// `(metric name, value)` pairs, requested order.
+    pub metrics: Vec<(String, MetricValue)>,
+}
+
+/// Execute an ungrouped query: filter, decode each surviving row's
+/// parameter values, project the requested metrics, sort/top-k.
+pub fn run_flat(table: &ResultTable, space: &Space, q: &Query) -> Vec<FlatRow> {
+    let schema = table.schema();
+    let mut idx = filter_rows(table, &q.filters);
+    if let Some(m) = q.sort {
+        // Missing/non-numeric cells sort last in either direction.
+        idx.sort_by(|&a, &b| {
+            cmp_sort_key(
+                table.value(m, a).as_f64().unwrap_or(f64::NAN),
+                table.value(m, b).as_f64().unwrap_or(f64::NAN),
+                q.desc,
+            )
+        });
+    }
+    if let Some(k) = q.top {
+        idx.truncate(k);
+    }
+    idx.into_iter()
+        .map(|i| FlatRow {
+            instance: table.instance(i),
+            task_id: table.task_id(i).to_string(),
+            params: schema
+                .params
+                .iter()
+                .enumerate()
+                .map(|(p, name)| {
+                    let d = table.digit(schema.axis_of[p], i) as usize;
+                    (name.clone(), space.params()[p].values[d].clone())
+                })
+                .collect(),
+            metrics: q
+                .metrics
+                .iter()
+                .map(|&m| (schema.metrics[m].clone(), table.value(m, i).clone()))
+                .collect(),
+        })
+        .collect()
+}
+
+/// Output format of `papas query` / `papas report`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    /// Aligned text table.
+    Table,
+    /// RFC-4180-quoted CSV.
+    Csv,
+    /// One JSON document.
+    Json,
+}
+
+impl Format {
+    /// Parse `table` | `csv` | `json`.
+    pub fn parse(s: &str) -> Result<Format> {
+        match s.to_ascii_lowercase().as_str() {
+            "table" | "" => Ok(Format::Table),
+            "csv" => Ok(Format::Csv),
+            "json" => Ok(Format::Json),
+            other => Err(Error::Store(format!(
+                "unknown format '{other}' (table|csv|json)"
+            ))),
+        }
+    }
+}
+
+/// Render a header + data cells as an aligned text table (shared with
+/// the report renderer).
+pub(crate) fn render_table(header: &[String], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.chars().count()).collect();
+    for row in rows {
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    let emit = |cells: &[String], out: &mut String| {
+        for (i, (cell, w)) in cells.iter().zip(&widths).enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(cell);
+            for _ in cell.chars().count()..*w {
+                out.push(' ');
+            }
+        }
+        while out.ends_with(' ') {
+            out.pop();
+        }
+        out.push('\n');
+    };
+    emit(header, &mut out);
+    for row in rows {
+        emit(row, &mut out);
+    }
+    out
+}
+
+fn render_csv(header: &[String], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let emit = |cells: &[String], out: &mut String| {
+        let line: Vec<String> = cells.iter().map(|c| csv_field(c)).collect();
+        out.push_str(&line.join(","));
+        out.push('\n');
+    };
+    emit(header, &mut out);
+    for row in rows {
+        emit(row, &mut out);
+    }
+    out
+}
+
+/// Short display name of a fully-scoped parameter (last segment), used
+/// for table/CSV headers.
+pub fn short_param(name: &str) -> &str {
+    name.rsplit(':').next().unwrap_or(name)
+}
+
+/// Render flat rows in the requested format.
+pub fn render_flat(rows: &[FlatRow], schema: &Schema, q: &Query, f: Format) -> String {
+    match f {
+        Format::Json => {
+            let arr = rows
+                .iter()
+                .map(|r| {
+                    let mut obj: Vec<(String, Json)> = vec![
+                        ("instance".into(), Json::from(r.instance as i64)),
+                        ("task".into(), Json::from(r.task_id.as_str())),
+                    ];
+                    for (k, v) in &r.params {
+                        obj.push((k.clone(), Json::from(v.as_str())));
+                    }
+                    for (k, v) in &r.metrics {
+                        obj.push((k.clone(), v.to_json()));
+                    }
+                    Json::obj(obj)
+                })
+                .collect();
+            json::to_string_pretty(&Json::Arr(arr))
+        }
+        Format::Table | Format::Csv => {
+            let mut header: Vec<String> = vec!["instance".into(), "task".into()];
+            header.extend(schema.params.iter().map(|p| short_param(p).to_string()));
+            header.extend(
+                q.metrics.iter().map(|&m| schema.metrics[m].clone()),
+            );
+            let data: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    let mut cells = vec![r.instance.to_string(), r.task_id.clone()];
+                    cells.extend(r.params.iter().map(|(_, v)| v.clone()));
+                    cells.extend(r.metrics.iter().map(|(_, v)| v.display()));
+                    cells
+                })
+                .collect();
+            if f == Format::Csv {
+                render_csv(&header, &data)
+            } else {
+                render_table(&header, &data)
+            }
+        }
+    }
+}
+
+/// Render grouped aggregates in the requested format. Each metric
+/// contributes `mean/std/min/p50/max` columns.
+pub fn render_groups(groups: &[GroupRow], f: Format) -> String {
+    let key_names: Vec<String> = groups
+        .first()
+        .map(|g| g.key.iter().map(|(k, _)| short_param(k).to_string()).collect())
+        .unwrap_or_default();
+    let metric_names: Vec<String> = groups
+        .first()
+        .map(|g| g.stats.iter().map(|(m, _)| m.clone()).collect())
+        .unwrap_or_default();
+    match f {
+        Format::Json => {
+            let arr = groups
+                .iter()
+                .map(|g| {
+                    let mut obj: Vec<(String, Json)> = g
+                        .key
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(v.as_str())))
+                        .collect();
+                    obj.push(("n".into(), Json::from(g.n)));
+                    for (m, s) in &g.stats {
+                        obj.push((
+                            m.clone(),
+                            Json::obj([
+                                ("n".to_string(), Json::from(s.n)),
+                                ("mean".to_string(), Json::Num(s.mean)),
+                                ("std".to_string(), Json::Num(s.std)),
+                                ("min".to_string(), Json::Num(s.min)),
+                                ("p50".to_string(), Json::Num(s.p50)),
+                                ("max".to_string(), Json::Num(s.max)),
+                            ]),
+                        ));
+                    }
+                    Json::obj(obj)
+                })
+                .collect();
+            json::to_string_pretty(&Json::Arr(arr))
+        }
+        Format::Table | Format::Csv => {
+            let mut header = key_names;
+            header.push("n".into());
+            for m in &metric_names {
+                for stat in ["mean", "std", "min", "p50", "max"] {
+                    header.push(format!("{m}.{stat}"));
+                }
+            }
+            let data: Vec<Vec<String>> = groups
+                .iter()
+                .map(|g| {
+                    let mut cells: Vec<String> =
+                        g.key.iter().map(|(_, v)| v.clone()).collect();
+                    cells.push(g.n.to_string());
+                    for (_, s) in &g.stats {
+                        for x in [s.mean, s.std, s.min, s.p50, s.max] {
+                            cells.push(crate::util::strings::fmt_number(x));
+                        }
+                    }
+                    cells
+                })
+                .collect();
+            if f == Format::Csv {
+                render_csv(&header, &data)
+            } else {
+                render_table(&header, &data)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Param;
+    use crate::results::schema::Row;
+
+    /// 2 axes (threads × size) with one metric; wall_time = digit-derived
+    /// deterministic values.
+    fn fixture() -> (ResultTable, Space) {
+        let space = Space::cartesian(vec![
+            Param::new("t:threads", vec!["1".into(), "2".into(), "4".into()]),
+            Param::new("t:size", vec!["64".into(), "128".into()]),
+        ])
+        .unwrap();
+        let schema = Schema {
+            params: vec!["t:threads".into(), "t:size".into()],
+            axis_of: space.param_axes(),
+            n_axes: space.n_axes(),
+            metrics: vec![
+                "wall_time".into(),
+                "attempts".into(),
+                "exit_code".into(),
+                "exit_class".into(),
+            ],
+        };
+        let mut table = ResultTable::new(schema);
+        for i in 0..space.len() {
+            let digits = space.digits(i).unwrap();
+            let threads: f64 = space.params()[0].values[digits[0] as usize]
+                .parse()
+                .unwrap();
+            let size: f64 =
+                space.params()[1].values[digits[1] as usize].parse().unwrap();
+            table.push(Row {
+                instance: i,
+                task_id: "t".into(),
+                digits,
+                values: vec![
+                    MetricValue::Num(size / threads),
+                    MetricValue::Num(1.0),
+                    MetricValue::Num(0.0),
+                    MetricValue::Str("ok".into()),
+                ],
+            });
+        }
+        (table, space)
+    }
+
+    fn q(
+        table: &ResultTable,
+        space: &Space,
+        w: &str,
+        by: &str,
+        m: &str,
+    ) -> Query {
+        Query::parse(table.schema(), space, w, by, m, None, false, None).unwrap()
+    }
+
+    #[test]
+    fn param_filter_matches_by_digit() {
+        let (table, space) = fixture();
+        let query = q(&table, &space, "threads==4", "", "wall_time");
+        let rows = run_flat(&table, &space, &query);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.params[0].1, "4");
+        }
+        // != inverts; unknown value matches nothing (==) / everything (!=)
+        let query = q(&table, &space, "threads!=4", "", "");
+        assert_eq!(run_flat(&table, &space, &query).len(), 4);
+        let query = q(&table, &space, "threads==99", "", "");
+        assert_eq!(run_flat(&table, &space, &query).len(), 0);
+        let query = q(&table, &space, "threads!=99", "", "");
+        assert_eq!(run_flat(&table, &space, &query).len(), 6);
+    }
+
+    #[test]
+    fn metric_range_filter() {
+        let (table, space) = fixture();
+        // wall_time = size/threads: values 64,32,16,128,64,32
+        let query = q(&table, &space, "wall_time<=32", "", "wall_time");
+        assert_eq!(run_flat(&table, &space, &query).len(), 3);
+        let query = q(&table, &space, "wall_time>32 && threads==1", "", "");
+        assert_eq!(run_flat(&table, &space, &query).len(), 2);
+    }
+
+    #[test]
+    fn grouped_aggregation_means() {
+        let (table, space) = fixture();
+        let query = q(&table, &space, "", "threads", "wall_time");
+        let groups = run_grouped(&table, &space, &query).unwrap();
+        assert_eq!(groups.len(), 3);
+        // threads=1: sizes 64+128 → mean 96
+        assert_eq!(groups[0].key[0].1, "1");
+        assert_eq!(groups[0].n, 2);
+        assert!((groups[0].stats[0].1.mean - 96.0).abs() < 1e-12);
+        assert_eq!(groups[2].key[0].1, "4");
+        assert!((groups[2].stats[0].1.mean - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sort_and_top_k() {
+        let (table, space) = fixture();
+        let mut query = q(&table, &space, "", "", "wall_time");
+        query.sort = table.schema().metric_index("wall_time");
+        query.desc = true;
+        query.top = Some(2);
+        let rows = run_flat(&table, &space, &query);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].metrics[0].1, MetricValue::Num(128.0));
+        assert_eq!(rows[1].metrics[0].1, MetricValue::Num(64.0));
+    }
+
+    #[test]
+    fn bad_clauses_rejected() {
+        let (table, space) = fixture();
+        let s = table.schema();
+        for bad in [
+            "threads=4",      // no operator
+            "threads<4",      // range over categorical axis
+            "ghost==1",       // unknown name
+            "wall_time==x",   // non-numeric metric literal
+        ] {
+            assert!(
+                Query::parse(s, &space, bad, "", "", None, false, None).is_err(),
+                "{bad}"
+            );
+        }
+        assert!(Query::parse(s, &space, "", "ghost", "", None, false, None).is_err());
+        assert!(
+            Query::parse(s, &space, "", "", "nope", None, false, None).is_err()
+        );
+        assert!(Format::parse("yaml").is_err());
+    }
+
+    #[test]
+    fn rendering_table_csv_json() {
+        let (table, space) = fixture();
+        let query = q(&table, &space, "threads==4", "", "wall_time");
+        let rows = run_flat(&table, &space, &query);
+        let t = render_flat(&rows, table.schema(), &query, Format::Table);
+        assert!(t.lines().next().unwrap().contains("threads"), "{t}");
+        assert_eq!(t.lines().count(), 3);
+        let c = render_flat(&rows, table.schema(), &query, Format::Csv);
+        assert!(c.starts_with("instance,task,threads,size,wall_time\n"), "{c}");
+        let j = render_flat(&rows, table.schema(), &query, Format::Json);
+        let parsed = json::parse(&j).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+
+        let gq = q(&table, &space, "", "threads", "wall_time");
+        let groups = run_grouped(&table, &space, &gq).unwrap();
+        let g = render_groups(&groups, Format::Csv);
+        assert!(g.starts_with("threads,n,wall_time.mean"), "{g}");
+        assert_eq!(g.lines().count(), 4);
+        let gj = render_groups(&groups, Format::Json);
+        assert!(json::parse(&gj).is_ok());
+    }
+}

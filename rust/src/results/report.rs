@@ -1,0 +1,412 @@
+//! Performance-study reports: per-axis aggregation of a metric with
+//! derived speedup / parallel-efficiency columns — the paper's §6
+//! analysis (runtime vs. thread count and block size for the OpenMP
+//! matmul) produced directly from captured results, no hand-written
+//! scripts.
+//!
+//! ```text
+//! papas report study.yaml --metric wall_time --by threads --baseline threads=1
+//!
+//! threads  n  wall_time.mean  wall_time.std  speedup  efficiency
+//! 1        2  0.820000        0.010000       1.000    1.000
+//! 2        2  0.440000        0.020000       1.864    0.932
+//! 4        2  0.260000        0.008000       3.154    0.788
+//! ```
+//!
+//! * **speedup** of group g = baseline mean ÷ g's mean (for time-like
+//!   metrics; >1 is faster than baseline);
+//! * **efficiency** = speedup ÷ resource ratio, where the resource ratio
+//!   is the numeric `--by` value of g over the baseline's (thread-count
+//!   semantics). When the axis values are not numeric the column is
+//!   omitted.
+//!
+//! The report ends with an ASCII trend of the group means
+//! ([`crate::viz::render_bars`]), so a terminal-only session still
+//! *sees* the scaling curve.
+
+use super::query::{run_grouped, GroupRow, Query};
+use super::schema::Schema;
+use super::store::ResultTable;
+use crate::json::Json;
+use crate::params::Space;
+use crate::util::error::{Error, Result};
+use crate::util::strings::fmt_number;
+use crate::viz::render_bars;
+
+/// One line of a performance report.
+#[derive(Debug, Clone)]
+pub struct ReportRow {
+    /// The `--by` axis value of this group.
+    pub key: String,
+    /// Rows aggregated.
+    pub n: usize,
+    /// Mean of the reported metric.
+    pub mean: f64,
+    /// Sample standard deviation.
+    pub std: f64,
+    /// Baseline mean ÷ this mean (`None` when no baseline applies).
+    pub speedup: Option<f64>,
+    /// Speedup ÷ resource ratio (`None` when the axis is non-numeric or
+    /// no baseline applies).
+    pub efficiency: Option<f64>,
+}
+
+/// A computed performance report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Short name of the grouped axis.
+    pub axis: String,
+    /// Reported metric name.
+    pub metric: String,
+    /// Baseline group key, when one was requested and found.
+    pub baseline: Option<String>,
+    /// One row per axis value, axis declaration order.
+    pub rows: Vec<ReportRow>,
+}
+
+/// Build the report: group the (filtered) table by one axis, aggregate
+/// one metric, derive speedup/efficiency against `baseline`
+/// (`value-of-the-by-axis`, e.g. `--baseline threads=1`).
+pub fn build_report(
+    table: &ResultTable,
+    space: &Space,
+    schema: &Schema,
+    metric: &str,
+    by: &str,
+    baseline: Option<&str>,
+    where_expr: &str,
+) -> Result<Report> {
+    // Resolve the metric first for a pointed error message (Query::parse
+    // would also catch it, less specifically).
+    schema.metric_index(metric).ok_or_else(|| {
+        Error::Store(format!(
+            "no metric named '{metric}' (columns: {})",
+            schema.metrics.join(", ")
+        ))
+    })?;
+    let q = Query::parse(schema, space, where_expr, by, metric, None, false, None)?;
+    // The report keys its rows — and resolves the baseline — by exactly
+    // one axis; a silent multi-axis group-by would label rows by the
+    // first axis only and compare unrelated groups to the baseline.
+    if q.by.len() != 1 {
+        return Err(Error::Store(format!(
+            "report needs exactly one --by axis, got '{by}' (slice other \
+             axes with --where, e.g. --where 'size==128')"
+        )));
+    }
+    let groups = run_grouped(table, space, &q)?;
+    if groups.is_empty() {
+        return Err(Error::Store(
+            "report matched no result rows (check --where / harvest)".into(),
+        ));
+    }
+
+    // Resolve the baseline group by its axis value.
+    let base_value = match baseline {
+        None => None,
+        Some(expr) => {
+            let (name, value) = expr.split_once('=').ok_or_else(|| {
+                Error::Store(format!(
+                    "--baseline must be AXIS=VALUE, got '{expr}'"
+                ))
+            })?;
+            let p = schema.resolve_param(name.trim())?;
+            if q.by.first().map(|&(bp, _)| bp) != Some(p) {
+                return Err(Error::Store(format!(
+                    "--baseline axis '{}' must match --by '{by}'",
+                    name.trim()
+                )));
+            }
+            Some(value.trim().to_string())
+        }
+    };
+    let base: Option<&GroupRow> = match &base_value {
+        None => None,
+        Some(v) => Some(
+            groups.iter().find(|g| &g.key[0].1 == v).ok_or_else(|| {
+                Error::Store(format!(
+                    "baseline {by}={v} matched no group (values: {})",
+                    groups
+                        .iter()
+                        .map(|g| g.key[0].1.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })?,
+        ),
+    };
+    let base_mean = base.map(|g| g.stats[0].1.mean);
+    let base_num: Option<f64> = base.and_then(|g| g.key[0].1.parse().ok());
+
+    let rows = groups
+        .iter()
+        .map(|g| {
+            let mean = g.stats[0].1.mean;
+            let speedup = base_mean
+                .filter(|&bm| bm.is_finite() && mean > 0.0 && g.n > 0)
+                .map(|bm| bm / mean);
+            let efficiency = match (speedup, base_num, g.key[0].1.parse::<f64>()) {
+                (Some(s), Some(b), Ok(v)) if b > 0.0 && v > 0.0 => {
+                    Some(s / (v / b))
+                }
+                _ => None,
+            };
+            ReportRow {
+                key: g.key[0].1.clone(),
+                n: g.n,
+                mean,
+                std: g.stats[0].1.std,
+                speedup,
+                efficiency,
+            }
+        })
+        .collect();
+    Ok(Report {
+        axis: super::query::short_param(&schema.params[q.by[0].0]).to_string(),
+        metric: metric.to_string(),
+        baseline: base.map(|g| format!("{by}={}", g.key[0].1)),
+        rows,
+    })
+}
+
+impl Report {
+    /// Render as an aligned text table plus the ASCII trend of the
+    /// means.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "# {} by {}{}\n",
+            self.metric,
+            self.axis,
+            self.baseline
+                .as_deref()
+                .map(|b| format!(" (baseline {b})"))
+                .unwrap_or_default()
+        ));
+        let has_speedup = self.rows.iter().any(|r| r.speedup.is_some());
+        let has_eff = self.rows.iter().any(|r| r.efficiency.is_some());
+        let mut header = vec![
+            self.axis.clone(),
+            "n".to_string(),
+            format!("{}.mean", self.metric),
+            format!("{}.std", self.metric),
+        ];
+        if has_speedup {
+            header.push("speedup".into());
+        }
+        if has_eff {
+            header.push("efficiency".into());
+        }
+        let fmt3 = |x: Option<f64>| {
+            x.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into())
+        };
+        let data: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut cells = vec![
+                    r.key.clone(),
+                    r.n.to_string(),
+                    fmt_number(r.mean),
+                    fmt_number(r.std),
+                ];
+                if has_speedup {
+                    cells.push(fmt3(r.speedup));
+                }
+                if has_eff {
+                    cells.push(fmt3(r.efficiency));
+                }
+                cells
+            })
+            .collect();
+        out.push_str(&super::query::render_table(&header, &data));
+        // Trend of the means: one bar per axis value.
+        let bars: Vec<(String, f64)> = self
+            .rows
+            .iter()
+            .map(|r| (r.key.clone(), r.mean))
+            .collect();
+        out.push('\n');
+        out.push_str(&render_bars(&bars, 40));
+        out
+    }
+
+    /// Render as a JSON document (CI / dashboards).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("axis".to_string(), Json::from(self.axis.as_str())),
+            ("metric".to_string(), Json::from(self.metric.as_str())),
+            (
+                "baseline".to_string(),
+                self.baseline
+                    .as_deref()
+                    .map(Json::from)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "rows".to_string(),
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj([
+                                ("key".to_string(), Json::from(r.key.as_str())),
+                                ("n".to_string(), Json::from(r.n)),
+                                ("mean".to_string(), Json::Num(r.mean)),
+                                ("std".to_string(), Json::Num(r.std)),
+                                (
+                                    "speedup".to_string(),
+                                    r.speedup.map(Json::Num).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "efficiency".to_string(),
+                                    r.efficiency
+                                        .map(Json::Num)
+                                        .unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Param;
+    use crate::results::schema::{MetricValue, Row};
+
+    /// threads ∈ {1,2,4} × reps ∈ {a,b}; wall_time = 8/threads exactly
+    /// (ideal scaling) so speedup == threads and efficiency == 1.
+    fn fixture() -> (ResultTable, Space, Schema) {
+        let space = Space::cartesian(vec![
+            Param::new("t:threads", vec!["1".into(), "2".into(), "4".into()]),
+            Param::new("t:rep", vec!["a".into(), "b".into()]),
+        ])
+        .unwrap();
+        let schema = Schema {
+            params: vec!["t:threads".into(), "t:rep".into()],
+            axis_of: space.param_axes(),
+            n_axes: space.n_axes(),
+            metrics: vec![
+                "wall_time".into(),
+                "attempts".into(),
+                "exit_code".into(),
+                "exit_class".into(),
+            ],
+        };
+        let mut table = ResultTable::new(schema.clone());
+        for i in 0..space.len() {
+            let digits = space.digits(i).unwrap();
+            let threads: f64 = space.params()[0].values[digits[0] as usize]
+                .parse()
+                .unwrap();
+            table.push(Row {
+                instance: i,
+                task_id: "t".into(),
+                digits,
+                values: vec![
+                    MetricValue::Num(8.0 / threads),
+                    MetricValue::Num(1.0),
+                    MetricValue::Num(0.0),
+                    MetricValue::Str("ok".into()),
+                ],
+            });
+        }
+        (table, space, schema)
+    }
+
+    #[test]
+    fn ideal_scaling_reports_unit_efficiency() {
+        let (table, space, schema) = fixture();
+        let rep = build_report(
+            &table,
+            &space,
+            &schema,
+            "wall_time",
+            "threads",
+            Some("threads=1"),
+            "",
+        )
+        .unwrap();
+        assert_eq!(rep.rows.len(), 3);
+        assert_eq!(rep.baseline.as_deref(), Some("threads=1"));
+        for (row, threads) in rep.rows.iter().zip([1.0, 2.0, 4.0]) {
+            assert_eq!(row.n, 2);
+            assert!((row.mean - 8.0 / threads).abs() < 1e-12);
+            assert!((row.speedup.unwrap() - threads).abs() < 1e-12, "{row:?}");
+            assert!((row.efficiency.unwrap() - 1.0).abs() < 1e-12, "{row:?}");
+        }
+        let text = rep.render_text();
+        assert!(text.contains("speedup"), "{text}");
+        assert!(text.contains("efficiency"), "{text}");
+        // the ASCII trend renders one bar per thread count
+        assert!(text.contains('█'), "{text}");
+        let j = crate::json::to_string(&rep.to_json());
+        assert!(j.contains("\"speedup\""), "{j}");
+    }
+
+    #[test]
+    fn no_baseline_means_no_derived_columns() {
+        let (table, space, schema) = fixture();
+        let rep = build_report(
+            &table, &space, &schema, "wall_time", "threads", None, "",
+        )
+        .unwrap();
+        assert!(rep.rows.iter().all(|r| r.speedup.is_none()));
+        let text = rep.render_text();
+        assert!(!text.contains("speedup"), "{text}");
+    }
+
+    #[test]
+    fn non_numeric_axis_omits_efficiency() {
+        let (table, space, schema) = fixture();
+        let rep = build_report(
+            &table,
+            &space,
+            &schema,
+            "wall_time",
+            "rep",
+            Some("rep=a"),
+            "",
+        )
+        .unwrap();
+        assert_eq!(rep.rows.len(), 2);
+        assert!(rep.rows.iter().all(|r| r.speedup.is_some()));
+        assert!(rep.rows.iter().all(|r| r.efficiency.is_none()));
+    }
+
+    #[test]
+    fn baseline_errors_are_actionable() {
+        let (table, space, schema) = fixture();
+        let e = build_report(
+            &table,
+            &space,
+            &schema,
+            "wall_time",
+            "threads",
+            Some("threads=99"),
+            "",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("matched no group"), "{e}");
+        let e = build_report(
+            &table,
+            &space,
+            &schema,
+            "wall_time",
+            "threads",
+            Some("rep=a"),
+            "",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("must match --by"), "{e}");
+        assert!(build_report(
+            &table, &space, &schema, "ghost", "threads", None, ""
+        )
+        .is_err());
+    }
+}

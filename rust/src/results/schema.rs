@@ -1,0 +1,380 @@
+//! The typed shape of a study's result set.
+//!
+//! A result set is a table with one row per (instance × task ×
+//! final-attempt). Its columns split into two families:
+//!
+//! * **parameter axes** — the combination coordinates, stored as interned
+//!   per-axis *digits* (`u32` indices into the study's value tables, see
+//!   `params::intern`), never as strings: a 1M-instance study stores
+//!   1M × n_axes small integers, and every row decodes back to its
+//!   `name → value` pairs through the shared [`crate::params::ValueTable`];
+//! * **metrics** — the built-in engine measurements ([`BUILTIN_METRICS`]:
+//!   `wall_time`, `attempts`, `exit_code`, `exit_class`), always present,
+//!   followed by the study's declared `capture:` metrics in declaration
+//!   order (union across tasks; a task that does not declare a metric
+//!   leaves it [`MetricValue::Missing`]).
+
+use crate::json::Json;
+use crate::util::error::{Error, Result};
+
+/// Metric columns every result row carries, in schema order, regardless
+/// of any `capture:` declaration. Sourced from the attempt log /
+/// `TaskResult`, not from task output.
+pub const BUILTIN_METRICS: &[&str] =
+    &["wall_time", "attempts", "exit_code", "exit_class"];
+
+/// True when `name` is one of the built-in metric columns (declared
+/// `capture:` metrics may not shadow these).
+pub fn is_builtin_metric(name: &str) -> bool {
+    BUILTIN_METRICS.contains(&name)
+}
+
+/// One captured cell: numeric where possible (aggregations apply),
+/// string otherwise (`exit_class`, non-numeric captures), missing when
+/// the source had nothing to extract.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    /// A numeric measurement.
+    Num(f64),
+    /// A non-numeric capture.
+    Str(String),
+    /// The metric was not captured for this row.
+    Missing,
+}
+
+impl MetricValue {
+    /// Parse captured text: numeric when it parses as a finite f64,
+    /// string otherwise.
+    pub fn of_text(s: &str) -> MetricValue {
+        let t = s.trim();
+        if t.is_empty() {
+            return MetricValue::Missing;
+        }
+        match t.parse::<f64>() {
+            Ok(x) if x.is_finite() => MetricValue::Num(x),
+            _ => MetricValue::Str(t.to_string()),
+        }
+    }
+
+    /// Numeric view (aggregations skip the rest).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            MetricValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Display form: numbers via the deterministic JSON formatter,
+    /// strings verbatim, missing as an empty cell.
+    pub fn display(&self) -> String {
+        match self {
+            MetricValue::Num(x) => crate::util::strings::fmt_number(*x),
+            MetricValue::Str(s) => s.clone(),
+            MetricValue::Missing => String::new(),
+        }
+    }
+
+    /// JSON form (`null` = missing).
+    pub fn to_json(&self) -> Json {
+        match self {
+            MetricValue::Num(x) => Json::Num(*x),
+            MetricValue::Str(s) => Json::Str(s.clone()),
+            MetricValue::Missing => Json::Null,
+        }
+    }
+
+    /// Parse back from the JSON form.
+    pub fn from_json(j: &Json) -> MetricValue {
+        match j {
+            Json::Num(x) => MetricValue::Num(*x),
+            Json::Str(s) => MetricValue::Str(s.clone()),
+            _ => MetricValue::Missing,
+        }
+    }
+}
+
+/// Column layout of one study's result set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schema {
+    /// Fully-scoped parameter names, `Space::params()` order.
+    pub params: Vec<String>,
+    /// Axis of each parameter (zipped parameters share one), parallel to
+    /// `params`.
+    pub axis_of: Vec<usize>,
+    /// Digit-vector length of every row (= `Space::n_axes()`).
+    pub n_axes: usize,
+    /// Metric column names: [`BUILTIN_METRICS`] first, then declared
+    /// `capture:` metrics in declaration order (union across tasks).
+    pub metrics: Vec<String>,
+}
+
+impl Schema {
+    /// Index of a metric column by exact name.
+    pub fn metric_index(&self, name: &str) -> Option<usize> {
+        self.metrics.iter().position(|m| m == name)
+    }
+
+    /// Resolve a user-facing parameter name: exact fully-scoped match,
+    /// else a unique `...:name` suffix match (so `threads` finds
+    /// `matmulPerf:threads`). Ambiguity is an error listing candidates.
+    pub fn resolve_param(&self, name: &str) -> Result<usize> {
+        if let Some(i) = self.params.iter().position(|p| p == name) {
+            return Ok(i);
+        }
+        let suffix = format!(":{name}");
+        let hits: Vec<usize> = self
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.ends_with(&suffix))
+            .map(|(i, _)| i)
+            .collect();
+        match hits.as_slice() {
+            [i] => Ok(*i),
+            [] => Err(Error::Store(format!(
+                "no parameter named '{name}' in the result schema \
+                 (axes: {})",
+                self.params.join(", ")
+            ))),
+            many => Err(Error::Store(format!(
+                "parameter '{name}' is ambiguous: {}",
+                many.iter()
+                    .map(|&i| self.params[i].as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))),
+        }
+    }
+
+    /// Serialize (columnar-snapshot header).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            (
+                "params".to_string(),
+                Json::Arr(self.params.iter().map(|p| Json::from(p.as_str())).collect()),
+            ),
+            (
+                "axis_of".to_string(),
+                Json::Arr(self.axis_of.iter().map(|&a| Json::from(a)).collect()),
+            ),
+            ("n_axes".to_string(), Json::from(self.n_axes)),
+            (
+                "metrics".to_string(),
+                Json::Arr(self.metrics.iter().map(|m| Json::from(m.as_str())).collect()),
+            ),
+        ])
+    }
+
+    /// Deserialize (columnar-snapshot header).
+    pub fn from_json(j: &Json) -> Result<Schema> {
+        let strings = |key: &str| -> Result<Vec<String>> {
+            j.expect(key)?
+                .as_arr()
+                .ok_or_else(|| Error::Store(format!("schema field '{key}' is not an array")))?
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        Error::Store(format!("schema field '{key}' holds a non-string"))
+                    })
+                })
+                .collect()
+        };
+        let axis_of = j
+            .expect("axis_of")?
+            .as_arr()
+            .ok_or_else(|| Error::Store("schema field 'axis_of' is not an array".into()))?
+            .iter()
+            .map(|v| {
+                v.as_i64().map(|x| x as usize).ok_or_else(|| {
+                    Error::Store("schema field 'axis_of' holds a non-integer".into())
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(Schema {
+            params: strings("params")?,
+            axis_of,
+            n_axes: j.expect_i64("n_axes")? as usize,
+            metrics: strings("metrics")?,
+        })
+    }
+}
+
+/// One result row: the final attempt of one task under one combination.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    /// Global combination index of the instance.
+    pub instance: u64,
+    /// Task id within the study.
+    pub task_id: String,
+    /// Per-axis interned value digits (length = `Schema::n_axes`).
+    pub digits: Vec<u32>,
+    /// Metric cells, parallel to `Schema::metrics`.
+    pub values: Vec<MetricValue>,
+}
+
+impl Row {
+    /// The row's `task_id#instance` key (matches checkpoint / attempt
+    /// keys).
+    pub fn key(&self) -> String {
+        format!("{}#{}", self.task_id, self.instance)
+    }
+
+    /// Serialize as one `results.jsonl` line. Metrics are written as a
+    /// name-keyed object so the log stays self-describing if the schema
+    /// evolves between runs.
+    pub fn to_json(&self, schema: &Schema) -> Json {
+        Json::obj([
+            ("instance".to_string(), Json::from(self.instance as i64)),
+            ("task".to_string(), Json::from(self.task_id.as_str())),
+            (
+                "digits".to_string(),
+                Json::Arr(self.digits.iter().map(|&d| Json::from(d as i64)).collect()),
+            ),
+            (
+                "metrics".to_string(),
+                Json::Obj(
+                    schema
+                        .metrics
+                        .iter()
+                        .zip(&self.values)
+                        .filter(|(_, v)| **v != MetricValue::Missing)
+                        .map(|(m, v)| (m.clone(), v.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse one `results.jsonl` line against `schema`. Metrics absent
+    /// from the line (or unknown to the schema) read as missing.
+    pub fn from_json(j: &Json, schema: &Schema) -> Result<Row> {
+        let digits = j
+            .expect("digits")?
+            .as_arr()
+            .ok_or_else(|| Error::Store("row field 'digits' is not an array".into()))?
+            .iter()
+            .map(|v| {
+                v.as_i64().map(|x| x as u32).ok_or_else(|| {
+                    Error::Store("row field 'digits' holds a non-integer".into())
+                })
+            })
+            .collect::<Result<Vec<u32>>>()?;
+        if digits.len() != schema.n_axes {
+            return Err(Error::Store(format!(
+                "result row has {} digits, schema expects {} axes \
+                 (stale results.jsonl? re-run `papas harvest`)",
+                digits.len(),
+                schema.n_axes
+            )));
+        }
+        let metrics = j.expect("metrics")?;
+        let values = schema
+            .metrics
+            .iter()
+            .map(|m| {
+                metrics
+                    .get(m)
+                    .map(MetricValue::from_json)
+                    .unwrap_or(MetricValue::Missing)
+            })
+            .collect();
+        Ok(Row {
+            instance: j.expect_i64("instance")? as u64,
+            task_id: j.expect_str("task")?.to_string(),
+            digits,
+            values,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema {
+            params: vec!["t:threads".into(), "t:size".into()],
+            axis_of: vec![0, 1],
+            n_axes: 2,
+            metrics: vec![
+                "wall_time".into(),
+                "attempts".into(),
+                "exit_code".into(),
+                "exit_class".into(),
+                "gflops".into(),
+            ],
+        }
+    }
+
+    #[test]
+    fn metric_value_typing() {
+        assert_eq!(MetricValue::of_text(" 2.5 "), MetricValue::Num(2.5));
+        assert_eq!(MetricValue::of_text("1e3"), MetricValue::Num(1000.0));
+        assert_eq!(
+            MetricValue::of_text("native"),
+            MetricValue::Str("native".into())
+        );
+        assert_eq!(MetricValue::of_text("  "), MetricValue::Missing);
+        assert_eq!(MetricValue::Num(3.0).as_f64(), Some(3.0));
+        assert_eq!(MetricValue::Str("x".into()).as_f64(), None);
+        assert_eq!(MetricValue::Missing.display(), "");
+    }
+
+    #[test]
+    fn param_resolution_exact_suffix_ambiguous() {
+        let s = schema();
+        assert_eq!(s.resolve_param("t:threads").unwrap(), 0);
+        assert_eq!(s.resolve_param("threads").unwrap(), 0);
+        assert_eq!(s.resolve_param("size").unwrap(), 1);
+        assert!(s.resolve_param("ghost").is_err());
+        let mut amb = schema();
+        amb.params = vec!["a:threads".into(), "b:threads".into()];
+        let e = amb.resolve_param("threads").unwrap_err();
+        assert!(e.to_string().contains("ambiguous"), "{e}");
+    }
+
+    #[test]
+    fn row_round_trips_and_skips_missing() {
+        let s = schema();
+        let row = Row {
+            instance: 7,
+            task_id: "t".into(),
+            digits: vec![2, 0],
+            values: vec![
+                MetricValue::Num(1.5),
+                MetricValue::Num(1.0),
+                MetricValue::Num(0.0),
+                MetricValue::Str("ok".into()),
+                MetricValue::Missing,
+            ],
+        };
+        assert_eq!(row.key(), "t#7");
+        let j = row.to_json(&s);
+        // missing metrics are not serialized
+        assert!(j.get("metrics").unwrap().get("gflops").is_none());
+        let back = Row::from_json(&j, &s).unwrap();
+        assert_eq!(back, row);
+    }
+
+    #[test]
+    fn schema_round_trips() {
+        let s = schema();
+        let back = Schema::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn digit_arity_mismatch_rejected() {
+        let s = schema();
+        let mut row = Row {
+            instance: 0,
+            task_id: "t".into(),
+            digits: vec![1],
+            values: vec![MetricValue::Missing; 5],
+        };
+        let j = row.to_json(&s);
+        assert!(Row::from_json(&j, &s).is_err());
+        row.digits = vec![0, 0];
+        assert!(Row::from_json(&row.to_json(&s), &s).is_ok());
+    }
+}

@@ -1,0 +1,617 @@
+//! The study result store: an append-only row log plus a columnar
+//! snapshot, both under the study's file database.
+//!
+//! * `results.jsonl` — one [`Row`] per line, appended **live** from the
+//!   scheduler's `on_attempt` hook as terminal attempts land (crash
+//!   tolerant, like `attempts.jsonl`), or rewritten wholesale by
+//!   `papas harvest`;
+//! * `results_columns.json` — the columnar snapshot: the schema header
+//!   plus one array per axis and per metric. Loads without re-parsing
+//!   N_rows little objects and is the query layer's preferred source.
+//!
+//! Rows are keyed by `task_id#instance`; a resumed run that re-executes
+//! a previously failed task appends a second row for the same key, and
+//! table construction keeps the **last** row per key — the final
+//! attempt wins, matching checkpoint semantics.
+//!
+//! [`harvest`] backfills the whole store post-hoc from `attempts.jsonl`
+//! (which carries each attempt's captured stdout) plus the instance
+//! workdirs — so a study executed before its `capture:` block was
+//! written, or on a host that crashed mid-run, still yields a complete
+//! result set.
+
+use super::schema::{MetricValue, Row, Schema};
+use crate::json::{self, Json};
+use crate::study::Study;
+use crate::util::error::{Error, Result};
+use crate::workflow::Provenance;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Row-log file name under the study database.
+pub const RESULTS_FILE: &str = "results.jsonl";
+/// Columnar-snapshot file name under the study database.
+pub const COLUMNS_FILE: &str = "results_columns.json";
+
+/// Append-only writer for `results.jsonl` (interior mutability — the
+/// scheduler hook takes `&self`, mirroring [`crate::workflow::AttemptLog`]).
+pub struct ResultLog {
+    file: Mutex<std::fs::File>,
+}
+
+impl ResultLog {
+    /// Open (creating) the row log under `dir` in append mode. A crash
+    /// mid-write can leave the file without a trailing newline; the new
+    /// rows must not concatenate onto that torn line, so it is
+    /// terminated first (the torn fragment itself is skipped on read).
+    pub fn open(dir: impl AsRef<Path>) -> Result<ResultLog> {
+        use std::io::{Read, Seek, SeekFrom};
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .append(true)
+            .open(dir.join(RESULTS_FILE))?;
+        let len = file.metadata()?.len();
+        if len > 0 {
+            file.seek(SeekFrom::End(-1))?;
+            let mut last = [0u8; 1];
+            file.read_exact(&mut last)?;
+            if last[0] != b'\n' {
+                writeln!(file)?;
+            }
+        }
+        Ok(ResultLog { file: Mutex::new(file) })
+    }
+
+    /// Append one row (one line).
+    pub fn append(&self, row: &Row, schema: &Schema) -> Result<()> {
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{}", json::to_string(&row.to_json(schema)))?;
+        Ok(())
+    }
+}
+
+/// A study's result set in columnar form: per-axis digit columns and
+/// per-metric value columns, one position per row.
+#[derive(Debug)]
+pub struct ResultTable {
+    schema: Schema,
+    /// Global combination index per row.
+    instances: Vec<u64>,
+    /// Interned task ids.
+    task_names: Vec<String>,
+    /// Index into `task_names` per row.
+    task_idx: Vec<u32>,
+    /// Digit columns: `axes[a][row]`, `schema.n_axes` columns.
+    axes: Vec<Vec<u32>>,
+    /// Metric columns, parallel to `schema.metrics`.
+    metrics: Vec<Vec<MetricValue>>,
+}
+
+impl ResultTable {
+    /// Empty table over `schema`.
+    pub fn new(schema: Schema) -> ResultTable {
+        let n_axes = schema.n_axes;
+        let n_metrics = schema.metrics.len();
+        ResultTable {
+            schema,
+            instances: Vec::new(),
+            task_names: Vec::new(),
+            task_idx: Vec::new(),
+            axes: vec![Vec::new(); n_axes],
+            metrics: vec![Vec::new(); n_metrics],
+        }
+    }
+
+    /// The table's schema.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// True when no rows landed.
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// Append one row (digit arity must match the schema).
+    pub fn push(&mut self, row: Row) {
+        debug_assert_eq!(row.digits.len(), self.schema.n_axes);
+        debug_assert_eq!(row.values.len(), self.schema.metrics.len());
+        self.instances.push(row.instance);
+        let t = match self.task_names.iter().position(|t| *t == row.task_id) {
+            Some(i) => i as u32,
+            None => {
+                self.task_names.push(row.task_id);
+                (self.task_names.len() - 1) as u32
+            }
+        };
+        self.task_idx.push(t);
+        for (col, d) in self.axes.iter_mut().zip(&row.digits) {
+            col.push(*d);
+        }
+        for (col, v) in self.metrics.iter_mut().zip(row.values) {
+            col.push(v);
+        }
+    }
+
+    /// Global combination index of row `i`.
+    pub fn instance(&self, i: usize) -> u64 {
+        self.instances[i]
+    }
+
+    /// Task id of row `i`.
+    pub fn task_id(&self, i: usize) -> &str {
+        &self.task_names[self.task_idx[i] as usize]
+    }
+
+    /// Digit of axis `a` at row `i`.
+    pub fn digit(&self, a: usize, i: usize) -> u32 {
+        self.axes[a][i]
+    }
+
+    /// Metric column `m` at row `i`.
+    pub fn value(&self, m: usize, i: usize) -> &MetricValue {
+        &self.metrics[m][i]
+    }
+
+    /// Reassemble row `i` (display, tests — the query path stays
+    /// columnar).
+    pub fn row(&self, i: usize) -> Row {
+        Row {
+            instance: self.instances[i],
+            task_id: self.task_id(i).to_string(),
+            digits: self.axes.iter().map(|c| c[i]).collect(),
+            values: self.metrics.iter().map(|c| c[i].clone()).collect(),
+        }
+    }
+
+    /// Build from rows, keeping the **last** row per `task_id#instance`
+    /// key (final attempt wins on resume) and ordering rows by
+    /// (instance, task id).
+    pub fn from_rows(schema: Schema, rows: Vec<Row>) -> ResultTable {
+        let mut last: BTreeMap<(u64, String), Row> = BTreeMap::new();
+        for row in rows {
+            last.insert((row.instance, row.task_id.clone()), row);
+        }
+        let mut table = ResultTable::new(schema);
+        for (_, row) in last {
+            table.push(row);
+        }
+        table
+    }
+
+    /// Read every row of a `results.jsonl` under `db_root`. Lines that
+    /// are not JSON at all (a torn write from a killed run) are
+    /// skipped, not fatal — the log must stay readable after a crash,
+    /// and `papas harvest` can rebuild the dropped row from
+    /// `attempts.jsonl`. A line that parses but does not fit `schema`
+    /// (wrong digit arity: the study's axes changed under the db) is a
+    /// real error and surfaces `Row::from_json`'s diagnostic rather
+    /// than silently presenting partial data as complete.
+    pub fn read_jsonl(db_root: &Path, schema: &Schema) -> Result<Vec<Row>> {
+        let path = db_root.join(RESULTS_FILE);
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(path)?;
+        let mut rows = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let Ok(j) = json::parse(line) else { continue };
+            rows.push(Row::from_json(&j, schema)?);
+        }
+        Ok(rows)
+    }
+
+    /// Load the table: the columnar snapshot when present,
+    /// schema-compatible, **and at least as fresh as the row log** —
+    /// else rebuilt from `results.jsonl`. (A run killed after appending
+    /// live rows but before re-snapshotting leaves the log newer; the
+    /// snapshot is an optimization, never the authority.) Errors when
+    /// neither source exists.
+    pub fn load(db_root: &Path, schema: &Schema) -> Result<ResultTable> {
+        let snap = db_root.join(COLUMNS_FILE);
+        if snapshot_is_fresh(db_root) {
+            match Self::load_columns(&snap) {
+                Ok(t) if t.schema == *schema => return Ok(t),
+                // Corrupt or foreign snapshot: fall through to the log.
+                _ => {}
+            }
+        }
+        let rows = Self::read_jsonl(db_root, schema)?;
+        if rows.is_empty() {
+            // The log is absent/empty; a fresh-but-logless snapshot was
+            // already served above, so nothing remains.
+            return Err(Error::Store(format!(
+                "no results under {} — run the study (with a capture: \
+                 block) or `papas harvest` first",
+                db_root.display()
+            )));
+        }
+        Ok(Self::from_rows(schema.clone(), rows))
+    }
+
+    /// Write the columnar snapshot under `db_root`.
+    pub fn save_columns(&self, db_root: &Path) -> Result<PathBuf> {
+        let j = Json::obj([
+            ("schema".to_string(), self.schema.to_json()),
+            ("n_rows".to_string(), Json::from(self.len())),
+            (
+                "instances".to_string(),
+                Json::Arr(self.instances.iter().map(|&i| Json::from(i as i64)).collect()),
+            ),
+            (
+                "tasks".to_string(),
+                Json::Arr(
+                    self.task_names.iter().map(|t| Json::from(t.as_str())).collect(),
+                ),
+            ),
+            (
+                "task_idx".to_string(),
+                Json::Arr(self.task_idx.iter().map(|&t| Json::from(t as i64)).collect()),
+            ),
+            (
+                "axes".to_string(),
+                Json::Arr(
+                    self.axes
+                        .iter()
+                        .map(|col| {
+                            Json::Arr(col.iter().map(|&d| Json::from(d as i64)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "metrics".to_string(),
+                Json::Obj(
+                    self.schema
+                        .metrics
+                        .iter()
+                        .zip(&self.metrics)
+                        .map(|(name, col)| {
+                            (
+                                name.clone(),
+                                Json::Arr(col.iter().map(MetricValue::to_json).collect()),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = db_root.join(COLUMNS_FILE);
+        std::fs::create_dir_all(db_root)?;
+        std::fs::write(&path, json::to_string_pretty(&j))?;
+        Ok(path)
+    }
+
+    /// Parse the columnar snapshot.
+    fn load_columns(path: &Path) -> Result<ResultTable> {
+        let j = json::parse(&std::fs::read_to_string(path)?)?;
+        let schema = Schema::from_json(j.expect("schema")?)?;
+        let ints = |v: &Json, what: &str| -> Result<Vec<i64>> {
+            v.as_arr()
+                .ok_or_else(|| Error::Store(format!("snapshot field '{what}' is not an array")))?
+                .iter()
+                .map(|x| {
+                    x.as_i64().ok_or_else(|| {
+                        Error::Store(format!("snapshot field '{what}' holds a non-integer"))
+                    })
+                })
+                .collect()
+        };
+        let n_rows = j.expect_i64("n_rows")? as usize;
+        let instances: Vec<u64> = ints(j.expect("instances")?, "instances")?
+            .into_iter()
+            .map(|x| x as u64)
+            .collect();
+        let task_names: Vec<String> = j
+            .expect("tasks")?
+            .as_arr()
+            .ok_or_else(|| Error::Store("snapshot field 'tasks' is not an array".into()))?
+            .iter()
+            .map(|t| {
+                t.as_str().map(str::to_string).ok_or_else(|| {
+                    Error::Store("snapshot field 'tasks' holds a non-string".into())
+                })
+            })
+            .collect::<Result<_>>()?;
+        let task_idx: Vec<u32> = ints(j.expect("task_idx")?, "task_idx")?
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        let axes: Vec<Vec<u32>> = j
+            .expect("axes")?
+            .as_arr()
+            .ok_or_else(|| Error::Store("snapshot field 'axes' is not an array".into()))?
+            .iter()
+            .map(|col| Ok(ints(col, "axes")?.into_iter().map(|x| x as u32).collect()))
+            .collect::<Result<_>>()?;
+        let metric_obj = j.expect("metrics")?;
+        let metrics: Vec<Vec<MetricValue>> = schema
+            .metrics
+            .iter()
+            .map(|name| {
+                metric_obj
+                    .get(name)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| {
+                        Error::Store(format!("snapshot missing metric column '{name}'"))
+                    })
+                    .map(|col| col.iter().map(MetricValue::from_json).collect())
+            })
+            .collect::<Result<_>>()?;
+        // Arity checks: a truncated snapshot must not read as valid.
+        let consistent = instances.len() == n_rows
+            && task_idx.len() == n_rows
+            && axes.len() == schema.n_axes
+            && axes.iter().all(|c| c.len() == n_rows)
+            && metrics.iter().all(|c| c.len() == n_rows)
+            && task_idx.iter().all(|&t| (t as usize) < task_names.len().max(1));
+        if !consistent {
+            return Err(Error::Store(format!(
+                "inconsistent columnar snapshot {} (re-run `papas harvest`)",
+                path.display()
+            )));
+        }
+        Ok(ResultTable { schema, instances, task_names, task_idx, axes, metrics })
+    }
+
+    /// Rewrite both persisted forms (`results.jsonl` + snapshot) from
+    /// this table.
+    pub fn save(&self, db_root: &Path) -> Result<()> {
+        std::fs::create_dir_all(db_root)?;
+        let mut out = String::new();
+        for i in 0..self.len() {
+            out.push_str(&json::to_string(&self.row(i).to_json(&self.schema)));
+            out.push('\n');
+        }
+        std::fs::write(db_root.join(RESULTS_FILE), out)?;
+        self.save_columns(db_root)?;
+        Ok(())
+    }
+}
+
+/// True when the columnar snapshot exists and is at least as fresh as
+/// the row log (the single definition of staleness, shared by
+/// [`ResultTable::load`] and [`stored_row_count`]).
+fn snapshot_is_fresh(db_root: &Path) -> bool {
+    let mtime =
+        |p: PathBuf| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+    match (
+        mtime(db_root.join(COLUMNS_FILE)),
+        mtime(db_root.join(RESULTS_FILE)),
+    ) {
+        (Some(s), Some(l)) => s >= l,
+        (Some(_), None) => true,
+        _ => false,
+    }
+}
+
+/// Deduplicated row count of the persisted store, cheap-first: the
+/// fresh snapshot's `n_rows` header (O(1) at any scale), else a
+/// distinct-key scan of the row log (a resumed run appends superseding
+/// rows; the table keeps the last per key, so a raw line count would
+/// disagree with `papas query`). `None` = no store at all.
+pub fn stored_row_count(db_root: &Path) -> Option<usize> {
+    if snapshot_is_fresh(db_root) {
+        let n = std::fs::read_to_string(db_root.join(COLUMNS_FILE))
+            .ok()
+            .and_then(|text| json::parse(&text).ok())
+            .and_then(|j| j.expect_i64("n_rows").ok());
+        if let Some(n) = n {
+            return Some(n as usize);
+        }
+    }
+    let text = std::fs::read_to_string(db_root.join(RESULTS_FILE)).ok()?;
+    let mut keys = BTreeMap::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        if let Ok(j) = json::parse(line) {
+            if let (Ok(i), Some(t)) = (j.expect_i64("instance"), j.get("task"))
+            {
+                keys.insert((i, t.as_str().unwrap_or("").to_string()), ());
+            }
+        }
+    }
+    Some(keys.len())
+}
+
+/// Backfill the result store from the attempt log: the last terminal
+/// attempt of every task key becomes one row (stdout metrics from the
+/// logged stdout, file metrics from the instance workdir, builtins from
+/// the record). Rewrites `results.jsonl` and the columnar snapshot;
+/// returns the table.
+pub fn harvest(study: &Study) -> Result<ResultTable> {
+    let engine = study.capture_engine()?;
+    let prov = Provenance::open(&study.db_root)?;
+    let attempts = prov.read_attempts()?;
+    if attempts.is_empty() {
+        return Err(Error::Store(format!(
+            "no attempts.jsonl under {} — run the study before harvesting",
+            study.db_root.display()
+        )));
+    }
+    // Last terminal attempt per key, in (instance, task) order.
+    let mut last: BTreeMap<(u64, String), crate::workflow::AttemptRecord> =
+        BTreeMap::new();
+    for rec in attempts {
+        if rec.will_retry {
+            continue;
+        }
+        last.insert((rec.instance, rec.task_id.clone()), rec);
+    }
+    let work = study.db_root.join("work");
+    let mut table = ResultTable::new(engine.schema().clone());
+    for rec in last.values() {
+        let digits = study.space().digits(rec.instance)?;
+        let workdir =
+            crate::study::filedb::resolve_instance_dir(&work, rec.instance);
+        table.push(engine.row_for(rec, digits, &workdir));
+    }
+    table.save(&study.db_root)?;
+    Ok(table)
+}
+
+/// Rebuild the columnar snapshot from the live-appended `results.jsonl`
+/// (end-of-run finalization; cheap no-op when nothing was captured).
+pub fn snapshot_from_log(db_root: &Path, schema: &Schema) -> Result<usize> {
+    let rows = ResultTable::read_jsonl(db_root, schema)?;
+    if rows.is_empty() {
+        return Ok(0);
+    }
+    let table = ResultTable::from_rows(schema.clone(), rows);
+    table.save_columns(db_root)?;
+    Ok(table.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema {
+            params: vec!["t:a".into(), "t:b".into()],
+            axis_of: vec![0, 1],
+            n_axes: 2,
+            metrics: vec![
+                "wall_time".into(),
+                "attempts".into(),
+                "exit_code".into(),
+                "exit_class".into(),
+                "m".into(),
+            ],
+        }
+    }
+
+    fn row(instance: u64, task: &str, d: [u32; 2], m: f64) -> Row {
+        Row {
+            instance,
+            task_id: task.into(),
+            digits: d.to_vec(),
+            values: vec![
+                MetricValue::Num(0.5),
+                MetricValue::Num(1.0),
+                MetricValue::Num(0.0),
+                MetricValue::Str("ok".into()),
+                MetricValue::Num(m),
+            ],
+        }
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("papas_results_store").join(tag);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn log_then_load_round_trips() {
+        let dir = tmp("log");
+        let s = schema();
+        let log = ResultLog::open(&dir).unwrap();
+        log.append(&row(0, "t", [0, 0], 1.0), &s).unwrap();
+        log.append(&row(1, "t", [1, 0], 2.0), &s).unwrap();
+        let t = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.instance(1), 1);
+        assert_eq!(t.task_id(0), "t");
+        assert_eq!(t.digit(0, 1), 1);
+        assert_eq!(t.value(4, 1), &MetricValue::Num(2.0));
+        assert_eq!(t.row(0), row(0, "t", [0, 0], 1.0));
+    }
+
+    #[test]
+    fn torn_trailing_line_is_skipped_and_healed() {
+        let dir = tmp("torn");
+        let s = schema();
+        let log = ResultLog::open(&dir).unwrap();
+        log.append(&row(0, "t", [0, 0], 1.0), &s).unwrap();
+        // simulate a crash mid-write: truncate the file inside line 2
+        let path = dir.join(RESULTS_FILE);
+        let full = std::fs::read_to_string(&path).unwrap();
+        let second = json::to_string(&row(1, "t", [1, 0], 2.0).to_json(&s));
+        std::fs::write(&path, format!("{full}{}", &second[..second.len() / 2]))
+            .unwrap();
+        // the torn fragment reads as skipped, not fatal
+        let t = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(t.len(), 1);
+        // re-opening terminates the torn line; new appends stay parseable
+        let log = ResultLog::open(&dir).unwrap();
+        log.append(&row(2, "t", [0, 1], 3.0), &s).unwrap();
+        let t = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.instance(1), 2);
+    }
+
+    #[test]
+    fn last_row_per_key_wins() {
+        let s = schema();
+        let t = ResultTable::from_rows(
+            s,
+            vec![
+                row(0, "t", [0, 0], 1.0),
+                row(1, "t", [1, 0], 5.0),
+                row(0, "t", [0, 0], 9.0), // resume re-ran instance 0
+            ],
+        );
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.value(4, 0), &MetricValue::Num(9.0));
+    }
+
+    #[test]
+    fn columnar_snapshot_round_trips_and_is_preferred() {
+        let dir = tmp("columns");
+        let s = schema();
+        let mut table = ResultTable::new(s.clone());
+        table.push(row(0, "t", [0, 1], 1.5));
+        table.push(row(3, "u", [1, 0], 2.5));
+        table.save(&dir).unwrap();
+        assert!(dir.join(RESULTS_FILE).exists());
+        assert!(dir.join(COLUMNS_FILE).exists());
+        let back = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.task_id(1), "u");
+        assert_eq!(back.digit(1, 0), 1);
+        assert_eq!(back.value(4, 1), &MetricValue::Num(2.5));
+        assert_eq!(back.schema(), &s);
+    }
+
+    #[test]
+    fn stale_snapshot_falls_back_to_the_log() {
+        let dir = tmp("stale");
+        let s = schema();
+        let log = ResultLog::open(&dir).unwrap();
+        log.append(&row(0, "t", [0, 0], 4.0), &s).unwrap();
+        // a snapshot from a different schema (one axis fewer)
+        let mut other = s.clone();
+        other.params.pop();
+        other.axis_of.pop();
+        other.n_axes = 1;
+        let mut foreign = ResultTable::new(other);
+        foreign.push(Row {
+            instance: 0,
+            task_id: "x".into(),
+            digits: vec![0],
+            values: vec![MetricValue::Missing; 5],
+        });
+        foreign.save_columns(&dir).unwrap();
+        let t = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.value(4, 0), &MetricValue::Num(4.0));
+    }
+
+    #[test]
+    fn missing_everything_is_an_error() {
+        let dir = tmp("missing");
+        assert!(ResultTable::load(&dir, &schema()).is_err());
+        assert_eq!(snapshot_from_log(&dir, &schema()).unwrap(), 0);
+    }
+}

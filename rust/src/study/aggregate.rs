@@ -12,6 +12,7 @@
 
 use super::{Checkpoint, FileDb, Study};
 use crate::util::error::{Error, Result};
+use crate::util::strings::csv_field;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
@@ -117,7 +118,10 @@ pub fn aggregate_filtered(
                         writeln!(out, "instance,combo,{header}")?;
                         wrote_header = true;
                     }
-                    let combo_col = combo_desc.join(";");
+                    // The combo column is one CSV field: parameter
+                    // values containing commas/quotes must not shift
+                    // the data columns, so it is RFC-4180 quoted.
+                    let combo_col = csv_field(&combo_desc.join(";"));
                     for line in lines {
                         if line.trim().is_empty() {
                             continue;
@@ -247,6 +251,49 @@ mod tests {
         let text = std::fs::read_to_string(&out).unwrap();
         assert!(text.contains("t:x=10"), "{text}");
         assert!(!text.contains("t:x=20"), "{text}");
+    }
+
+    #[test]
+    fn csv_mode_quotes_comma_bearing_parameter_values() {
+        let dir = std::env::temp_dir().join("papas_agg").join("quoting");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // one parameter value contains a comma: without quoting, the
+        // combo prefix would silently shift every data column
+        std::fs::write(
+            dir.join("s.yaml"),
+            "t:\n  command: /bin/sh -c \"printf 'a,b\\n1,2\\n' > out.csv\"\n  label: ['x,y', plain]\n",
+        )
+        .unwrap();
+        let study = Study::from_file(dir.join("s.yaml"))
+            .unwrap()
+            .with_db_root(dir.join(".papas"));
+        study.run_local(1).unwrap();
+        let out = dir.join("agg.csv");
+        let n = aggregate(&study, r"^out\.csv$", Mode::Csv, &out).unwrap();
+        assert_eq!(n, 2);
+        let text = std::fs::read_to_string(&out).unwrap();
+        let comma_row = text
+            .lines()
+            .find(|l| l.contains("x,y"))
+            .expect("comma-valued instance aggregated");
+        // the combo field is quoted, so the row still has exactly 4
+        // top-level CSV fields (instance, combo, a, b)
+        assert!(comma_row.contains("\"t:label=x,y\""), "{comma_row}");
+        let mut fields = 0;
+        let mut in_quotes = false;
+        for c in comma_row.chars() {
+            match c {
+                '"' => in_quotes = !in_quotes,
+                ',' if !in_quotes => fields += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(fields + 1, 4, "{comma_row}");
+        // unquoted plain values stay unquoted
+        let plain_row = text.lines().find(|l| l.contains("plain")).unwrap();
+        assert!(plain_row.contains("t:label=plain"), "{plain_row}");
+        assert!(!plain_row.contains('"'), "{plain_row}");
     }
 
     #[test]

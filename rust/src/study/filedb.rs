@@ -13,6 +13,12 @@
 //! records.jsonl     task profiling records (workflow/provenance.rs)
 //! events.log        timestamped engine events
 //! report.json       last run's summary
+//! results.jsonl     typed result rows, one per (instance × task ×
+//!                   final attempt), appended live when the study
+//!                   declares capture: metrics (results/store.rs)
+//! results_columns.json  columnar snapshot of the result table
+//!                   (schema header + per-axis digit and per-metric
+//!                   value columns); rebuilt by `papas harvest`
 //! work/wf-NNNNNNNN/     per-instance working directories
 //! ```
 
@@ -121,6 +127,16 @@ impl FileDb {
     /// Path of the per-task attempt log (`attempts.jsonl`).
     pub fn attempts_path(&self) -> PathBuf {
         self.root.join(crate::workflow::provenance::ATTEMPTS_FILE)
+    }
+
+    /// Path of the typed result-row log (`results.jsonl`).
+    pub fn results_path(&self) -> PathBuf {
+        self.root.join(crate::results::store::RESULTS_FILE)
+    }
+
+    /// Path of the columnar result snapshot (`results_columns.json`).
+    pub fn results_columns_path(&self) -> PathBuf {
+        self.root.join(crate::results::store::COLUMNS_FILE)
     }
 }
 

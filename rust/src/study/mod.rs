@@ -335,6 +335,21 @@ impl Study {
         self.compiled.as_ref()
     }
 
+    /// The results-engine capture engine for this study: the result
+    /// schema (axes + built-in and declared metric columns) plus every
+    /// task's compiled `capture:` set — reusing the sets hoisted by
+    /// `wdl::compile` when compilation succeeded.
+    pub fn capture_engine(&self) -> Result<crate::results::CaptureEngine> {
+        let precompiled = match &self.compiled {
+            Some(c) => c
+                .capture_sets()
+                .map(|(id, set)| (id.to_string(), Arc::clone(set)))
+                .collect(),
+            None => std::collections::BTreeMap::new(),
+        };
+        crate::results::CaptureEngine::new(&self.spec, &self.space, precompiled)
+    }
+
     /// Number of workflow instances that will run (post-sampling,
     /// post-shard).
     pub fn n_instances(&self) -> usize {
@@ -449,6 +464,21 @@ impl Study {
         let last_commit = AtomicUsize::new(0);
         let stride_root = self.db_root.clone();
 
+        // Live typed-metric capture: when any task declares a `capture:`
+        // block, every terminal attempt appends one typed row to
+        // `results.jsonl` as it lands (crash-tolerant, like the attempt
+        // log). Studies without captures stay zero-overhead here —
+        // `papas harvest` can still backfill built-in metrics post-hoc.
+        let capture = match self.capture_engine() {
+            Ok(eng) if eng.any_declared() => {
+                Some((eng, crate::results::ResultLog::open(&self.db_root)?))
+            }
+            _ => None,
+        };
+        let capture_ref = &capture;
+        let space_ref = &self.space;
+        let work_root = self.db_root.join("work");
+
         let mut scheduler = WorkflowScheduler::from_source(iter);
         scheduler.order = self.order;
         scheduler.window = self.window;
@@ -460,6 +490,16 @@ impl Study {
             let _ = attempt_log.append(rec);
             if rec.will_retry {
                 return;
+            }
+            // Terminal attempt: capture typed metrics (best-effort —
+            // result rows must never abort the run).
+            if let Some((eng, rlog)) = capture_ref {
+                if let Ok(digits) = space_ref.digits(rec.instance) {
+                    let workdir =
+                        filedb::resolve_instance_dir(&work_root, rec.instance);
+                    let row = eng.row_for(rec, digits, &workdir);
+                    let _ = rlog.append(&row, eng.schema());
+                }
             }
             let mut c = live_ref.lock().unwrap();
             if rec.ok {
@@ -486,6 +526,13 @@ impl Study {
         // Final checkpoint: locked load-merge-save, so concurrent shards
         // sharing this db never lose each other's keys.
         live.into_inner().unwrap().commit(&self.db_root)?;
+
+        // Finalize the result store: fold the live-appended rows into
+        // the columnar snapshot (best-effort — the run itself is done).
+        if let Some((eng, _)) = &capture {
+            let _ =
+                crate::results::snapshot_from_log(&self.db_root, eng.schema());
+        }
 
         prov.append_records(&report.records)?;
         prov.write_report(&report, executor.name())?;
@@ -728,6 +775,38 @@ mod tests {
         let ckpt = Checkpoint::load(&s.db_root).unwrap();
         assert_eq!(ckpt.done_keys.len(), 4);
         assert!(ckpt.failed_keys.is_empty());
+    }
+
+    #[test]
+    fn live_capture_writes_typed_rows_during_the_run() {
+        use crate::exec::{Script, ScriptedExecutor};
+        use crate::results::{MetricValue, ResultTable};
+        let s = tmp_study(
+            "livecap",
+            "job:\n  command: work ${v}\n  v: [1, 2, 3]\n  capture:\n    gflops: stdout GFLOPS=([0-9.]+)\n",
+        );
+        let script = Arc::new(
+            Script::new()
+                .stdout_on("job#0", "GFLOPS=1.5")
+                .stdout_on("job#1", "GFLOPS=2.5")
+                .stdout_on("job#2", "no metric line"),
+        );
+        let report =
+            s.run_with(&ScriptedExecutor::new(script, 2)).unwrap();
+        assert!(report.all_ok());
+        // rows landed live + snapshot finalized
+        assert!(s.db_root.join("results.jsonl").exists());
+        assert!(s.db_root.join("results_columns.json").exists());
+        let eng = s.capture_engine().unwrap();
+        let table = ResultTable::load(&s.db_root, eng.schema()).unwrap();
+        assert_eq!(table.len(), 3);
+        let m = eng.schema().metric_index("gflops").unwrap();
+        assert_eq!(table.value(m, 0), &MetricValue::Num(1.5));
+        assert_eq!(table.value(m, 1), &MetricValue::Num(2.5));
+        assert_eq!(table.value(m, 2), &MetricValue::Missing);
+        // builtins always ride along
+        let wt = eng.schema().metric_index("wall_time").unwrap();
+        assert!(table.value(wt, 0).as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -101,6 +101,19 @@ pub fn fmt_number(x: f64) -> String {
     }
 }
 
+/// RFC-4180 CSV field quoting: fields containing a comma, double quote,
+/// or newline are wrapped in double quotes with inner quotes doubled;
+/// everything else passes through. Used by the aggregator's provenance
+/// columns and the query layer's CSV output so parameter values
+/// containing commas cannot corrupt row structure.
+pub fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +166,14 @@ mod tests {
         assert_eq!(fmt_number(16.0), "16");
         assert_eq!(fmt_number(0.5), "0.5");
         assert_eq!(fmt_number(-3.0), "-3");
+    }
+
+    #[test]
+    fn csv_field_quotes_only_when_needed() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_field("two\nlines"), "\"two\nlines\"");
+        assert_eq!(csv_field(""), "");
     }
 }

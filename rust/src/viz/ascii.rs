@@ -1,5 +1,7 @@
 //! Terminal DAG renderer: topological levels drawn as indented tiers with
 //! state glyphs — the `papas viz` default when no Graphviz is around.
+//! Also home of [`render_bars`], the one-line-per-value ASCII trend the
+//! results engine appends to `papas report` output.
 
 use super::DagView;
 use crate::workflow::TaskState;
@@ -60,6 +62,50 @@ pub fn render_ascii(view: &DagView) -> String {
     out
 }
 
+/// Horizontal ASCII bar chart: one labelled bar per `(label, value)`
+/// pair, lengths scaled so the largest value spans `width` cells. Used
+/// by `papas report` to show a metric's trend over a parameter axis
+/// without leaving the terminal:
+///
+/// ```text
+/// 1  128.000  ████████████████████████████████████████
+/// 2   64.000  ████████████████████
+/// 4   32.000  ██████████
+/// ```
+///
+/// Non-finite or non-positive values draw an empty bar (labels and
+/// numbers still print, so rows stay comparable).
+pub fn render_bars(rows: &[(String, f64)], width: usize) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let width = width.max(1);
+    let label_w = rows.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let values: Vec<String> =
+        rows.iter().map(|(_, v)| format!("{v:.3}")).collect();
+    let value_w = values.iter().map(|v| v.chars().count()).max().unwrap_or(0);
+    let max = rows
+        .iter()
+        .map(|(_, v)| *v)
+        .filter(|v| v.is_finite())
+        .fold(0.0_f64, f64::max);
+    let mut out = String::new();
+    for ((label, v), value) in rows.iter().zip(&values) {
+        let cells = if max > 0.0 && v.is_finite() && *v > 0.0 {
+            // At least one cell for any positive value, so tiny means
+            // stay visible next to huge ones.
+            (((v / max) * width as f64).round() as usize).max(1)
+        } else {
+            0
+        };
+        out.push_str(&format!(
+            "{label:<label_w$}  {value:>value_w$}  {}\n",
+            "█".repeat(cells)
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::DagView;
@@ -96,5 +142,40 @@ mod tests {
         for line in text.lines() {
             assert!(line.starts_with('·'), "{line}");
         }
+    }
+
+    #[test]
+    fn bars_scale_to_the_maximum() {
+        let rows = vec![
+            ("1".to_string(), 128.0),
+            ("2".to_string(), 64.0),
+            ("4".to_string(), 32.0),
+        ];
+        let text = render_bars(&rows, 40);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let count = |l: &str| l.chars().filter(|&c| c == '█').count();
+        assert_eq!(count(lines[0]), 40);
+        assert_eq!(count(lines[1]), 20);
+        assert_eq!(count(lines[2]), 10);
+        assert!(lines[0].starts_with("1  "), "{}", lines[0]);
+    }
+
+    #[test]
+    fn bars_handle_degenerate_values() {
+        assert_eq!(render_bars(&[], 10), "");
+        let rows = vec![
+            ("a".to_string(), 0.0),
+            ("b".to_string(), f64::NAN),
+            ("tiny".to_string(), 1e-9),
+            ("big".to_string(), 1.0),
+        ];
+        let text = render_bars(&rows, 10);
+        let lines: Vec<&str> = text.lines().collect();
+        let count = |l: &str| l.chars().filter(|&c| c == '█').count();
+        assert_eq!(count(lines[0]), 0);
+        assert_eq!(count(lines[1]), 0);
+        assert_eq!(count(lines[2]), 1, "tiny positive values stay visible");
+        assert_eq!(count(lines[3]), 10);
     }
 }

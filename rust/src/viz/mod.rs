@@ -7,7 +7,7 @@ pub mod dax;
 pub mod dot;
 pub mod timeline;
 
-pub use ascii::render_ascii;
+pub use ascii::{render_ascii, render_bars};
 pub use dax::render_dax;
 pub use dot::render_dot;
 pub use timeline::{render_jobs, render_records};

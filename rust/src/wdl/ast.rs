@@ -9,15 +9,17 @@ use super::doc::Node;
 use super::range::{self, Expanded};
 use crate::exec::fault::FailurePolicy;
 use crate::params::{Param, Sampling};
+use crate::results::capture::CaptureSpec;
 use crate::util::error::{Error, Result};
 use crate::util::strings::is_identifier;
 
 /// The predefined WDL keywords (§5's list, extended with the
-/// fault-handling keys `timeout` / `retries` / `on_failure`).
+/// fault-handling keys `timeout` / `retries` / `on_failure` and the
+/// results-engine key `capture`).
 pub const WDL_KEYWORDS: &[&str] = &[
     "command", "name", "environ", "after", "infiles", "outfiles",
     "substitute", "parallel", "batch", "nnodes", "ppnode", "hosts",
-    "fixed", "sampling", "timeout", "retries", "on_failure",
+    "fixed", "sampling", "timeout", "retries", "on_failure", "capture",
 ];
 
 /// Parallel execution mode (§5 keyword `parallel`).
@@ -102,6 +104,11 @@ pub struct TaskSpec {
     /// `on_failure` — the study-level failure policy. Declared on any
     /// task; the first declaration wins (like `sampling`).
     pub on_failure: Option<FailurePolicy>,
+    /// `capture` — named result metrics extracted from this task's
+    /// outputs (`metric: stdout PATTERN` / `metric: file NAME_RE
+    /// [PATTERN]`); built-ins (`wall_time`, `attempts`, `exit_code`,
+    /// `exit_class`) are captured automatically and need no entry.
+    pub capture: Vec<CaptureSpec>,
 }
 
 /// A whole parameter study: ordered task sections.
@@ -244,6 +251,12 @@ impl TaskSpec {
                         Some(FailurePolicy::parse(&raw).map_err(|m| {
                             Error::Wdl(format!("task '{id}': on_failure: {m}"))
                         })?);
+                }
+                "capture" => {
+                    for (metric, mnode) in map_of(id, "capture", value)? {
+                        let raw = scalar_of(id, metric, mnode)?;
+                        t.capture.push(CaptureSpec::parse(id, metric, &raw)?);
+                    }
                 }
                 // Any other keyword is a user-defined parameter (§5:
                 // "keywords that are not predefined are considered as
@@ -513,6 +526,36 @@ matmulOMP:
             "t:\n  command: c\n  timeout: soon\n",
             "t:\n  command: c\n  retries: many\n",
             "t:\n  command: c\n  on_failure: explode\n",
+        ] {
+            let doc = parse_str(bad, Format::Yaml).unwrap();
+            assert!(StudySpec::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn capture_keyword_parses_and_is_not_a_param() {
+        let doc = parse_str(
+            "t:\n  command: run ${v}\n  v: [1, 2]\n  capture:\n    gflops: stdout GFLOPS=([0-9.]+)\n    sum: file out\\.txt\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t = &StudySpec::from_doc(&doc).unwrap().tasks[0];
+        assert_eq!(t.capture.len(), 2);
+        assert_eq!(t.capture[0].name, "gflops");
+        assert_eq!(t.capture[1].name, "sum");
+        // capture is a keyword: no parameter axis named "capture"
+        assert_eq!(t.params.len(), 1);
+        assert_eq!(t.params[0].name, "v");
+
+        for bad in [
+            // built-in shadowing
+            "t:\n  command: c\n  capture:\n    wall_time: stdout x\n",
+            // missing pattern
+            "t:\n  command: c\n  capture:\n    m: stdout\n",
+            // unknown source
+            "t:\n  command: c\n  capture:\n    m: magic x\n",
+            // capture must be a mapping
+            "t:\n  command: c\n  capture: gflops\n",
         ] {
             let doc = parse_str(bad, Format::Yaml).unwrap();
             assert!(StudySpec::from_doc(&doc).is_err(), "{bad}");

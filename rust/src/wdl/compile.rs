@@ -29,6 +29,7 @@
 use super::ast::StudySpec;
 use super::interp::{utf8_len, MAX_DEPTH};
 use crate::params::{ParamRef, Space, ValueTable};
+use crate::results::capture::CaptureSet;
 use crate::util::error::{Error, Result};
 use crate::util::strings::shell_split;
 use crate::workflow::dag::Dag;
@@ -144,6 +145,11 @@ struct CompiledTask {
     timeout: Option<f64>,
     /// Extra attempts after failure — instance-invariant, copied through.
     retries: u32,
+    /// The task's `capture:` block with patterns pre-compiled —
+    /// instance-invariant like `timeout`/`retries`, shared with the
+    /// results engine via `Arc` (it does not ride on `ConcreteTask`;
+    /// extraction happens at the study layer, not per dispatch).
+    capture: Arc<CaptureSet>,
 }
 
 /// A producer-outfile / consumer-infile pair whose paths are
@@ -490,6 +496,7 @@ impl CompiledStudy {
                 substitutions,
                 timeout: t.timeout,
                 retries: t.retries.unwrap_or(0),
+                capture: Arc::new(CaptureSet::compile(&t.id, &t.capture)?),
             });
         }
         // Consume the compiler (ends its borrow of `table`).
@@ -547,6 +554,15 @@ impl CompiledStudy {
     /// The study's interned value tables.
     pub fn table(&self) -> &Arc<ValueTable> {
         &self.table
+    }
+
+    /// The pre-compiled `capture:` set of every task (task id → set),
+    /// consumed by the results engine's [`crate::results::CaptureEngine`]
+    /// so live capture and `papas harvest` never recompile a pattern.
+    pub fn capture_sets(
+        &self,
+    ) -> impl Iterator<Item = (&str, &Arc<CaptureSet>)> {
+        self.tasks.iter().map(|t| (t.id.as_str(), &t.capture))
     }
 
     /// True when every inferred file edge is instance-invariant (the DAG
@@ -743,6 +759,23 @@ mod tests {
         let inst = c.instantiate_at(&space, 1).unwrap();
         assert_eq!(inst.tasks[0].timeout, Some(9.5));
         assert_eq!(inst.tasks[0].retries, 2);
+    }
+
+    #[test]
+    fn capture_sets_hoisted_onto_the_compiled_study() {
+        let (spec, space) = load(
+            "t:\n  command: run ${v}\n  v: [1, 2]\n  capture:\n    m: stdout m=(\\d+)\n",
+        );
+        let c = CompiledStudy::compile(&spec, &space).unwrap();
+        let sets: Vec<_> = c.capture_sets().collect();
+        assert_eq!(sets.len(), 1);
+        assert_eq!(sets[0].0, "t");
+        assert_eq!(sets[0].1.names().collect::<Vec<_>>(), vec!["m"]);
+        // instances are unaffected — captures live on the study, not
+        // on every ConcreteTask clone
+        assert_equivalent(
+            "t:\n  command: run ${v}\n  v: [1, 2]\n  capture:\n    m: stdout m=(\\d+)\n",
+        );
     }
 
     #[test]

@@ -3,9 +3,17 @@
 //! A parameter study is a mapping of *tasks* (sections); each task is up
 //! to two levels of keyword/value entries. Predefined keywords (command,
 //! name, environ, after, infiles, outfiles, substitute, parallel, batch,
-//! nnodes, ppnode, hosts, fixed, sampling, timeout, retries, on_failure)
-//! drive the engine; any other keyword is a *user-defined parameter*
-//! usable in `${...}` interpolation.
+//! nnodes, ppnode, hosts, fixed, sampling, timeout, retries, on_failure,
+//! capture) drive the engine; any other keyword is a *user-defined
+//! parameter* usable in `${...}` interpolation.
+//!
+//! The `capture:` block declares named result metrics extracted from a
+//! task's outputs — `metric: stdout PATTERN` (regex over captured
+//! stdout, group 1 or the whole match) or `metric: file NAME_RE
+//! [PATTERN]` (first workdir file whose name matches, whole-file numeric
+//! read or content regex). The built-in metrics `wall_time`, `attempts`,
+//! `exit_code`, and `exit_class` are recorded for every task
+//! automatically; see `crate::results`.
 //!
 //! Pipeline: format parser (`yamlite` / `json` / `ini`) → common `doc::
 //! Node` model → [`ast`] typing → [`validate`] → [`range`] expansion →

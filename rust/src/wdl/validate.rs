@@ -102,6 +102,12 @@ pub fn validate(study: &StudySpec) -> Result<Vec<String>> {
             ));
         }
 
+        // -- capture blocks: patterns compile, names unique ---------------
+        // (CaptureSet::compile is the single definition of both checks;
+        // running it here surfaces errors at validation time, before any
+        // execution.)
+        crate::results::capture::CaptureSet::compile(&t.id, &t.capture)?;
+
         // -- every ${...} reference must be statically resolvable --------
         let mut templates: Vec<(&str, String)> =
             vec![("command", t.command.clone())];
@@ -314,5 +320,26 @@ mod tests {
     fn fixed_unknown_param() {
         let s = study("a:\n  command: x\n  p: [1, 2]\n  fixed: [q]\n");
         assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn capture_patterns_validated() {
+        let s = study(
+            "a:\n  command: x\n  capture:\n    m: stdout v=(\\d+)\n",
+        );
+        assert!(validate(&s).is_ok());
+        let s = study(
+            "a:\n  command: x\n  capture:\n    m: stdout [unclosed\n",
+        );
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("bad pattern"), "{e}");
+        // duplicate metric names within a task
+        let mut s = study("a:\n  command: x\n");
+        let spec = |raw: &str| {
+            crate::results::capture::CaptureSpec::parse("a", "m", raw).unwrap()
+        };
+        s.tasks[0].capture = vec![spec("stdout a"), spec("stdout b")];
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("twice"), "{e}");
     }
 }

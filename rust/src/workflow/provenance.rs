@@ -48,6 +48,10 @@ pub struct AttemptRecord {
     pub error: Option<String>,
     /// Worker that ran the attempt.
     pub worker: String,
+    /// Captured stdout of the attempt (runner-capped at ~4 KiB). Feeds
+    /// the results engine's `capture:` stdout metrics — both live and
+    /// when `papas harvest` backfills from this log.
+    pub stdout: String,
 }
 
 impl AttemptRecord {
@@ -71,6 +75,15 @@ impl AttemptRecord {
                 self.error.as_deref().map(Json::from).unwrap_or(Json::Null),
             ),
             ("worker".to_string(), Json::from(self.worker.as_str())),
+            // Null when empty to keep the log lean.
+            (
+                "stdout".to_string(),
+                if self.stdout.is_empty() {
+                    Json::Null
+                } else {
+                    Json::from(self.stdout.as_str())
+                },
+            ),
         ])
     }
 
@@ -94,6 +107,12 @@ impl AttemptRecord {
                 .and_then(ErrorClass::parse),
             error: j.get("error").and_then(Json::as_str).map(str::to_string),
             worker: j.expect_str("worker")?.to_string(),
+            // Absent on logs written before the results engine.
+            stdout: j
+                .get("stdout")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
         })
     }
 }
@@ -326,6 +345,7 @@ mod tests {
             class: Some(ErrorClass::NonZero),
             error: Some("exit code 3".into()),
             worker: "local-0".into(),
+            stdout: "partial output\n".into(),
         };
         let ok = AttemptRecord {
             attempt: 2,
@@ -334,6 +354,7 @@ mod tests {
             exit_code: 0,
             class: None,
             error: None,
+            stdout: String::new(),
             ..fail.clone()
         };
         log.append(&fail).unwrap();
@@ -341,6 +362,8 @@ mod tests {
         let back = p.read_attempts().unwrap();
         assert_eq!(back, vec![fail, ok]);
         assert_eq!(back[0].class.unwrap().label(), "nonzero");
+        assert_eq!(back[0].stdout, "partial output\n");
+        assert!(back[1].stdout.is_empty());
     }
 
     #[test]

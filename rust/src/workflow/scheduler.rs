@@ -429,6 +429,7 @@ impl<'a> WorkflowScheduler<'a> {
                         class: result.class,
                         error: result.error.clone(),
                         worker: result.worker.clone(),
+                        stdout: result.stdout.clone(),
                     });
                 }
 

@@ -1,0 +1,438 @@
+//! Results-engine integration: the hermetic query property suite (zero
+//! subprocesses — randomized scripted studies checked against a naive
+//! full-scan reference) and the golden §6-style matmul performance
+//! report (capture → harvest → query → report over the in-process
+//! matmul builtin).
+
+use papas::exec::{Script, ScriptedExecutor};
+use papas::params::{Param, Space};
+use papas::results::{
+    build_report, harvest, run_flat, run_grouped, MetricValue, Query,
+    ResultTable, Row, Schema, BUILTIN_METRICS,
+};
+use papas::study::Study;
+use papas::util::proptest::{check, Gen};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("papas_results_e2e").join(tag);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn repo(path: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(path)
+}
+
+// ---------------------------------------------------------------------
+// Hermetic property suite: table queries ≡ naive full scan
+// ---------------------------------------------------------------------
+
+/// A randomized result-set fixture: a small space, one metric column on
+/// top of the builtins, rows for every combination with deterministic
+/// pseudo-random values (some missing).
+struct Fixture {
+    space: Space,
+    schema: Schema,
+    table: ResultTable,
+    /// Decoded reference copy: (param name → value, metric name → value).
+    flat: Vec<(BTreeMap<String, String>, Option<f64>)>,
+}
+
+fn arb_fixture(g: &mut Gen) -> Fixture {
+    let n_params = g.usize(1..=3);
+    let params: Vec<Param> = (0..n_params)
+        .map(|p| {
+            let n_vals = g.usize(2..=4);
+            Param::new(
+                format!("t:p{p}"),
+                (0..n_vals).map(|v| format!("v{v}")).collect(),
+            )
+        })
+        .collect();
+    let space = Space::cartesian(params).unwrap();
+    let mut metrics: Vec<String> =
+        BUILTIN_METRICS.iter().map(|m| m.to_string()).collect();
+    metrics.push("score".into());
+    let schema = Schema {
+        params: space.params().iter().map(|p| p.name.clone()).collect(),
+        axis_of: space.param_axes(),
+        n_axes: space.n_axes(),
+        metrics,
+    };
+    let score_col = schema.metrics.len() - 1;
+    let mut table = ResultTable::new(schema.clone());
+    let mut flat = Vec::new();
+    for i in 0..space.len() {
+        let digits = space.digits(i).unwrap();
+        let score = if g.bool(0.15) {
+            None
+        } else {
+            Some(g.i64(-50..=50) as f64 / 4.0)
+        };
+        let mut values = vec![
+            MetricValue::Num(0.5),
+            MetricValue::Num(1.0),
+            MetricValue::Num(0.0),
+            MetricValue::Str("ok".into()),
+            MetricValue::Missing,
+        ];
+        values[score_col] = match score {
+            Some(x) => MetricValue::Num(x),
+            None => MetricValue::Missing,
+        };
+        table.push(Row { instance: i, task_id: "t".into(), digits, values });
+        let decoded: BTreeMap<String, String> = space
+            .combination(i)
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().to_string()))
+            .collect();
+        flat.push((decoded, score));
+    }
+    Fixture { space, schema, table, flat }
+}
+
+#[test]
+fn prop_grouped_query_equals_naive_full_scan() {
+    check("group-by aggregation ≡ naive full scan", 48, |g| {
+        let fx = arb_fixture(g);
+        // Random conjunctive filter: up to 2 param clauses + 1 range.
+        let mut clauses: Vec<String> = Vec::new();
+        for _ in 0..g.usize(0..=2) {
+            let p = g.usize(0..=fx.schema.params.len() - 1);
+            let vals = &fx.space.params()[p].values;
+            let v = g.choose(vals).clone();
+            let op = if g.bool(0.7) { "==" } else { "!=" };
+            clauses.push(format!("{}{op}{v}", fx.schema.params[p]));
+        }
+        let threshold = g.i64(-40..=40) as f64 / 4.0;
+        let use_range = g.bool(0.5);
+        if use_range {
+            clauses.push(format!("score>={threshold}"));
+        }
+        let where_expr = clauses.join(" && ");
+        // Random group-by subset (at least one axis).
+        let by_param = g.usize(0..=fx.schema.params.len() - 1);
+        let by_name = fx.schema.params[by_param].clone();
+
+        let q = Query::parse(
+            &fx.schema,
+            &fx.space,
+            &where_expr,
+            &by_name,
+            "score",
+            None,
+            false,
+            None,
+        )
+        .unwrap();
+        let groups = run_grouped(&fx.table, &fx.space, &q).unwrap();
+
+        // Naive reference: full scan over the decoded copy with string
+        // comparisons and hand-rolled statistics.
+        let survives = |row: &(BTreeMap<String, String>, Option<f64>)| {
+            for c in &clauses {
+                if let Some((name, v)) = c.split_once("==") {
+                    if name != "score" && row.0[name] != v {
+                        return false;
+                    }
+                } else if let Some((name, v)) = c.split_once("!=") {
+                    if name != "score" && row.0[name] == v {
+                        return false;
+                    }
+                } else if let Some((_, v)) = c.split_once(">=") {
+                    let t: f64 = v.parse().unwrap();
+                    match row.1 {
+                        Some(x) if x >= t => {}
+                        _ => return false,
+                    }
+                }
+            }
+            true
+        };
+        let mut naive: BTreeMap<String, Vec<Option<f64>>> = BTreeMap::new();
+        for row in fx.flat.iter().filter(|r| survives(r)) {
+            naive
+                .entry(row.0[&by_name].clone())
+                .or_default()
+                .push(row.1);
+        }
+
+        // Same groups, same membership counts, same aggregates.
+        assert_eq!(
+            groups.len(),
+            naive.len(),
+            "group count diverged (where='{where_expr}' by='{by_name}')"
+        );
+        for grp in &groups {
+            let key = &grp.key[0].1;
+            let members = naive.get(key).unwrap_or_else(|| {
+                panic!("group '{key}' missing from the reference")
+            });
+            assert_eq!(grp.n, members.len(), "group '{key}' size");
+            let xs: Vec<f64> = members.iter().filter_map(|x| *x).collect();
+            let s = &grp.stats[0].1;
+            assert_eq!(s.n, xs.len(), "group '{key}' metric sample count");
+            if xs.is_empty() {
+                continue;
+            }
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!((s.mean - mean).abs() < 1e-9, "group '{key}' mean");
+            assert!((s.min - min).abs() < 1e-12, "group '{key}' min");
+            assert!((s.max - max).abs() < 1e-12, "group '{key}' max");
+            if xs.len() > 1 {
+                let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                    / (xs.len() - 1) as f64;
+                assert!(
+                    (s.std - var.sqrt()).abs() < 1e-9,
+                    "group '{key}' stddev"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_flat_query_equals_naive_filter() {
+    check("flat filtering ≡ naive full scan", 48, |g| {
+        let fx = arb_fixture(g);
+        let p = g.usize(0..=fx.schema.params.len() - 1);
+        let v = g.choose(&fx.space.params()[p].values).clone();
+        let threshold = g.i64(-40..=40) as f64 / 4.0;
+        let where_expr =
+            format!("{}=={v} && score<{threshold}", fx.schema.params[p]);
+        let q = Query::parse(
+            &fx.schema,
+            &fx.space,
+            &where_expr,
+            "",
+            "score",
+            None,
+            false,
+            None,
+        )
+        .unwrap();
+        let rows = run_flat(&fx.table, &fx.space, &q);
+        let expect: Vec<&(BTreeMap<String, String>, Option<f64>)> = fx
+            .flat
+            .iter()
+            .filter(|r| {
+                r.0[&fx.schema.params[p]] == v
+                    && matches!(r.1, Some(x) if x < threshold)
+            })
+            .collect();
+        assert_eq!(rows.len(), expect.len(), "{where_expr}");
+        for (got, want) in rows.iter().zip(expect) {
+            for (name, value) in &got.params {
+                assert_eq!(&want.0[name], value);
+            }
+            assert_eq!(got.metrics[0].1.as_f64(), want.1);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Hermetic end-to-end: scripted study → live capture → query
+// ---------------------------------------------------------------------
+
+#[test]
+fn scripted_study_live_capture_queries_hermetically() {
+    let dir = tmp("scripted");
+    std::fs::write(
+        dir.join("s.yaml"),
+        "bench:\n  command: work ${mode} ${rep}\n  mode: [fast, slow]\n  rep: [1, 2]\n  capture:\n    latency: stdout latency=([0-9.]+)\n",
+    )
+    .unwrap();
+    let study = Study::from_file(dir.join("s.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    assert_eq!(study.n_instances(), 4);
+    // scripted stdout: instances 0/1 are mode=fast (10±1), 2/3 are
+    // mode=slow (40±2) under last-axis-fastest decode — but the
+    // assertions below recompute expectations from the actual rows, so
+    // they hold under any decode order
+    let script = Arc::new(
+        Script::new()
+            .stdout_on("bench#0", "latency=9.0")
+            .stdout_on("bench#1", "latency=11.0")
+            .stdout_on("bench#2", "latency=38.0")
+            .stdout_on("bench#3", "latency=42.0"),
+    );
+    let report = study
+        .run_with(&ScriptedExecutor::new(script, 2))
+        .unwrap();
+    assert!(report.all_ok());
+
+    let engine = study.capture_engine().unwrap();
+    let table = ResultTable::load(&study.db_root, engine.schema()).unwrap();
+    assert_eq!(table.len(), 4);
+
+    // instance ordering is combination-index order; find which mode each
+    // instance carries rather than assuming axis order
+    let q = Query::parse(
+        engine.schema(),
+        study.space(),
+        "",
+        "mode",
+        "latency",
+        None,
+        false,
+        None,
+    )
+    .unwrap();
+    let groups = run_grouped(&table, study.space(), &q).unwrap();
+    assert_eq!(groups.len(), 2);
+    let mean_of = |mode: &str| {
+        groups
+            .iter()
+            .find(|g| g.key[0].1 == mode)
+            .unwrap()
+            .stats[0]
+            .1
+            .mean
+    };
+    // the two fast instances hold {9, 11} or {9, 38}… — recompute the
+    // expected means from the actual rows instead of guessing the axis
+    // decode order
+    let lat = engine.schema().metric_index("latency").unwrap();
+    let mode_param = engine.schema().resolve_param("mode").unwrap();
+    let mode_axis = engine.schema().axis_of[mode_param];
+    let mut sums: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+    for i in 0..table.len() {
+        let d = table.digit(mode_axis, i) as usize;
+        let mode = study.space().params()[mode_param].values[d].clone();
+        let x = table.value(lat, i).as_f64().unwrap();
+        let e = sums.entry(mode).or_insert((0.0, 0));
+        e.0 += x;
+        e.1 += 1;
+    }
+    for (mode, (sum, n)) in sums {
+        assert_eq!(n, 2);
+        assert!((mean_of(&mode) - sum / n as f64).abs() < 1e-12, "{mode}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden §6-style e2e: the shipped matmul performance study
+// ---------------------------------------------------------------------
+
+#[test]
+fn matmul_perf_capture_harvest_query_report() {
+    let dir = tmp("matmul_perf");
+    let study = Study::from_file(repo("studies/matmul_perf.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    // threads 1:4 × sizes {64, 128} (× the 1-value environ axis)
+    assert_eq!(study.n_instances(), 8);
+    let report = study.run_local(2).unwrap();
+    assert!(report.all_ok(), "{report:?}");
+
+    // live capture produced the store during the run; harvest must
+    // reproduce identical rows from attempts.jsonl + workdirs
+    let engine = study.capture_engine().unwrap();
+    let live = ResultTable::load(&study.db_root, engine.schema()).unwrap();
+    assert_eq!(live.len(), 8);
+    let harvested = harvest(&study).unwrap();
+    assert_eq!(harvested.len(), 8);
+    for i in 0..8 {
+        assert_eq!(live.row(i), harvested.row(i), "row {i} diverged");
+    }
+
+    // stdout captures are typed: checksum numeric + deterministic per
+    // size (same n ⇒ same inputs ⇒ same checksum, any thread count),
+    // exec_path is the string column "native"
+    let q = Query::parse(
+        engine.schema(),
+        study.space(),
+        "",
+        "size",
+        "checksum",
+        None,
+        false,
+        None,
+    )
+    .unwrap();
+    let by_size = run_grouped(&harvested, study.space(), &q).unwrap();
+    assert_eq!(by_size.len(), 2);
+    for grp in &by_size {
+        assert_eq!(grp.n, 4);
+        assert_eq!(grp.stats[0].1.n, 4, "checksum captured for {:?}", grp.key);
+        assert!(
+            grp.stats[0].1.std.abs() < 1e-9,
+            "checksum must be thread-count-invariant: {:?}",
+            grp
+        );
+    }
+    // file capture agrees with the stdout capture
+    let ck = engine.schema().metric_index("checksum").unwrap();
+    let fck = engine.schema().metric_index("file_checksum").unwrap();
+    for i in 0..harvested.len() {
+        let a = harvested.value(ck, i).as_f64().unwrap();
+        let b = harvested.value(fck, i).as_f64().unwrap();
+        let tol = 1e-9 * a.abs().max(1.0);
+        assert!((a - b).abs() <= tol, "row {i}: stdout {a} vs file {b}");
+    }
+    let path_col = engine.schema().metric_index("exec_path").unwrap();
+    for i in 0..harvested.len() {
+        assert_eq!(
+            harvested.value(path_col, i),
+            &MetricValue::Str("native".into())
+        );
+    }
+
+    // the acceptance queries: typed row filter...
+    let q = Query::parse(
+        engine.schema(),
+        study.space(),
+        "threads==4",
+        "",
+        "wall_time,checksum",
+        None,
+        false,
+        None,
+    )
+    .unwrap();
+    let rows = run_flat(&harvested, study.space(), &q);
+    assert_eq!(rows.len(), 2); // two sizes at threads=4
+    for r in &rows {
+        let threads = r
+            .params
+            .iter()
+            .find(|(k, _)| k.ends_with(":threads"))
+            .unwrap();
+        assert_eq!(threads.1, "4");
+        assert!(r.metrics[0].1.as_f64().unwrap() > 0.0); // wall_time
+    }
+
+    // ...and the §6 report: mean/std, speedup, efficiency per thread
+    // count against the threads=1 baseline
+    let rep = build_report(
+        &harvested,
+        study.space(),
+        engine.schema(),
+        "wall_time",
+        "threads",
+        Some("threads=1"),
+        "",
+    )
+    .unwrap();
+    assert_eq!(rep.rows.len(), 4);
+    assert_eq!(rep.rows[0].key, "1");
+    assert!((rep.rows[0].speedup.unwrap() - 1.0).abs() < 1e-12);
+    assert!((rep.rows[0].efficiency.unwrap() - 1.0).abs() < 1e-12);
+    for r in &rep.rows {
+        assert_eq!(r.n, 2);
+        assert!(r.mean > 0.0);
+        assert!(r.speedup.unwrap() > 0.0);
+        assert!(r.efficiency.unwrap() > 0.0);
+    }
+    let text = rep.render_text();
+    assert!(text.contains("speedup"), "{text}");
+    assert!(text.contains("efficiency"), "{text}");
+    assert!(text.contains('█'), "{text}");
+}

@@ -44,9 +44,12 @@ fn all_shipped_studies_validate() {
     for f in [
         "studies/matmul_omp.yaml",
         "studies/matmul_omp_small.yaml",
+        "studies/matmul_perf.yaml",
         "studies/netlogo_cdiff.yaml",
         "studies/cdiff_intervention.yaml",
+        "studies/cdiff_ensemble.yaml",
         "studies/pipeline.yaml",
+        "studies/flaky_demo.yaml",
     ] {
         let study = Study::from_file(repo(f)).expect(f);
         assert!(study.space().len() > 0, "{f}");
