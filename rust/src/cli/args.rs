@@ -45,6 +45,8 @@ pub enum ParsedCommand {
     Query(Args),
     /// `papas report ...` (per-axis performance summary with speedup)
     Report(Args),
+    /// `papas search ...` (adaptive round-based study driver)
+    Search(Args),
     /// `papas help` / no args.
     Help,
 }
@@ -78,6 +80,7 @@ impl Args {
             "harvest" => Ok(ParsedCommand::Harvest(rest)),
             "query" => Ok(ParsedCommand::Query(rest)),
             "report" => Ok(ParsedCommand::Report(rest)),
+            "search" => Ok(ParsedCommand::Search(rest)),
             "help" | "--help" | "-h" => Ok(ParsedCommand::Help),
             other => Err(Error::Exec(format!(
                 "unknown subcommand '{other}' (try 'papas help')"
@@ -163,6 +166,27 @@ mod tests {
             Args::parse(&sv(&["report", "s.yaml"])).unwrap(),
             ParsedCommand::Report(_)
         ));
+        assert!(matches!(
+            Args::parse(&sv(&["search", "s.yaml"])).unwrap(),
+            ParsedCommand::Search(_)
+        ));
+    }
+
+    #[test]
+    fn search_flags_parse() {
+        let ParsedCommand::Search(a) = Args::parse(&sv(&[
+            "search", "s.yaml", "--rounds", "6", "--budget", "8", "--seed",
+            "7", "--strategy", "halving 2", "--objective", "minimize score",
+            "--resume",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.opt_num::<u32>("rounds", 0).unwrap(), 6);
+        assert_eq!(a.opt_num::<u64>("budget", 0).unwrap(), 8);
+        assert_eq!(a.opt_or("strategy", ""), "halving 2");
+        assert_eq!(a.opt_or("objective", ""), "minimize score");
+        assert!(a.has_flag("resume"));
     }
 
     #[test]

@@ -46,6 +46,13 @@ USAGE:
                [--where EXPR] [--format text|json]
                                             per-axis performance summary
                                             (mean/std, speedup, efficiency)
+  papas search STUDY.yaml [--rounds N] [--budget K] [--seed S]
+               [--strategy 'random|halving [eta N]|refine']
+               [--objective 'minimize|maximize METRIC'] [--resume]
+               [--workers N] [--db DIR] [--fresh]
+                                            adaptive round-based search:
+                                            propose -> run -> score loop
+                                            over the captured metrics
   papas help";
 
 fn load_study(a: &Args) -> Result<Study> {
@@ -619,6 +626,115 @@ pub fn cmd_report(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `papas search` — the adaptive round-based study driver: propose →
+/// run (pinned sub-study) → harvest → score, looping until the round
+/// cap or convergence. Prints a live per-round incumbent table and a
+/// final best-combination report with the incumbent-score trend.
+pub fn cmd_search(a: &Args) -> Result<()> {
+    use crate::search::{
+        run_search_observed, Objective, SearchConfig, StrategySpec,
+    };
+    let study = load_study(a)?;
+    for w in &study.warnings {
+        eprintln!("warning: {w}");
+    }
+    // WDL `search:` block (defaults when absent), CLI flags override.
+    let spec = study.search_spec().cloned().unwrap_or_default();
+    let mut cfg = SearchConfig::from_spec(&spec);
+    if let Some(o) = a.options.get("objective") {
+        cfg.objective = Objective::parse(o)?;
+    }
+    if let Some(s) = a.options.get("strategy") {
+        cfg.strategy = StrategySpec::parse(s)?;
+    }
+    cfg.rounds = a.opt_num("rounds", cfg.rounds)?;
+    cfg.budget = a.opt_num("budget", cfg.budget)?;
+    cfg.seed = a.opt_num("seed", cfg.seed)?;
+    cfg.resume = a.has_flag("resume");
+    // A fresh search leaves the shared study checkpoint alone (already
+    // completed tasks restore with their recorded metrics); `--fresh`
+    // forces full re-execution, mirroring `papas run --fresh`.
+    if a.has_flag("fresh") && !cfg.resume {
+        study.clear_checkpoint()?;
+    }
+
+    println!(
+        "search '{}': {} combinations | {} | strategy {} | up to {} rounds \
+         x budget {}{}",
+        study.name,
+        study.space().len(),
+        cfg.objective,
+        cfg.strategy,
+        cfg.rounds,
+        cfg.budget,
+        if cfg.resume { " (resume)" } else { "" }
+    );
+    let executor = study.local_executor(a.opt_num("workers", 2)?);
+    let objective = cfg.objective.clone();
+    println!("round  proposed  scored  round-best    incumbent");
+    let outcome = run_search_observed(&study, &cfg, &executor, |rec| {
+        let scores = rec.scores.as_deref().unwrap_or(&[]);
+        let round_best = scores
+            .iter()
+            .flatten()
+            .copied()
+            .reduce(|a, b| if objective.better(b, a) { b } else { a });
+        let fmt = |s: Option<f64>| match s {
+            Some(x) => crate::util::strings::fmt_number(x),
+            None => "-".to_string(),
+        };
+        let incumbent = match rec.incumbent {
+            Some((i, s)) => {
+                format!("#{i} = {}", crate::util::strings::fmt_number(s))
+            }
+            None => "-".to_string(),
+        };
+        println!(
+            "{:>5}  {:>8}  {:>6}  {:>10}    {incumbent}",
+            rec.round,
+            rec.proposals.len(),
+            scores.iter().flatten().count(),
+            fmt(round_best),
+        );
+    })?;
+
+    let Some((best, score)) = outcome.best() else {
+        return Err(Error::Exec(format!(
+            "search finished but no combination produced a scoreable \
+             '{}' metric",
+            cfg.objective.metric
+        )));
+    };
+    println!(
+        "{} after {} round(s), {} task executions ({} of {} combinations \
+         ever run)",
+        if outcome.converged { "converged" } else { "round cap reached" },
+        outcome.history.rounds_completed(),
+        outcome.executions,
+        outcome.history.n_proposed(),
+        study.space().len()
+    );
+    println!(
+        "best: combination {best} ({} = {})",
+        cfg.objective.metric,
+        crate::util::strings::fmt_number(score)
+    );
+    for (k, v) in study.space().combination(best)? {
+        println!("  {k} = {v}");
+    }
+    // Incumbent-score trend over rounds (same renderer as `papas report`).
+    let rows: Vec<(String, f64)> = outcome
+        .history
+        .rounds()
+        .iter()
+        .filter_map(|r| {
+            r.incumbent.map(|(_, s)| (format!("round {}", r.round), s))
+        })
+        .collect();
+    print!("{}", crate::viz::render_bars(&rows, 40));
+    Ok(())
+}
+
 /// `papas dax` — the §9 Pegasus-integration extension. Materializes only
 /// the requested instance, not the whole selection.
 pub fn cmd_dax(a: &Args) -> Result<()> {
@@ -898,6 +1014,33 @@ mod tests {
         .unwrap();
         assert!(cmd_report(&args(&[p.to_str().unwrap()], &[("db", dbs)]))
             .is_err()); // --by required
+    }
+
+    #[test]
+    fn search_command_runs_rounds_and_writes_the_ledger() {
+        let p = study_file(
+            "search",
+            "t:\n  command: sleep-ms ${v}\n  v: [1, 2, 3, 4]\n  search:\n    objective: minimize wall_time\n    strategy: random\n    rounds: 2\n    budget: 2\n    seed: 1\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        let dbs = db.to_str().unwrap();
+        let a = args(&[p.to_str().unwrap()], &[("db", dbs), ("workers", "2")]);
+        cmd_search(&a).unwrap();
+        assert!(db.join("search.jsonl").exists());
+        assert!(db.join("results_columns.json").exists());
+        // resume with a higher round cap continues the same search
+        let mut a = args(&[p.to_str().unwrap()], &[("db", dbs), ("rounds", "3")]);
+        a.flags.push("resume".into());
+        cmd_search(&a).unwrap();
+        // an unserveable objective errors before running anything
+        let a = args(
+            &[p.to_str().unwrap()],
+            &[("db", dbs), ("objective", "minimize ghost")],
+        );
+        assert!(cmd_search(&a).is_err());
+        // a malformed strategy flag errors at parse time
+        let a = args(&[p.to_str().unwrap()], &[("db", dbs), ("strategy", "zzz")]);
+        assert!(cmd_search(&a).is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! papas harvest STUDY.yaml                 # backfill typed results
 //! papas query STUDY.yaml [--where ...] [--by ...]   # query results
 //! papas report STUDY.yaml --metric M --by AXIS      # perf summary
+//! papas search STUDY.yaml [--rounds N] [--budget K] # adaptive search
 //! ```
 
 pub mod args;
@@ -50,6 +51,7 @@ fn run(argv: &[String]) -> Result<()> {
         ParsedCommand::Harvest(a) => commands::cmd_harvest(&a),
         ParsedCommand::Query(a) => commands::cmd_query(&a),
         ParsedCommand::Report(a) => commands::cmd_report(&a),
+        ParsedCommand::Search(a) => commands::cmd_search(&a),
         ParsedCommand::Help => {
             println!("{}", commands::USAGE);
             Ok(())

@@ -36,6 +36,7 @@ pub mod json;
 pub mod params;
 pub mod results;
 pub mod runtime;
+pub mod search;
 pub mod study;
 pub mod tasks;
 pub mod util;

@@ -194,6 +194,38 @@ impl Space {
         Ok(digits)
     }
 
+    /// Length of every enumeration axis, in axis order (the mixed radix
+    /// of [`Space::digits`] / [`Space::index_of_digits`]).
+    pub fn axis_lens(&self) -> Vec<usize> {
+        self.axes.iter().map(|a| self.axis_len(a)).collect()
+    }
+
+    /// Mixed-radix compose — the inverse of [`Space::digits`]: per-axis
+    /// `digits` back to the global combination index. Errors on arity
+    /// mismatch or an out-of-range digit. O(#axes), independent of the
+    /// space size, so adaptive search strategies can address neighbors
+    /// of a combination without enumerating anything.
+    pub fn index_of_digits(&self, digits: &[u32]) -> Result<u64> {
+        if digits.len() != self.axes.len() {
+            return Err(Error::Params(format!(
+                "digit vector has {} entries, space has {} axes",
+                digits.len(),
+                self.axes.len()
+            )));
+        }
+        let mut idx = 0u64;
+        for (a, (axis, &d)) in self.axes.iter().zip(digits).enumerate() {
+            let n = self.axis_len(axis) as u64;
+            if d as u64 >= n {
+                return Err(Error::Params(format!(
+                    "digit {d} out of range for axis {a} (length {n})"
+                )));
+            }
+            idx = idx * n + d as u64;
+        }
+        Ok(idx)
+    }
+
     /// Expand per-axis `digits` into an owned name → value map.
     pub fn combination_from_digits(&self, digits: &[u32]) -> Combination {
         let mut combo = Combination::new();
@@ -422,6 +454,28 @@ mod tests {
         let tail: Vec<_> = space.combinations_range(4, 100).collect();
         assert_eq!(tail.len(), 2);
         assert!(space.combinations_range(9, 12).next().is_none());
+    }
+
+    #[test]
+    fn index_of_digits_inverts_digits() {
+        let space = Space::new(
+            vec![
+                p("a", &["1", "2", "3"]),
+                p("b", &["x", "y"]),
+                p("c", &["7", "8", "9", "10"]),
+                p("d", &["u", "v"]),
+            ],
+            &[vec!["b".into(), "d".into()]],
+        )
+        .unwrap();
+        assert_eq!(space.axis_lens(), vec![2, 3, 4]); // zip axis first
+        for idx in 0..space.len() {
+            let digits = space.digits(idx).unwrap();
+            assert_eq!(space.index_of_digits(&digits).unwrap(), idx);
+        }
+        // arity + range errors
+        assert!(space.index_of_digits(&[0, 0]).is_err());
+        assert!(space.index_of_digits(&[0, 3, 0]).is_err());
     }
 
     #[test]

@@ -429,21 +429,41 @@ pub fn stored_row_count(db_root: &Path) -> Option<usize> {
 /// the record). Rewrites `results.jsonl` and the columnar snapshot;
 /// returns the table.
 pub fn harvest(study: &Study) -> Result<ResultTable> {
-    let engine = study.capture_engine()?;
-    let prov = Provenance::open(&study.db_root)?;
-    let attempts = prov.read_attempts()?;
-    if attempts.is_empty() {
+    let table = harvest_rows(study, None)?;
+    if table.is_empty() {
         return Err(Error::Store(format!(
             "no attempts.jsonl under {} — run the study before harvesting",
             study.db_root.display()
         )));
     }
+    table.save(&study.db_root)?;
+    Ok(table)
+}
+
+/// The row-building half of [`harvest`]: an in-memory table of the last
+/// terminal attempt per task key, restricted to `instances` when given
+/// (`None` = every instance). Does **not** touch the persisted store —
+/// the adaptive search driver scores each round through the filtered
+/// form so metric extraction stays proportional to the round, not the
+/// whole history (the attempt log itself is still read in full; it is
+/// a cheap line scan next to regex/workdir extraction).
+pub fn harvest_rows(
+    study: &Study,
+    instances: Option<&std::collections::BTreeSet<u64>>,
+) -> Result<ResultTable> {
+    let engine = study.capture_engine()?;
+    let prov = Provenance::open(&study.db_root)?;
     // Last terminal attempt per key, in (instance, task) order.
     let mut last: BTreeMap<(u64, String), crate::workflow::AttemptRecord> =
         BTreeMap::new();
-    for rec in attempts {
+    for rec in prov.read_attempts()? {
         if rec.will_retry {
             continue;
+        }
+        if let Some(wanted) = instances {
+            if !wanted.contains(&rec.instance) {
+                continue;
+            }
         }
         last.insert((rec.instance, rec.task_id.clone()), rec);
     }
@@ -455,7 +475,6 @@ pub fn harvest(study: &Study) -> Result<ResultTable> {
             crate::study::filedb::resolve_instance_dir(&work, rec.instance);
         table.push(engine.row_for(rec, digits, &workdir));
     }
-    table.save(&study.db_root)?;
     Ok(table)
 }
 

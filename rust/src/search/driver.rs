@@ -1,0 +1,376 @@
+//! The round-based adaptive study driver: the feedback edge between
+//! the results store and the parameter engine.
+//!
+//! Each round: the strategy proposes fresh combination indices from the
+//! history, the round is pinned as a sub-study and executed through the
+//! normal scheduler ([`Study::run_indices`] — compiled materialization,
+//! timeouts/retries/failure policies, checkpointing all unchanged),
+//! metrics are harvested into the typed result store, the proposals are
+//! scored under the objective, and the enriched history feeds the next
+//! round's proposals.
+//!
+//! Durability: the [`SearchLedger`] records `proposed` before a round
+//! runs and `scored` after, while the study checkpoint tracks
+//! individual task completions inside the round. A search killed
+//! mid-round therefore resumes (`--resume`) by re-running **only the
+//! remainder** of the open round — completed keys restore from the
+//! checkpoint — and never replays a scored round.
+
+use super::history::{RoundRecord, SearchHistory, SearchLedger};
+use super::objective::Objective;
+use super::spec::SearchSpec;
+use super::strategy::{strategy_for, StrategySpec};
+use crate::exec::Executor;
+use crate::study::Study;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Resolved configuration of one `papas search` invocation: the WDL
+/// `search:` block with CLI overrides applied.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// What to optimize.
+    pub objective: Objective,
+    /// Proposal strategy.
+    pub strategy: StrategySpec,
+    /// Round cap (scored rounds, across all resumed invocations).
+    pub rounds: u32,
+    /// Maximum proposals per round.
+    pub budget: u64,
+    /// Strategy RNG seed.
+    pub seed: u64,
+    /// Continue from the persisted ledger instead of starting over.
+    pub resume: bool,
+}
+
+impl SearchConfig {
+    /// Configuration from a (possibly defaulted) WDL spec.
+    pub fn from_spec(spec: &SearchSpec) -> SearchConfig {
+        SearchConfig {
+            objective: spec.objective.clone(),
+            strategy: spec.strategy,
+            rounds: spec.rounds,
+            budget: spec.budget,
+            seed: spec.seed,
+            resume: false,
+        }
+    }
+}
+
+impl Default for SearchConfig {
+    fn default() -> SearchConfig {
+        SearchConfig::from_spec(&SearchSpec::default())
+    }
+}
+
+/// What one `run_search` invocation did.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    /// The full history (including rounds replayed from the ledger).
+    pub history: SearchHistory,
+    /// Rounds scored by this invocation.
+    pub rounds_run: u32,
+    /// Task executions this invocation performed (completed + failed —
+    /// checkpoint-restored tasks cost nothing and are not counted).
+    pub executions: u64,
+    /// True when the strategy ran out of proposals before the round
+    /// cap (neighborhood/space exhausted).
+    pub converged: bool,
+}
+
+impl SearchOutcome {
+    /// The best combination found: `(global index, score)`.
+    pub fn best(&self) -> Option<(u64, f64)> {
+        self.history.incumbent()
+    }
+}
+
+/// Run the adaptive search loop over `study` (see module docs).
+pub fn run_search(
+    study: &Study,
+    cfg: &SearchConfig,
+    executor: &dyn Executor,
+) -> Result<SearchOutcome> {
+    run_search_observed(study, cfg, executor, |_| {})
+}
+
+/// [`run_search`] with a per-round observer (the CLI's live table).
+/// The observer sees every round this invocation scored, in order.
+pub fn run_search_observed(
+    study: &Study,
+    cfg: &SearchConfig,
+    executor: &dyn Executor,
+    mut observe: impl FnMut(&RoundRecord),
+) -> Result<SearchOutcome> {
+    // Fail early on an objective the result schema cannot serve.
+    let engine = study.capture_engine()?;
+    if engine.schema().metric_index(&cfg.objective.metric).is_none() {
+        return Err(Error::Params(format!(
+            "objective metric '{}' is neither a built-in nor declared by \
+             any capture: block (metrics: {})",
+            cfg.objective.metric,
+            engine.schema().metrics.join(", ")
+        )));
+    }
+
+    let ledger = SearchLedger::open(&study.db_root);
+    let mut history = if cfg.resume {
+        // Scores in the ledger were recorded under one objective; a
+        // resume asking for another would silently reinterpret them.
+        match ledger.stored_objective()? {
+            Some(stored) if stored != cfg.objective.to_string() => {
+                return Err(Error::Params(format!(
+                    "cannot resume: the search ledger was recorded under \
+                     objective '{stored}' but this invocation asks for \
+                     '{}'; past scores are not comparable — re-run \
+                     without --resume to start a fresh search",
+                    cfg.objective
+                )));
+            }
+            Some(_) => {}
+            // No config yet (first invocation was --resume, or a ledger
+            // from before config events): record one now so the guard
+            // holds from here on.
+            None => ledger.append_config(
+                &cfg.objective,
+                &cfg.strategy.to_string(),
+                cfg.seed,
+            )?,
+        }
+        ledger.load(&cfg.objective)?
+    } else {
+        // A fresh search forgets the *search* state (rounds, incumbent)
+        // and starts proposing from scratch. The study checkpoint is
+        // deliberately left alone — it is shared with `papas run`, and
+        // deterministic tasks that already completed simply restore
+        // with their recorded metrics (use `--fresh` to force
+        // re-execution).
+        ledger.clear()?;
+        ledger.append_config(
+            &cfg.objective,
+            &cfg.strategy.to_string(),
+            cfg.seed,
+        )?;
+        SearchHistory::new()
+    };
+
+    let strategy = strategy_for(cfg.strategy, cfg.seed);
+    let mut executions = 0u64;
+    let mut rounds_run = 0u32;
+    let mut converged = false;
+
+    // An interrupted round resumes first: its proposals are already in
+    // the ledger; the checkpoint restores whatever completed.
+    if history.open_round().is_some() {
+        let rec =
+            execute_round(study, executor, &ledger, &mut history, cfg, &mut executions)?;
+        rounds_run += 1;
+        observe(&rec);
+    }
+
+    while history.rounds_completed() < cfg.rounds as usize {
+        let proposals = strategy.propose(
+            study.space(),
+            &history,
+            &cfg.objective,
+            cfg.budget,
+        );
+        if proposals.is_empty() {
+            converged = true;
+            break;
+        }
+        let round = history.begin_round(proposals.clone());
+        ledger.append_proposed(round, &proposals)?;
+        let rec =
+            execute_round(study, executor, &ledger, &mut history, cfg, &mut executions)?;
+        rounds_run += 1;
+        observe(&rec);
+    }
+
+    // Finalize the queryable result store once per invocation (rounds
+    // score incrementally; `papas query` wants the complete table).
+    if rounds_run > 0 {
+        crate::results::harvest(study)?;
+    }
+
+    Ok(SearchOutcome { history, rounds_run, executions, converged })
+}
+
+/// Execute + score the history's open round: pinned sub-study run,
+/// incremental per-proposal scoring, ledger append.
+fn execute_round(
+    study: &Study,
+    executor: &dyn Executor,
+    ledger: &SearchLedger,
+    history: &mut SearchHistory,
+    cfg: &SearchConfig,
+    executions: &mut u64,
+) -> Result<RoundRecord> {
+    let proposals = history
+        .open_round()
+        .expect("execute_round requires an open round")
+        .proposals
+        .clone();
+    let report = study.run_indices(&proposals, executor)?;
+    *executions += (report.completed + report.failed) as u64;
+    if report.halted {
+        return Err(Error::Exec(
+            "search interrupted: fail-fast halted the round; re-run \
+             `papas search --resume` to continue the remainder"
+                .into(),
+        ));
+    }
+    let scores = score_proposals(study, &proposals, &cfg.objective)?;
+    let rec = history.complete_round(scores, &cfg.objective).clone();
+    ledger.append_scored(&rec)?;
+    Ok(rec)
+}
+
+/// Score one round's proposals — the filtered form of the harvest:
+/// only the proposals' instances are extracted (last terminal attempt
+/// per key, like the checkpoint), so a long search never re-extracts
+/// past rounds just to score new ones. Works whether or not the study
+/// declares a `capture:` block (the built-in metrics always ride
+/// along).
+fn score_proposals(
+    study: &Study,
+    proposals: &[u64],
+    objective: &Objective,
+) -> Result<Vec<Option<f64>>> {
+    let wanted: std::collections::BTreeSet<u64> =
+        proposals.iter().copied().collect();
+    let table = crate::results::harvest_rows(study, Some(&wanted))?;
+    let scored: BTreeMap<u64, f64> =
+        objective.score_table(&table)?.into_iter().collect();
+    Ok(proposals.iter().map(|i| scored.get(i).copied()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{Script, ScriptedExecutor};
+    use std::sync::Arc;
+
+    /// A 16-value single-axis study whose synthetic score landscape is
+    /// `|v_index − 11|` — minimized (0) at combination index 11.
+    fn landscape_study(tag: &str) -> (Study, Arc<Script>) {
+        let dir = std::env::temp_dir().join("papas_search_driver").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<String> = (0..16).map(|i| i.to_string()).collect();
+        let yaml = format!(
+            "job:\n  command: work ${{v}}\n  v: [{}]\n  capture:\n    \
+             score: stdout score=([-+0-9.eE]+)\n  search:\n    objective: \
+             minimize score\n    strategy: halving 2\n    rounds: 8\n    \
+             budget: 4\n    seed: 5\n",
+            vals.join(", ")
+        );
+        let path = dir.join("study.yaml");
+        std::fs::write(&path, yaml).unwrap();
+        let study = Study::from_file(&path)
+            .unwrap()
+            .with_db_root(dir.join(".papas"));
+        let mut script = Script::new();
+        for idx in 0..16i64 {
+            script = script
+                .stdout_on(format!("job#{idx}"), format!("score={}", (idx - 11).abs()));
+        }
+        (study, Arc::new(script))
+    }
+
+    #[test]
+    fn halving_finds_the_optimum_on_a_synthetic_landscape() {
+        let (study, script) = landscape_study("optimum");
+        let cfg = SearchConfig::from_spec(study.search_spec().unwrap());
+        let exec = ScriptedExecutor::new(script.clone(), 2);
+        let mut seen_rounds = 0;
+        let outcome =
+            run_search_observed(&study, &cfg, &exec, |_| seen_rounds += 1).unwrap();
+        assert_eq!(outcome.best(), Some((11, 0.0)));
+        assert_eq!(outcome.rounds_run, seen_rounds);
+        assert_eq!(outcome.executions, script.total_executions() as u64);
+        // fresh-only proposals: nothing ever executes twice
+        assert!(script.total_executions() <= 16);
+        // the ledger landed under the study db
+        assert!(study.db_root.join(super::super::SEARCH_FILE).exists());
+    }
+
+    #[test]
+    fn resume_extends_without_replaying_scored_rounds() {
+        let (study, script) = landscape_study("resume");
+        let mut cfg = SearchConfig::from_spec(study.search_spec().unwrap());
+        cfg.rounds = 2;
+        let exec = ScriptedExecutor::new(script.clone(), 2);
+        let first = run_search(&study, &cfg, &exec).unwrap();
+        assert_eq!(first.rounds_run, 2);
+        let ran_before: std::collections::BTreeSet<String> =
+            script.journal().into_iter().collect();
+
+        // resume with a higher round cap: only new proposals execute
+        let script2 = {
+            let (_, s) = landscape_study("resume_replay");
+            s
+        };
+        let exec2 = ScriptedExecutor::new(script2.clone(), 2);
+        cfg.rounds = 4;
+        cfg.resume = true;
+        let second = run_search(&study, &cfg, &exec2).unwrap();
+        assert_eq!(second.history.rounds_completed(), 4);
+        assert_eq!(second.rounds_run, 2);
+        for key in script2.journal() {
+            assert!(
+                !ran_before.contains(&key),
+                "{key} re-executed on resume"
+            );
+        }
+    }
+
+    #[test]
+    fn fresh_search_restarts_rounds_but_restores_completed_tasks() {
+        let (study, script) = landscape_study("fresh");
+        let mut cfg = SearchConfig::from_spec(study.search_spec().unwrap());
+        cfg.rounds = 1;
+        let exec = ScriptedExecutor::new(script.clone(), 2);
+        let first = run_search(&study, &cfg, &exec).unwrap();
+        let n1 = script.total_executions();
+        assert!(n1 > 0);
+        assert_eq!(first.executions, n1 as u64);
+        // a non-resume rerun forgets the rounds (same seeded round 0)
+        // but leaves the shared study checkpoint alone: nothing
+        // re-executes, yet the round scores from the recorded attempts
+        let second = run_search(&study, &cfg, &exec).unwrap();
+        assert_eq!(second.rounds_run, 1);
+        assert_eq!(second.executions, 0);
+        assert_eq!(script.total_executions(), n1);
+        assert_eq!(second.best(), first.best());
+    }
+
+    #[test]
+    fn resume_with_a_different_objective_is_rejected() {
+        let (study, script) = landscape_study("objswitch");
+        let mut cfg = SearchConfig::from_spec(study.search_spec().unwrap());
+        cfg.rounds = 1;
+        let exec = ScriptedExecutor::new(script.clone(), 2);
+        run_search(&study, &cfg, &exec).unwrap();
+        // flipping the objective under --resume would reinterpret the
+        // recorded scores: rejected up front
+        cfg.resume = true;
+        cfg.objective = Objective::parse("maximize score").unwrap();
+        let err = run_search(&study, &cfg, &exec).unwrap_err();
+        assert!(err.to_string().contains("not comparable"), "{err}");
+        // the matching objective resumes fine
+        cfg.objective = Objective::parse("minimize score").unwrap();
+        cfg.rounds = 2;
+        run_search(&study, &cfg, &exec).unwrap();
+    }
+
+    #[test]
+    fn unknown_objective_metric_fails_before_running() {
+        let (study, script) = landscape_study("badmetric");
+        let mut cfg = SearchConfig::from_spec(study.search_spec().unwrap());
+        cfg.objective = Objective::parse("minimize ghost").unwrap();
+        let exec = ScriptedExecutor::new(script.clone(), 1);
+        assert!(run_search(&study, &cfg, &exec).is_err());
+        assert_eq!(script.total_executions(), 0);
+    }
+}

@@ -1,0 +1,443 @@
+//! Search history and its durable ledger.
+//!
+//! [`SearchHistory`] is the driver's in-memory state: every round's
+//! proposals, the scores harvested for them, and the incumbent best.
+//! Strategies read it to dedup proposals and rank survivors.
+//!
+//! [`SearchLedger`] persists the same state as an append-only
+//! `search.jsonl` under the study database — two event kinds per round:
+//!
+//! * `proposed` — written **before** the round executes, so a killed
+//!   search knows which round was in flight;
+//! * `scored` — written after harvest + scoring, carrying the per-index
+//!   scores and the incumbent at that point.
+//!
+//! `papas search --resume` replays the ledger: completed rounds are
+//! never re-proposed, and a trailing `proposed` without its `scored`
+//! re-runs *only the remainder* of that round — the underlying study
+//! [`crate::study::Checkpoint`] restores every key the interrupted run
+//! already completed, the same merge semantics sharded runs use.
+//! Torn trailing lines (a crash mid-write) are skipped on read, like
+//! `attempts.jsonl` and `results.jsonl`.
+
+use super::objective::Objective;
+use crate::json::{self, Json};
+use crate::util::error::Result;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Ledger file name under the study database.
+pub const SEARCH_FILE: &str = "search.jsonl";
+
+/// One round of the search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    /// Round number (0-based).
+    pub round: u32,
+    /// Combination indices proposed for this round, proposal order.
+    pub proposals: Vec<u64>,
+    /// Harvested scores, parallel to `proposals` (`None` = the
+    /// combination could not score: failed task, missing metric).
+    /// `None` for the whole field while the round is still executing.
+    pub scores: Option<Vec<Option<f64>>>,
+    /// The incumbent `(index, score)` after this round was scored.
+    pub incumbent: Option<(u64, f64)>,
+}
+
+impl RoundRecord {
+    /// True once the round has been scored.
+    pub fn is_scored(&self) -> bool {
+        self.scores.is_some()
+    }
+}
+
+/// Everything the search has learned so far.
+#[derive(Debug, Clone, Default)]
+pub struct SearchHistory {
+    rounds: Vec<RoundRecord>,
+    /// Best-known score per proposed index (`None` = ran, unscoreable).
+    scores: BTreeMap<u64, Option<f64>>,
+    incumbent: Option<(u64, f64)>,
+}
+
+impl SearchHistory {
+    /// Empty history.
+    pub fn new() -> SearchHistory {
+        SearchHistory::default()
+    }
+
+    /// Every round so far, oldest first.
+    pub fn rounds(&self) -> &[RoundRecord] {
+        &self.rounds
+    }
+
+    /// Number of rounds that have been scored to completion.
+    pub fn rounds_completed(&self) -> usize {
+        self.rounds.iter().filter(|r| r.is_scored()).count()
+    }
+
+    /// The trailing proposed-but-unscored round, if a search was
+    /// interrupted mid-round.
+    pub fn open_round(&self) -> Option<&RoundRecord> {
+        self.rounds.last().filter(|r| !r.is_scored())
+    }
+
+    /// True when `index` was proposed in any round (scored or not).
+    pub fn contains(&self, index: u64) -> bool {
+        self.scores.contains_key(&index)
+    }
+
+    /// Number of distinct indices ever proposed.
+    pub fn n_proposed(&self) -> usize {
+        self.scores.len()
+    }
+
+    /// The incumbent best `(index, score)`.
+    pub fn incumbent(&self) -> Option<(u64, f64)> {
+        self.incumbent
+    }
+
+    /// Every scored index ranked best-first under `objective`. Ties
+    /// break toward the lower index (deterministic).
+    pub fn ranked(&self, objective: &Objective) -> Vec<(u64, f64)> {
+        let mut out: Vec<(u64, f64)> = self
+            .scores
+            .iter()
+            .filter_map(|(&i, &s)| s.map(|s| (i, s)))
+            .collect();
+        out.sort_by(|a, b| {
+            if objective.better(a.1, b.1) {
+                std::cmp::Ordering::Less
+            } else if objective.better(b.1, a.1) {
+                std::cmp::Ordering::Greater
+            } else {
+                a.0.cmp(&b.0)
+            }
+        });
+        out
+    }
+
+    /// Open a new round with `proposals`; returns its round number.
+    /// Proposals register immediately (scoreless), so strategies never
+    /// re-propose an in-flight index.
+    pub fn begin_round(&mut self, proposals: Vec<u64>) -> u32 {
+        let round = self.rounds.len() as u32;
+        for &i in &proposals {
+            self.scores.entry(i).or_insert(None);
+        }
+        self.rounds.push(RoundRecord {
+            round,
+            proposals,
+            scores: None,
+            incumbent: None,
+        });
+        round
+    }
+
+    /// Score the open round: `scores` is parallel to its proposals.
+    /// Updates the incumbent (strict improvement only — ties keep the
+    /// earlier incumbent) and returns the completed record.
+    pub fn complete_round(
+        &mut self,
+        scores: Vec<Option<f64>>,
+        objective: &Objective,
+    ) -> &RoundRecord {
+        let last = self.rounds.len().checked_sub(1)
+            .expect("complete_round requires an open round");
+        debug_assert!(self.rounds[last].scores.is_none(), "round already scored");
+        debug_assert_eq!(self.rounds[last].proposals.len(), scores.len());
+        let proposals = self.rounds[last].proposals.clone();
+        for (&i, s) in proposals.iter().zip(&scores) {
+            if let Some(s) = s {
+                self.scores.insert(i, Some(*s));
+                match self.incumbent {
+                    Some((_, best)) if !objective.better(*s, best) => {}
+                    _ => self.incumbent = Some((i, *s)),
+                }
+            }
+        }
+        self.rounds[last].scores = Some(scores);
+        self.rounds[last].incumbent = self.incumbent;
+        &self.rounds[last]
+    }
+}
+
+/// The append-only `search.jsonl` ledger of one study's search.
+pub struct SearchLedger {
+    path: PathBuf,
+}
+
+impl SearchLedger {
+    /// Ledger under the study database root.
+    pub fn open(db_root: impl AsRef<Path>) -> SearchLedger {
+        SearchLedger { path: db_root.as_ref().join(SEARCH_FILE) }
+    }
+
+    /// The ledger file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// True when a ledger exists on disk.
+    pub fn exists(&self) -> bool {
+        self.path.exists()
+    }
+
+    /// Delete the ledger (a fresh search starts over).
+    pub fn clear(&self) -> Result<()> {
+        if self.path.exists() {
+            std::fs::remove_file(&self.path)?;
+        }
+        Ok(())
+    }
+
+    fn append(&self, j: &Json) -> Result<()> {
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", json::to_string(j))?;
+        Ok(())
+    }
+
+    /// Record the search configuration at the head of a fresh ledger.
+    /// A later `--resume` checks the stored objective: old scores
+    /// reinterpreted under a different objective would silently corrupt
+    /// the ranking, so a mismatch must be detectable.
+    pub fn append_config(
+        &self,
+        objective: &Objective,
+        strategy: &str,
+        seed: u64,
+    ) -> Result<()> {
+        self.append(&Json::obj([
+            ("event".to_string(), Json::from("config")),
+            (
+                "objective".to_string(),
+                Json::from(objective.to_string().as_str()),
+            ),
+            ("strategy".to_string(), Json::from(strategy)),
+            ("seed".to_string(), Json::from(seed as i64)),
+        ]))
+    }
+
+    /// The objective string recorded by the ledger's config event
+    /// (`None` when the ledger is absent or pre-dates config events).
+    pub fn stored_objective(&self) -> Result<Option<String>> {
+        if !self.path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&self.path)?;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let Ok(j) = json::parse(line) else { continue };
+            if j.get("event").and_then(Json::as_str) == Some("config") {
+                return Ok(j
+                    .get("objective")
+                    .and_then(Json::as_str)
+                    .map(str::to_string));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Record a round's proposals *before* executing them.
+    pub fn append_proposed(&self, round: u32, proposals: &[u64]) -> Result<()> {
+        self.append(&Json::obj([
+            ("event".to_string(), Json::from("proposed")),
+            ("round".to_string(), Json::from(round as i64)),
+            (
+                "proposals".to_string(),
+                Json::Arr(proposals.iter().map(|&i| Json::from(i as i64)).collect()),
+            ),
+        ]))
+    }
+
+    /// Record a round's harvested scores and the incumbent after it.
+    pub fn append_scored(&self, rec: &RoundRecord) -> Result<()> {
+        let scores = rec.scores.as_deref().unwrap_or(&[]);
+        self.append(&Json::obj([
+            ("event".to_string(), Json::from("scored")),
+            ("round".to_string(), Json::from(rec.round as i64)),
+            (
+                "scores".to_string(),
+                Json::Arr(
+                    scores
+                        .iter()
+                        .map(|s| match s {
+                            Some(x) => Json::Num(*x),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "incumbent".to_string(),
+                match rec.incumbent {
+                    Some((i, s)) => Json::obj([
+                        ("index".to_string(), Json::from(i as i64)),
+                        ("score".to_string(), Json::Num(s)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ]))
+    }
+
+    /// Replay the ledger into a [`SearchHistory`]. Torn (non-JSON)
+    /// trailing lines are skipped; a `scored` event without a matching
+    /// open round is ignored rather than fatal — the ledger must stay
+    /// readable after any crash.
+    pub fn load(&self, objective: &Objective) -> Result<SearchHistory> {
+        let mut history = SearchHistory::new();
+        if !self.path.exists() {
+            return Ok(history);
+        }
+        let text = std::fs::read_to_string(&self.path)?;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let Ok(j) = json::parse(line) else { continue };
+            match j.get("event").and_then(Json::as_str) {
+                Some("proposed") => {
+                    let proposals: Vec<u64> = j
+                        .get("proposals")
+                        .and_then(Json::as_arr)
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|v| v.as_i64().map(|x| x as u64))
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    history.begin_round(proposals);
+                }
+                Some("scored") => {
+                    let Some(open) = history.open_round() else { continue };
+                    let n = open.proposals.len();
+                    let mut scores: Vec<Option<f64>> = j
+                        .get("scores")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().map(Json::as_f64).collect())
+                        .unwrap_or_default();
+                    scores.resize(n, None);
+                    history.complete_round(scores, objective);
+                }
+                _ => {}
+            }
+        }
+        Ok(history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimize() -> Objective {
+        Objective::parse("minimize m").unwrap()
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("papas_search_hist").join(tag);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn rounds_scores_and_incumbent_evolve() {
+        let o = minimize();
+        let mut h = SearchHistory::new();
+        assert_eq!(h.rounds_completed(), 0);
+        let r = h.begin_round(vec![3, 7, 9]);
+        assert_eq!(r, 0);
+        assert!(h.contains(7) && !h.contains(8));
+        assert!(h.open_round().is_some());
+        h.complete_round(vec![Some(5.0), None, Some(2.0)], &o);
+        assert!(h.open_round().is_none());
+        assert_eq!(h.rounds_completed(), 1);
+        assert_eq!(h.incumbent(), Some((9, 2.0)));
+        // second round: a tie does not displace the incumbent
+        h.begin_round(vec![1]);
+        h.complete_round(vec![Some(2.0)], &o);
+        assert_eq!(h.incumbent(), Some((9, 2.0)));
+        // strict improvement does
+        h.begin_round(vec![2]);
+        h.complete_round(vec![Some(1.0)], &o);
+        assert_eq!(h.incumbent(), Some((2, 1.0)));
+        assert_eq!(h.n_proposed(), 5);
+        let ranked = h.ranked(&o);
+        assert_eq!(ranked[0], (2, 1.0));
+        // tie between 9 and 1 breaks toward the lower index
+        assert_eq!(ranked[1], (1, 2.0));
+        assert_eq!(ranked[2], (9, 2.0));
+        assert_eq!(ranked.len(), 4); // the unscoreable 7 is absent
+    }
+
+    #[test]
+    fn ledger_round_trips_through_load() {
+        let o = minimize();
+        let dir = tmp("roundtrip");
+        let ledger = SearchLedger::open(&dir);
+        assert!(!ledger.exists());
+        let mut h = SearchHistory::new();
+        let r0 = h.begin_round(vec![4, 8]);
+        ledger.append_proposed(r0, &[4, 8]).unwrap();
+        let rec = h.complete_round(vec![Some(1.5), None], &o);
+        ledger.append_scored(rec).unwrap();
+        let r1 = h.begin_round(vec![2]);
+        ledger.append_proposed(r1, &[2]).unwrap();
+        // round 1 interrupted: no scored event
+        let back = ledger.load(&o).unwrap();
+        assert_eq!(back.rounds_completed(), 1);
+        assert_eq!(back.incumbent(), Some((4, 1.5)));
+        let open = back.open_round().unwrap();
+        assert_eq!(open.round, 1);
+        assert_eq!(open.proposals, vec![2]);
+        assert!(back.contains(2));
+    }
+
+    #[test]
+    fn config_event_round_trips_and_is_inert_to_replay() {
+        let dir = tmp("config");
+        let ledger = SearchLedger::open(&dir);
+        assert_eq!(ledger.stored_objective().unwrap(), None);
+        let o = minimize();
+        ledger.append_config(&o, "halving 2", 7).unwrap();
+        assert_eq!(
+            ledger.stored_objective().unwrap(),
+            Some("minimize m".into())
+        );
+        // config events do not disturb round replay
+        ledger.append_proposed(0, &[1]).unwrap();
+        assert_eq!(ledger.load(&o).unwrap().rounds().len(), 1);
+    }
+
+    #[test]
+    fn torn_trailing_line_is_skipped() {
+        let o = minimize();
+        let dir = tmp("torn");
+        let ledger = SearchLedger::open(&dir);
+        ledger.append_proposed(0, &[1, 2]).unwrap();
+        // simulate a crash mid-append
+        let mut text = std::fs::read_to_string(ledger.path()).unwrap();
+        text.push_str("{\"event\":\"sco");
+        std::fs::write(ledger.path(), text).unwrap();
+        let back = ledger.load(&o).unwrap();
+        assert_eq!(back.rounds().len(), 1);
+        assert!(back.open_round().is_some());
+    }
+
+    #[test]
+    fn clear_removes_the_ledger() {
+        let dir = tmp("clear");
+        let ledger = SearchLedger::open(&dir);
+        ledger.append_proposed(0, &[1]).unwrap();
+        assert!(ledger.exists());
+        ledger.clear().unwrap();
+        assert!(!ledger.exists());
+        ledger.clear().unwrap(); // idempotent
+        assert!(ledger.load(&minimize()).unwrap().rounds().is_empty());
+    }
+}

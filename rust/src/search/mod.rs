@@ -1,0 +1,39 @@
+//! The adaptive search engine: closed-loop parameter studies driven by
+//! captured metrics.
+//!
+//! PaPaS §5 stops at *static* traversal of the parameter space —
+//! `sampling` picks a fixed subset up front, the study runs, done. This
+//! subsystem adds the feedback edge that OACIS-style frameworks build
+//! around a results database: previously captured results decide which
+//! combinations run next, turning a one-shot sweep runner into a
+//! closed-loop optimizer/explorer.
+//!
+//! * [`objective`] — `minimize`/`maximize` one metric of the PR 4
+//!   result store (built-in or `capture:`-declared), scored with
+//!   last-terminal-attempt semantics;
+//! * [`strategy`] — the [`SearchStrategy`] trait and the built-in
+//!   `random` / `halving` / `refine` strategies, all proposing
+//!   mixed-radix combination indices in O(proposals);
+//! * [`driver`] — the round loop: propose → pin the round as a
+//!   sub-study ([`crate::study::Study::run_indices`]) → execute through
+//!   the normal scheduler → harvest → score → repeat;
+//! * [`history`] — the in-memory [`SearchHistory`] plus the append-only
+//!   `search.jsonl` [`SearchLedger`] behind `papas search --resume`;
+//! * [`spec`] — the WDL `search:` block (ast → validate → driver).
+//!
+//! The whole loop is hermetically testable: a
+//! [`crate::exec::ScriptedExecutor`] with `stdout_on` scripts a
+//! deterministic synthetic metric landscape, so every converge/resume
+//! path runs with zero subprocesses.
+
+pub mod driver;
+pub mod history;
+pub mod objective;
+pub mod spec;
+pub mod strategy;
+
+pub use driver::{run_search, run_search_observed, SearchConfig, SearchOutcome};
+pub use history::{RoundRecord, SearchHistory, SearchLedger, SEARCH_FILE};
+pub use objective::{Direction, Objective};
+pub use spec::SearchSpec;
+pub use strategy::{strategy_for, SearchStrategy, StrategySpec};

@@ -1,0 +1,227 @@
+//! The search objective: which captured metric to optimize, and in
+//! which direction.
+//!
+//! An objective names one metric column of the study's result schema —
+//! a built-in (`wall_time`, `attempts`, `exit_code`) or any metric a
+//! `capture:` block declares — and scores combinations from the PR 4
+//! result store with **last-terminal-attempt semantics**: the store
+//! keeps exactly one row per `task#instance` key (the final attempt;
+//! resumed re-runs supersede), so scoring never sees stale attempts.
+//!
+//! Rows that cannot score are excluded rather than guessed at: a failed
+//! task (`exit_class != ok`), a missing metric cell, a non-numeric
+//! capture, or a non-finite number all yield *no* score for that row —
+//! such combinations never become the incumbent and never survive a
+//! ranking cut.
+
+use crate::results::{MetricValue, ResultTable};
+use crate::util::error::{Error, Result};
+
+/// Optimization direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Smaller scores are better (e.g. `wall_time`).
+    Minimize,
+    /// Larger scores are better (e.g. a captured `gflops`).
+    Maximize,
+}
+
+impl std::fmt::Display for Direction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Direction::Minimize => "minimize",
+            Direction::Maximize => "maximize",
+        })
+    }
+}
+
+/// The objective of an adaptive search: a direction over one metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Objective {
+    /// Which way is better.
+    pub direction: Direction,
+    /// The metric column scored (built-in or declared `capture:` name).
+    pub metric: String,
+}
+
+impl Default for Objective {
+    /// `minimize wall_time` — always available: the built-in is
+    /// captured for every task with no `capture:` block required.
+    fn default() -> Objective {
+        Objective {
+            direction: Direction::Minimize,
+            metric: "wall_time".into(),
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.direction, self.metric)
+    }
+}
+
+impl Objective {
+    /// Parse the WDL/CLI form: `minimize METRIC` / `maximize METRIC`
+    /// (`min` / `max` accepted as abbreviations).
+    pub fn parse(text: &str) -> Result<Objective> {
+        let usage = "objective expects 'minimize METRIC' or 'maximize METRIC'";
+        let toks: Vec<&str> = text.split_whitespace().collect();
+        match toks.as_slice() {
+            [dir, metric] => {
+                let direction = match *dir {
+                    "minimize" | "min" => Direction::Minimize,
+                    "maximize" | "max" => Direction::Maximize,
+                    other => {
+                        return Err(Error::Params(format!(
+                            "bad objective direction '{other}'; {usage}"
+                        )))
+                    }
+                };
+                Ok(Objective { direction, metric: metric.to_string() })
+            }
+            _ => Err(Error::Params(format!("bad objective '{text}'; {usage}"))),
+        }
+    }
+
+    /// True when score `a` beats score `b` under this objective.
+    pub fn better(&self, a: f64, b: f64) -> bool {
+        match self.direction {
+            Direction::Minimize => a < b,
+            Direction::Maximize => a > b,
+        }
+    }
+
+    /// Score every instance of a result table: the first task (in the
+    /// table's `(instance, task)` row order) whose final attempt is
+    /// `ok` and whose metric cell is a finite number. Returns
+    /// `(instance, score)` pairs; unscoreable instances are absent.
+    pub fn score_table(&self, table: &ResultTable) -> Result<Vec<(u64, f64)>> {
+        let schema = table.schema();
+        let m = schema.metric_index(&self.metric).ok_or_else(|| {
+            Error::Store(format!(
+                "objective metric '{}' is not in the result schema \
+                 (metrics: {})",
+                self.metric,
+                schema.metrics.join(", ")
+            ))
+        })?;
+        let class = schema
+            .metric_index("exit_class")
+            .expect("exit_class is a built-in column");
+        let mut out: Vec<(u64, f64)> = Vec::new();
+        for i in 0..table.len() {
+            if table.value(class, i) != &MetricValue::Str("ok".into()) {
+                continue;
+            }
+            let Some(score) = table.value(m, i).as_f64() else { continue };
+            if !score.is_finite() {
+                continue;
+            }
+            let instance = table.instance(i);
+            // rows are (instance, task)-ordered: keep the first task's
+            // score per instance
+            if out.last().map(|(last, _)| *last) != Some(instance) {
+                out.push((instance, score));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::results::{Row, Schema};
+
+    fn schema() -> Schema {
+        Schema {
+            params: vec!["t:v".into()],
+            axis_of: vec![0],
+            n_axes: 1,
+            metrics: vec![
+                "wall_time".into(),
+                "attempts".into(),
+                "exit_code".into(),
+                "exit_class".into(),
+                "score".into(),
+            ],
+        }
+    }
+
+    fn row(instance: u64, task: &str, class: &str, score: MetricValue) -> Row {
+        Row {
+            instance,
+            task_id: task.into(),
+            digits: vec![0],
+            values: vec![
+                MetricValue::Num(0.5),
+                MetricValue::Num(1.0),
+                MetricValue::Num(0.0),
+                MetricValue::Str(class.into()),
+                score,
+            ],
+        }
+    }
+
+    #[test]
+    fn parse_forms() {
+        let o = Objective::parse("minimize wall_time").unwrap();
+        assert_eq!(o.direction, Direction::Minimize);
+        assert_eq!(o.metric, "wall_time");
+        let o = Objective::parse("max gflops").unwrap();
+        assert_eq!(o.direction, Direction::Maximize);
+        assert!(Objective::parse("optimize x").is_err());
+        assert!(Objective::parse("minimize").is_err());
+        assert!(Objective::parse("minimize a b").is_err());
+        assert_eq!(format!("{}", Objective::default()), "minimize wall_time");
+    }
+
+    #[test]
+    fn better_respects_direction() {
+        let min = Objective::parse("minimize m").unwrap();
+        let max = Objective::parse("maximize m").unwrap();
+        assert!(min.better(1.0, 2.0));
+        assert!(!min.better(2.0, 1.0));
+        assert!(max.better(2.0, 1.0));
+        assert!(!min.better(1.0, 1.0), "ties do not beat the incumbent");
+    }
+
+    #[test]
+    fn score_table_skips_failed_missing_and_nonfinite() {
+        let o = Objective::parse("minimize score").unwrap();
+        let table = ResultTable::from_rows(
+            schema(),
+            vec![
+                row(0, "t", "ok", MetricValue::Num(3.0)),
+                row(1, "t", "nonzero", MetricValue::Num(1.0)), // failed
+                row(2, "t", "ok", MetricValue::Missing),       // no metric
+                row(3, "t", "ok", MetricValue::Str("n/a".into())), // non-num
+                row(4, "t", "ok", MetricValue::Num(f64::NAN)), // non-finite
+                row(5, "t", "ok", MetricValue::Num(2.0)),
+            ],
+        );
+        assert_eq!(o.score_table(&table).unwrap(), vec![(0, 3.0), (5, 2.0)]);
+    }
+
+    #[test]
+    fn first_task_in_row_order_scores_the_instance() {
+        let o = Objective::parse("minimize score").unwrap();
+        let table = ResultTable::from_rows(
+            schema(),
+            vec![
+                row(0, "b", "ok", MetricValue::Num(9.0)),
+                row(0, "a", "ok", MetricValue::Num(4.0)),
+            ],
+        );
+        // rows order by (instance, task id): task 'a' wins
+        assert_eq!(o.score_table(&table).unwrap(), vec![(0, 4.0)]);
+    }
+
+    #[test]
+    fn unknown_metric_is_an_error() {
+        let o = Objective::parse("minimize ghost").unwrap();
+        let table = ResultTable::from_rows(schema(), vec![]);
+        assert!(o.score_table(&table).is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! The WDL `search:` block — the declarative surface of the adaptive
+//! search engine.
+//!
+//! ```yaml
+//! matmulSearch:
+//!   command: matmul ${args:size} out_${args:size}.txt
+//!   capture:
+//!     score: stdout score=([-+0-9.eE]+)
+//!   search:
+//!     objective: minimize score    # or maximize M; default minimize wall_time
+//!     strategy: halving 2          # random | halving [eta N] | refine
+//!     rounds: 6                    # round cap (default 4)
+//!     budget: 8                    # max proposals per round (default 8)
+//!     seed: 7                      # strategy RNG seed (default 0)
+//! ```
+//!
+//! Like `sampling` and `on_failure`, `search` is study-level: the first
+//! task declaring it wins (validate warns on conflicting declarations).
+//! The block flows ast → validate (objective metric must exist, see
+//! `wdl::validate`) → the [`super::driver`] via
+//! [`crate::study::Study::search_spec`].
+
+use super::objective::Objective;
+use super::strategy::StrategySpec;
+use crate::util::error::{Error, Result};
+
+/// A parsed `search:` block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpec {
+    /// What to optimize (default `minimize wall_time`).
+    pub objective: Objective,
+    /// How to propose rounds (default `halving 2`).
+    pub strategy: StrategySpec,
+    /// Maximum number of scored rounds (default 4).
+    pub rounds: u32,
+    /// Maximum proposals (task executions) per round (default 8).
+    pub budget: u64,
+    /// Seed for the strategy's RNG (default 0).
+    pub seed: u64,
+}
+
+impl Default for SearchSpec {
+    fn default() -> SearchSpec {
+        SearchSpec {
+            objective: Objective::default(),
+            strategy: StrategySpec::default(),
+            rounds: 4,
+            budget: 8,
+            seed: 0,
+        }
+    }
+}
+
+impl SearchSpec {
+    /// Apply one `key: value` entry of a `search:` block. Unknown keys
+    /// are errors (typos must not silently fall through — inside the
+    /// block there is no user-parameter fallback).
+    pub fn set(&mut self, task: &str, key: &str, raw: &str) -> Result<()> {
+        let num = |what: &str| -> Result<u64> {
+            raw.trim().parse().map_err(|_| {
+                Error::Wdl(format!(
+                    "task '{task}': search {what} must be a non-negative \
+                     integer, got '{raw}'"
+                ))
+            })
+        };
+        match key {
+            "objective" => {
+                self.objective = Objective::parse(raw)
+                    .map_err(|e| Error::Wdl(format!("task '{task}': {e}")))?;
+            }
+            "strategy" => {
+                self.strategy = StrategySpec::parse(raw)
+                    .map_err(|e| Error::Wdl(format!("task '{task}': {e}")))?;
+            }
+            "rounds" => {
+                let n = num("rounds")?;
+                if n == 0 || n > u32::MAX as u64 {
+                    return Err(Error::Wdl(format!(
+                        "task '{task}': search rounds must be positive"
+                    )));
+                }
+                self.rounds = n as u32;
+            }
+            "budget" => {
+                let n = num("budget")?;
+                if n == 0 {
+                    return Err(Error::Wdl(format!(
+                        "task '{task}': search budget must be positive"
+                    )));
+                }
+                self.budget = n;
+            }
+            "seed" => {
+                self.seed = num("seed")?;
+            }
+            other => {
+                return Err(Error::Wdl(format!(
+                    "task '{task}': unknown search key '{other}' (expected \
+                     objective, strategy, rounds, budget, or seed)"
+                )))
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::Direction;
+
+    #[test]
+    fn defaults_are_closed_loop_safe() {
+        let s = SearchSpec::default();
+        assert_eq!(s.objective.metric, "wall_time");
+        assert_eq!(s.objective.direction, Direction::Minimize);
+        assert_eq!(s.strategy, StrategySpec::Halving { eta: 2 });
+        assert_eq!((s.rounds, s.budget, s.seed), (4, 8, 0));
+    }
+
+    #[test]
+    fn set_applies_every_key() {
+        let mut s = SearchSpec::default();
+        s.set("t", "objective", "maximize gflops").unwrap();
+        s.set("t", "strategy", "refine").unwrap();
+        s.set("t", "rounds", "9").unwrap();
+        s.set("t", "budget", "32").unwrap();
+        s.set("t", "seed", "1234").unwrap();
+        assert_eq!(s.objective.direction, Direction::Maximize);
+        assert_eq!(s.objective.metric, "gflops");
+        assert_eq!(s.strategy, StrategySpec::Refine);
+        assert_eq!((s.rounds, s.budget, s.seed), (9, 32, 1234));
+    }
+
+    #[test]
+    fn set_rejects_bad_values_and_unknown_keys() {
+        let mut s = SearchSpec::default();
+        assert!(s.set("t", "objective", "optimize x").is_err());
+        assert!(s.set("t", "strategy", "anneal").is_err());
+        assert!(s.set("t", "rounds", "0").is_err());
+        assert!(s.set("t", "rounds", "many").is_err());
+        assert!(s.set("t", "budget", "0").is_err());
+        assert!(s.set("t", "seed", "-1").is_err());
+        let e = s.set("t", "bugdet", "8").unwrap_err();
+        assert!(e.to_string().contains("unknown search key"), "{e}");
+    }
+}

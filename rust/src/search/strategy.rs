@@ -1,0 +1,590 @@
+//! Proposal strategies: which combinations the next round should run.
+//!
+//! A [`SearchStrategy`] reads the [`SearchHistory`] and proposes up to
+//! `budget` **fresh** (never-before-proposed) combination indices for
+//! the next round. Everything operates on mixed-radix indices
+//! ([`Space::digits`] / [`Space::index_of_digits`]), so proposing from
+//! an astronomically large space costs O(proposals), never O(N_W).
+//!
+//! Three built-in strategies:
+//!
+//! * `random` — seeded uniform exploration, deduplicated against the
+//!   history (the adaptive counterpart of `sampling: random`);
+//! * `halving` — successive halving: round 0 runs a wide seeded cohort;
+//!   each later round keeps the top `1/η` of the ranked history as
+//!   survivors and spends the whole budget on their unexplored
+//!   neighborhoods (rank order, incumbent first), topping up with
+//!   seeded random exploration — so the budget concentrates around the
+//!   best combinations as candidates halve away;
+//! * `refine` — grid refinement: zoom the axes around the incumbent by
+//!   halving a per-axis digit window each round, re-discretize the
+//!   window to a coarse `{lo, mid, hi}` sub-grid, and propose its
+//!   unexplored cells.
+//!
+//! An empty proposal list means the strategy is done (neighborhood or
+//! space exhausted) and the driver stops before its round cap.
+
+use super::history::SearchHistory;
+use super::objective::Objective;
+use crate::params::Space;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// A parsed strategy declaration (WDL `strategy:` value / CLI
+/// `--strategy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategySpec {
+    /// Seeded uniform exploration.
+    Random,
+    /// Successive halving with reduction factor `eta`.
+    Halving {
+        /// Survivor reduction factor per round (≥ 2).
+        eta: u32,
+    },
+    /// Grid refinement around the incumbent.
+    Refine,
+}
+
+impl Default for StrategySpec {
+    /// `halving 2` — the closed-loop default.
+    fn default() -> StrategySpec {
+        StrategySpec::Halving { eta: 2 }
+    }
+}
+
+impl std::fmt::Display for StrategySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StrategySpec::Random => f.write_str("random"),
+            StrategySpec::Halving { eta } => write!(f, "halving {eta}"),
+            StrategySpec::Refine => f.write_str("refine"),
+        }
+    }
+}
+
+impl StrategySpec {
+    /// Parse `random`, `halving [N]`, `halving eta N`, or `refine`.
+    pub fn parse(text: &str) -> Result<StrategySpec> {
+        let usage =
+            "strategy expects 'random', 'halving [eta N]', or 'refine'";
+        let toks: Vec<&str> = text.split_whitespace().collect();
+        let eta_of = |s: &str| -> Result<u32> {
+            let eta: u32 = s.parse().map_err(|_| {
+                Error::Params(format!("bad halving eta '{s}'; {usage}"))
+            })?;
+            if eta < 2 {
+                return Err(Error::Params(
+                    "halving eta must be at least 2".into(),
+                ));
+            }
+            Ok(eta)
+        };
+        match toks.as_slice() {
+            ["random"] => Ok(StrategySpec::Random),
+            ["halving"] => Ok(StrategySpec::Halving { eta: 2 }),
+            ["halving", n] => Ok(StrategySpec::Halving { eta: eta_of(n)? }),
+            ["halving", "eta", n] => {
+                Ok(StrategySpec::Halving { eta: eta_of(n)? })
+            }
+            ["refine"] => Ok(StrategySpec::Refine),
+            _ => Err(Error::Params(format!("bad strategy '{text}'; {usage}"))),
+        }
+    }
+}
+
+/// A proposal strategy for the round loop.
+pub trait SearchStrategy: Send {
+    /// The strategy's display name.
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `budget` fresh in-space combination indices for
+    /// the next round. Empty = converged/exhausted; the driver stops.
+    fn propose(
+        &self,
+        space: &Space,
+        history: &SearchHistory,
+        objective: &Objective,
+        budget: u64,
+    ) -> Vec<u64>;
+}
+
+/// Instantiate the strategy behind a spec with the search seed.
+pub fn strategy_for(spec: StrategySpec, seed: u64) -> Box<dyn SearchStrategy> {
+    match spec {
+        StrategySpec::Random => Box::new(RandomSearch { seed }),
+        StrategySpec::Halving { eta } => Box::new(Halving { seed, eta }),
+        StrategySpec::Refine => Box::new(Refine { seed }),
+    }
+}
+
+/// Above this many axes the full ±1 cross ring (3^n − 1 cells) is
+/// replaced by single-axis ±1 steps (2n cells) to keep neighborhood
+/// enumeration O(axes).
+const MAX_RING_AXES: usize = 10;
+
+/// Spaces at most this large enumerate-and-shuffle for random draws;
+/// larger spaces rejection-sample (O(k), never O(N_W)).
+const DENSE_DRAW_LIMIT: u64 = 1 << 16;
+
+/// The per-round RNG: seeded by the search seed, decorrelated per round
+/// so resumed searches replay identical proposals.
+fn round_rng(seed: u64, history: &SearchHistory) -> Rng {
+    Rng::new(seed).fold_in(history.rounds().len() as u64)
+}
+
+/// Draw up to `need` fresh indices uniformly, excluding the history and
+/// everything already in `taken` (which the picks join).
+fn fresh_random(
+    space: &Space,
+    history: &SearchHistory,
+    taken: &mut BTreeSet<u64>,
+    need: u64,
+    rng: &mut Rng,
+) -> Vec<u64> {
+    let total = space.len();
+    if need == 0 || total == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    if total <= DENSE_DRAW_LIMIT {
+        let mut fresh: Vec<u64> = (0..total)
+            .filter(|i| !history.contains(*i) && !taken.contains(i))
+            .collect();
+        rng.shuffle(&mut fresh);
+        fresh.truncate(need as usize);
+        for i in fresh {
+            taken.insert(i);
+            out.push(i);
+        }
+    } else {
+        // Sparse: rejection-sample with a bounded attempt budget so a
+        // nearly-exhausted huge space cannot spin forever.
+        let mut attempts = need.saturating_mul(64).saturating_add(64);
+        while (out.len() as u64) < need && attempts > 0 {
+            attempts -= 1;
+            let i = rng.below(total);
+            if !history.contains(i) && taken.insert(i) {
+                out.push(i);
+            }
+        }
+    }
+    out
+}
+
+/// The neighborhood of combination `index`: the full ±1 Chebyshev ring
+/// over all axes (every non-zero offset vector in {-1, 0, +1}^n,
+/// clamped in-space) for small axis counts, single-axis ±1 steps
+/// beyond [`MAX_RING_AXES`]. Deterministic enumeration order.
+fn neighbors(space: &Space, index: u64) -> Vec<u64> {
+    let Ok(digits) = space.digits(index) else { return Vec::new() };
+    let lens = space.axis_lens();
+    let n = digits.len();
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    if n > MAX_RING_AXES {
+        for a in 0..n {
+            for step in [-1i64, 1] {
+                let d = digits[a] as i64 + step;
+                if d < 0 || d >= lens[a] as i64 {
+                    continue;
+                }
+                let mut nd = digits.clone();
+                nd[a] = d as u32;
+                if let Ok(i) = space.index_of_digits(&nd) {
+                    out.push(i);
+                }
+            }
+        }
+        return out;
+    }
+    // Odometer over offset vectors in {-1, 0, +1}^n, skipping all-zero.
+    let mut offs = vec![-1i64; n];
+    loop {
+        if offs.iter().any(|&o| o != 0) {
+            let mut nd = Vec::with_capacity(n);
+            let mut in_space = true;
+            for a in 0..n {
+                let d = digits[a] as i64 + offs[a];
+                if d < 0 || d >= lens[a] as i64 {
+                    in_space = false;
+                    break;
+                }
+                nd.push(d as u32);
+            }
+            if in_space {
+                if let Ok(i) = space.index_of_digits(&nd) {
+                    out.push(i);
+                }
+            }
+        }
+        // advance the odometer
+        let mut a = n;
+        loop {
+            if a == 0 {
+                return out;
+            }
+            a -= 1;
+            if offs[a] < 1 {
+                offs[a] += 1;
+                for o in &mut offs[a + 1..] {
+                    *o = -1;
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Seeded uniform exploration.
+struct RandomSearch {
+    seed: u64,
+}
+
+impl SearchStrategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(
+        &self,
+        space: &Space,
+        history: &SearchHistory,
+        _objective: &Objective,
+        budget: u64,
+    ) -> Vec<u64> {
+        let mut rng = round_rng(self.seed, history);
+        let mut taken = BTreeSet::new();
+        fresh_random(space, history, &mut taken, budget, &mut rng)
+    }
+}
+
+/// Successive halving: survivors shrink by η per round, the budget
+/// concentrates on their unexplored neighborhoods.
+struct Halving {
+    seed: u64,
+    eta: u32,
+}
+
+impl SearchStrategy for Halving {
+    fn name(&self) -> &'static str {
+        "halving"
+    }
+
+    fn propose(
+        &self,
+        space: &Space,
+        history: &SearchHistory,
+        objective: &Objective,
+        budget: u64,
+    ) -> Vec<u64> {
+        let mut rng = round_rng(self.seed, history);
+        let mut taken = BTreeSet::new();
+        let mut picked: Vec<u64> = Vec::new();
+        let ranked = history.ranked(objective);
+        if !ranked.is_empty() {
+            // Keep the top 1/η^r of the cohort as survivors; the
+            // incumbent is rank 1, so its ring is always explored first
+            // and in full (given budget ≥ ring size).
+            let r = history.rounds_completed() as u32;
+            let survivors = (budget / (self.eta as u64).saturating_pow(r))
+                .max(1) as usize;
+            'fill: for (idx, _) in ranked.iter().take(survivors) {
+                for n in neighbors(space, *idx) {
+                    if !history.contains(n) && taken.insert(n) {
+                        picked.push(n);
+                        if picked.len() as u64 == budget {
+                            break 'fill;
+                        }
+                    }
+                }
+            }
+        }
+        // Round 0 (nothing ranked yet) and any spare slots: wide seeded
+        // exploration.
+        let need = budget - picked.len() as u64;
+        picked.extend(fresh_random(space, history, &mut taken, need, &mut rng));
+        picked
+    }
+}
+
+/// Grid refinement: a shrinking per-axis digit window around the
+/// incumbent, re-discretized to `{lo, mid, hi}` per axis.
+struct Refine {
+    seed: u64,
+}
+
+impl Refine {
+    /// The `{d−w, d, d+w}` re-discretization of one axis (clamped,
+    /// deduplicated, sorted).
+    fn axis_grid(d: u32, w: u32, len: usize) -> Vec<u32> {
+        let lo = d.saturating_sub(w);
+        let hi = d.saturating_add(w).min(len.saturating_sub(1) as u32);
+        let mut g = vec![lo, d, hi];
+        g.sort_unstable();
+        g.dedup();
+        g
+    }
+}
+
+impl SearchStrategy for Refine {
+    fn name(&self) -> &'static str {
+        "refine"
+    }
+
+    fn propose(
+        &self,
+        space: &Space,
+        history: &SearchHistory,
+        _objective: &Objective,
+        budget: u64,
+    ) -> Vec<u64> {
+        let Some((best, _)) = history.incumbent() else {
+            // No incumbent yet: seed the search with a random cohort.
+            let mut rng = round_rng(self.seed, history);
+            let mut taken = BTreeSet::new();
+            return fresh_random(space, history, &mut taken, budget, &mut rng);
+        };
+        let Ok(digits) = space.digits(best) else { return Vec::new() };
+        let lens = space.axis_lens();
+        let r = history.rounds_completed() as u32;
+        // Zoom: the starting window is half of each axis, halved again
+        // every completed round, never below 1. When even the w = 1
+        // grid holds nothing unexplored, the neighborhood is exhausted.
+        let mut w_scale = r.min(31);
+        loop {
+            let mut grids: Vec<Vec<u32>> = Vec::with_capacity(digits.len());
+            for (a, &d) in digits.iter().enumerate() {
+                let base = (lens[a] as u32 / 2).max(1);
+                let w = (base >> w_scale.min(31)).max(1);
+                grids.push(Self::axis_grid(d, w, lens[a]));
+            }
+            let picked = cross_product_fresh(space, history, &grids, budget);
+            if !picked.is_empty() {
+                return picked;
+            }
+            // Window already minimal and fully explored: done.
+            let minimal = grids
+                .iter()
+                .zip(&digits)
+                .zip(&lens)
+                .all(|((g, &d), &len)| {
+                    *g == Self::axis_grid(d, 1, len)
+                });
+            if minimal {
+                return Vec::new();
+            }
+            w_scale += 1;
+        }
+    }
+}
+
+/// Enumerate the cross product of per-axis digit grids (odometer
+/// order), keeping up to `budget` fresh indices. Capped per-axis grids
+/// (≤ 3 entries) bound this at 3^n cells; beyond [`MAX_RING_AXES`]
+/// axes only single-axis deviations from the first grid entry of the
+/// other axes are visited.
+fn cross_product_fresh(
+    space: &Space,
+    history: &SearchHistory,
+    grids: &[Vec<u32>],
+    budget: u64,
+) -> Vec<u64> {
+    let n = grids.len();
+    let mut out = Vec::new();
+    if n == 0 || budget == 0 {
+        return out;
+    }
+    let mut push = |digits: &[u32], out: &mut Vec<u64>| -> bool {
+        if let Ok(i) = space.index_of_digits(digits) {
+            if !history.contains(i) && !out.contains(&i) {
+                out.push(i);
+                return out.len() as u64 == budget;
+            }
+        }
+        false
+    };
+    if n > MAX_RING_AXES {
+        let base: Vec<u32> = grids.iter().map(|g| g[0]).collect();
+        for a in 0..n {
+            for &d in &grids[a] {
+                let mut nd = base.clone();
+                nd[a] = d;
+                if push(&nd, &mut out) {
+                    return out;
+                }
+            }
+        }
+        return out;
+    }
+    let mut pos = vec![0usize; n];
+    loop {
+        let digits: Vec<u32> =
+            pos.iter().zip(grids).map(|(&p, g)| g[p]).collect();
+        if push(&digits, &mut out) {
+            return out;
+        }
+        let mut a = n;
+        loop {
+            if a == 0 {
+                return out;
+            }
+            a -= 1;
+            if pos[a] + 1 < grids[a].len() {
+                pos[a] += 1;
+                for p in &mut pos[a + 1..] {
+                    *p = 0;
+                }
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Param;
+
+    fn grid(rows: usize, cols: usize) -> Space {
+        Space::cartesian(vec![
+            Param::new("r", (0..rows).map(|i| i.to_string()).collect()),
+            Param::new("c", (0..cols).map(|i| i.to_string()).collect()),
+        ])
+        .unwrap()
+    }
+
+    fn minimize() -> Objective {
+        Objective::parse("minimize m").unwrap()
+    }
+
+    #[test]
+    fn spec_parse_and_display() {
+        assert_eq!(StrategySpec::parse("random").unwrap(), StrategySpec::Random);
+        assert_eq!(
+            StrategySpec::parse("halving").unwrap(),
+            StrategySpec::Halving { eta: 2 }
+        );
+        assert_eq!(
+            StrategySpec::parse("halving 3").unwrap(),
+            StrategySpec::Halving { eta: 3 }
+        );
+        assert_eq!(
+            StrategySpec::parse("halving eta 4").unwrap(),
+            StrategySpec::Halving { eta: 4 }
+        );
+        assert_eq!(StrategySpec::parse("refine").unwrap(), StrategySpec::Refine);
+        assert!(StrategySpec::parse("halving 1").is_err());
+        assert!(StrategySpec::parse("anneal").is_err());
+        assert_eq!(
+            format!("{}", StrategySpec::default()),
+            "halving 2"
+        );
+    }
+
+    #[test]
+    fn neighbors_are_the_chebyshev_ring() {
+        let space = grid(4, 4);
+        // interior cell (1, 1) = index 5: full 8-cell ring
+        let ring = neighbors(&space, 5);
+        let expect: Vec<u64> = vec![0, 1, 2, 4, 6, 8, 9, 10];
+        let mut sorted = ring.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, expect);
+        // corner (0, 0): 3 neighbors
+        assert_eq!(neighbors(&space, 0).len(), 3);
+    }
+
+    #[test]
+    fn random_proposes_fresh_within_budget_and_is_seeded() {
+        let space = grid(6, 6);
+        let mut history = SearchHistory::new();
+        history.begin_round(vec![0, 1, 2]);
+        history.complete_round(vec![Some(1.0), Some(2.0), None], &minimize());
+        let s = strategy_for(StrategySpec::Random, 9);
+        let a = s.propose(&space, &history, &minimize(), 10);
+        let b = s.propose(&space, &history, &minimize(), 10);
+        assert_eq!(a, b, "same seed + same history → same proposals");
+        assert_eq!(a.len(), 10);
+        let set: BTreeSet<u64> = a.iter().copied().collect();
+        assert_eq!(set.len(), 10, "no duplicates");
+        assert!(a.iter().all(|&i| i >= 3 && i < 36), "fresh + in-space");
+    }
+
+    #[test]
+    fn random_degrades_when_the_space_is_nearly_exhausted() {
+        let space = grid(2, 2);
+        let mut history = SearchHistory::new();
+        history.begin_round(vec![0, 1, 3]);
+        history.complete_round(vec![Some(1.0); 3], &minimize());
+        let s = strategy_for(StrategySpec::Random, 1);
+        assert_eq!(s.propose(&space, &history, &minimize(), 8), vec![2]);
+        history.begin_round(vec![2]);
+        history.complete_round(vec![Some(0.5)], &minimize());
+        assert!(s.propose(&space, &history, &minimize(), 8).is_empty());
+    }
+
+    #[test]
+    fn halving_explores_the_incumbent_ring_first() {
+        let space = grid(8, 8);
+        let mut history = SearchHistory::new();
+        // scored cohort: index 27 = (3, 3) is the clear best
+        history.begin_round(vec![27, 0, 63]);
+        history.complete_round(
+            vec![Some(1.0), Some(9.0), Some(8.0)],
+            &minimize(),
+        );
+        let s = strategy_for(StrategySpec::Halving { eta: 2 }, 5);
+        let picked = s.propose(&space, &history, &minimize(), 8);
+        assert_eq!(picked.len(), 8);
+        let ring: BTreeSet<u64> = neighbors(&space, 27).into_iter().collect();
+        // budget 8 = ring size: the whole incumbent ring is proposed
+        assert!(picked.iter().all(|i| ring.contains(i)), "{picked:?}");
+        assert!(picked.iter().all(|&i| !history.contains(i)));
+    }
+
+    #[test]
+    fn halving_round_zero_is_a_wide_cohort() {
+        let space = grid(8, 8);
+        let history = SearchHistory::new();
+        let s = strategy_for(StrategySpec::Halving { eta: 2 }, 5);
+        let picked = s.propose(&space, &history, &minimize(), 12);
+        assert_eq!(picked.len(), 12);
+        let set: BTreeSet<u64> = picked.iter().copied().collect();
+        assert_eq!(set.len(), 12);
+    }
+
+    #[test]
+    fn refine_zooms_around_the_incumbent() {
+        let space = grid(16, 16);
+        let mut history = SearchHistory::new();
+        // incumbent at (8, 8) = index 136
+        history.begin_round(vec![136, 0]);
+        history.complete_round(vec![Some(1.0), Some(5.0)], &minimize());
+        let s = strategy_for(StrategySpec::Refine, 3);
+        let picked = s.propose(&space, &history, &minimize(), 16);
+        assert!(!picked.is_empty() && picked.len() <= 16);
+        // every proposal sits on the {8−w, 8, 8+w} sub-grid of each axis
+        for &i in &picked {
+            let d = space.digits(i).unwrap();
+            for &x in &d {
+                assert!(
+                    (x as i64 - 8).abs() <= 8 && !history.contains(i),
+                    "{d:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refine_exhausts_to_empty() {
+        let space = grid(2, 1);
+        let mut history = SearchHistory::new();
+        history.begin_round(vec![0, 1]);
+        history.complete_round(vec![Some(1.0), Some(2.0)], &minimize());
+        let s = strategy_for(StrategySpec::Refine, 0);
+        assert!(s.propose(&space, &history, &minimize(), 4).is_empty());
+    }
+}

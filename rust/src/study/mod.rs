@@ -374,6 +374,12 @@ impl Study {
         self.source().iter().collect()
     }
 
+    /// The study-level adaptive-search spec: like `sampling` and
+    /// `on_failure`, the first task declaring a `search:` block sets it.
+    pub fn search_spec(&self) -> Option<&crate::search::SearchSpec> {
+        self.spec.tasks.iter().find_map(|t| t.search.as_ref())
+    }
+
     fn runner(&self) -> Arc<TaskRunner> {
         Arc::new(TaskRunner::new(
             self.builtins.clone(),
@@ -382,6 +388,13 @@ impl Study {
                 input_root: self.input_root.clone(),
             },
         ))
+    }
+
+    /// A local thread-pool executor over this study's task runner —
+    /// what [`Study::run_local`] uses internally, exposed so round-based
+    /// drivers (`papas search`) can reuse one executor across runs.
+    pub fn local_executor(&self, workers: usize) -> LocalPool {
+        LocalPool::new(self.runner(), workers)
     }
 
     /// Run on the local thread pool.
@@ -417,23 +430,68 @@ impl Study {
     /// from near where it died and re-runs only failed or incomplete
     /// instances.
     pub fn run_with(&self, executor: &dyn Executor) -> Result<ExecutionReport> {
+        self.run_selection(&self.selection, self.shard, executor)
+    }
+
+    /// Run a **pinned sub-study**: exactly the given combination indices
+    /// (deduplicated; each must be in-space), through the same compiled
+    /// materialization, scheduler, checkpoint, and capture machinery as
+    /// [`Study::run_with`]. Timeouts, retries, and failure policies
+    /// apply unchanged; completed keys restore from the checkpoint, so
+    /// re-running an index a previous round already executed costs
+    /// nothing. The study's `--shard` setting is deliberately **not**
+    /// applied — a pinned round runs whole, else sharded-away proposals
+    /// would be recorded as run without ever executing. This is the
+    /// execution edge of the adaptive search driver (`papas search`).
+    pub fn run_indices(
+        &self,
+        indices: &[u64],
+        executor: &dyn Executor,
+    ) -> Result<ExecutionReport> {
+        let total = self.space.len();
+        for &i in indices {
+            if i >= total {
+                return Err(crate::util::error::Error::Params(format!(
+                    "pinned combination index {i} out of range (total {total})"
+                )));
+            }
+        }
+        let selection = Selection::explicit(indices.to_vec());
+        self.run_selection(&selection, Shard::default(), executor)
+    }
+
+    /// The shared run loop behind [`Study::run_with`] (the study's own
+    /// selection + shard) and [`Study::run_indices`] (a pinned, whole
+    /// one).
+    fn run_selection(
+        &self,
+        selection: &Selection,
+        shard: Shard,
+        executor: &dyn Executor,
+    ) -> Result<ExecutionReport> {
         let db = FileDb::open(&self.db_root)?;
         db.store_study(self)?;
         let prov = crate::workflow::provenance::Provenance::open(&self.db_root)?;
+        // Streaming: the scheduler pulls instances from the lazy source
+        // as window slots open — the full selection is never resident.
+        // CLI-level fault overrides replace per-task knobs at admission.
+        let source = {
+            let src =
+                InstanceSource::new(&self.spec, &self.space, selection, shard);
+            match &self.compiled {
+                Some(c) => src.with_compiled(c),
+                None => src,
+            }
+        };
         prov.log_event(&format!(
             "run start: {} instances (shard {}) on {} ({} workers), \
              on-failure {}",
-            self.n_instances(),
-            self.shard,
+            source.len(),
+            shard,
             executor.name(),
             executor.workers(),
             self.policy
         ))?;
-
-        // Streaming: the scheduler pulls instances from the lazy source
-        // as window slots open — the full selection is never resident.
-        // CLI-level fault overrides replace per-task knobs at admission.
-        let source = self.source();
         let (t_over, r_over) = (self.timeout_override, self.retries_override);
         let iter = source.iter().map(move |inst| {
             let mut inst = inst?;
@@ -807,6 +865,43 @@ mod tests {
         // builtins always ride along
         let wt = eng.schema().metric_index("wall_time").unwrap();
         assert!(table.value(wt, 0).as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn run_indices_pins_a_sub_study_and_composes_with_the_checkpoint() {
+        use crate::exec::{Script, ScriptedExecutor};
+        let s = tmp_study(
+            "pinned",
+            "job:\n  command: work ${v}\n  v: [1, 2, 3, 4, 5, 6]\n",
+        );
+        let script = Arc::new(Script::new());
+        let exec = ScriptedExecutor::new(script.clone(), 2);
+        // duplicates collapse; only the pinned indices run
+        let r = s.run_indices(&[4, 1, 4], &exec).unwrap();
+        assert_eq!(r.completed, 2);
+        assert_eq!(script.executions("job#1"), 1);
+        assert_eq!(script.executions("job#4"), 1);
+        assert_eq!(script.executions("job#0"), 0);
+        // a later pinned run restores the overlap from the checkpoint
+        let r = s.run_indices(&[1, 2], &exec).unwrap();
+        assert_eq!(r.restored, 1);
+        assert_eq!(r.completed, 1);
+        assert_eq!(script.executions("job#1"), 1);
+        // out-of-space indices are rejected before anything runs
+        assert!(s.run_indices(&[99], &exec).is_err());
+        // a sharded study still runs pinned indices whole: sharding a
+        // search round would silently censor the strategy's proposals
+        let sharded = Study::from_file(
+            std::env::temp_dir().join("papas_study/pinned/study.yaml"),
+        )
+        .unwrap()
+        .with_db_root(std::env::temp_dir().join("papas_study/pinned/.papas"))
+        .shard(1, 2)
+        .unwrap();
+        let r = sharded.run_indices(&[0, 3], &exec).unwrap();
+        assert_eq!(r.completed + r.restored, 2);
+        assert_eq!(script.executions("job#0"), 1);
+        assert_eq!(script.executions("job#3"), 1);
     }
 
     #[test]

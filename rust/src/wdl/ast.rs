@@ -10,16 +10,18 @@ use super::range::{self, Expanded};
 use crate::exec::fault::FailurePolicy;
 use crate::params::{Param, Sampling};
 use crate::results::capture::CaptureSpec;
+use crate::search::SearchSpec;
 use crate::util::error::{Error, Result};
 use crate::util::strings::is_identifier;
 
 /// The predefined WDL keywords (§5's list, extended with the
-/// fault-handling keys `timeout` / `retries` / `on_failure` and the
-/// results-engine key `capture`).
+/// fault-handling keys `timeout` / `retries` / `on_failure`, the
+/// results-engine key `capture`, and the adaptive-search key `search`).
 pub const WDL_KEYWORDS: &[&str] = &[
     "command", "name", "environ", "after", "infiles", "outfiles",
     "substitute", "parallel", "batch", "nnodes", "ppnode", "hosts",
     "fixed", "sampling", "timeout", "retries", "on_failure", "capture",
+    "search",
 ];
 
 /// Parallel execution mode (§5 keyword `parallel`).
@@ -109,6 +111,10 @@ pub struct TaskSpec {
     /// [PATTERN]`); built-ins (`wall_time`, `attempts`, `exit_code`,
     /// `exit_class`) are captured automatically and need no entry.
     pub capture: Vec<CaptureSpec>,
+    /// `search` — the adaptive-search block (`objective:`, `strategy:`,
+    /// `rounds:`, `budget:`, `seed:`). Study-level: the first task
+    /// declaring it wins (like `sampling`); drives `papas search`.
+    pub search: Option<SearchSpec>,
 }
 
 /// A whole parameter study: ordered task sections.
@@ -257,6 +263,14 @@ impl TaskSpec {
                         let raw = scalar_of(id, metric, mnode)?;
                         t.capture.push(CaptureSpec::parse(id, metric, &raw)?);
                     }
+                }
+                "search" => {
+                    let mut s = SearchSpec::default();
+                    for (k, v) in map_of(id, "search", value)? {
+                        let raw = scalar_of(id, k, v)?;
+                        s.set(id, k, &raw)?;
+                    }
+                    t.search = Some(s);
                 }
                 // Any other keyword is a user-defined parameter (§5:
                 // "keywords that are not predefined are considered as
@@ -556,6 +570,45 @@ matmulOMP:
             "t:\n  command: c\n  capture:\n    m: magic x\n",
             // capture must be a mapping
             "t:\n  command: c\n  capture: gflops\n",
+        ] {
+            let doc = parse_str(bad, Format::Yaml).unwrap();
+            assert!(StudySpec::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn search_keyword_parses_and_is_not_a_param() {
+        use crate::search::{Direction, StrategySpec};
+        let doc = parse_str(
+            "t:\n  command: run ${v}\n  v: [1, 2]\n  capture:\n    score: stdout s=(\\d+)\n  search:\n    objective: minimize score\n    strategy: refine\n    rounds: 5\n    budget: 16\n    seed: 3\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t = &StudySpec::from_doc(&doc).unwrap().tasks[0];
+        let s = t.search.as_ref().unwrap();
+        assert_eq!(s.objective.direction, Direction::Minimize);
+        assert_eq!(s.objective.metric, "score");
+        assert_eq!(s.strategy, StrategySpec::Refine);
+        assert_eq!((s.rounds, s.budget, s.seed), (5, 16, 3));
+        // search is a keyword, not a parameter axis
+        assert_eq!(t.params.len(), 1);
+
+        // partial blocks keep the defaults
+        let doc = parse_str(
+            "t:\n  command: c\n  search:\n    rounds: 2\n",
+            Format::Yaml,
+        )
+        .unwrap();
+        let t = &StudySpec::from_doc(&doc).unwrap().tasks[0];
+        let s = t.search.as_ref().unwrap();
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.objective.metric, "wall_time");
+
+        for bad in [
+            "t:\n  command: c\n  search:\n    rounds: 0\n",
+            "t:\n  command: c\n  search:\n    objective: fastest\n",
+            "t:\n  command: c\n  search:\n    strateg: random\n",
+            "t:\n  command: c\n  search: halving\n",
         ] {
             let doc = parse_str(bad, Format::Yaml).unwrap();
             assert!(StudySpec::from_doc(&doc).is_err(), "{bad}");

@@ -4,8 +4,8 @@
 //! to two levels of keyword/value entries. Predefined keywords (command,
 //! name, environ, after, infiles, outfiles, substitute, parallel, batch,
 //! nnodes, ppnode, hosts, fixed, sampling, timeout, retries, on_failure,
-//! capture) drive the engine; any other keyword is a *user-defined
-//! parameter* usable in `${...}` interpolation.
+//! capture, search) drive the engine; any other keyword is a
+//! *user-defined parameter* usable in `${...}` interpolation.
 //!
 //! The `capture:` block declares named result metrics extracted from a
 //! task's outputs — `metric: stdout PATTERN` (regex over captured
@@ -14,6 +14,11 @@
 //! read or content regex). The built-in metrics `wall_time`, `attempts`,
 //! `exit_code`, and `exit_class` are recorded for every task
 //! automatically; see `crate::results`.
+//!
+//! The `search:` block (`objective:`, `strategy:`, `rounds:`,
+//! `budget:`, `seed:`) declares an adaptive search over the study's
+//! combination space, driven by the captured metrics; see
+//! `crate::search` and `papas search`.
 //!
 //! Pipeline: format parser (`yamlite` / `json` / `ini`) → common `doc::
 //! Node` model → [`ast`] typing → [`validate`] → [`range`] expansion →

@@ -171,6 +171,41 @@ pub fn validate(study: &StudySpec) -> Result<Vec<String>> {
         }
     }
 
+    // -- search block ---------------------------------------------------
+    // Study-level like sampling/on_failure: the first declaration wins,
+    // and its objective must name a metric the result schema will carry
+    // (a built-in or some task's declared capture) — caught here, before
+    // any round executes.
+    let searches: Vec<(&str, &crate::search::SearchSpec)> = study
+        .tasks
+        .iter()
+        .filter_map(|t| t.search.as_ref().map(|s| (t.id.as_str(), s)))
+        .collect();
+    if let Some((first_id, first)) = searches.first() {
+        for (id, s) in &searches[1..] {
+            if s != first {
+                warnings.push(format!(
+                    "task '{id}' declares a search block but task \
+                     '{first_id}' already set the study search; the first \
+                     declaration wins"
+                ));
+            }
+        }
+        let metric = &first.objective.metric;
+        let declared = crate::results::schema::is_builtin_metric(metric)
+            || study
+                .tasks
+                .iter()
+                .any(|t| t.capture.iter().any(|c| &c.name == metric));
+        if !declared {
+            return Err(Error::Wdl(format!(
+                "task '{first_id}': search objective metric '{metric}' is \
+                 neither a built-in result column nor declared by any \
+                 capture: block"
+            )));
+        }
+    }
+
     // -- dependency graph must be acyclic ------------------------------
     check_acyclic(study)?;
 
@@ -320,6 +355,35 @@ mod tests {
     fn fixed_unknown_param() {
         let s = study("a:\n  command: x\n  p: [1, 2]\n  fixed: [q]\n");
         assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn search_objective_must_be_capturable() {
+        // built-in objective: fine without any capture block
+        let s = study(
+            "a:\n  command: x\n  search:\n    objective: minimize wall_time\n",
+        );
+        assert!(validate(&s).unwrap().is_empty());
+        // declared capture metric (on any task): fine
+        let s = study(
+            "a:\n  command: x\n  capture:\n    gf: stdout g=(\\d+)\nb:\n  command: y\n  search:\n    objective: maximize gf\n",
+        );
+        assert!(validate(&s).is_ok());
+        // unknown metric: rejected before anything runs
+        let s = study(
+            "a:\n  command: x\n  search:\n    objective: minimize ghost\n",
+        );
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("ghost"), "{e}");
+        // conflicting declarations: first wins, warning raised
+        let s = study(
+            "a:\n  command: x\n  search:\n    rounds: 2\nb:\n  command: y\n  search:\n    rounds: 3\n",
+        );
+        let w = validate(&s).unwrap();
+        assert!(
+            w.iter().any(|m| m.contains("first declaration wins")),
+            "{w:?}"
+        );
     }
 
     #[test]

@@ -36,6 +36,15 @@ pub enum Selection {
 }
 
 impl Selection {
+    /// Explicit selection from arbitrary indices: sorted ascending and
+    /// deduplicated, the invariant [`Selection::Explicit`] carries.
+    /// Adaptive search pins each round's sub-study through this.
+    pub fn explicit(mut indices: Vec<u64>) -> Selection {
+        indices.sort_unstable();
+        indices.dedup();
+        Selection::Explicit(indices)
+    }
+
     /// Number of selected indices.
     pub fn len(&self) -> u64 {
         match self {
@@ -356,6 +365,15 @@ mod tests {
         assert_eq!(first.index, 1, "shard 1/4 starts at global index 1");
         let second = src.get(1).unwrap();
         assert_eq!(second.index, 5, "strided by 4");
+    }
+
+    #[test]
+    fn explicit_ctor_sorts_and_dedups() {
+        assert_eq!(
+            Selection::explicit(vec![7, 3, 7, 0, 3]),
+            Selection::Explicit(vec![0, 3, 7])
+        );
+        assert!(Selection::explicit(vec![]).is_empty());
     }
 
     #[test]

@@ -623,3 +623,96 @@ fn prop_json_writer_parser_inverse() {
         assert_eq!(parse(&to_string(&j)).unwrap(), j);
     });
 }
+
+#[test]
+fn prop_search_strategies_propose_fresh_in_space_within_budget() {
+    use papas::search::{strategy_for, Objective, SearchHistory, StrategySpec};
+    check(
+        "every strategy: proposals fresh, in-space, deduped, <= budget",
+        60,
+        |g| {
+            let params = arb_params(g, 3, 6);
+            let space = Space::cartesian(params).unwrap();
+            let total = space.len();
+            let objective = if g.bool(0.5) {
+                Objective::parse("minimize m").unwrap()
+            } else {
+                Objective::parse("maximize m").unwrap()
+            };
+            // a random prior history: a few rounds of distinct indices,
+            // each scored or unscoreable at random
+            let mut history = SearchHistory::new();
+            for _ in 0..g.usize(0..=3) {
+                let mut proposals: Vec<u64> = Vec::new();
+                for _ in 0..g.usize(1..=4) {
+                    let i = g.rng().below(total);
+                    if !history.contains(i) && !proposals.contains(&i) {
+                        proposals.push(i);
+                    }
+                }
+                if proposals.is_empty() {
+                    continue;
+                }
+                let scores = proposals
+                    .iter()
+                    .map(|_| g.bool(0.8).then(|| g.f64_unit() * 10.0))
+                    .collect();
+                history.begin_round(proposals);
+                history.complete_round(scores, &objective);
+            }
+            let budget = g.usize(1..=10) as u64;
+            let seed = g.rng().next_u64();
+            for spec in [
+                StrategySpec::Random,
+                StrategySpec::Halving { eta: 2 },
+                StrategySpec::Halving { eta: 3 },
+                StrategySpec::Refine,
+            ] {
+                let strategy = strategy_for(spec, seed);
+                let picked =
+                    strategy.propose(&space, &history, &objective, budget);
+                assert!(
+                    picked.len() as u64 <= budget,
+                    "{spec:?} over budget: {picked:?}"
+                );
+                let set: BTreeSet<u64> = picked.iter().copied().collect();
+                assert_eq!(set.len(), picked.len(), "{spec:?} duplicated");
+                for &i in &picked {
+                    assert!(i < total, "{spec:?} out of space: {i}");
+                    assert!(
+                        !history.contains(i),
+                        "{spec:?} re-proposed already-run index {i}"
+                    );
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_search_proposals_are_deterministic_per_seed_and_history() {
+    use papas::search::{strategy_for, Objective, SearchHistory, StrategySpec};
+    check("same seed + same history => same proposals", 40, |g| {
+        let params = arb_params(g, 3, 5);
+        let space = Space::cartesian(params).unwrap();
+        let objective = Objective::parse("minimize m").unwrap();
+        let mut history = SearchHistory::new();
+        let first: Vec<u64> = (0..space.len().min(3)).collect();
+        let scores = first.iter().map(|&i| Some(i as f64)).collect();
+        history.begin_round(first);
+        history.complete_round(scores, &objective);
+        let seed = g.rng().next_u64();
+        let budget = g.usize(1..=8) as u64;
+        for spec in [
+            StrategySpec::Random,
+            StrategySpec::Halving { eta: 2 },
+            StrategySpec::Refine,
+        ] {
+            let a = strategy_for(spec, seed)
+                .propose(&space, &history, &objective, budget);
+            let b = strategy_for(spec, seed)
+                .propose(&space, &history, &objective, budget);
+            assert_eq!(a, b, "{spec:?} not deterministic");
+        }
+    });
+}

@@ -1,0 +1,210 @@
+//! Golden end-to-end tests of the adaptive search engine — hermetic:
+//! every task execution is a [`ScriptedExecutor`] replay emitting a
+//! deterministic synthetic metric landscape on stdout; zero
+//! subprocesses, zero sleeps.
+//!
+//! The study under test is `studies/matmul_search.yaml` (the paper's
+//! 11 × 8 = 88-combination Figure 5 space plus a `capture:`d `score`
+//! and a `search:` block). The synthetic landscape is the Chebyshev
+//! distance from the known-best combination — the grid's Chebyshev
+//! center, digits [`TARGET`] = (size 512, threads 4) — which `halving`
+//! provably descends: the incumbent's full ±1 ring fits in the
+//! per-round budget, so the incumbent's distance (at most 5 after any
+//! seeding round) shrinks every round — convergence inside the
+//! configured 6 rounds is deterministic for *any* seed, while 6 rounds
+//! × budget 8 = 48 executions stays strictly below the exhaustive 88.
+
+use papas::exec::{FailurePolicy, Outcome, Script, ScriptedExecutor};
+use papas::search::{run_search, SearchConfig, SEARCH_FILE};
+use papas::study::Study;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn repo(path: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(path)
+}
+
+/// Known-best digits of the synthetic landscape: axis 0 is
+/// `args:size` (11 values, digit 5 → 512), axis 1 is
+/// `environ:OMP_NUM_THREADS` (8 values, digit 3 → 4 threads).
+const TARGET: [u32; 2] = [5, 3];
+
+fn optimum(study: &Study) -> u64 {
+    study.space().index_of_digits(&TARGET).unwrap()
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("papas_search_e2e").join(tag);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn study(tag: &str) -> Study {
+    Study::from_file(repo("studies/matmul_search.yaml"))
+        .unwrap()
+        .with_db_root(tmp(tag).join(".papas"))
+}
+
+/// Script the synthetic landscape: every combination's stdout carries
+/// `score=<Chebyshev distance from the optimum>`.
+fn landscape(study: &Study) -> Script {
+    let space = study.space();
+    assert_eq!(space.len(), 88);
+    assert_eq!(space.axis_lens(), vec![11, 8]);
+    let mut script = Script::new();
+    for idx in 0..space.len() {
+        let d = space.digits(idx).unwrap();
+        let score = d
+            .iter()
+            .zip(&TARGET)
+            .map(|(&x, &t)| (x as i64 - t as i64).abs())
+            .max()
+            .unwrap();
+        script = script
+            .stdout_on(format!("matmulSearch#{idx}"), format!("score={score}"));
+    }
+    script
+}
+
+fn config(study: &Study) -> SearchConfig {
+    SearchConfig::from_spec(study.search_spec().expect("search: block"))
+}
+
+#[test]
+fn halving_converges_to_the_known_best_within_the_round_cap() {
+    let study = study("golden");
+    let script = Arc::new(landscape(&study));
+    let cfg = config(&study);
+    assert_eq!((cfg.rounds, cfg.budget), (6, 8));
+    let exec = ScriptedExecutor::new(script.clone(), 4);
+    let outcome = run_search(&study, &cfg, &exec).unwrap();
+
+    // found the optimum, within the configured rounds
+    assert_eq!(outcome.best(), Some((optimum(&study), 0.0)));
+    assert!(outcome.history.rounds_completed() <= 6);
+    // strictly fewer executions than the exhaustive 88-instance sweep
+    let executed = script.total_executions() as u64;
+    assert!(executed > 0 && executed < 88, "executed {executed}");
+    assert_eq!(outcome.executions, executed);
+    // fresh-only proposals: no combination ever executed twice
+    let journal = script.journal();
+    let distinct: BTreeSet<&String> = journal.iter().collect();
+    assert_eq!(distinct.len(), journal.len());
+    // the ledger landed next to the checkpoint and results store
+    assert!(study.db_root.join(SEARCH_FILE).exists());
+    assert!(study.db_root.join("results_columns.json").exists());
+    // the best combination decodes to the expected parameter values
+    let combo = study.space().combination(optimum(&study)).unwrap();
+    assert_eq!(
+        combo["matmulSearch:environ:OMP_NUM_THREADS"].as_str(),
+        "4"
+    );
+    assert_eq!(combo["matmulSearch:args:size"].as_str(), "512");
+}
+
+#[test]
+fn resume_replays_no_completed_round() {
+    let study = study("resume");
+    let script = Arc::new(landscape(&study));
+    let mut cfg = config(&study);
+    cfg.rounds = 2;
+    let exec = ScriptedExecutor::new(script.clone(), 4);
+    let first = run_search(&study, &cfg, &exec).unwrap();
+    assert_eq!(first.rounds_run, 2);
+    let ran_before: BTreeSet<String> = script.journal().into_iter().collect();
+
+    // resume to the full cap on a fresh script: completed rounds are
+    // replayed from the ledger, never re-executed
+    let script2 = Arc::new(landscape(&study));
+    let exec2 = ScriptedExecutor::new(script2.clone(), 4);
+    cfg.rounds = 6;
+    cfg.resume = true;
+    let second = run_search(&study, &cfg, &exec2).unwrap();
+    assert_eq!(second.best(), Some((optimum(&study), 0.0)));
+    for key in script2.journal() {
+        assert!(!ran_before.contains(&key), "{key} re-executed on resume");
+    }
+
+    // resuming again with nothing left to do runs zero tasks
+    let script3 = Arc::new(Script::new());
+    let exec3 = ScriptedExecutor::new(script3.clone(), 4);
+    cfg.rounds = second.history.rounds_completed() as u32;
+    let third = run_search(&study, &cfg, &exec3).unwrap();
+    assert_eq!(third.rounds_run, 0);
+    assert_eq!(script3.total_executions(), 0);
+}
+
+#[test]
+fn interrupted_round_resumes_only_the_remainder() {
+    // Phase A: discover round 0's deterministic proposals (same seed +
+    // empty history → identical proposals in every phase).
+    let probe = study("interrupt_probe");
+    let probe_script = Arc::new(landscape(&probe));
+    let mut cfg = config(&probe);
+    cfg.rounds = 1;
+    let exec = ScriptedExecutor::new(probe_script, 1);
+    let probed = run_search(&probe, &cfg, &exec).unwrap();
+    let mut round0: Vec<u64> = probed.history.rounds()[0].proposals.clone();
+    round0.sort_unstable(); // pinned sub-studies execute in index order
+    assert_eq!(round0.len(), 8);
+
+    // Phase B: same search under fail-fast, with the 5th task of the
+    // round scripted to fail — the round halts with 4 of 8 done.
+    let study = study("interrupt");
+    let fail_key = format!("matmulSearch#{}", round0[4]);
+    let script =
+        Arc::new(landscape(&study).on(fail_key.clone(), Outcome::Fail(3)));
+    let halted = Study::from_file(repo("studies/matmul_search.yaml"))
+        .unwrap()
+        .with_db_root(study.db_root.clone())
+        .with_policy(FailurePolicy::FailFast);
+    let exec = ScriptedExecutor::new(script.clone(), 1);
+    let err = run_search(&halted, &cfg, &exec).unwrap_err();
+    assert!(err.to_string().contains("--resume"), "{err}");
+    assert_eq!(script.journal().len(), 5); // 4 ok + the failure
+
+    // Phase C: resume with the failure cleared — only the remainder of
+    // the interrupted round re-runs (the failed task + the 3 never
+    // admitted), not the 4 checkpointed completions.
+    let script2 = Arc::new(landscape(&study));
+    let exec2 = ScriptedExecutor::new(script2.clone(), 1);
+    cfg.resume = true;
+    let resumed = run_search(&study, &cfg, &exec2).unwrap();
+    let remainder: Vec<String> = round0[4..]
+        .iter()
+        .map(|i| format!("matmulSearch#{i}"))
+        .collect();
+    assert_eq!(script2.journal(), remainder);
+    assert_eq!(resumed.history.rounds_completed(), 1);
+    // the round was never re-proposed: one proposed event in the ledger
+    let ledger =
+        std::fs::read_to_string(study.db_root.join(SEARCH_FILE)).unwrap();
+    let proposed = ledger
+        .lines()
+        .filter(|l| l.contains("\"proposed\""))
+        .count();
+    assert_eq!(proposed, 1);
+}
+
+#[test]
+fn random_and_refine_strategies_drive_the_same_loop() {
+    use papas::search::StrategySpec;
+    for (tag, spec) in [
+        ("random", StrategySpec::Random),
+        ("refine", StrategySpec::Refine),
+    ] {
+        let study = study(tag);
+        let script = Arc::new(landscape(&study));
+        let mut cfg = config(&study);
+        cfg.strategy = spec;
+        cfg.rounds = 3;
+        let exec = ScriptedExecutor::new(script.clone(), 4);
+        let outcome = run_search(&study, &cfg, &exec).unwrap();
+        let (_, best) = outcome.best().expect("some combination scored");
+        assert!(best.is_finite());
+        assert!(outcome.executions <= 3 * cfg.budget);
+        assert!((script.total_executions() as u64) < 88);
+    }
+}
