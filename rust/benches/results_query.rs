@@ -1,0 +1,268 @@
+//! Results store v2 — binary columnar snapshot vs the legacy v1 JSON
+//! snapshot, on a synthetic ~10⁶-row store.
+//!
+//! Builds one result table (threads × size × rep grid, run-0 rows plus
+//! a run-1 re-measurement slice so `--run LATEST` folding is on the
+//! timed path), saves it through both snapshot codecs, then times the
+//! full analysis pipeline per path: snapshot decode → flat `--where`
+//! filter → `--by` group-by aggregation. The rendered query output is
+//! asserted byte-identical between the two paths before anything is
+//! timed — the binary format must be a pure representation change.
+//!
+//! Acceptance target: the binary path ≥ 5x faster than v1 JSON at the
+//! 10⁶-row scale. Numbers land in `BENCH_results_query.json`; run with
+//! `-- --smoke` (CI) for a ~20k-row subset exercising every code path.
+
+use papas::bench::{fmt_secs, measure, Table};
+use papas::json::{self, Json};
+use papas::params::{Param, Space};
+use papas::results::{
+    load_bin, render_flat, render_groups, run_flat, run_grouped, save_bin,
+    Format, MetricValue, Query, ResultTable, Row, RunSel, Schema,
+    BUILTIN_METRICS,
+};
+
+/// Deterministic pseudo-random stream (no `Math.random` analogue needed:
+/// the fixture must be identical across runs for trajectory tracking).
+fn mix(i: u64) -> u64 {
+    let mut x = i.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    x ^= x >> 31;
+    x.wrapping_mul(0xbf58_476d_1ce4_e5b9)
+}
+
+fn synth_table(reps: usize) -> (Space, Schema, ResultTable) {
+    let params = vec![
+        Param::new(
+            "bench:threads".into(),
+            ["1", "2", "4", "8"].map(String::from).to_vec(),
+        ),
+        Param::new(
+            "bench:size".into(),
+            ["64", "128", "256", "512", "1024"].map(String::from).to_vec(),
+        ),
+        Param::new(
+            "bench:rep".into(),
+            (0..reps).map(|r| r.to_string()).collect(),
+        ),
+    ];
+    let space = Space::cartesian(params).unwrap();
+    let mut metrics: Vec<String> =
+        BUILTIN_METRICS.iter().map(|m| m.to_string()).collect();
+    metrics.push("score".into());
+    metrics.push("tag".into());
+    let schema = Schema {
+        params: space.params().iter().map(|p| p.name.clone()).collect(),
+        axis_of: space.param_axes(),
+        n_axes: space.n_axes(),
+        metrics,
+    };
+    let mut table = ResultTable::new(schema.clone());
+    let mut push = |run: u32, i: u64| {
+        let h = mix(i.wrapping_add(u64::from(run) << 40));
+        let score = if h % 17 == 0 {
+            MetricValue::Missing
+        } else {
+            MetricValue::Num((h % 1000) as f64 / 10.0)
+        };
+        // a mixed-type column: mostly interned strings, some numbers
+        let tag = if h % 5 == 0 {
+            MetricValue::Num((h % 7) as f64)
+        } else {
+            MetricValue::Str(
+                ["alpha", "beta", "gamma", "delta"][(h % 4) as usize].into(),
+            )
+        };
+        table.push(Row {
+            run,
+            instance: i,
+            task_id: "bench".into(),
+            digits: space.digits(i).unwrap(),
+            values: vec![
+                MetricValue::Num((h % 5000) as f64 / 1000.0),
+                MetricValue::Num(1.0),
+                MetricValue::Num(0.0),
+                MetricValue::Str("ok".into()),
+                score,
+                tag,
+            ],
+        });
+    };
+    for i in 0..space.len() {
+        push(0, i);
+    }
+    // re-measure every 10th instance under run 1: `--run LATEST` has
+    // real folding work to do
+    for i in (0..space.len()).step_by(10) {
+        push(1, i);
+    }
+    (space, schema, table)
+}
+
+/// One full analysis pass: decode the snapshot, flat-filter, group.
+/// Returns the rendered output so the two paths can be diffed exactly.
+fn analyze(
+    table: &ResultTable,
+    space: &Space,
+    schema: &Schema,
+) -> (String, String) {
+    let q = Query::parse(
+        schema,
+        space,
+        "threads==4 && score>=50",
+        "",
+        "score,tag",
+        None,
+        false,
+        None,
+    )
+    .unwrap();
+    let flat = render_flat(&run_flat(table, space, &q), schema, &q, Format::Csv);
+    let mut q = Query::parse(
+        schema,
+        space,
+        "score>=25",
+        "threads,size",
+        "wall_time,score",
+        None,
+        false,
+        None,
+    )
+    .unwrap();
+    q.run = RunSel::All;
+    let groups = render_groups(
+        &run_grouped(table, space, &q).unwrap(),
+        Format::Json,
+    );
+    (flat, groups)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("# --smoke: reduced row count + reps for CI");
+    }
+    // 4 threads × 5 sizes × reps → base rows; +10% run-1 replicates
+    let reps = if smoke { 1_000 } else { 50_000 };
+    let (space, schema, table) = synth_table(reps);
+    let n = table.len();
+    println!(
+        "# results store v2: {} rows ({} run-0 + {} run-1 replicates)",
+        n,
+        space.len(),
+        n - space.len()
+    );
+
+    let dir = std::env::temp_dir().join("papas_bench_results_query");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let v1 = table.save_columns(&dir).unwrap();
+    let v2 = save_bin(&table, &dir).unwrap();
+    let bytes_v1 = std::fs::metadata(&v1).unwrap().len();
+    let bytes_v2 = std::fs::metadata(&v2).unwrap().len();
+
+    // Correctness gate before any timing: both snapshots must decode to
+    // the same table and render byte-identical query results.
+    let t1 = ResultTable::load_columns(&v1).unwrap();
+    let t2 = load_bin(&v2).unwrap();
+    assert_eq!(t1.len(), table.len());
+    assert_eq!(t2.len(), table.len());
+    for i in 0..table.len() {
+        assert_eq!(t1.row(i), t2.row(i), "row {i} diverged between formats");
+    }
+    let (flat1, grp1) = analyze(&t1, &space, &schema);
+    let (flat2, grp2) = analyze(&t2, &space, &schema);
+    assert_eq!(flat1, flat2, "flat query output diverged");
+    assert_eq!(grp1, grp2, "grouped query output diverged");
+    println!(
+        "# byte-identical query output confirmed ({} flat bytes, {} \
+         grouped bytes)",
+        flat1.len(),
+        grp1.len()
+    );
+    drop((t1, t2));
+
+    let (warm, reps_t) = if smoke { (1, 3) } else { (1, 5) };
+    let v1_load = measure(warm, reps_t, || {
+        ResultTable::load_columns(&v1).unwrap()
+    });
+    let v2_load = measure(warm, reps_t, || load_bin(&v2).unwrap());
+    let v1_full = measure(warm, reps_t, || {
+        let t = ResultTable::load_columns(&v1).unwrap();
+        std::hint::black_box(analyze(&t, &space, &schema));
+    });
+    let v2_full = measure(warm, reps_t, || {
+        let t = load_bin(&v2).unwrap();
+        std::hint::black_box(analyze(&t, &space, &schema));
+    });
+    let t = load_bin(&v2).unwrap();
+    let query_only = measure(warm, reps_t, || {
+        std::hint::black_box(analyze(&t, &space, &schema));
+    });
+
+    let load_speedup = v1_load.p50 / v2_load.p50.max(1e-12);
+    let full_speedup = v1_full.p50 / v2_full.p50.max(1e-12);
+    let mut tab = Table::new(
+        "snapshot decode + query over the synthetic store",
+        &["path", "bytes", "decode p50", "decode+query p50", "speedup"],
+    );
+    tab.row(&[
+        "v1 results_columns.json".into(),
+        format!("{bytes_v1}"),
+        fmt_secs(v1_load.p50),
+        fmt_secs(v1_full.p50),
+        "1.0x".into(),
+    ]);
+    tab.row(&[
+        "v2 results.bin".into(),
+        format!("{bytes_v2}"),
+        fmt_secs(v2_load.p50),
+        fmt_secs(v2_full.p50),
+        format!("{full_speedup:.1}x"),
+    ]);
+    tab.row(&[
+        "query only (decoded table)".into(),
+        "-".into(),
+        "-".into(),
+        fmt_secs(query_only.p50),
+        "-".into(),
+    ]);
+    tab.print();
+    println!(
+        "\nbinary snapshot: {load_speedup:.1}x faster decode, \
+         {full_speedup:.1}x faster decode+query, {:.2}x smaller on disk \
+         (target: ≥ 5x decode+query at 10⁶ rows).",
+        bytes_v1 as f64 / bytes_v2 as f64
+    );
+
+    let record = Json::obj([
+        ("bench".to_string(), Json::from("results_query")),
+        ("smoke".to_string(), Json::from(smoke)),
+        ("n_rows".to_string(), Json::from(n as i64)),
+        ("identical_output".to_string(), Json::from(true)),
+        (
+            "v1_json".to_string(),
+            Json::obj([
+                ("bytes".to_string(), Json::from(bytes_v1 as i64)),
+                ("decode_secs".to_string(), Json::from(v1_load.p50)),
+                ("decode_query_secs".to_string(), Json::from(v1_full.p50)),
+            ]),
+        ),
+        (
+            "v2_bin".to_string(),
+            Json::obj([
+                ("bytes".to_string(), Json::from(bytes_v2 as i64)),
+                ("decode_secs".to_string(), Json::from(v2_load.p50)),
+                ("decode_query_secs".to_string(), Json::from(v2_full.p50)),
+            ]),
+        ),
+        ("query_only_secs".to_string(), Json::from(query_only.p50)),
+        ("decode_speedup".to_string(), Json::from(load_speedup)),
+        ("decode_query_speedup".to_string(), Json::from(full_speedup)),
+    ]);
+    std::fs::write(
+        "BENCH_results_query.json",
+        json::to_string_pretty(&record),
+    )
+    .expect("write BENCH_results_query.json");
+    println!("wrote BENCH_results_query.json");
+}

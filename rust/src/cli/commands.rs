@@ -40,8 +40,10 @@ USAGE:
   papas harvest STUDY.yaml [--db DIR]       backfill typed results from
                                             attempts.jsonl + workdirs
   papas query STUDY.yaml [--where EXPR] [--by AXES] [--metric NAMES]
-              [--sort METRIC] [--desc] [--top K] [--format table|csv|json]
-                                            filter/group captured results
+              [--run LATEST|ALL|ID] [--sort METRIC] [--desc] [--top K]
+              [--format table|csv|json]      filter/group captured results
+                                            (default --run LATEST: newest
+                                            row per instance × task)
   papas report STUDY.yaml --metric M --by AXIS [--baseline AXIS=V]
                [--where EXPR] [--format text|json]
                                             per-axis performance summary
@@ -520,12 +522,12 @@ pub fn cmd_harvest(a: &Args) -> Result<()> {
     let table = crate::results::harvest(&study)?;
     let db = crate::study::FileDb::at(&study.db_root);
     println!(
-        "harvested {} result rows × {} metric columns -> {} (+ columnar \
+        "harvested {} result rows × {} metric columns -> {} (+ binary \
          snapshot {})",
         table.len(),
         table.schema().metrics.len(),
         db.results_path().display(),
-        db.results_columns_path().display(),
+        db.results_bin_path().display(),
     );
     Ok(())
 }
@@ -541,7 +543,10 @@ fn load_results(
 ) -> Result<(crate::results::CaptureEngine, crate::results::ResultTable)> {
     let engine = study.capture_engine()?;
     let db = crate::study::FileDb::at(&study.db_root);
-    if !db.results_path().exists() && !db.results_columns_path().exists() {
+    if !db.results_path().exists()
+        && !db.results_bin_path().exists()
+        && !db.results_columns_path().exists()
+    {
         let t = crate::results::harvest(study)?;
         eprintln!(
             "note: no result store found; harvested {} rows from \
@@ -563,7 +568,7 @@ pub fn cmd_query(a: &Args) -> Result<()> {
         Some(_) => Some(a.opt_num::<usize>("top", 0)?),
         None => None,
     };
-    let query = crate::results::Query::parse(
+    let mut query = crate::results::Query::parse(
         engine.schema(),
         study.space(),
         &a.opt_or("where", ""),
@@ -573,6 +578,7 @@ pub fn cmd_query(a: &Args) -> Result<()> {
         a.has_flag("desc"),
         top,
     )?;
+    query.run = crate::results::RunSel::parse(&a.opt_or("run", ""))?;
     if query.by.is_empty() {
         let rows = crate::results::run_flat(&table, study.space(), &query);
         print!(
@@ -974,13 +980,15 @@ mod tests {
         // live capture already produced the store; harvest rebuilds it
         assert!(db.join("results.jsonl").exists());
         cmd_harvest(&args(&[p.to_str().unwrap()], &[("db", dbs)])).unwrap();
-        assert!(db.join("results_columns.json").exists());
+        assert!(db.join("results.bin").exists());
 
         // queries execute in every format, grouped and flat
         for (opts, _) in [
             (vec![("db", dbs), ("where", "v==2"), ("format", "csv")], 1),
             (vec![("db", dbs), ("by", "v"), ("metric", "score")], 3),
             (vec![("db", dbs), ("format", "json")], 3),
+            (vec![("db", dbs), ("run", "ALL"), ("format", "csv")], 3),
+            (vec![("db", dbs), ("run", "0"), ("by", "v")], 3),
             (
                 vec![
                     ("db", dbs),
@@ -998,6 +1006,11 @@ mod tests {
         assert!(cmd_query(&args(
             &[p.to_str().unwrap()],
             &[("db", dbs), ("where", "ghost==1")]
+        ))
+        .is_err());
+        assert!(cmd_query(&args(
+            &[p.to_str().unwrap()],
+            &[("db", dbs), ("run", "newest")]
         ))
         .is_err());
 
@@ -1027,7 +1040,7 @@ mod tests {
         let a = args(&[p.to_str().unwrap()], &[("db", dbs), ("workers", "2")]);
         cmd_search(&a).unwrap();
         assert!(db.join("search.jsonl").exists());
-        assert!(db.join("results_columns.json").exists());
+        assert!(db.join("results.bin").exists());
         // resume with a higher round cap continues the same search
         let mut a = args(&[p.to_str().unwrap()], &[("db", dbs), ("rounds", "3")]);
         a.flags.push("resume".into());

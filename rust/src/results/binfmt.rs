@@ -1,0 +1,506 @@
+//! `results.bin` — the v2 binary columnar snapshot of a result store.
+//!
+//! The JSON snapshot it replaces re-parsed N_rows of text on every
+//! `papas query`; at the 10⁶–10⁷-row scale a parameter study produces
+//! that dominates query time. This format stores every column as a
+//! contiguous fixed-width slab that decodes with `from_le_bytes` in a
+//! tight loop, after a single `std::fs::read`.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! 0    magic "PAPASBC1"                              8 bytes
+//! 8    format version (u32, currently 1)
+//! 12   n_rows (u64)
+//! 20   schema JSON length (u32), then the schema JSON
+//! ---- sections, back to back, in this order:
+//!  [0]   run column              u32 × n_rows
+//!  [1]   instance column         u64 × n_rows
+//!  [2]   task-name table         u32 count, then (u32 len + bytes) each
+//!  [3]   task-index column       u32 × n_rows
+//!  [4..] one digit column        u32 × n_rows          per axis
+//!  [..]  one typed column                              per metric:
+//!          tag (u8): 0 numeric · 1 string · 2 mixed
+//!          presence bitmap       ⌈n_rows/8⌉ bytes (bit set = non-missing)
+//!          tag 0:  f64 × n_rows                    (0.0 filler when absent)
+//!          tag 1:  intern table + u32 × n_rows     (0 filler when absent)
+//!          tag 2:  string bitmap ⌈n_rows/8⌉ bytes, then both of the above
+//! ---- footer:
+//!      section offsets           u64 × n_sections (from file start)
+//!      n_sections (u32)
+//!      magic "PAPASEND"                              8 bytes
+//! ```
+//!
+//! The footer lets a reader jump straight to any column without parsing
+//! the ones before it — an mmap-based reader could scan the slabs in
+//! place; this workspace has no mmap dependency, so [`load_bin`] copies
+//! once into aligned `Vec` buffers instead, which costs one memcpy-rate
+//! pass. Numeric cells are always f64 (the store's only numeric type —
+//! integer builtins like `attempts`/`exit_code` ride in f64 exactly, as
+//! they do everywhere else in the results engine). String cells intern
+//! the column's distinct values once and store a u32 index per row, so
+//! a 10⁶-row `exit_class` column costs 4 MB + a handful of strings.
+
+use super::schema::{MetricValue, Schema};
+use super::store::ResultTable;
+use crate::json;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Binary-snapshot file name under the study database.
+pub const RESULTS_BIN_FILE: &str = "results.bin";
+
+const MAGIC: &[u8; 8] = b"PAPASBC1";
+const END_MAGIC: &[u8; 8] = b"PAPASEND";
+const VERSION: u32 = 1;
+
+/// Metric column holds only numeric (or missing) cells.
+const TAG_NUM: u8 = 0;
+/// Metric column holds only string (or missing) cells.
+const TAG_STR: u8 = 1;
+/// Metric column mixes numeric and string cells.
+const TAG_MIXED: u8 = 2;
+
+fn corrupt(what: impl std::fmt::Display) -> Error {
+    Error::Store(format!("results.bin: {what}"))
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn bitmap(col: &[MetricValue], f: impl Fn(&MetricValue) -> bool) -> Vec<u8> {
+    let mut bits = vec![0u8; (col.len() + 7) / 8];
+    for (i, v) in col.iter().enumerate() {
+        if f(v) {
+            bits[i / 8] |= 1 << (i % 8);
+        }
+    }
+    bits
+}
+
+fn bit(bm: &[u8], i: usize) -> bool {
+    bm[i / 8] & (1 << (i % 8)) != 0
+}
+
+/// Encode `table` into the `results.bin` byte image.
+pub fn encode(table: &ResultTable) -> Vec<u8> {
+    let n = table.len();
+    let mut buf = Vec::with_capacity(64 + n * 24);
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u64(&mut buf, n as u64);
+    put_str(&mut buf, &json::to_string(&table.schema().to_json()));
+
+    let mut offsets: Vec<u64> = Vec::new();
+    offsets.push(buf.len() as u64);
+    for &r in &table.runs {
+        put_u32(&mut buf, r);
+    }
+    offsets.push(buf.len() as u64);
+    for &i in &table.instances {
+        put_u64(&mut buf, i);
+    }
+    offsets.push(buf.len() as u64);
+    put_u32(&mut buf, table.task_names.len() as u32);
+    for t in &table.task_names {
+        put_str(&mut buf, t);
+    }
+    offsets.push(buf.len() as u64);
+    for &t in &table.task_idx {
+        put_u32(&mut buf, t);
+    }
+    for axis in &table.axes {
+        offsets.push(buf.len() as u64);
+        for &d in axis {
+            put_u32(&mut buf, d);
+        }
+    }
+    for col in &table.metrics {
+        offsets.push(buf.len() as u64);
+        encode_metric(&mut buf, col);
+    }
+    for &o in &offsets {
+        put_u64(&mut buf, o);
+    }
+    put_u32(&mut buf, offsets.len() as u32);
+    buf.extend_from_slice(END_MAGIC);
+    buf
+}
+
+fn encode_metric(buf: &mut Vec<u8>, col: &[MetricValue]) {
+    let any_num = col.iter().any(|v| matches!(v, MetricValue::Num(_)));
+    let any_str = col.iter().any(|v| matches!(v, MetricValue::Str(_)));
+    let tag = match (any_num, any_str) {
+        // All-missing columns encode as (empty) numeric.
+        (_, false) => TAG_NUM,
+        (false, true) => TAG_STR,
+        (true, true) => TAG_MIXED,
+    };
+    buf.push(tag);
+    buf.extend_from_slice(&bitmap(col, |v| !matches!(v, MetricValue::Missing)));
+    if tag == TAG_MIXED {
+        buf.extend_from_slice(&bitmap(col, |v| matches!(v, MetricValue::Str(_))));
+    }
+    if tag == TAG_NUM || tag == TAG_MIXED {
+        for v in col {
+            put_f64(buf, if let MetricValue::Num(x) = v { *x } else { 0.0 });
+        }
+    }
+    if tag == TAG_STR || tag == TAG_MIXED {
+        let mut seen: BTreeMap<&str, u32> = BTreeMap::new();
+        let mut intern: Vec<&str> = Vec::new();
+        let mut idx: Vec<u32> = Vec::with_capacity(col.len());
+        for v in col {
+            match v {
+                MetricValue::Str(s) => {
+                    let next = intern.len() as u32;
+                    let j = *seen.entry(s.as_str()).or_insert_with(|| {
+                        intern.push(s);
+                        next
+                    });
+                    idx.push(j);
+                }
+                _ => idx.push(0),
+            }
+        }
+        put_u32(buf, intern.len() as u32);
+        for s in &intern {
+            put_str(buf, s);
+        }
+        for &j in &idx {
+            put_u32(buf, j);
+        }
+    }
+}
+
+/// Bounds-checked reader over the raw file image.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn at(buf: &'a [u8], pos: usize) -> Cur<'a> {
+        Cur { buf, pos }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| corrupt("truncated section"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| corrupt("non-UTF-8 string"))
+    }
+}
+
+/// Decode a `results.bin` byte image into a table.
+pub fn decode(bytes: &[u8]) -> Result<ResultTable> {
+    let mut c = Cur::at(bytes, 0);
+    if c.take(8)? != MAGIC {
+        return Err(corrupt("bad magic (not a results.bin)"));
+    }
+    let version = c.u32()?;
+    if version != VERSION {
+        return Err(corrupt(format!(
+            "unsupported format version {version} (this reader speaks {VERSION})"
+        )));
+    }
+    let n = c.u64()? as usize;
+    let schema_json = c.str()?;
+    let schema = Schema::from_json(
+        &json::parse(&schema_json)
+            .map_err(|e| corrupt(format!("schema header: {e}")))?,
+    )?;
+
+    // Footer: … | offsets (u64 × k) | k (u32) | END_MAGIC (8) — walk it
+    // backwards to find the per-section offsets.
+    let tail = bytes
+        .len()
+        .checked_sub(12)
+        .ok_or_else(|| corrupt("truncated footer"))?;
+    if &bytes[tail + 4..] != END_MAGIC {
+        return Err(corrupt("bad footer magic"));
+    }
+    let n_sections =
+        u32::from_le_bytes(bytes[tail..tail + 4].try_into().unwrap()) as usize;
+    let want = 4 + schema.n_axes + schema.metrics.len();
+    if n_sections != want {
+        return Err(corrupt(format!(
+            "footer lists {n_sections} sections, schema needs {want}"
+        )));
+    }
+    let foot = tail
+        .checked_sub(n_sections * 8)
+        .ok_or_else(|| corrupt("truncated footer"))?;
+    let mut fc = Cur::at(bytes, foot);
+    let mut offsets = Vec::with_capacity(n_sections);
+    for _ in 0..n_sections {
+        offsets.push(fc.u64()? as usize);
+    }
+    let mut sec = offsets.into_iter();
+    let mut next = move || sec.next().expect("section count checked above");
+
+    let mut c = Cur::at(bytes, next());
+    let mut runs = Vec::with_capacity(n);
+    for _ in 0..n {
+        runs.push(c.u32()?);
+    }
+    let mut c = Cur::at(bytes, next());
+    let mut instances = Vec::with_capacity(n);
+    for _ in 0..n {
+        instances.push(c.u64()?);
+    }
+    let mut c = Cur::at(bytes, next());
+    let n_tasks = c.u32()? as usize;
+    let mut task_names = Vec::new();
+    for _ in 0..n_tasks {
+        task_names.push(c.str()?);
+    }
+    let mut c = Cur::at(bytes, next());
+    let mut task_idx = Vec::with_capacity(n);
+    for _ in 0..n {
+        task_idx.push(c.u32()?);
+    }
+    let mut axes = Vec::with_capacity(schema.n_axes);
+    for _ in 0..schema.n_axes {
+        let mut c = Cur::at(bytes, next());
+        let mut col = Vec::with_capacity(n);
+        for _ in 0..n {
+            col.push(c.u32()?);
+        }
+        axes.push(col);
+    }
+    let mut metrics = Vec::with_capacity(schema.metrics.len());
+    for _ in 0..schema.metrics.len() {
+        let mut c = Cur::at(bytes, next());
+        metrics.push(decode_metric(&mut c, n)?);
+    }
+    ResultTable::from_columns(
+        schema, runs, instances, task_names, task_idx, axes, metrics,
+    )
+}
+
+fn decode_metric(c: &mut Cur<'_>, n: usize) -> Result<Vec<MetricValue>> {
+    let tag = c.u8()?;
+    if !(tag == TAG_NUM || tag == TAG_STR || tag == TAG_MIXED) {
+        return Err(corrupt(format!("unknown metric column tag {tag}")));
+    }
+    let present = c.take((n + 7) / 8)?;
+    let strs = if tag == TAG_MIXED { Some(c.take((n + 7) / 8)?) } else { None };
+    let mut nums: Vec<f64> = Vec::new();
+    if tag == TAG_NUM || tag == TAG_MIXED {
+        nums.reserve(n);
+        for _ in 0..n {
+            nums.push(c.f64()?);
+        }
+    }
+    let mut intern: Vec<String> = Vec::new();
+    let mut sidx: Vec<u32> = Vec::new();
+    if tag == TAG_STR || tag == TAG_MIXED {
+        let k = c.u32()? as usize;
+        for _ in 0..k {
+            intern.push(c.str()?);
+        }
+        sidx.reserve(n);
+        for _ in 0..n {
+            sidx.push(c.u32()?);
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let v = if !bit(present, i) {
+            MetricValue::Missing
+        } else if tag == TAG_STR || (tag == TAG_MIXED && bit(strs.unwrap(), i)) {
+            let s = intern
+                .get(sidx[i] as usize)
+                .ok_or_else(|| corrupt("string index out of intern range"))?;
+            MetricValue::Str(s.clone())
+        } else {
+            MetricValue::Num(nums[i])
+        };
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Write `table` as `db_root/results.bin`; returns the path.
+pub fn save_bin(table: &ResultTable, db_root: &Path) -> Result<PathBuf> {
+    std::fs::create_dir_all(db_root)?;
+    let path = db_root.join(RESULTS_BIN_FILE);
+    std::fs::write(&path, encode(table))?;
+    Ok(path)
+}
+
+/// Load a `results.bin`: one read, then offset-directed decode.
+pub fn load_bin(path: &Path) -> Result<ResultTable> {
+    decode(&std::fs::read(path)?)
+}
+
+/// Row count from the fixed 20-byte header alone — `papas status` uses
+/// this to report store size without decoding any column.
+pub fn stored_rows(path: &Path) -> Result<u64> {
+    use std::io::Read;
+    let mut head = [0u8; 20];
+    std::fs::File::open(path)?
+        .read_exact(&mut head)
+        .map_err(|_| corrupt("truncated header"))?;
+    if &head[..8] != MAGIC {
+        return Err(corrupt("bad magic (not a results.bin)"));
+    }
+    let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(corrupt(format!("unsupported format version {version}")));
+    }
+    Ok(u64::from_le_bytes(head[12..20].try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::results::schema::Row;
+
+    fn schema() -> Schema {
+        Schema {
+            params: vec!["t:a".into(), "t:b".into()],
+            axis_of: vec![0, 1],
+            n_axes: 2,
+            metrics: vec![
+                "wall_time".into(),
+                "attempts".into(),
+                "exit_code".into(),
+                "exit_class".into(),
+                "note".into(),
+            ],
+        }
+    }
+
+    /// Exercises every column tag: `wall_time` numeric-with-missing,
+    /// `exit_class` pure string, `note` mixed numeric/string/missing.
+    fn fixture() -> ResultTable {
+        let mut t = ResultTable::new(schema());
+        let cells: [(u32, u64, &str, [u32; 2], MetricValue, MetricValue); 4] = [
+            (0, 0, "t", [0, 0], MetricValue::Num(0.5), MetricValue::Num(7.0)),
+            (0, 1, "t", [1, 0], MetricValue::Missing, MetricValue::Str("x".into())),
+            (1, 1, "t", [1, 0], MetricValue::Num(1.5), MetricValue::Missing),
+            (1, 2, "u", [0, 1], MetricValue::Num(2.5), MetricValue::Str("x".into())),
+        ];
+        for (run, instance, task, d, wall, note) in cells {
+            t.push(Row {
+                run,
+                instance,
+                task_id: task.into(),
+                digits: d.to_vec(),
+                values: vec![
+                    wall,
+                    MetricValue::Num(1.0),
+                    MetricValue::Num(0.0),
+                    MetricValue::Str("ok".into()),
+                    note,
+                ],
+            });
+        }
+        t
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("papas_binfmt").join(tag);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn encode_decode_round_trips_every_tag() {
+        let t = fixture();
+        let back = decode(&encode(&t)).unwrap();
+        assert_eq!(back.schema(), t.schema());
+        assert_eq!(back.len(), t.len());
+        for i in 0..t.len() {
+            assert_eq!(back.row(i), t.row(i), "row {i}");
+            assert_eq!(back.run(i), t.run(i), "run {i}");
+        }
+    }
+
+    #[test]
+    fn save_load_and_header_row_count() {
+        let dir = tmp("save");
+        let t = fixture();
+        let path = save_bin(&t, &dir).unwrap();
+        assert_eq!(path, dir.join(RESULTS_BIN_FILE));
+        assert_eq!(stored_rows(&path).unwrap(), 4);
+        let back = load_bin(&path).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back.row(3), t.row(3));
+    }
+
+    #[test]
+    fn empty_table_round_trips() {
+        let t = ResultTable::new(schema());
+        let back = decode(&encode(&t)).unwrap();
+        assert_eq!(back.len(), 0);
+        assert_eq!(back.schema(), t.schema());
+    }
+
+    #[test]
+    fn corruption_is_an_error_not_garbage() {
+        let t = fixture();
+        let img = encode(&t);
+        // bad leading magic
+        let mut bad = img.clone();
+        bad[0] ^= 0xff;
+        assert!(decode(&bad).unwrap_err().to_string().contains("magic"));
+        // unsupported version
+        let mut bad = img.clone();
+        bad[8] = 0xff;
+        assert!(decode(&bad).unwrap_err().to_string().contains("version"));
+        // truncation anywhere in the body
+        for cut in [10, img.len() / 2, img.len() - 1] {
+            assert!(decode(&img[..cut]).is_err(), "cut at {cut}");
+        }
+        // footer magic damaged
+        let mut bad = img.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0xff;
+        assert!(decode(&bad).unwrap_err().to_string().contains("footer"));
+    }
+}

@@ -383,7 +383,13 @@ impl CaptureEngine {
                 values[*slot] = v;
             }
         }
-        Row { instance: rec.instance, task_id: rec.task_id.clone(), digits, values }
+        Row {
+            run: rec.run,
+            instance: rec.instance,
+            task_id: rec.task_id.clone(),
+            digits,
+            values,
+        }
     }
 }
 
@@ -412,6 +418,7 @@ mod tests {
             error: None,
             worker: "w0".into(),
             stdout: stdout.into(),
+            run: 1,
         }
     }
 
@@ -512,6 +519,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let row = eng.row_for(&rec("a", 1, "m=7 x=9"), vec![1], &dir);
         assert_eq!(row.digits, vec![1]);
+        assert_eq!(row.run, 1); // stamped from the attempt record
         assert_eq!(row.values[0], MetricValue::Num(1.25)); // wall_time
         assert_eq!(row.values[1], MetricValue::Num(2.0)); // attempts
         assert_eq!(row.values[3], MetricValue::Str("ok".into()));

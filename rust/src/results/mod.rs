@@ -10,31 +10,43 @@
 //!   extracted from task outputs (stdout/file regexes); built-ins
 //!   (`wall_time`, `attempts`, `exit_code`, `exit_class`) ride along
 //!   from the attempt log automatically. Specs compile once per study.
-//! * [`schema`] / [`store`] — one row per (instance × task ×
+//! * [`schema`] / [`store`] — one row per (run × instance × task ×
 //!   final-attempt); parameter coordinates stored as interned axis
-//!   digits (reusing `params::intern`), metrics as typed cells.
-//!   Persisted as an append-only `results.jsonl` (written live from the
-//!   scheduler's `on_attempt` hook) plus a columnar
-//!   `results_columns.json` snapshot; `papas harvest` backfills both
-//!   post-hoc from `attempts.jsonl` + the instance workdirs.
-//! * [`query`] — filter (`param==value`, metric ranges), group-by over
-//!   parameter axes, aggregations (mean/std/min/median/max), sorted
-//!   top-k; table/CSV/JSON output (`papas query`).
+//!   digits (reusing `params::intern`), metrics as typed cells, and a
+//!   psweep-style run id marking which execution of the study produced
+//!   the row (repeated runs accumulate as replicates). Persisted as an
+//!   append-only `results.jsonl` (written live from the scheduler's
+//!   `on_attempt` hook) plus the binary columnar snapshot below;
+//!   `papas harvest` backfills both post-hoc from `attempts.jsonl` +
+//!   the instance workdirs.
+//! * [`binfmt`] — the `results.bin` v2 snapshot: versioned header,
+//!   fixed-width u32/u64/f64 column slabs with null bitmaps and
+//!   interned strings, an offsets footer; loads in one read + tight
+//!   `from_le_bytes` loops (the legacy `results_columns.json` v1 JSON
+//!   snapshot is still read for pre-v2 databases).
+//! * [`query`] — run selection (`--run LATEST|ALL|ID`), filter
+//!   (`param==value`, metric ranges), group-by over parameter axes with
+//!   replicate-aware aggregation across runs
+//!   (mean/std/min/median/max), sorted top-k; table/CSV/JSON output
+//!   (`papas query`) — all as single-pass streaming scans over the
+//!   columns.
 //! * [`report`] — per-axis performance summaries with derived speedup
 //!   and parallel efficiency against a named baseline group, plus an
 //!   ASCII trend (`papas report`) — the paper's §6 analysis from a
 //!   finished study with no hand-written scripts.
 
+pub mod binfmt;
 pub mod capture;
 pub mod query;
 pub mod report;
 pub mod schema;
 pub mod store;
 
+pub use binfmt::{load_bin, save_bin, RESULTS_BIN_FILE};
 pub use capture::{CaptureEngine, CaptureSet, CaptureSpec, SourceSpec};
 pub use query::{
     filter_rows, render_flat, render_groups, run_flat, run_grouped, Filter,
-    Format, GroupRow, Query,
+    FlatRow, Format, GroupRow, Query, RunSel,
 };
 pub use report::{build_report, Report, ReportRow};
 pub use schema::{MetricValue, Row, Schema, BUILTIN_METRICS};

@@ -1,15 +1,28 @@
-//! Query layer over a [`ResultTable`]: filter → group → aggregate →
-//! sort/top-k, plus table/CSV/JSON rendering for `papas query`.
+//! Query layer over a [`ResultTable`]: run-select → filter → group →
+//! aggregate → sort/top-k, plus table/CSV/JSON rendering for
+//! `papas query`.
 //!
-//! Filters and group-bys address **parameter axes** by (suffix-resolved)
-//! name and compare against axis *digits* — a `threads==4` filter
-//! resolves "4" to its interned digit once and then scans a `u32`
-//! column, never touching strings. Metric filters compare numerically.
+//! Execution is a **single streaming pass** over the columns: each row
+//! index flows through the run selector and the filter conjunction
+//! once, and grouped queries fold matching cells straight into
+//! per-group accumulators — no per-group row sets, no materialized
+//! rows. Filters and group-bys address **parameter axes** by
+//! (suffix-resolved) name and compare against axis *digits* — a
+//! `threads==4` filter resolves "4" to its interned digit once and then
+//! scans a `u32` column, never touching strings. Metric filters compare
+//! numerically against the f64 column.
 //!
 //! ```text
 //! papas query study.yaml --where 'threads==4 && wall_time<2.5' \
 //!     --by size --metric wall_time --format csv
 //! ```
+//!
+//! Multi-run provenance: every row carries the run id of the execution
+//! that produced it. [`RunSel`] picks the view — `LATEST` (default)
+//! folds to the newest row per (instance, task), reproducing the
+//! single-run behavior; `ALL` keeps every run's rows, so a `--by`
+//! group-by aggregates replicates across runs; a numeric id isolates
+//! one run.
 //!
 //! Aggregations reuse [`crate::util::stats::Summary`] (n, mean, sample
 //! stddev, min, median, max). The whole layer is pure in-memory — the
@@ -80,10 +93,47 @@ pub enum Filter {
     },
 }
 
-/// A parsed query: conjunction of filters, optional group-by axes,
-/// metrics to aggregate, and output shaping.
+/// Which runs of a multi-run store a query sees (`--run`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RunSel {
+    /// The newest row per (instance, task) key across runs — the
+    /// effective current state of the study. A resumed execution only
+    /// re-runs part of the grid, so "rows of the highest run id" would
+    /// silently drop the rest; folding per key keeps full coverage.
+    /// The default, and identical to the whole store when only one run
+    /// exists.
+    #[default]
+    Latest,
+    /// Every run's rows — replicates stay visible, `--by` aggregates
+    /// across them.
+    All,
+    /// Exactly the rows of one run id.
+    Id(u32),
+}
+
+impl RunSel {
+    /// Parse a `--run` argument: `LATEST` | `ALL` | a numeric run id
+    /// (case-insensitive; empty = `LATEST`).
+    pub fn parse(s: &str) -> Result<RunSel> {
+        let t = s.trim();
+        match t.to_ascii_uppercase().as_str() {
+            "" | "LATEST" => Ok(RunSel::Latest),
+            "ALL" => Ok(RunSel::All),
+            _ => t.parse::<u32>().map(RunSel::Id).map_err(|_| {
+                Error::Store(format!(
+                    "--run must be LATEST, ALL, or a run id, got '{t}'"
+                ))
+            }),
+        }
+    }
+}
+
+/// A parsed query: run selection, conjunction of filters, optional
+/// group-by axes, metrics to aggregate, and output shaping.
 #[derive(Debug, Clone, Default)]
 pub struct Query {
+    /// Which runs the query sees (`--run`, default `LATEST`).
+    pub run: RunSel,
     /// Conjunctive filter clauses.
     pub filters: Vec<Filter>,
     /// Group-by: (param index, axis index) pairs, in request order.
@@ -216,22 +266,61 @@ fn parse_clause(schema: &Schema, space: &Space, clause: &str) -> Result<Filter> 
     Ok(Filter::Param { axis: schema.axis_of[p], negate, digit })
 }
 
-/// Rows (by table index) surviving the filter conjunction.
+/// Does row `i` survive the filter conjunction? Pure column probes —
+/// one `u32` compare per parameter clause, one f64 compare per metric
+/// clause.
+fn row_matches(table: &ResultTable, filters: &[Filter], i: usize) -> bool {
+    filters.iter().all(|f| match f {
+        Filter::Param { axis, negate, digit } => {
+            let hit = digit.is_some_and(|d| table.digit(*axis, i) == d);
+            hit != *negate
+        }
+        Filter::Metric { metric, op, value } => table
+            .value(*metric, i)
+            .as_f64()
+            .is_some_and(|x| op.apply(x, *value)),
+    })
+}
+
+/// Rows (by table index) surviving the filter conjunction, ignoring run
+/// selection (kept for callers and reference implementations that
+/// predate multi-run provenance).
 pub fn filter_rows(table: &ResultTable, filters: &[Filter]) -> Vec<usize> {
-    (0..table.len())
-        .filter(|&i| {
-            filters.iter().all(|f| match f {
-                Filter::Param { axis, negate, digit } => {
-                    let hit = digit.is_some_and(|d| table.digit(*axis, i) == d);
-                    hit != *negate
-                }
-                Filter::Metric { metric, op, value } => table
-                    .value(*metric, i)
-                    .as_f64()
-                    .is_some_and(|x| op.apply(x, *value)),
-            })
-        })
-        .collect()
+    (0..table.len()).filter(|&i| row_matches(table, filters, i)).collect()
+}
+
+/// The newest row per (instance, task) key — ties on run id go to the
+/// later row, matching "last attempt wins". Indices come out in
+/// (instance, task id) order, the order single-run queries always had.
+fn latest_rows(table: &ResultTable) -> Vec<usize> {
+    let mut best: std::collections::BTreeMap<(u64, &str), usize> =
+        std::collections::BTreeMap::new();
+    for i in 0..table.len() {
+        let key = (table.instance(i), table.task_id(i));
+        match best.get(&key) {
+            Some(&j) if table.run(j) > table.run(i) => {}
+            _ => {
+                best.insert(key, i);
+            }
+        }
+    }
+    best.into_values().collect()
+}
+
+/// Stream the row indices a [`RunSel`] admits, in output order. `All`
+/// and `Id` walk the table directly (no index buffer); `Latest` needs
+/// one pre-pass to know which rows survive the per-key fold.
+fn run_selected<'a>(
+    table: &'a ResultTable,
+    sel: RunSel,
+) -> Box<dyn Iterator<Item = usize> + 'a> {
+    match sel {
+        RunSel::All => Box::new(0..table.len()),
+        RunSel::Id(r) => {
+            Box::new((0..table.len()).filter(move |&i| table.run(i) == r))
+        }
+        RunSel::Latest => Box::new(latest_rows(table).into_iter()),
+    }
 }
 
 /// One output group of a grouped query.
@@ -248,9 +337,14 @@ pub struct GroupRow {
     pub stats: Vec<(String, Summary)>,
 }
 
-/// Execute a grouped query: filter, bucket by the `--by` axis digits,
-/// summarize each requested metric per bucket. Buckets order by their
-/// digit tuple (= axis declaration order of values).
+/// Execute a grouped query as one streaming pass: each row index flows
+/// through run selection and the filter conjunction once, and matching
+/// rows fold their metric cells straight into per-group sample
+/// accumulators — no per-group row sets. Groups are summarized with
+/// [`Summary::from_samples`] (so the stats are bit-identical to a
+/// naive gather-then-summarize) and order by their digit tuple (= axis
+/// declaration order of values). With `--run ALL`, a group spans every
+/// run's rows for its key — replicates aggregate together.
 pub fn run_grouped(
     table: &ResultTable,
     space: &Space,
@@ -260,15 +354,26 @@ pub fn run_grouped(
         return Err(Error::Store("grouped query needs --by AXES".into()));
     }
     let schema = table.schema();
-    let rows = filter_rows(table, &q.filters);
-    let mut buckets: std::collections::BTreeMap<Vec<u32>, Vec<usize>> =
+    // Per group: row count + one numeric-sample accumulator per metric.
+    let mut buckets: std::collections::BTreeMap<Vec<u32>, (usize, Vec<Vec<f64>>)> =
         std::collections::BTreeMap::new();
-    for i in rows {
+    for i in run_selected(table, q.run) {
+        if !row_matches(table, &q.filters, i) {
+            continue;
+        }
         let key: Vec<u32> = q.by.iter().map(|&(_, a)| table.digit(a, i)).collect();
-        buckets.entry(key).or_default().push(i);
+        let (n, samples) = buckets
+            .entry(key)
+            .or_insert_with(|| (0, vec![Vec::new(); q.metrics.len()]));
+        *n += 1;
+        for (slot, &m) in samples.iter_mut().zip(&q.metrics) {
+            if let Some(x) = table.value(m, i).as_f64() {
+                slot.push(x);
+            }
+        }
     }
     let mut out = Vec::with_capacity(buckets.len());
-    for (digits, members) in buckets {
+    for (digits, (n, samples)) in buckets {
         let key = q
             .by
             .iter()
@@ -283,15 +388,10 @@ pub fn run_grouped(
         let stats = q
             .metrics
             .iter()
-            .map(|&m| {
-                let xs: Vec<f64> = members
-                    .iter()
-                    .filter_map(|&i| table.value(m, i).as_f64())
-                    .collect();
-                (schema.metrics[m].clone(), Summary::from_samples(&xs))
-            })
+            .zip(&samples)
+            .map(|(&m, xs)| (schema.metrics[m].clone(), Summary::from_samples(xs)))
             .collect();
-        out.push(GroupRow { key, key_digits: digits, n: members.len(), stats });
+        out.push(GroupRow { key, key_digits: digits, n, stats });
     }
     sort_and_truncate_groups(&mut out, q);
     Ok(out)
@@ -335,6 +435,8 @@ fn sort_and_truncate_groups(groups: &mut Vec<GroupRow>, q: &Query) {
 /// A decoded flat row of an ungrouped query.
 #[derive(Debug, Clone)]
 pub struct FlatRow {
+    /// Run id of the execution that produced the row.
+    pub run: u32,
     /// Global combination index.
     pub instance: u64,
     /// Task id.
@@ -345,11 +447,14 @@ pub struct FlatRow {
     pub metrics: Vec<(String, MetricValue)>,
 }
 
-/// Execute an ungrouped query: filter, decode each surviving row's
-/// parameter values, project the requested metrics, sort/top-k.
+/// Execute an ungrouped query: run-select + filter in one pass, decode
+/// each surviving row's parameter values, project the requested
+/// metrics, sort/top-k.
 pub fn run_flat(table: &ResultTable, space: &Space, q: &Query) -> Vec<FlatRow> {
     let schema = table.schema();
-    let mut idx = filter_rows(table, &q.filters);
+    let mut idx: Vec<usize> = run_selected(table, q.run)
+        .filter(|&i| row_matches(table, &q.filters, i))
+        .collect();
     if let Some(m) = q.sort {
         // Missing/non-numeric cells sort last in either direction.
         idx.sort_by(|&a, &b| {
@@ -365,6 +470,7 @@ pub fn run_flat(table: &ResultTable, space: &Space, q: &Query) -> Vec<FlatRow> {
     }
     idx.into_iter()
         .map(|i| FlatRow {
+            run: table.run(i),
             instance: table.instance(i),
             task_id: table.task_id(i).to_string(),
             params: schema
@@ -470,6 +576,7 @@ pub fn render_flat(rows: &[FlatRow], schema: &Schema, q: &Query, f: Format) -> S
                 .iter()
                 .map(|r| {
                     let mut obj: Vec<(String, Json)> = vec![
+                        ("run".into(), Json::from(r.run as i64)),
                         ("instance".into(), Json::from(r.instance as i64)),
                         ("task".into(), Json::from(r.task_id.as_str())),
                     ];
@@ -485,7 +592,8 @@ pub fn render_flat(rows: &[FlatRow], schema: &Schema, q: &Query, f: Format) -> S
             json::to_string_pretty(&Json::Arr(arr))
         }
         Format::Table | Format::Csv => {
-            let mut header: Vec<String> = vec!["instance".into(), "task".into()];
+            let mut header: Vec<String> =
+                vec!["run".into(), "instance".into(), "task".into()];
             header.extend(schema.params.iter().map(|p| short_param(p).to_string()));
             header.extend(
                 q.metrics.iter().map(|&m| schema.metrics[m].clone()),
@@ -493,7 +601,11 @@ pub fn render_flat(rows: &[FlatRow], schema: &Schema, q: &Query, f: Format) -> S
             let data: Vec<Vec<String>> = rows
                 .iter()
                 .map(|r| {
-                    let mut cells = vec![r.instance.to_string(), r.task_id.clone()];
+                    let mut cells = vec![
+                        r.run.to_string(),
+                        r.instance.to_string(),
+                        r.task_id.clone(),
+                    ];
                     cells.extend(r.params.iter().map(|(_, v)| v.clone()));
                     cells.extend(r.metrics.iter().map(|(_, v)| v.display()));
                     cells
@@ -613,6 +725,7 @@ mod tests {
             let size: f64 =
                 space.params()[1].values[digits[1] as usize].parse().unwrap();
             table.push(Row {
+                run: 0,
                 instance: i,
                 task_id: "t".into(),
                 digits,
@@ -625,6 +738,24 @@ mod tests {
             });
         }
         (table, space)
+    }
+
+    /// The fixture plus a second run re-measuring the threads==1 rows
+    /// with doubled wall_time.
+    fn fixture_two_runs() -> (ResultTable, Space) {
+        let (table, space) = fixture();
+        let mut rows: Vec<Row> = (0..table.len()).map(|i| table.row(i)).collect();
+        for i in 0..table.len() {
+            if table.digit(0, i) == 0 {
+                let mut r = table.row(i);
+                r.run = 1;
+                if let MetricValue::Num(x) = &mut r.values[0] {
+                    *x *= 2.0;
+                }
+                rows.push(r);
+            }
+        }
+        (ResultTable::from_rows(table.schema().clone(), rows), space)
     }
 
     fn q(
@@ -693,6 +824,60 @@ mod tests {
     }
 
     #[test]
+    fn run_latest_folds_to_the_newest_row_per_key() {
+        let (table, space) = fixture_two_runs();
+        // 6 run-0 rows + 2 run-1 replicates of the threads==1 rows.
+        assert_eq!(table.len(), 8);
+        let query = q(&table, &space, "threads==1", "", "wall_time");
+        // default LATEST: one row per (instance, task), run-1 values win
+        let rows = run_flat(&table, &space, &query);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.run, 1, "{r:?}");
+        }
+        assert_eq!(rows[0].metrics[0].1, MetricValue::Num(128.0));
+        assert_eq!(rows[1].metrics[0].1, MetricValue::Num(256.0));
+        // untouched keys still appear, from run 0
+        let all_latest = run_flat(&table, &space, &q(&table, &space, "", "", ""));
+        assert_eq!(all_latest.len(), 6);
+        assert_eq!(
+            all_latest.iter().filter(|r| r.run == 1).count(),
+            2,
+            "{all_latest:?}"
+        );
+    }
+
+    #[test]
+    fn run_all_and_id_select_replicates() {
+        let (table, space) = fixture_two_runs();
+        let mut query = q(&table, &space, "threads==1", "", "wall_time");
+        query.run = RunSel::All;
+        assert_eq!(run_flat(&table, &space, &query).len(), 4);
+        query.run = RunSel::Id(0);
+        let rows = run_flat(&table, &space, &query);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].metrics[0].1, MetricValue::Num(64.0));
+        query.run = RunSel::Id(7); // nonexistent run: empty, not an error
+        assert_eq!(run_flat(&table, &space, &query).len(), 0);
+
+        // replicate-aware group-by: with ALL, threads==1 aggregates
+        // run-0 (64, 128) and run-1 (128, 256) samples together.
+        let mut gq = q(&table, &space, "", "threads", "wall_time");
+        gq.run = RunSel::All;
+        let groups = run_grouped(&table, &space, &gq).unwrap();
+        assert_eq!(groups[0].key[0].1, "1");
+        assert_eq!(groups[0].n, 4);
+        assert!((groups[0].stats[0].1.mean - 144.0).abs() < 1e-12);
+        // other thread counts have no replicates
+        assert_eq!(groups[1].n, 2);
+
+        assert_eq!(RunSel::parse("latest").unwrap(), RunSel::Latest);
+        assert_eq!(RunSel::parse("ALL").unwrap(), RunSel::All);
+        assert_eq!(RunSel::parse("3").unwrap(), RunSel::Id(3));
+        assert!(RunSel::parse("newest").is_err());
+    }
+
+    #[test]
     fn bad_clauses_rejected() {
         let (table, space) = fixture();
         let s = table.schema();
@@ -723,7 +908,10 @@ mod tests {
         assert!(t.lines().next().unwrap().contains("threads"), "{t}");
         assert_eq!(t.lines().count(), 3);
         let c = render_flat(&rows, table.schema(), &query, Format::Csv);
-        assert!(c.starts_with("instance,task,threads,size,wall_time\n"), "{c}");
+        assert!(
+            c.starts_with("run,instance,task,threads,size,wall_time\n"),
+            "{c}"
+        );
         let j = render_flat(&rows, table.schema(), &query, Format::Json);
         let parsed = json::parse(&j).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 2);

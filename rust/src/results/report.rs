@@ -66,7 +66,9 @@ pub struct Report {
 
 /// Build the report: group the (filtered) table by one axis, aggregate
 /// one metric, derive speedup/efficiency against `baseline`
-/// (`value-of-the-by-axis`, e.g. `--baseline threads=1`).
+/// (`value-of-the-by-axis`, e.g. `--baseline threads=1`). Rides on the
+/// streaming grouped query with the default `LATEST` run view — on a
+/// multi-run store the report reflects each key's newest measurement.
 pub fn build_report(
     table: &ResultTable,
     space: &Space,
@@ -305,6 +307,7 @@ mod tests {
                 .parse()
                 .unwrap();
             table.push(Row {
+                run: 0,
                 instance: i,
                 task_id: "t".into(),
                 digits,

@@ -199,9 +199,14 @@ impl Schema {
     }
 }
 
-/// One result row: the final attempt of one task under one combination.
+/// One result row: the final attempt of one task under one combination,
+/// within one run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Row {
+    /// Run id: which execution of the study produced this row (psweep's
+    /// `_run` provenance). Repeated `papas run`/`search` invocations
+    /// append under fresh ids, so rows accumulate as replicates.
+    pub run: u32,
     /// Global combination index of the instance.
     pub instance: u64,
     /// Task id within the study.
@@ -224,6 +229,7 @@ impl Row {
     /// evolves between runs.
     pub fn to_json(&self, schema: &Schema) -> Json {
         Json::obj([
+            ("run".to_string(), Json::from(self.run as i64)),
             ("instance".to_string(), Json::from(self.instance as i64)),
             ("task".to_string(), Json::from(self.task_id.as_str())),
             (
@@ -279,6 +285,8 @@ impl Row {
             })
             .collect();
         Ok(Row {
+            // Absent on logs written before multi-run provenance.
+            run: j.get("run").and_then(Json::as_i64).unwrap_or(0) as u32,
             instance: j.expect_i64("instance")? as u64,
             task_id: j.expect_str("task")?.to_string(),
             digits,
@@ -337,6 +345,7 @@ mod tests {
     fn row_round_trips_and_skips_missing() {
         let s = schema();
         let row = Row {
+            run: 3,
             instance: 7,
             task_id: "t".into(),
             digits: vec![2, 0],
@@ -357,6 +366,19 @@ mod tests {
     }
 
     #[test]
+    fn pre_run_rows_read_as_run_zero() {
+        let s = schema();
+        let j = crate::json::parse(
+            "{\"instance\":1,\"task\":\"t\",\"digits\":[0,1],\
+             \"metrics\":{\"wall_time\":0.5}}",
+        )
+        .unwrap();
+        let row = Row::from_json(&j, &s).unwrap();
+        assert_eq!(row.run, 0);
+        assert_eq!(row.values[0], MetricValue::Num(0.5));
+    }
+
+    #[test]
     fn schema_round_trips() {
         let s = schema();
         let back = Schema::from_json(&s.to_json()).unwrap();
@@ -367,6 +389,7 @@ mod tests {
     fn digit_arity_mismatch_rejected() {
         let s = schema();
         let mut row = Row {
+            run: 0,
             instance: 0,
             task_id: "t".into(),
             digits: vec![1],

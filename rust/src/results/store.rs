@@ -1,24 +1,36 @@
-//! The study result store: an append-only row log plus a columnar
-//! snapshot, both under the study's file database.
+//! The study result store: an append-only row log plus a binary
+//! columnar snapshot, both under the study's file database.
 //!
 //! * `results.jsonl` — one [`Row`] per line, appended **live** from the
 //!   scheduler's `on_attempt` hook as terminal attempts land (crash
 //!   tolerant, like `attempts.jsonl`), or rewritten wholesale by
 //!   `papas harvest`;
-//! * `results_columns.json` — the columnar snapshot: the schema header
-//!   plus one array per axis and per metric. Loads without re-parsing
-//!   N_rows little objects and is the query layer's preferred source.
+//! * `results.bin` — the v2 binary columnar snapshot
+//!   ([`super::binfmt`]): versioned header, fixed-width `u32`/`u64`
+//!   digit and id columns, typed metric columns with null bitmaps, and
+//!   an offsets footer. Loads in one read + tight `from_le_bytes`
+//!   loops and is the query layer's preferred source;
+//! * `results_columns.json` — the legacy v1 JSON snapshot. Still read
+//!   (pre-v2 databases) and still writable via
+//!   [`ResultTable::save_columns`] — the `results_query` benchmark
+//!   times the two paths against each other — but no longer written by
+//!   [`ResultTable::save`].
 //!
-//! Rows are keyed by `task_id#instance`; a resumed run that re-executes
-//! a previously failed task appends a second row for the same key, and
-//! table construction keeps the **last** row per key — the final
-//! attempt wins, matching checkpoint semantics.
+//! Rows are keyed by `(run, instance, task_id)` — psweep-style `_run`
+//! provenance. Each `papas run`/`search` execution of a study appends
+//! its rows under a fresh run id, so repeated executions accumulate as
+//! replicates instead of overwriting each other; *within* one run the
+//! **last** row per key wins (a resumed run that re-executes a
+//! previously failed task supersedes its earlier row — the final
+//! attempt wins, matching checkpoint semantics). The query layer's
+//! `--run` selector (default `LATEST`) folds back down to one row per
+//! (instance, task) when a single-run view is wanted.
 //!
 //! [`harvest`] backfills the whole store post-hoc from `attempts.jsonl`
-//! (which carries each attempt's captured stdout) plus the instance
-//! workdirs — so a study executed before its `capture:` block was
-//! written, or on a host that crashed mid-run, still yields a complete
-//! result set.
+//! (which carries each attempt's captured stdout and run id) plus the
+//! instance workdirs — so a study executed before its `capture:` block
+//! was written, or on a host that crashed mid-run, still yields a
+//! complete result set.
 
 use super::schema::{MetricValue, Row, Schema};
 use crate::json::{self, Json};
@@ -77,19 +89,26 @@ impl ResultLog {
 
 /// A study's result set in columnar form: per-axis digit columns and
 /// per-metric value columns, one position per row.
+///
+/// Fields are `pub(crate)` so the binary snapshot codec
+/// ([`super::binfmt`]) can serialize the columns as contiguous slabs
+/// without a row-at-a-time detour; everyone else goes through the
+/// accessors.
 #[derive(Debug)]
 pub struct ResultTable {
-    schema: Schema,
+    pub(crate) schema: Schema,
+    /// Run id per row (which execution of the study produced it).
+    pub(crate) runs: Vec<u32>,
     /// Global combination index per row.
-    instances: Vec<u64>,
+    pub(crate) instances: Vec<u64>,
     /// Interned task ids.
-    task_names: Vec<String>,
+    pub(crate) task_names: Vec<String>,
     /// Index into `task_names` per row.
-    task_idx: Vec<u32>,
+    pub(crate) task_idx: Vec<u32>,
     /// Digit columns: `axes[a][row]`, `schema.n_axes` columns.
-    axes: Vec<Vec<u32>>,
+    pub(crate) axes: Vec<Vec<u32>>,
     /// Metric columns, parallel to `schema.metrics`.
-    metrics: Vec<Vec<MetricValue>>,
+    pub(crate) metrics: Vec<Vec<MetricValue>>,
 }
 
 impl ResultTable {
@@ -99,12 +118,39 @@ impl ResultTable {
         let n_metrics = schema.metrics.len();
         ResultTable {
             schema,
+            runs: Vec::new(),
             instances: Vec::new(),
             task_names: Vec::new(),
             task_idx: Vec::new(),
             axes: vec![Vec::new(); n_axes],
             metrics: vec![Vec::new(); n_metrics],
         }
+    }
+
+    /// Assemble a table directly from decoded columns (the binary
+    /// snapshot reader). Cross-column arity is validated so a corrupt
+    /// file cannot produce an inconsistent table.
+    pub(crate) fn from_columns(
+        schema: Schema,
+        runs: Vec<u32>,
+        instances: Vec<u64>,
+        task_names: Vec<String>,
+        task_idx: Vec<u32>,
+        axes: Vec<Vec<u32>>,
+        metrics: Vec<Vec<MetricValue>>,
+    ) -> Result<ResultTable> {
+        let n = instances.len();
+        let consistent = runs.len() == n
+            && task_idx.len() == n
+            && axes.len() == schema.n_axes
+            && axes.iter().all(|c| c.len() == n)
+            && metrics.len() == schema.metrics.len()
+            && metrics.iter().all(|c| c.len() == n)
+            && task_idx.iter().all(|&t| (t as usize) < task_names.len());
+        if !consistent {
+            return Err(Error::Store("results.bin: column arity mismatch".into()));
+        }
+        Ok(ResultTable { schema, runs, instances, task_names, task_idx, axes, metrics })
     }
 
     /// The table's schema.
@@ -126,6 +172,7 @@ impl ResultTable {
     pub fn push(&mut self, row: Row) {
         debug_assert_eq!(row.digits.len(), self.schema.n_axes);
         debug_assert_eq!(row.values.len(), self.schema.metrics.len());
+        self.runs.push(row.run);
         self.instances.push(row.instance);
         let t = match self.task_names.iter().position(|t| *t == row.task_id) {
             Some(i) => i as u32,
@@ -141,6 +188,11 @@ impl ResultTable {
         for (col, v) in self.metrics.iter_mut().zip(row.values) {
             col.push(v);
         }
+    }
+
+    /// Run id of row `i`.
+    pub fn run(&self, i: usize) -> u32 {
+        self.runs[i]
     }
 
     /// Global combination index of row `i`.
@@ -167,6 +219,7 @@ impl ResultTable {
     /// columnar).
     pub fn row(&self, i: usize) -> Row {
         Row {
+            run: self.runs[i],
             instance: self.instances[i],
             task_id: self.task_id(i).to_string(),
             digits: self.axes.iter().map(|c| c[i]).collect(),
@@ -174,13 +227,14 @@ impl ResultTable {
         }
     }
 
-    /// Build from rows, keeping the **last** row per `task_id#instance`
-    /// key (final attempt wins on resume) and ordering rows by
-    /// (instance, task id).
+    /// Build from rows, keeping the **last** row per
+    /// `(run, instance, task_id)` key (within one run the final attempt
+    /// wins on resume; distinct runs keep their rows as replicates) and
+    /// ordering rows by (run, instance, task id).
     pub fn from_rows(schema: Schema, rows: Vec<Row>) -> ResultTable {
-        let mut last: BTreeMap<(u64, String), Row> = BTreeMap::new();
+        let mut last: BTreeMap<(u32, u64, String), Row> = BTreeMap::new();
         for row in rows {
-            last.insert((row.instance, row.task_id.clone()), row);
+            last.insert((row.run, row.instance, row.task_id.clone()), row);
         }
         let mut table = ResultTable::new(schema);
         for (_, row) in last {
@@ -211,18 +265,28 @@ impl ResultTable {
         Ok(rows)
     }
 
-    /// Load the table: the columnar snapshot when present,
-    /// schema-compatible, **and at least as fresh as the row log** —
-    /// else rebuilt from `results.jsonl`. (A run killed after appending
-    /// live rows but before re-snapshotting leaves the log newer; the
-    /// snapshot is an optimization, never the authority.) Errors when
-    /// neither source exists.
+    /// Load the table: the binary `results.bin` snapshot when present,
+    /// schema-compatible, **and at least as fresh as the row log**;
+    /// else the legacy `results_columns.json` snapshot under the same
+    /// conditions (pre-v2 databases); else rebuilt from
+    /// `results.jsonl`. (A run killed after appending live rows but
+    /// before re-snapshotting leaves the log newer; a snapshot is an
+    /// optimization, never the authority.) Errors when no source
+    /// exists.
     pub fn load(db_root: &Path, schema: &Schema) -> Result<ResultTable> {
+        let log = db_root.join(RESULTS_FILE);
+        let bin = db_root.join(super::binfmt::RESULTS_BIN_FILE);
+        if file_is_fresh(&bin, &log) {
+            match super::binfmt::load_bin(&bin) {
+                Ok(t) if t.schema == *schema => return Ok(t),
+                // Corrupt or foreign snapshot: fall through.
+                _ => {}
+            }
+        }
         let snap = db_root.join(COLUMNS_FILE);
-        if snapshot_is_fresh(db_root) {
+        if file_is_fresh(&snap, &log) {
             match Self::load_columns(&snap) {
                 Ok(t) if t.schema == *schema => return Ok(t),
-                // Corrupt or foreign snapshot: fall through to the log.
                 _ => {}
             }
         }
@@ -239,11 +303,18 @@ impl ResultTable {
         Ok(Self::from_rows(schema.clone(), rows))
     }
 
-    /// Write the columnar snapshot under `db_root`.
+    /// Write the **legacy v1 JSON** columnar snapshot under `db_root`.
+    /// [`save`](Self::save) no longer calls this — it exists for pre-v2
+    /// databases and as the baseline path of the `results_query`
+    /// benchmark.
     pub fn save_columns(&self, db_root: &Path) -> Result<PathBuf> {
         let j = Json::obj([
             ("schema".to_string(), self.schema.to_json()),
             ("n_rows".to_string(), Json::from(self.len())),
+            (
+                "runs".to_string(),
+                Json::Arr(self.runs.iter().map(|&r| Json::from(r as i64)).collect()),
+            ),
             (
                 "instances".to_string(),
                 Json::Arr(self.instances.iter().map(|&i| Json::from(i as i64)).collect()),
@@ -292,8 +363,10 @@ impl ResultTable {
         Ok(path)
     }
 
-    /// Parse the columnar snapshot.
-    fn load_columns(path: &Path) -> Result<ResultTable> {
+    /// Parse the legacy v1 JSON columnar snapshot (public so the
+    /// `results_query` benchmark can time this path against the binary
+    /// one).
+    pub fn load_columns(path: &Path) -> Result<ResultTable> {
         let j = json::parse(&std::fs::read_to_string(path)?)?;
         let schema = Schema::from_json(j.expect("schema")?)?;
         let ints = |v: &Json, what: &str| -> Result<Vec<i64>> {
@@ -308,6 +381,12 @@ impl ResultTable {
                 .collect()
         };
         let n_rows = j.expect_i64("n_rows")? as usize;
+        let runs: Vec<u32> = match j.get("runs") {
+            // Absent on snapshots written before multi-run provenance:
+            // everything belongs to run 0.
+            None => vec![0; n_rows],
+            Some(v) => ints(v, "runs")?.into_iter().map(|x| x as u32).collect(),
+        };
         let instances: Vec<u64> = ints(j.expect("instances")?, "instances")?
             .into_iter()
             .map(|x| x as u64)
@@ -349,7 +428,8 @@ impl ResultTable {
             })
             .collect::<Result<_>>()?;
         // Arity checks: a truncated snapshot must not read as valid.
-        let consistent = instances.len() == n_rows
+        let consistent = runs.len() == n_rows
+            && instances.len() == n_rows
             && task_idx.len() == n_rows
             && axes.len() == schema.n_axes
             && axes.iter().all(|c| c.len() == n_rows)
@@ -361,11 +441,11 @@ impl ResultTable {
                 path.display()
             )));
         }
-        Ok(ResultTable { schema, instances, task_names, task_idx, axes, metrics })
+        Ok(ResultTable { schema, runs, instances, task_names, task_idx, axes, metrics })
     }
 
-    /// Rewrite both persisted forms (`results.jsonl` + snapshot) from
-    /// this table.
+    /// Rewrite both persisted forms (`results.jsonl` + the binary
+    /// `results.bin` snapshot) from this table.
     pub fn save(&self, db_root: &Path) -> Result<()> {
         std::fs::create_dir_all(db_root)?;
         let mut out = String::new();
@@ -374,21 +454,18 @@ impl ResultTable {
             out.push('\n');
         }
         std::fs::write(db_root.join(RESULTS_FILE), out)?;
-        self.save_columns(db_root)?;
+        super::binfmt::save_bin(self, db_root)?;
         Ok(())
     }
 }
 
-/// True when the columnar snapshot exists and is at least as fresh as
-/// the row log (the single definition of staleness, shared by
-/// [`ResultTable::load`] and [`stored_row_count`]).
-fn snapshot_is_fresh(db_root: &Path) -> bool {
-    let mtime =
-        |p: PathBuf| std::fs::metadata(p).and_then(|m| m.modified()).ok();
-    match (
-        mtime(db_root.join(COLUMNS_FILE)),
-        mtime(db_root.join(RESULTS_FILE)),
-    ) {
+/// True when snapshot file `snap` exists and is at least as fresh as
+/// the row log `log` (mtime compare; a missing log makes any snapshot
+/// fresh). The single definition of staleness, shared by
+/// [`ResultTable::load`] and [`stored_row_count`].
+fn file_is_fresh(snap: &Path, log: &Path) -> bool {
+    let mtime = |p: &Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+    match (mtime(snap), mtime(log)) {
         (Some(s), Some(l)) => s >= l,
         (Some(_), None) => true,
         _ => false,
@@ -396,13 +473,23 @@ fn snapshot_is_fresh(db_root: &Path) -> bool {
 }
 
 /// Deduplicated row count of the persisted store, cheap-first: the
-/// fresh snapshot's `n_rows` header (O(1) at any scale), else a
-/// distinct-key scan of the row log (a resumed run appends superseding
-/// rows; the table keeps the last per key, so a raw line count would
-/// disagree with `papas query`). `None` = no store at all.
+/// fresh binary snapshot's `n_rows` header field (20 bytes read at any
+/// scale), else the fresh legacy JSON snapshot's `n_rows`, else a
+/// distinct-`(run, instance, task)` scan of the row log (a resumed run
+/// appends superseding rows; the table keeps the last per key, so a
+/// raw line count would disagree with `papas query`). `None` = no
+/// store at all.
 pub fn stored_row_count(db_root: &Path) -> Option<usize> {
-    if snapshot_is_fresh(db_root) {
-        let n = std::fs::read_to_string(db_root.join(COLUMNS_FILE))
+    let log = db_root.join(RESULTS_FILE);
+    let bin = db_root.join(super::binfmt::RESULTS_BIN_FILE);
+    if file_is_fresh(&bin, &log) {
+        if let Ok(n) = super::binfmt::stored_rows(&bin) {
+            return Some(n as usize);
+        }
+    }
+    let snap = db_root.join(COLUMNS_FILE);
+    if file_is_fresh(&snap, &log) {
+        let n = std::fs::read_to_string(&snap)
             .ok()
             .and_then(|text| json::parse(&text).ok())
             .and_then(|j| j.expect_i64("n_rows").ok());
@@ -410,13 +497,17 @@ pub fn stored_row_count(db_root: &Path) -> Option<usize> {
             return Some(n as usize);
         }
     }
-    let text = std::fs::read_to_string(db_root.join(RESULTS_FILE)).ok()?;
+    let text = std::fs::read_to_string(&log).ok()?;
     let mut keys = BTreeMap::new();
     for line in text.lines().filter(|l| !l.trim().is_empty()) {
         if let Ok(j) = json::parse(line) {
             if let (Ok(i), Some(t)) = (j.expect_i64("instance"), j.get("task"))
             {
-                keys.insert((i, t.as_str().unwrap_or("").to_string()), ());
+                let run = j.get("run").and_then(Json::as_i64).unwrap_or(0);
+                keys.insert(
+                    (run, i, t.as_str().unwrap_or("").to_string()),
+                    (),
+                );
             }
         }
     }
@@ -453,8 +544,11 @@ pub fn harvest_rows(
 ) -> Result<ResultTable> {
     let engine = study.capture_engine()?;
     let prov = Provenance::open(&study.db_root)?;
-    // Last terminal attempt per key, in (instance, task) order.
-    let mut last: BTreeMap<(u64, String), crate::workflow::AttemptRecord> =
+    // Last terminal attempt per (run, instance, task) key, in that
+    // order — each execution of the study keeps its own final attempt
+    // as a replicate row (the run id rides on the record, stamped at
+    // execution time); within one run the final attempt wins.
+    let mut last: BTreeMap<(u32, u64, String), crate::workflow::AttemptRecord> =
         BTreeMap::new();
     for rec in prov.read_attempts()? {
         if rec.will_retry {
@@ -465,7 +559,7 @@ pub fn harvest_rows(
                 continue;
             }
         }
-        last.insert((rec.instance, rec.task_id.clone()), rec);
+        last.insert((rec.run, rec.instance, rec.task_id.clone()), rec);
     }
     let work = study.db_root.join("work");
     let mut table = ResultTable::new(engine.schema().clone());
@@ -478,15 +572,16 @@ pub fn harvest_rows(
     Ok(table)
 }
 
-/// Rebuild the columnar snapshot from the live-appended `results.jsonl`
-/// (end-of-run finalization; cheap no-op when nothing was captured).
+/// Rebuild the binary columnar snapshot from the live-appended
+/// `results.jsonl` (end-of-run finalization; cheap no-op when nothing
+/// was captured).
 pub fn snapshot_from_log(db_root: &Path, schema: &Schema) -> Result<usize> {
     let rows = ResultTable::read_jsonl(db_root, schema)?;
     if rows.is_empty() {
         return Ok(0);
     }
     let table = ResultTable::from_rows(schema.clone(), rows);
-    table.save_columns(db_root)?;
+    super::binfmt::save_bin(&table, db_root)?;
     Ok(table.len())
 }
 
@@ -509,8 +604,9 @@ mod tests {
         }
     }
 
-    fn row(instance: u64, task: &str, d: [u32; 2], m: f64) -> Row {
+    fn row_in_run(run: u32, instance: u64, task: &str, d: [u32; 2], m: f64) -> Row {
         Row {
+            run,
             instance,
             task_id: task.into(),
             digits: d.to_vec(),
@@ -522,6 +618,10 @@ mod tests {
                 MetricValue::Num(m),
             ],
         }
+    }
+
+    fn row(instance: u64, task: &str, d: [u32; 2], m: f64) -> Row {
+        row_in_run(0, instance, task, d, m)
     }
 
     fn tmp(tag: &str) -> PathBuf {
@@ -586,21 +686,64 @@ mod tests {
     }
 
     #[test]
-    fn columnar_snapshot_round_trips_and_is_preferred() {
+    fn distinct_runs_keep_their_rows_as_replicates() {
+        let s = schema();
+        let t = ResultTable::from_rows(
+            s,
+            vec![
+                row_in_run(1, 0, "t", [0, 0], 2.0), // second execution…
+                row_in_run(0, 0, "t", [0, 0], 1.0), // …of the same key
+                row_in_run(1, 0, "t", [0, 0], 3.0), // retry within run 1
+            ],
+        );
+        // One row per run survives, ordered run-major.
+        assert_eq!(t.len(), 2);
+        assert_eq!((t.run(0), t.value(4, 0)), (0, &MetricValue::Num(1.0)));
+        assert_eq!((t.run(1), t.value(4, 1)), (1, &MetricValue::Num(3.0)));
+    }
+
+    #[test]
+    fn binary_snapshot_round_trips_and_is_preferred() {
         let dir = tmp("columns");
         let s = schema();
         let mut table = ResultTable::new(s.clone());
-        table.push(row(0, "t", [0, 1], 1.5));
-        table.push(row(3, "u", [1, 0], 2.5));
+        table.push(row_in_run(2, 0, "t", [0, 1], 1.5));
+        table.push(row_in_run(2, 3, "u", [1, 0], 2.5));
         table.save(&dir).unwrap();
         assert!(dir.join(RESULTS_FILE).exists());
-        assert!(dir.join(COLUMNS_FILE).exists());
+        assert!(dir.join(crate::results::binfmt::RESULTS_BIN_FILE).exists());
         let back = ResultTable::load(&dir, &s).unwrap();
         assert_eq!(back.len(), 2);
+        assert_eq!(back.run(0), 2);
         assert_eq!(back.task_id(1), "u");
         assert_eq!(back.digit(1, 0), 1);
         assert_eq!(back.value(4, 1), &MetricValue::Num(2.5));
         assert_eq!(back.schema(), &s);
+    }
+
+    #[test]
+    fn legacy_json_snapshot_still_loads() {
+        let dir = tmp("legacy");
+        let s = schema();
+        let mut table = ResultTable::new(s.clone());
+        table.push(row_in_run(1, 0, "t", [0, 1], 1.5));
+        table.push(row_in_run(1, 3, "u", [1, 0], 2.5));
+        // Only the v1 JSON snapshot exists (a pre-v2 database).
+        table.save_columns(&dir).unwrap();
+        assert!(!dir.join(crate::results::binfmt::RESULTS_BIN_FILE).exists());
+        let back = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!((back.run(0), back.run(1)), (1, 1));
+        assert_eq!(back.value(4, 1), &MetricValue::Num(2.5));
+        // A snapshot written before the runs column reads as run 0.
+        let text = std::fs::read_to_string(dir.join(COLUMNS_FILE)).unwrap();
+        let mut j = json::parse(&text).unwrap();
+        if let Json::Obj(map) = &mut j {
+            map.remove("runs");
+        }
+        std::fs::write(dir.join(COLUMNS_FILE), json::to_string(&j)).unwrap();
+        let back = ResultTable::load_columns(&dir.join(COLUMNS_FILE)).unwrap();
+        assert_eq!((back.run(0), back.run(1)), (0, 0));
     }
 
     #[test]
@@ -616,12 +759,14 @@ mod tests {
         other.n_axes = 1;
         let mut foreign = ResultTable::new(other);
         foreign.push(Row {
+            run: 0,
             instance: 0,
             task_id: "x".into(),
             digits: vec![0],
             values: vec![MetricValue::Missing; 5],
         });
         foreign.save_columns(&dir).unwrap();
+        crate::results::binfmt::save_bin(&foreign, &dir).unwrap();
         let t = ResultTable::load(&dir, &s).unwrap();
         assert_eq!(t.len(), 1);
         assert_eq!(t.value(4, 0), &MetricValue::Num(4.0));

@@ -4,9 +4,13 @@
 //! An objective names one metric column of the study's result schema —
 //! a built-in (`wall_time`, `attempts`, `exit_code`) or any metric a
 //! `capture:` block declares — and scores combinations from the PR 4
-//! result store with **last-terminal-attempt semantics**: the store
-//! keeps exactly one row per `task#instance` key (the final attempt;
-//! resumed re-runs supersede), so scoring never sees stale attempts.
+//! result store with **latest-run, last-terminal-attempt semantics**:
+//! the store keeps one row per `(run, instance, task)` key (the final
+//! attempt of each execution; resumed re-runs within a run supersede),
+//! and scoring takes each instance's score from the newest run that
+//! can score it — so scoring never sees stale attempts, and a study
+//! re-measured across several `papas search` invocations scores from
+//! the freshest data.
 //!
 //! Rows that cannot score are excluded rather than guessed at: a failed
 //! task (`exit_class != ok`), a missing metric cell, a non-numeric
@@ -92,10 +96,12 @@ impl Objective {
         }
     }
 
-    /// Score every instance of a result table: the first task (in the
-    /// table's `(instance, task)` row order) whose final attempt is
-    /// `ok` and whose metric cell is a finite number. Returns
-    /// `(instance, score)` pairs; unscoreable instances are absent.
+    /// Score every instance of a result table: within a run, the first
+    /// task (in the table's `(run, instance, task)` row order) whose
+    /// final attempt is `ok` and whose metric cell is a finite number;
+    /// across runs, the newest run that yields a score wins the
+    /// instance. Returns `(instance, score)` pairs in instance order;
+    /// unscoreable instances are absent.
     pub fn score_table(&self, table: &ResultTable) -> Result<Vec<(u64, f64)>> {
         let schema = table.schema();
         let m = schema.metric_index(&self.metric).ok_or_else(|| {
@@ -109,7 +115,11 @@ impl Objective {
         let class = schema
             .metric_index("exit_class")
             .expect("exit_class is a built-in column");
-        let mut out: Vec<(u64, f64)> = Vec::new();
+        // instance → (run of the current score, score). A later row of
+        // the *same* run never replaces (first scoreable task wins); a
+        // scoreable row of a newer run always does.
+        let mut best: std::collections::BTreeMap<u64, (u32, f64)> =
+            std::collections::BTreeMap::new();
         for i in 0..table.len() {
             if table.value(class, i) != &MetricValue::Str("ok".into()) {
                 continue;
@@ -118,14 +128,15 @@ impl Objective {
             if !score.is_finite() {
                 continue;
             }
-            let instance = table.instance(i);
-            // rows are (instance, task)-ordered: keep the first task's
-            // score per instance
-            if out.last().map(|(last, _)| *last) != Some(instance) {
-                out.push((instance, score));
+            let (instance, run) = (table.instance(i), table.run(i));
+            match best.get(&instance) {
+                Some(&(held, _)) if held >= run => {}
+                _ => {
+                    best.insert(instance, (run, score));
+                }
             }
         }
-        Ok(out)
+        Ok(best.into_iter().map(|(i, (_, s))| (i, s)).collect())
     }
 }
 
@@ -150,7 +161,18 @@ mod tests {
     }
 
     fn row(instance: u64, task: &str, class: &str, score: MetricValue) -> Row {
+        run_row(0, instance, task, class, score)
+    }
+
+    fn run_row(
+        run: u32,
+        instance: u64,
+        task: &str,
+        class: &str,
+        score: MetricValue,
+    ) -> Row {
         Row {
+            run,
             instance,
             task_id: task.into(),
             digits: vec![0],
@@ -216,6 +238,23 @@ mod tests {
         );
         // rows order by (instance, task id): task 'a' wins
         assert_eq!(o.score_table(&table).unwrap(), vec![(0, 4.0)]);
+    }
+
+    #[test]
+    fn newest_scoreable_run_wins_the_instance() {
+        let o = Objective::parse("minimize score").unwrap();
+        let table = ResultTable::from_rows(
+            schema(),
+            vec![
+                run_row(0, 0, "t", "ok", MetricValue::Num(3.0)),
+                run_row(1, 0, "t", "ok", MetricValue::Num(5.0)), // re-measured
+                run_row(0, 1, "t", "ok", MetricValue::Num(2.0)),
+                run_row(1, 1, "t", "nonzero", MetricValue::Num(9.9)), // failed
+            ],
+        );
+        // instance 0: run 1 re-measurement wins; instance 1: run 1
+        // failed, so the run-0 score stands rather than vanishing.
+        assert_eq!(o.score_table(&table).unwrap(), vec![(0, 5.0), (1, 2.0)]);
     }
 
     #[test]

@@ -13,12 +13,16 @@
 //! records.jsonl     task profiling records (workflow/provenance.rs)
 //! events.log        timestamped engine events
 //! report.json       last run's summary
-//! results.jsonl     typed result rows, one per (instance × task ×
-//!                   final attempt), appended live when the study
+//! results.jsonl     typed result rows, one per (run × instance × task
+//!                   × final attempt), appended live when the study
 //!                   declares capture: metrics (results/store.rs)
-//! results_columns.json  columnar snapshot of the result table
-//!                   (schema header + per-axis digit and per-metric
-//!                   value columns); rebuilt by `papas harvest`
+//! results.bin       binary columnar snapshot of the result table:
+//!                   versioned header, fixed-width digit/id column
+//!                   slabs, typed metric columns with null bitmaps,
+//!                   offsets footer (results/binfmt.rs); rebuilt at end
+//!                   of run and by `papas harvest`
+//! results_columns.json  legacy v1 JSON columnar snapshot; still read
+//!                   from pre-v2 databases, no longer written
 //! work/wf-NNNNNNNN/     per-instance working directories
 //! ```
 
@@ -134,7 +138,14 @@ impl FileDb {
         self.root.join(crate::results::store::RESULTS_FILE)
     }
 
-    /// Path of the columnar result snapshot (`results_columns.json`).
+    /// Path of the binary columnar result snapshot (`results.bin`).
+    pub fn results_bin_path(&self) -> PathBuf {
+        self.root.join(crate::results::binfmt::RESULTS_BIN_FILE)
+    }
+
+    /// Path of the legacy v1 JSON columnar snapshot
+    /// (`results_columns.json`) — read-only compatibility with pre-v2
+    /// databases.
     pub fn results_columns_path(&self) -> PathBuf {
         self.root.join(crate::results::store::COLUMNS_FILE)
     }

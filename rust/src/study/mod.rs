@@ -472,6 +472,12 @@ impl Study {
         let db = FileDb::open(&self.db_root)?;
         db.store_study(self)?;
         let prov = crate::workflow::provenance::Provenance::open(&self.db_root)?;
+        // Multi-run provenance: every execution of the study — run,
+        // resume, search round batch — stamps its attempts (and thus
+        // its result rows) with a fresh run id, one past the largest in
+        // the attempt log, so repeated executions accumulate as
+        // replicates in the result store.
+        let run_id = prov.next_run_id()?;
         // Streaming: the scheduler pulls instances from the lazy source
         // as window slots open — the full selection is never resident.
         // CLI-level fault overrides replace per-task knobs at admission.
@@ -484,8 +490,8 @@ impl Study {
             }
         };
         prov.log_event(&format!(
-            "run start: {} instances (shard {}) on {} ({} workers), \
-             on-failure {}",
+            "run start: run id {run_id}, {} instances (shard {}) on {} \
+             ({} workers), on-failure {}",
             source.len(),
             shard,
             executor.name(),
@@ -538,6 +544,7 @@ impl Study {
         let work_root = self.db_root.join("work");
 
         let mut scheduler = WorkflowScheduler::from_source(iter);
+        scheduler.run_id = run_id;
         scheduler.order = self.order;
         scheduler.window = self.window;
         scheduler.policy = self.policy;
@@ -586,7 +593,8 @@ impl Study {
         live.into_inner().unwrap().commit(&self.db_root)?;
 
         // Finalize the result store: fold the live-appended rows into
-        // the columnar snapshot (best-effort — the run itself is done).
+        // the binary columnar snapshot (best-effort — the run itself is
+        // done).
         if let Some((eng, _)) = &capture {
             let _ =
                 crate::results::snapshot_from_log(&self.db_root, eng.schema());
@@ -854,7 +862,7 @@ mod tests {
         assert!(report.all_ok());
         // rows landed live + snapshot finalized
         assert!(s.db_root.join("results.jsonl").exists());
-        assert!(s.db_root.join("results_columns.json").exists());
+        assert!(s.db_root.join("results.bin").exists());
         let eng = s.capture_engine().unwrap();
         let table = ResultTable::load(&s.db_root, eng.schema()).unwrap();
         assert_eq!(table.len(), 3);

@@ -52,6 +52,12 @@ pub struct AttemptRecord {
     /// the results engine's `capture:` stdout metrics — both live and
     /// when `papas harvest` backfills from this log.
     pub stdout: String,
+    /// Run id: which `papas run`/`search` execution of this study
+    /// produced the attempt. Stamped by the scheduler at execution time
+    /// and persisted here, so result rows folded live and rows folded
+    /// post-hoc by `papas harvest` carry identical provenance. Logs
+    /// written before multi-run provenance read back as run 0.
+    pub run: u32,
 }
 
 impl AttemptRecord {
@@ -84,6 +90,7 @@ impl AttemptRecord {
                     Json::from(self.stdout.as_str())
                 },
             ),
+            ("run".to_string(), Json::from(self.run as i64)),
         ])
     }
 
@@ -113,6 +120,8 @@ impl AttemptRecord {
                 .and_then(Json::as_str)
                 .unwrap_or_default()
                 .to_string(),
+            // Absent on logs written before multi-run provenance.
+            run: j.get("run").and_then(Json::as_i64).unwrap_or(0) as u32,
         })
     }
 }
@@ -220,16 +229,47 @@ impl Provenance {
     }
 
     /// Read back every attempt record (empty when no attempts logged).
+    ///
+    /// Torn-line tolerant, like the search ledger: a crash mid-append
+    /// leaves a truncated final line, and one bad line must not poison
+    /// the whole harvest — unparseable lines are skipped, the records
+    /// around them survive.
     pub fn read_attempts(&self) -> Result<Vec<AttemptRecord>> {
         let path = self.dir.join(ATTEMPTS_FILE);
         if !path.exists() {
             return Ok(Vec::new());
         }
         let text = std::fs::read_to_string(path)?;
-        text.lines()
-            .filter(|l| !l.trim().is_empty())
-            .map(|line| AttemptRecord::from_json(&json::parse(line)?))
-            .collect()
+        let mut out = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let Ok(j) = json::parse(line) else { continue };
+            let Ok(rec) = AttemptRecord::from_json(&j) else { continue };
+            out.push(rec);
+        }
+        Ok(out)
+    }
+
+    /// Allocate the run id for a new execution of this study: one past
+    /// the largest id in the attempt log (0 for a fresh study). Derived
+    /// from the log itself — the one artifact every prior execution is
+    /// guaranteed to have written, even a crashed one — so ids stay
+    /// monotone without a second counter file to fall out of sync.
+    pub fn next_run_id(&self) -> Result<u32> {
+        let path = self.dir.join(ATTEMPTS_FILE);
+        if !path.exists() {
+            return Ok(0);
+        }
+        // A light scan: only the `run` field is needed, and torn lines
+        // are skipped the same way `read_attempts` skips them (absent
+        // fields read as run 0, matching pre-provenance logs).
+        let text = std::fs::read_to_string(path)?;
+        let mut max: Option<u32> = None;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let Ok(j) = json::parse(line) else { continue };
+            let run = j.get("run").and_then(Json::as_i64).unwrap_or(0) as u32;
+            max = Some(max.map_or(run, |m| m.max(run)));
+        }
+        Ok(max.map_or(0, |m| m + 1))
     }
 
     /// Write the end-of-run report (`report.json`) — the "provenance
@@ -346,6 +386,7 @@ mod tests {
             error: Some("exit code 3".into()),
             worker: "local-0".into(),
             stdout: "partial output\n".into(),
+            run: 2,
         };
         let ok = AttemptRecord {
             attempt: 2,
@@ -363,6 +404,7 @@ mod tests {
         assert_eq!(back, vec![fail, ok]);
         assert_eq!(back[0].class.unwrap().label(), "nonzero");
         assert_eq!(back[0].stdout, "partial output\n");
+        assert_eq!(back[0].run, 2);
         assert!(back[1].stdout.is_empty());
     }
 
@@ -370,5 +412,79 @@ mod tests {
     fn empty_attempt_log_reads_empty() {
         let p = store("noattempts");
         assert!(p.read_attempts().unwrap().is_empty());
+    }
+
+    #[test]
+    fn torn_attempt_line_is_skipped() {
+        let p = store("torn");
+        let log = p.attempt_log().unwrap();
+        let rec = AttemptRecord {
+            key: "t#0".into(),
+            task_id: "t".into(),
+            instance: 0,
+            attempt: 1,
+            ok: true,
+            will_retry: false,
+            exit_code: 0,
+            duration: 0.1,
+            class: None,
+            error: None,
+            worker: "local-0".into(),
+            stdout: String::new(),
+            run: 0,
+        };
+        log.append(&rec).unwrap();
+        // simulate a crash mid-append: a truncated JSON fragment
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(p.dir().join(ATTEMPTS_FILE))
+            .unwrap();
+        write!(f, "{{\"key\":\"t#1\",\"task").unwrap();
+        drop(f);
+        let back = p.read_attempts().unwrap();
+        assert_eq!(back, vec![rec]);
+    }
+
+    #[test]
+    fn next_run_id_is_one_past_the_logged_max() {
+        let p = store("runid");
+        // fresh study: no attempt log at all
+        assert_eq!(p.next_run_id().unwrap(), 0);
+        let log = p.attempt_log().unwrap();
+        // opened-but-empty log still allocates run 0
+        assert_eq!(p.next_run_id().unwrap(), 0);
+        let mut rec = AttemptRecord {
+            key: "t#0".into(),
+            task_id: "t".into(),
+            instance: 0,
+            attempt: 1,
+            ok: true,
+            will_retry: false,
+            exit_code: 0,
+            duration: 0.1,
+            class: None,
+            error: None,
+            worker: "local-0".into(),
+            stdout: String::new(),
+            run: 0,
+        };
+        log.append(&rec).unwrap();
+        assert_eq!(p.next_run_id().unwrap(), 1);
+        rec.run = 4;
+        log.append(&rec).unwrap();
+        assert_eq!(p.next_run_id().unwrap(), 5);
+    }
+
+    #[test]
+    fn pre_run_provenance_logs_read_as_run_zero() {
+        let j = json::parse(
+            "{\"key\":\"t#1\",\"task_id\":\"t\",\"instance\":1,\
+             \"attempt\":1,\"ok\":true,\"will_retry\":false,\
+             \"exit_code\":0,\"duration\":0.5,\"class\":null,\
+             \"error\":null,\"worker\":\"w0\",\"stdout\":null}",
+        )
+        .unwrap();
+        let rec = AttemptRecord::from_json(&j).unwrap();
+        assert_eq!(rec.run, 0);
     }
 }

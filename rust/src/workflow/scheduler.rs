@@ -153,6 +153,12 @@ pub struct WorkflowScheduler<'a> {
     /// retried, as it completes — the study layer hangs the attempt log
     /// and the incremental checkpoint off this.
     pub on_attempt: Option<Box<dyn Fn(&AttemptRecord) + 'a>>,
+    /// Run id stamped onto every [`AttemptRecord`] this scheduler emits:
+    /// which `papas run`/`search` execution of the study this is. The
+    /// study layer allocates a fresh id per execution (previous max + 1
+    /// from the attempt log) so repeated runs accumulate as replicates
+    /// in the result store instead of overwriting each other.
+    pub run_id: u32,
 }
 
 impl<'a> WorkflowScheduler<'a> {
@@ -176,6 +182,7 @@ impl<'a> WorkflowScheduler<'a> {
             policy: FailurePolicy::default(),
             backoff_ms: 0,
             on_attempt: None,
+            run_id: 0,
         }
     }
 
@@ -430,6 +437,7 @@ impl<'a> WorkflowScheduler<'a> {
                         error: result.error.clone(),
                         worker: result.worker.clone(),
                         stdout: result.stdout.clone(),
+                        run: self.run_id,
                     });
                 }
 

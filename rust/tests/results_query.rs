@@ -7,8 +7,8 @@
 use papas::exec::{Script, ScriptedExecutor};
 use papas::params::{Param, Space};
 use papas::results::{
-    build_report, harvest, run_flat, run_grouped, MetricValue, Query,
-    ResultTable, Row, Schema, BUILTIN_METRICS,
+    build_report, harvest, load_bin, run_flat, run_grouped, MetricValue,
+    Query, ResultTable, Row, RunSel, Schema, BUILTIN_METRICS,
 };
 use papas::study::Study;
 use papas::util::proptest::{check, Gen};
@@ -83,7 +83,13 @@ fn arb_fixture(g: &mut Gen) -> Fixture {
             Some(x) => MetricValue::Num(x),
             None => MetricValue::Missing,
         };
-        table.push(Row { instance: i, task_id: "t".into(), digits, values });
+        table.push(Row {
+            run: 0,
+            instance: i,
+            task_id: "t".into(),
+            digits,
+            values,
+        });
         let decoded: BTreeMap<String, String> = space
             .combination(i)
             .unwrap()
@@ -234,6 +240,125 @@ fn prop_flat_query_equals_naive_filter() {
             assert_eq!(got.metrics[0].1.as_f64(), want.1);
         }
     });
+}
+
+// ---------------------------------------------------------------------
+// Binary snapshot + multi-run provenance properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_binary_snapshot_round_trips_the_jsonl_fold() {
+    check("results.bin round-trip ≡ results.jsonl fold", 24, |g| {
+        let fx = arb_fixture(g);
+        // re-measure a random subset of instances under run 1 so the
+        // snapshot carries genuine multi-run replicates
+        let n0 = fx.table.len();
+        let mut rows: Vec<Row> = (0..n0).map(|i| fx.table.row(i)).collect();
+        for i in 0..n0 {
+            if g.bool(0.4) {
+                let mut r = rows[i].clone();
+                r.run = 1;
+                rows.push(r);
+            }
+        }
+        let table = ResultTable::from_rows(fx.schema.clone(), rows);
+        let dir = tmp("binprop");
+        table.save(&dir).unwrap();
+        // the binary snapshot decodes to the exact same table...
+        let bin = load_bin(&dir.join("results.bin")).unwrap();
+        assert_eq!(bin.len(), table.len());
+        for i in 0..table.len() {
+            assert_eq!(bin.row(i), table.row(i), "bin row {i}");
+        }
+        // ...and so does the results.jsonl fold once the snapshot is gone
+        std::fs::remove_file(dir.join("results.bin")).unwrap();
+        let folded = ResultTable::load(&dir, &fx.schema).unwrap();
+        assert_eq!(folded.len(), table.len());
+        for i in 0..table.len() {
+            assert_eq!(folded.row(i), table.row(i), "jsonl row {i}");
+        }
+    });
+}
+
+#[test]
+fn multi_run_append_keeps_replicates_and_latest_selects_the_newest() {
+    let dir = tmp("multirun");
+    std::fs::write(
+        dir.join("s.yaml"),
+        "bench:\n  command: work ${mode}\n  mode: [fast, slow]\n  capture:\n    latency: stdout latency=([0-9.]+)\n",
+    )
+    .unwrap();
+    let study = Study::from_file(dir.join("s.yaml"))
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    let first = Arc::new(
+        Script::new()
+            .stdout_on("bench#0", "latency=10.0")
+            .stdout_on("bench#1", "latency=20.0"),
+    );
+    let report = study.run_with(&ScriptedExecutor::new(first, 1)).unwrap();
+    assert!(report.all_ok());
+    // a second execution appends rows under a fresh run id (clear the
+    // checkpoint so the done tasks actually re-run)
+    study.clear_checkpoint().unwrap();
+    let second = Arc::new(
+        Script::new()
+            .stdout_on("bench#0", "latency=30.0")
+            .stdout_on("bench#1", "latency=40.0"),
+    );
+    let report = study.run_with(&ScriptedExecutor::new(second, 1)).unwrap();
+    assert!(report.all_ok());
+
+    let engine = study.capture_engine().unwrap();
+    let table = ResultTable::load(&study.db_root, engine.schema()).unwrap();
+    assert_eq!(table.len(), 4, "both runs' rows are kept as replicates");
+
+    let mut q = Query::parse(
+        engine.schema(),
+        study.space(),
+        "",
+        "",
+        "latency",
+        None,
+        false,
+        None,
+    )
+    .unwrap();
+    // default --run LATEST: one row per instance, from run 1
+    let latest = run_flat(&table, study.space(), &q);
+    assert_eq!(latest.len(), 2);
+    let lat = |rows: &[papas::results::FlatRow]| -> Vec<f64> {
+        rows.iter().map(|r| r.metrics[0].1.as_f64().unwrap()).collect()
+    };
+    assert!(latest.iter().all(|r| r.run == 1));
+    assert_eq!(lat(&latest), vec![30.0, 40.0]);
+    // --run ALL sees every replicate; --run 0 pins the first execution
+    q.run = RunSel::All;
+    assert_eq!(run_flat(&table, study.space(), &q).len(), 4);
+    q.run = RunSel::Id(0);
+    let run0 = run_flat(&table, study.space(), &q);
+    assert!(run0.iter().all(|r| r.run == 0));
+    assert_eq!(lat(&run0), vec![10.0, 20.0]);
+
+    // replicate-aware group-by: both runs' samples fold into each group
+    let mut q = Query::parse(
+        engine.schema(),
+        study.space(),
+        "",
+        "mode",
+        "latency",
+        None,
+        false,
+        None,
+    )
+    .unwrap();
+    q.run = RunSel::All;
+    let groups = run_grouped(&table, study.space(), &q).unwrap();
+    assert_eq!(groups.len(), 2);
+    for grp in &groups {
+        assert_eq!(grp.n, 2, "two replicates per mode: {:?}", grp.key);
+        assert_eq!(grp.stats[0].1.n, 2);
+    }
 }
 
 // ---------------------------------------------------------------------
