@@ -55,7 +55,7 @@ pub enum ParsedCommand {
 /// `--` takes a value.
 const SWITCHES: &[&str] = &[
     "fresh", "dot", "quiet", "concat", "gantt", "resume", "complete-only",
-    "desc",
+    "desc", "infer-timeouts", "compact",
 ];
 
 impl Args {
@@ -237,6 +237,26 @@ mod tests {
         assert_eq!(a.opt_num::<u32>("retries", 0).unwrap(), 2);
         assert_eq!(a.opt_or("on-failure", "continue"), "retry-budget:5");
         assert_eq!(a.opt_num::<u64>("backoff", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn scheduling_flags_parse_as_switch_and_options() {
+        let ParsedCommand::Run(a) = Args::parse(&sv(&[
+            "run", "s.yaml", "--pack", "lpt", "--infer-timeouts",
+            "--timeout-factor", "3", "--window", "64",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.opt_or("pack", "auto"), "lpt");
+        assert!(a.has_flag("infer-timeouts"));
+        assert_eq!(a.opt_num::<f64>("timeout-factor", 4.0).unwrap(), 3.0);
+        let ParsedCommand::Harvest(h) =
+            Args::parse(&sv(&["harvest", "s.yaml", "--compact"])).unwrap()
+        else {
+            panic!()
+        };
+        assert!(h.has_flag("compact"));
     }
 
     #[test]

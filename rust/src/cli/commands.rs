@@ -23,6 +23,13 @@ USAGE:
             [--db DIR] [--fresh] [--shard I/N] [--order dfs|bfs] [--window N]
             [--timeout S] [--retries N] [--backoff MS] [--resume]
             [--on-failure fail-fast|continue|retry-budget:N]
+            [--pack auto|fifo|lpt] [--infer-timeouts] [--timeout-factor F]
+                                            --pack lpt admits longest-expected
+                                            tasks first using wall times from
+                                            the result store (auto: lpt once
+                                            the store has evidence);
+                                            --infer-timeouts gives timeout-less
+                                            tasks p95 x F (default 4)
   papas resume STUDY.yaml [...]        continue from the checkpoint
   papas validate STUDY.yaml [...]      parse + validate, print warnings
   papas combos STUDY.yaml [--limit N] [--shard I/N]
@@ -37,8 +44,11 @@ USAGE:
   papas dax STUDY.yaml [--instance N]       Pegasus DAX export (§9)
   papas status [DB-DIR] [--gantt] [--format text|json]
                                             inspect a study database
-  papas harvest STUDY.yaml [--db DIR]       backfill typed results from
-                                            attempts.jsonl + workdirs
+  papas harvest STUDY.yaml [--db DIR] [--compact]
+                                            backfill typed results from
+                                            attempts.jsonl + workdirs;
+                                            --compact rewrites results.jsonl
+                                            to live rows only (crash-safe)
   papas query STUDY.yaml [--where EXPR] [--by AXES] [--metric NAMES]
               [--run LATEST|ALL|ID] [--sort METRIC] [--desc] [--top K]
               [--format table|csv|json]      filter/group captured results
@@ -108,6 +118,24 @@ fn load_study_opts(a: &Args, with_runtime: bool) -> Result<Study> {
     }
     if a.options.contains_key("backoff") {
         study = study.with_backoff_ms(a.opt_num("backoff", 0u64)?);
+    }
+    if let Some(raw) = a.options.get("pack") {
+        // "auto" = the study default: coverage-driven mode selection.
+        if raw != "auto" {
+            study = study.with_pack(crate::workflow::PackMode::parse(raw)?);
+        }
+    }
+    if a.has_flag("infer-timeouts") {
+        study = study.with_infer_timeouts(true);
+    }
+    if a.options.contains_key("timeout-factor") {
+        let f: f64 = a.opt_num("timeout-factor", 0.0)?;
+        if !f.is_finite() || f <= 0.0 {
+            return Err(Error::Exec(format!(
+                "--timeout-factor must be a positive number, got '{f}'"
+            )));
+        }
+        study = study.with_timeout_multiplier(f);
     }
     if !with_runtime {
         return Ok(study);
@@ -490,6 +518,21 @@ pub fn cmd_status(a: &Args) -> Result<()> {
             j.expect_str("executor")?,
             j.expect("makespan_s")?.as_f64().unwrap_or(0.0),
         );
+        // Per-worker busy/idle split (reports written before the
+        // elastic-scheduling change carry no workers array).
+        if let Some(Json::Arr(ws)) = j.get("workers") {
+            for w in ws {
+                println!(
+                    "  worker {}: {} tasks | busy {:.3}s, idle {:.3}s \
+                     ({:.0}% utilized)",
+                    w.expect_str("worker")?,
+                    w.expect_i64("tasks")?,
+                    w.expect("busy_s")?.as_f64().unwrap_or(0.0),
+                    w.expect("idle_s")?.as_f64().unwrap_or(0.0),
+                    w.expect("utilization")?.as_f64().unwrap_or(0.0) * 100.0,
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -516,9 +559,13 @@ pub fn cmd_aggregate(a: &Args) -> Result<()> {
 }
 
 /// `papas harvest` — backfill the typed result store from the attempt
-/// log and the instance workdirs (post-hoc capture).
+/// log and the instance workdirs (post-hoc capture). `--compact`
+/// reports the row-log rewrite: the harvest replaces `results.jsonl`
+/// (atomically, tmp + rename) with exactly the live rows, folding away
+/// superseded duplicates a long append-only history accumulates.
 pub fn cmd_harvest(a: &Args) -> Result<()> {
     let study = load_study_opts(a, false)?;
+    let before = crate::results::log_line_count(&study.db_root);
     let table = crate::results::harvest(&study)?;
     let db = crate::study::FileDb::at(&study.db_root);
     println!(
@@ -529,6 +576,18 @@ pub fn cmd_harvest(a: &Args) -> Result<()> {
         db.results_path().display(),
         db.results_bin_path().display(),
     );
+    if a.has_flag("compact") {
+        match before {
+            Some(n) => println!(
+                "compacted results.jsonl: {n} logged lines -> {} live rows",
+                table.len()
+            ),
+            None => println!(
+                "compacted results.jsonl: no prior row log -> {} live rows",
+                table.len()
+            ),
+        }
+    }
     Ok(())
 }
 
@@ -869,6 +928,63 @@ mod tests {
             &[("db", db.to_str().unwrap()), ("order", "sideways")],
         );
         assert!(cmd_run(&bad, false).is_err());
+    }
+
+    #[test]
+    fn run_command_scheduling_flags() {
+        let p = study_file(
+            "schedflags",
+            "t:\n  command: sleep-ms 1\n  v: [1, 2, 3]\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        let dbs = db.to_str().unwrap();
+        // forced lpt with an empty store still runs (unknown costs
+        // degrade to admission order); inference flags ride along
+        let mut a = args(
+            &[p.to_str().unwrap()],
+            &[
+                ("workers", "2"),
+                ("db", dbs),
+                ("pack", "lpt"),
+                ("timeout-factor", "2.5"),
+            ],
+        );
+        a.flags.push("infer-timeouts".into());
+        cmd_run(&a, false).unwrap();
+        // "auto" is the default spelling of the coverage-driven mode
+        let a = args(&[p.to_str().unwrap()], &[("db", dbs), ("pack", "auto")]);
+        cmd_run(&a, true).unwrap();
+        let bad =
+            args(&[p.to_str().unwrap()], &[("db", dbs), ("pack", "spiral")]);
+        assert!(cmd_run(&bad, false).is_err());
+        let bad = args(
+            &[p.to_str().unwrap()],
+            &[("db", dbs), ("timeout-factor", "-1")],
+        );
+        assert!(cmd_run(&bad, false).is_err());
+    }
+
+    #[test]
+    fn harvest_compact_rewrites_the_row_log_to_live_rows() {
+        let p = study_file(
+            "compact",
+            "t:\n  command: /bin/sh -c \"echo score=${v}\"\n  v: [1, 2, 3]\n  capture:\n    score: stdout score=([0-9.]+)\n",
+        );
+        let db = p.parent().unwrap().join(".papas");
+        let dbs = db.to_str().unwrap();
+        cmd_run(&args(&[p.to_str().unwrap()], &[("db", dbs)]), false).unwrap();
+        assert_eq!(crate::results::log_line_count(&db), Some(3));
+        // plant a superseded duplicate line: the harvest folds it away
+        let log = db.join("results.jsonl");
+        let text = std::fs::read_to_string(&log).unwrap();
+        let first = text.lines().next().unwrap().to_string();
+        std::fs::write(&log, format!("{text}{first}\n")).unwrap();
+        assert_eq!(crate::results::log_line_count(&db), Some(4));
+        let mut a = args(&[p.to_str().unwrap()], &[("db", dbs)]);
+        a.flags.push("compact".into());
+        cmd_harvest(&a).unwrap();
+        assert_eq!(crate::results::log_line_count(&db), Some(3));
+        assert!(!db.join("results.jsonl.tmp").exists());
     }
 
     #[test]

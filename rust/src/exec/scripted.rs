@@ -54,6 +54,10 @@ pub struct Script {
     stdouts: BTreeMap<String, String>,
     /// Simulated per-attempt duration (seconds) reported in results.
     sim_duration: f64,
+    /// Per-key simulated durations (same key/task/default precedence as
+    /// outcomes) — a heterogeneous synthetic duration landscape for the
+    /// packing bench and cost-model tests.
+    durations: BTreeMap<String, f64>,
     counts: Mutex<BTreeMap<String, u32>>,
     journal: Mutex<Vec<String>>,
 }
@@ -72,6 +76,7 @@ impl Script {
             default: Outcome::Succeed,
             stdouts: BTreeMap::new(),
             sim_duration: 0.001,
+            durations: BTreeMap::new(),
             counts: Mutex::new(BTreeMap::new()),
             journal: Mutex::new(Vec::new()),
         }
@@ -107,6 +112,14 @@ impl Script {
         self
     }
 
+    /// Simulated duration for `key` (full `task_id#instance` or bare
+    /// `task_id`), overriding [`Script::sim_duration`] for matching
+    /// tasks — still never slept, only reported.
+    pub fn duration_on(mut self, key: impl Into<String>, secs: f64) -> Script {
+        self.durations.insert(key.into(), secs);
+        self
+    }
+
     /// How many times `key` (full `task_id#instance`) reached a worker.
     pub fn executions(&self, key: &str) -> u32 {
         self.counts.lock().unwrap().get(key).copied().unwrap_or(0)
@@ -136,6 +149,14 @@ impl Script {
             .or_else(|| self.stdouts.get(&task.task_id))
             .cloned()
             .unwrap_or_default()
+    }
+
+    fn duration_for(&self, task: &ConcreteTask, key: &str) -> f64 {
+        self.durations
+            .get(key)
+            .or_else(|| self.durations.get(&task.task_id))
+            .copied()
+            .unwrap_or(self.sim_duration)
     }
 
     fn ok_result(&self, duration: f64) -> TaskResult {
@@ -180,21 +201,22 @@ impl TaskExec for Script {
         };
         self.journal.lock().unwrap().push(key.clone());
 
+        let sim = self.duration_for(task, &key);
         let mut result = match self.outcome_for(task, &key) {
-            Outcome::Succeed => self.ok_result(self.sim_duration),
+            Outcome::Succeed => self.ok_result(sim),
             Outcome::Fail(code) => self.fail_result(
                 code,
                 ErrorClass::NonZero,
                 format!("scripted failure: exit code {code}"),
-                self.sim_duration,
+                sim,
             ),
             Outcome::FlakyThenOk(n) if attempt <= n => self.fail_result(
                 1,
                 ErrorClass::NonZero,
                 format!("scripted flake {attempt}/{n}: exit code 1"),
-                self.sim_duration,
+                sim,
             ),
-            Outcome::FlakyThenOk(_) => self.ok_result(self.sim_duration),
+            Outcome::FlakyThenOk(_) => self.ok_result(sim),
             Outcome::Hang => match task.timeout {
                 Some(limit) => self.fail_result(
                     -1,
@@ -211,7 +233,7 @@ impl TaskExec for Script {
                     "scripted hang with no timeout configured — killed by \
                      the test harness"
                         .into(),
-                    self.sim_duration,
+                    sim,
                 ),
             },
             Outcome::SpawnError => self.fail_result(
@@ -321,6 +343,22 @@ mod tests {
         assert_eq!(s.exec(&task("a", 0)).stdout, "GFLOPS=2.5\n");
         assert_eq!(s.exec(&task("a", 1)).stdout, "GFLOPS=9.0\n");
         assert_eq!(s.exec(&task("b", 0)).stdout, "");
+    }
+
+    #[test]
+    fn duration_precedence_key_then_task_then_sim_default() {
+        let s = Script::new()
+            .sim_duration(0.5)
+            .duration_on("a", 2.0)
+            .duration_on("a#1", 8.0);
+        assert_eq!(s.exec(&task("a", 0)).duration, 2.0); // task-level
+        assert_eq!(s.exec(&task("a", 1)).duration, 8.0); // key-level wins
+        assert_eq!(s.exec(&task("b", 0)).duration, 0.5); // default
+        // failures report the scripted duration too
+        let s = Script::new()
+            .default_outcome(Outcome::Fail(2))
+            .duration_on("c", 3.25);
+        assert_eq!(s.exec(&task("c", 0)).duration, 3.25);
     }
 
     #[test]

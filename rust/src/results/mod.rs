@@ -51,5 +51,6 @@ pub use query::{
 pub use report::{build_report, Report, ReportRow};
 pub use schema::{MetricValue, Row, Schema, BUILTIN_METRICS};
 pub use store::{
-    harvest, harvest_rows, snapshot_from_log, ResultLog, ResultTable,
+    harvest, harvest_rows, log_line_count, snapshot_from_log, ResultLog,
+    ResultTable,
 };

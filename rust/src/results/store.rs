@@ -445,7 +445,10 @@ impl ResultTable {
     }
 
     /// Rewrite both persisted forms (`results.jsonl` + the binary
-    /// `results.bin` snapshot) from this table.
+    /// `results.bin` snapshot) from this table. The row log is compacted
+    /// to exactly the live (last-per-key) rows of this table, via a
+    /// crash-safe tmp + rename — a crash mid-rewrite leaves the old log
+    /// intact, never a torn one.
     pub fn save(&self, db_root: &Path) -> Result<()> {
         std::fs::create_dir_all(db_root)?;
         let mut out = String::new();
@@ -453,10 +456,20 @@ impl ResultTable {
             out.push_str(&json::to_string(&self.row(i).to_json(&self.schema)));
             out.push('\n');
         }
-        std::fs::write(db_root.join(RESULTS_FILE), out)?;
+        let tmp = db_root.join(format!("{RESULTS_FILE}.tmp"));
+        std::fs::write(&tmp, out)?;
+        std::fs::rename(&tmp, db_root.join(RESULTS_FILE))?;
         super::binfmt::save_bin(self, db_root)?;
         Ok(())
     }
+}
+
+/// Non-empty line count of the persisted row log — the pre-compaction
+/// size `papas harvest --compact` reports against the table's live row
+/// count. `None` when no log exists.
+pub fn log_line_count(db_root: &Path) -> Option<usize> {
+    let text = std::fs::read_to_string(db_root.join(RESULTS_FILE)).ok()?;
+    Some(text.lines().filter(|l| !l.trim().is_empty()).count())
 }
 
 /// True when snapshot file `snap` exists and is at least as fresh as
@@ -629,6 +642,30 @@ mod tests {
         let _ = std::fs::remove_dir_all(&d);
         std::fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    #[test]
+    fn save_compacts_the_row_log_atomically() {
+        let dir = tmp("compact");
+        let s = schema();
+        let log = ResultLog::open(&dir).unwrap();
+        // three appends for the same key: only the last row is live
+        log.append(&row(0, "t", [0, 0], 1.0), &s).unwrap();
+        log.append(&row(0, "t", [0, 0], 2.0), &s).unwrap();
+        log.append(&row(0, "t", [0, 0], 3.0), &s).unwrap();
+        log.append(&row(1, "t", [1, 0], 9.0), &s).unwrap();
+        drop(log);
+        assert_eq!(log_line_count(&dir), Some(4));
+        let t = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(t.len(), 2);
+        t.save(&dir).unwrap();
+        // the log now holds exactly the live rows, no tmp left behind
+        assert_eq!(log_line_count(&dir), Some(2));
+        assert!(!dir.join(format!("{RESULTS_FILE}.tmp")).exists());
+        let back = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.value(4, 0), &MetricValue::Num(3.0));
+        assert_eq!(log_line_count(&tmp("compact-none")), None);
     }
 
     #[test]

@@ -223,6 +223,14 @@ fn execute_round(
     let scores = score_proposals(study, &proposals, &cfg.objective)?;
     let rec = history.complete_round(scores, &cfg.objective).clone();
     ledger.append_scored(&rec)?;
+    // Studies with no `capture:` block never write result rows live, so
+    // persist the round's built-in metrics here — the next round's
+    // sub-study then fits its cost model (LPT packing, inferred
+    // timeouts) from every prior round. Capture studies already hold
+    // the rows. Best-effort: scoring above already succeeded.
+    if !study.capture_engine()?.any_declared() {
+        let _ = crate::results::harvest(study);
+    }
     Ok(rec)
 }
 
@@ -343,6 +351,54 @@ mod tests {
         assert_eq!(second.executions, 0);
         assert_eq!(script.total_executions(), n1);
         assert_eq!(second.best(), first.best());
+    }
+
+    #[test]
+    fn rounds_persist_the_store_for_the_next_rounds_cost_model() {
+        // No capture: block — only built-in metrics exist, so nothing
+        // is written live. Each scored round must still persist the
+        // store, both to serve `minimize wall_time` style searches and
+        // so later rounds' sub-studies can fit a packing cost model.
+        let dir =
+            std::env::temp_dir().join("papas_search_driver/storeround");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<String> = (0..16).map(|i| i.to_string()).collect();
+        let yaml = format!(
+            "job:\n  command: work ${{v}}\n  v: [{}]\n  search:\n    \
+             objective: minimize wall_time\n    strategy: halving 2\n    \
+             rounds: 2\n    budget: 4\n    seed: 5\n",
+            vals.join(", ")
+        );
+        let path = dir.join("study.yaml");
+        std::fs::write(&path, yaml).unwrap();
+        let study = Study::from_file(&path)
+            .unwrap()
+            .with_db_root(dir.join(".papas"));
+        let mut script = Script::new();
+        for idx in 0..16i64 {
+            script = script.duration_on(
+                format!("job#{idx}"),
+                0.01 * (idx + 1) as f64,
+            );
+        }
+        let exec = ScriptedExecutor::new(Arc::new(script), 2);
+        let cfg = SearchConfig::from_spec(study.search_spec().unwrap());
+        let mut persisted = Vec::new();
+        let outcome = run_search_observed(&study, &cfg, &exec, |_| {
+            persisted.push(
+                study
+                    .db_root
+                    .join(crate::results::RESULTS_BIN_FILE)
+                    .exists(),
+            );
+        })
+        .unwrap();
+        assert_eq!(outcome.rounds_run, 2);
+        assert!(outcome.best().is_some());
+        // the store existed as soon as round 1 scored — round 2's cost
+        // model had evidence to fit, not just the post-search harvest
+        assert_eq!(persisted, vec![true, true]);
     }
 
     #[test]

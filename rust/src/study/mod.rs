@@ -57,8 +57,9 @@ use crate::tasks::Builtins;
 use crate::util::error::Result;
 use crate::wdl::{self, CompiledStudy, Node, StudySpec};
 use crate::workflow::{
-    AttemptRecord, ExecOrder, ExecutionReport, InstanceSource, Selection,
-    Shard, WorkflowInstance, WorkflowScheduler,
+    AttemptRecord, CostModel, ExecOrder, ExecutionReport, InstanceSource,
+    PackMode, Selection, Shard, TaskCosts, WorkflowInstance,
+    WorkflowScheduler,
 };
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -115,6 +116,15 @@ pub struct Study {
     timeout_override: Option<f64>,
     /// `--retries` override: replaces every task's own `retries`.
     retries_override: Option<u32>,
+    /// Admission packing mode (`--pack`). `None` = auto: expected-cost
+    /// LPT packing when the study's result store holds usable wall-time
+    /// evidence, plain FIFO otherwise.
+    pub pack: Option<PackMode>,
+    /// Infer missing task timeouts from the cost model (p95 × factor;
+    /// `--infer-timeouts`). Explicit WDL/CLI timeouts always win.
+    pub infer_timeouts: bool,
+    /// Headroom factor for inferred timeouts (`--timeout-factor`).
+    pub timeout_multiplier: f64,
 }
 
 impl Study {
@@ -232,6 +242,10 @@ impl Study {
             backoff_ms: 0,
             timeout_override: None,
             retries_override: None,
+            pack: None,
+            infer_timeouts: false,
+            timeout_multiplier:
+                crate::workflow::estimate::DEFAULT_TIMEOUT_MULTIPLIER,
         })
     }
 
@@ -282,6 +296,28 @@ impl Study {
     /// `retries` keys (`--retries`).
     pub fn with_retries(mut self, retries: u32) -> Study {
         self.retries_override = Some(retries);
+        self
+    }
+
+    /// Force the admission packing mode (`--pack fifo|lpt`), overriding
+    /// the cost-model-coverage auto default.
+    pub fn with_pack(mut self, pack: PackMode) -> Study {
+        self.pack = Some(pack);
+        self
+    }
+
+    /// Infer missing task timeouts from captured wall times
+    /// (`--infer-timeouts`): tasks with no explicit timeout get
+    /// per-task p95 × the timeout factor.
+    pub fn with_infer_timeouts(mut self, on: bool) -> Study {
+        self.infer_timeouts = on;
+        self
+    }
+
+    /// Headroom multiplier applied to the per-task p95 wall time when
+    /// inferring timeouts (`--timeout-factor`).
+    pub fn with_timeout_multiplier(mut self, factor: f64) -> Study {
+        self.timeout_multiplier = factor;
         self
     }
 
@@ -543,6 +579,49 @@ impl Study {
         let space_ref = &self.space;
         let work_root = self.db_root.join("work");
 
+        // Metric-aware elasticity: fit the cost model from the study's
+        // own result store (prior runs, resumes, or search rounds).
+        // Best-effort and read-only — a missing or foreign store yields
+        // an empty model, which resolves auto pack mode to plain FIFO
+        // and disables timeout inference. Skipped entirely when the run
+        // is pinned to FIFO with no inference, so the default
+        // no-evidence path stays zero-overhead.
+        let needs_model =
+            self.pack != Some(PackMode::Fifo) || self.infer_timeouts;
+        let cost_model = if needs_model {
+            self.capture_engine()
+                .ok()
+                .and_then(|eng| {
+                    crate::results::ResultTable::load(
+                        &self.db_root,
+                        eng.schema(),
+                    )
+                    .ok()
+                })
+                .map(|t| CostModel::from_table(&t))
+                .unwrap_or_else(CostModel::empty)
+        } else {
+            CostModel::empty()
+        };
+        let pack = self.pack.unwrap_or(if cost_model.has_coverage() {
+            PackMode::Lpt
+        } else {
+            PackMode::Fifo
+        });
+        if pack == PackMode::Lpt || self.infer_timeouts {
+            prov.log_event(&format!(
+                "elastic scheduling: pack {}, cost model over {} \
+                 captured attempts{}",
+                pack.label(),
+                cost_model.n_samples(),
+                if self.infer_timeouts {
+                    ", timeout inference on"
+                } else {
+                    ""
+                }
+            ))?;
+        }
+
         let mut scheduler = WorkflowScheduler::from_source(iter);
         scheduler.run_id = run_id;
         scheduler.order = self.order;
@@ -550,6 +629,17 @@ impl Study {
         scheduler.policy = self.policy;
         scheduler.backoff_ms = self.backoff_ms;
         scheduler.skip_done = skip_done;
+        scheduler.pack = pack;
+        scheduler.infer_timeouts = self.infer_timeouts;
+        if (pack == PackMode::Lpt || self.infer_timeouts)
+            && cost_model.has_coverage()
+        {
+            scheduler.costs = Some(TaskCosts {
+                model: &cost_model,
+                space: &self.space,
+                timeout_multiplier: self.timeout_multiplier,
+            });
+        }
         scheduler.on_attempt = Some(Box::new(move |rec: &AttemptRecord| {
             // Best-effort: a full disk must not abort the run itself.
             let _ = attempt_log.append(rec);
@@ -873,6 +963,92 @@ mod tests {
         // builtins always ride along
         let wt = eng.schema().metric_index("wall_time").unwrap();
         assert!(table.value(wt, 0).as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn second_run_auto_packs_longest_expected_first() {
+        use crate::exec::{Script, ScriptedExecutor};
+        let yaml = "job:\n  command: work ${v}\n  v: [1, 2, 3]\n  capture:\n    out: stdout OUT=([0-9.]+)\n";
+        let s = tmp_study("autopack", yaml);
+        let script = Arc::new(
+            Script::new()
+                .duration_on("job#0", 1.0)
+                .duration_on("job#1", 5.0)
+                .duration_on("job#2", 3.0),
+        );
+        // first run: empty store → auto resolves to FIFO admission order
+        let r1 =
+            s.run_with(&ScriptedExecutor::new(script.clone(), 1)).unwrap();
+        assert!(r1.all_ok());
+        assert_eq!(script.journal(), vec!["job#0", "job#1", "job#2"]);
+        // the store now holds per-instance wall times; a fresh run packs
+        // longest-expected-first with no flag needed
+        s.clear_checkpoint().unwrap();
+        let script2 = Arc::new(Script::new());
+        let r2 =
+            s.run_with(&ScriptedExecutor::new(script2.clone(), 1)).unwrap();
+        assert!(r2.all_ok());
+        assert_eq!(script2.journal(), vec!["job#1", "job#2", "job#0"]);
+        // pinning --pack fifo restores plain admission order
+        let s3 = Study::from_file(
+            std::env::temp_dir().join("papas_study/autopack/study.yaml"),
+        )
+        .unwrap()
+        .with_db_root(std::env::temp_dir().join("papas_study/autopack/.papas"))
+        .with_pack(crate::workflow::PackMode::Fifo);
+        s3.clear_checkpoint().unwrap();
+        let script3 = Arc::new(Script::new());
+        let r3 =
+            s3.run_with(&ScriptedExecutor::new(script3.clone(), 1)).unwrap();
+        assert!(r3.all_ok());
+        assert_eq!(script3.journal(), vec!["job#0", "job#1", "job#2"]);
+    }
+
+    #[test]
+    fn inferred_timeouts_bound_hangs_on_the_second_run() {
+        use crate::exec::{ErrorClass, Outcome, Script, ScriptedExecutor};
+        let yaml = "job:\n  command: work ${v}\n  v: [1, 2, 3]\n  capture:\n    out: stdout OUT=([0-9.]+)\n";
+        let s = tmp_study("infertimeout", yaml);
+        let script = Arc::new(
+            Script::new()
+                .duration_on("job#0", 1.0)
+                .duration_on("job#1", 5.0)
+                .duration_on("job#2", 3.0),
+        );
+        s.run_with(&ScriptedExecutor::new(script, 1)).unwrap();
+        // second run: job#1 wedges. Without a timeout the scripted
+        // executor reports a harness kill; with --infer-timeouts the
+        // task gets p95 × factor and dies as a *timeout* at that limit.
+        s.clear_checkpoint().unwrap();
+        let s = Study::from_file(
+            std::env::temp_dir()
+                .join("papas_study/infertimeout/study.yaml"),
+        )
+        .unwrap()
+        .with_db_root(
+            std::env::temp_dir().join("papas_study/infertimeout/.papas"),
+        )
+        .with_infer_timeouts(true)
+        .with_timeout_multiplier(2.0);
+        let script2 =
+            Arc::new(Script::new().on("job#1", Outcome::Hang));
+        let r2 =
+            s.run_with(&ScriptedExecutor::new(script2, 1)).unwrap();
+        assert_eq!(r2.completed, 2);
+        assert_eq!(r2.failed, 1);
+        let prov = crate::workflow::Provenance::open(&s.db_root).unwrap();
+        let attempts = prov.read_attempts().unwrap();
+        let hang = attempts
+            .iter()
+            .rfind(|a| a.key == "job#1" && !a.ok)
+            .expect("hang attempt logged");
+        assert_eq!(hang.class, Some(ErrorClass::Timeout));
+        // p95 over wall times [1, 3, 5] = 4.8; × factor 2.0
+        assert!(
+            (hang.duration - 9.6).abs() < 1e-9,
+            "inferred limit: {}",
+            hang.duration
+        );
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! Task cost estimation from captured results (metric-aware
+//! scheduling).
+//!
+//! PaPaS records `wall_time` for every (run × instance × task) in the
+//! results store; this module folds those rows into a [`CostModel`]
+//! that predicts a task's wall time with a fallback hierarchy:
+//!
+//! 1. **Exact** — replicate mean over rows with the same task and the
+//!    same full combination digits (re-running a study, or a search
+//!    round revisiting a combination).
+//! 2. **Marginal** — mean of per-(task, axis, digit) marginal means for
+//!    the digits the combination *does* share with observed rows (a
+//!    new combination on a grid where e.g. `size` dominates cost).
+//! 3. **Global** — per-task mean over all observed rows.
+//! 4. **Unknown** — task never observed.
+//!
+//! All lookups are O(1) hash probes after a single streaming pass over
+//! the table (itself decoded from `results.bin` in one read). The
+//! model feeds LPT admission packing, timeout inference (per-task p95
+//! × multiplier), and dynamic window sizing in the scheduler.
+
+use crate::params::Space;
+use crate::results::ResultTable;
+use crate::util::stats::percentile;
+use crate::workflow::task::ConcreteTask;
+use std::collections::HashMap;
+
+/// Default `p95 × multiplier` headroom for inferred timeouts: generous
+/// enough that normal variance never kills a healthy task, tight
+/// enough to reap a hang long before an unlimited wait would.
+pub const DEFAULT_TIMEOUT_MULTIPLIER: f64 = 4.0;
+
+/// A predicted wall time, tagged with how specific the evidence was.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Estimate {
+    /// Replicate mean for this exact (task, combination).
+    Exact(f64),
+    /// Mean of matching per-axis marginal means.
+    Marginal(f64),
+    /// Per-task mean over all observed combinations.
+    Global(f64),
+    /// Task never observed; no number at all.
+    Unknown,
+}
+
+impl Estimate {
+    /// The predicted seconds, if any evidence existed.
+    pub fn value(self) -> Option<f64> {
+        match self {
+            Estimate::Exact(s) | Estimate::Marginal(s) | Estimate::Global(s) => {
+                Some(s)
+            }
+            Estimate::Unknown => None,
+        }
+    }
+
+    /// Stable label for logs and tests.
+    pub fn tier(self) -> &'static str {
+        match self {
+            Estimate::Exact(_) => "exact",
+            Estimate::Marginal(_) => "marginal",
+            Estimate::Global(_) => "global",
+            Estimate::Unknown => "unknown",
+        }
+    }
+}
+
+/// Mean accumulator (sum + count folded on the streaming pass).
+#[derive(Default, Clone, Copy)]
+struct Acc {
+    sum: f64,
+    n: u32,
+}
+
+impl Acc {
+    fn add(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+
+    fn mean(self) -> f64 {
+        self.sum / f64::from(self.n.max(1))
+    }
+}
+
+/// Wall-time predictor over a study's captured results.
+pub struct CostModel {
+    /// Interned task ids (index = the u32 used in the maps below).
+    task_ids: Vec<String>,
+    task_index: HashMap<String, u32>,
+    /// (task, full digits) → replicate mean.
+    exact: HashMap<(u32, Vec<u32>), f64>,
+    /// (task, axis, digit) → marginal mean.
+    marginal: HashMap<(u32, usize, u32), f64>,
+    /// task → global mean.
+    global: Vec<f64>,
+    /// task → p95 of observed wall times.
+    p95: Vec<f64>,
+    /// Rows with a finite wall_time that entered the model.
+    n_samples: usize,
+}
+
+impl CostModel {
+    /// Fold a result table into a model in one streaming pass. Rows
+    /// with a missing or non-finite `wall_time` are skipped.
+    pub fn from_table(table: &ResultTable) -> CostModel {
+        let schema = table.schema();
+        let wall = schema.metric_index("wall_time");
+        let n_axes = schema.n_axes;
+
+        let mut task_ids: Vec<String> = Vec::new();
+        let mut task_index: HashMap<String, u32> = HashMap::new();
+        let mut exact: HashMap<(u32, Vec<u32>), Acc> = HashMap::new();
+        let mut marginal: HashMap<(u32, usize, u32), Acc> = HashMap::new();
+        let mut global: Vec<Acc> = Vec::new();
+        let mut samples: Vec<Vec<f64>> = Vec::new();
+        let mut n_samples = 0usize;
+
+        if let Some(w) = wall {
+            for i in 0..table.len() {
+                let Some(secs) = table.value(w, i).as_f64() else {
+                    continue;
+                };
+                if !secs.is_finite() || secs < 0.0 {
+                    continue;
+                }
+                let name = table.task_id(i);
+                let t = match task_index.get(name) {
+                    Some(&t) => t,
+                    None => {
+                        let t = task_ids.len() as u32;
+                        task_ids.push(name.to_string());
+                        task_index.insert(name.to_string(), t);
+                        global.push(Acc::default());
+                        samples.push(Vec::new());
+                        t
+                    }
+                };
+                let digits: Vec<u32> =
+                    (0..n_axes).map(|a| table.digit(a, i)).collect();
+                for (a, &d) in digits.iter().enumerate() {
+                    marginal.entry((t, a, d)).or_default().add(secs);
+                }
+                exact.entry((t, digits)).or_default().add(secs);
+                global[t as usize].add(secs);
+                samples[t as usize].push(secs);
+                n_samples += 1;
+            }
+        }
+
+        let p95 = samples
+            .into_iter()
+            .map(|mut s| {
+                s.sort_by(|a, b| a.total_cmp(b));
+                percentile(&s, 0.95)
+            })
+            .collect();
+        CostModel {
+            task_ids,
+            task_index,
+            exact: exact.into_iter().map(|(k, a)| (k, a.mean())).collect(),
+            marginal: marginal.into_iter().map(|(k, a)| (k, a.mean())).collect(),
+            global: global.into_iter().map(Acc::mean).collect(),
+            p95,
+            n_samples,
+        }
+    }
+
+    /// An empty model (no table on disk yet): everything Unknown.
+    pub fn empty() -> CostModel {
+        CostModel {
+            task_ids: Vec::new(),
+            task_index: HashMap::new(),
+            exact: HashMap::new(),
+            marginal: HashMap::new(),
+            global: Vec::new(),
+            p95: Vec::new(),
+            n_samples: 0,
+        }
+    }
+
+    /// Did any observation make it into the model?
+    pub fn has_coverage(&self) -> bool {
+        self.n_samples > 0
+    }
+
+    /// Rows folded in (finite wall_time only).
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    /// Task ids the model has seen, in first-observation order.
+    pub fn tasks(&self) -> &[String] {
+        &self.task_ids
+    }
+
+    /// Predict the wall time of `task_id` at combination `digits`,
+    /// walking the exact → marginal → global → unknown hierarchy.
+    pub fn predict(&self, task_id: &str, digits: &[u32]) -> Estimate {
+        let Some(&t) = self.task_index.get(task_id) else {
+            return Estimate::Unknown;
+        };
+        if let Some(&s) = self.exact.get(&(t, digits.to_vec())) {
+            return Estimate::Exact(s);
+        }
+        let mut acc = Acc::default();
+        for (a, &d) in digits.iter().enumerate() {
+            if let Some(&m) = self.marginal.get(&(t, a, d)) {
+                acc.add(m);
+            }
+        }
+        if acc.n > 0 {
+            return Estimate::Marginal(acc.mean());
+        }
+        Estimate::Global(self.global[t as usize])
+    }
+
+    /// Timeout hint for a task: p95 of observed wall times × the
+    /// multiplier. `None` when the task was never observed.
+    pub fn timeout_hint(&self, task_id: &str, multiplier: f64) -> Option<f64> {
+        let &t = self.task_index.get(task_id)?;
+        let p = self.p95[t as usize];
+        if p > 0.0 && p.is_finite() {
+            Some(p * multiplier)
+        } else {
+            None
+        }
+    }
+}
+
+/// Scheduler-facing adapter: maps a [`ConcreteTask`] to a predicted
+/// cost / inferred timeout via the study's parameter [`Space`] (the
+/// model speaks digits; the scheduler speaks instance indices).
+pub struct TaskCosts<'a> {
+    /// The fitted model.
+    pub model: &'a CostModel,
+    /// Decodes instance index → combination digits.
+    pub space: &'a Space,
+    /// Headroom factor for [`TaskCosts::infer_timeout`].
+    pub timeout_multiplier: f64,
+}
+
+impl<'a> TaskCosts<'a> {
+    /// Adapter with the default timeout headroom.
+    pub fn new(model: &'a CostModel, space: &'a Space) -> TaskCosts<'a> {
+        TaskCosts { model, space, timeout_multiplier: DEFAULT_TIMEOUT_MULTIPLIER }
+    }
+
+    /// Predicted seconds for this task, if the model has evidence.
+    pub fn predict(&self, task: &ConcreteTask) -> Option<f64> {
+        let digits = self.space.digits(task.instance).ok()?;
+        self.model.predict(&task.task_id, &digits).value()
+    }
+
+    /// Inferred timeout (p95 × multiplier) for a task with no explicit
+    /// one; explicit WDL/CLI timeouts always win over this.
+    pub fn infer_timeout(&self, task: &ConcreteTask) -> Option<f64> {
+        self.model.timeout_hint(&task.task_id, self.timeout_multiplier)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Param;
+    use crate::results::{MetricValue, Row, Schema, BUILTIN_METRICS};
+
+    fn space_2x3() -> Space {
+        Space::cartesian(vec![
+            Param::new("a".into(), ["0", "1"].map(String::from).to_vec()),
+            Param::new(
+                "b".into(),
+                ["x", "y", "z"].map(String::from).to_vec(),
+            ),
+        ])
+        .unwrap()
+    }
+
+    fn schema_for(space: &Space) -> Schema {
+        Schema {
+            params: space.params().iter().map(|p| p.name.clone()).collect(),
+            axis_of: space.param_axes(),
+            n_axes: space.n_axes(),
+            metrics: BUILTIN_METRICS.iter().map(|m| m.to_string()).collect(),
+        }
+    }
+
+    fn row(
+        space: &Space,
+        run: u32,
+        instance: u64,
+        task: &str,
+        wall: f64,
+    ) -> Row {
+        Row {
+            run,
+            instance,
+            task_id: task.into(),
+            digits: space.digits(instance).unwrap(),
+            values: vec![
+                MetricValue::Num(wall),
+                MetricValue::Num(1.0),
+                MetricValue::Num(0.0),
+                MetricValue::Str("ok".into()),
+            ],
+        }
+    }
+
+    fn table(space: &Space, rows: Vec<Row>) -> ResultTable {
+        let mut t = ResultTable::new(schema_for(space));
+        for r in rows {
+            t.push(r);
+        }
+        t
+    }
+
+    #[test]
+    fn exact_mean_over_replicates() {
+        let space = space_2x3();
+        let t = table(
+            &space,
+            vec![
+                row(&space, 0, 4, "job", 2.0),
+                row(&space, 1, 4, "job", 4.0),
+            ],
+        );
+        let m = CostModel::from_table(&t);
+        assert!(m.has_coverage());
+        assert_eq!(m.n_samples(), 2);
+        let d = space.digits(4).unwrap();
+        assert_eq!(m.predict("job", &d), Estimate::Exact(3.0));
+        assert_eq!(m.predict("job", &d).tier(), "exact");
+    }
+
+    #[test]
+    fn marginal_fallback_uses_shared_digits() {
+        let space = space_2x3();
+        // Observe instances 0 (digits [0,0]) and 5 (digits [1,2]); ask
+        // about 2 (digits [0,2]) — never seen, but both digits were.
+        let t = table(
+            &space,
+            vec![
+                row(&space, 0, 0, "job", 1.0),
+                row(&space, 0, 5, "job", 9.0),
+            ],
+        );
+        let m = CostModel::from_table(&t);
+        let d = space.digits(2).unwrap();
+        // marginal(axis0,d=0)=1.0 and marginal(axis1,d=2)=9.0 → mean 5.0
+        assert_eq!(m.predict("job", &d), Estimate::Marginal(5.0));
+    }
+
+    #[test]
+    fn global_fallback_when_no_digit_matches() {
+        let space = space_2x3();
+        let t = table(
+            &space,
+            vec![
+                row(&space, 0, 0, "job", 2.0),
+                row(&space, 0, 1, "job", 6.0),
+            ],
+        );
+        let m = CostModel::from_table(&t);
+        // instance 5 = digits [1,2]: axis0 digit 1 unseen, axis1 digit
+        // 2 unseen → global mean 4.0
+        let d = space.digits(5).unwrap();
+        assert_eq!(m.predict("job", &d), Estimate::Global(4.0));
+    }
+
+    #[test]
+    fn unknown_task_and_empty_model() {
+        let space = space_2x3();
+        let t = table(&space, vec![row(&space, 0, 0, "job", 1.0)]);
+        let m = CostModel::from_table(&t);
+        assert_eq!(m.predict("other", &[0, 0]), Estimate::Unknown);
+        assert_eq!(m.predict("other", &[0, 0]).value(), None);
+        let e = CostModel::empty();
+        assert!(!e.has_coverage());
+        assert_eq!(e.predict("job", &[0, 0]), Estimate::Unknown);
+        assert_eq!(e.timeout_hint("job", 4.0), None);
+    }
+
+    #[test]
+    fn missing_and_nonfinite_wall_times_are_skipped() {
+        let space = space_2x3();
+        let mut bad = row(&space, 0, 0, "job", 1.0);
+        bad.values[0] = MetricValue::Missing;
+        let mut nan = row(&space, 0, 1, "job", 1.0);
+        nan.values[0] = MetricValue::Num(f64::NAN);
+        let t = table(&space, vec![bad, nan, row(&space, 0, 2, "job", 7.0)]);
+        let m = CostModel::from_table(&t);
+        assert_eq!(m.n_samples(), 1);
+        let d = space.digits(2).unwrap();
+        assert_eq!(m.predict("job", &d), Estimate::Exact(7.0));
+    }
+
+    #[test]
+    fn timeout_hint_is_p95_times_multiplier() {
+        let space = space_2x3();
+        let rows: Vec<Row> = (0..6)
+            .map(|i| row(&space, 0, i, "job", (i + 1) as f64))
+            .collect();
+        let t = table(&space, rows);
+        let m = CostModel::from_table(&t);
+        let p95 = {
+            let s: Vec<f64> = (1..=6).map(f64::from).collect();
+            percentile(&s, 0.95)
+        };
+        let hint = m.timeout_hint("job", 4.0).unwrap();
+        assert!((hint - p95 * 4.0).abs() < 1e-9);
+        assert_eq!(m.timeout_hint("nope", 4.0), None);
+    }
+
+    #[test]
+    fn task_costs_adapter_maps_instances() {
+        let space = space_2x3();
+        let t = table(&space, vec![row(&space, 0, 3, "job", 5.0)]);
+        let m = CostModel::from_table(&t);
+        let costs = TaskCosts::new(&m, &space);
+        let task = ConcreteTask {
+            instance: 3,
+            task_id: "job".into(),
+            argv: vec!["true".into()],
+            env: Default::default(),
+            infiles: vec![],
+            outfiles: vec![],
+            substitutions: vec![],
+            timeout: None,
+            retries: 0,
+        };
+        assert_eq!(costs.predict(&task), Some(5.0));
+        let hint = costs.infer_timeout(&task).unwrap();
+        assert!((hint - 5.0 * DEFAULT_TIMEOUT_MULTIPLIER).abs() < 1e-9);
+    }
+}

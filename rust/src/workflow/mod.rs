@@ -15,6 +15,7 @@
 //! parameter space in memory.
 
 pub mod dag;
+pub mod estimate;
 pub mod instance;
 pub mod profiler;
 pub mod provenance;
@@ -23,9 +24,10 @@ pub mod source;
 pub mod task;
 
 pub use dag::Dag;
+pub use estimate::{CostModel, Estimate, TaskCosts};
 pub use instance::{Combo, WorkflowInstance};
-pub use profiler::{Profiler, TaskRecord};
+pub use profiler::{Profiler, TaskRecord, WorkerUtilization};
 pub use provenance::{AttemptLog, AttemptRecord, Provenance};
-pub use scheduler::{ExecOrder, ExecutionReport, WorkflowScheduler};
+pub use scheduler::{ExecOrder, ExecutionReport, PackMode, WorkflowScheduler};
 pub use source::{InstanceCursor, InstanceSource, Selection, Shard};
 pub use task::{ConcreteTask, TaskState};

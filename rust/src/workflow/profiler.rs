@@ -46,6 +46,34 @@ impl TaskRecord {
     }
 }
 
+/// Per-worker busy/idle accounting over the run's makespan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerUtilization {
+    /// Worker label (executor-specific).
+    pub worker: String,
+    /// Seconds this worker spent executing tasks.
+    pub busy: f64,
+    /// Seconds of the makespan this worker sat idle.
+    pub idle: f64,
+    /// Tasks this worker executed.
+    pub tasks: usize,
+    /// busy / makespan, capped at 1.0.
+    pub utilization: f64,
+}
+
+impl WorkerUtilization {
+    /// Status/report serialization.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("worker".to_string(), Json::from(self.worker.as_str())),
+            ("busy_s".to_string(), Json::Num(self.busy)),
+            ("idle_s".to_string(), Json::Num(self.idle)),
+            ("tasks".to_string(), Json::from(self.tasks as i64)),
+            ("utilization".to_string(), Json::Num(self.utilization)),
+        ])
+    }
+}
+
 /// Thread-safe collector of task records with a shared wall-clock epoch.
 #[derive(Debug)]
 pub struct Profiler {
@@ -145,6 +173,41 @@ impl Profiler {
         }
         (busy / (span * workers.len() as f64)).min(1.0)
     }
+
+    /// Per-worker busy/idle breakdown over the makespan, sorted by
+    /// worker label. Zero-length `"-"` markers (skipped tasks never
+    /// handed to a worker) are excluded — they are bookkeeping, not
+    /// workers.
+    pub fn worker_utilization(&self) -> Vec<WorkerUtilization> {
+        let recs = self.records.lock().unwrap();
+        if recs.is_empty() {
+            return Vec::new();
+        }
+        let first = recs.iter().map(|r| r.start).fold(f64::INFINITY, f64::min);
+        let last = recs.iter().map(|r| r.end).fold(0.0, f64::max);
+        let span = (last - first).max(0.0);
+        let mut by_worker: std::collections::BTreeMap<&str, (f64, usize)> =
+            std::collections::BTreeMap::new();
+        for r in recs.iter().filter(|r| r.worker != "-") {
+            let e = by_worker.entry(r.worker.as_str()).or_insert((0.0, 0));
+            e.0 += r.end - r.start;
+            e.1 += 1;
+        }
+        by_worker
+            .into_iter()
+            .map(|(worker, (busy, tasks))| WorkerUtilization {
+                worker: worker.to_string(),
+                busy,
+                idle: (span - busy).max(0.0),
+                tasks,
+                utilization: if span > 0.0 {
+                    (busy / span).min(1.0)
+                } else {
+                    0.0
+                },
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +247,30 @@ mod tests {
         p.record(rec("a", 2, 0.0, 0.0, "w1")); // zero-length marker
         let u = p.utilization();
         assert!(u > 0.49 && u <= 0.51, "u={u}");
+    }
+
+    #[test]
+    fn worker_utilization_breakdown_excludes_skip_markers() {
+        let p = Profiler::new();
+        p.record(rec("a", 0, 0.0, 3.0, "w0"));
+        p.record(rec("a", 1, 3.0, 4.0, "w0"));
+        p.record(rec("a", 2, 0.0, 1.0, "w1"));
+        p.record(rec("a", 3, 2.0, 2.0, "-")); // skipped-task marker
+        let wu = p.worker_utilization();
+        assert_eq!(wu.len(), 2);
+        assert_eq!(wu[0].worker, "w0");
+        assert_eq!(wu[0].tasks, 2);
+        assert!((wu[0].busy - 4.0).abs() < 1e-12);
+        assert!((wu[0].idle - 0.0).abs() < 1e-12);
+        assert!((wu[0].utilization - 1.0).abs() < 1e-12);
+        assert_eq!(wu[1].worker, "w1");
+        assert!((wu[1].busy - 1.0).abs() < 1e-12);
+        assert!((wu[1].idle - 3.0).abs() < 1e-12);
+        assert!((wu[1].utilization - 0.25).abs() < 1e-12);
+        let j = wu[1].to_json();
+        assert_eq!(j.expect_str("worker").unwrap(), "w1");
+        assert_eq!(j.expect_i64("tasks").unwrap(), 1);
+        assert!(Profiler::new().worker_utilization().is_empty());
     }
 
     #[test]

@@ -285,6 +285,12 @@ impl Provenance {
             ("peak_open".to_string(), Json::from(report.peak_open)),
             ("makespan_s".to_string(), Json::Num(report.makespan)),
             ("utilization".to_string(), Json::Num(report.utilization)),
+            (
+                "workers".to_string(),
+                Json::Arr(
+                    report.workers.iter().map(|w| w.to_json()).collect(),
+                ),
+            ),
             ("n_records".to_string(), Json::from(report.records.len())),
         ]);
         std::fs::write(
@@ -357,6 +363,13 @@ mod tests {
             peak_open: 3,
             makespan: 1.5,
             utilization: 0.8,
+            workers: vec![crate::workflow::profiler::WorkerUtilization {
+                worker: "local-0".into(),
+                busy: 1.2,
+                idle: 0.3,
+                tasks: 5,
+                utilization: 0.8,
+            }],
             records: vec![],
         };
         p.write_report(&report, "local").unwrap();
@@ -367,6 +380,12 @@ mod tests {
         assert_eq!(j.expect_i64("completed").unwrap(), 5);
         assert_eq!(j.expect_str("executor").unwrap(), "local");
         assert!(!j.expect("halted").unwrap().as_bool().unwrap());
+        let Some(Json::Arr(ws)) = j.get("workers") else {
+            panic!("workers array missing")
+        };
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].expect_str("worker").unwrap(), "local-0");
+        assert_eq!(ws[0].expect_i64("tasks").unwrap(), 5);
     }
 
     #[test]

@@ -16,8 +16,9 @@
 //! O(window × tasks-per-instance), independent of the parameter-space
 //! size, so a 10M-combination study starts its first task immediately.
 
+use super::estimate::TaskCosts;
 use super::instance::WorkflowInstance;
-use super::profiler::{Profiler, TaskRecord};
+use super::profiler::{Profiler, TaskRecord, WorkerUtilization};
 use super::provenance::AttemptRecord;
 use super::task::{ConcreteTask, TaskState};
 use crate::exec::{backoff_delay, Completion, Executor, FailurePolicy};
@@ -32,6 +33,48 @@ use std::time::{Duration, Instant};
 /// lockstep group keeps memory flat on huge studies while preserving the
 /// paper's behavior for any study that fits the window.
 pub const DEFAULT_BREADTH_WINDOW: usize = 1024;
+
+/// Hard ceiling for the dynamic (LPT, no explicit `--window`) in-flight
+/// window: growth driven by duration variance/idleness stops here so
+/// memory stays flat on huge studies.
+pub const WINDOW_MAX: usize = 8192;
+
+/// How ready tasks are ordered into the executor within the admission
+/// window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PackMode {
+    /// Index order, exactly as admitted (PR-6 behavior, byte-stable).
+    #[default]
+    Fifo,
+    /// Longest-Predicted-Time-first: ready tasks wait in a scheduler-side
+    /// pool and dispatch longest-expected-first (classic LPT list
+    /// scheduling), with a stable tie-break on instance index so packed
+    /// order is seed-deterministic. Tasks the cost model knows nothing
+    /// about sort first (conservatively "long"). Requires a cost model
+    /// to be useful; without one it degrades to instance-index order.
+    Lpt,
+}
+
+impl PackMode {
+    /// Parse a `--pack` CLI value.
+    pub fn parse(s: &str) -> Result<PackMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(PackMode::Fifo),
+            "lpt" => Ok(PackMode::Lpt),
+            other => Err(Error::Exec(format!(
+                "--pack: unknown mode '{other}' (expected fifo|lpt)"
+            ))),
+        }
+    }
+
+    /// Stable lowercase label.
+    pub fn label(self) -> &'static str {
+        match self {
+            PackMode::Fifo => "fifo",
+            PackMode::Lpt => "lpt",
+        }
+    }
+}
 
 /// Summary of one scheduler run.
 #[derive(Debug, Clone)]
@@ -55,6 +98,9 @@ pub struct ExecutionReport {
     pub makespan: f64,
     /// Mean worker utilization (busy / (makespan × workers)).
     pub utilization: f64,
+    /// Per-worker busy/idle breakdown over the makespan (skip markers
+    /// excluded) — surfaces exactly which workers sat idle.
+    pub workers: Vec<WorkerUtilization>,
     /// Every task measurement, sorted by start time.
     pub records: Vec<TaskRecord>,
 }
@@ -159,6 +205,19 @@ pub struct WorkflowScheduler<'a> {
     /// from the attempt log) so repeated runs accumulate as replicates
     /// in the result store instead of overwriting each other.
     pub run_id: u32,
+    /// Admission packing: FIFO (default, PR-6-identical dispatch) or
+    /// LPT longest-expected-first over [`WorkflowScheduler::costs`].
+    pub pack: PackMode,
+    /// Cost model adapter predicting per-task wall time from captured
+    /// results; feeds LPT packing and timeout inference. `None` = no
+    /// history (LPT degrades to index order, inference is off).
+    pub costs: Option<TaskCosts<'a>>,
+    /// When set, a task with no explicit WDL/CLI timeout gets one
+    /// inferred from the model (per-task p95 × multiplier) before its
+    /// first dispatch; retries re-send the same [`ConcreteTask`], so
+    /// the inferred limit sticks across attempts. Explicit timeouts
+    /// always win (inference only fills `None`).
+    pub infer_timeouts: bool,
 }
 
 impl<'a> WorkflowScheduler<'a> {
@@ -183,7 +242,45 @@ impl<'a> WorkflowScheduler<'a> {
             backoff_ms: 0,
             on_attempt: None,
             run_id: 0,
+            pack: PackMode::Fifo,
+            costs: None,
+            infer_timeouts: false,
         }
+    }
+
+    /// Fill in an inferred timeout right before first dispatch (no-op
+    /// unless `infer_timeouts` is set and the task has none).
+    fn prepared(&self, mut t: ConcreteTask) -> ConcreteTask {
+        if self.infer_timeouts && t.timeout.is_none() {
+            if let Some(costs) = &self.costs {
+                t.timeout = costs.infer_timeout(&t);
+            }
+        }
+        t
+    }
+
+    /// Predicted cost used as the LPT sort key (`None` = unknown).
+    fn predicted(&self, t: &ConcreteTask) -> Option<f64> {
+        self.costs.as_ref().and_then(|c| c.predict(t))
+    }
+
+    /// Strict LPT pool ordering: `a` dispatches before `b` when its
+    /// predicted cost is higher (unknown = +∞, conservatively long),
+    /// tie-breaking on ascending instance index, then insertion order —
+    /// fully deterministic for a fixed study + model.
+    fn lpt_before(
+        a: &(Option<f64>, u64, ConcreteTask),
+        b: &(Option<f64>, u64, ConcreteTask),
+    ) -> bool {
+        let ca = a.0.unwrap_or(f64::INFINITY);
+        let cb = b.0.unwrap_or(f64::INFINITY);
+        if ca != cb {
+            return ca > cb;
+        }
+        if a.2.instance != b.2.instance {
+            return a.2.instance < b.2.instance;
+        }
+        a.1 < b.1
     }
 
     /// The profiler (shared, inspectable after `run`).
@@ -282,13 +379,24 @@ impl<'a> WorkflowScheduler<'a> {
     /// task occupies its original window slot, so a wedged or flaky
     /// instance cannot stall admission of its neighbors.
     pub fn run(&mut self, executor: &dyn Executor) -> Result<ExecutionReport> {
-        let window = self
-            .window
-            .unwrap_or(match self.order {
+        let workers = executor.workers().max(1);
+        let lpt = self.pack == PackMode::Lpt;
+        // FIFO keeps the PR-6 static windows exactly; LPT with an
+        // explicit window honors it verbatim (ordering is then the only
+        // difference between the modes). LPT without one sizes the
+        // window dynamically from observed duration variance and worker
+        // idleness, within [2 × workers, WINDOW_MAX].
+        let dynamic = lpt && self.window.is_none();
+        let mut window = match self.window {
+            Some(w) => w,
+            None if dynamic => (workers * 4).min(WINDOW_MAX),
+            None => match self.order {
                 ExecOrder::DepthFirst => executor.workers(),
                 ExecOrder::BreadthFirst => DEFAULT_BREADTH_WINDOW,
-            })
-            .max(1);
+            },
+        }
+        .max(1);
+        let mut window_floor = (workers * 2).min(WINDOW_MAX);
 
         let (ready_tx, ready_rx) = mpsc::channel();
         let (done_tx, done_rx) = mpsc::channel::<Completion>();
@@ -306,6 +414,14 @@ impl<'a> WorkflowScheduler<'a> {
             let mut halted = false;
             let mut retry_queue: Vec<PendingRetry> = Vec::new();
             let mut budget_used: u32 = 0;
+            // LPT state: the ready pool (predicted cost, insertion seq,
+            // task), drained longest-first while the executor has
+            // capacity. Always empty under FIFO.
+            let mut pool: Vec<(Option<f64>, u64, ConcreteTask)> = Vec::new();
+            let mut seq: u64 = 0;
+            // Welford accumulator over observed attempt durations —
+            // drives dynamic window sizing via coefficient of variation.
+            let (mut dur_n, mut dur_mean, mut dur_m2) = (0u64, 0.0f64, 0.0f64);
 
             loop {
                 // Admission: top the window up from the lazy source.
@@ -324,11 +440,53 @@ impl<'a> WorkflowScheduler<'a> {
                         tally.peak_open = tally.peak_open.max(open.len());
                     }
                     for t in sends {
-                        ready_tx.send(t).map_err(|_| {
-                            Error::Workflow("executor hung up".into())
-                        })?;
-                        in_flight += 1;
+                        let t = self.prepared(t);
+                        if lpt {
+                            pool.push((self.predicted(&t), seq, t));
+                            seq += 1;
+                        } else {
+                            ready_tx.send(t).map_err(|_| {
+                                Error::Workflow("executor hung up".into())
+                            })?;
+                            in_flight += 1;
+                        }
                     }
+                }
+
+                // LPT dispatch: hand the executor its next tasks
+                // longest-predicted-first, keeping a one-task margin
+                // over the worker count so no worker idles waiting on
+                // the pool while packing stays near-optimal.
+                while lpt && !pool.is_empty() && in_flight < workers + 1 {
+                    let mut best = 0;
+                    for i in 1..pool.len() {
+                        if Self::lpt_before(&pool[i], &pool[best]) {
+                            best = i;
+                        }
+                    }
+                    let (_, _, t) = pool.swap_remove(best);
+                    ready_tx.send(t).map_err(|_| {
+                        Error::Workflow("executor hung up".into())
+                    })?;
+                    in_flight += 1;
+                }
+
+                // Dynamic window: workers idle + pool empty + admission
+                // blocked on the window → the window is too small to
+                // surface ready work (dependency chains); grow it and
+                // re-admit. The raised floor keeps the variance
+                // retarget below from immediately undoing the growth.
+                if dynamic
+                    && !halted
+                    && !source_dry
+                    && pool.is_empty()
+                    && in_flight < workers
+                    && open.len() >= window
+                    && window < WINDOW_MAX
+                {
+                    window_floor = (window * 2).min(WINDOW_MAX);
+                    window = window_floor;
+                    continue;
                 }
 
                 // Re-dispatch every retry whose backoff has elapsed.
@@ -346,7 +504,7 @@ impl<'a> WorkflowScheduler<'a> {
                     }
                 }
 
-                if in_flight == 0 && retry_queue.is_empty() {
+                if in_flight == 0 && retry_queue.is_empty() && pool.is_empty() {
                     break;
                 }
                 if in_flight == 0 {
@@ -384,6 +542,23 @@ impl<'a> WorkflowScheduler<'a> {
                     }
                 };
                 in_flight -= 1;
+                // Fold this attempt's duration into the variance
+                // tracker, then retarget the dynamic window: high
+                // variance wants a deeper candidate pool to pack from,
+                // homogeneous durations shrink back toward the floor.
+                if dynamic && result.duration.is_finite() {
+                    dur_n += 1;
+                    let d = result.duration - dur_mean;
+                    dur_mean += d / dur_n as f64;
+                    dur_m2 += d * (result.duration - dur_mean);
+                    if dur_n >= 2 && dur_mean > 1e-12 {
+                        let cv =
+                            (dur_m2 / (dur_n - 1) as f64).sqrt() / dur_mean;
+                        let target = ((workers as f64) * (2.0 + 4.0 * cv))
+                            .ceil() as usize;
+                        window = target.clamp(window_floor, WINDOW_MAX);
+                    }
+                }
                 let o = open.get_mut(&task.instance).ok_or_else(|| {
                     Error::Workflow(format!("unknown instance {}", task.instance))
                 })?;
@@ -468,21 +643,29 @@ impl<'a> WorkflowScheduler<'a> {
                 } else {
                     tally.failed += 1;
                     if self.policy == FailurePolicy::FailFast {
-                        // Stop the window: nothing new is admitted or
-                        // released; in-flight work drains and the run
-                        // returns with `halted` set.
+                        // Stop the window: nothing new is admitted,
+                        // released, or dispatched from the LPT pool;
+                        // in-flight work drains and the run returns
+                        // with `halted` set.
                         halted = true;
                         source_dry = true;
+                        pool.clear();
                     }
                 }
                 let sends = self.release(o, node, result.ok, &mut tally);
                 let finished = o.remaining == 0;
                 if !halted {
                     for t in sends {
-                        ready_tx.send(t).map_err(|_| {
-                            Error::Workflow("executor hung up".into())
-                        })?;
-                        in_flight += 1;
+                        let t = self.prepared(t);
+                        if lpt {
+                            pool.push((self.predicted(&t), seq, t));
+                            seq += 1;
+                        } else {
+                            ready_tx.send(t).map_err(|_| {
+                                Error::Workflow("executor hung up".into())
+                            })?;
+                            in_flight += 1;
+                        }
                     }
                 }
                 if finished {
@@ -505,6 +688,7 @@ impl<'a> WorkflowScheduler<'a> {
                 peak_open: tally.peak_open,
                 makespan: self.profiler.makespan(),
                 utilization: self.profiler.utilization(),
+                workers: self.profiler.worker_utilization(),
                 records: self.profiler.snapshot(),
             })
         })?;
@@ -922,5 +1106,247 @@ mod tests {
         let report = sched.run(&pool(2, "stream")).unwrap();
         assert_eq!(report.completed, 2);
         assert!(report.all_ok());
+    }
+
+    // ---- metric-aware packing (PackMode::Lpt + CostModel) ----
+
+    use crate::results::{
+        MetricValue, ResultTable, Row, Schema, BUILTIN_METRICS,
+    };
+    use crate::workflow::estimate::{CostModel, TaskCosts};
+
+    /// A one-axis sweep space matching `instances_for` on a study whose
+    /// single task has `n` (identical) values for one parameter.
+    fn sweep_space(task: &str, param: &str, n: usize) -> Space {
+        Space::cartesian(vec![Param {
+            name: format!("{task}:{param}"),
+            values: (0..n).map(|_| "0".to_string()).collect(),
+        }])
+        .unwrap()
+    }
+
+    /// A cost model observing `walls` = (instance, wall_time) for `task`.
+    fn model_for(space: &Space, task: &str, walls: &[(u64, f64)]) -> CostModel {
+        let schema = Schema {
+            params: space.params().iter().map(|p| p.name.clone()).collect(),
+            axis_of: space.param_axes(),
+            n_axes: space.n_axes(),
+            metrics: BUILTIN_METRICS.iter().map(|m| m.to_string()).collect(),
+        };
+        let mut t = ResultTable::new(schema);
+        for &(i, w) in walls {
+            t.push(Row {
+                run: 0,
+                instance: i,
+                task_id: task.into(),
+                digits: space.digits(i).unwrap(),
+                values: vec![
+                    MetricValue::Num(w),
+                    MetricValue::Num(1.0),
+                    MetricValue::Num(0.0),
+                    MetricValue::Str("ok".into()),
+                ],
+            });
+        }
+        CostModel::from_table(&t)
+    }
+
+    #[test]
+    fn lpt_dispatches_longest_predicted_first_and_is_deterministic() {
+        let yaml = "job:\n  command: work ${v}\n  v: [0, 0, 0, 0]\n";
+        let space = sweep_space("job", "v", 4);
+        let model =
+            model_for(&space, "job", &[(0, 1.0), (1, 4.0), (2, 2.0), (3, 3.0)]);
+        let run_once = || {
+            let instances = instances_for(yaml, 10);
+            let script = Arc::new(Script::new());
+            let exec = ScriptedExecutor::new(script.clone(), 1);
+            let mut sched = WorkflowScheduler::new(&instances);
+            sched.pack = PackMode::Lpt;
+            sched.window = Some(4);
+            sched.costs = Some(TaskCosts::new(&model, &space));
+            let report = sched.run(&exec).unwrap();
+            assert_eq!(report.completed, 4);
+            assert!(report.all_ok());
+            script.journal()
+        };
+        let journal = run_once();
+        // longest-expected-first: 4.0, 3.0, 2.0, 1.0
+        assert_eq!(journal, vec!["job#1", "job#3", "job#2", "job#0"]);
+        // seed-determinism: an identical run packs identically
+        assert_eq!(run_once(), journal);
+    }
+
+    #[test]
+    fn lpt_without_model_degrades_to_index_order() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  v: [0, 0, 0, 0]\n",
+            10,
+        );
+        let script = Arc::new(Script::new());
+        let exec = ScriptedExecutor::new(script.clone(), 1);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.pack = PackMode::Lpt;
+        sched.window = Some(4);
+        // every cost unknown (+∞): the instance-index tie-break rules
+        let report = sched.run(&exec).unwrap();
+        assert_eq!(report.completed, 4);
+        let expect: Vec<String> = (0..4).map(|i| format!("job#{i}")).collect();
+        assert_eq!(script.journal(), expect);
+    }
+
+    #[test]
+    fn fifo_with_costs_set_keeps_index_order() {
+        let yaml = "job:\n  command: work ${v}\n  v: [0, 0, 0, 0]\n";
+        let space = sweep_space("job", "v", 4);
+        let model =
+            model_for(&space, "job", &[(0, 1.0), (1, 4.0), (2, 2.0), (3, 3.0)]);
+        let instances = instances_for(yaml, 10);
+        let script = Arc::new(Script::new());
+        let exec = ScriptedExecutor::new(script.clone(), 1);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.window = Some(4);
+        sched.costs = Some(TaskCosts::new(&model, &space)); // pack stays Fifo
+        let report = sched.run(&exec).unwrap();
+        assert_eq!(report.completed, 4);
+        let expect: Vec<String> = (0..4).map(|i| format!("job#{i}")).collect();
+        assert_eq!(script.journal(), expect);
+    }
+
+    #[test]
+    fn lpt_terminal_outcomes_match_fifo_on_flaky_failures() {
+        let yaml =
+            "job:\n  command: work ${v}\n  retries: 1\n  v: [0, 0, 0, 0, 0]\n";
+        let space = sweep_space("job", "v", 5);
+        let model = model_for(
+            &space,
+            "job",
+            &[(0, 5.0), (1, 1.0), (2, 4.0), (3, 2.0), (4, 3.0)],
+        );
+        let run_with = |pack: PackMode| {
+            let instances = instances_for(yaml, 10);
+            let script = Arc::new(
+                Script::new()
+                    .on("job#1", Outcome::Fail(3))
+                    .on("job#3", Outcome::FlakyThenOk(1)),
+            );
+            let exec = ScriptedExecutor::new(script.clone(), 2);
+            let mut sched = WorkflowScheduler::new(&instances);
+            sched.pack = pack;
+            sched.window = Some(5);
+            sched.costs = Some(TaskCosts::new(&model, &space));
+            let report = sched.run(&exec).unwrap();
+            let mut execs: Vec<(String, u32)> = (0..5)
+                .map(|i| {
+                    let k = format!("job#{i}");
+                    let n = script.executions(&k);
+                    (k, n)
+                })
+                .collect();
+            execs.sort();
+            (report.completed, report.failed, execs)
+        };
+        let fifo = run_with(PackMode::Fifo);
+        let lpt = run_with(PackMode::Lpt);
+        // ordering-only optimization: identical terminal outcome sets
+        assert_eq!(fifo, lpt);
+        assert_eq!(fifo.0, 4); // flaky #3 recovered
+        assert_eq!(fifo.1, 1); // #1 exhausted its retry
+    }
+
+    #[test]
+    fn inferred_timeout_turns_a_hang_into_a_timeout() {
+        // No WDL/CLI timeout anywhere; the model's p95 supplies one.
+        let yaml = "job:\n  command: work ${v}\n  v: [0, 0]\n";
+        let space = sweep_space("job", "v", 2);
+        let model = model_for(&space, "job", &[(0, 2.0), (1, 2.0)]);
+        let hint = model
+            .timeout_hint("job", crate::workflow::estimate::DEFAULT_TIMEOUT_MULTIPLIER)
+            .unwrap();
+        let instances = instances_for(yaml, 10);
+        assert_eq!(instances[0].tasks[0].timeout, None);
+        let script = Arc::new(Script::new().on("job#1", Outcome::Hang));
+        let exec = ScriptedExecutor::new(script, 1);
+        let log: Mutex<Vec<AttemptRecord>> = Mutex::new(Vec::new());
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.infer_timeouts = true;
+        sched.costs = Some(TaskCosts::new(&model, &space));
+        sched.on_attempt =
+            Some(Box::new(|r| log.lock().unwrap().push(r.clone())));
+        let report = sched.run(&exec).unwrap();
+        drop(sched);
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.failed, 1);
+        let attempts = log.into_inner().unwrap();
+        let hung = attempts.iter().find(|a| a.key == "job#1").unwrap();
+        // without inference this would be ErrorClass::Killed
+        assert_eq!(hung.class, Some(ErrorClass::Timeout));
+        assert!((hung.duration - hint).abs() < 1e-9);
+    }
+
+    #[test]
+    fn explicit_window_still_caps_lpt() {
+        let instances = instances_for(
+            "a:\n  command: work ${v}\n  v: [0, 0, 0, 0, 0, 0]\n",
+            1000,
+        );
+        let script = Arc::new(Script::new());
+        let exec = ScriptedExecutor::new(script, 1);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.pack = PackMode::Lpt;
+        sched.window = Some(2);
+        let report = sched.run(&exec).unwrap();
+        assert_eq!(report.completed, 6);
+        assert!(report.peak_open <= 2, "peak_open {}", report.peak_open);
+    }
+
+    #[test]
+    fn dynamic_window_stays_bounded_and_completes() {
+        let instances = instances_for(
+            &format!(
+                "job:\n  command: work ${{v}}\n  v: [{}]\n",
+                (0..64).map(|_| "0").collect::<Vec<_>>().join(", ")
+            ),
+            1000,
+        );
+        assert_eq!(instances.len(), 64);
+        let script = Arc::new(Script::new());
+        let exec = ScriptedExecutor::new(script, 1);
+        let mut sched = WorkflowScheduler::new(&instances);
+        sched.pack = PackMode::Lpt; // window: None → dynamic sizing
+        let report = sched.run(&exec).unwrap();
+        assert_eq!(report.completed, 64);
+        // homogeneous durations: the window never needs to grow past
+        // its initial 4 × workers
+        assert!(report.peak_open <= 4, "peak_open {}", report.peak_open);
+    }
+
+    #[test]
+    fn report_carries_per_worker_utilization() {
+        let instances = instances_for(
+            "job:\n  command: work ${v}\n  v: [0, 0, 0, 0]\n",
+            10,
+        );
+        let script = Arc::new(Script::new());
+        let exec = ScriptedExecutor::new(script, 2);
+        let report = WorkflowScheduler::new(&instances).run(&exec).unwrap();
+        assert_eq!(report.completed, 4);
+        assert!(!report.workers.is_empty());
+        let total: usize = report.workers.iter().map(|w| w.tasks).sum();
+        assert_eq!(total, 4);
+        for w in &report.workers {
+            assert!(w.worker != "-");
+            assert!(w.busy >= 0.0 && w.idle >= 0.0);
+            assert!(w.utilization >= 0.0 && w.utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn pack_mode_parses() {
+        assert_eq!(PackMode::parse("lpt").unwrap(), PackMode::Lpt);
+        assert_eq!(PackMode::parse("FIFO").unwrap(), PackMode::Fifo);
+        assert!(PackMode::parse("magic").is_err());
+        assert_eq!(PackMode::Lpt.label(), "lpt");
+        assert_eq!(PackMode::default(), PackMode::Fifo);
     }
 }

@@ -689,6 +689,181 @@ fn prop_search_strategies_propose_fresh_in_space_within_budget() {
     );
 }
 
+/// One-task sweep (`job`, `n` identical values, per-task `retries`)
+/// plus a cost model that observed `walls` = (instance, wall_time)
+/// rows from a prior run of the same space.
+fn sweep_with_model(
+    n: usize,
+    retries: usize,
+    walls: &[(u64, f64)],
+) -> (StudySpec, Space, papas::workflow::CostModel) {
+    use papas::results::{
+        MetricValue, ResultTable, Row, Schema, BUILTIN_METRICS,
+    };
+    let vals = (0..n).map(|_| "0").collect::<Vec<_>>().join(", ");
+    let yaml = format!(
+        "job:\n  command: work ${{v}}\n  retries: {retries}\n  v: [{vals}]\n"
+    );
+    let spec =
+        StudySpec::from_doc(&parse_str(&yaml, Format::Yaml).unwrap()).unwrap();
+    let mut scoped: Vec<Param> = Vec::new();
+    for t in &spec.tasks {
+        for p in t.local_params() {
+            scoped.push(Param {
+                name: format!("{}:{}", t.id, p.name),
+                values: p.values,
+            });
+        }
+    }
+    let space = Space::cartesian(scoped).unwrap();
+    let schema = Schema {
+        params: space.params().iter().map(|p| p.name.clone()).collect(),
+        axis_of: space.param_axes(),
+        n_axes: space.n_axes(),
+        metrics: BUILTIN_METRICS.iter().map(|m| m.to_string()).collect(),
+    };
+    let mut table = ResultTable::new(schema);
+    for &(i, w) in walls {
+        table.push(Row {
+            run: 0,
+            instance: i,
+            task_id: "job".into(),
+            digits: space.digits(i).unwrap(),
+            values: vec![
+                MetricValue::Num(w),
+                MetricValue::Num(1.0),
+                MetricValue::Num(0.0),
+                MetricValue::Str("ok".into()),
+            ],
+        });
+    }
+    (spec, space, papas::workflow::CostModel::from_table(&table))
+}
+
+#[test]
+fn prop_lpt_packing_preserves_terminal_outcomes() {
+    use papas::exec::{Outcome, Script, ScriptedExecutor};
+    use papas::workflow::{PackMode, TaskCosts, WorkflowScheduler};
+    use std::sync::Arc;
+    check("LPT ≡ FIFO terminal outcomes on flaky landscapes", 20, |g| {
+        let n = g.usize(2..=12);
+        let retries = g.usize(0..=1);
+        // the model observed a random subset of instances (possibly
+        // empty: LPT then degrades to index order, still equivalent)
+        let walls: Vec<(u64, f64)> = (0..n as u64)
+            .filter(|_| g.bool(0.7))
+            .map(|i| (i, 0.1 + g.f64_unit() * 9.9))
+            .collect();
+        let (spec, space, model) = sweep_with_model(n, retries, &walls);
+        let outcomes: Vec<(String, Outcome)> = (0..n)
+            .filter_map(|i| {
+                let key = format!("job#{i}");
+                if g.bool(0.2) {
+                    Some((key, Outcome::Fail(3)))
+                } else if g.bool(0.25) {
+                    Some((key, Outcome::FlakyThenOk(1)))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let workers = g.usize(1..=3);
+        let run_with = |pack: PackMode| {
+            let instances: Vec<WorkflowInstance> = (0..space.len())
+                .map(|i| {
+                    WorkflowInstance::materialize(
+                        &spec,
+                        i,
+                        space.combination(i).unwrap(),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let mut s = Script::new();
+            for (k, o) in &outcomes {
+                s = s.on(k.clone(), *o);
+            }
+            let script = Arc::new(s);
+            let exec = ScriptedExecutor::new(script.clone(), workers);
+            let mut sched = WorkflowScheduler::new(&instances);
+            sched.pack = pack;
+            sched.window = Some(n);
+            if model.has_coverage() {
+                sched.costs = Some(TaskCosts::new(&model, &space));
+            }
+            let report = sched.run(&exec).unwrap();
+            let mut seen: Vec<(String, bool)> = report
+                .records
+                .iter()
+                .map(|r| (r.key.clone(), r.ok))
+                .collect();
+            seen.sort();
+            let mut execs: Vec<(String, u32)> = (0..n)
+                .map(|i| {
+                    let k = format!("job#{i}");
+                    let c = script.executions(&k);
+                    (k, c)
+                })
+                .collect();
+            execs.sort();
+            (report.completed, report.failed, seen, execs)
+        };
+        // packing is a pure reordering: terminal outcomes, retry counts,
+        // and per-task execution tallies must be identical
+        assert_eq!(run_with(PackMode::Fifo), run_with(PackMode::Lpt));
+    });
+}
+
+#[test]
+fn prop_lpt_packed_order_is_cost_sorted_and_deterministic() {
+    use papas::exec::{Script, ScriptedExecutor};
+    use papas::workflow::{PackMode, TaskCosts, WorkflowScheduler};
+    use std::sync::Arc;
+    check("packed order = stable sort by descending predicted cost", 20, |g| {
+        let n = g.usize(2..=12);
+        // full coverage with one replicate each: prediction == wall
+        let walls: Vec<(u64, f64)> = (0..n as u64)
+            .map(|i| (i, 0.1 + g.f64_unit() * 9.9))
+            .collect();
+        let (spec, space, model) = sweep_with_model(n, 0, &walls);
+        let run_once = || {
+            let instances: Vec<WorkflowInstance> = (0..space.len())
+                .map(|i| {
+                    WorkflowInstance::materialize(
+                        &spec,
+                        i,
+                        space.combination(i).unwrap(),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let script = Arc::new(Script::new());
+            // one worker: the script journal is exactly dispatch order
+            let exec = ScriptedExecutor::new(script.clone(), 1);
+            let mut sched = WorkflowScheduler::new(&instances);
+            sched.pack = PackMode::Lpt;
+            sched.window = Some(n);
+            sched.costs = Some(TaskCosts::new(&model, &space));
+            let report = sched.run(&exec).unwrap();
+            assert_eq!(report.completed, n);
+            script.journal()
+        };
+        let journal = run_once();
+        assert_eq!(journal, run_once(), "identical runs must pack identically");
+        let mut expect: Vec<u64> = (0..n as u64).collect();
+        expect.sort_by(|a, b| {
+            walls[*a as usize]
+                .1
+                .total_cmp(&walls[*b as usize].1)
+                .reverse()
+                .then(a.cmp(b))
+        });
+        let expect_keys: Vec<String> =
+            expect.iter().map(|i| format!("job#{i}")).collect();
+        assert_eq!(journal, expect_keys);
+    });
+}
+
 #[test]
 fn prop_search_proposals_are_deterministic_per_seed_and_history() {
     use papas::search::{strategy_for, Objective, SearchHistory, StrategySpec};
