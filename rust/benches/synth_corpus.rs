@@ -1,0 +1,108 @@
+//! Synth corpus throughput: how fast the front door can be fuzzed.
+//!
+//! Three measured stages over a seeded corpus: plan generation
+//! (`synth::generate`), WDL emission (`to_yaml`), and full hermetic
+//! replay (run → harvest → checkpoint-resume, FIFO + LPT twice — see
+//! `papas::synth::replay`). Correctness gates run before any timing:
+//! generation must be byte-deterministic and the replayed prefix of the
+//! corpus must hold every pipeline invariant. Numbers land in
+//! `BENCH_synth.json`; `-- --smoke` (CI) shrinks the corpus and reps.
+
+use papas::bench::{fmt_secs, measure, Table};
+use papas::json::{self, Json};
+use papas::synth::{generate, replay, ReplayConfig, SynthConfig, SynthStudy};
+
+const SEED: u64 = 7;
+
+fn corpus(n: u64) -> Vec<SynthStudy> {
+    (0..n)
+        .map(|index| {
+            generate(&SynthConfig { seed: SEED, index, ..SynthConfig::default() })
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("# --smoke: reduced corpus and timing reps for CI");
+    }
+    let n_gen: u64 = if smoke { 100 } else { 400 };
+    let n_replay: usize = if smoke { 10 } else { 30 };
+
+    // ---- correctness gates -------------------------------------------
+    let a = corpus(n_gen);
+    let ya: Vec<String> = a.iter().map(SynthStudy::to_yaml).collect();
+    let yb: Vec<String> = corpus(n_gen).iter().map(SynthStudy::to_yaml).collect();
+    assert_eq!(ya, yb, "generation must be byte-deterministic");
+    let total_bytes: usize = ya.iter().map(|y| y.len()).sum();
+    let total_instances: u64 = a.iter().map(|s| s.n_instances).sum();
+
+    let root = std::env::temp_dir().join("papas_synth_bench");
+    let _ = std::fs::remove_dir_all(&root);
+    let rcfg = ReplayConfig { workers: 4, search: false };
+    for s in a.iter().take(n_replay) {
+        let out = replay(s, &rcfg, &root.join("gate").join(&s.name))
+            .unwrap_or_else(|e| panic!("gate: {e}"));
+        assert_eq!(out.rows, out.completed + out.failed, "{}", s.name);
+    }
+    println!(
+        "# corpus seed {SEED}: {n_gen} studies, {total_instances} instances, \
+         {total_bytes} WDL bytes; replay gate over {n_replay} studies held"
+    );
+
+    // ---- timing ------------------------------------------------------
+    let (warm, reps) = if smoke { (1, 3) } else { (1, 7) };
+    let gen_wall = measure(warm, reps, || corpus(n_gen));
+    let emit_wall = measure(warm, reps, || {
+        a.iter().map(|s| s.to_yaml().len()).sum::<usize>()
+    });
+    // fresh scratch per measured rep — a reused database would resume
+    // from its checkpoint and time a different (cheaper) code path
+    let mut rep_counter = 0u64;
+    let replay_wall = measure(1, if smoke { 1 } else { 3 }, || {
+        rep_counter += 1;
+        let sub = root.join(format!("rep{rep_counter}"));
+        for s in a.iter().take(n_replay) {
+            replay(s, &rcfg, &sub.join(&s.name)).unwrap();
+        }
+    });
+
+    let mut tab = Table::new(
+        "synth corpus throughput",
+        &["stage", "work", "wall p50"],
+    );
+    tab.row(&[
+        "generate".into(),
+        format!("{n_gen} studies"),
+        fmt_secs(gen_wall.p50),
+    ]);
+    tab.row(&[
+        "emit WDL".into(),
+        format!("{total_bytes} bytes"),
+        fmt_secs(emit_wall.p50),
+    ]);
+    tab.row(&[
+        "replay (hermetic)".into(),
+        format!("{n_replay} studies x 4 runs"),
+        fmt_secs(replay_wall.p50),
+    ]);
+    tab.print();
+
+    let record = Json::obj([
+        ("bench".to_string(), Json::from("synth_corpus")),
+        ("smoke".to_string(), Json::from(smoke)),
+        ("seed".to_string(), Json::from(SEED as i64)),
+        ("n_studies".to_string(), Json::from(n_gen as i64)),
+        ("n_replayed".to_string(), Json::from(n_replay as i64)),
+        ("total_instances".to_string(), Json::from(total_instances as i64)),
+        ("wdl_bytes".to_string(), Json::from(total_bytes as i64)),
+        ("gen_wall_s".to_string(), Json::from(gen_wall.p50)),
+        ("emit_wall_s".to_string(), Json::from(emit_wall.p50)),
+        ("replay_wall_s".to_string(), Json::from(replay_wall.p50)),
+        ("deterministic".to_string(), Json::from(true)),
+    ]);
+    std::fs::write("BENCH_synth.json", json::to_string_pretty(&record))
+        .expect("write BENCH_synth.json");
+    println!("wrote BENCH_synth.json");
+}

@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo hi
+  on_failure: explode
+== expect
+error: invalid workflow description: task 'hello': on_failure: unknown failure policy 'explode' (expected fail-fast, continue, or retry-budget N)

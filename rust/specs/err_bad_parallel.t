@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo hi
+  parallel: cloud
+== expect
+error: invalid workflow description: unknown parallel mode 'cloud' (expected local, ssh, or mpi)

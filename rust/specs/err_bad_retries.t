@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo hi
+  retries: many
+== expect
+error: invalid workflow description: task 'hello': 'retries' must be a positive integer

@@ -1,0 +1,6 @@
+== input yaml
+sweep:
+  command: run
+  sampling: sobol 4
+== expect
+error: parameter space error: bad sampling 'sobol 4'; sampling expects 'uniform N' or 'random N [seed S]'

@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo hi
+  timeout: soon
+== expect
+error: invalid workflow description: task 'hello': timeout must be a number of seconds

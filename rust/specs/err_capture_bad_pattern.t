@@ -1,0 +1,7 @@
+== input yaml
+trial:
+  command: run
+  capture:
+    m: stdout (?P<v>[0-9]+)
+== expect
+error: invalid workflow description: task 'trial': capture 'm': bad pattern '(?P<v>[0-9]+)': regex parse error: only (?:...) groups are supported

@@ -1,0 +1,7 @@
+== input yaml
+trial:
+  command: run
+  capture:
+    wall_time: stdout t=([0-9.]+)
+== expect
+error: invalid workflow description: task 'trial': capture metric 'wall_time' shadows a built-in result column (wall_time, attempts, exit_code, exit_class) — built-ins are always captured and need no declaration

@@ -1,0 +1,7 @@
+== input yaml
+trial:
+  command: run
+  capture:
+    m: stdout
+== expect
+error: invalid workflow description: task 'trial': capture 'm': `stdout` needs a pattern (capture: m: stdout PATTERN)

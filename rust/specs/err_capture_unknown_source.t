@@ -1,0 +1,7 @@
+== input yaml
+trial:
+  command: run
+  capture:
+    m: grep foo
+== expect
+error: invalid workflow description: task 'trial': capture 'm': unknown source 'grep' (expected `stdout PATTERN` or `file NAME_RE [PATTERN]`)

@@ -1,0 +1,5 @@
+== input yaml
+hello:
+  command: [echo, hi]
+== expect
+error: invalid workflow description: task 'hello': command must be a string

@@ -1,0 +1,12 @@
+== input yaml
+a:
+  command: step-a
+  after: c
+b:
+  command: step-b
+  after: a
+c:
+  command: step-c
+  after: b
+== expect
+error: invalid workflow description: dependency cycle among tasks ["a", "b", "c"]

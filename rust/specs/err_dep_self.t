@@ -1,0 +1,6 @@
+== input yaml
+a:
+  command: echo hi
+  after: a
+== expect
+error: invalid workflow description: task 'a' depends on itself

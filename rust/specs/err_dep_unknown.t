@@ -1,0 +1,6 @@
+== input yaml
+b:
+  command: echo hi
+  after: ghost
+== expect
+error: invalid workflow description: task 'b' depends on unknown task 'ghost'

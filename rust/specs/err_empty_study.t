@@ -1,0 +1,4 @@
+== input yaml
+# a comment-only document compiles to an empty mapping
+== expect
+error: invalid workflow description: study has no task sections

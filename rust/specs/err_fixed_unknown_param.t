@@ -1,0 +1,7 @@
+== input yaml
+grid:
+  command: run ${x}
+  x: [1, 2]
+  fixed: [x, y]
+== expect
+error: invalid workflow description: task 'grid': fixed clause references unknown parameter 'y'

@@ -1,0 +1,4 @@
+== input ini
+[a.b.c]
+== expect
+error: parse error at line 1, col 1: invalid section path 'a.b.c' (at most one dot)

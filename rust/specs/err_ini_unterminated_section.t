@@ -1,0 +1,4 @@
+== input ini
+[hello
+== expect
+error: parse error at line 1, col 1: unterminated section header

@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo hi
+  "bad key": 1
+== expect
+error: invalid workflow description: task 'hello': invalid keyword 'bad key'

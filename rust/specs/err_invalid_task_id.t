@@ -1,0 +1,5 @@
+== input yaml
+"my task":
+  command: echo hi
+== expect
+error: invalid workflow description: invalid task id 'my task'

@@ -1,0 +1,4 @@
+== input json
+hello
+== expect
+error: parse error at line 1, col 1: unexpected character 'h'

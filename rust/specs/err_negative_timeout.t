@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo hi
+  timeout: -3
+== expect
+error: invalid workflow description: task 'hello': timeout must be positive, got '-3'

@@ -1,0 +1,6 @@
+== input yaml
+big:
+  command: run
+  nnodes: 0
+== expect
+error: invalid workflow description: task 'big': nnodes/ppnode must be positive

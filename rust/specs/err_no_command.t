@@ -1,0 +1,5 @@
+== input yaml
+hello:
+  threads: [1, 2]
+== expect
+error: invalid workflow description: task 'hello' has no command (a task is identified by the command keyword)

@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo ${threads}
+  threads: []
+== expect
+error: invalid workflow description: task 'hello': parameter 'threads' has no values

@@ -1,0 +1,8 @@
+== input yaml
+hello:
+  command: echo hi
+  args:
+    size:
+      deep: 1
+== expect
+error: invalid workflow description: task 'hello': parameter 'size' nests deeper than two levels (the WDL allows at most two)

@@ -1,0 +1,6 @@
+== input yaml
+sweep:
+  command: echo ${n}
+  n: 2:*1:8
+== expect
+error: invalid workflow description: multiplicative range factor must be positive and != 1, got 1

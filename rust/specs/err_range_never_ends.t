@@ -1,0 +1,6 @@
+== input yaml
+sweep:
+  command: echo ${n}
+  n: 5:1:1
+== expect
+error: invalid workflow description: range 5:1:1 never reaches its end

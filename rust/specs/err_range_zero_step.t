@@ -1,0 +1,6 @@
+== input yaml
+sweep:
+  command: echo ${n}
+  n: 1:0:5
+== expect
+error: invalid workflow description: range step is zero: 1:0:5

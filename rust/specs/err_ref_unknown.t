@@ -1,0 +1,5 @@
+== input yaml
+solo:
+  command: echo ${nope}
+== expect
+error: invalid workflow description: task 'solo': command references '${nope}' which no parameter provides

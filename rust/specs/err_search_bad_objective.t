@@ -1,0 +1,7 @@
+== input yaml
+tune:
+  command: run
+  search:
+    objective: sideways wall_time
+== expect
+error: invalid workflow description: task 'tune': parameter space error: bad objective direction 'sideways'; objective expects 'minimize METRIC' or 'maximize METRIC'

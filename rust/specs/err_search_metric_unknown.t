@@ -1,0 +1,7 @@
+== input yaml
+tune:
+  command: run
+  search:
+    objective: minimize latency
+== expect
+error: invalid workflow description: task 'tune': search objective metric 'latency' is neither a built-in result column nor declared by any capture: block

@@ -1,0 +1,7 @@
+== input yaml
+tune:
+  command: run
+  search:
+    rounds: 0
+== expect
+error: invalid workflow description: task 'tune': search rounds must be positive

@@ -1,0 +1,7 @@
+== input yaml
+tune:
+  command: run
+  search:
+    budgget: 5
+== expect
+error: invalid workflow description: task 'tune': unknown search key 'budgget' (expected objective, strategy, rounds, budget, or seed)

@@ -1,0 +1,9 @@
+== input yaml
+sub:
+  command: process data.txt
+  infiles:
+    data: data.txt
+  substitute:
+    (?P<x>.+): [fast, slow]
+== expect
+error: invalid workflow description: task 'sub': substitute pattern '(?P<x>.+)' is not a valid regular expression: regex parse error: only (?:...) groups are supported

@@ -1,0 +1,4 @@
+== input yaml
+hello: just a string
+== expect
+error: invalid workflow description: task 'hello' must be a mapping of keywords

@@ -1,0 +1,5 @@
+== input yaml
+- one
+- two
+== expect
+error: invalid workflow description: top level must be a mapping of task sections

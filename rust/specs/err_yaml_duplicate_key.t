@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo one
+  command: echo two
+== expect
+error: parse error at line 3, col 3: duplicate key 'command'

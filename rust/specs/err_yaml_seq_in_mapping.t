@@ -1,0 +1,6 @@
+== input yaml
+hello:
+  command: echo hi
+  - stray
+== expect
+error: parse error at line 3, col 3: sequence item in mapping context

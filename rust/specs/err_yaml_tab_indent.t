@@ -1,0 +1,5 @@
+== input yaml
+hello:
+ 	command: echo hi
+== expect
+error: parse error at line 2, col 2: tab after spaces in indentation

@@ -1,0 +1,15 @@
+== input yaml
+a:
+  command: stage-in
+b:
+  command: compute ${n}
+  n: 1:3
+  after: a
+c:
+  command: collate
+  after: a
+d:
+  command: reduce-all
+  after: [b, c]
+== expect
+ok: tasks=4 params=1 combinations=3 instances=3

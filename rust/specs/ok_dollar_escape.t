@@ -1,0 +1,6 @@
+== input yaml
+shell:
+  command: echo $$HOME ${n}
+  n: [1, 2]
+== expect
+ok: tasks=1 params=1 combinations=2 instances=2

@@ -1,0 +1,12 @@
+== input yaml
+matmul:
+  name: Matrix multiply scaling study
+  environ:
+    OMP_NUM_THREADS:
+      - 1:4
+  args:
+    size:
+      - 16:*2:128
+  command: matmul ${args:size} out_${args:size}_${environ:OMP_NUM_THREADS}.txt
+== expect
+ok: tasks=1 params=2 combinations=16 instances=16

@@ -1,0 +1,9 @@
+== input yaml
+bench:
+  command: run ${alpha} ${beta} ${gamma}
+  alpha: [1, 2, 3]
+  beta: [x, y, z]
+  gamma: [10, 20]
+  fixed: [alpha, beta]
+== expect
+ok: tasks=1 params=3 combinations=6 instances=6

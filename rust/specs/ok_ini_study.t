@@ -1,0 +1,8 @@
+== input ini
+[hello]
+command = echo ${args:size}
+
+[hello.args]
+size = 1:3
+== expect
+ok: tasks=1 params=1 combinations=3 instances=3

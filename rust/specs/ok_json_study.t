@@ -1,0 +1,4 @@
+== input json
+{"hello": {"command": "echo ${n}", "n": [1, 2, 3]}}
+== expect
+ok: tasks=1 params=1 combinations=3 instances=3

@@ -1,0 +1,8 @@
+== input yaml
+sweep:
+  command: sim ${p} ${q}
+  p: 1:10
+  q: 1:10
+  sampling: uniform 5
+== expect
+ok: tasks=1 params=2 combinations=100 instances=5

@@ -1,0 +1,7 @@
+== input yaml
+greet:
+  command: echo ${msg}
+  msg: [hello ${who}, bye ${who}]
+  who: [world, moon]
+== expect
+ok: tasks=1 params=2 combinations=4 instances=4

@@ -1,0 +1,7 @@
+== input yaml
+queued:
+  command: run-it
+  batch: slurm
+== expect
+ok: tasks=1 params=0 combinations=1 instances=1
+warning: task 'queued': batch system set but parallel=local; the batch directive only applies to cluster submission

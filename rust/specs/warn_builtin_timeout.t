@@ -1,0 +1,8 @@
+== input yaml
+job:
+  command: sleep-ms ${ms}
+  timeout: 1
+  ms: [1]
+== expect
+ok: tasks=1 params=1 combinations=1 instances=1
+warning: task 'job': timeout applies to subprocess commands only; builtin 'sleep-ms' runs in-process and cannot be killed

@@ -1,0 +1,10 @@
+== input yaml
+a:
+  command: one
+  on_failure: continue
+b:
+  command: two
+  on_failure: fail-fast
+== expect
+ok: tasks=2 params=0 combinations=1 instances=1
+warning: task 'b' declares on_failure 'fail-fast' but task 'a' already set the study policy to 'continue'; the first declaration wins

@@ -1,0 +1,8 @@
+== input yaml
+a:
+  command: one
+  on_failure: fail-fast
+  retries: 2
+== expect
+ok: tasks=1 params=0 combinations=1 instances=1
+warning: task 'a': retries have no effect under on_failure fail-fast

@@ -1,0 +1,7 @@
+== input yaml
+remote:
+  command: run-it
+  parallel: ssh
+== expect
+ok: tasks=1 params=0 combinations=1 instances=1
+warning: task 'remote': parallel=ssh without hosts; defaulting to localhost workers

@@ -1,0 +1,8 @@
+== input yaml
+patch:
+  command: process input.txt
+  substitute:
+    NN: [1, 2]
+== expect
+ok: tasks=1 params=1 combinations=2 instances=2
+warning: task 'patch': substitute without infiles has no effect

@@ -47,6 +47,8 @@ pub enum ParsedCommand {
     Report(Args),
     /// `papas search ...` (adaptive round-based study driver)
     Search(Args),
+    /// `papas synth ...` (seeded synthetic-study generator / replayer)
+    Synth(Args),
     /// `papas help` / no args.
     Help,
 }
@@ -55,7 +57,7 @@ pub enum ParsedCommand {
 /// `--` takes a value.
 const SWITCHES: &[&str] = &[
     "fresh", "dot", "quiet", "concat", "gantt", "resume", "complete-only",
-    "desc", "infer-timeouts", "compact",
+    "desc", "infer-timeouts", "compact", "replay", "search",
 ];
 
 impl Args {
@@ -81,6 +83,7 @@ impl Args {
             "query" => Ok(ParsedCommand::Query(rest)),
             "report" => Ok(ParsedCommand::Report(rest)),
             "search" => Ok(ParsedCommand::Search(rest)),
+            "synth" => Ok(ParsedCommand::Synth(rest)),
             "help" | "--help" | "-h" => Ok(ParsedCommand::Help),
             other => Err(Error::Exec(format!(
                 "unknown subcommand '{other}' (try 'papas help')"
@@ -170,6 +173,26 @@ mod tests {
             Args::parse(&sv(&["search", "s.yaml"])).unwrap(),
             ParsedCommand::Search(_)
         ));
+        assert!(matches!(
+            Args::parse(&sv(&["synth"])).unwrap(),
+            ParsedCommand::Synth(_)
+        ));
+    }
+
+    #[test]
+    fn synth_flags_parse() {
+        let ParsedCommand::Synth(a) = Args::parse(&sv(&[
+            "synth", "--seed", "7", "--count", "50", "--shape", "diamond",
+            "--replay", "--workers", "2",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.opt_num::<u64>("seed", 42).unwrap(), 7);
+        assert_eq!(a.opt_num::<u64>("count", 1).unwrap(), 50);
+        assert_eq!(a.opt_or("shape", ""), "diamond");
+        assert!(a.has_flag("replay"));
+        assert!(!a.has_flag("search"));
     }
 
     #[test]

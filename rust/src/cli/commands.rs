@@ -65,6 +65,15 @@ USAGE:
                                             adaptive round-based search:
                                             propose -> run -> score loop
                                             over the captured metrics
+  papas synth [--seed S] [--count N] [--index I] [--tasks N]
+              [--shape chain|fanout|fanin|diamond|layered] [--max-combos N]
+              [--out DIR] [--replay] [--workers N] [--search]
+                                            seeded synthetic-study generator:
+                                            emits WDL YAML (byte-deterministic
+                                            per seed); --replay drives each
+                                            study hermetically through
+                                            run/harvest/resume/search and
+                                            asserts pipeline invariants
   papas help";
 
 fn load_study(a: &Args) -> Result<Study> {
@@ -809,6 +818,78 @@ pub fn cmd_dax(a: &Args) -> Result<()> {
     // (interpolation failures etc.) propagate undisguised.
     let inst = study.instance_at(idx)?;
     print!("{}", crate::viz::render_dax(&inst, &study.name));
+    Ok(())
+}
+
+/// `papas synth` — the seeded synthetic-study generator. Without
+/// `--replay` it emits WDL YAML (to stdout, or one file per study under
+/// `--out DIR`); with `--replay` each generated study is driven
+/// hermetically through run → harvest → checkpoint-resume → search by
+/// [`crate::synth::replay`], which errors on any pipeline-invariant
+/// violation — the CI front-door smoke.
+pub fn cmd_synth(a: &Args) -> Result<()> {
+    use crate::synth::{self, replay::ReplayConfig, Shape, SynthConfig};
+    let seed: u64 = a.opt_num("seed", 42)?;
+    let count: u64 = a.opt_num("count", 1)?.max(1);
+    let start: u64 = a.opt_num("index", 0)?;
+    let mut base = SynthConfig { seed, ..SynthConfig::default() };
+    if a.options.contains_key("tasks") {
+        base.n_tasks = Some(a.opt_num("tasks", 2usize)?.max(1));
+    }
+    if let Some(sh) = a.options.get("shape") {
+        base.shape = Some(Shape::parse(sh).ok_or_else(|| {
+            Error::Exec(format!(
+                "--shape: unknown shape '{sh}' \
+                 (chain|fanout|fanin|diamond|layered)"
+            ))
+        })?);
+    }
+    base.max_instances = a.opt_num("max-combos", base.max_instances)?.max(1);
+
+    let out_dir = a.options.get("out").map(PathBuf::from);
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    let replaying = a.has_flag("replay");
+    let rcfg = ReplayConfig {
+        workers: a.opt_num("workers", 4usize)?.max(1),
+        search: a.has_flag("search"),
+    };
+    let scratch = out_dir
+        .clone()
+        .unwrap_or_else(|| std::env::temp_dir().join(format!("papas-synth-{seed}")));
+
+    for i in start..start.saturating_add(count) {
+        let s = synth::generate(&SynthConfig { index: i, ..base.clone() });
+        if let Some(d) = &out_dir {
+            let path = d.join(format!("{}.yaml", s.name));
+            std::fs::write(&path, s.to_yaml())?;
+            if !replaying {
+                println!("wrote {}", path.display());
+            }
+        } else if !replaying {
+            print!("{}", s.to_yaml());
+        }
+        if replaying {
+            let out = synth::replay(&s, &rcfg, &scratch.join(&s.name))?;
+            println!(
+                "{}: shape={} tasks={} instances={} | {} done {} failed \
+                 {} skipped | {} rows{}",
+                out.name,
+                out.shape,
+                out.tasks,
+                out.instances,
+                out.completed,
+                out.failed,
+                out.skipped,
+                out.rows,
+                if out.searched { " | searched" } else { "" }
+            );
+        }
+    }
+    if replaying {
+        println!("replayed {count} studies: all pipeline invariants held");
+    }
     Ok(())
 }
 

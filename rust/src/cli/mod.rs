@@ -15,6 +15,7 @@
 //! papas query STUDY.yaml [--where ...] [--by ...]   # query results
 //! papas report STUDY.yaml --metric M --by AXIS      # perf summary
 //! papas search STUDY.yaml [--rounds N] [--budget K] # adaptive search
+//! papas synth [--seed S] [--count N] [--replay]     # synthetic studies
 //! ```
 
 pub mod args;
@@ -52,6 +53,7 @@ fn run(argv: &[String]) -> Result<()> {
         ParsedCommand::Query(a) => commands::cmd_query(&a),
         ParsedCommand::Report(a) => commands::cmd_report(&a),
         ParsedCommand::Search(a) => commands::cmd_search(&a),
+        ParsedCommand::Synth(a) => commands::cmd_synth(&a),
         ParsedCommand::Help => {
             println!("{}", commands::USAGE);
             Ok(())

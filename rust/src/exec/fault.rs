@@ -130,8 +130,15 @@ impl fmt::Display for FailurePolicy {
     }
 }
 
-/// Ceiling of the exponential backoff schedule.
-const BACKOFF_CAP_MS: u64 = 60_000;
+/// Ceiling of the exponential backoff schedule: no retry ever waits
+/// longer than 60 s, regardless of `base_ms` or attempt count.
+///
+/// `attempt` is user-controlled (`retries` / `retry-budget N` have no
+/// upper bound), so [`backoff_delay`] must stay overflow-free for any
+/// `u32` attempt: the doubling shift is clamped to 16 **before**
+/// `1u64 << shift` (a shift ≥ 64 would be UB-adjacent wrap in release),
+/// the multiply saturates, and the product is capped here.
+pub const BACKOFF_CAP_MS: u64 = 60_000;
 
 /// Delay before retry attempt `attempt + 1`, given that `attempt`
 /// executions have already happened: `base × 2^(attempt-1)`, capped at
@@ -202,5 +209,24 @@ mod tests {
         assert_eq!(backoff_delay(100, 3), Duration::from_millis(400));
         assert_eq!(backoff_delay(100, 32), Duration::from_millis(BACKOFF_CAP_MS));
         assert_eq!(backoff_delay(u64::MAX, 9), Duration::from_millis(BACKOFF_CAP_MS));
+    }
+
+    /// `attempt` comes straight from user-set retry budgets: the
+    /// schedule must saturate at [`BACKOFF_CAP_MS`] — never wrap, shift
+    /// out of range, or panic — all the way to `u32::MAX` attempts.
+    #[test]
+    fn backoff_saturates_at_extreme_attempt_counts() {
+        let cap = Duration::from_millis(BACKOFF_CAP_MS);
+        for attempt in [32, 64, 1_000_000, u32::MAX - 1, u32::MAX] {
+            // even base 1 hits the cap: 1 × 2^16 = 65 536 ms > 60 000 ms
+            assert_eq!(backoff_delay(1, attempt), cap);
+            assert_eq!(backoff_delay(100, attempt), cap, "attempt {attempt}");
+            assert_eq!(backoff_delay(u64::MAX, attempt), cap);
+            assert_eq!(backoff_delay(0, attempt), Duration::ZERO);
+        }
+        // attempt 0 (first execution, nothing to back off from) and 1
+        // both yield the base delay.
+        assert_eq!(backoff_delay(250, 0), Duration::from_millis(250));
+        assert_eq!(backoff_delay(250, 1), Duration::from_millis(250));
     }
 }

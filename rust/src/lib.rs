@@ -38,6 +38,7 @@ pub mod results;
 pub mod runtime;
 pub mod search;
 pub mod study;
+pub mod synth;
 pub mod tasks;
 pub mod util;
 pub mod viz;

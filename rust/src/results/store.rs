@@ -247,10 +247,17 @@ impl ResultTable {
     /// are not JSON at all (a torn write from a killed run) are
     /// skipped, not fatal — the log must stay readable after a crash,
     /// and `papas harvest` can rebuild the dropped row from
-    /// `attempts.jsonl`. A line that parses but does not fit `schema`
-    /// (wrong digit arity: the study's axes changed under the db) is a
-    /// real error and surfaces `Row::from_json`'s diagnostic rather
-    /// than silently presenting partial data as complete.
+    /// `attempts.jsonl`. A crash can also tear a line into a
+    /// *balanced* JSON prefix (cut exactly at a closing brace); such a
+    /// fragment lacks required row keys entirely and is likewise
+    /// skipped — at any position, because the next `ResultLog::open`
+    /// newline-heals the tail and later appends bury the fragment
+    /// mid-file. This is the same tolerance `read_attempts` and the
+    /// search ledger give their logs. A line with all row keys present
+    /// that still does not fit `schema` (wrong digit arity: the
+    /// study's axes changed under the db) remains a real error and
+    /// surfaces `Row::from_json`'s diagnostic rather than silently
+    /// presenting partial data as complete.
     pub fn read_jsonl(db_root: &Path, schema: &Schema) -> Result<Vec<Row>> {
         let path = db_root.join(RESULTS_FILE);
         if !path.exists() {
@@ -260,13 +267,20 @@ impl ResultTable {
         let mut rows = Vec::new();
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
             let Ok(j) = json::parse(line) else { continue };
+            // `run` is not required: legacy pre-provenance rows omit it.
+            if ["instance", "task", "digits", "metrics"]
+                .iter()
+                .any(|k| j.get(k).is_none())
+            {
+                continue;
+            }
             rows.push(Row::from_json(&j, schema)?);
         }
         Ok(rows)
     }
 
     /// Load the table: the binary `results.bin` snapshot when present,
-    /// schema-compatible, **and at least as fresh as the row log**;
+    /// schema-compatible, **and strictly newer than the row log**;
     /// else the legacy `results_columns.json` snapshot under the same
     /// conditions (pre-v2 databases); else rebuilt from
     /// `results.jsonl`. (A run killed after appending live rows but
@@ -472,14 +486,18 @@ pub fn log_line_count(db_root: &Path) -> Option<usize> {
     Some(text.lines().filter(|l| !l.trim().is_empty()).count())
 }
 
-/// True when snapshot file `snap` exists and is at least as fresh as
+/// True when snapshot file `snap` exists and is **strictly newer** than
 /// the row log `log` (mtime compare; a missing log makes any snapshot
-/// fresh). The single definition of staleness, shared by
+/// fresh). Equal mtimes count as stale: on 1-second-granularity
+/// filesystems a live append can land in the same second as the
+/// snapshot write, and serving the snapshot then would silently mask
+/// those rows — falling through to the jsonl fold is always correct,
+/// merely slower. The single definition of staleness, shared by
 /// [`ResultTable::load`] and [`stored_row_count`].
 fn file_is_fresh(snap: &Path, log: &Path) -> bool {
     let mtime = |p: &Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
     match (mtime(snap), mtime(log)) {
-        (Some(s), Some(l)) => s >= l,
+        (Some(s), Some(l)) => s > l,
         (Some(_), None) => true,
         _ => false,
     }
@@ -814,5 +832,82 @@ mod tests {
         let dir = tmp("missing");
         assert!(ResultTable::load(&dir, &schema()).is_err());
         assert_eq!(snapshot_from_log(&dir, &schema()).unwrap(), 0);
+    }
+
+    #[test]
+    fn equal_mtimes_treat_the_snapshot_as_stale() {
+        // On 1-second-granularity filesystems a live append can land in
+        // the same second as the snapshot write; the snapshot must NOT
+        // mask the log then (regression: `file_is_fresh` used `>=`).
+        let dir = tmp("equal-mtime");
+        let s = schema();
+        // A same-schema snapshot holding different (older) data…
+        let mut snap = ResultTable::new(s.clone());
+        snap.push(row(0, "t", [0, 0], 99.0));
+        crate::results::binfmt::save_bin(&snap, &dir).unwrap();
+        snap.save_columns(&dir).unwrap();
+        // …and a log appended "in the same second": two live rows.
+        let log = ResultLog::open(&dir).unwrap();
+        log.append(&row(0, "t", [0, 0], 4.0), &s).unwrap();
+        log.append(&row(1, "t", [1, 0], 5.0), &s).unwrap();
+        drop(log);
+        let stamp = std::time::SystemTime::now();
+        for name in [
+            RESULTS_FILE,
+            COLUMNS_FILE,
+            crate::results::binfmt::RESULTS_BIN_FILE,
+        ] {
+            std::fs::OpenOptions::new()
+                .write(true)
+                .open(dir.join(name))
+                .unwrap()
+                .set_modified(stamp)
+                .unwrap();
+        }
+        let t = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(t.len(), 2, "equal-mtime snapshot masked the row log");
+        assert_eq!(t.value(4, 0), &MetricValue::Num(4.0));
+        assert_eq!(stored_row_count(&dir), Some(2));
+    }
+
+    #[test]
+    fn crash_mid_append_parseable_fragment_is_tolerated() {
+        // A crash can cut an append at a closing brace, leaving a line
+        // that parses as JSON but is not a complete row. It must be
+        // skipped like raw torn bytes — including after later appends
+        // bury it mid-file (regression: `read_jsonl` made it fatal).
+        let dir = tmp("torn-balanced");
+        let s = schema();
+        let log = ResultLog::open(&dir).unwrap();
+        log.append(&row(0, "t", [0, 0], 1.0), &s).unwrap();
+        drop(log);
+        let path = dir.join(RESULTS_FILE);
+        let full = std::fs::read_to_string(&path).unwrap();
+        // The balanced prefix of a row cut before its metrics object.
+        std::fs::write(&path, format!("{full}{{\"instance\":3}}")).unwrap();
+        let t = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(t.len(), 1);
+        // The crashed run resumes: open newline-heals, appends follow,
+        // and the fragment — now interior — must still be tolerated.
+        let log = ResultLog::open(&dir).unwrap();
+        log.append(&row(2, "t", [0, 1], 3.0), &s).unwrap();
+        drop(log);
+        let t = ResultTable::load(&dir, &s).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.instance(1), 2);
+        // Schema drift stays fatal: all row keys present, wrong arity.
+        let drifted = json::to_string(
+            &Row {
+                run: 0,
+                instance: 9,
+                task_id: "t".into(),
+                digits: vec![0],
+                values: vec![MetricValue::Missing; 5],
+            }
+            .to_json(&s),
+        );
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("{full}{drifted}\n")).unwrap();
+        assert!(ResultTable::load(&dir, &s).is_err());
     }
 }

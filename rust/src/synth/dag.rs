@@ -1,0 +1,192 @@
+//! DAG shape generation for synthetic workflow studies.
+//!
+//! Every generator returns, for task index `i`, the list of task indices
+//! it depends on — and every dependency points at a **lower** index, so
+//! the emitted `after:` edges are acyclic by construction (the WDL
+//! validator's cycle check is exercised separately by the golden spec
+//! corpus, not by the generator).
+//!
+//! The five shapes mirror the WfCommons-style instance taxonomy: chains
+//! (pure pipelines), fan-out (one producer, many consumers), fan-in
+//! (many producers, one reducer), diamonds (fan-out then fan-in), and
+//! random layered DAGs with a configurable layer width and edge density.
+
+use crate::util::rng::Rng;
+
+/// The topology of a generated study's task graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// `t0 -> t1 -> ... -> tN`: a pure pipeline.
+    Chain,
+    /// `t0 -> {t1 .. tN}`: one producer, many consumers.
+    FanOut,
+    /// `{t0 .. tN-1} -> tN`: many producers, one reducer.
+    FanIn,
+    /// `t0 -> {middle} -> tN`: fan-out then fan-in.
+    Diamond,
+    /// Random layered DAG: tasks are grouped into layers and each task
+    /// depends on a random subset of the previous layer.
+    Layered,
+}
+
+/// Every shape, in the order [`Shape::pick`] draws from.
+pub const SHAPES: [Shape; 5] =
+    [Shape::Chain, Shape::FanOut, Shape::FanIn, Shape::Diamond, Shape::Layered];
+
+impl Shape {
+    /// Stable lowercase label (CLI flag values, replay summaries).
+    pub fn label(self) -> &'static str {
+        match self {
+            Shape::Chain => "chain",
+            Shape::FanOut => "fanout",
+            Shape::FanIn => "fanin",
+            Shape::Diamond => "diamond",
+            Shape::Layered => "layered",
+        }
+    }
+
+    /// Parse a CLI spelling back into a shape.
+    pub fn parse(s: &str) -> Option<Shape> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "chain" => Some(Shape::Chain),
+            "fanout" | "fan-out" => Some(Shape::FanOut),
+            "fanin" | "fan-in" => Some(Shape::FanIn),
+            "diamond" => Some(Shape::Diamond),
+            "layered" | "random" => Some(Shape::Layered),
+            _ => None,
+        }
+    }
+
+    /// Draw a shape uniformly.
+    pub fn pick(rng: &mut Rng) -> Shape {
+        SHAPES[rng.below(SHAPES.len() as u64) as usize]
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Dependency lists for `n` tasks under `shape`: `deps[i]` holds the
+/// task indices task `i` waits on, each strictly less than `i`.
+/// `density` (0..=1) is the per-edge keep probability for
+/// [`Shape::Layered`]; the structured shapes ignore it.
+pub fn edges(shape: Shape, n: usize, density: f64, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut deps: Vec<Vec<usize>> = vec![Vec::new(); n];
+    if n <= 1 {
+        return deps;
+    }
+    match shape {
+        Shape::Chain => {
+            for (i, d) in deps.iter_mut().enumerate().skip(1) {
+                d.push(i - 1);
+            }
+        }
+        Shape::FanOut => {
+            for d in deps.iter_mut().skip(1) {
+                d.push(0);
+            }
+        }
+        Shape::FanIn => {
+            deps[n - 1] = (0..n - 1).collect();
+        }
+        Shape::Diamond => {
+            // needs a middle rank; 2-task diamonds degrade to a chain
+            if n == 2 {
+                deps[1].push(0);
+            } else {
+                for d in deps.iter_mut().take(n - 1).skip(1) {
+                    d.push(0);
+                }
+                deps[n - 1] = (1..n - 1).collect();
+            }
+        }
+        Shape::Layered => {
+            // cut the index range into layers of random width 1..=3,
+            // then wire each task to a density-thinned subset of the
+            // previous layer (always at least one edge, so the graph
+            // stays connected past layer 0)
+            let mut layers: Vec<Vec<usize>> = Vec::new();
+            let mut i = 0;
+            while i < n {
+                let w = 1 + rng.below(3) as usize;
+                layers.push((i..(i + w).min(n)).collect());
+                i += w;
+            }
+            for l in 1..layers.len() {
+                for &t in &layers[l] {
+                    for &p in &layers[l - 1] {
+                        if rng.uniform() < density {
+                            deps[t].push(p);
+                        }
+                    }
+                    if deps[t].is_empty() {
+                        let pick =
+                            layers[l - 1][rng.below(layers[l - 1].len() as u64) as usize];
+                        deps[t].push(pick);
+                    }
+                }
+            }
+        }
+    }
+    deps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_acyclic(deps: &[Vec<usize>]) {
+        for (i, d) in deps.iter().enumerate() {
+            for &p in d {
+                assert!(p < i, "edge {p} -> {i} is not forward");
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_round_trip_labels() {
+        for s in SHAPES {
+            assert_eq!(Shape::parse(s.label()), Some(s));
+        }
+        assert_eq!(Shape::parse("spiral"), None);
+    }
+
+    #[test]
+    fn structured_shapes_have_the_expected_edges() {
+        let mut rng = Rng::new(1);
+        let chain = edges(Shape::Chain, 4, 0.5, &mut rng);
+        assert_eq!(chain, vec![vec![], vec![0], vec![1], vec![2]]);
+        let fanout = edges(Shape::FanOut, 4, 0.5, &mut rng);
+        assert_eq!(fanout, vec![vec![], vec![0], vec![0], vec![0]]);
+        let fanin = edges(Shape::FanIn, 4, 0.5, &mut rng);
+        assert_eq!(fanin, vec![vec![], vec![], vec![], vec![0, 1, 2]]);
+        let diamond = edges(Shape::Diamond, 4, 0.5, &mut rng);
+        assert_eq!(diamond, vec![vec![], vec![0], vec![0], vec![1, 2]]);
+        // degenerate sizes
+        assert_eq!(edges(Shape::Diamond, 2, 0.5, &mut rng), vec![vec![], vec![0]]);
+        assert_eq!(edges(Shape::Chain, 1, 0.5, &mut rng), vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn layered_is_acyclic_and_connected_past_the_roots() {
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let n = 2 + rng.below(7) as usize;
+            let deps = edges(Shape::Layered, n, 0.4, &mut rng);
+            assert_eq!(deps.len(), n);
+            assert_acyclic(&deps);
+            // every non-root layer task has at least one parent
+            assert!(deps.iter().skip(1).any(|d| !d.is_empty()) || n == 1);
+        }
+    }
+
+    #[test]
+    fn edges_are_deterministic_per_seed() {
+        let a = edges(Shape::Layered, 8, 0.5, &mut Rng::new(9));
+        let b = edges(Shape::Layered, 8, 0.5, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

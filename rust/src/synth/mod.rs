@@ -1,0 +1,361 @@
+//! Synthetic workflow-study generator (`papas synth`).
+//!
+//! WfCommons (see PAPERS.md) showed that distribution-parameterized
+//! synthetic workflow instances are how a workflow system gets
+//! correctness and benchmark coverage beyond a handful of real
+//! applications. This module is that idea for PaPaS: a **seeded,
+//! byte-deterministic** generator of randomized parameter studies —
+//! DAG shapes ([`Shape`]), parameter axes with ranges / zip `fixed`
+//! clauses / value-in-value references / `$$` escapes, per-task
+//! `capture:` metric blocks, and scripted fault plans — emitted either
+//! as WDL YAML ([`SynthStudy::to_yaml`]) or replayed hermetically
+//! through the whole run → harvest → query → search pipeline
+//! ([`replay::replay`]) with zero subprocesses.
+//!
+//! Determinism contract: the same [`SynthConfig`] always produces the
+//! identical [`SynthStudy`] and therefore identical YAML bytes. All
+//! randomness flows from one [`Rng`] stream seeded by
+//! `(seed, index)`; nothing consults the clock, the filesystem, or
+//! hash-map iteration order.
+
+pub mod dag;
+pub mod emit;
+pub mod replay;
+pub mod space;
+
+pub use dag::{Shape, SHAPES};
+pub use replay::{replay, ReplayConfig, ReplayOutcome};
+pub use space::AxisPlan;
+
+use crate::exec::Outcome;
+use crate::util::rng::Rng;
+
+/// What to generate. `seed` + `index` fully determine the output; the
+/// remaining knobs bound the shape of the drawn study.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    /// Root seed (CLI `--seed`).
+    pub seed: u64,
+    /// Study index under the root seed (CLI generates `--count` studies
+    /// at indices `0..count`).
+    pub index: u64,
+    /// Fixed task count; `None` draws 2..=6.
+    pub n_tasks: Option<usize>,
+    /// Fixed DAG shape; `None` draws uniformly.
+    pub shape: Option<Shape>,
+    /// Upper bound on the study's instance count (combination budget).
+    pub max_instances: u64,
+    /// Per-task axis cap.
+    pub max_axes: usize,
+    /// Probability that a task carries a scripted fault plan.
+    pub fault_rate: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> SynthConfig {
+        SynthConfig {
+            seed: 42,
+            index: 0,
+            n_tasks: None,
+            shape: None,
+            max_instances: 48,
+            max_axes: 3,
+            fault_rate: 0.3,
+        }
+    }
+}
+
+/// One task of a generated study.
+#[derive(Debug, Clone)]
+pub struct TaskPlan {
+    /// Task id (`t0`, `t1`, ...).
+    pub id: String,
+    /// Ids of the tasks this one runs `after`.
+    pub deps: Vec<String>,
+    /// Local parameter axes.
+    pub axes: Vec<AxisPlan>,
+    /// Zip clauses over local axis names.
+    pub fixed: Vec<Vec<String>>,
+    /// Command template (`${axis}` refs, possibly `$$` escapes and
+    /// cross-task `${task:axis}` refs).
+    pub command: String,
+    /// Declared metrics: `(name, capture spec)` pairs.
+    pub captures: Vec<(String, String)>,
+    /// WDL `retries:` (set exactly high enough for flaky faults to
+    /// terminally succeed).
+    pub retries: u32,
+    /// Scripted faults for the replay harness: `(instance, outcome)`.
+    /// Instances not listed succeed.
+    pub faults: Vec<(u64, Outcome)>,
+}
+
+/// A generated study: the emission/replay plan plus its provenance.
+#[derive(Debug, Clone)]
+pub struct SynthStudy {
+    /// Study name (`synth-{seed}-{index}`).
+    pub name: String,
+    /// Root seed this study was drawn from.
+    pub seed: u64,
+    /// Index under the root seed.
+    pub index: u64,
+    /// The drawn DAG shape.
+    pub shape: Shape,
+    /// Tasks in topological (emission) order.
+    pub tasks: Vec<TaskPlan>,
+    /// Exact instance count of the emitted study (zip clauses
+    /// accounted).
+    pub n_instances: u64,
+}
+
+impl SynthStudy {
+    /// Render the study as WDL YAML (see [`emit`]).
+    pub fn to_yaml(&self) -> String {
+        emit::to_yaml(self)
+    }
+
+    /// Total terminal task slots (`instances x tasks`).
+    pub fn n_task_slots(&self) -> u64 {
+        self.n_instances * self.tasks.len() as u64
+    }
+}
+
+/// Command-verb vocabulary (never a builtin: replayed commands must
+/// stay meaningless to the real runner).
+const TOOLS: [&str; 4] = ["work", "solve", "simulate", "transform"];
+
+/// Capture metric names.
+const METRICS: [&str; 4] = ["score", "gflops", "residual", "throughput"];
+
+/// Generate the study determined by `cfg`.
+pub fn generate(cfg: &SynthConfig) -> SynthStudy {
+    let mut rng = Rng::new(cfg.seed).fold_in(cfg.index);
+    let shape = cfg.shape.unwrap_or_else(|| Shape::pick(&mut rng));
+    let n_tasks = cfg
+        .n_tasks
+        .unwrap_or_else(|| 2 + rng.below(5) as usize)
+        .max(1);
+    let deps = dag::edges(shape, n_tasks, 0.5, &mut rng);
+
+    // Axes first (they consume the shared combination budget), commands
+    // and faults after (they need the final instance count).
+    let mut budget = cfg.max_instances.max(1);
+    let mut tasks: Vec<TaskPlan> = Vec::new();
+    for (i, dep_ids) in deps.iter().enumerate() {
+        let (axes, fixed) = space::gen_axes(&mut rng, cfg.max_axes, &mut budget);
+        tasks.push(TaskPlan {
+            id: format!("t{i}"),
+            deps: dep_ids.iter().map(|d| format!("t{d}")).collect(),
+            axes,
+            fixed,
+            command: String::new(),
+            captures: Vec::new(),
+            retries: 0,
+            faults: Vec::new(),
+        });
+    }
+    let n_instances = instance_count(&tasks);
+
+    for i in 0..tasks.len() {
+        let command = gen_command(&mut rng, &tasks, i);
+        let captures = gen_captures(&mut rng);
+        let (retries, faults) =
+            gen_faults(&mut rng, cfg.fault_rate, n_instances);
+        let t = &mut tasks[i];
+        t.command = command;
+        t.captures = captures;
+        t.retries = retries;
+        t.faults = faults;
+    }
+    // The replay invariants need at least one declared metric, else the
+    // results engine (rightly) writes no rows at all.
+    if tasks.iter().all(|t| t.captures.is_empty()) {
+        tasks[0].captures =
+            vec![("score".into(), "stdout score=([0-9.]+)".into())];
+    }
+
+    SynthStudy {
+        name: format!("synth-{}-{}", cfg.seed, cfg.index),
+        seed: cfg.seed,
+        index: cfg.index,
+        shape,
+        tasks,
+        n_instances,
+    }
+}
+
+/// Exact combination count of the emitted study: the product of every
+/// axis cardinality, divided once per zip clause (a zip collapses
+/// `c x c` to `c`).
+fn instance_count(tasks: &[TaskPlan]) -> u64 {
+    let mut n: u64 = 1;
+    for t in tasks {
+        for a in &t.axes {
+            n *= a.cardinality as u64;
+        }
+        for clause in &t.fixed {
+            let c = t
+                .axes
+                .iter()
+                .find(|a| a.name == clause[0])
+                .map(|a| a.cardinality as u64)
+                .unwrap_or(1);
+            n /= c;
+        }
+    }
+    n.max(1)
+}
+
+/// A command template for task `i`: the tool verb plus one token per
+/// local axis, with occasional `$$` escapes and cross-task references.
+fn gen_command(rng: &mut Rng, tasks: &[TaskPlan], i: usize) -> String {
+    let mut parts = vec![TOOLS[rng.below(TOOLS.len() as u64) as usize].to_string()];
+    for a in &tasks[i].axes {
+        if rng.uniform() < 0.3 {
+            parts.push(format!("--{0}=${{{0}}}", a.name));
+        } else {
+            parts.push(format!("${{{}}}", a.name));
+        }
+    }
+    // a `$$` escape: interpolation must emit a literal `$WORKDIR`
+    if rng.uniform() < 0.25 {
+        parts.push("--root=$$WORKDIR".into());
+    }
+    // a cross-task reference to an earlier task's axis (resolved via
+    // the global `task:axis` scope)
+    if rng.uniform() < 0.3 {
+        let targets: Vec<(String, String)> = tasks[..i]
+            .iter()
+            .flat_map(|t| {
+                t.axes.iter().map(|a| (t.id.clone(), a.name.clone()))
+            })
+            .collect();
+        if !targets.is_empty() {
+            let (tid, axis) =
+                &targets[rng.below(targets.len() as u64) as usize];
+            parts.push(format!("--from=${{{tid}:{axis}}}"));
+        }
+    }
+    parts.join(" ")
+}
+
+/// Zero, one, or two stdout metric captures.
+fn gen_captures(rng: &mut Rng) -> Vec<(String, String)> {
+    let n = match rng.below(10) {
+        0..=3 => 0,
+        4..=7 => 1,
+        _ => 2,
+    };
+    let mut names: Vec<&str> = METRICS.to_vec();
+    rng.shuffle(&mut names);
+    names
+        .into_iter()
+        .take(n)
+        .map(|m| (m.to_string(), format!("stdout {m}=([0-9.]+)")))
+        .collect()
+}
+
+/// A scripted fault plan for one task: which instances misbehave and
+/// how. Flaky faults come with exactly enough `retries` to terminally
+/// succeed; hard failures and spawn errors stay terminal.
+fn gen_faults(
+    rng: &mut Rng,
+    fault_rate: f64,
+    n_instances: u64,
+) -> (u32, Vec<(u64, Outcome)>) {
+    if rng.uniform() >= fault_rate || n_instances == 0 {
+        return (0, Vec::new());
+    }
+    let n_hit = 1 + rng.below(n_instances.min(3)) as usize;
+    let hit = rng.sample_indices(n_instances as usize, n_hit);
+    match rng.below(3) {
+        0 => {
+            let flakes = 1 + rng.below(2) as u32;
+            let faults = hit
+                .into_iter()
+                .map(|i| (i as u64, Outcome::FlakyThenOk(flakes)))
+                .collect();
+            (flakes, faults)
+        }
+        1 => {
+            let code = 1 + rng.below(9) as i32;
+            let faults =
+                hit.into_iter().map(|i| (i as u64, Outcome::Fail(code))).collect();
+            (0, faults)
+        }
+        _ => {
+            let faults =
+                hit.into_iter().map(|i| (i as u64, Outcome::SpawnError)).collect();
+            (0, faults)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_byte_deterministic() {
+        let cfg = SynthConfig { seed: 7, index: 3, ..SynthConfig::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.to_yaml(), b.to_yaml());
+        assert_eq!(a.n_instances, b.n_instances);
+        // a different index (or seed) diverges
+        let c = generate(&SynthConfig { index: 4, ..cfg.clone() });
+        assert_ne!(a.to_yaml(), c.to_yaml());
+        let d = generate(&SynthConfig { seed: 8, ..cfg });
+        assert_ne!(a.to_yaml(), d.to_yaml());
+    }
+
+    #[test]
+    fn instance_budget_is_respected() {
+        for index in 0..40 {
+            let cfg = SynthConfig { seed: 11, index, ..SynthConfig::default() };
+            let s = generate(&cfg);
+            assert!(
+                s.n_instances >= 1 && s.n_instances <= cfg.max_instances,
+                "study {index}: {} instances",
+                s.n_instances
+            );
+            assert!(!s.tasks.is_empty());
+            // at least one capture always survives generation
+            assert!(s.tasks.iter().any(|t| !t.captures.is_empty()));
+        }
+    }
+
+    #[test]
+    fn flaky_faults_carry_matching_retries() {
+        for index in 0..60 {
+            let s = generate(&SynthConfig {
+                seed: 23,
+                index,
+                fault_rate: 1.0,
+                ..SynthConfig::default()
+            });
+            for t in &s.tasks {
+                for (inst, o) in &t.faults {
+                    assert!(*inst < s.n_instances);
+                    if let Outcome::FlakyThenOk(n) = o {
+                        assert!(t.retries >= *n, "task {}: {n} flakes, {} retries", t.id, t.retries);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shape_and_task_overrides_pin_the_draw() {
+        let s = generate(&SynthConfig {
+            seed: 5,
+            shape: Some(Shape::Chain),
+            n_tasks: Some(4),
+            ..SynthConfig::default()
+        });
+        assert_eq!(s.shape, Shape::Chain);
+        assert_eq!(s.tasks.len(), 4);
+        for (i, t) in s.tasks.iter().enumerate().skip(1) {
+            assert_eq!(t.deps, vec![format!("t{}", i - 1)]);
+        }
+    }
+}

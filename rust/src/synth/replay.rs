@@ -1,0 +1,379 @@
+//! Hermetic replay of generated studies through the full pipeline.
+//!
+//! [`replay`] takes a [`SynthStudy`] plan, feeds its emitted YAML
+//! through the real front door (`parse_str` → `Study::from_doc`), and
+//! drives run → harvest → checkpoint → search with a
+//! [`ScriptedExecutor`] — zero subprocesses, no sleeps, no wall-clock
+//! dependence. Because the plan records exactly which `(task, instance)`
+//! slots misbehave and how, the expected terminal status of **every**
+//! slot is computable up front, and the replay asserts the engine
+//! agrees:
+//!
+//! 1. report counts (completed/failed/skipped) match the topological
+//!    walk of the fault plan, with nothing restored on a fresh db;
+//! 2. the result store holds exactly one row per terminal task
+//!    (completed + failed), and a post-hoc [`harvest`] rebuild agrees;
+//! 3. LPT packing reaches the same terminal outcome sets as FIFO —
+//!    both cold (no cost model) and warm (second run, model fitted
+//!    from the first run's rows);
+//! 4. a resumed run restores every completed task from the checkpoint
+//!    and re-executes none of them (journal ∩ done = ∅);
+//! 5. optionally, an adaptive search over the same study scores at
+//!    least one proposal (`wall_time` is always capturable).
+//!
+//! Any violation surfaces as `Error::Exec("replay invariant: ...")` so
+//! the CLI smoke (`papas synth --replay`) and the `synth_replay`
+//! integration suite fail loudly with the offending study named.
+
+use super::SynthStudy;
+use crate::exec::{Outcome, Script, ScriptedExecutor};
+use crate::results::{harvest, ResultTable};
+use crate::search::{run_search, SearchConfig};
+use crate::study::{Checkpoint, Study};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use crate::wdl::{parse_str, Format};
+use crate::workflow::PackMode;
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::sync::Arc;
+
+/// How to replay (the study itself is fully described by the plan).
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Scripted worker count.
+    pub workers: usize,
+    /// Also drive an adaptive search over the study (invariant 5).
+    pub search: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> ReplayConfig {
+        ReplayConfig { workers: 4, search: false }
+    }
+}
+
+/// What one replay observed (all invariants already asserted).
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    /// Study name (`synth-{seed}-{index}`).
+    pub name: String,
+    /// DAG shape label.
+    pub shape: &'static str,
+    /// Task count.
+    pub tasks: usize,
+    /// Instance (combination) count.
+    pub instances: u64,
+    /// Tasks that completed across all instances.
+    pub completed: usize,
+    /// Tasks that failed terminally.
+    pub failed: usize,
+    /// Tasks skipped behind a failed dependency.
+    pub skipped: usize,
+    /// Result rows after the first run (== completed + failed).
+    pub rows: usize,
+    /// True when the search invariant also ran.
+    pub searched: bool,
+}
+
+/// Expected terminal status of every task slot, computed by walking
+/// the fault plan in topological (emission) order.
+struct Expected {
+    done: usize,
+    failed: usize,
+    skipped: usize,
+    done_keys: BTreeSet<String>,
+    failed_keys: BTreeSet<String>,
+}
+
+fn expected_outcomes(s: &SynthStudy) -> Expected {
+    let hard: BTreeSet<(usize, u64)> = s
+        .tasks
+        .iter()
+        .enumerate()
+        .flat_map(|(ti, t)| {
+            t.faults
+                .iter()
+                .filter(|(_, o)| {
+                    matches!(o, Outcome::Fail(_) | Outcome::SpawnError)
+                })
+                .map(move |(inst, _)| (ti, *inst))
+        })
+        .collect();
+    let index_of = |id: &str| {
+        s.tasks
+            .iter()
+            .position(|t| t.id == id)
+            .expect("dep refers to a generated task")
+    };
+    let mut exp = Expected {
+        done: 0,
+        failed: 0,
+        skipped: 0,
+        done_keys: BTreeSet::new(),
+        failed_keys: BTreeSet::new(),
+    };
+    for inst in 0..s.n_instances {
+        let mut ok = vec![false; s.tasks.len()];
+        for (ti, t) in s.tasks.iter().enumerate() {
+            let key = format!("{}#{inst}", t.id);
+            if !t.deps.iter().all(|d| ok[index_of(d)]) {
+                exp.skipped += 1;
+            } else if hard.contains(&(ti, inst)) {
+                exp.failed += 1;
+                exp.failed_keys.insert(key);
+            } else {
+                // flaky slots terminally succeed: retries == flake count
+                ok[ti] = true;
+                exp.done += 1;
+                exp.done_keys.insert(key);
+            }
+        }
+    }
+    exp
+}
+
+/// Build the scripted executor's fault + metric + duration plan. Every
+/// draw forks off `(seed, index)`, so a fresh `Script` for a repeat run
+/// reproduces the exact same world.
+fn build_script(s: &SynthStudy) -> Script {
+    let mut script = Script::new();
+    for (ti, t) in s.tasks.iter().enumerate() {
+        for (inst, o) in &t.faults {
+            script = script.on(format!("{}#{inst}", t.id), *o);
+        }
+        let stream = Rng::new(s.seed).fold_in(s.index).fold_in(ti as u64);
+        // heterogeneous simulated durations: feeds the LPT cost model
+        script = script
+            .duration_on(t.id.clone(), 0.05 + stream.clone().uniform() * 0.5);
+        if !t.captures.is_empty() {
+            for inst in 0..s.n_instances {
+                let mut v = stream.fold_in(inst);
+                let line = t
+                    .captures
+                    .iter()
+                    .map(|(m, _)| format!("{m}={:.3}", v.uniform() * 100.0))
+                    .collect::<Vec<String>>()
+                    .join(" ");
+                script = script.stdout_on(format!("{}#{inst}", t.id), line);
+            }
+        }
+    }
+    script
+}
+
+/// Load the emitted YAML through the real front door and point the
+/// study's database at `root/<db>`.
+fn mk_study(s: &SynthStudy, root: &Path, db: &str) -> Result<Study> {
+    let doc = parse_str(&s.to_yaml(), Format::Yaml)?;
+    Ok(Study::from_doc(s.name.clone(), doc, root.to_path_buf())?
+        .with_db_root(root.join(db))
+        .with_backoff_ms(0))
+}
+
+macro_rules! ensure {
+    ($s:expr, $cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(Error::Exec(format!(
+                "replay invariant ({}): {}",
+                $s.name,
+                format!($($arg)+)
+            )));
+        }
+    };
+}
+
+/// Replay `s` hermetically under `root` (a scratch directory; the
+/// study databases land in subdirectories). Asserts the module-level
+/// invariants and returns the observed summary.
+pub fn replay(s: &SynthStudy, cfg: &ReplayConfig, root: &Path) -> Result<ReplayOutcome> {
+    std::fs::create_dir_all(root)?;
+    let exp = expected_outcomes(s);
+
+    // ---- invariant 1: fresh FIFO run matches the fault-plan walk ----
+    let fifo = mk_study(s, root, "db-fifo")?.with_pack(PackMode::Fifo);
+    let script1 = Arc::new(build_script(s));
+    let report = fifo.run_with(&ScriptedExecutor::new(script1, cfg.workers))?;
+    ensure!(s, !report.halted, "continue-policy run halted");
+    ensure!(s, report.restored == 0, "fresh run restored {}", report.restored);
+    ensure!(
+        s,
+        (report.completed, report.failed, report.skipped)
+            == (exp.done, exp.failed, exp.skipped),
+        "report {}/{}/{} (done/failed/skipped), expected {}/{}/{}",
+        report.completed,
+        report.failed,
+        report.skipped,
+        exp.done,
+        exp.failed,
+        exp.skipped
+    );
+    let ck1 = Checkpoint::load(&fifo.db_root)?;
+    ensure!(
+        s,
+        ck1.done_keys == exp.done_keys && ck1.failed_keys == exp.failed_keys,
+        "checkpoint key sets diverge from the fault plan"
+    );
+
+    // ---- invariant 2: one result row per terminal task ----
+    let engine = fifo.capture_engine()?;
+    let table = ResultTable::load(&fifo.db_root, engine.schema())?;
+    ensure!(
+        s,
+        table.len() == exp.done + exp.failed,
+        "store holds {} rows, expected {} (completed + failed)",
+        table.len(),
+        exp.done + exp.failed
+    );
+    let harvested = harvest(&fifo)?;
+    ensure!(
+        s,
+        harvested.len() == table.len(),
+        "harvest rebuilt {} rows, live store had {}",
+        harvested.len(),
+        table.len()
+    );
+
+    // ---- invariant 3: LPT ≡ FIFO, cold and warm ----
+    let lpt = mk_study(s, root, "db-lpt")?.with_pack(PackMode::Lpt);
+    for pass in ["cold", "warm"] {
+        let script = Arc::new(build_script(s));
+        let rep = lpt.run_with(&ScriptedExecutor::new(script, cfg.workers))?;
+        ensure!(
+            s,
+            (rep.completed, rep.failed, rep.skipped)
+                == (exp.done, exp.failed, exp.skipped),
+            "{pass} lpt report {}/{}/{} diverges from fifo",
+            rep.completed,
+            rep.failed,
+            rep.skipped
+        );
+        let ck = Checkpoint::load(&lpt.db_root)?;
+        ensure!(
+            s,
+            ck.done_keys == ck1.done_keys && ck.failed_keys == ck1.failed_keys,
+            "{pass} lpt terminal outcome sets diverge from fifo"
+        );
+        // warm pass re-runs with the cost model fitted from the cold
+        // pass's rows (real LPT packing, not the degraded order)
+        lpt.clear_checkpoint()?;
+    }
+
+    // ---- invariant 4: resume restores done work, re-runs none of it ----
+    let script2 = Arc::new(build_script(s));
+    let exec2 = ScriptedExecutor::new(script2.clone(), cfg.workers);
+    let resumed = fifo.run_with(&exec2)?;
+    ensure!(
+        s,
+        resumed.restored == exp.done,
+        "resume restored {} tasks, expected {}",
+        resumed.restored,
+        exp.done
+    );
+    ensure!(
+        s,
+        resumed.completed == 0,
+        "resume re-completed {} already-done tasks",
+        resumed.completed
+    );
+    ensure!(
+        s,
+        (resumed.failed, resumed.skipped) == (exp.failed, exp.skipped),
+        "resume report {}/{} (failed/skipped), expected {}/{}",
+        resumed.failed,
+        resumed.skipped,
+        exp.failed,
+        exp.skipped
+    );
+    for key in script2.journal() {
+        ensure!(
+            s,
+            !ck1.done_keys.contains(&key),
+            "resume re-executed completed task {key}"
+        );
+    }
+
+    // ---- invariant 5 (optional): adaptive search scores proposals ----
+    let searched = if cfg.search {
+        let srch = mk_study(s, root, "db-search")?;
+        let script = Arc::new(build_script(s));
+        let sc = SearchConfig {
+            rounds: 2,
+            budget: 4,
+            seed: s.seed,
+            ..SearchConfig::default()
+        };
+        let out = run_search(&srch, &sc, &ScriptedExecutor::new(script, cfg.workers))?;
+        // every instance has a terminal t0 attempt, so wall_time rows
+        // exist and the incumbent must be set
+        ensure!(s, out.best().is_some(), "search scored no proposal");
+        true
+    } else {
+        false
+    };
+
+    Ok(ReplayOutcome {
+        name: s.name.clone(),
+        shape: s.shape.label(),
+        tasks: s.tasks.len(),
+        instances: s.n_instances,
+        completed: report.completed,
+        failed: report.failed,
+        skipped: report.skipped,
+        rows: table.len(),
+        searched,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{generate, SynthConfig};
+    use super::*;
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("papas_synth_replay").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn a_faulty_chain_replays_with_exact_outcome_accounting() {
+        // force a deterministic-but-faulty draw: high fault rate, chain
+        let s = generate(&SynthConfig {
+            seed: 99,
+            index: 2,
+            shape: Some(super::super::Shape::Chain),
+            n_tasks: Some(3),
+            fault_rate: 1.0,
+            ..SynthConfig::default()
+        });
+        let out = replay(
+            &s,
+            &ReplayConfig { workers: 2, search: false },
+            &scratch("faulty-chain"),
+        )
+        .unwrap();
+        assert_eq!(
+            out.completed + out.failed + out.skipped,
+            s.n_task_slots() as usize
+        );
+        assert_eq!(out.rows, out.completed + out.failed);
+    }
+
+    #[test]
+    fn the_expected_walk_skips_behind_hard_failures() {
+        let s = generate(&SynthConfig {
+            seed: 3,
+            index: 0,
+            shape: Some(super::super::Shape::FanOut),
+            n_tasks: Some(4),
+            fault_rate: 0.0,
+            ..SynthConfig::default()
+        });
+        let exp = expected_outcomes(&s);
+        // no faults: everything completes
+        assert_eq!(exp.failed, 0);
+        assert_eq!(exp.skipped, 0);
+        assert_eq!(exp.done as u64, s.n_task_slots());
+    }
+}

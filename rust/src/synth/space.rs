@@ -1,0 +1,191 @@
+//! Parameter-axis generation for synthetic studies.
+//!
+//! Each task gets a random set of axes drawn from a global
+//! multiplicative **combination budget**: an axis of cardinality `c`
+//! divides the remaining budget by `c`, so the full study's instance
+//! count stays replayable no matter how many tasks the DAG has. Axis
+//! kinds cover the WDL surface the front door must handle: explicit
+//! numeric/word lists, arithmetic (`1:4`) and geometric (`1:*2:8`)
+//! ranges, value-in-value references (`lo-${n}`), and zip `fixed`
+//! clauses over equal-cardinality axis pairs.
+
+use crate::util::rng::Rng;
+
+/// One generated parameter axis, pre-expansion: `values` holds the
+/// strings emitted into the WDL (a range literal is one string), while
+/// `cardinality` is the post-expansion value count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AxisPlan {
+    /// Task-local axis name.
+    pub name: String,
+    /// Emitted value literals (a range like `1:4` counts as one).
+    pub values: Vec<String>,
+    /// Post-range-expansion number of values.
+    pub cardinality: usize,
+}
+
+/// Axis names the generator draws from (never WDL keywords).
+const NAMES: [&str; 10] =
+    ["n", "m", "k", "size", "mode", "threads", "rep", "alpha", "depth", "tol"];
+
+/// Word-valued axis vocabulary.
+const WORDS: [&str; 8] =
+    ["fast", "slow", "exact", "approx", "dense", "sparse", "gpu", "cpu"];
+
+/// Generate up to `max_axes` axes for one task, consuming from the
+/// study-wide multiplicative `budget` (remaining instance capacity).
+/// Returns the axes plus zero or more zip `fixed` clauses over
+/// equal-cardinality axis pairs. Zipped pairs refund one factor to the
+/// budget (a zip collapses `c x c` combinations back to `c`).
+pub fn gen_axes(
+    rng: &mut Rng,
+    max_axes: usize,
+    budget: &mut u64,
+) -> (Vec<AxisPlan>, Vec<Vec<String>>) {
+    let mut names: Vec<&str> = NAMES.to_vec();
+    rng.shuffle(&mut names);
+    let n_axes = rng.below(max_axes as u64 + 1) as usize;
+    let mut axes: Vec<AxisPlan> = Vec::new();
+    for name in names.into_iter().take(n_axes) {
+        let axis = gen_axis(rng, name, &axes);
+        let c = axis.cardinality as u64;
+        if c > *budget {
+            break;
+        }
+        *budget /= c;
+        axes.push(axis);
+    }
+
+    // Zip two equal-cardinality axes into a fixed clause (refs are
+    // never zipped: their expansion rides on the axis they reference).
+    let mut fixed: Vec<Vec<String>> = Vec::new();
+    'zip: for i in 0..axes.len() {
+        for j in i + 1..axes.len() {
+            let same = axes[i].cardinality == axes[j].cardinality;
+            let plain = |a: &AxisPlan| !a.values.iter().any(|v| v.contains("${"));
+            if same && plain(&axes[i]) && plain(&axes[j]) && rng.uniform() < 0.4 {
+                fixed.push(vec![axes[i].name.clone(), axes[j].name.clone()]);
+                *budget = budget.saturating_mul(axes[i].cardinality as u64);
+                break 'zip;
+            }
+        }
+    }
+    (axes, fixed)
+}
+
+/// One random axis named `name`; `prev` is consulted for
+/// value-in-value reference targets.
+fn gen_axis(rng: &mut Rng, name: &str, prev: &[AxisPlan]) -> AxisPlan {
+    // a reference axis needs a target; plain kinds always work
+    let kind = if prev.is_empty() { rng.below(4) } else { rng.below(5) };
+    match kind {
+        // explicit integer list
+        0 => {
+            let card = 2 + rng.below(3) as usize;
+            let mut pool: Vec<u64> = (1..=16).collect();
+            rng.shuffle(&mut pool);
+            let values: Vec<String> =
+                pool.into_iter().take(card).map(|v| v.to_string()).collect();
+            AxisPlan { name: name.into(), cardinality: values.len(), values }
+        }
+        // word list
+        1 => {
+            let card = 2 + rng.below(2) as usize;
+            let mut pool: Vec<&str> = WORDS.to_vec();
+            rng.shuffle(&mut pool);
+            let values: Vec<String> =
+                pool.into_iter().take(card).map(str::to_string).collect();
+            AxisPlan { name: name.into(), cardinality: values.len(), values }
+        }
+        // arithmetic range `a:b` (step 1, inclusive)
+        2 => {
+            let a = 1 + rng.below(3);
+            let card = 2 + rng.below(3) as usize;
+            let b = a + card as u64 - 1;
+            AxisPlan {
+                name: name.into(),
+                values: vec![format!("{a}:{b}")],
+                cardinality: card,
+            }
+        }
+        // geometric range `a:*2:b`
+        3 => {
+            let a = 1 + rng.below(2);
+            let card = 3 + rng.below(2) as usize;
+            let b = a << (card - 1);
+            AxisPlan {
+                name: name.into(),
+                values: vec![format!("{a}:*2:{b}")],
+                cardinality: card,
+            }
+        }
+        // value-in-value: each value embeds a reference to a prior axis
+        _ => {
+            let target = &prev[rng.below(prev.len() as u64) as usize];
+            let values = vec![
+                format!("lo-${{{}}}", target.name),
+                format!("hi-${{{}}}", target.name),
+            ];
+            AxisPlan { name: name.into(), cardinality: values.len(), values }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axes_respect_the_combination_budget() {
+        for seed in 0..30 {
+            let mut rng = Rng::new(seed);
+            let mut budget = 48u64;
+            let (axes, fixed) = gen_axes(&mut rng, 3, &mut budget);
+            let mut product: u64 = 1;
+            for a in &axes {
+                assert_eq!(a.name.chars().filter(|c| c.is_whitespace()).count(), 0);
+                assert!(a.cardinality >= 2);
+                product *= a.cardinality as u64;
+            }
+            // zip clauses collapse one factor each
+            for clause in &fixed {
+                assert_eq!(clause.len(), 2);
+                let c = axes.iter().find(|a| a.name == clause[0]).unwrap();
+                let d = axes.iter().find(|a| a.name == clause[1]).unwrap();
+                assert_eq!(c.cardinality, d.cardinality);
+                product /= c.cardinality as u64;
+            }
+            assert!(product <= 48, "seed {seed}: product {product}");
+        }
+    }
+
+    #[test]
+    fn reference_axes_point_at_an_earlier_axis() {
+        for seed in 0..60 {
+            let mut rng = Rng::new(seed);
+            let mut budget = 64u64;
+            let (axes, _) = gen_axes(&mut rng, 3, &mut budget);
+            for (i, a) in axes.iter().enumerate() {
+                for v in &a.values {
+                    if let Some(start) = v.find("${") {
+                        let inner = &v[start + 2..v.len() - 1];
+                        assert!(
+                            axes[..i].iter().any(|p| p.name == inner),
+                            "seed {seed}: ref '{inner}' has no earlier target"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let gen = |seed| {
+            let mut rng = Rng::new(seed);
+            let mut budget = 48u64;
+            gen_axes(&mut rng, 3, &mut budget)
+        };
+        assert_eq!(gen(7), gen(7));
+    }
+}

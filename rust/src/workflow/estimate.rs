@@ -78,8 +78,12 @@ impl Acc {
         self.n += 1;
     }
 
-    fn mean(self) -> f64 {
-        self.sum / f64::from(self.n.max(1))
+    /// Mean of the folded samples; `None` for an empty accumulator —
+    /// never a fabricated 0.0, which would read as a zero-cost task to
+    /// the packer and turn into a ~0s inferred timeout that kills
+    /// healthy tasks instantly.
+    fn mean(self) -> Option<f64> {
+        (self.n > 0).then(|| self.sum / f64::from(self.n))
     }
 }
 
@@ -92,8 +96,9 @@ pub struct CostModel {
     exact: HashMap<(u32, Vec<u32>), f64>,
     /// (task, axis, digit) → marginal mean.
     marginal: HashMap<(u32, usize, u32), f64>,
-    /// task → global mean.
-    global: Vec<f64>,
+    /// task → global mean; `None` when the slot was interned without a
+    /// single sample (predicts [`Estimate::Unknown`], never 0.0).
+    global: Vec<Option<f64>>,
     /// task → p95 of observed wall times.
     p95: Vec<f64>,
     /// Rows with a finite wall_time that entered the model.
@@ -158,8 +163,14 @@ impl CostModel {
         CostModel {
             task_ids,
             task_index,
-            exact: exact.into_iter().map(|(k, a)| (k, a.mean())).collect(),
-            marginal: marginal.into_iter().map(|(k, a)| (k, a.mean())).collect(),
+            exact: exact
+                .into_iter()
+                .filter_map(|(k, a)| a.mean().map(|m| (k, m)))
+                .collect(),
+            marginal: marginal
+                .into_iter()
+                .filter_map(|(k, a)| a.mean().map(|m| (k, m)))
+                .collect(),
             global: global.into_iter().map(Acc::mean).collect(),
             p95,
             n_samples,
@@ -209,10 +220,13 @@ impl CostModel {
                 acc.add(m);
             }
         }
-        if acc.n > 0 {
-            return Estimate::Marginal(acc.mean());
+        if let Some(m) = acc.mean() {
+            return Estimate::Marginal(m);
         }
-        Estimate::Global(self.global[t as usize])
+        match self.global[t as usize] {
+            Some(g) => Estimate::Global(g),
+            None => Estimate::Unknown,
+        }
     }
 
     /// Timeout hint for a task: p95 of observed wall times × the
@@ -378,6 +392,27 @@ mod tests {
         assert!(!e.has_coverage());
         assert_eq!(e.predict("job", &[0, 0]), Estimate::Unknown);
         assert_eq!(e.timeout_hint("job", 4.0), None);
+    }
+
+    #[test]
+    fn empty_accumulator_is_unknown_not_zero() {
+        // Regression: `Acc::mean` used `n.max(1)`, mapping an empty
+        // accumulator to 0.0 — a zero-cost Global estimate and a ~0s
+        // inferred timeout for any task interned without samples.
+        assert_eq!(Acc::default().mean(), None);
+        let mut a = Acc::default();
+        a.add(3.0);
+        assert_eq!(a.mean(), Some(3.0));
+        // A model slot interned without a single sample must predict
+        // Unknown and offer no timeout hint.
+        let mut m = CostModel::empty();
+        m.task_ids.push("ghost".into());
+        m.task_index.insert("ghost".into(), 0);
+        m.global.push(None);
+        m.p95.push(f64::NAN);
+        assert_eq!(m.predict("ghost", &[0, 0]), Estimate::Unknown);
+        assert_eq!(m.predict("ghost", &[0, 0]).value(), None);
+        assert_eq!(m.timeout_hint("ghost", 4.0), None);
     }
 
     #[test]

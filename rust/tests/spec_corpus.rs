@@ -1,0 +1,199 @@
+//! Golden WDL spec corpus: every `.t` file under `rust/specs/` pairs a
+//! front-door input (YAML / JSON / INI) with the exact output the loader
+//! must produce — either the verbatim diagnostic (`error: ...`) or the
+//! compiled facts plus warnings (`ok: tasks=... params=...` lines).
+//!
+//! The corpus pins the *user-facing contract* of parse → AST → validate →
+//! space assembly: a wording change, a count change, or a silently
+//! accepted malformed study all show up as a golden diff. Re-bless after
+//! an intentional change with:
+//!
+//! ```text
+//! UPDATE_SPECS=1 cargo test --test spec_corpus
+//! ```
+//!
+//! On mismatch the full diff is also written to
+//! `target/spec_corpus_diff.txt` so CI can upload it as an artifact.
+
+use papas::study::Study;
+use papas::wdl::{self, Format};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// The corpus may only grow. Shrinking below the floor fails loudly so a
+/// refactor cannot quietly drop coverage.
+const MIN_SPECS: usize = 25;
+
+fn specs_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/specs"))
+}
+
+/// One parsed `.t` file: an `== input FORMAT` section followed by an
+/// `== expect` section holding the golden output.
+struct Spec {
+    format: Format,
+    input: String,
+    expect: String,
+}
+
+fn parse_spec(path: &Path, text: &str) -> Spec {
+    let mut format = None;
+    let mut input = String::new();
+    let mut expect = String::new();
+    let mut section = 0u8; // 0 = preamble, 1 = input, 2 = expect
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("== input ") {
+            assert!(
+                section == 0,
+                "{}: second '== input' section",
+                path.display()
+            );
+            format = Some(match rest.trim() {
+                "yaml" => Format::Yaml,
+                "json" => Format::Json,
+                "ini" => Format::Ini,
+                other => {
+                    panic!("{}: unknown input format '{other}'", path.display())
+                }
+            });
+            section = 1;
+        } else if line.trim_end() == "== expect" {
+            assert!(section == 1, "{}: '== expect' before input", path.display());
+            section = 2;
+        } else {
+            match section {
+                1 => {
+                    input.push_str(line);
+                    input.push('\n');
+                }
+                2 => {
+                    expect.push_str(line);
+                    expect.push('\n');
+                }
+                _ => panic!(
+                    "{}: content before '== input FORMAT' header",
+                    path.display()
+                ),
+            }
+        }
+    }
+    assert!(section == 2, "{}: missing '== expect' section", path.display());
+    Spec { format: format.unwrap(), input, expect }
+}
+
+/// Drive the input through the real front door (parse → `Study::from_doc`,
+/// which runs AST construction, validation, and space assembly) and render
+/// what a user would see.
+fn render(format: Format, input: &str) -> String {
+    let built = wdl::parse_str(input, format)
+        .and_then(|doc| Study::from_doc("spec".into(), doc, std::env::temp_dir()));
+    let mut out = String::new();
+    match built {
+        Err(e) => {
+            let _ = writeln!(out, "error: {e}");
+        }
+        Ok(study) => {
+            let _ = writeln!(
+                out,
+                "ok: tasks={} params={} combinations={} instances={}",
+                study.spec.tasks.len(),
+                study.space().params().len(),
+                study.space().len(),
+                study.n_instances(),
+            );
+            for w in &study.warnings {
+                let _ = writeln!(out, "warning: {w}");
+            }
+        }
+    }
+    out
+}
+
+fn format_label(format: Format) -> &'static str {
+    match format {
+        Format::Yaml => "yaml",
+        Format::Json => "json",
+        Format::Ini => "ini",
+    }
+}
+
+#[test]
+fn golden_specs_match() {
+    let dir = specs_dir();
+    let update = matches!(std::env::var("UPDATE_SPECS").as_deref(), Ok("1"));
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .map(|r| r.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "t"))
+        .collect();
+    paths.sort();
+    assert!(
+        paths.len() >= MIN_SPECS,
+        "spec corpus shrank: {} files (floor {MIN_SPECS})",
+        paths.len()
+    );
+
+    let mut report = String::new();
+    let mut failed = 0usize;
+    for path in &paths {
+        let text = std::fs::read_to_string(path).unwrap();
+        let spec = parse_spec(path, &text);
+        let got = render(spec.format, &spec.input);
+        if got == spec.expect {
+            continue;
+        }
+        if update {
+            let blessed = format!(
+                "== input {}\n{}== expect\n{got}",
+                format_label(spec.format),
+                spec.input
+            );
+            std::fs::write(path, blessed).unwrap();
+            continue;
+        }
+        failed += 1;
+        let _ = writeln!(
+            report,
+            "--- {}\nexpected:\n{}got:\n{got}",
+            path.display(),
+            spec.expect
+        );
+    }
+
+    if failed > 0 {
+        let diff_path =
+            PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/target"))
+                .join("spec_corpus_diff.txt");
+        if let Some(parent) = diff_path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let _ = std::fs::write(&diff_path, &report);
+        panic!(
+            "{failed}/{} golden specs diverged (diff also at {}):\n{report}\
+             re-bless intentional changes with: \
+             UPDATE_SPECS=1 cargo test --test spec_corpus",
+            paths.len(),
+            diff_path.display()
+        );
+    }
+}
+
+#[test]
+fn every_spec_declares_a_verdict() {
+    // A blessed file must open its expect section with an explicit
+    // verdict line — catches truncated files and botched hand edits.
+    for entry in std::fs::read_dir(specs_dir()).unwrap() {
+        let path = entry.unwrap().path();
+        if !path.extension().is_some_and(|x| x == "t") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let spec = parse_spec(&path, &text);
+        assert!(
+            spec.expect.starts_with("error: ") || spec.expect.starts_with("ok: "),
+            "{}: expect section must start with 'error: ' or 'ok: '",
+            path.display()
+        );
+        assert!(!spec.input.is_empty(), "{}: empty input", path.display());
+    }
+}
