@@ -21,6 +21,7 @@
 use papas::bench::{fmt_secs, measure, Table};
 use papas::exec::{Completion, Executor, TaskResult};
 use papas::json::{self, Json};
+use papas::obs::{MonotonicClock, TraceSink};
 use papas::params::{Param, Space};
 use papas::results::{MetricValue, ResultTable, Row, Schema, BUILTIN_METRICS};
 use papas::util::error::Result;
@@ -31,7 +32,7 @@ use papas::workflow::{
 };
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 const WORKERS: usize = 10;
 /// Problem-size axis: seconds of serial work per task (slowest axis —
@@ -141,6 +142,7 @@ impl Executor for VirtualCluster {
                 ok: true,
                 exit_code: 0,
                 stdout: String::new(),
+                stdout_truncated: false,
                 error: None,
                 class: None,
                 duration,
@@ -172,12 +174,15 @@ fn list_makespan(
 }
 
 /// One full scheduler pass under `pack`; returns the dispatch journal.
+/// `traced` additionally journals every scheduler event through a live
+/// [`TraceSink`] (the tracing-overhead smoke).
 fn run_pack(
     study: &StudySpec,
     space: &Space,
     durs: &BTreeMap<u64, f64>,
     model: Option<&CostModel>,
     pack: PackMode,
+    traced: bool,
 ) -> Vec<u64> {
     let n = space.len();
     let instances: Vec<WorkflowInstance> = (0..n)
@@ -201,6 +206,12 @@ fn run_pack(
     sched.window = Some(n as usize);
     if let Some(m) = model {
         sched.costs = Some(TaskCosts::new(m, space));
+    }
+    if traced {
+        let path = std::env::temp_dir().join("papas_bench_trace.jsonl");
+        let sink =
+            TraceSink::create(&path, Arc::new(MonotonicClock::new())).unwrap();
+        sched.trace = Some(Arc::new(sink));
     }
     let report = sched.run(&exec).unwrap();
     assert!(report.all_ok(), "{} run had failures", pack.label());
@@ -230,8 +241,9 @@ fn main() {
 
     // Correctness gate before any timing: both packs must execute the
     // same task set (packing is a pure reordering of dispatch).
-    let fifo = run_pack(&study, &space, &durs, None, PackMode::Fifo);
-    let lpt = run_pack(&study, &space, &durs, Some(&model), PackMode::Lpt);
+    let fifo = run_pack(&study, &space, &durs, None, PackMode::Fifo, false);
+    let lpt =
+        run_pack(&study, &space, &durs, Some(&model), PackMode::Lpt, false);
     let mut fifo_sorted = fifo.clone();
     let mut lpt_sorted = lpt.clone();
     fifo_sorted.sort_unstable();
@@ -241,9 +253,22 @@ fn main() {
         "LPT executed a different task set than FIFO"
     );
     assert_eq!(fifo, (0..n).collect::<Vec<_>>(), "FIFO must keep index order");
-    let lpt2 = run_pack(&study, &space, &durs, Some(&model), PackMode::Lpt);
+    let lpt2 =
+        run_pack(&study, &space, &durs, Some(&model), PackMode::Lpt, false);
     assert_eq!(lpt, lpt2, "LPT dispatch order must be deterministic");
-    println!("# identical task sets confirmed; LPT order deterministic");
+    // Tracing gate: an attached trace sink must be a pure observer —
+    // the dispatch journal with tracing on is bit-identical to off.
+    let lpt_traced =
+        run_pack(&study, &space, &durs, Some(&model), PackMode::Lpt, true);
+    assert_eq!(
+        lpt, lpt_traced,
+        "tracing changed the dispatch order — the sink must be a pure \
+         observer"
+    );
+    println!(
+        "# identical task sets confirmed; LPT order deterministic, \
+         unchanged under tracing"
+    );
 
     let fifo_makespan = list_makespan(&fifo, &durs, WORKERS);
     let lpt_makespan = list_makespan(&lpt, &durs, WORKERS);
@@ -253,11 +278,24 @@ fn main() {
     // schedule + journal), showing the LPT ready-pool costs ~nothing.
     let (warm, reps) = if smoke { (1, 3) } else { (2, 9) };
     let fifo_wall = measure(warm, reps, || {
-        run_pack(&study, &space, &durs, None, PackMode::Fifo)
+        run_pack(&study, &space, &durs, None, PackMode::Fifo, false)
     });
     let lpt_wall = measure(warm, reps, || {
-        run_pack(&study, &space, &durs, Some(&model), PackMode::Lpt)
+        run_pack(&study, &space, &durs, Some(&model), PackMode::Lpt, false)
     });
+    // Tracing-overhead smoke: the same LPT pass with a live sink. The
+    // scheduler path is dominated by materialization, so the journal
+    // writes should cost a few percent at most (informational — wall
+    // numbers on shared CI hosts are too noisy for a hard gate).
+    let lpt_traced_wall = measure(warm, reps, || {
+        run_pack(&study, &space, &durs, Some(&model), PackMode::Lpt, true)
+    });
+    let trace_overhead_pct =
+        100.0 * (lpt_traced_wall.p50 / lpt_wall.p50 - 1.0);
+    println!(
+        "# tracing overhead on the LPT pass: {trace_overhead_pct:+.1}% \
+         (target ≤ 5%)"
+    );
 
     let mut tab = Table::new(
         "admission packing on the heterogeneous landscape",
@@ -298,6 +336,12 @@ fn main() {
         ("identical_outcomes".to_string(), Json::from(true)),
         ("fifo_sched_wall_s".to_string(), Json::from(fifo_wall.p50)),
         ("lpt_sched_wall_s".to_string(), Json::from(lpt_wall.p50)),
+        (
+            "lpt_traced_sched_wall_s".to_string(),
+            Json::from(lpt_traced_wall.p50),
+        ),
+        ("trace_overhead_pct".to_string(), Json::from(trace_overhead_pct)),
+        ("trace_order_identical".to_string(), Json::from(true)),
     ]);
     std::fs::write("BENCH_scheduler.json", json::to_string_pretty(&record))
         .expect("write BENCH_scheduler.json");

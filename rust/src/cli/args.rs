@@ -49,6 +49,10 @@ pub enum ParsedCommand {
     Search(Args),
     /// `papas synth ...` (seeded synthetic-study generator / replayer)
     Synth(Args),
+    /// `papas trace ...` (inspect/export a run's trace journal)
+    Trace(Args),
+    /// `papas watch ...` (live progress from a run's trace journal)
+    Watch(Args),
     /// `papas help` / no args.
     Help,
 }
@@ -57,7 +61,7 @@ pub enum ParsedCommand {
 /// `--` takes a value.
 const SWITCHES: &[&str] = &[
     "fresh", "dot", "quiet", "concat", "gantt", "resume", "complete-only",
-    "desc", "infer-timeouts", "compact", "replay", "search",
+    "desc", "infer-timeouts", "compact", "replay", "search", "trace", "once",
 ];
 
 impl Args {
@@ -84,6 +88,8 @@ impl Args {
             "report" => Ok(ParsedCommand::Report(rest)),
             "search" => Ok(ParsedCommand::Search(rest)),
             "synth" => Ok(ParsedCommand::Synth(rest)),
+            "trace" => Ok(ParsedCommand::Trace(rest)),
+            "watch" => Ok(ParsedCommand::Watch(rest)),
             "help" | "--help" | "-h" => Ok(ParsedCommand::Help),
             other => Err(Error::Exec(format!(
                 "unknown subcommand '{other}' (try 'papas help')"
@@ -177,6 +183,40 @@ mod tests {
             Args::parse(&sv(&["synth"])).unwrap(),
             ParsedCommand::Synth(_)
         ));
+        assert!(matches!(
+            Args::parse(&sv(&["trace", "s"])).unwrap(),
+            ParsedCommand::Trace(_)
+        ));
+        assert!(matches!(
+            Args::parse(&sv(&["watch", "s"])).unwrap(),
+            ParsedCommand::Watch(_)
+        ));
+    }
+
+    #[test]
+    fn trace_flags_parse() {
+        let ParsedCommand::Trace(a) = Args::parse(&sv(&[
+            "trace", ".papas/s", "--run", "2", "--export", "chrome", "--out",
+            "t.json",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.opt_num::<u32>("run", 0).unwrap(), 2);
+        assert_eq!(a.opt_or("export", "summary"), "chrome");
+        assert_eq!(a.opt_or("out", ""), "t.json");
+        let ParsedCommand::Run(r) =
+            Args::parse(&sv(&["run", "s.yaml", "--trace"])).unwrap()
+        else {
+            panic!()
+        };
+        assert!(r.has_flag("trace"));
+        let ParsedCommand::Watch(w) =
+            Args::parse(&sv(&["watch", "s", "--once"])).unwrap()
+        else {
+            panic!()
+        };
+        assert!(w.has_flag("once"));
     }
 
     #[test]

@@ -24,6 +24,10 @@ USAGE:
             [--timeout S] [--retries N] [--backoff MS] [--resume]
             [--on-failure fail-fast|continue|retry-budget:N]
             [--pack auto|fifo|lpt] [--infer-timeouts] [--timeout-factor F]
+            [--trace]                       journal scheduler/task events to
+                                            trace-<run>.jsonl in the study db
+                                            and embed a metrics snapshot in
+                                            report.json (WDL: trace: true)
                                             --pack lpt admits longest-expected
                                             tasks first using wall times from
                                             the result store (auto: lpt once
@@ -58,6 +62,10 @@ USAGE:
                [--where EXPR] [--format text|json]
                                             per-axis performance summary
                                             (mean/std, speedup, efficiency)
+  papas report STUDY.yaml --metric M --run ALL
+                                            run-over-run trend of the metric;
+                                            flags a >2-sigma shift of the
+                                            newest run as a likely regression
   papas search STUDY.yaml [--rounds N] [--budget K] [--seed S]
                [--strategy 'random|halving [eta N]|refine']
                [--objective 'minimize|maximize METRIC'] [--resume]
@@ -74,6 +82,14 @@ USAGE:
                                             study hermetically through
                                             run/harvest/resume/search and
                                             asserts pipeline invariants
+  papas trace [DB-DIR] [--run ID] [--export summary|chrome|csv] [--out FILE]
+              [--width N]                   inspect a run's trace journal;
+                                            chrome export opens in
+                                            chrome://tracing / Perfetto
+  papas watch [DB-DIR] [--run ID] [--interval S] [--once]
+                                            live one-line progress from the
+                                            newest trace journal (Ctrl-C or
+                                            run_end to stop)
   papas help";
 
 fn load_study(a: &Args) -> Result<Study> {
@@ -136,6 +152,9 @@ fn load_study_opts(a: &Args, with_runtime: bool) -> Result<Study> {
     }
     if a.has_flag("infer-timeouts") {
         study = study.with_infer_timeouts(true);
+    }
+    if a.has_flag("trace") {
+        study = study.with_trace(true);
     }
     if a.options.contains_key("timeout-factor") {
         let f: f64 = a.opt_num("timeout-factor", 0.0)?;
@@ -369,19 +388,25 @@ pub fn cmd_qsim(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve `papas status|trace|watch NAME` to a study database root:
+/// an existing path is used as-is, anything else is looked up under
+/// `--db` (default `.papas`).
+fn resolve_db(a: &Args) -> PathBuf {
+    let db = PathBuf::from(a.opt_or("db", ".papas"));
+    if a.positional.is_empty() {
+        db
+    } else {
+        let p = PathBuf::from(&a.positional[0]);
+        if p.exists() { p } else { db.join(&a.positional[0]) }
+    }
+}
+
 /// `papas status` — inspect a study's file database (monitoring view).
 /// `--format json` emits the same summary as one machine-readable JSON
 /// document (CI gates, external dashboards).
 pub fn cmd_status(a: &Args) -> Result<()> {
     use crate::json::Json;
-    let db = PathBuf::from(a.opt_or("db", ".papas"));
-    let db = if a.positional.is_empty() {
-        db
-    } else {
-        // `papas status NAME` → .papas/NAME unless a path was given
-        let p = PathBuf::from(&a.positional[0]);
-        if p.exists() { p } else { db.join(&a.positional[0]) }
-    };
+    let db = resolve_db(a);
     let as_json = match a.opt_or("format", "text").as_str() {
         "text" => false,
         "json" => true,
@@ -674,6 +699,25 @@ pub fn cmd_report(a: &Args) -> Result<()> {
     let study = load_study_opts(a, false)?;
     let (engine, table) = load_results(&study)?;
     let metric = a.opt_or("metric", "wall_time");
+    // `--run ALL`: longitudinal trend — one aggregate row per run id,
+    // newest run checked for a >2σ shift against the prior runs.
+    if a.opt_or("run", "").eq_ignore_ascii_case("all") {
+        let trend =
+            crate::results::build_trend(&table, engine.schema(), &metric)?;
+        match a.opt_or("format", "text").as_str() {
+            "text" => print!("{}", trend.render_text()),
+            "json" => println!(
+                "{}",
+                crate::json::to_string_pretty(&trend.to_json())
+            ),
+            other => {
+                return Err(Error::Exec(format!(
+                    "unknown --format '{other}' (text|json)"
+                )))
+            }
+        }
+        return Ok(());
+    }
     let by = a.options.get("by").ok_or_else(|| {
         Error::Exec("report needs --by AXIS (e.g. --by threads)".into())
     })?;
@@ -891,6 +935,87 @@ pub fn cmd_synth(a: &Args) -> Result<()> {
         println!("replayed {count} studies: all pipeline invariants held");
     }
     Ok(())
+}
+
+/// Pick the trace journal to inspect: `--run ID` or the newest one.
+fn pick_trace_run(a: &Args, db: &std::path::Path) -> Result<u32> {
+    match a.options.get("run") {
+        Some(_) => a.opt_num::<u32>("run", 0),
+        None => crate::obs::latest_trace_run(db).ok_or_else(|| {
+            Error::Store(format!(
+                "no trace journal under {} (run with --trace)",
+                db.display()
+            ))
+        }),
+    }
+}
+
+/// `papas trace` — inspect or export a run's trace journal (written by
+/// `papas run --trace` / WDL `trace: true`).
+pub fn cmd_trace(a: &Args) -> Result<()> {
+    let db = resolve_db(a);
+    let run = pick_trace_run(a, &db)?;
+    let path = crate::obs::trace_path(&db, run);
+    let events = crate::obs::read_trace(&path)?;
+    if events.is_empty() {
+        return Err(Error::Store(format!(
+            "trace journal {} holds no events",
+            path.display()
+        )));
+    }
+    let rendered = match a.opt_or("export", "summary").as_str() {
+        "summary" => crate::obs::export::render_summary(
+            &events,
+            a.opt_num("width", 100usize)?.max(20),
+        ),
+        "chrome" => crate::json::to_string_pretty(
+            &crate::obs::export::to_chrome(&events),
+        ),
+        "csv" => crate::obs::export::to_csv(&events),
+        other => {
+            return Err(Error::Exec(format!(
+                "unknown --export '{other}' (summary|chrome|csv)"
+            )))
+        }
+    };
+    match a.options.get("out") {
+        Some(out) => {
+            std::fs::write(out, rendered.as_bytes())?;
+            println!("wrote {out} ({} events)", events.len());
+        }
+        None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
+/// `papas watch` — live progress folded from the newest trace journal.
+/// Re-reads the journal each tick (reads are torn-line tolerant) and
+/// prints a status line whenever it changes; exits once the run ends.
+/// `--once` renders a single snapshot (scripts and tests).
+pub fn cmd_watch(a: &Args) -> Result<()> {
+    let db = resolve_db(a);
+    let interval = a.opt_num("interval", 1.0f64)?.max(0.1);
+    let once = a.has_flag("once");
+    let mut last = String::new();
+    loop {
+        // Re-resolved each tick so a newly started run is picked up.
+        let run = pick_trace_run(a, &db)?;
+        let events =
+            crate::obs::read_trace(&crate::obs::trace_path(&db, run))?;
+        let mut state = crate::obs::WatchState::default();
+        for e in &events {
+            state.ingest(e);
+        }
+        let line = state.render();
+        if line != last {
+            println!("{line}");
+            last = line;
+        }
+        if once || state.ended {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
 }
 
 #[cfg(test)]

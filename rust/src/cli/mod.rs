@@ -16,6 +16,8 @@
 //! papas report STUDY.yaml --metric M --by AXIS      # perf summary
 //! papas search STUDY.yaml [--rounds N] [--budget K] # adaptive search
 //! papas synth [--seed S] [--count N] [--replay]     # synthetic studies
+//! papas trace STUDY [--run ID] [--export chrome|csv|summary]
+//! papas watch STUDY [--interval S] [--once]         # live trace tail
 //! ```
 
 pub mod args;
@@ -54,6 +56,8 @@ fn run(argv: &[String]) -> Result<()> {
         ParsedCommand::Report(a) => commands::cmd_report(&a),
         ParsedCommand::Search(a) => commands::cmd_search(&a),
         ParsedCommand::Synth(a) => commands::cmd_synth(&a),
+        ParsedCommand::Trace(a) => commands::cmd_trace(&a),
+        ParsedCommand::Watch(a) => commands::cmd_watch(&a),
         ParsedCommand::Help => {
             println!("{}", commands::USAGE);
             Ok(())

@@ -54,6 +54,9 @@ pub struct TaskResult {
     pub duration: f64,
     /// Label of the worker that ran it (filled by the executor).
     pub worker: String,
+    /// True when `stdout` was cut at the capture cap (~4 KiB) — the
+    /// provenance record is a prefix, not the full output.
+    pub stdout_truncated: bool,
 }
 
 impl TaskResult {
@@ -70,6 +73,7 @@ impl TaskResult {
             class: Some(class),
             duration,
             worker: String::new(),
+            stdout_truncated: false,
         }
     }
 }
@@ -130,6 +134,7 @@ impl TaskRunner {
                     class: None,
                     duration: sw.elapsed_secs(),
                     worker: String::new(),
+                    stdout_truncated: false,
                 }),
                 Err(e) => Ok(TaskResult::failure(
                     e.to_string(),
@@ -265,7 +270,7 @@ impl TaskRunner {
                     duration,
                     ErrorClass::Timeout,
                 );
-                r.stdout = truncated(&stdout, 4096);
+                (r.stdout, r.stdout_truncated) = truncated(&stdout, 4096);
                 Ok(r)
             }
         }
@@ -278,10 +283,11 @@ impl TaskExec for TaskRunner {
     }
 }
 
-/// Lossy-decode and cap captured output. The cap is a byte budget;
-/// the cut backs up to a char boundary (a fixed-index `truncate`
-/// panics mid-UTF-8-character and would kill the worker thread).
-fn truncated(bytes: &[u8], cap: usize) -> String {
+/// Lossy-decode and cap captured output; the flag reports whether the
+/// cap cut anything. The cap is a byte budget; the cut backs up to a
+/// char boundary (a fixed-index `truncate` panics mid-UTF-8-character
+/// and would kill the worker thread).
+fn truncated(bytes: &[u8], cap: usize) -> (String, bool) {
     let mut s = String::from_utf8_lossy(bytes).into_owned();
     if s.len() > cap {
         let mut end = cap;
@@ -289,8 +295,9 @@ fn truncated(bytes: &[u8], cap: usize) -> String {
             end -= 1;
         }
         s.truncate(end);
+        return (s, true);
     }
-    s
+    (s, false)
 }
 
 /// Build the result for a reaped exit status: success, non-zero exit, or
@@ -301,7 +308,7 @@ fn classify_exit(
     stderr: &[u8],
     duration: f64,
 ) -> TaskResult {
-    let stdout = truncated(stdout, 4096);
+    let (stdout, stdout_truncated) = truncated(stdout, 4096);
     if status.success() {
         return TaskResult {
             ok: true,
@@ -311,9 +318,10 @@ fn classify_exit(
             class: None,
             duration,
             worker: String::new(),
+            stdout_truncated,
         };
     }
-    let err_tail = truncated(stderr, 1024);
+    let (err_tail, _) = truncated(stderr, 1024);
     let (exit_code, class, error) = match status.code() {
         Some(code) => (
             code,
@@ -334,6 +342,7 @@ fn classify_exit(
         class: Some(class),
         duration,
         worker: String::new(),
+        stdout_truncated,
     }
 }
 
@@ -503,12 +512,31 @@ mod tests {
         // 2000 three-byte chars = 6000 bytes; 4096 % 3 == 1, so a naive
         // byte-index truncate would panic mid-character.
         let s = "€".repeat(2000);
-        let t = truncated(s.as_bytes(), 4096);
+        let (t, cut) = truncated(s.as_bytes(), 4096);
         assert!(t.len() <= 4096);
         assert!(!t.is_empty());
+        assert!(cut);
         assert!(t.chars().all(|c| c == '€'));
         // short output passes through untouched
-        assert_eq!(truncated("ok".as_bytes(), 4096), "ok");
+        assert_eq!(truncated("ok".as_bytes(), 4096), ("ok".to_string(), false));
+    }
+
+    #[test]
+    fn stdout_cap_sets_truncated_flag() {
+        let root = tmp("truncflag");
+        let r = runner(&root);
+        let long = r.run(&task(&[
+            "/bin/sh",
+            "-c",
+            "head -c 9000 /dev/zero | tr '\\0' 'x'",
+        ]));
+        assert!(long.ok, "{long:?}");
+        assert!(long.stdout_truncated);
+        assert_eq!(long.stdout.len(), 4096);
+        let short = r.run(&task(&["/bin/sh", "-c", "echo brief"]));
+        assert!(short.ok);
+        assert!(!short.stdout_truncated);
+        assert!(short.stdout.contains("brief"));
     }
 
     #[test]

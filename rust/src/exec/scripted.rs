@@ -16,6 +16,7 @@
 use super::local::LocalPool;
 use super::runner::TaskResult;
 use super::{Completion, ErrorClass, Executor, TaskExec};
+use crate::obs::{Clock, ScriptedClock};
 use crate::util::error::Result;
 use crate::workflow::ConcreteTask;
 use std::collections::BTreeMap;
@@ -58,6 +59,10 @@ pub struct Script {
     /// outcomes) — a heterogeneous synthetic duration landscape for the
     /// packing bench and cost-model tests.
     durations: BTreeMap<String, f64>,
+    /// Logical trace clock advanced by each attempt's simulated
+    /// duration — with one worker this yields the exact serial
+    /// timeline, making traced replays byte-deterministic.
+    clock: Option<Arc<ScriptedClock>>,
     counts: Mutex<BTreeMap<String, u32>>,
     journal: Mutex<Vec<String>>,
 }
@@ -77,6 +82,7 @@ impl Script {
             stdouts: BTreeMap::new(),
             sim_duration: 0.001,
             durations: BTreeMap::new(),
+            clock: None,
             counts: Mutex::new(BTreeMap::new()),
             journal: Mutex::new(Vec::new()),
         }
@@ -117,6 +123,14 @@ impl Script {
     /// tasks — still never slept, only reported.
     pub fn duration_on(mut self, key: impl Into<String>, secs: f64) -> Script {
         self.durations.insert(key.into(), secs);
+        self
+    }
+
+    /// Advance `clock` by each attempt's simulated duration as it
+    /// executes. Share the same clock with the study's trace sink (via
+    /// `Study::with_trace_clock`) to get replayable trace timestamps.
+    pub fn with_clock(mut self, clock: Arc<ScriptedClock>) -> Script {
+        self.clock = Some(clock);
         self
     }
 
@@ -168,6 +182,7 @@ impl Script {
             class: None,
             duration,
             worker: String::new(),
+            stdout_truncated: false,
         }
     }
 
@@ -186,6 +201,7 @@ impl Script {
             class: Some(class),
             duration,
             worker: String::new(),
+            stdout_truncated: false,
         }
     }
 }
@@ -244,6 +260,9 @@ impl TaskExec for Script {
             ),
         };
         result.stdout = self.stdout_for(task, &key);
+        if let Some(clock) = &self.clock {
+            clock.advance(result.duration);
+        }
         result
     }
 }
@@ -359,6 +378,19 @@ mod tests {
             .default_outcome(Outcome::Fail(2))
             .duration_on("c", 3.25);
         assert_eq!(s.exec(&task("c", 0)).duration, 3.25);
+    }
+
+    #[test]
+    fn script_advances_its_trace_clock_by_simulated_durations() {
+        let clock = Arc::new(ScriptedClock::new());
+        let s = Script::new()
+            .duration_on("a", 2.0)
+            .duration_on("b", 0.5)
+            .with_clock(clock.clone());
+        s.exec(&task("a", 0));
+        assert_eq!(clock.now(), 2.0);
+        s.exec(&task("b", 0));
+        assert_eq!(clock.now(), 2.5);
     }
 
     #[test]

@@ -78,6 +78,7 @@ fn result_to_json(r: &TaskResult) -> Json {
         ),
         ("duration".to_string(), Json::Num(r.duration)),
         ("worker".to_string(), Json::from(r.worker.as_str())),
+        ("stdout_truncated".to_string(), Json::from(r.stdout_truncated)),
     ])
 }
 
@@ -93,6 +94,11 @@ fn result_from_json(j: &Json) -> Result<TaskResult> {
             .and_then(crate::exec::ErrorClass::parse),
         duration: j.expect("duration")?.as_f64().unwrap_or(0.0),
         worker: j.expect_str("worker")?.to_string(),
+        // Tolerant default: frames from pre-flag daemons lack the field.
+        stdout_truncated: j
+            .get("stdout_truncated")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
     })
 }
 
@@ -261,6 +267,7 @@ impl Executor for SshPool {
                             class: Some(crate::exec::ErrorClass::Spawn),
                             duration: 0.0,
                             worker: String::new(),
+                            stdout_truncated: false,
                         });
                         result.worker = host_label.clone();
                         if done.send((task, result)).is_err() {

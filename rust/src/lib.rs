@@ -33,6 +33,7 @@ pub mod cluster;
 pub mod exec;
 pub mod ini;
 pub mod json;
+pub mod obs;
 pub mod params;
 pub mod results;
 pub mod runtime;

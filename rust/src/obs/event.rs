@@ -1,0 +1,349 @@
+//! The typed trace-event vocabulary.
+//!
+//! One variant per observable edge: task lifecycle (dispatch /
+//! complete / retry / timeout-kill), elastic-scheduler decisions (LPT
+//! pool pick, timeout inference, window grow/resize), durability
+//! actions (checkpoint commit, harvest), and search-round progress.
+//! Events serialize to one JSON object per journal line; the sink
+//! stamps the `ts` field, so serialization here is timestamp-free.
+//!
+//! Reading back is deliberately *untyped* (generic [`crate::json::Json`]
+//! via [`super::read_trace`]): exporters and the watch view tolerate
+//! unknown event kinds, so old tools read new journals.
+
+use crate::exec::ErrorClass;
+use crate::json::Json;
+
+/// One structured trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Journal header: the first line of every trace file.
+    Header {
+        /// Provenance run id the journal belongs to.
+        run: u32,
+        /// Study name.
+        study: String,
+        /// Executor worker count.
+        workers: usize,
+        /// Instances selected for this run.
+        n_instances: u64,
+        /// Wall-clock UNIX seconds of the trace epoch (0.0 scripted).
+        epoch_unix: f64,
+    },
+    /// A task instance was handed to the executor's ready queue.
+    Dispatch {
+        /// `task_id#instance` key.
+        key: String,
+        /// Workflow instance index.
+        instance: u64,
+    },
+    /// The LPT packer chose a task out of the ready pool.
+    LptPick {
+        /// `task_id#instance` key.
+        key: String,
+        /// Predicted cost in seconds (None when the model had no
+        /// evidence and admission order decided).
+        predicted: Option<f64>,
+        /// Pool depth at decision time (before removal).
+        pool_depth: usize,
+    },
+    /// A task attempt finished (terminal or about to retry).
+    Complete {
+        /// `task_id#instance` key.
+        key: String,
+        /// Task id.
+        task_id: String,
+        /// Workflow instance index.
+        instance: u64,
+        /// Worker label that executed the attempt.
+        worker: String,
+        /// 1-based attempt number.
+        attempt: u32,
+        /// Whether the attempt succeeded.
+        ok: bool,
+        /// Attempt wall time in seconds.
+        duration: f64,
+        /// Start offset from the trace epoch (seconds).
+        start: f64,
+        /// End offset from the trace epoch (seconds).
+        end: f64,
+        /// Failure class (None on success).
+        class: Option<ErrorClass>,
+    },
+    /// A failed attempt will be re-dispatched.
+    Retry {
+        /// `task_id#instance` key.
+        key: String,
+        /// The attempt number that just failed.
+        attempt: u32,
+        /// Backoff applied before the re-dispatch (milliseconds).
+        backoff_ms: u64,
+        /// Failure class of the failed attempt.
+        class: Option<ErrorClass>,
+    },
+    /// A task died at its wall-clock limit (kill + reap).
+    TimeoutKill {
+        /// `task_id#instance` key.
+        key: String,
+        /// The limit it hit (seconds).
+        limit: f64,
+    },
+    /// The scheduler filled in a missing timeout from the cost model.
+    InferTimeout {
+        /// `task_id#instance` key.
+        key: String,
+        /// Inferred limit (p95 × factor, seconds).
+        limit: f64,
+        /// The per-task p95 the limit came from (seconds).
+        p95: f64,
+    },
+    /// The dynamic window doubled because admission stalled.
+    WindowGrow {
+        /// Window size before.
+        from: usize,
+        /// Window size after.
+        to: usize,
+    },
+    /// The dynamic window was re-targeted from observed variance.
+    WindowResize {
+        /// Window size before.
+        from: usize,
+        /// Window size after.
+        to: usize,
+        /// Coefficient of variation of completed durations that
+        /// triggered the resize.
+        cov: f64,
+    },
+    /// The checkpoint was committed to disk.
+    CheckpointCommit {
+        /// Total keys (done + failed) in the committed checkpoint.
+        keys: usize,
+    },
+    /// The result store snapshot was folded from the row log.
+    Harvest {
+        /// Live rows in the folded snapshot.
+        rows: usize,
+    },
+    /// The run finished; the journal is complete.
+    RunEnd,
+    /// A search round proposed combinations.
+    SearchPropose {
+        /// 1-based round number.
+        round: u32,
+        /// Proposals in the round.
+        n: usize,
+    },
+    /// A search round was scored against the result store.
+    SearchScore {
+        /// 1-based round number.
+        round: u32,
+        /// Proposals that produced a scoreable metric.
+        scored: usize,
+        /// Best score in the round, if any.
+        best: Option<f64>,
+    },
+}
+
+impl TraceEvent {
+    /// The event kind label (the `ev` field of the journal line).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Header { .. } => "header",
+            TraceEvent::Dispatch { .. } => "dispatch",
+            TraceEvent::LptPick { .. } => "lpt_pick",
+            TraceEvent::Complete { .. } => "complete",
+            TraceEvent::Retry { .. } => "retry",
+            TraceEvent::TimeoutKill { .. } => "timeout_kill",
+            TraceEvent::InferTimeout { .. } => "infer_timeout",
+            TraceEvent::WindowGrow { .. } => "window_grow",
+            TraceEvent::WindowResize { .. } => "window_resize",
+            TraceEvent::CheckpointCommit { .. } => "checkpoint_commit",
+            TraceEvent::Harvest { .. } => "harvest",
+            TraceEvent::RunEnd => "run_end",
+            TraceEvent::SearchPropose { .. } => "search_propose",
+            TraceEvent::SearchScore { .. } => "search_score",
+        }
+    }
+
+    /// Serialize to one journal object; `ts` is stamped by the sink.
+    /// The writer sorts object keys, so identical event sequences with
+    /// identical timestamps serialize byte-identically.
+    pub fn to_json(&self, ts: f64) -> Json {
+        let mut fields: Vec<(String, Json)> = vec![
+            ("ts".to_string(), Json::Num(ts)),
+            ("ev".to_string(), Json::from(self.name())),
+        ];
+        let class_json = |c: &Option<ErrorClass>| {
+            c.map(|c| Json::from(c.label())).unwrap_or(Json::Null)
+        };
+        match self {
+            TraceEvent::Header { run, study, workers, n_instances, epoch_unix } => {
+                fields.push(("run".to_string(), Json::from(*run as i64)));
+                fields.push(("study".to_string(), Json::from(study.as_str())));
+                fields.push(("workers".to_string(), Json::from(*workers as i64)));
+                fields.push((
+                    "n_instances".to_string(),
+                    Json::from(*n_instances as i64),
+                ));
+                fields.push(("epoch_unix".to_string(), Json::Num(*epoch_unix)));
+                fields.push(("version".to_string(), Json::from(1i64)));
+            }
+            TraceEvent::Dispatch { key, instance } => {
+                fields.push(("key".to_string(), Json::from(key.as_str())));
+                fields.push((
+                    "instance".to_string(),
+                    Json::from(*instance as i64),
+                ));
+            }
+            TraceEvent::LptPick { key, predicted, pool_depth } => {
+                fields.push(("key".to_string(), Json::from(key.as_str())));
+                fields.push((
+                    "predicted".to_string(),
+                    predicted.map(Json::Num).unwrap_or(Json::Null),
+                ));
+                fields.push((
+                    "pool_depth".to_string(),
+                    Json::from(*pool_depth as i64),
+                ));
+            }
+            TraceEvent::Complete {
+                key,
+                task_id,
+                instance,
+                worker,
+                attempt,
+                ok,
+                duration,
+                start,
+                end,
+                class,
+            } => {
+                fields.push(("key".to_string(), Json::from(key.as_str())));
+                fields.push((
+                    "task_id".to_string(),
+                    Json::from(task_id.as_str()),
+                ));
+                fields.push((
+                    "instance".to_string(),
+                    Json::from(*instance as i64),
+                ));
+                fields.push(("worker".to_string(), Json::from(worker.as_str())));
+                fields.push(("attempt".to_string(), Json::from(*attempt as i64)));
+                fields.push(("ok".to_string(), Json::from(*ok)));
+                fields.push(("duration".to_string(), Json::Num(*duration)));
+                fields.push(("start".to_string(), Json::Num(*start)));
+                fields.push(("end".to_string(), Json::Num(*end)));
+                fields.push(("class".to_string(), class_json(class)));
+            }
+            TraceEvent::Retry { key, attempt, backoff_ms, class } => {
+                fields.push(("key".to_string(), Json::from(key.as_str())));
+                fields.push(("attempt".to_string(), Json::from(*attempt as i64)));
+                fields.push((
+                    "backoff_ms".to_string(),
+                    Json::from(*backoff_ms as i64),
+                ));
+                fields.push(("class".to_string(), class_json(class)));
+            }
+            TraceEvent::TimeoutKill { key, limit } => {
+                fields.push(("key".to_string(), Json::from(key.as_str())));
+                fields.push(("limit".to_string(), Json::Num(*limit)));
+            }
+            TraceEvent::InferTimeout { key, limit, p95 } => {
+                fields.push(("key".to_string(), Json::from(key.as_str())));
+                fields.push(("limit".to_string(), Json::Num(*limit)));
+                fields.push(("p95".to_string(), Json::Num(*p95)));
+            }
+            TraceEvent::WindowGrow { from, to } => {
+                fields.push(("from".to_string(), Json::from(*from as i64)));
+                fields.push(("to".to_string(), Json::from(*to as i64)));
+            }
+            TraceEvent::WindowResize { from, to, cov } => {
+                fields.push(("from".to_string(), Json::from(*from as i64)));
+                fields.push(("to".to_string(), Json::from(*to as i64)));
+                fields.push(("cov".to_string(), Json::Num(*cov)));
+            }
+            TraceEvent::CheckpointCommit { keys } => {
+                fields.push(("keys".to_string(), Json::from(*keys as i64)));
+            }
+            TraceEvent::Harvest { rows } => {
+                fields.push(("rows".to_string(), Json::from(*rows as i64)));
+            }
+            TraceEvent::RunEnd => {}
+            TraceEvent::SearchPropose { round, n } => {
+                fields.push(("round".to_string(), Json::from(*round as i64)));
+                fields.push(("n".to_string(), Json::from(*n as i64)));
+            }
+            TraceEvent::SearchScore { round, scored, best } => {
+                fields.push(("round".to_string(), Json::from(*round as i64)));
+                fields.push(("scored".to_string(), Json::from(*scored as i64)));
+                fields.push((
+                    "best".to_string(),
+                    best.map(Json::Num).unwrap_or(Json::Null),
+                ));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn events_round_trip_through_the_writer() {
+        let ev = TraceEvent::Dispatch { key: "t#3".into(), instance: 3 };
+        let line = json::to_string(&ev.to_json(1.25));
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.expect_str("ev").unwrap(), "dispatch");
+        assert_eq!(j.expect_str("key").unwrap(), "t#3");
+        assert_eq!(j.expect_i64("instance").unwrap(), 3);
+        assert_eq!(j.expect("ts").unwrap().as_f64(), Some(1.25));
+        // serialization is deterministic (sorted keys)
+        assert_eq!(line, json::to_string(&ev.to_json(1.25)));
+    }
+
+    #[test]
+    fn optional_fields_serialize_as_null() {
+        let ev = TraceEvent::LptPick {
+            key: "t#0".into(),
+            predicted: None,
+            pool_depth: 4,
+        };
+        let j = ev.to_json(0.0);
+        assert_eq!(j.get("predicted"), Some(&Json::Null));
+        assert_eq!(j.expect_i64("pool_depth").unwrap(), 4);
+        let ev = TraceEvent::Complete {
+            key: "t#0".into(),
+            task_id: "t".into(),
+            instance: 0,
+            worker: "local-0".into(),
+            attempt: 1,
+            ok: true,
+            duration: 0.5,
+            start: 1.0,
+            end: 1.5,
+            class: None,
+        };
+        let j = ev.to_json(1.5);
+        assert_eq!(j.get("class"), Some(&Json::Null));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn every_variant_has_a_distinct_name() {
+        let names = [
+            TraceEvent::RunEnd.name(),
+            TraceEvent::Harvest { rows: 0 }.name(),
+            TraceEvent::CheckpointCommit { keys: 0 }.name(),
+            TraceEvent::WindowGrow { from: 1, to: 2 }.name(),
+            TraceEvent::WindowResize { from: 2, to: 3, cov: 0.1 }.name(),
+            TraceEvent::SearchPropose { round: 1, n: 2 }.name(),
+            TraceEvent::SearchScore { round: 1, scored: 2, best: None }.name(),
+        ];
+        let set: std::collections::BTreeSet<&str> =
+            names.iter().copied().collect();
+        assert_eq!(set.len(), names.len());
+    }
+}

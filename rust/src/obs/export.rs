@@ -1,0 +1,328 @@
+//! Trace exporters: Chrome/Perfetto JSON, CSV, and an ASCII summary.
+//!
+//! All three operate on the parsed journal (`Vec<Json>` from
+//! [`super::journal::read_trace`]) rather than on live [`TraceEvent`]s,
+//! so they work on journals from crashed or foreign runs too.
+//!
+//! The Chrome export follows the trace-event format consumed by
+//! `chrome://tracing` and [Perfetto](https://ui.perfetto.dev): one
+//! thread track per worker carrying `B`/`E` duration spans (tasks on a
+//! worker are sequential, so spans never overlap within a track), plus
+//! a `tid 0` scheduler track of `i` instants for decision events (LPT
+//! picks, window resizes, timeout inference, checkpoints), each keeping
+//! its journal fields as `args`.
+
+use crate::json::Json;
+use crate::workflow::profiler::TaskRecord;
+use std::collections::BTreeMap;
+
+fn ev_name(e: &Json) -> &str {
+    e.get("ev").and_then(Json::as_str).unwrap_or("")
+}
+
+fn micros(secs: f64) -> Json {
+    Json::Num((secs * 1e6).round())
+}
+
+/// Journal fields that become structural Chrome fields, not `args`.
+const STRUCTURAL: [&str; 2] = ["ts", "ev"];
+
+fn args_of(e: &Json) -> Json {
+    let Some(m) = e.as_obj() else {
+        return Json::obj([]);
+    };
+    Json::obj(
+        m.iter()
+            .filter(|(k, _)| !STRUCTURAL.contains(&k.as_str()))
+            .map(|(k, v)| (k.clone(), v.clone())),
+    )
+}
+
+/// Sorted worker names seen in `complete` events; track ids start at 1
+/// (tid 0 is the scheduler's instant track).
+fn worker_tids(events: &[Json]) -> BTreeMap<String, usize> {
+    let mut tids = BTreeMap::new();
+    for e in events {
+        if ev_name(e) != "complete" {
+            continue;
+        }
+        if let Some(w) = e.get("worker").and_then(Json::as_str) {
+            let next = tids.len() + 1;
+            tids.entry(w.to_string()).or_insert(next);
+        }
+    }
+    tids
+}
+
+/// Convert a parsed journal into Chrome trace-event JSON
+/// (`{"traceEvents": [...]}`), loadable in `chrome://tracing` and
+/// Perfetto.
+pub fn to_chrome(events: &[Json]) -> Json {
+    let tids = worker_tids(events);
+    let mut out: Vec<Json> = Vec::new();
+    let meta = |tid: usize, name: &str| {
+        Json::obj([
+            ("name".to_string(), Json::from("thread_name")),
+            ("ph".to_string(), Json::from("M")),
+            ("pid".to_string(), Json::from(1usize)),
+            ("tid".to_string(), Json::from(tid)),
+            (
+                "args".to_string(),
+                Json::obj([("name".to_string(), Json::from(name))]),
+            ),
+        ])
+    };
+    out.push(meta(0, "scheduler"));
+    for (worker, tid) in &tids {
+        out.push(meta(*tid, worker));
+    }
+    let mut timed: Vec<(f64, Json)> = Vec::new();
+    for e in events {
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+        match ev_name(e) {
+            "" => {}
+            "complete" => {
+                let worker = e.get("worker").and_then(Json::as_str).unwrap_or("");
+                let tid = tids.get(worker).copied().unwrap_or(0);
+                let key = e.get("key").and_then(Json::as_str).unwrap_or("task");
+                let start = e.get("start").and_then(Json::as_f64).unwrap_or(ts);
+                let end = e.get("end").and_then(Json::as_f64).unwrap_or(ts);
+                let span = |ph: &str, at: f64| {
+                    Json::obj([
+                        ("name".to_string(), Json::from(key)),
+                        ("cat".to_string(), Json::from("task")),
+                        ("ph".to_string(), Json::from(ph)),
+                        ("ts".to_string(), micros(at)),
+                        ("pid".to_string(), Json::from(1usize)),
+                        ("tid".to_string(), Json::from(tid)),
+                        ("args".to_string(), args_of(e)),
+                    ])
+                };
+                timed.push((start, span("B", start)));
+                timed.push((end, span("E", end)));
+            }
+            name => {
+                timed.push((
+                    ts,
+                    Json::obj([
+                        ("name".to_string(), Json::from(name)),
+                        ("cat".to_string(), Json::from("scheduler")),
+                        ("ph".to_string(), Json::from("i")),
+                        ("s".to_string(), Json::from("t")),
+                        ("ts".to_string(), micros(ts)),
+                        ("pid".to_string(), Json::from(1usize)),
+                        ("tid".to_string(), Json::from(0usize)),
+                        ("args".to_string(), args_of(e)),
+                    ]),
+                ));
+            }
+        }
+    }
+    // Stable sort keeps B before E for zero-duration spans.
+    timed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    out.extend(timed.into_iter().map(|(_, e)| e));
+    Json::obj([("traceEvents".to_string(), Json::Arr(out))])
+}
+
+/// Flatten a parsed journal to CSV: fixed columns for the common
+/// fields, remaining fields packed into a `detail` column as
+/// `key=value` pairs.
+pub fn to_csv(events: &[Json]) -> String {
+    const COMMON: [&str; 6] = ["ts", "ev", "key", "worker", "ok", "duration"];
+    let mut out = String::from("ts,ev,key,worker,ok,duration,detail\n");
+    for e in events {
+        let Some(m) = e.as_obj() else { continue };
+        let mut row: Vec<String> = COMMON
+            .iter()
+            .map(|k| {
+                m.get(*k)
+                    .map(|v| match v {
+                        Json::Str(s) => crate::util::strings::csv_field(s),
+                        other => crate::json::to_string(other),
+                    })
+                    .unwrap_or_default()
+            })
+            .collect();
+        let detail = m
+            .iter()
+            .filter(|(k, _)| !COMMON.contains(&k.as_str()))
+            .map(|(k, v)| format!("{k}={}", crate::json::to_string(v)))
+            .collect::<Vec<_>>()
+            .join(";");
+        row.push(crate::util::strings::csv_field(&detail));
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Rebuild profiler-style task records from `complete` events (the
+/// input to the ASCII Gantt renderer).
+pub fn task_records(events: &[Json]) -> Vec<TaskRecord> {
+    events
+        .iter()
+        .filter(|e| ev_name(e) == "complete")
+        .map(|e| TaskRecord {
+            key: e.get("key").and_then(Json::as_str).unwrap_or("").to_string(),
+            task_id: e.get("task_id").and_then(Json::as_str).unwrap_or("").to_string(),
+            instance: e.get("instance").and_then(Json::as_i64).unwrap_or(0) as u64,
+            start: e.get("start").and_then(Json::as_f64).unwrap_or(0.0),
+            end: e.get("end").and_then(Json::as_f64).unwrap_or(0.0),
+            worker: e.get("worker").and_then(Json::as_str).unwrap_or("").to_string(),
+            ok: e.get("ok").and_then(Json::as_bool).unwrap_or(false),
+        })
+        .collect()
+}
+
+/// Human summary of a journal: header line, event counts, per-worker
+/// busy time, and an ASCII Gantt timeline.
+pub fn render_summary(events: &[Json], cols: usize) -> String {
+    let mut out = String::new();
+    if let Some(h) = events.iter().find(|e| ev_name(e) == "header") {
+        let study = h.get("study").and_then(Json::as_str).unwrap_or("?");
+        let run = h.get("run").and_then(Json::as_i64).unwrap_or(0);
+        let workers = h.get("workers").and_then(Json::as_i64).unwrap_or(0);
+        let n = h.get("n_instances").and_then(Json::as_i64).unwrap_or(0);
+        out.push_str(&format!(
+            "study {study}  run {run}  workers {workers}  instances {n}\n"
+        ));
+    }
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for e in events {
+        let name = ev_name(e);
+        if !name.is_empty() {
+            *counts.entry(name).or_insert(0) += 1;
+        }
+    }
+    out.push_str("events:");
+    for (name, n) in &counts {
+        out.push_str(&format!(" {name}={n}"));
+    }
+    out.push('\n');
+    let records = task_records(events);
+    if !records.is_empty() {
+        let mut busy: BTreeMap<String, f64> = BTreeMap::new();
+        for r in &records {
+            *busy.entry(r.worker.clone()).or_insert(0.0) += r.duration();
+        }
+        let bars: Vec<(String, f64)> = busy.into_iter().collect();
+        out.push_str("\nworker busy (s):\n");
+        out.push_str(&crate::viz::render_bars(&bars, 40));
+        out.push_str("\ntimeline:\n");
+        out.push_str(&crate::viz::render_records(&records, cols));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::TraceEvent;
+    use super::*;
+
+    fn journal() -> Vec<Json> {
+        let evs = [
+            (
+                0.0,
+                TraceEvent::Header {
+                    run: 0,
+                    study: "demo".into(),
+                    workers: 2,
+                    n_instances: 2,
+                    epoch_unix: 0.0,
+                },
+            ),
+            (0.0, TraceEvent::Dispatch { key: "a#0".into(), instance: 0 }),
+            (0.0, TraceEvent::Dispatch { key: "b#0".into(), instance: 0 }),
+            (
+                2.0,
+                TraceEvent::Complete {
+                    key: "a#0".into(),
+                    task_id: "a".into(),
+                    instance: 0,
+                    worker: "local-0".into(),
+                    attempt: 1,
+                    ok: true,
+                    duration: 2.0,
+                    start: 0.0,
+                    end: 2.0,
+                    class: None,
+                },
+            ),
+            (
+                3.0,
+                TraceEvent::Complete {
+                    key: "b#0".into(),
+                    task_id: "b".into(),
+                    instance: 0,
+                    worker: "local-1".into(),
+                    attempt: 1,
+                    ok: true,
+                    duration: 3.0,
+                    start: 0.0,
+                    end: 3.0,
+                    class: None,
+                },
+            ),
+            (3.0, TraceEvent::RunEnd),
+        ];
+        evs.iter().map(|(ts, ev)| ev.to_json(*ts)).collect()
+    }
+
+    #[test]
+    fn chrome_export_is_structurally_valid() {
+        let chrome = to_chrome(&journal());
+        let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 thread_name metadata (scheduler + 2 workers), 2 B/E pairs,
+        // 4 instants (header, 2 dispatch, run_end)
+        assert_eq!(events.len(), 3 + 4 + 4);
+        let mut open = 0i64;
+        for e in events {
+            match e.expect_str("ph").unwrap() {
+                "B" => open += 1,
+                "E" => open -= 1,
+                "i" => {
+                    assert_eq!(e.expect_i64("tid").unwrap(), 0);
+                    assert_eq!(e.expect_str("s").unwrap(), "t");
+                }
+                "M" => assert_eq!(e.expect_str("name").unwrap(), "thread_name"),
+                other => panic!("unexpected phase {other}"),
+            }
+            assert!(open >= 0, "E before matching B");
+        }
+        assert_eq!(open, 0, "unbalanced B/E spans");
+        // spans land on per-worker tracks with microsecond stamps
+        let b = events
+            .iter()
+            .find(|e| e.expect_str("ph").unwrap() == "B")
+            .unwrap();
+        assert_eq!(b.expect_str("name").unwrap(), "a#0");
+        assert!(b.expect_i64("tid").unwrap() >= 1);
+        let e_span = events
+            .iter()
+            .find(|e| {
+                e.expect_str("ph").unwrap() == "E"
+                    && e.expect_str("name").unwrap() == "b#0"
+            })
+            .unwrap();
+        assert_eq!(e_span.expect_i64("ts").unwrap(), 3_000_000);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_event() {
+        let csv = to_csv(&journal());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + 6);
+        assert_eq!(lines[0], "ts,ev,key,worker,ok,duration,detail");
+        assert!(lines[4].starts_with("3,complete,b#0,local-1,true,3,"));
+    }
+
+    #[test]
+    fn summary_counts_events_and_draws_workers() {
+        let s = render_summary(&journal(), 60);
+        assert!(s.contains("study demo  run 0  workers 2  instances 2"));
+        assert!(s.contains("complete=2"));
+        assert!(s.contains("dispatch=2"));
+        assert!(s.contains("local-0"));
+        assert!(s.contains("local-1"));
+    }
+}

@@ -1,0 +1,278 @@
+//! The per-run trace journal: buffered append, torn-line-tolerant read.
+//!
+//! One file per run (`trace-<run>.jsonl`, next to `attempts.jsonl`),
+//! one JSON object per line, first line a `header` event. Writes go
+//! through a buffered writer behind a mutex and are **best-effort** —
+//! a full disk degrades tracing, never the run. Reads skip torn
+//! trailing lines exactly like the attempt log, so `papas watch` can
+//! tail a journal that is still being written.
+//!
+//! The sink also folds every event into the [`Metrics`] registry as it
+//! is emitted, so a traced run ends with counters/gauges/histograms
+//! ready for `report.json` without a second pass over the journal.
+
+use super::clock::Clock;
+use super::event::TraceEvent;
+use super::metrics::Metrics;
+use crate::json::{self, Json};
+use crate::util::error::Result;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Journal filename for search-driver events (round propose/score).
+pub const SEARCH_TRACE_FILE: &str = "trace-search.jsonl";
+
+/// Path of run `run`'s trace journal under a study database root.
+pub fn trace_path(db_root: &Path, run: u32) -> PathBuf {
+    db_root.join(format!("trace-{run}.jsonl"))
+}
+
+/// The highest run id with a trace journal under `db_root`, if any.
+pub fn latest_trace_run(db_root: &Path) -> Option<u32> {
+    let entries = std::fs::read_dir(db_root).ok()?;
+    let mut latest: Option<u32> = None;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(mid) = name
+            .strip_prefix("trace-")
+            .and_then(|r| r.strip_suffix(".jsonl"))
+        else {
+            continue;
+        };
+        if let Ok(run) = mid.parse::<u32>() {
+            latest = Some(latest.map_or(run, |l| l.max(run)));
+        }
+    }
+    latest
+}
+
+/// Read a trace journal tolerantly: one event per parseable line, torn
+/// or foreign lines skipped (the journal may still be appended to).
+pub fn read_trace(path: &Path) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut events = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(j) = json::parse(line) else { continue };
+        if j.get("ev").and_then(Json::as_str).is_some() {
+            events.push(j);
+        }
+    }
+    Ok(events)
+}
+
+/// The live event sink: stamps timestamps from its [`Clock`], appends
+/// one line per event, and folds each event into the metrics registry.
+pub struct TraceSink {
+    writer: Mutex<BufWriter<File>>,
+    clock: Arc<dyn Clock>,
+    metrics: Metrics,
+    /// Dispatch timestamps by key, consumed at completion to observe
+    /// queue wait (time between admission and execution start).
+    dispatched: Mutex<BTreeMap<String, f64>>,
+}
+
+impl TraceSink {
+    /// Create (truncate) the journal at `path`.
+    pub fn create(path: &Path, clock: Arc<dyn Clock>) -> Result<TraceSink> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = File::create(path)?;
+        Ok(TraceSink {
+            writer: Mutex::new(BufWriter::new(file)),
+            clock,
+            metrics: Metrics::new(),
+            dispatched: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Seconds since the trace epoch (the sink's clock).
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Wall-clock UNIX seconds of the trace epoch (0.0 scripted).
+    pub fn epoch_unix(&self) -> f64 {
+        self.clock.epoch_unix()
+    }
+
+    /// The metrics registry this sink folds events into.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stamp, fold, and append one event. Best-effort: write errors are
+    /// swallowed so tracing can never abort the run it observes.
+    pub fn emit(&self, ev: &TraceEvent) {
+        let ts = self.clock.now();
+        self.fold(ev);
+        let line = json::to_string(&ev.to_json(ts));
+        let mut w = self.writer.lock().unwrap();
+        let _ = writeln!(w, "{line}");
+    }
+
+    /// Flush buffered lines to disk (end of run; `papas watch` readers
+    /// only see flushed lines).
+    pub fn flush(&self) {
+        let _ = self.writer.lock().unwrap().flush();
+    }
+
+    /// Fold one event into the metrics registry.
+    fn fold(&self, ev: &TraceEvent) {
+        let m = &self.metrics;
+        match ev {
+            TraceEvent::Header { workers, .. } => {
+                m.set_gauge("workers", *workers as f64);
+            }
+            TraceEvent::Dispatch { key, .. } => {
+                m.inc("tasks_dispatched");
+                self.dispatched
+                    .lock()
+                    .unwrap()
+                    .insert(key.clone(), self.clock.now());
+            }
+            TraceEvent::LptPick { pool_depth, .. } => {
+                m.inc("lpt_picks");
+                m.set_gauge("pool_depth", *pool_depth as f64);
+            }
+            TraceEvent::Complete { key, worker, ok, duration, start, class, .. } => {
+                m.inc(if *ok { "tasks_ok" } else { "tasks_failed" });
+                if let Some(c) = class {
+                    m.inc(&format!("class.{}", c.label()));
+                }
+                m.observe("task_duration_s", *duration);
+                m.observe(&format!("worker_busy_s.{worker}"), *duration);
+                if let Some(d) = self.dispatched.lock().unwrap().remove(key) {
+                    m.observe("queue_wait_s", (start - d).max(0.0));
+                }
+            }
+            TraceEvent::Retry { .. } => m.inc("retries"),
+            TraceEvent::TimeoutKill { .. } => m.inc("timeout_kills"),
+            TraceEvent::InferTimeout { .. } => m.inc("inferred_timeouts"),
+            TraceEvent::WindowGrow { to, .. } => {
+                m.inc("window_grows");
+                m.set_gauge("window_size", *to as f64);
+            }
+            TraceEvent::WindowResize { to, .. } => {
+                m.inc("window_resizes");
+                m.set_gauge("window_size", *to as f64);
+            }
+            TraceEvent::CheckpointCommit { keys } => {
+                m.inc("checkpoint_commits");
+                m.set_gauge("checkpoint_keys", *keys as f64);
+            }
+            TraceEvent::Harvest { rows } => {
+                m.inc("harvests");
+                m.set_gauge("result_rows", *rows as f64);
+            }
+            TraceEvent::RunEnd => {}
+            TraceEvent::SearchPropose { n, .. } => {
+                m.add("search_proposed", *n as u64);
+            }
+            TraceEvent::SearchScore { scored, .. } => {
+                m.add("search_scored", *scored as u64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::clock::ScriptedClock;
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("papas_obs_journal").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn complete(key: &str, worker: &str, start: f64, end: f64) -> TraceEvent {
+        TraceEvent::Complete {
+            key: key.to_string(),
+            task_id: key.split('#').next().unwrap().to_string(),
+            instance: 0,
+            worker: worker.to_string(),
+            attempt: 1,
+            ok: true,
+            duration: end - start,
+            start,
+            end,
+            class: None,
+        }
+    }
+
+    #[test]
+    fn emit_read_round_trip_and_metrics_fold() {
+        let dir = tmp("roundtrip");
+        let path = trace_path(&dir, 0);
+        let clock = Arc::new(ScriptedClock::new());
+        let sink = TraceSink::create(&path, clock.clone()).unwrap();
+        sink.emit(&TraceEvent::Header {
+            run: 0,
+            study: "s".into(),
+            workers: 2,
+            n_instances: 3,
+            epoch_unix: 0.0,
+        });
+        sink.emit(&TraceEvent::Dispatch { key: "t#0".into(), instance: 0 });
+        clock.advance(2.0);
+        sink.emit(&complete("t#0", "local-0", 0.0, 2.0));
+        sink.emit(&TraceEvent::RunEnd);
+        sink.flush();
+        let events = read_trace(&path).unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].expect_str("ev").unwrap(), "header");
+        assert_eq!(events[0].expect_i64("version").unwrap(), 1);
+        assert_eq!(events[3].expect_str("ev").unwrap(), "run_end");
+        // metrics folded as events were emitted
+        let m = sink.metrics();
+        assert_eq!(m.counter("tasks_dispatched"), 1);
+        assert_eq!(m.counter("tasks_ok"), 1);
+        assert_eq!(m.hist("task_duration_s").unwrap().n, 1);
+        assert_eq!(m.hist("worker_busy_s.local-0").unwrap().sum, 2.0);
+        // queue wait = start(0.0) − dispatch ts(0.0)
+        assert_eq!(m.hist("queue_wait_s").unwrap().max, 0.0);
+    }
+
+    #[test]
+    fn torn_trailing_line_is_skipped() {
+        let dir = tmp("torn");
+        let path = trace_path(&dir, 1);
+        let sink =
+            TraceSink::create(&path, Arc::new(ScriptedClock::new())).unwrap();
+        sink.emit(&TraceEvent::RunEnd);
+        sink.flush();
+        // simulate a crash mid-write
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"ts\":1.0,\"ev\":\"disp");
+        std::fs::write(&path, text).unwrap();
+        let events = read_trace(&path).unwrap();
+        assert_eq!(events.len(), 1);
+    }
+
+    #[test]
+    fn latest_trace_run_scans_the_db_root() {
+        let dir = tmp("latest");
+        assert_eq!(latest_trace_run(&dir), None);
+        for run in [0u32, 2, 1] {
+            TraceSink::create(
+                &trace_path(&dir, run),
+                Arc::new(ScriptedClock::new()),
+            )
+            .unwrap()
+            .flush();
+        }
+        std::fs::write(dir.join("trace-search.jsonl"), "").unwrap();
+        assert_eq!(latest_trace_run(&dir), Some(2));
+    }
+}

@@ -1,0 +1,212 @@
+//! The metrics registry: named counters, gauges, and histograms.
+//!
+//! The trace sink folds every emitted event into this registry, so a
+//! traced run ends with a ready-made quantitative summary — tasks by
+//! exit class, retries, pool depth, window size, queue wait, per-worker
+//! busy time — snapshotted into `report.json` (and therefore into
+//! `papas status --format json`) without a second pass over the
+//! journal.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Streaming histogram summary: count / sum / min / max (mean derives).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hist {
+    /// Observations.
+    pub n: u64,
+    /// Sum of observations.
+    pub sum: f64,
+    /// Smallest observation.
+    pub min: f64,
+    /// Largest observation.
+    pub max: f64,
+}
+
+impl Hist {
+    fn observe(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Mean observation (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj([
+            ("n".to_string(), Json::from(self.n as i64)),
+            ("sum".to_string(), Json::Num(self.sum)),
+            ("mean".to_string(), Json::Num(self.mean())),
+            ("min".to_string(), Json::Num(if self.n == 0 { 0.0 } else { self.min })),
+            ("max".to_string(), Json::Num(if self.n == 0 { 0.0 } else { self.max })),
+        ])
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+}
+
+/// Thread-safe registry of named counters, gauges, and histograms.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment a counter by `n`.
+    pub fn add(&self, name: &str, n: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += n;
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Record one histogram observation.
+    pub fn observe(&self, name: &str, value: f64) {
+        self.hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .observe(value);
+    }
+
+    /// A counter's current value (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// A gauge's current value.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// A histogram's current summary.
+    pub fn hist(&self, name: &str) -> Option<Hist> {
+        self.hists.lock().unwrap().get(name).copied()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.lock().unwrap().is_empty()
+            && self.gauges.lock().unwrap().is_empty()
+            && self.hists.lock().unwrap().is_empty()
+    }
+
+    /// Snapshot the whole registry as one JSON object (sorted names —
+    /// the `report.json` / `papas status --format json` payload).
+    pub fn snapshot(&self) -> Json {
+        let counters = Json::obj(
+            self.counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::from(*v as i64))),
+        );
+        let gauges = Json::obj(
+            self.gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v))),
+        );
+        let hists = Json::obj(
+            self.hists
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, h)| (k.clone(), h.to_json())),
+        );
+        Json::obj([
+            ("counters".to_string(), counters),
+            ("gauges".to_string(), gauges),
+            ("histograms".to_string(), hists),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms() {
+        let m = Metrics::new();
+        assert!(m.is_empty());
+        m.inc("tasks_ok");
+        m.inc("tasks_ok");
+        m.add("tasks_ok", 3);
+        m.set_gauge("window_size", 8.0);
+        m.set_gauge("window_size", 12.0); // latest wins
+        m.observe("queue_wait_s", 1.0);
+        m.observe("queue_wait_s", 3.0);
+        assert_eq!(m.counter("tasks_ok"), 5);
+        assert_eq!(m.counter("ghost"), 0);
+        assert_eq!(m.gauge("window_size"), Some(12.0));
+        let h = m.hist("queue_wait_s").unwrap();
+        assert_eq!(h.n, 2);
+        assert_eq!(h.mean(), 2.0);
+        assert_eq!((h.min, h.max), (1.0, 3.0));
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_structured_and_deterministic() {
+        let m = Metrics::new();
+        m.inc("retries");
+        m.set_gauge("pool_depth", 4.0);
+        m.observe("task_duration_s", 2.5);
+        let j = m.snapshot();
+        assert_eq!(
+            j.get("counters").unwrap().expect_i64("retries").unwrap(),
+            1
+        );
+        assert_eq!(
+            j.get("gauges")
+                .unwrap()
+                .get("pool_depth")
+                .and_then(Json::as_f64),
+            Some(4.0)
+        );
+        let h = j.get("histograms").unwrap().get("task_duration_s").unwrap();
+        assert_eq!(h.expect_i64("n").unwrap(), 1);
+        assert_eq!(h.get("mean").and_then(Json::as_f64), Some(2.5));
+        // empty registry snapshots to three empty sections
+        let e = Metrics::new().snapshot();
+        assert_eq!(
+            crate::json::to_string(&e),
+            r#"{"counters":{},"gauges":{},"histograms":{}}"#
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Run observability: structured event tracing + a metrics registry.
+//!
+//! PaPaS §4.2 stops at a task profiler that "only serves as performance
+//! feedback to the user". This module is the event-level substrate
+//! underneath it: every scheduler decision the elastic engine makes
+//! (LPT pool picks, timeout inference, window resizes), every task
+//! lifecycle edge (dispatch / complete / retry / timeout-kill), and
+//! every durability action (checkpoint commit, harvest) can be appended
+//! live to a per-run `trace-<run>.jsonl` journal and folded into a
+//! counters/gauges/histograms registry snapshotted into `report.json`.
+//!
+//! Design constraints:
+//!
+//! - **Off by default, zero-cost when off.** The scheduler holds an
+//!   `Option<Arc<TraceSink>>`; the disabled path is a single `Option`
+//!   check per site, and dispatch order is bit-identical to the
+//!   untraced engine.
+//! - **Crash-tolerant like `attempts.jsonl`.** One JSON object per
+//!   line, buffered writes, torn trailing lines skipped on read.
+//! - **Replayable.** Timestamps come from a [`Clock`] — the real
+//!   [`MonotonicClock`] on live runs, a [`ScriptedClock`] advanced by
+//!   simulated task durations under `ScriptedExecutor`, so hermetic
+//!   replays produce byte-identical journals.
+//!
+//! Inspection lives in `papas trace` (Chrome/Perfetto JSON, CSV, or an
+//! ASCII summary via [`export`]) and `papas watch` (a live tail over
+//! the journal via [`watch`]).
+
+pub mod clock;
+pub mod event;
+pub mod export;
+pub mod journal;
+pub mod metrics;
+pub mod watch;
+
+pub use clock::{Clock, MonotonicClock, ScriptedClock};
+pub use event::TraceEvent;
+pub use journal::{
+    latest_trace_run, read_trace, trace_path, TraceSink, SEARCH_TRACE_FILE,
+};
+pub use metrics::{Hist, Metrics};
+pub use watch::WatchState;

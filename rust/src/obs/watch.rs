@@ -1,0 +1,244 @@
+//! Live run monitoring: fold a (possibly still-growing) journal into a
+//! compact progress view for `papas watch`.
+//!
+//! The watcher re-reads the journal tolerantly (torn trailing lines are
+//! skipped) and folds every event into a [`WatchState`]; rendering is a
+//! single status line plus a short decision summary, cheap enough to
+//! refresh every second on large journals.
+
+use crate::json::Json;
+
+/// Accumulated view of a run, folded from journal events in order.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct WatchState {
+    /// Run id from the header (0 before one is seen).
+    pub run: u32,
+    /// Study name from the header.
+    pub study: String,
+    /// Worker count from the header.
+    pub workers: usize,
+    /// Total instances the run will execute, from the header.
+    pub n_instances: u64,
+    /// Tasks dispatched so far.
+    pub dispatched: u64,
+    /// Attempts that completed successfully.
+    pub ok: u64,
+    /// Attempts that completed in failure (including ones retried).
+    pub failed: u64,
+    /// Retries scheduled.
+    pub retries: u64,
+    /// Timeout kills.
+    pub timeout_kills: u64,
+    /// Latest admission window size (0 = unwindowed).
+    pub window: usize,
+    /// Latest LPT pool depth.
+    pub pool_depth: usize,
+    /// Sum of completed attempt durations.
+    dur_sum: f64,
+    /// Completed attempt count (denominator for the mean duration).
+    dur_n: u64,
+    /// Timestamp of the most recent event.
+    pub last_ts: f64,
+    /// True once a `run_end` event was seen.
+    pub ended: bool,
+}
+
+impl WatchState {
+    /// Fold one parsed journal event into the state.
+    pub fn ingest(&mut self, ev: &Json) {
+        if let Some(ts) = ev.get("ts").and_then(Json::as_f64) {
+            self.last_ts = self.last_ts.max(ts);
+        }
+        let int = |key: &str| ev.get(key).and_then(Json::as_i64).unwrap_or(0);
+        match ev.get("ev").and_then(Json::as_str).unwrap_or("") {
+            "header" => {
+                self.run = int("run") as u32;
+                self.study = ev
+                    .get("study")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                self.workers = int("workers") as usize;
+                self.n_instances = int("n_instances") as u64;
+            }
+            "dispatch" => self.dispatched += 1,
+            "lpt_pick" => self.pool_depth = int("pool_depth") as usize,
+            "complete" => {
+                if ev.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+                    self.ok += 1;
+                } else {
+                    self.failed += 1;
+                }
+                if let Some(d) = ev.get("duration").and_then(Json::as_f64) {
+                    self.dur_sum += d;
+                    self.dur_n += 1;
+                }
+            }
+            "retry" => self.retries += 1,
+            "timeout_kill" => self.timeout_kills += 1,
+            "window_grow" | "window_resize" => {
+                self.window = int("to") as usize;
+            }
+            "run_end" => self.ended = true,
+            _ => {}
+        }
+    }
+
+    /// Completed attempts (ok + failed).
+    pub fn completed(&self) -> u64 {
+        self.ok + self.failed
+    }
+
+    /// Dispatched but not yet completed.
+    pub fn in_flight(&self) -> u64 {
+        self.dispatched.saturating_sub(self.completed())
+    }
+
+    /// Mean completed-attempt duration in seconds (0.0 before any).
+    pub fn mean_duration(&self) -> f64 {
+        if self.dur_n == 0 {
+            0.0
+        } else {
+            self.dur_sum / self.dur_n as f64
+        }
+    }
+
+    /// Naive remaining-time estimate: outstanding instances at the mean
+    /// duration spread across the workers. 0.0 once ended.
+    pub fn eta_s(&self) -> f64 {
+        if self.ended || self.n_instances == 0 {
+            return 0.0;
+        }
+        let remaining = self.n_instances.saturating_sub(self.ok) as f64;
+        remaining * self.mean_duration() / self.workers.max(1) as f64
+    }
+
+    /// Render the state as a short status block.
+    pub fn render(&self) -> String {
+        let status = if self.ended { "done" } else { "running" };
+        let mut line = format!(
+            "[{:>8.1}s] {} run {} ({}): {}/{} ok, {} failed, {} in flight",
+            self.last_ts,
+            self.study,
+            self.run,
+            status,
+            self.ok,
+            self.n_instances,
+            self.failed,
+            self.in_flight(),
+        );
+        if self.retries > 0 {
+            line.push_str(&format!(", {} retries", self.retries));
+        }
+        if self.timeout_kills > 0 {
+            line.push_str(&format!(", {} timeouts", self.timeout_kills));
+        }
+        if self.window > 0 {
+            line.push_str(&format!(", window {}", self.window));
+        }
+        if !self.ended && self.dur_n > 0 {
+            line.push_str(&format!(", eta ~{:.0}s", self.eta_s()));
+        }
+        line
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::TraceEvent;
+    use super::*;
+
+    fn fold(state: &mut WatchState, ts: f64, ev: TraceEvent) {
+        state.ingest(&ev.to_json(ts));
+    }
+
+    #[test]
+    fn state_folds_a_run_in_order() {
+        let mut s = WatchState::default();
+        fold(
+            &mut s,
+            0.0,
+            TraceEvent::Header {
+                run: 3,
+                study: "sweep".into(),
+                workers: 2,
+                n_instances: 4,
+                epoch_unix: 0.0,
+            },
+        );
+        for i in 0..4u64 {
+            fold(
+                &mut s,
+                0.0,
+                TraceEvent::Dispatch { key: format!("t#{i}"), instance: i },
+            );
+        }
+        fold(
+            &mut s,
+            2.0,
+            TraceEvent::Complete {
+                key: "t#0".into(),
+                task_id: "t".into(),
+                instance: 0,
+                worker: "local-0".into(),
+                attempt: 1,
+                ok: true,
+                duration: 2.0,
+                start: 0.0,
+                end: 2.0,
+                class: None,
+            },
+        );
+        fold(
+            &mut s,
+            2.5,
+            TraceEvent::Retry {
+                key: "t#1".into(),
+                attempt: 1,
+                backoff_ms: 100,
+                class: None,
+            },
+        );
+        assert_eq!(s.run, 3);
+        assert_eq!(s.study, "sweep");
+        assert_eq!(s.dispatched, 4);
+        assert_eq!(s.ok, 1);
+        assert_eq!(s.in_flight(), 3);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.mean_duration(), 2.0);
+        // 3 remaining × 2.0s mean / 2 workers
+        assert_eq!(s.eta_s(), 3.0);
+        assert!(!s.ended);
+        let line = s.render();
+        assert!(line.contains("sweep run 3 (running)"));
+        assert!(line.contains("1/4 ok"));
+        assert!(line.contains("1 retries"));
+        fold(&mut s, 9.0, TraceEvent::RunEnd);
+        assert!(s.ended);
+        assert_eq!(s.eta_s(), 0.0);
+        assert!(s.render().contains("(done)"));
+        assert_eq!(s.last_ts, 9.0);
+    }
+
+    #[test]
+    fn window_and_pool_depth_track_latest_values() {
+        let mut s = WatchState::default();
+        fold(&mut s, 0.1, TraceEvent::WindowGrow { from: 2, to: 4 });
+        fold(
+            &mut s,
+            0.2,
+            TraceEvent::WindowResize { from: 4, to: 8, cov: 0.4 },
+        );
+        fold(
+            &mut s,
+            0.3,
+            TraceEvent::LptPick {
+                key: "t#0".into(),
+                predicted: Some(1.5),
+                pool_depth: 7,
+            },
+        );
+        assert_eq!(s.window, 8);
+        assert_eq!(s.pool_depth, 7);
+    }
+}

@@ -48,7 +48,7 @@ pub use query::{
     filter_rows, render_flat, render_groups, run_flat, run_grouped, Filter,
     FlatRow, Format, GroupRow, Query, RunSel,
 };
-pub use report::{build_report, Report, ReportRow};
+pub use report::{build_report, build_trend, Report, ReportRow, Trend, TrendRow};
 pub use schema::{MetricValue, Row, Schema, BUILTIN_METRICS};
 pub use store::{
     harvest, harvest_rows, log_line_count, snapshot_from_log, ResultLog,

@@ -275,6 +275,167 @@ impl Report {
     }
 }
 
+/// One run's aggregate of a metric in a longitudinal trend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrendRow {
+    /// Run id.
+    pub run: u32,
+    /// Rows aggregated from that run.
+    pub n: usize,
+    /// Mean of the metric over the run's rows.
+    pub mean: f64,
+    /// Sample standard deviation over the run's rows.
+    pub std: f64,
+}
+
+/// A run-over-run trend of one metric (`papas report --run ALL`):
+/// every run id in the result store becomes one aggregate row, so
+/// repeated executions of a study read as a longitudinal series —
+/// with a >2σ shift of the newest run flagged as a likely regression.
+#[derive(Debug, Clone)]
+pub struct Trend {
+    /// Reported metric name.
+    pub metric: String,
+    /// One row per run id, ascending.
+    pub rows: Vec<TrendRow>,
+    /// Newest-run mean in units of σ over the prior run means
+    /// (`None` until ≥ 2 prior runs with spread exist).
+    pub delta_sigma: Option<f64>,
+}
+
+impl Trend {
+    /// True when the newest run's mean sits more than 2σ from the mean
+    /// of all prior runs' means — a likely performance regression (or
+    /// an improvement; the sign of [`Trend::delta_sigma`] says which).
+    pub fn regression(&self) -> bool {
+        self.delta_sigma.is_some_and(|d| d.abs() > 2.0)
+    }
+
+    /// Render as an aligned text table plus an ASCII bar per run.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# {} by run\n", self.metric));
+        let header = vec![
+            "run".to_string(),
+            "n".to_string(),
+            format!("{}.mean", self.metric),
+            format!("{}.std", self.metric),
+        ];
+        let data: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.run.to_string(),
+                    r.n.to_string(),
+                    fmt_number(r.mean),
+                    fmt_number(r.std),
+                ]
+            })
+            .collect();
+        out.push_str(&super::query::render_table(&header, &data));
+        let bars: Vec<(String, f64)> = self
+            .rows
+            .iter()
+            .map(|r| (format!("run {}", r.run), r.mean))
+            .collect();
+        out.push('\n');
+        out.push_str(&render_bars(&bars, 40));
+        if let Some(d) = self.delta_sigma {
+            out.push_str(&format!(
+                "\nnewest run vs prior runs: {d:+.2}σ{}\n",
+                if self.regression() {
+                    "  ⚠ shift beyond 2σ — likely regression"
+                } else {
+                    ""
+                }
+            ));
+        }
+        out
+    }
+
+    /// Render as a JSON document (CI / dashboards).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("metric".to_string(), Json::from(self.metric.as_str())),
+            (
+                "delta_sigma".to_string(),
+                self.delta_sigma.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("regression".to_string(), Json::from(self.regression())),
+            (
+                "rows".to_string(),
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj([
+                                ("run".to_string(), Json::from(r.run as i64)),
+                                ("n".to_string(), Json::from(r.n)),
+                                ("mean".to_string(), Json::Num(r.mean)),
+                                ("std".to_string(), Json::Num(r.std)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Build the longitudinal trend of `metric` across every run id in the
+/// table. Non-numeric and missing values are skipped; runs with no
+/// numeric value for the metric are omitted.
+pub fn build_trend(
+    table: &ResultTable,
+    schema: &Schema,
+    metric: &str,
+) -> Result<Trend> {
+    use crate::util::stats::Summary;
+
+    let m = schema.metric_index(metric).ok_or_else(|| {
+        Error::Store(format!(
+            "no metric named '{metric}' (columns: {})",
+            schema.metrics.join(", ")
+        ))
+    })?;
+    let mut by_run: std::collections::BTreeMap<u32, Vec<f64>> =
+        std::collections::BTreeMap::new();
+    for i in 0..table.len() {
+        if let crate::results::MetricValue::Num(x) = table.value(m, i) {
+            by_run.entry(table.run(i)).or_default().push(*x);
+        }
+    }
+    if by_run.is_empty() {
+        return Err(Error::Store(format!(
+            "no numeric '{metric}' values in the result store (harvest \
+             first?)"
+        )));
+    }
+    let rows: Vec<TrendRow> = by_run
+        .into_iter()
+        .map(|(run, xs)| {
+            let s = Summary::from_samples(&xs);
+            TrendRow { run, n: s.n, mean: s.mean, std: s.std }
+        })
+        .collect();
+    // Regression check: the newest run against the distribution of all
+    // prior runs' means — needs ≥ 2 priors with nonzero spread.
+    let delta_sigma = match rows.split_last() {
+        Some((newest, priors)) if priors.len() >= 2 => {
+            let means: Vec<f64> = priors.iter().map(|r| r.mean).collect();
+            let p = Summary::from_samples(&means);
+            if p.std > 0.0 {
+                Some((newest.mean - p.mean) / p.std)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    };
+    Ok(Trend { metric: metric.to_string(), rows, delta_sigma })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -411,5 +572,61 @@ mod tests {
             &table, &space, &schema, "ghost", "threads", None, ""
         )
         .is_err());
+    }
+
+    /// Four runs of a one-instance study: three stable (~1s) then a 3s
+    /// outlier — the trend flags the newest run as a >2σ shift.
+    fn trend_fixture(times: &[f64]) -> (ResultTable, Schema) {
+        let space =
+            Space::cartesian(vec![Param::new("t:x", vec!["1".into()])])
+                .unwrap();
+        let schema = Schema {
+            params: vec!["t:x".into()],
+            axis_of: space.param_axes(),
+            n_axes: space.n_axes(),
+            metrics: vec!["wall_time".into()],
+        };
+        let mut table = ResultTable::new(schema.clone());
+        for (run, &t) in times.iter().enumerate() {
+            table.push(Row {
+                run: run as u32,
+                instance: 0,
+                task_id: "t".into(),
+                digits: space.digits(0).unwrap(),
+                values: vec![MetricValue::Num(t)],
+            });
+        }
+        (table, schema)
+    }
+
+    #[test]
+    fn trend_flags_a_two_sigma_shift_in_the_newest_run() {
+        let (table, schema) =
+            trend_fixture(&[1.0, 1.01, 0.99, 1.0, 3.0]);
+        let trend = build_trend(&table, &schema, "wall_time").unwrap();
+        assert_eq!(trend.rows.len(), 5);
+        assert_eq!(trend.rows[0].run, 0);
+        assert_eq!(trend.rows[4].n, 1);
+        let d = trend.delta_sigma.unwrap();
+        assert!(d > 2.0, "delta_sigma={d}");
+        assert!(trend.regression());
+        let text = trend.render_text();
+        assert!(text.contains("likely regression"), "{text}");
+        assert!(text.contains("run 4"), "{text}");
+        let j = crate::json::to_string(&trend.to_json());
+        assert!(j.contains("\"regression\":true"), "{j}");
+    }
+
+    #[test]
+    fn trend_stays_quiet_on_stable_runs_and_few_priors() {
+        let (table, schema) = trend_fixture(&[1.0, 1.2, 0.9, 1.1]);
+        let trend = build_trend(&table, &schema, "wall_time").unwrap();
+        assert!(!trend.regression(), "{:?}", trend.delta_sigma);
+        // two runs: not enough priors for a verdict
+        let (table, schema) = trend_fixture(&[1.0, 5.0]);
+        let trend = build_trend(&table, &schema, "wall_time").unwrap();
+        assert!(trend.delta_sigma.is_none());
+        assert!(!trend.regression());
+        assert!(build_trend(&table, &schema, "ghost").is_err());
     }
 }

@@ -24,6 +24,7 @@ use crate::exec::Executor;
 use crate::study::Study;
 use crate::util::error::{Error, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Resolved configuration of one `papas search` invocation: the WDL
 /// `search:` block with CLI overrides applied.
@@ -154,6 +155,39 @@ pub fn run_search_observed(
         SearchHistory::new()
     };
 
+    // Search-level tracing: round propose/score events land in their
+    // own journal (`trace-search.jsonl`) — each round's sub-study run
+    // writes its usual per-run journal independently. Best-effort.
+    use crate::obs::{MonotonicClock, TraceEvent, TraceSink};
+    let trace: Option<TraceSink> = if study.trace {
+        let path = study.db_root.join(crate::obs::SEARCH_TRACE_FILE);
+        TraceSink::create(&path, Arc::new(MonotonicClock::new())).ok()
+    } else {
+        None
+    };
+    if let Some(tr) = &trace {
+        tr.emit(&TraceEvent::Header {
+            run: 0,
+            study: study.name.clone(),
+            workers: executor.workers(),
+            n_instances: study.n_instances() as u64,
+            epoch_unix: tr.epoch_unix(),
+        });
+    }
+    let observe_scored = |tr: &Option<TraceSink>, rec: &RoundRecord| {
+        if let Some(tr) = tr {
+            tr.emit(&TraceEvent::SearchScore {
+                round: rec.round,
+                scored: rec
+                    .scores
+                    .as_ref()
+                    .map(|s| s.iter().flatten().count())
+                    .unwrap_or(0),
+                best: rec.incumbent.map(|(_, s)| s),
+            });
+        }
+    };
+
     let strategy = strategy_for(cfg.strategy, cfg.seed);
     let mut executions = 0u64;
     let mut rounds_run = 0u32;
@@ -165,6 +199,7 @@ pub fn run_search_observed(
         let rec =
             execute_round(study, executor, &ledger, &mut history, cfg, &mut executions)?;
         rounds_run += 1;
+        observe_scored(&trace, &rec);
         observe(&rec);
     }
 
@@ -180,10 +215,17 @@ pub fn run_search_observed(
             break;
         }
         let round = history.begin_round(proposals.clone());
+        if let Some(tr) = &trace {
+            tr.emit(&TraceEvent::SearchPropose {
+                round,
+                n: proposals.len(),
+            });
+        }
         ledger.append_proposed(round, &proposals)?;
         let rec =
             execute_round(study, executor, &ledger, &mut history, cfg, &mut executions)?;
         rounds_run += 1;
+        observe_scored(&trace, &rec);
         observe(&rec);
     }
 
@@ -191,6 +233,10 @@ pub fn run_search_observed(
     // score incrementally; `papas query` wants the complete table).
     if rounds_run > 0 {
         crate::results::harvest(study)?;
+    }
+    if let Some(tr) = &trace {
+        tr.emit(&TraceEvent::RunEnd);
+        tr.flush();
     }
 
     Ok(SearchOutcome { history, rounds_run, executions, converged })
@@ -257,7 +303,6 @@ fn score_proposals(
 mod tests {
     use super::*;
     use crate::exec::{Script, ScriptedExecutor};
-    use std::sync::Arc;
 
     /// A 16-value single-axis study whose synthetic score landscape is
     /// `|v_index − 11|` — minimized (0) at combination index 11.

@@ -52,6 +52,7 @@ use crate::exec::mpi::{Grouping, MpiDispatcher};
 use crate::exec::runner::{RunConfig, TaskRunner};
 use crate::exec::ssh::SshPool;
 use crate::exec::{Executor, FailurePolicy};
+use crate::obs::{MonotonicClock, TraceEvent, TraceSink};
 use crate::params::{Param, Sampling, Space};
 use crate::tasks::Builtins;
 use crate::util::error::Result;
@@ -125,6 +126,15 @@ pub struct Study {
     pub infer_timeouts: bool,
     /// Headroom factor for inferred timeouts (`--timeout-factor`).
     pub timeout_multiplier: f64,
+    /// Journal scheduler/task events to `trace-<run>.jsonl` and embed a
+    /// metrics snapshot in `report.json` (WDL `trace:`; first declaring
+    /// task wins; or `--trace`). Off by default — the untraced path is
+    /// bit-identical to the pre-tracing engine.
+    pub trace: bool,
+    /// Clock for trace timestamps. `None` = real monotonic time;
+    /// hermetic tests inject a [`ScriptedClock`](crate::obs::ScriptedClock)
+    /// shared with a scripted executor for byte-deterministic journals.
+    trace_clock: Option<Arc<dyn crate::obs::Clock>>,
 }
 
 impl Study {
@@ -203,6 +213,9 @@ impl Study {
             .find_map(|t| t.on_failure)
             .unwrap_or_default();
 
+        // Tracing: same first-declaration-wins rule as the policy.
+        let trace = spec.tasks.iter().find_map(|t| t.trace).unwrap_or(false);
+
         // Timeouts are enforced by kill+reap on subprocesses; builtins
         // run in-process and cannot be killed — surface that instead of
         // silently ignoring the key. (Needs the builtin registry, so
@@ -246,6 +259,8 @@ impl Study {
             infer_timeouts: false,
             timeout_multiplier:
                 crate::workflow::estimate::DEFAULT_TIMEOUT_MULTIPLIER,
+            trace,
+            trace_clock: None,
         })
     }
 
@@ -318,6 +333,24 @@ impl Study {
     /// inferring timeouts (`--timeout-factor`).
     pub fn with_timeout_multiplier(mut self, factor: f64) -> Study {
         self.timeout_multiplier = factor;
+        self
+    }
+
+    /// Enable (or disable) the run trace journal + metrics registry
+    /// (`--trace`), overriding the WDL `trace:` key.
+    pub fn with_trace(mut self, on: bool) -> Study {
+        self.trace = on;
+        self
+    }
+
+    /// Inject the clock trace timestamps are read from. Tests share a
+    /// [`ScriptedClock`](crate::obs::ScriptedClock) between this and a
+    /// scripted executor so replayed runs journal byte-identically.
+    pub fn with_trace_clock(
+        mut self,
+        clock: Arc<dyn crate::obs::Clock>,
+    ) -> Study {
+        self.trace_clock = Some(clock);
         self
     }
 
@@ -534,6 +567,29 @@ impl Study {
             executor.workers(),
             self.policy
         ))?;
+        // Observability: when tracing is on, every scheduler decision
+        // and task outcome is journaled to `trace-<run>.jsonl` next to
+        // the attempt log. Sink creation is best-effort — an unwritable
+        // db degrades to an untraced run rather than aborting it.
+        let trace_sink: Option<Arc<TraceSink>> = if self.trace {
+            let clock: Arc<dyn crate::obs::Clock> = match &self.trace_clock {
+                Some(c) => c.clone(),
+                None => Arc::new(MonotonicClock::new()),
+            };
+            let path = crate::obs::trace_path(&self.db_root, run_id);
+            TraceSink::create(&path, clock).ok().map(Arc::new)
+        } else {
+            None
+        };
+        if let Some(tr) = &trace_sink {
+            tr.emit(&TraceEvent::Header {
+                run: run_id,
+                study: self.name.clone(),
+                workers: executor.workers(),
+                n_instances: source.len() as u64,
+                epoch_unix: tr.epoch_unix(),
+            });
+        }
         let (t_over, r_over) = (self.timeout_override, self.retries_override);
         let iter = source.iter().map(move |inst| {
             let mut inst = inst?;
@@ -631,6 +687,7 @@ impl Study {
         scheduler.skip_done = skip_done;
         scheduler.pack = pack;
         scheduler.infer_timeouts = self.infer_timeouts;
+        scheduler.trace = trace_sink.clone();
         if (pack == PackMode::Lpt || self.infer_timeouts)
             && cost_model.has_coverage()
         {
@@ -640,6 +697,7 @@ impl Study {
                 timeout_multiplier: self.timeout_multiplier,
             });
         }
+        let hook_trace = trace_sink.clone();
         scheduler.on_attempt = Some(Box::new(move |rec: &AttemptRecord| {
             // Best-effort: a full disk must not abort the run itself.
             let _ = attempt_log.append(rec);
@@ -672,6 +730,9 @@ impl Study {
             if since >= CHECKPOINT_STRIDE.max(keys / 8) {
                 last_commit.store(n, Ordering::Relaxed);
                 let _ = c.commit(&stride_root);
+                if let Some(tr) = &hook_trace {
+                    tr.emit(&TraceEvent::CheckpointCommit { keys });
+                }
             }
         }));
 
@@ -686,12 +747,27 @@ impl Study {
         // the binary columnar snapshot (best-effort — the run itself is
         // done).
         if let Some((eng, _)) = &capture {
-            let _ =
-                crate::results::snapshot_from_log(&self.db_root, eng.schema());
+            let rows =
+                crate::results::snapshot_from_log(&self.db_root, eng.schema())
+                    .unwrap_or(0);
+            if let Some(tr) = &trace_sink {
+                tr.emit(&TraceEvent::Harvest { rows });
+            }
         }
 
         prov.append_records(&report.records)?;
-        prov.write_report(&report, executor.name())?;
+        match &trace_sink {
+            Some(tr) => {
+                tr.emit(&TraceEvent::RunEnd);
+                tr.flush();
+                prov.write_report_full(
+                    &report,
+                    executor.name(),
+                    Some(&tr.metrics().snapshot()),
+                )?;
+            }
+            None => prov.write_report(&report, executor.name())?,
+        }
         prov.log_event(&format!(
             "run end: {} completed, {} failed, {} skipped, {} restored{}, \
              makespan {:.3}s",

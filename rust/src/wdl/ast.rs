@@ -16,12 +16,13 @@ use crate::util::strings::is_identifier;
 
 /// The predefined WDL keywords (§5's list, extended with the
 /// fault-handling keys `timeout` / `retries` / `on_failure`, the
-/// results-engine key `capture`, and the adaptive-search key `search`).
+/// results-engine key `capture`, the adaptive-search key `search`, and
+/// the observability key `trace`).
 pub const WDL_KEYWORDS: &[&str] = &[
     "command", "name", "environ", "after", "infiles", "outfiles",
     "substitute", "parallel", "batch", "nnodes", "ppnode", "hosts",
     "fixed", "sampling", "timeout", "retries", "on_failure", "capture",
-    "search",
+    "search", "trace",
 ];
 
 /// Parallel execution mode (§5 keyword `parallel`).
@@ -115,6 +116,10 @@ pub struct TaskSpec {
     /// `rounds:`, `budget:`, `seed:`). Study-level: the first task
     /// declaring it wins (like `sampling`); drives `papas search`.
     pub search: Option<SearchSpec>,
+    /// `trace` — journal scheduler/task events to `trace-<run>.jsonl`.
+    /// Study-level: the first task declaring it wins (like `sampling`);
+    /// equivalent to running with `--trace`.
+    pub trace: Option<bool>,
 }
 
 /// A whole parameter study: ordered task sections.
@@ -263,6 +268,19 @@ impl TaskSpec {
                         let raw = scalar_of(id, metric, mnode)?;
                         t.capture.push(CaptureSpec::parse(id, metric, &raw)?);
                     }
+                }
+                "trace" => {
+                    let raw = scalar_of(id, "trace", value)?;
+                    t.trace = match raw.trim().to_ascii_lowercase().as_str() {
+                        "true" | "on" | "1" => Some(true),
+                        "false" | "off" | "0" => Some(false),
+                        other => {
+                            return Err(Error::Wdl(format!(
+                                "task '{id}': trace must be true or false, \
+                                 got '{other}'"
+                            )));
+                        }
+                    };
                 }
                 "search" => {
                     let mut s = SearchSpec::default();

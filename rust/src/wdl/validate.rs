@@ -206,6 +206,25 @@ pub fn validate(study: &StudySpec) -> Result<Vec<String>> {
         }
     }
 
+    // -- trace flag -----------------------------------------------------
+    // Study-level like sampling/on_failure: the first declaration wins.
+    let traces: Vec<(&str, bool)> = study
+        .tasks
+        .iter()
+        .filter_map(|t| t.trace.map(|on| (t.id.as_str(), on)))
+        .collect();
+    if let Some((first_id, first)) = traces.first() {
+        for (id, on) in &traces[1..] {
+            if on != first {
+                warnings.push(format!(
+                    "task '{id}' declares trace '{on}' but task '{first_id}' \
+                     already set the study trace flag to '{first}'; the \
+                     first declaration wins"
+                ));
+            }
+        }
+    }
+
     // -- dependency graph must be acyclic ------------------------------
     check_acyclic(study)?;
 

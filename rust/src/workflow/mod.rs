@@ -13,6 +13,10 @@
 //! materializes instances on demand, and [`scheduler`] admits them into
 //! a bounded in-flight window — the engine never holds the whole
 //! parameter space in memory.
+//!
+//! Scheduler decisions (dispatches, LPT picks, retries, window
+//! resizes, timeout inference) can additionally be journaled through
+//! the [`crate::obs`] trace sink when a run enables tracing.
 
 pub mod dag;
 pub mod estimate;

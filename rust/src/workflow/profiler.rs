@@ -78,6 +78,7 @@ impl WorkerUtilization {
 #[derive(Debug)]
 pub struct Profiler {
     epoch: Instant,
+    epoch_unix: f64,
     records: Mutex<Vec<TaskRecord>>,
 }
 
@@ -90,12 +91,25 @@ impl Default for Profiler {
 impl Profiler {
     /// New profiler; the epoch is "now".
     pub fn new() -> Profiler {
-        Profiler { epoch: Instant::now(), records: Mutex::new(Vec::new()) }
+        Profiler {
+            epoch: Instant::now(),
+            epoch_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0),
+            records: Mutex::new(Vec::new()),
+        }
     }
 
     /// Seconds since the epoch (used as task start/end stamps).
     pub fn now(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Wall-clock UNIX seconds of the epoch — lets relative stamps in
+    /// reports and traces be re-anchored to calendar time post hoc.
+    pub fn epoch_unix(&self) -> f64 {
+        self.epoch_unix
     }
 
     /// Record a completed task.

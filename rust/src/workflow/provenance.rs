@@ -52,6 +52,9 @@ pub struct AttemptRecord {
     /// the results engine's `capture:` stdout metrics — both live and
     /// when `papas harvest` backfills from this log.
     pub stdout: String,
+    /// True when `stdout` was cut at the runner's ~4 KiB capture cap —
+    /// readers can tell a short output from a clipped one.
+    pub stdout_truncated: bool,
     /// Run id: which `papas run`/`search` execution of this study
     /// produced the attempt. Stamped by the scheduler at execution time
     /// and persisted here, so result rows folded live and rows folded
@@ -90,6 +93,10 @@ impl AttemptRecord {
                     Json::from(self.stdout.as_str())
                 },
             ),
+            (
+                "stdout_truncated".to_string(),
+                Json::from(self.stdout_truncated),
+            ),
             ("run".to_string(), Json::from(self.run as i64)),
         ])
     }
@@ -120,6 +127,11 @@ impl AttemptRecord {
                 .and_then(Json::as_str)
                 .unwrap_or_default()
                 .to_string(),
+            // Absent on logs written before the truncation flag.
+            stdout_truncated: j
+                .get("stdout_truncated")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
             // Absent on logs written before multi-run provenance.
             run: j.get("run").and_then(Json::as_i64).unwrap_or(0) as u32,
         })
@@ -275,7 +287,19 @@ impl Provenance {
     /// Write the end-of-run report (`report.json`) — the "provenance
     /// details at workflow completion".
     pub fn write_report(&self, report: &ExecutionReport, executor: &str) -> Result<()> {
-        let j = Json::obj([
+        self.write_report_full(report, executor, None)
+    }
+
+    /// [`Provenance::write_report`] plus an optional `metrics` section —
+    /// the traced-run variant, embedding the trace sink's registry
+    /// snapshot so `papas status --format json` surfaces it verbatim.
+    pub fn write_report_full(
+        &self,
+        report: &ExecutionReport,
+        executor: &str,
+        metrics: Option<&Json>,
+    ) -> Result<()> {
+        let mut fields = vec![
             ("executor".to_string(), Json::from(executor)),
             ("completed".to_string(), Json::from(report.completed)),
             ("failed".to_string(), Json::from(report.failed)),
@@ -285,6 +309,7 @@ impl Provenance {
             ("peak_open".to_string(), Json::from(report.peak_open)),
             ("makespan_s".to_string(), Json::Num(report.makespan)),
             ("utilization".to_string(), Json::Num(report.utilization)),
+            ("epoch_unix".to_string(), Json::Num(report.epoch_unix)),
             (
                 "workers".to_string(),
                 Json::Arr(
@@ -292,7 +317,11 @@ impl Provenance {
                 ),
             ),
             ("n_records".to_string(), Json::from(report.records.len())),
-        ]);
+        ];
+        if let Some(m) = metrics {
+            fields.push(("metrics".to_string(), m.clone()));
+        }
+        let j = Json::obj(fields);
         std::fs::write(
             self.dir.join("report.json"),
             json::to_string_pretty(&j),
@@ -363,6 +392,7 @@ mod tests {
             peak_open: 3,
             makespan: 1.5,
             utilization: 0.8,
+            epoch_unix: 1700000000.5,
             workers: vec![crate::workflow::profiler::WorkerUtilization {
                 worker: "local-0".into(),
                 busy: 1.2,
@@ -380,6 +410,12 @@ mod tests {
         assert_eq!(j.expect_i64("completed").unwrap(), 5);
         assert_eq!(j.expect_str("executor").unwrap(), "local");
         assert!(!j.expect("halted").unwrap().as_bool().unwrap());
+        assert_eq!(
+            j.get("epoch_unix").and_then(Json::as_f64),
+            Some(1700000000.5)
+        );
+        // no metrics section on untraced runs
+        assert!(j.get("metrics").is_none());
         let Some(Json::Arr(ws)) = j.get("workers") else {
             panic!("workers array missing")
         };
@@ -405,6 +441,7 @@ mod tests {
             error: Some("exit code 3".into()),
             worker: "local-0".into(),
             stdout: "partial output\n".into(),
+            stdout_truncated: true,
             run: 2,
         };
         let ok = AttemptRecord {
@@ -415,6 +452,7 @@ mod tests {
             class: None,
             error: None,
             stdout: String::new(),
+            stdout_truncated: false,
             ..fail.clone()
         };
         log.append(&fail).unwrap();
@@ -423,8 +461,10 @@ mod tests {
         assert_eq!(back, vec![fail, ok]);
         assert_eq!(back[0].class.unwrap().label(), "nonzero");
         assert_eq!(back[0].stdout, "partial output\n");
+        assert!(back[0].stdout_truncated);
         assert_eq!(back[0].run, 2);
         assert!(back[1].stdout.is_empty());
+        assert!(!back[1].stdout_truncated);
     }
 
     #[test]
@@ -450,6 +490,7 @@ mod tests {
             error: None,
             worker: "local-0".into(),
             stdout: String::new(),
+            stdout_truncated: false,
             run: 0,
         };
         log.append(&rec).unwrap();
@@ -485,6 +526,7 @@ mod tests {
             error: None,
             worker: "local-0".into(),
             stdout: String::new(),
+            stdout_truncated: false,
             run: 0,
         };
         log.append(&rec).unwrap();
@@ -505,5 +547,6 @@ mod tests {
         .unwrap();
         let rec = AttemptRecord::from_json(&j).unwrap();
         assert_eq!(rec.run, 0);
+        assert!(!rec.stdout_truncated);
     }
 }

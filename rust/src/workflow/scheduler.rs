@@ -21,7 +21,8 @@ use super::instance::WorkflowInstance;
 use super::profiler::{Profiler, TaskRecord, WorkerUtilization};
 use super::provenance::AttemptRecord;
 use super::task::{ConcreteTask, TaskState};
-use crate::exec::{backoff_delay, Completion, Executor, FailurePolicy};
+use crate::exec::{backoff_delay, Completion, ErrorClass, Executor, FailurePolicy};
+use crate::obs::{TraceEvent, TraceSink};
 use crate::util::error::{Error, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc;
@@ -98,6 +99,9 @@ pub struct ExecutionReport {
     pub makespan: f64,
     /// Mean worker utilization (busy / (makespan × workers)).
     pub utilization: f64,
+    /// Wall-clock UNIX seconds of the run epoch (task stamps are
+    /// relative to it) — anchors the run to calendar time.
+    pub epoch_unix: f64,
     /// Per-worker busy/idle breakdown over the makespan (skip markers
     /// excluded) — surfaces exactly which workers sat idle.
     pub workers: Vec<WorkerUtilization>,
@@ -218,6 +222,12 @@ pub struct WorkflowScheduler<'a> {
     /// the inferred limit sticks across attempts. Explicit timeouts
     /// always win (inference only fills `None`).
     pub infer_timeouts: bool,
+    /// Optional trace sink: when set, every dispatch, completion,
+    /// retry, LPT pick, window change, and timeout inference is
+    /// journaled as it happens. `None` (the default) keeps the FIFO and
+    /// LPT hot paths bit-identical to the untraced engine — each site
+    /// is a single `Option` check.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl<'a> WorkflowScheduler<'a> {
@@ -245,6 +255,7 @@ impl<'a> WorkflowScheduler<'a> {
             pack: PackMode::Fifo,
             costs: None,
             infer_timeouts: false,
+            trace: None,
         }
     }
 
@@ -254,9 +265,41 @@ impl<'a> WorkflowScheduler<'a> {
         if self.infer_timeouts && t.timeout.is_none() {
             if let Some(costs) = &self.costs {
                 t.timeout = costs.infer_timeout(&t);
+                if let (Some(limit), Some(tr)) = (t.timeout, &self.trace) {
+                    // The inferred limit is p95 × multiplier; recover
+                    // the p95 the decision was based on for the journal.
+                    let mult = costs.timeout_multiplier;
+                    let p95 =
+                        if mult > 0.0 { limit / mult } else { limit };
+                    tr.emit(&TraceEvent::InferTimeout {
+                        key: t.key(),
+                        limit,
+                        p95,
+                    });
+                }
             }
         }
         t
+    }
+
+    /// Hand one task to the executor, journaling the dispatch when
+    /// tracing. Every send goes through here — initial admission, LPT
+    /// pool picks (which additionally journal the pick decision), and
+    /// retry re-dispatches — so `dispatch` minus `complete` events is
+    /// always the in-flight count.
+    fn send_traced(
+        &self,
+        tx: &mpsc::Sender<ConcreteTask>,
+        t: ConcreteTask,
+    ) -> Result<()> {
+        if let Some(tr) = &self.trace {
+            tr.emit(&TraceEvent::Dispatch {
+                key: t.key(),
+                instance: t.instance,
+            });
+        }
+        tx.send(t)
+            .map_err(|_| Error::Workflow("executor hung up".into()))
     }
 
     /// Predicted cost used as the LPT sort key (`None` = unknown).
@@ -445,9 +488,7 @@ impl<'a> WorkflowScheduler<'a> {
                             pool.push((self.predicted(&t), seq, t));
                             seq += 1;
                         } else {
-                            ready_tx.send(t).map_err(|_| {
-                                Error::Workflow("executor hung up".into())
-                            })?;
+                            self.send_traced(&ready_tx, t)?;
                             in_flight += 1;
                         }
                     }
@@ -464,10 +505,15 @@ impl<'a> WorkflowScheduler<'a> {
                             best = i;
                         }
                     }
+                    if let Some(tr) = &self.trace {
+                        tr.emit(&TraceEvent::LptPick {
+                            key: pool[best].2.key(),
+                            predicted: pool[best].0,
+                            pool_depth: pool.len(),
+                        });
+                    }
                     let (_, _, t) = pool.swap_remove(best);
-                    ready_tx.send(t).map_err(|_| {
-                        Error::Workflow("executor hung up".into())
-                    })?;
+                    self.send_traced(&ready_tx, t)?;
                     in_flight += 1;
                 }
 
@@ -484,8 +530,12 @@ impl<'a> WorkflowScheduler<'a> {
                     && open.len() >= window
                     && window < WINDOW_MAX
                 {
+                    let from = window;
                     window_floor = (window * 2).min(WINDOW_MAX);
                     window = window_floor;
+                    if let Some(tr) = &self.trace {
+                        tr.emit(&TraceEvent::WindowGrow { from, to: window });
+                    }
                     continue;
                 }
 
@@ -495,9 +545,7 @@ impl<'a> WorkflowScheduler<'a> {
                 while i < retry_queue.len() {
                     if retry_queue[i].due <= now {
                         let p = retry_queue.swap_remove(i);
-                        ready_tx.send(p.task).map_err(|_| {
-                            Error::Workflow("executor hung up".into())
-                        })?;
+                        self.send_traced(&ready_tx, p.task)?;
                         in_flight += 1;
                     } else {
                         i += 1;
@@ -556,7 +604,17 @@ impl<'a> WorkflowScheduler<'a> {
                             (dur_m2 / (dur_n - 1) as f64).sqrt() / dur_mean;
                         let target = ((workers as f64) * (2.0 + 4.0 * cv))
                             .ceil() as usize;
-                        window = target.clamp(window_floor, WINDOW_MAX);
+                        let resized = target.clamp(window_floor, WINDOW_MAX);
+                        if resized != window {
+                            if let Some(tr) = &self.trace {
+                                tr.emit(&TraceEvent::WindowResize {
+                                    from: window,
+                                    to: resized,
+                                    cov: cv,
+                                });
+                            }
+                        }
+                        window = resized;
                     }
                 }
                 let o = open.get_mut(&task.instance).ok_or_else(|| {
@@ -612,7 +670,32 @@ impl<'a> WorkflowScheduler<'a> {
                         error: result.error.clone(),
                         worker: result.worker.clone(),
                         stdout: result.stdout.clone(),
+                        stdout_truncated: result.stdout_truncated,
                         run: self.run_id,
+                    });
+                }
+                if let Some(tr) = &self.trace {
+                    if result.class == Some(ErrorClass::Timeout) {
+                        tr.emit(&TraceEvent::TimeoutKill {
+                            key: task.key(),
+                            limit: task.timeout.unwrap_or(result.duration),
+                        });
+                    }
+                    // Span stamps come from the *trace* clock (scripted
+                    // replays advance it by simulated durations), so
+                    // hermetic journals are byte-deterministic.
+                    let t_end = tr.now();
+                    tr.emit(&TraceEvent::Complete {
+                        key: task.key(),
+                        task_id: task.task_id.clone(),
+                        instance: task.instance,
+                        worker: result.worker.clone(),
+                        attempt,
+                        ok: result.ok,
+                        duration: result.duration,
+                        start: (t_end - result.duration).max(0.0),
+                        end: t_end,
+                        class: result.class,
                     });
                 }
 
@@ -620,10 +703,16 @@ impl<'a> WorkflowScheduler<'a> {
                     // Non-terminal: the task keeps its window slot and
                     // goes back to the executor after its backoff.
                     let delay = backoff_delay(self.backoff_ms, attempt);
+                    if let Some(tr) = &self.trace {
+                        tr.emit(&TraceEvent::Retry {
+                            key: task.key(),
+                            attempt,
+                            backoff_ms: delay.as_millis() as u64,
+                            class: result.class,
+                        });
+                    }
                     if delay.is_zero() {
-                        ready_tx.send(task).map_err(|_| {
-                            Error::Workflow("executor hung up".into())
-                        })?;
+                        self.send_traced(&ready_tx, task)?;
                         in_flight += 1;
                     } else {
                         retry_queue.push(PendingRetry {
@@ -661,9 +750,7 @@ impl<'a> WorkflowScheduler<'a> {
                             pool.push((self.predicted(&t), seq, t));
                             seq += 1;
                         } else {
-                            ready_tx.send(t).map_err(|_| {
-                                Error::Workflow("executor hung up".into())
-                            })?;
+                            self.send_traced(&ready_tx, t)?;
                             in_flight += 1;
                         }
                     }
@@ -688,6 +775,7 @@ impl<'a> WorkflowScheduler<'a> {
                 peak_open: tally.peak_open,
                 makespan: self.profiler.makespan(),
                 utilization: self.profiler.utilization(),
+                epoch_unix: self.profiler.epoch_unix(),
                 workers: self.profiler.worker_utilization(),
                 records: self.profiler.snapshot(),
             })

@@ -1,0 +1,184 @@
+//! Golden end-to-end tests of the run tracing layer — hermetic: every
+//! task execution is a [`ScriptedExecutor`] replay, and the trace sink
+//! reads time from a [`ScriptedClock`] shared with the script (advanced
+//! by each attempt's simulated duration), so two replays of the same
+//! study produce **byte-identical** trace journals. The Chrome export
+//! is validated structurally (balanced `B`/`E` spans, scheduler
+//! instants on tid 0) — the shape `chrome://tracing` / Perfetto
+//! require.
+
+use papas::exec::{Script, ScriptedExecutor};
+use papas::json::Json;
+use papas::obs::{self, ScriptedClock, WatchState};
+use papas::study::Study;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// The WDL `trace:` key turns tracing on without any CLI flag.
+const YAML: &str = "job:\n  command: work ${x}\n  x: [0, 1, 2]\n  \
+                    trace: true\n";
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("papas_obs_trace").join(tag);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn study(tag: &str, yaml: &str) -> Study {
+    let dir = tmp(tag);
+    let path = dir.join("study.yaml");
+    std::fs::write(&path, yaml).unwrap();
+    Study::from_file(&path).unwrap().with_db_root(dir.join(".papas"))
+}
+
+/// One hermetic traced run: fresh db, fresh scripted clock shared
+/// between the executor and the trace sink, one worker (the serial
+/// timeline). Returns the study and the journal's raw bytes.
+fn traced_replay(tag: &str) -> (Study, Vec<u8>) {
+    let study = study(tag, YAML);
+    assert!(study.trace, "WDL trace: true must enable tracing");
+    let clock = Arc::new(ScriptedClock::new());
+    let script = Script::new()
+        .duration_on("job#0", 2.0)
+        .duration_on("job#1", 0.5)
+        .duration_on("job#2", 1.25)
+        .with_clock(clock.clone());
+    let study = study.with_trace_clock(clock);
+    let exec = ScriptedExecutor::new(Arc::new(script), 1);
+    let report = study.run_with(&exec).unwrap();
+    assert_eq!(report.completed, 3);
+    let bytes = std::fs::read(obs::trace_path(&study.db_root, 0)).unwrap();
+    (study, bytes)
+}
+
+#[test]
+fn two_replays_produce_byte_identical_journals() {
+    let (_a, bytes_a) = traced_replay("replay_a");
+    let (_b, bytes_b) = traced_replay("replay_b");
+    assert!(!bytes_a.is_empty());
+    assert_eq!(
+        bytes_a, bytes_b,
+        "two hermetic replays must journal byte-identically"
+    );
+    let text = String::from_utf8(bytes_a).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines[0].contains("\"ev\":\"header\""), "{}", lines[0]);
+    assert!(
+        lines.last().unwrap().contains("\"ev\":\"run_end\""),
+        "{}",
+        lines.last().unwrap()
+    );
+}
+
+#[test]
+fn traced_run_exports_chrome_and_folds_metrics() {
+    let (study, _bytes) = traced_replay("export");
+    let events =
+        obs::read_trace(&obs::trace_path(&study.db_root, 0)).unwrap();
+    assert_eq!(events[0].expect_str("ev").unwrap(), "header");
+    assert_eq!(events[0].expect_i64("workers").unwrap(), 1);
+    // scripted clocks have no wall anchor — replays stay deterministic
+    assert_eq!(
+        events[0].get("epoch_unix").and_then(Json::as_f64),
+        Some(0.0)
+    );
+
+    // Chrome export: balanced B/E spans, scheduler instants on tid 0.
+    let chrome = obs::export::to_chrome(&events);
+    let tev = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut open = 0i64;
+    let mut spans = 0usize;
+    for e in tev {
+        match e.expect_str("ph").unwrap() {
+            "B" => {
+                open += 1;
+                spans += 1;
+            }
+            "E" => open -= 1,
+            "i" => {
+                assert_eq!(e.expect_i64("tid").unwrap(), 0);
+                assert_eq!(e.expect_str("s").unwrap(), "t");
+            }
+            "M" => assert_eq!(e.expect_str("name").unwrap(), "thread_name"),
+            other => panic!("unexpected phase {other}"),
+        }
+        assert!(open >= 0, "E before matching B");
+    }
+    assert_eq!(open, 0, "unbalanced B/E spans");
+    assert_eq!(spans, 3, "one span per completed task");
+
+    // report.json carries the wall anchor and the folded metrics.
+    let report: Json = papas::json::parse(
+        &std::fs::read_to_string(study.db_root.join("report.json")).unwrap(),
+    )
+    .unwrap();
+    assert!(report.get("epoch_unix").and_then(Json::as_f64).is_some());
+    let counters = report.get("metrics").unwrap().get("counters").unwrap();
+    assert_eq!(counters.get("tasks_ok").and_then(Json::as_i64), Some(3));
+    assert_eq!(
+        counters.get("tasks_dispatched").and_then(Json::as_i64),
+        Some(3)
+    );
+    let hists = report.get("metrics").unwrap().get("histograms").unwrap();
+    let dur = hists.get("task_duration_s").unwrap();
+    assert_eq!(dur.get("n").and_then(Json::as_i64), Some(3));
+    assert_eq!(dur.get("sum").and_then(Json::as_f64), Some(3.75));
+
+    // `papas watch` folds the same journal to a finished state.
+    let mut w = WatchState::default();
+    for e in &events {
+        w.ingest(e);
+    }
+    assert!(w.ended);
+    assert_eq!(w.ok, 3);
+    assert_eq!(w.in_flight(), 0);
+    assert!((w.last_ts - 3.75).abs() < 1e-9, "last_ts={}", w.last_ts);
+    assert!(w.render().contains("(done)"), "{}", w.render());
+
+    // the ASCII summary names the study and draws the timeline
+    let summary = obs::export::render_summary(&events, 80);
+    assert!(summary.contains("run 0"), "{summary}");
+    assert!(summary.contains("complete=3"), "{summary}");
+}
+
+#[test]
+fn untraced_runs_write_no_journal_and_no_metrics() {
+    let study = study(
+        "untraced",
+        "job:\n  command: work ${x}\n  x: [0, 1]\n",
+    );
+    assert!(!study.trace);
+    let exec = ScriptedExecutor::new(Arc::new(Script::new()), 1);
+    let report = study.run_with(&exec).unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(obs::latest_trace_run(&study.db_root), None);
+    let report_json: Json = papas::json::parse(
+        &std::fs::read_to_string(study.db_root.join("report.json")).unwrap(),
+    )
+    .unwrap();
+    assert!(report_json.get("metrics").is_none());
+    // the wall anchor rides along even when untraced
+    assert!(report_json.get("epoch_unix").and_then(Json::as_f64).is_some());
+}
+
+#[test]
+fn trace_builder_journals_runs_under_successive_ids() {
+    let study = study(
+        "flag",
+        "job:\n  command: work ${x}\n  x: [0, 1]\n",
+    )
+    .with_trace(true);
+    let exec = ScriptedExecutor::new(Arc::new(Script::new()), 2);
+    study.run_with(&exec).unwrap();
+    assert_eq!(obs::latest_trace_run(&study.db_root), Some(0));
+    let events =
+        obs::read_trace(&obs::trace_path(&study.db_root, 0)).unwrap();
+    // live runs anchor the trace epoch to wall-clock time
+    let anchor = events[0].get("epoch_unix").and_then(Json::as_f64);
+    assert!(anchor.unwrap_or(0.0) > 0.0, "{anchor:?}");
+    assert_eq!(events.last().unwrap().expect_str("ev").unwrap(), "run_end");
+    // a second execution journals under the next run id
+    study.run_with(&exec).unwrap();
+    assert_eq!(obs::latest_trace_run(&study.db_root), Some(1));
+}
