@@ -82,6 +82,10 @@ fn synth_table(reps: usize) -> (Space, Schema, ResultTable) {
                 MetricValue::Num(1.0),
                 MetricValue::Num(0.0),
                 MetricValue::Str("ok".into()),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
                 score,
                 tag,
             ],

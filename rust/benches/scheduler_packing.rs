@@ -106,6 +106,10 @@ fn fitted_model(space: &Space, durs: &BTreeMap<u64, f64>) -> CostModel {
                 MetricValue::Num(1.0),
                 MetricValue::Num(0.0),
                 MetricValue::Str("ok".into()),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
             ],
         });
     }
@@ -147,6 +151,10 @@ impl Executor for VirtualCluster {
                 class: None,
                 duration,
                 worker: "v0".into(),
+                cpu_secs: 0.0,
+                max_rss_kb: 0,
+                io_read_bytes: 0,
+                io_write_bytes: 0,
             };
             if done.send((task, result)).is_err() {
                 break;

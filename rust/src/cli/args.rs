@@ -49,6 +49,8 @@ pub enum ParsedCommand {
     Search(Args),
     /// `papas synth ...` (seeded synthetic-study generator / replayer)
     Synth(Args),
+    /// `papas doctor ...` (critical-path / bottleneck diagnosis)
+    Doctor(Args),
     /// `papas trace ...` (inspect/export a run's trace journal)
     Trace(Args),
     /// `papas watch ...` (live progress from a run's trace journal)
@@ -88,6 +90,7 @@ impl Args {
             "report" => Ok(ParsedCommand::Report(rest)),
             "search" => Ok(ParsedCommand::Search(rest)),
             "synth" => Ok(ParsedCommand::Synth(rest)),
+            "doctor" => Ok(ParsedCommand::Doctor(rest)),
             "trace" => Ok(ParsedCommand::Trace(rest)),
             "watch" => Ok(ParsedCommand::Watch(rest)),
             "help" | "--help" | "-h" => Ok(ParsedCommand::Help),
@@ -188,6 +191,10 @@ mod tests {
             ParsedCommand::Trace(_)
         ));
         assert!(matches!(
+            Args::parse(&sv(&["doctor", "s"])).unwrap(),
+            ParsedCommand::Doctor(_)
+        ));
+        assert!(matches!(
             Args::parse(&sv(&["watch", "s"])).unwrap(),
             ParsedCommand::Watch(_)
         ));
@@ -217,6 +224,28 @@ mod tests {
             panic!()
         };
         assert!(w.has_flag("once"));
+    }
+
+    #[test]
+    fn doctor_and_serve_flags_parse() {
+        let ParsedCommand::Doctor(a) = Args::parse(&sv(&[
+            "doctor", ".papas/s", "--run", "2", "--format", "json",
+            "--mem-budget", "1048576",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.opt_num::<u32>("run", 0).unwrap(), 2);
+        assert_eq!(a.opt_or("format", "text"), "json");
+        assert_eq!(a.opt_num::<f64>("mem-budget", 0.0).unwrap(), 1048576.0);
+        let ParsedCommand::Status(s) = Args::parse(&sv(&[
+            "status", ".papas/s", "--serve", "127.0.0.1:9090", "--once",
+        ]))
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(s.opt_or("serve", ""), "127.0.0.1:9090");
+        assert!(s.has_flag("once"));
     }
 
     #[test]

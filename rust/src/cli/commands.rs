@@ -47,7 +47,14 @@ USAGE:
                   [--complete-only]
   papas dax STUDY.yaml [--instance N]       Pegasus DAX export (§9)
   papas status [DB-DIR] [--gantt] [--format text|json]
-                                            inspect a study database
+               [--serve ADDR [--once]]      inspect a study database;
+                                            --serve binds a tiny HTTP
+                                            endpoint: GET /metrics is the
+                                            newest trace journal folded to
+                                            Prometheus text exposition,
+                                            GET /status the JSON summary
+                                            (--once answers one request
+                                            and exits — smoke tests)
   papas harvest STUDY.yaml [--db DIR] [--compact]
                                             backfill typed results from
                                             attempts.jsonl + workdirs;
@@ -90,6 +97,17 @@ USAGE:
                                             live one-line progress from the
                                             newest trace journal (Ctrl-C or
                                             run_end to stop)
+  papas doctor STUDY.yaml [--db DIR] [--run ID] [--format text|json]
+               [--mem-budget KB]            diagnose a traced run: per-
+                                            instance critical paths + slack,
+                                            worker-seconds attributed to
+                                            critical/off-critical compute,
+                                            retry waste, scheduler overhead
+                                            and idle, and a what-if table
+                                            (task 2x faster => makespan);
+                                            --mem-budget warns when a full
+                                            window of the hungriest task
+                                            (mean sampled RSS) would not fit
   papas help";
 
 fn load_study(a: &Args) -> Result<Study> {
@@ -401,27 +419,17 @@ fn resolve_db(a: &Args) -> PathBuf {
     }
 }
 
-/// `papas status` — inspect a study's file database (monitoring view).
-/// `--format json` emits the same summary as one machine-readable JSON
-/// document (CI gates, external dashboards).
-pub fn cmd_status(a: &Args) -> Result<()> {
+/// The `papas status --format json` summary document, recomputed from
+/// the study database on every call (so the `--serve` `/status` route
+/// always reflects current state).
+fn status_json(db: &std::path::Path) -> Result<crate::json::Json> {
     use crate::json::Json;
-    let db = resolve_db(a);
-    let as_json = match a.opt_or("format", "text").as_str() {
-        "text" => false,
-        "json" => true,
-        other => {
-            return Err(Error::Exec(format!(
-                "unknown --format '{other}' (text|json)"
-            )))
-        }
-    };
-    let filedb = crate::study::FileDb::open(&db)?;
+    let filedb = crate::study::FileDb::open(db)?;
     let snap = filedb.load_study_snapshot().map_err(|_| {
         Error::Store(format!("no study database under {}", db.display()))
     })?;
-    let ckpt = crate::study::Checkpoint::load(&db)?;
-    let prov = crate::workflow::provenance::Provenance::open(&db)?;
+    let ckpt = crate::study::Checkpoint::load(db)?;
+    let prov = crate::workflow::provenance::Provenance::open(db)?;
     let attempts = prov.read_attempts()?;
     let retries = attempts.iter().filter(|a| a.attempt > 1).count();
     let mut by_class: std::collections::BTreeMap<&str, usize> =
@@ -440,9 +448,7 @@ pub fn cmd_status(a: &Args) -> Result<()> {
     } else {
         None
     };
-
-    if as_json {
-        let j = Json::obj([
+    Ok(Json::obj([
             ("name".to_string(), snap.expect("name")?.clone()),
             (
                 "n_combinations".to_string(),
@@ -489,17 +495,67 @@ pub fn cmd_status(a: &Args) -> Result<()> {
             ),
             (
                 "results".to_string(),
-                match crate::results::store::stored_row_count(&db) {
+                match crate::results::store::stored_row_count(db) {
                     Some(n) => {
                         Json::obj([("rows".to_string(), Json::from(n))])
                     }
                     None => Json::Null,
                 },
             ),
-        ]);
-        println!("{}", crate::json::to_string_pretty(&j));
+        ]))
+}
+
+/// `papas status` — inspect a study's file database (monitoring view).
+/// `--format json` emits the same summary as one machine-readable JSON
+/// document (CI gates, external dashboards); `--serve ADDR` exports it
+/// over HTTP alongside a Prometheus `/metrics` endpoint.
+pub fn cmd_status(a: &Args) -> Result<()> {
+    use crate::json::Json;
+    let db = resolve_db(a);
+    if let Some(addr) = a.options.get("serve") {
+        return serve_status(&db, addr, a.has_flag("once"));
+    }
+    let as_json = match a.opt_or("format", "text").as_str() {
+        "text" => false,
+        "json" => true,
+        other => {
+            return Err(Error::Exec(format!(
+                "unknown --format '{other}' (text|json)"
+            )))
+        }
+    };
+    if as_json {
+        println!(
+            "{}",
+            crate::json::to_string_pretty(&status_json(&db)?)
+        );
         return Ok(());
     }
+
+    let filedb = crate::study::FileDb::open(&db)?;
+    let snap = filedb.load_study_snapshot().map_err(|_| {
+        Error::Store(format!("no study database under {}", db.display()))
+    })?;
+    let ckpt = crate::study::Checkpoint::load(&db)?;
+    let prov = crate::workflow::provenance::Provenance::open(&db)?;
+    let attempts = prov.read_attempts()?;
+    let retries = attempts.iter().filter(|a| a.attempt > 1).count();
+    let mut by_class: std::collections::BTreeMap<&str, usize> =
+        std::collections::BTreeMap::new();
+    for at in &attempts {
+        if let Some(c) = at.class {
+            *by_class.entry(c.label()).or_insert(0) += 1;
+        }
+    }
+    let records = prov.read_records()?;
+    let records_ok = records.iter().filter(|r| r.ok).count();
+    let last_run: Option<Json> = if db.join("report.json").exists() {
+        Some(crate::json::parse(&std::fs::read_to_string(
+            db.join("report.json"),
+        )?)?)
+    } else {
+        None
+    };
 
     println!(
         "study '{}': {} combinations, {} selected",
@@ -569,6 +625,47 @@ pub fn cmd_status(a: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `papas status --serve ADDR`: bind a plain TCP listener and answer
+/// `GET /metrics` (the newest trace journal folded into Prometheus
+/// text exposition on every scrape) and `GET /status` (the JSON
+/// summary). `once` answers a single request and returns.
+fn serve_status(
+    db: &std::path::Path,
+    addr: &str,
+    once: bool,
+) -> Result<()> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| Error::Exec(format!("--serve {addr}: {e}")))?;
+    println!(
+        "serving http://{} (GET /metrics, GET /status){}",
+        listener.local_addr()?,
+        if once { " — one request" } else { "" }
+    );
+    let metrics_db = db.to_path_buf();
+    let metrics = move || {
+        let m = crate::obs::latest_trace_run(&metrics_db)
+            .and_then(|run| {
+                crate::obs::read_trace(&crate::obs::trace_path(
+                    &metrics_db,
+                    run,
+                ))
+                .ok()
+            })
+            .map(|events| crate::obs::fold_trace(&events))
+            .unwrap_or_default();
+        crate::obs::render_prometheus(&m)
+    };
+    let status_db = db.to_path_buf();
+    let status = move || match status_json(&status_db) {
+        Ok(j) => crate::json::to_string_pretty(&j),
+        Err(e) => crate::json::to_string(&crate::json::Json::obj([(
+            "error".to_string(),
+            crate::json::Json::from(e.to_string().as_str()),
+        )])),
+    };
+    crate::obs::serve::serve(listener, once, &metrics, &status)
 }
 
 /// `papas aggregate` — the §9 output-aggregation extension.
@@ -984,6 +1081,61 @@ pub fn cmd_trace(a: &Args) -> Result<()> {
             println!("wrote {out} ({} events)", events.len());
         }
         None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
+/// `papas doctor` — diagnose a traced run: per-instance critical paths,
+/// run-level bottleneck attribution, and a what-if speedup table, all
+/// folded from the trace journal against the compiled task DAG.
+pub fn cmd_doctor(a: &Args) -> Result<()> {
+    let study = load_study_opts(a, false)?;
+    let db = study.db_root.clone();
+    let run = pick_trace_run(a, &db)?;
+    let path = crate::obs::trace_path(&db, run);
+    let events = crate::obs::read_trace(&path)?;
+    if events.is_empty() {
+        return Err(Error::Store(format!(
+            "trace journal {} holds no events",
+            path.display()
+        )));
+    }
+    // Task ids and `after:` edges are fixed by the spec, so instance
+    // 0's DAG is representative of every instance in the study.
+    let dag = study.instance_at_naive(0)?.dag;
+    let mut diag = crate::obs::diagnose(&events, &dag);
+    if a.options.contains_key("mem-budget") {
+        let budget = a.opt_num::<f64>("mem-budget", 0.0)?;
+        if !(budget > 0.0) {
+            return Err(Error::Exec(format!(
+                "--mem-budget must be a positive KiB figure, got \
+                 '{budget}'"
+            )));
+        }
+        let (_, table) = load_results(&study)?;
+        let model = crate::workflow::CostModel::from_table(&table);
+        let ids: Vec<String> = (0..dag.len())
+            .map(|i| dag.name(i).to_string())
+            .collect();
+        if let Some(w) = crate::obs::critical::check_mem_budget(
+            &model,
+            &ids,
+            diag.workers,
+            budget,
+        ) {
+            diag.warnings.push(w);
+        }
+    }
+    match a.opt_or("format", "text").as_str() {
+        "text" => print!("{}", diag.render_text()),
+        "json" => {
+            println!("{}", crate::json::to_string_pretty(&diag.to_json()))
+        }
+        other => {
+            return Err(Error::Exec(format!(
+                "unknown --format '{other}' (text|json)"
+            )))
+        }
     }
     Ok(())
 }

@@ -18,6 +18,8 @@
 //! papas synth [--seed S] [--count N] [--replay]     # synthetic studies
 //! papas trace STUDY [--run ID] [--export chrome|csv|summary]
 //! papas watch STUDY [--interval S] [--once]         # live trace tail
+//! papas doctor STUDY [--run ID] [--format text|json] [--mem-budget KB]
+//! papas status STUDY [--serve ADDR [--once]]        # /metrics + /status
 //! ```
 
 pub mod args;
@@ -56,6 +58,7 @@ fn run(argv: &[String]) -> Result<()> {
         ParsedCommand::Report(a) => commands::cmd_report(&a),
         ParsedCommand::Search(a) => commands::cmd_search(&a),
         ParsedCommand::Synth(a) => commands::cmd_synth(&a),
+        ParsedCommand::Doctor(a) => commands::cmd_doctor(&a),
         ParsedCommand::Trace(a) => commands::cmd_trace(&a),
         ParsedCommand::Watch(a) => commands::cmd_watch(&a),
         ParsedCommand::Help => {

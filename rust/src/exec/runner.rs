@@ -57,6 +57,17 @@ pub struct TaskResult {
     /// True when `stdout` was cut at the capture cap (~4 KiB) — the
     /// provenance record is a prefix, not the full output.
     pub stdout_truncated: bool,
+    /// User + system CPU seconds sampled from `/proc/<pid>/stat`. All
+    /// four resource fields are best-effort telemetry: populated by the
+    /// timeout poll loop on Linux, 0 off-Linux, on sampling failure, on
+    /// the blocking no-timeout path, and for in-process builtins.
+    pub cpu_secs: f64,
+    /// Peak resident set (KiB) sampled from `/proc/<pid>/statm`.
+    pub max_rss_kb: u64,
+    /// Storage-layer bytes read, from `/proc/<pid>/io`.
+    pub io_read_bytes: u64,
+    /// Storage-layer bytes written, from `/proc/<pid>/io`.
+    pub io_write_bytes: u64,
 }
 
 impl TaskResult {
@@ -74,7 +85,18 @@ impl TaskResult {
             duration,
             worker: String::new(),
             stdout_truncated: false,
+            cpu_secs: 0.0,
+            max_rss_kb: 0,
+            io_read_bytes: 0,
+            io_write_bytes: 0,
         }
+    }
+
+    pub(crate) fn set_resources(&mut self, u: crate::obs::ResourceUsage) {
+        self.cpu_secs = u.cpu_secs;
+        self.max_rss_kb = u.max_rss_kb;
+        self.io_read_bytes = u.io_read_bytes;
+        self.io_write_bytes = u.io_write_bytes;
     }
 }
 
@@ -135,6 +157,10 @@ impl TaskRunner {
                     duration: sw.elapsed_secs(),
                     worker: String::new(),
                     stdout_truncated: false,
+                    cpu_secs: 0.0,
+                    max_rss_kb: 0,
+                    io_read_bytes: 0,
+                    io_write_bytes: 0,
                 }),
                 Err(e) => Ok(TaskResult::failure(
                     e.to_string(),
@@ -227,12 +253,17 @@ impl TaskRunner {
             buf
         });
 
+        // Resource telemetry rides on the poll loop: one /proc sample
+        // per wakeup, with the final read taken just before the reap.
+        // Off-Linux the sampler is a permanent no-op (see obs::telemetry).
+        let mut sampler = crate::obs::ResourceSampler::attach(child.id());
         let deadline = Instant::now() + Duration::from_secs_f64(limit.max(0.0));
         let mut poll = Duration::from_micros(200);
         let status = loop {
             match child.try_wait() {
                 Ok(Some(st)) => break Some(st),
                 Ok(None) => {
+                    sampler.sample();
                     if Instant::now() >= deadline {
                         break None;
                     }
@@ -254,6 +285,7 @@ impl TaskRunner {
                 }
             }
         };
+        let usage = sampler.finish();
         if status.is_none() {
             // Timeout: kill, then wait() to reap — no zombie survives.
             let _ = child.kill();
@@ -263,7 +295,11 @@ impl TaskRunner {
         let stderr = err_h.join().unwrap_or_default();
         let duration = sw.elapsed_secs();
         match status {
-            Some(st) => Ok(classify_exit(st, &stdout, &stderr, duration)),
+            Some(st) => {
+                let mut r = classify_exit(st, &stdout, &stderr, duration);
+                r.set_resources(usage);
+                Ok(r)
+            }
             None => {
                 let mut r = TaskResult::failure(
                     format!("timed out after {limit}s (killed + reaped)"),
@@ -271,6 +307,7 @@ impl TaskRunner {
                     ErrorClass::Timeout,
                 );
                 (r.stdout, r.stdout_truncated) = truncated(&stdout, 4096);
+                r.set_resources(usage);
                 Ok(r)
             }
         }
@@ -319,6 +356,10 @@ fn classify_exit(
             duration,
             worker: String::new(),
             stdout_truncated,
+            cpu_secs: 0.0,
+            max_rss_kb: 0,
+            io_read_bytes: 0,
+            io_write_bytes: 0,
         };
     }
     let (err_tail, _) = truncated(stderr, 1024);
@@ -343,6 +384,10 @@ fn classify_exit(
         duration,
         worker: String::new(),
         stdout_truncated,
+        cpu_secs: 0.0,
+        max_rss_kb: 0,
+        io_read_bytes: 0,
+        io_write_bytes: 0,
     }
 }
 
@@ -505,6 +550,24 @@ mod tests {
         assert_eq!(res.exit_code, 7);
         assert_eq!(res.class, Some(ErrorClass::NonZero));
         assert!(res.error.as_deref().unwrap().contains("oops"));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn deadline_path_samples_proc_resources() {
+        let root = tmp("telemetry");
+        let r = runner(&root);
+        // long enough for several poll-loop samples, far under the limit
+        let mut t = task(&["/bin/sh", "-c", "sleep 0.05"]);
+        t.timeout = Some(10.0);
+        let res = r.run(&t);
+        assert!(res.ok, "{res:?}");
+        assert!(res.max_rss_kb > 0, "no RSS sampled: {res:?}");
+        // blocking path (no timeout) takes no samples — fields stay 0
+        let res = r.run(&task(&["/bin/sh", "-c", "true"]));
+        assert!(res.ok);
+        assert_eq!(res.max_rss_kb, 0);
+        assert_eq!(res.cpu_secs, 0.0);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 use super::local::LocalPool;
 use super::runner::TaskResult;
 use super::{Completion, ErrorClass, Executor, TaskExec};
-use crate::obs::{Clock, ScriptedClock};
+use crate::obs::{Clock, ResourceUsage, ScriptedClock};
 use crate::util::error::Result;
 use crate::workflow::ConcreteTask;
 use std::collections::BTreeMap;
@@ -59,6 +59,9 @@ pub struct Script {
     /// outcomes) — a heterogeneous synthetic duration landscape for the
     /// packing bench and cost-model tests.
     durations: BTreeMap<String, f64>,
+    /// Scripted per-attempt resource telemetry (same key/task precedence;
+    /// default all-zero) — hermetic stand-in for the /proc sampler.
+    resources: BTreeMap<String, ResourceUsage>,
     /// Logical trace clock advanced by each attempt's simulated
     /// duration — with one worker this yields the exact serial
     /// timeline, making traced replays byte-deterministic.
@@ -82,6 +85,7 @@ impl Script {
             stdouts: BTreeMap::new(),
             sim_duration: 0.001,
             durations: BTreeMap::new(),
+            resources: BTreeMap::new(),
             clock: None,
             counts: Mutex::new(BTreeMap::new()),
             journal: Mutex::new(Vec::new()),
@@ -123,6 +127,25 @@ impl Script {
     /// tasks — still never slept, only reported.
     pub fn duration_on(mut self, key: impl Into<String>, secs: f64) -> Script {
         self.durations.insert(key.into(), secs);
+        self
+    }
+
+    /// Scripted resource telemetry for `key` (full `task_id#instance`
+    /// or bare `task_id`): `cpu_secs`, `max_rss_kb`, `io_read_bytes`,
+    /// `io_write_bytes` reported on every matching attempt — the
+    /// deterministic stand-in for the runner's /proc sampler.
+    pub fn with_resources(
+        mut self,
+        key: impl Into<String>,
+        cpu_secs: f64,
+        max_rss_kb: u64,
+        io_read_bytes: u64,
+        io_write_bytes: u64,
+    ) -> Script {
+        self.resources.insert(
+            key.into(),
+            ResourceUsage { cpu_secs, max_rss_kb, io_read_bytes, io_write_bytes },
+        );
         self
     }
 
@@ -173,6 +196,14 @@ impl Script {
             .unwrap_or(self.sim_duration)
     }
 
+    fn resources_for(&self, task: &ConcreteTask, key: &str) -> ResourceUsage {
+        self.resources
+            .get(key)
+            .or_else(|| self.resources.get(&task.task_id))
+            .copied()
+            .unwrap_or_default()
+    }
+
     fn ok_result(&self, duration: f64) -> TaskResult {
         TaskResult {
             ok: true,
@@ -183,6 +214,10 @@ impl Script {
             duration,
             worker: String::new(),
             stdout_truncated: false,
+            cpu_secs: 0.0,
+            max_rss_kb: 0,
+            io_read_bytes: 0,
+            io_write_bytes: 0,
         }
     }
 
@@ -202,6 +237,10 @@ impl Script {
             duration,
             worker: String::new(),
             stdout_truncated: false,
+            cpu_secs: 0.0,
+            max_rss_kb: 0,
+            io_read_bytes: 0,
+            io_write_bytes: 0,
         }
     }
 }
@@ -260,6 +299,7 @@ impl TaskExec for Script {
             ),
         };
         result.stdout = self.stdout_for(task, &key);
+        result.set_resources(self.resources_for(task, &key));
         if let Some(clock) = &self.clock {
             clock.advance(result.duration);
         }
@@ -378,6 +418,29 @@ mod tests {
             .default_outcome(Outcome::Fail(2))
             .duration_on("c", 3.25);
         assert_eq!(s.exec(&task("c", 0)).duration, 3.25);
+    }
+
+    #[test]
+    fn resource_precedence_key_then_task_then_zero() {
+        let s = Script::new()
+            .with_resources("a", 1.5, 4096, 100, 200)
+            .with_resources("a#1", 9.0, 65536, 7, 8);
+        let r = s.exec(&task("a", 0)); // task-level
+        assert_eq!(r.cpu_secs, 1.5);
+        assert_eq!(r.max_rss_kb, 4096);
+        assert_eq!((r.io_read_bytes, r.io_write_bytes), (100, 200));
+        let r = s.exec(&task("a", 1)); // key-level wins
+        assert_eq!(r.cpu_secs, 9.0);
+        assert_eq!(r.max_rss_kb, 65536);
+        let r = s.exec(&task("b", 0)); // unscripted → zeros
+        assert_eq!(r.cpu_secs, 0.0);
+        assert_eq!(r.max_rss_kb, 0);
+        // failures carry scripted resources too (a task can OOM-ish
+        // *and* fail)
+        let s = Script::new()
+            .default_outcome(Outcome::Fail(2))
+            .with_resources("c", 0.5, 123, 0, 0);
+        assert_eq!(s.exec(&task("c", 0)).max_rss_kb, 123);
     }
 
     #[test]

@@ -79,6 +79,10 @@ fn result_to_json(r: &TaskResult) -> Json {
         ("duration".to_string(), Json::Num(r.duration)),
         ("worker".to_string(), Json::from(r.worker.as_str())),
         ("stdout_truncated".to_string(), Json::from(r.stdout_truncated)),
+        ("cpu_secs".to_string(), Json::Num(r.cpu_secs)),
+        ("max_rss_kb".to_string(), Json::from(r.max_rss_kb as i64)),
+        ("io_read_bytes".to_string(), Json::from(r.io_read_bytes as i64)),
+        ("io_write_bytes".to_string(), Json::from(r.io_write_bytes as i64)),
     ])
 }
 
@@ -94,11 +98,22 @@ fn result_from_json(j: &Json) -> Result<TaskResult> {
             .and_then(crate::exec::ErrorClass::parse),
         duration: j.expect("duration")?.as_f64().unwrap_or(0.0),
         worker: j.expect_str("worker")?.to_string(),
-        // Tolerant default: frames from pre-flag daemons lack the field.
+        // Tolerant defaults: frames from pre-upgrade daemons lack these.
         stdout_truncated: j
             .get("stdout_truncated")
             .and_then(Json::as_bool)
             .unwrap_or(false),
+        cpu_secs: j.get("cpu_secs").and_then(Json::as_f64).unwrap_or(0.0),
+        max_rss_kb: j.get("max_rss_kb").and_then(Json::as_i64).unwrap_or(0)
+            as u64,
+        io_read_bytes: j
+            .get("io_read_bytes")
+            .and_then(Json::as_i64)
+            .unwrap_or(0) as u64,
+        io_write_bytes: j
+            .get("io_write_bytes")
+            .and_then(Json::as_i64)
+            .unwrap_or(0) as u64,
     })
 }
 
@@ -268,6 +283,10 @@ impl Executor for SshPool {
                             duration: 0.0,
                             worker: String::new(),
                             stdout_truncated: false,
+                            cpu_secs: 0.0,
+                            max_rss_kb: 0,
+                            io_read_bytes: 0,
+                            io_write_bytes: 0,
                         });
                         result.worker = host_label.clone();
                         if done.send((task, result)).is_err() {

@@ -1,0 +1,943 @@
+//! Critical-path analysis and bottleneck attribution (`papas doctor`).
+//!
+//! Folds a run's trace journal (untyped [`Json`] events from
+//! [`super::read_trace`]) together with the compiled task [`Dag`] into a
+//! [`Diagnosis`]:
+//!
+//! * **per-instance critical paths** — a forward/backward longest-path
+//!   pass over final-attempt durations yields the critical chain, its
+//!   length versus the instance's observed span, and per-task slack;
+//! * **run-level attribution** — the run's worker-seconds budget
+//!   (makespan × workers) partitioned *exactly* into five buckets:
+//!   critical-path compute, off-critical compute, retry/backoff waste,
+//!   scheduler overhead (workers idle while dispatched work waited),
+//!   and genuine idle (the remainder — no ready work existed);
+//! * **what-if table** — a greedy list-schedule replay (the
+//!   earliest-free-lane technique from the scheduler-packing bench,
+//!   extended with DAG readiness) re-run once per task with that task's
+//!   durations halved, answering "task X 2× faster ⇒ makespan −N%".
+//!
+//! Everything here is a pure function of the journal + DAG: two calls
+//! over the same inputs produce byte-identical `--format json` output,
+//! which the golden e2e test relies on.
+
+use crate::json::Json;
+use crate::workflow::{CostModel, Dag};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One parsed `complete` event (a single attempt).
+#[derive(Debug, Clone)]
+struct Attempt {
+    task: usize,
+    instance: u64,
+    attempt: i64,
+    ok: bool,
+    duration: f64,
+    start: f64,
+    end: f64,
+    cpu_secs: f64,
+    max_rss_kb: f64,
+}
+
+/// Critical-path report for one workflow instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceDiagnosis {
+    /// Workflow instance index.
+    pub instance: u64,
+    /// Observed span: latest attempt end − earliest attempt start.
+    pub span: f64,
+    /// Length of the critical path (sum of its final-attempt durations).
+    pub critical_len: f64,
+    /// Task ids along the critical path, in execution order.
+    pub critical_path: Vec<String>,
+    /// Per-task slack in seconds (0.0 for tasks on the critical path),
+    /// keyed by task id.
+    pub slack: BTreeMap<String, f64>,
+}
+
+/// Aggregate statistics for one task id across all instances.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDiagnosis {
+    /// Task id.
+    pub task_id: String,
+    /// Final attempts observed.
+    pub n: usize,
+    /// Total final-attempt seconds.
+    pub total_secs: f64,
+    /// Mean final-attempt seconds.
+    pub mean_secs: f64,
+    /// Instances whose critical path contains this task.
+    pub on_critical: usize,
+    /// Mean slack across analyzed instances.
+    pub mean_slack: f64,
+    /// Mean sampled CPU seconds (0.0 when unsampled).
+    pub mean_cpu_secs: f64,
+    /// Mean sampled peak RSS in KiB (0.0 when unsampled).
+    pub mean_rss_kb: f64,
+}
+
+/// The five-way exact partition of the run's worker-seconds budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Attribution {
+    /// Makespan × workers: every worker-second the run paid for.
+    pub total_worker_secs: f64,
+    /// Final-attempt compute on instance critical paths.
+    pub critical_compute: f64,
+    /// Final-attempt compute off the critical paths.
+    pub other_compute: f64,
+    /// Failed-attempt compute plus retry backoff sleeps.
+    pub retry_waste: f64,
+    /// Worker-seconds idle while dispatched work sat in the ready
+    /// queue (scheduler/executor starvation).
+    pub scheduler_overhead: f64,
+    /// The remainder: workers idle with no ready work (DAG barriers,
+    /// tail of the run). Defined as total − the other four buckets, so
+    /// the partition sums exactly.
+    pub idle: f64,
+}
+
+/// One row of the what-if table: the replayed makespan if `task_id`
+/// ran 2× faster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WhatIf {
+    /// Task id whose durations were halved.
+    pub task_id: String,
+    /// Replayed baseline makespan (observed durations).
+    pub baseline: f64,
+    /// Replayed makespan with the task 2× faster.
+    pub scaled: f64,
+    /// Improvement as a percentage of the baseline.
+    pub speedup_pct: f64,
+}
+
+/// The full `papas doctor` report.
+#[derive(Debug, Clone)]
+pub struct Diagnosis {
+    /// Provenance run id (from the journal header).
+    pub run: u32,
+    /// Study name (from the journal header).
+    pub study: String,
+    /// Executor worker count (from the journal header).
+    pub workers: usize,
+    /// Observed run makespan: the latest attempt end offset.
+    pub makespan: f64,
+    /// Worker-seconds partition.
+    pub attribution: Attribution,
+    /// Per-instance critical paths, sorted by instance index.
+    pub instances: Vec<InstanceDiagnosis>,
+    /// Per-task aggregates, sorted by task id.
+    pub tasks: Vec<TaskDiagnosis>,
+    /// What-if rows, best improvement first.
+    pub what_if: Vec<WhatIf>,
+    /// Advisory findings (e.g. memory-budget violations).
+    pub warnings: Vec<String>,
+}
+
+fn f(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn i(j: &Json, key: &str) -> i64 {
+    j.get(key).and_then(Json::as_i64).unwrap_or(0)
+}
+
+/// Diagnose one run: fold `events` (a journal read back via
+/// [`super::read_trace`]) against the study's compiled task `dag`.
+///
+/// The same task-level DAG is applied to every instance — task ids and
+/// `after:` edges are fixed by the study spec, so the shape is shared.
+pub fn diagnose(events: &[Json], dag: &Dag) -> Diagnosis {
+    let mut run = 0u32;
+    let mut study = String::new();
+    let mut workers = 1usize;
+    let mut attempts: Vec<Attempt> = Vec::new();
+    let mut dispatch_ts: Vec<f64> = Vec::new();
+    let mut dispatch_order: Vec<(usize, u64)> = Vec::new();
+    let mut dispatched_keys: BTreeSet<String> = BTreeSet::new();
+    let mut backoff_secs = 0.0f64;
+
+    for ev in events {
+        match ev.get("ev").and_then(Json::as_str).unwrap_or("") {
+            "header" => {
+                run = i(ev, "run") as u32;
+                study = ev
+                    .get("study")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                workers = (i(ev, "workers").max(1)) as usize;
+            }
+            "dispatch" => {
+                dispatch_ts.push(f(ev, "ts"));
+                let key =
+                    ev.get("key").and_then(Json::as_str).unwrap_or("");
+                if dispatched_keys.insert(key.to_string()) {
+                    let task_id = key.split('#').next().unwrap_or("");
+                    if let Some(t) = dag.index_of(task_id) {
+                        dispatch_order.push((t, i(ev, "instance") as u64));
+                    }
+                }
+            }
+            "complete" => {
+                let task_id =
+                    ev.get("task_id").and_then(Json::as_str).unwrap_or("");
+                let Some(task) = dag.index_of(task_id) else { continue };
+                attempts.push(Attempt {
+                    task,
+                    instance: i(ev, "instance") as u64,
+                    attempt: i(ev, "attempt"),
+                    ok: ev
+                        .get("ok")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                    duration: f(ev, "duration"),
+                    start: f(ev, "start"),
+                    end: f(ev, "end"),
+                    cpu_secs: f(ev, "cpu_secs"),
+                    max_rss_kb: i(ev, "max_rss_kb") as f64,
+                });
+            }
+            "retry" => backoff_secs += i(ev, "backoff_ms") as f64 / 1000.0,
+            _ => {}
+        }
+    }
+
+    let makespan =
+        attempts.iter().map(|a| a.end).fold(0.0f64, f64::max);
+
+    // Final attempt per (task, instance): highest attempt number wins.
+    let mut finals: BTreeMap<(usize, u64), &Attempt> = BTreeMap::new();
+    for a in &attempts {
+        let slot = finals.entry((a.task, a.instance)).or_insert(a);
+        if a.attempt > slot.attempt {
+            *slot = a;
+        }
+    }
+
+    let topo = dag.topo_order().unwrap_or_default();
+    let instance_ids: BTreeSet<u64> =
+        finals.keys().map(|&(_, inst)| inst).collect();
+    let mut instances: Vec<InstanceDiagnosis> = Vec::new();
+    let mut on_path: BTreeSet<(usize, u64)> = BTreeSet::new();
+    for &inst in &instance_ids {
+        let diag = diagnose_instance(dag, &topo, &finals, inst, &attempts);
+        for id in &diag.critical_path {
+            if let Some(t) = dag.index_of(id) {
+                on_path.insert((t, inst));
+            }
+        }
+        instances.push(diag);
+    }
+
+    // --- attribution -------------------------------------------------
+    let mut critical_compute = 0.0;
+    let mut other_compute = 0.0;
+    let mut retry_waste = backoff_secs;
+    for a in &attempts {
+        if !a.ok {
+            retry_waste += a.duration;
+        } else if on_path.contains(&(a.task, a.instance)) {
+            critical_compute += a.duration;
+        } else {
+            other_compute += a.duration;
+        }
+    }
+    let scheduler_overhead =
+        starvation_secs(&attempts, &dispatch_ts, workers, makespan);
+    let total_worker_secs = makespan * workers as f64;
+    let attribution = Attribution {
+        total_worker_secs,
+        critical_compute,
+        other_compute,
+        retry_waste,
+        scheduler_overhead,
+        idle: total_worker_secs
+            - critical_compute
+            - other_compute
+            - retry_waste
+            - scheduler_overhead,
+    };
+
+    // --- per-task aggregates -----------------------------------------
+    let mut tasks: Vec<TaskDiagnosis> = Vec::new();
+    for t in 0..dag.len() {
+        let mut n = 0usize;
+        let (mut total, mut cpu, mut rss) = (0.0f64, 0.0f64, 0.0f64);
+        let mut crit = 0usize;
+        for (&(task, inst), a) in &finals {
+            if task != t {
+                continue;
+            }
+            n += 1;
+            total += a.duration;
+            cpu += a.cpu_secs;
+            rss += a.max_rss_kb;
+            if on_path.contains(&(task, inst)) {
+                crit += 1;
+            }
+        }
+        let id = dag.name(t);
+        let (mut slack_sum, mut slack_n) = (0.0f64, 0usize);
+        for inst in &instances {
+            if let Some(s) = inst.slack.get(id) {
+                slack_sum += s;
+                slack_n += 1;
+            }
+        }
+        let denom = n.max(1) as f64;
+        tasks.push(TaskDiagnosis {
+            task_id: id.to_string(),
+            n,
+            total_secs: total,
+            mean_secs: total / denom,
+            on_critical: crit,
+            mean_slack: slack_sum / slack_n.max(1) as f64,
+            mean_cpu_secs: cpu / denom,
+            mean_rss_kb: rss / denom,
+        });
+    }
+    tasks.sort_by(|a, b| a.task_id.cmp(&b.task_id));
+
+    // --- what-if replay ----------------------------------------------
+    let durs: BTreeMap<(usize, u64), f64> =
+        finals.iter().map(|(&k, a)| (k, a.duration)).collect();
+    let baseline = replay(&dispatch_order, &durs, dag, workers, None);
+    let mut what_if: Vec<WhatIf> = Vec::new();
+    for t in 0..dag.len() {
+        let scaled = replay(&dispatch_order, &durs, dag, workers, Some(t));
+        let speedup_pct = if baseline > 0.0 {
+            (baseline - scaled) / baseline * 100.0
+        } else {
+            0.0
+        };
+        what_if.push(WhatIf {
+            task_id: dag.name(t).to_string(),
+            baseline,
+            scaled,
+            speedup_pct,
+        });
+    }
+    what_if.sort_by(|a, b| {
+        b.speedup_pct
+            .total_cmp(&a.speedup_pct)
+            .then_with(|| a.task_id.cmp(&b.task_id))
+    });
+
+    Diagnosis {
+        run,
+        study,
+        workers,
+        makespan,
+        attribution,
+        instances,
+        tasks,
+        what_if,
+        warnings: Vec::new(),
+    }
+}
+
+/// Longest-path (forward + backward) analysis of one instance.
+fn diagnose_instance(
+    dag: &Dag,
+    topo: &[usize],
+    finals: &BTreeMap<(usize, u64), &Attempt>,
+    inst: u64,
+    attempts: &[Attempt],
+) -> InstanceDiagnosis {
+    let n = dag.len();
+    let dur: Vec<f64> = (0..n)
+        .map(|t| finals.get(&(t, inst)).map_or(0.0, |a| a.duration))
+        .collect();
+    // forward: longest path ending at i (inclusive of i)
+    let mut fwd = vec![0.0f64; n];
+    for &t in topo {
+        let best = dag
+            .dependencies(t)
+            .iter()
+            .map(|&d| fwd[d])
+            .fold(0.0f64, f64::max);
+        fwd[t] = dur[t] + best;
+    }
+    // backward: longest path starting at i (inclusive of i)
+    let mut bwd = vec![0.0f64; n];
+    for &t in topo.iter().rev() {
+        let best = dag
+            .dependents(t)
+            .iter()
+            .map(|&d| bwd[d])
+            .fold(0.0f64, f64::max);
+        bwd[t] = dur[t] + best;
+    }
+    let critical_len = fwd.iter().copied().fold(0.0f64, f64::max);
+    // backtrack from the sink with the longest finishing path
+    // (smallest index wins ties, so the path is deterministic)
+    let mut path_rev: Vec<usize> = Vec::new();
+    let mut cur = (0..n).fold(0usize, |best, t| {
+        if fwd[t] > fwd[best] {
+            t
+        } else {
+            best
+        }
+    });
+    if n > 0 {
+        loop {
+            path_rev.push(cur);
+            let mut next: Option<usize> = None;
+            for &d in dag.dependencies(cur) {
+                if next.map_or(true, |b| fwd[d] > fwd[b]) {
+                    next = Some(d);
+                }
+            }
+            match next {
+                Some(d) => cur = d,
+                None => break,
+            }
+        }
+    }
+    let critical_path: Vec<String> = path_rev
+        .iter()
+        .rev()
+        .map(|&t| dag.name(t).to_string())
+        .collect();
+    let slack: BTreeMap<String, f64> = (0..n)
+        .map(|t| {
+            let s = critical_len - (fwd[t] + bwd[t] - dur[t]);
+            let s = if s < 1e-9 { 0.0 } else { s };
+            (dag.name(t).to_string(), s)
+        })
+        .collect();
+    let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+    for a in attempts.iter().filter(|a| a.instance == inst) {
+        lo = lo.min(a.start);
+        hi = hi.max(a.end);
+    }
+    InstanceDiagnosis {
+        instance: inst,
+        span: if lo.is_finite() { hi - lo } else { 0.0 },
+        critical_len,
+        critical_path,
+        slack,
+    }
+}
+
+/// Worker-seconds idle while dispatched work waited in the ready queue:
+/// ∫ min(idle_workers(t), ready_depth(t)) dt over [0, makespan], swept
+/// over the journal's dispatch/start/end breakpoints.
+fn starvation_secs(
+    attempts: &[Attempt],
+    dispatch_ts: &[f64],
+    workers: usize,
+    makespan: f64,
+) -> f64 {
+    // (time, Δready, Δbusy) deltas
+    let mut deltas: Vec<(f64, i64, i64)> = Vec::new();
+    for &ts in dispatch_ts {
+        deltas.push((ts, 1, 0));
+    }
+    for a in attempts {
+        deltas.push((a.start, -1, 1));
+        deltas.push((a.end, 0, -1));
+    }
+    deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let (mut ready, mut busy) = (0i64, 0i64);
+    let mut prev = 0.0f64;
+    let mut starved = 0.0f64;
+    for &(t, dr, db) in &deltas {
+        let t = t.min(makespan);
+        if t > prev {
+            let idle = (workers as i64 - busy).max(0);
+            starved += ready.min(idle).max(0) as f64 * (t - prev);
+            prev = t;
+        }
+        ready += dr;
+        busy += db;
+    }
+    starved
+}
+
+/// Greedy list-schedule replay: dispatch `order` onto `workers` lanes,
+/// each task to the earliest-free lane, constrained by its DAG
+/// dependencies within the same instance. Halves the durations of
+/// `scale_task` when set. Returns the virtual makespan.
+fn replay(
+    order: &[(usize, u64)],
+    durs: &BTreeMap<(usize, u64), f64>,
+    dag: &Dag,
+    workers: usize,
+    scale_task: Option<usize>,
+) -> f64 {
+    let mut free = vec![0.0f64; workers.max(1)];
+    let mut finish: BTreeMap<(usize, u64), f64> = BTreeMap::new();
+    for &(t, inst) in order {
+        let mut dur = durs.get(&(t, inst)).copied().unwrap_or(0.0);
+        if scale_task == Some(t) {
+            dur *= 0.5;
+        }
+        let ready = dag
+            .dependencies(t)
+            .iter()
+            .map(|&d| finish.get(&(d, inst)).copied().unwrap_or(0.0))
+            .fold(0.0f64, f64::max);
+        let lane = (0..free.len())
+            .min_by(|&a, &b| free[a].total_cmp(&free[b]))
+            .unwrap_or(0);
+        let start = free[lane].max(ready);
+        free[lane] = start + dur;
+        finish.insert((t, inst), start + dur);
+    }
+    free.into_iter().fold(0.0, f64::max)
+}
+
+/// Memory-budget check: the worst case for a full window is every lane
+/// running the hungriest task, so predict `workers × max(mean RSS)`
+/// from the fitted [`CostModel`] and warn when it exceeds `budget_kb`.
+/// Returns `None` when no task has sampled RSS evidence or the
+/// prediction fits.
+pub fn check_mem_budget(
+    model: &CostModel,
+    task_ids: &[String],
+    workers: usize,
+    budget_kb: f64,
+) -> Option<String> {
+    let mut worst: Option<(&str, f64)> = None;
+    for id in task_ids {
+        if let Some(kb) = model.rss_mean(id) {
+            if worst.map_or(true, |(_, w)| kb > w) {
+                worst = Some((id, kb));
+            }
+        }
+    }
+    let (id, kb) = worst?;
+    let predicted = kb * workers as f64;
+    if predicted <= budget_kb {
+        return None;
+    }
+    Some(format!(
+        "predicted window RSS {predicted:.0} KiB ({workers} workers x \
+         {kb:.0} KiB mean for task '{id}') exceeds --mem-budget \
+         {budget_kb:.0} KiB"
+    ))
+}
+
+impl Diagnosis {
+    /// Serialize the full report. Object keys sort, vectors are built
+    /// in deterministic order, so the rendering is byte-stable across
+    /// replays of the same journal.
+    pub fn to_json(&self) -> Json {
+        let a = &self.attribution;
+        let attribution = Json::obj([
+            ("critical_compute".to_string(), Json::Num(a.critical_compute)),
+            ("idle".to_string(), Json::Num(a.idle)),
+            ("other_compute".to_string(), Json::Num(a.other_compute)),
+            ("retry_waste".to_string(), Json::Num(a.retry_waste)),
+            (
+                "scheduler_overhead".to_string(),
+                Json::Num(a.scheduler_overhead),
+            ),
+            (
+                "total_worker_secs".to_string(),
+                Json::Num(a.total_worker_secs),
+            ),
+        ]);
+        let instances = Json::Arr(
+            self.instances
+                .iter()
+                .map(|i| {
+                    Json::obj([
+                        (
+                            "critical_len".to_string(),
+                            Json::Num(i.critical_len),
+                        ),
+                        (
+                            "critical_path".to_string(),
+                            Json::Arr(
+                                i.critical_path
+                                    .iter()
+                                    .map(|s| Json::from(s.as_str()))
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "instance".to_string(),
+                            Json::from(i.instance as i64),
+                        ),
+                        (
+                            "slack".to_string(),
+                            Json::obj(
+                                i.slack
+                                    .iter()
+                                    .map(|(k, v)| (k.clone(), Json::Num(*v))),
+                            ),
+                        ),
+                        ("span".to_string(), Json::Num(i.span)),
+                    ])
+                })
+                .collect(),
+        );
+        let tasks = Json::Arr(
+            self.tasks
+                .iter()
+                .map(|t| {
+                    Json::obj([
+                        (
+                            "mean_cpu_secs".to_string(),
+                            Json::Num(t.mean_cpu_secs),
+                        ),
+                        (
+                            "mean_rss_kb".to_string(),
+                            Json::Num(t.mean_rss_kb),
+                        ),
+                        ("mean_secs".to_string(), Json::Num(t.mean_secs)),
+                        ("mean_slack".to_string(), Json::Num(t.mean_slack)),
+                        ("n".to_string(), Json::from(t.n as i64)),
+                        (
+                            "on_critical".to_string(),
+                            Json::from(t.on_critical as i64),
+                        ),
+                        (
+                            "task_id".to_string(),
+                            Json::from(t.task_id.as_str()),
+                        ),
+                        ("total_secs".to_string(), Json::Num(t.total_secs)),
+                    ])
+                })
+                .collect(),
+        );
+        let what_if = Json::Arr(
+            self.what_if
+                .iter()
+                .map(|w| {
+                    Json::obj([
+                        ("baseline".to_string(), Json::Num(w.baseline)),
+                        ("scaled".to_string(), Json::Num(w.scaled)),
+                        (
+                            "speedup_pct".to_string(),
+                            Json::Num(w.speedup_pct),
+                        ),
+                        (
+                            "task_id".to_string(),
+                            Json::from(w.task_id.as_str()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj([
+            ("attribution".to_string(), attribution),
+            ("instances".to_string(), instances),
+            ("makespan".to_string(), Json::Num(self.makespan)),
+            ("run".to_string(), Json::from(self.run as i64)),
+            ("study".to_string(), Json::from(self.study.as_str())),
+            ("tasks".to_string(), tasks),
+            (
+                "warnings".to_string(),
+                Json::Arr(
+                    self.warnings
+                        .iter()
+                        .map(|w| Json::from(w.as_str()))
+                        .collect(),
+                ),
+            ),
+            ("what_if".to_string(), what_if),
+            ("workers".to_string(), Json::from(self.workers as i64)),
+        ])
+    }
+
+    /// Human-readable report (the default `papas doctor` output).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let a = &self.attribution;
+        let pct = |x: f64| {
+            if a.total_worker_secs > 0.0 {
+                x / a.total_worker_secs * 100.0
+            } else {
+                0.0
+            }
+        };
+        out.push_str(&format!(
+            "papas doctor — study '{}' run {}\n",
+            self.study, self.run
+        ));
+        out.push_str(&format!(
+            "makespan {:.2} s on {} workers ({:.2} worker-seconds)\n\n",
+            self.makespan, self.workers, a.total_worker_secs
+        ));
+        out.push_str("bottleneck attribution\n");
+        for (label, secs) in [
+            ("critical-path compute", a.critical_compute),
+            ("off-critical compute", a.other_compute),
+            ("retry/backoff waste", a.retry_waste),
+            ("scheduler overhead", a.scheduler_overhead),
+            ("worker idle", a.idle),
+        ] {
+            out.push_str(&format!(
+                "  {label:<22} {secs:>9.2} s {:>6.1}%\n",
+                pct(secs)
+            ));
+        }
+        out.push('\n');
+        const SHOW: usize = 8;
+        for inst in self.instances.iter().take(SHOW) {
+            out.push_str(&format!(
+                "instance {}: span {:.2} s, critical path {:.2} s\n  {}\n",
+                inst.instance,
+                inst.span,
+                inst.critical_len,
+                inst.critical_path.join(" -> ")
+            ));
+            let slackers: Vec<String> = inst
+                .slack
+                .iter()
+                .filter(|(_, s)| **s > 0.0)
+                .map(|(id, s)| format!("{id} {s:.2} s"))
+                .collect();
+            if !slackers.is_empty() {
+                out.push_str(&format!(
+                    "  slack: {}\n",
+                    slackers.join(", ")
+                ));
+            }
+        }
+        if self.instances.len() > SHOW {
+            out.push_str(&format!(
+                "  ... and {} more instances\n",
+                self.instances.len() - SHOW
+            ));
+        }
+        out.push('\n');
+        out.push_str(
+            "task            runs   total s    mean s  crit  \
+             slack s    rss kb\n",
+        );
+        for t in &self.tasks {
+            out.push_str(&format!(
+                "{:<14} {:>5} {:>9.2} {:>9.2} {:>5} {:>8.2} {:>9.0}\n",
+                t.task_id,
+                t.n,
+                t.total_secs,
+                t.mean_secs,
+                t.on_critical,
+                t.mean_slack,
+                t.mean_rss_kb
+            ));
+        }
+        out.push('\n');
+        out.push_str("what-if (task 2x faster => replayed makespan)\n");
+        for w in &self.what_if {
+            out.push_str(&format!(
+                "  {:<14} {:>8.2} s -> {:>8.2} s  (-{:.1}%)\n",
+                w.task_id, w.baseline, w.scaled, w.speedup_pct
+            ));
+        }
+        for w in &self.warnings {
+            out.push_str(&format!("\nwarning: {w}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceEvent;
+
+    fn diamond() -> Dag {
+        Dag::new(&[
+            ("a".to_string(), vec![]),
+            ("b".to_string(), vec!["a".to_string()]),
+            ("c".to_string(), vec!["a".to_string()]),
+            ("d".to_string(), vec!["b".to_string(), "c".to_string()]),
+        ])
+        .unwrap()
+    }
+
+    fn complete(
+        task: &str,
+        inst: u64,
+        start: f64,
+        end: f64,
+        ok: bool,
+        attempt: u32,
+    ) -> Json {
+        TraceEvent::Complete {
+            key: format!("{task}#{inst}"),
+            task_id: task.to_string(),
+            instance: inst,
+            worker: "w0".into(),
+            attempt,
+            ok,
+            duration: end - start,
+            start,
+            end,
+            class: None,
+            cpu_secs: 0.0,
+            max_rss_kb: 0,
+            io_read_bytes: 0,
+            io_write_bytes: 0,
+        }
+        .to_json(end)
+    }
+
+    fn dispatch(task: &str, inst: u64, ts: f64) -> Json {
+        TraceEvent::Dispatch {
+            key: format!("{task}#{inst}"),
+            instance: inst,
+        }
+        .to_json(ts)
+    }
+
+    fn header(workers: usize) -> Json {
+        TraceEvent::Header {
+            run: 3,
+            study: "diamond".into(),
+            workers,
+            n_instances: 1,
+            epoch_unix: 0.0,
+        }
+        .to_json(0.0)
+    }
+
+    /// Diamond a(1s) -> {b(4s), c(2s)} -> d(1s) on 2 workers.
+    /// Critical path a->b->d = 6s; c has 2s of slack.
+    fn diamond_events() -> Vec<Json> {
+        vec![
+            header(2),
+            dispatch("a", 0, 0.0),
+            complete("a", 0, 0.0, 1.0, true, 1),
+            dispatch("b", 0, 1.0),
+            dispatch("c", 0, 1.0),
+            complete("c", 0, 1.0, 3.0, true, 1),
+            complete("b", 0, 1.0, 5.0, true, 1),
+            dispatch("d", 0, 5.0),
+            complete("d", 0, 5.0, 6.0, true, 1),
+        ]
+    }
+
+    #[test]
+    fn critical_path_and_slack_match_hand_computation() {
+        let d = diagnose(&diamond_events(), &diamond());
+        assert_eq!(d.run, 3);
+        assert_eq!(d.study, "diamond");
+        assert_eq!(d.workers, 2);
+        assert_eq!(d.makespan, 6.0);
+        assert_eq!(d.instances.len(), 1);
+        let inst = &d.instances[0];
+        assert_eq!(inst.critical_path, vec!["a", "b", "d"]);
+        assert_eq!(inst.critical_len, 6.0);
+        assert_eq!(inst.span, 6.0);
+        assert_eq!(inst.slack["a"], 0.0);
+        assert_eq!(inst.slack["b"], 0.0);
+        assert_eq!(inst.slack["c"], 2.0);
+        assert_eq!(inst.slack["d"], 0.0);
+    }
+
+    #[test]
+    fn attribution_partitions_worker_seconds_exactly() {
+        let d = diagnose(&diamond_events(), &diamond());
+        let a = d.attribution;
+        assert_eq!(a.total_worker_secs, 12.0);
+        assert_eq!(a.critical_compute, 6.0); // a + b + d
+        assert_eq!(a.other_compute, 2.0); // c
+        assert_eq!(a.retry_waste, 0.0);
+        assert_eq!(a.scheduler_overhead, 0.0);
+        assert_eq!(a.idle, 4.0);
+        let sum = a.critical_compute
+            + a.other_compute
+            + a.retry_waste
+            + a.scheduler_overhead
+            + a.idle;
+        assert!((sum - a.total_worker_secs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failed_attempts_and_backoff_count_as_waste() {
+        // b fails once (1s burned), backs off 500ms, succeeds on
+        // attempt 2 with the same 4s duration.
+        let events = vec![
+            header(2),
+            dispatch("a", 0, 0.0),
+            complete("a", 0, 0.0, 1.0, true, 1),
+            dispatch("b", 0, 1.0),
+            dispatch("c", 0, 1.0),
+            complete("b", 0, 1.0, 2.0, false, 1),
+            TraceEvent::Retry {
+                key: "b#0".into(),
+                attempt: 1,
+                backoff_ms: 500,
+                class: None,
+            }
+            .to_json(2.0),
+            dispatch("b", 0, 2.5),
+            complete("c", 0, 1.0, 3.0, true, 1),
+            complete("b", 0, 2.5, 6.5, true, 2),
+            dispatch("d", 0, 6.5),
+            complete("d", 0, 6.5, 7.5, true, 1),
+        ];
+        let d = diagnose(&events, &diamond());
+        // 1.0s failed attempt + 0.5s backoff
+        assert_eq!(d.attribution.retry_waste, 1.5);
+        // the final (attempt 2) duration drives the critical path:
+        // a(1) + b(4) + d(1)
+        assert_eq!(d.instances[0].critical_path, vec!["a", "b", "d"]);
+        assert_eq!(d.attribution.critical_compute, 6.0);
+    }
+
+    #[test]
+    fn starvation_is_idle_while_work_is_queued() {
+        // 2 workers, but b and c sit dispatched for 2s before starting:
+        // one waits on the only "active" lane pattern below.
+        let events = vec![
+            header(2),
+            dispatch("a", 0, 0.0),
+            complete("a", 0, 0.0, 1.0, true, 1),
+            dispatch("b", 0, 1.0),
+            dispatch("c", 0, 1.0),
+            // both start 2s late: 2 idle workers, 2 queued tasks, 1..3
+            complete("b", 0, 3.0, 7.0, true, 1),
+            complete("c", 0, 3.0, 5.0, true, 1),
+            dispatch("d", 0, 7.0),
+            complete("d", 0, 7.0, 8.0, true, 1),
+        ];
+        let d = diagnose(&events, &diamond());
+        // [1,3): min(idle=2, ready=2) = 2 → 4 worker-seconds starved
+        assert_eq!(d.attribution.scheduler_overhead, 4.0);
+    }
+
+    #[test]
+    fn what_if_replay_halves_the_right_task() {
+        let d = diagnose(&diamond_events(), &diamond());
+        // replay baseline equals the observed makespan on this journal
+        let wb = d.what_if.iter().find(|w| w.task_id == "b").unwrap();
+        assert_eq!(wb.baseline, 6.0);
+        // b at 2s: a(1) -> b(2)||c(2) -> d(1) = 4s
+        assert_eq!(wb.scaled, 4.0);
+        assert!((wb.speedup_pct - 100.0 / 3.0).abs() < 1e-9);
+        // halving c gains nothing: it is off the critical path
+        let wc = d.what_if.iter().find(|w| w.task_id == "c").unwrap();
+        assert_eq!(wc.scaled, 6.0);
+        assert_eq!(wc.speedup_pct, 0.0);
+        // rows sort best-first
+        assert_eq!(d.what_if[0].task_id, "b");
+    }
+
+    #[test]
+    fn json_rendering_is_byte_stable() {
+        let events = diamond_events();
+        let dag = diamond();
+        let a = crate::json::to_string(&diagnose(&events, &dag).to_json());
+        let b = crate::json::to_string(&diagnose(&events, &dag).to_json());
+        assert_eq!(a, b);
+        assert!(a.contains("\"critical_path\":[\"a\",\"b\",\"d\"]"));
+    }
+
+    #[test]
+    fn empty_journal_degrades_gracefully() {
+        let d = diagnose(&[], &diamond());
+        assert_eq!(d.makespan, 0.0);
+        assert_eq!(d.instances.len(), 0);
+        assert_eq!(d.attribution.total_worker_secs, 0.0);
+        assert_eq!(d.what_if[0].speedup_pct, 0.0);
+        // text rendering stays panic-free
+        assert!(d.render_text().contains("bottleneck attribution"));
+    }
+}

@@ -69,6 +69,15 @@ pub enum TraceEvent {
         end: f64,
         /// Failure class (None on success).
         class: Option<ErrorClass>,
+        /// Sampled user+system CPU seconds (0 when unsampled — see
+        /// `obs::telemetry`).
+        cpu_secs: f64,
+        /// Sampled peak resident set in KiB (0 when unsampled).
+        max_rss_kb: u64,
+        /// Sampled storage-layer bytes read (0 when unsampled).
+        io_read_bytes: u64,
+        /// Sampled storage-layer bytes written (0 when unsampled).
+        io_write_bytes: u64,
     },
     /// A failed attempt will be re-dispatched.
     Retry {
@@ -217,6 +226,10 @@ impl TraceEvent {
                 start,
                 end,
                 class,
+                cpu_secs,
+                max_rss_kb,
+                io_read_bytes,
+                io_write_bytes,
             } => {
                 fields.push(("key".to_string(), Json::from(key.as_str())));
                 fields.push((
@@ -234,6 +247,19 @@ impl TraceEvent {
                 fields.push(("start".to_string(), Json::Num(*start)));
                 fields.push(("end".to_string(), Json::Num(*end)));
                 fields.push(("class".to_string(), class_json(class)));
+                fields.push(("cpu_secs".to_string(), Json::Num(*cpu_secs)));
+                fields.push((
+                    "max_rss_kb".to_string(),
+                    Json::from(*max_rss_kb as i64),
+                ));
+                fields.push((
+                    "io_read_bytes".to_string(),
+                    Json::from(*io_read_bytes as i64),
+                ));
+                fields.push((
+                    "io_write_bytes".to_string(),
+                    Json::from(*io_write_bytes as i64),
+                ));
             }
             TraceEvent::Retry { key, attempt, backoff_ms, class } => {
                 fields.push(("key".to_string(), Json::from(key.as_str())));
@@ -325,10 +351,16 @@ mod tests {
             start: 1.0,
             end: 1.5,
             class: None,
+            cpu_secs: 0.25,
+            max_rss_kb: 1024,
+            io_read_bytes: 10,
+            io_write_bytes: 20,
         };
         let j = ev.to_json(1.5);
         assert_eq!(j.get("class"), Some(&Json::Null));
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("cpu_secs").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(j.get("max_rss_kb").and_then(Json::as_i64), Some(1024));
     }
 
     #[test]

@@ -246,6 +246,10 @@ mod tests {
                     start: 0.0,
                     end: 2.0,
                     class: None,
+                    cpu_secs: 0.0,
+                    max_rss_kb: 0,
+                    io_read_bytes: 0,
+                    io_write_bytes: 0,
                 },
             ),
             (
@@ -261,6 +265,10 @@ mod tests {
                     start: 0.0,
                     end: 3.0,
                     class: None,
+                    cpu_secs: 0.0,
+                    max_rss_kb: 0,
+                    io_read_bytes: 0,
+                    io_write_bytes: 0,
                 },
             ),
             (3.0, TraceEvent::RunEnd),

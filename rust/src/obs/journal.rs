@@ -68,6 +68,107 @@ pub fn read_trace(path: &Path) -> Result<Vec<Json>> {
     Ok(events)
 }
 
+/// Rebuild a metrics registry offline from journal events read back via
+/// [`read_trace`] — the `papas status --serve` `/metrics` endpoint's
+/// per-scrape fold. Mirrors [`TraceSink::fold`] exactly (the round-trip
+/// parity test below keeps the two in lockstep); unknown event kinds
+/// are skipped so old binaries tolerate new journals.
+pub fn fold_trace(events: &[Json]) -> Metrics {
+    let m = Metrics::new();
+    let mut dispatched: BTreeMap<String, f64> = BTreeMap::new();
+    let f = |ev: &Json, key: &str| ev.get(key).and_then(Json::as_f64);
+    for ev in events {
+        let ts = f(ev, "ts").unwrap_or(0.0);
+        match ev.get("ev").and_then(Json::as_str).unwrap_or("") {
+            "header" => {
+                if let Some(w) = f(ev, "workers") {
+                    m.set_gauge("workers", w);
+                }
+            }
+            "dispatch" => {
+                m.inc("tasks_dispatched");
+                if let Some(k) = ev.get("key").and_then(Json::as_str) {
+                    dispatched.insert(k.to_string(), ts);
+                }
+            }
+            "lpt_pick" => {
+                m.inc("lpt_picks");
+                if let Some(d) = f(ev, "pool_depth") {
+                    m.set_gauge("pool_depth", d);
+                }
+            }
+            "complete" => {
+                let ok = ev
+                    .get("ok")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                m.inc(if ok { "tasks_ok" } else { "tasks_failed" });
+                if let Some(c) = ev.get("class").and_then(Json::as_str) {
+                    m.inc(&format!("class.{c}"));
+                }
+                let duration = f(ev, "duration").unwrap_or(0.0);
+                m.observe("task_duration_s", duration);
+                let worker =
+                    ev.get("worker").and_then(Json::as_str).unwrap_or("");
+                m.observe(&format!("worker_busy_s.{worker}"), duration);
+                let start = f(ev, "start").unwrap_or(0.0);
+                let key = ev.get("key").and_then(Json::as_str).unwrap_or("");
+                if let Some(d) = dispatched.remove(key) {
+                    m.observe("queue_wait_s", (start - d).max(0.0));
+                }
+                let cpu = f(ev, "cpu_secs").unwrap_or(0.0);
+                let rss = f(ev, "max_rss_kb").unwrap_or(0.0);
+                let rd = f(ev, "io_read_bytes").unwrap_or(0.0);
+                let wr = f(ev, "io_write_bytes").unwrap_or(0.0);
+                if cpu != 0.0 || rss != 0.0 || rd != 0.0 || wr != 0.0 {
+                    m.observe("task_cpu_s", cpu);
+                    m.observe("task_rss_kb", rss);
+                    m.add("io_read_bytes", rd as u64);
+                    m.add("io_write_bytes", wr as u64);
+                }
+            }
+            "retry" => m.inc("retries"),
+            "timeout_kill" => m.inc("timeout_kills"),
+            "infer_timeout" => m.inc("inferred_timeouts"),
+            "window_grow" => {
+                m.inc("window_grows");
+                if let Some(to) = f(ev, "to") {
+                    m.set_gauge("window_size", to);
+                }
+            }
+            "window_resize" => {
+                m.inc("window_resizes");
+                if let Some(to) = f(ev, "to") {
+                    m.set_gauge("window_size", to);
+                }
+            }
+            "checkpoint_commit" => {
+                m.inc("checkpoint_commits");
+                if let Some(k) = f(ev, "keys") {
+                    m.set_gauge("checkpoint_keys", k);
+                }
+            }
+            "harvest" => {
+                m.inc("harvests");
+                if let Some(r) = f(ev, "rows") {
+                    m.set_gauge("result_rows", r);
+                }
+            }
+            "search_propose" => {
+                m.add("search_proposed", f(ev, "n").unwrap_or(0.0) as u64);
+            }
+            "search_score" => {
+                m.add(
+                    "search_scored",
+                    f(ev, "scored").unwrap_or(0.0) as u64,
+                );
+            }
+            _ => {}
+        }
+    }
+    m
+}
+
 /// The live event sink: stamps timestamps from its [`Clock`], appends
 /// one line per event, and folds each event into the metrics registry.
 pub struct TraceSink {
@@ -125,6 +226,30 @@ impl TraceSink {
         let _ = self.writer.lock().unwrap().flush();
     }
 
+    /// Fold one attempt's sampled resource telemetry into the registry
+    /// (skipped entirely for unsampled all-zero attempts, so non-Linux
+    /// journals don't grow empty histograms).
+    fn fold_resources(
+        &self,
+        cpu_secs: f64,
+        max_rss_kb: u64,
+        io_read_bytes: u64,
+        io_write_bytes: u64,
+    ) {
+        if cpu_secs == 0.0
+            && max_rss_kb == 0
+            && io_read_bytes == 0
+            && io_write_bytes == 0
+        {
+            return;
+        }
+        let m = &self.metrics;
+        m.observe("task_cpu_s", cpu_secs);
+        m.observe("task_rss_kb", max_rss_kb as f64);
+        m.add("io_read_bytes", io_read_bytes);
+        m.add("io_write_bytes", io_write_bytes);
+    }
+
     /// Fold one event into the metrics registry.
     fn fold(&self, ev: &TraceEvent) {
         let m = &self.metrics;
@@ -143,7 +268,19 @@ impl TraceSink {
                 m.inc("lpt_picks");
                 m.set_gauge("pool_depth", *pool_depth as f64);
             }
-            TraceEvent::Complete { key, worker, ok, duration, start, class, .. } => {
+            TraceEvent::Complete {
+                key,
+                worker,
+                ok,
+                duration,
+                start,
+                class,
+                cpu_secs,
+                max_rss_kb,
+                io_read_bytes,
+                io_write_bytes,
+                ..
+            } => {
                 m.inc(if *ok { "tasks_ok" } else { "tasks_failed" });
                 if let Some(c) = class {
                     m.inc(&format!("class.{}", c.label()));
@@ -153,6 +290,12 @@ impl TraceSink {
                 if let Some(d) = self.dispatched.lock().unwrap().remove(key) {
                     m.observe("queue_wait_s", (start - d).max(0.0));
                 }
+                self.fold_resources(
+                    *cpu_secs,
+                    *max_rss_kb,
+                    *io_read_bytes,
+                    *io_write_bytes,
+                );
             }
             TraceEvent::Retry { .. } => m.inc("retries"),
             TraceEvent::TimeoutKill { .. } => m.inc("timeout_kills"),
@@ -184,6 +327,20 @@ impl TraceSink {
     }
 }
 
+/// A panicking run (or any path that skips the explicit end-of-run
+/// `flush()`) must still leave a readable journal tail: `BufWriter`'s
+/// own drop flushes, but only if the sink itself is dropped while the
+/// mutex is healthy — flush explicitly so a poisoned lock (a panic on
+/// another thread mid-`emit`) degrades to best-effort instead of
+/// silently discarding the buffer.
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        if let Ok(mut w) = self.writer.lock() {
+            let _ = w.flush();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::clock::ScriptedClock;
@@ -208,6 +365,10 @@ mod tests {
             start,
             end,
             class: None,
+            cpu_secs: 0.0,
+            max_rss_kb: 0,
+            io_read_bytes: 0,
+            io_write_bytes: 0,
         }
     }
 
@@ -242,6 +403,48 @@ mod tests {
         assert_eq!(m.hist("worker_busy_s.local-0").unwrap().sum, 2.0);
         // queue wait = start(0.0) − dispatch ts(0.0)
         assert_eq!(m.hist("queue_wait_s").unwrap().max, 0.0);
+    }
+
+    #[test]
+    fn offline_fold_matches_the_live_sink() {
+        let dir = tmp("parity");
+        let path = trace_path(&dir, 0);
+        let clock = Arc::new(ScriptedClock::new());
+        let sink = TraceSink::create(&path, clock.clone()).unwrap();
+        sink.emit(&TraceEvent::Header {
+            run: 0,
+            study: "s".into(),
+            workers: 2,
+            n_instances: 2,
+            epoch_unix: 0.0,
+        });
+        sink.emit(&TraceEvent::Dispatch { key: "t#0".into(), instance: 0 });
+        clock.advance(1.5);
+        let mut done = complete("t#0", "local-1", 0.0, 1.5);
+        if let TraceEvent::Complete { cpu_secs, max_rss_kb, .. } = &mut done
+        {
+            *cpu_secs = 0.75;
+            *max_rss_kb = 4096;
+        }
+        sink.emit(&done);
+        sink.emit(&TraceEvent::Retry {
+            key: "t#1".into(),
+            attempt: 1,
+            backoff_ms: 100,
+            class: None,
+        });
+        sink.emit(&TraceEvent::WindowResize { from: 4, to: 8, cov: 0.2 });
+        sink.emit(&TraceEvent::Harvest { rows: 2 });
+        sink.emit(&TraceEvent::RunEnd);
+        sink.flush();
+        let events = read_trace(&path).unwrap();
+        let offline = fold_trace(&events);
+        assert_eq!(
+            crate::json::to_string(&offline.snapshot()),
+            crate::json::to_string(&sink.metrics().snapshot()),
+        );
+        assert_eq!(offline.hist("task_cpu_s").unwrap().sum, 0.75);
+        assert_eq!(offline.hist("task_rss_kb").unwrap().max, 4096.0);
     }
 
     #[test]

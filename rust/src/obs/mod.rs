@@ -27,16 +27,23 @@
 //! the journal via [`watch`]).
 
 pub mod clock;
+pub mod critical;
 pub mod event;
 pub mod export;
 pub mod journal;
 pub mod metrics;
+pub mod serve;
+pub mod telemetry;
 pub mod watch;
 
 pub use clock::{Clock, MonotonicClock, ScriptedClock};
+pub use critical::{diagnose, Diagnosis};
 pub use event::TraceEvent;
 pub use journal::{
-    latest_trace_run, read_trace, trace_path, TraceSink, SEARCH_TRACE_FILE,
+    fold_trace, latest_trace_run, read_trace, trace_path, TraceSink,
+    SEARCH_TRACE_FILE,
 };
 pub use metrics::{Hist, Metrics};
+pub use serve::render_prometheus;
+pub use telemetry::{ResourceSampler, ResourceUsage};
 pub use watch::WatchState;

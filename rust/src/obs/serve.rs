@@ -1,0 +1,252 @@
+//! The metrics exporter: Prometheus text exposition + a tiny HTTP loop.
+//!
+//! `papas status --serve ADDR` binds a plain [`std::net::TcpListener`]
+//! (no HTTP dependency — the request grammar we need is one line) and
+//! answers two routes:
+//!
+//! * `GET /metrics` — the metrics registry rendered in Prometheus text
+//!   exposition format (version 0.0.4), names sanitized to
+//!   `[a-zA-Z0-9_:]` and prefixed `papas_`;
+//! * `GET /status` — the same JSON summary `papas status --format json`
+//!   prints.
+//!
+//! Both bodies are produced by closures evaluated per request, so a
+//! scrape always sees the study database's current state. `once` mode
+//! (the `--once` flag) accepts a single connection and returns — the
+//! CI smoke test and anything else that wants a one-shot probe.
+
+use super::metrics::Metrics;
+use crate::util::error::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Sanitize a registry name into a Prometheus metric name chunk:
+/// every character outside `[a-zA-Z0-9_:]` becomes `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Format a sample value the way Prometheus expects (`Display` for
+/// finite floats; explicit spellings for the specials).
+fn num(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "+Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Render the registry in Prometheus text exposition format. Counters
+/// export as `counter`, gauges as `gauge`, and each histogram summary
+/// as four series (`_count`, `_sum`, `_min`, `_max`). Deterministic:
+/// the registry snapshot iterates sorted names.
+pub fn render_prometheus(metrics: &Metrics) -> String {
+    let snap = metrics.snapshot();
+    let mut out = String::new();
+    let mut push = |name: &str, kind: &str, help: &str, value: &str| {
+        out.push_str(&format!("# HELP {name} {help}\n"));
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        out.push_str(&format!("{name} {value}\n"));
+    };
+    if let Some(counters) = snap.get("counters").and_then(|c| c.as_obj()) {
+        for (k, v) in counters {
+            let name = format!("papas_{}", sanitize(k));
+            let value = v.as_i64().unwrap_or(0);
+            push(&name, "counter", "Event counter from the run trace.", &value.to_string());
+        }
+    }
+    if let Some(gauges) = snap.get("gauges").and_then(|g| g.as_obj()) {
+        for (k, v) in gauges {
+            let name = format!("papas_{}", sanitize(k));
+            let value = v.as_f64().unwrap_or(0.0);
+            push(&name, "gauge", "Latest value from the run trace.", &num(value));
+        }
+    }
+    if let Some(hists) = snap.get("histograms").and_then(|h| h.as_obj()) {
+        for (k, h) in hists {
+            let base = format!("papas_{}", sanitize(k));
+            let field = |key: &str| {
+                h.get(key).and_then(crate::json::Json::as_f64).unwrap_or(0.0)
+            };
+            push(
+                &format!("{base}_count"),
+                "counter",
+                "Observations folded from the run trace.",
+                &num(field("n")),
+            );
+            for key in ["sum", "min", "max"] {
+                push(
+                    &format!("{base}_{key}"),
+                    "gauge",
+                    "Histogram summary from the run trace.",
+                    &num(field(key)),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Route one request path to `(content_type, body)`, or `None` → 404.
+fn route(
+    path: &str,
+    metrics: &dyn Fn() -> String,
+    status: &dyn Fn() -> String,
+) -> Option<(&'static str, String)> {
+    match path {
+        "/metrics" => {
+            Some(("text/plain; version=0.0.4; charset=utf-8", metrics()))
+        }
+        "/status" => Some(("application/json; charset=utf-8", status())),
+        _ => None,
+    }
+}
+
+fn handle(
+    stream: TcpStream,
+    metrics: &dyn Fn() -> String,
+    status: &dyn Fn() -> String,
+) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut reader = BufReader::new(stream);
+    let mut request_line = String::new();
+    if reader.read_line(&mut request_line).is_err() {
+        return;
+    }
+    // "GET /metrics HTTP/1.1" → "/metrics"
+    let path = request_line.split_whitespace().nth(1).unwrap_or("/");
+    let (code, content_type, body) = match route(path, metrics, status) {
+        Some((ct, body)) => ("200 OK", ct, body),
+        None => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let mut stream = reader.into_inner();
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {code}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.flush();
+}
+
+/// Accept-and-respond loop over an already-bound listener (the caller
+/// binds so it can print the resolved address — `--serve 127.0.0.1:0`
+/// picks an ephemeral port). `once` handles a single connection and
+/// returns; otherwise the loop runs until the process dies.
+pub fn serve(
+    listener: TcpListener,
+    once: bool,
+    metrics: &dyn Fn() -> String,
+    status: &dyn Fn() -> String,
+) -> Result<()> {
+    for stream in listener.incoming() {
+        if let Ok(stream) = stream {
+            handle(stream, metrics, status);
+        }
+        if once {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn registry() -> Metrics {
+        let m = Metrics::new();
+        m.add("tasks_ok", 5);
+        m.inc("class.user-error");
+        m.set_gauge("window_size", 8.0);
+        m.observe("worker_busy_s.local-0", 1.5);
+        m.observe("worker_busy_s.local-0", 2.5);
+        m
+    }
+
+    #[test]
+    fn exposition_is_valid_and_sanitized() {
+        let text = render_prometheus(&registry());
+        assert!(text.contains("# TYPE papas_tasks_ok counter\n"));
+        assert!(text.contains("papas_tasks_ok 5\n"));
+        assert!(text.contains("papas_class_user_error 1\n"));
+        assert!(text.contains("# TYPE papas_window_size gauge\n"));
+        assert!(text.contains("papas_window_size 8\n"));
+        assert!(text.contains("papas_worker_busy_s_local_0_count 2\n"));
+        assert!(text.contains("papas_worker_busy_s_local_0_sum 4\n"));
+        assert!(text.contains("papas_worker_busy_s_local_0_min 1.5\n"));
+        assert!(text.contains("papas_worker_busy_s_local_0_max 2.5\n"));
+        // exposition grammar: every line is a comment or `name value`,
+        // names restricted to [a-zA-Z0-9_:]
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.split_once(' ').unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric()
+                    || c == '_'
+                    || c == ':'),
+                "bad metric name {name:?}"
+            );
+            assert!(value.parse::<f64>().is_ok(), "bad value {value:?}");
+        }
+        // deterministic
+        assert_eq!(text, render_prometheus(&registry()));
+    }
+
+    #[test]
+    fn empty_registry_renders_empty() {
+        assert_eq!(render_prometheus(&Metrics::new()), "");
+    }
+
+    #[test]
+    fn routes_metrics_status_and_404() {
+        let metrics = || "papas_tasks_ok 1\n".to_string();
+        let status = || "{\"state\":\"done\"}".to_string();
+        let (ct, body) = route("/metrics", &metrics, &status).unwrap();
+        assert!(ct.starts_with("text/plain"));
+        assert_eq!(body, "papas_tasks_ok 1\n");
+        let (ct, body) = route("/status", &metrics, &status).unwrap();
+        assert!(ct.starts_with("application/json"));
+        assert_eq!(body, "{\"state\":\"done\"}");
+        assert!(route("/ghost", &metrics, &status).is_none());
+    }
+
+    #[test]
+    fn once_mode_serves_one_http_request() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            serve(
+                listener,
+                true,
+                &|| "papas_tasks_ok 3\n".to_string(),
+                &|| "{}".to_string(),
+            )
+            .unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(stream, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(response.contains("text/plain; version=0.0.4"));
+        assert!(response.ends_with("papas_tasks_ok 3\n"));
+        server.join().unwrap();
+    }
+}

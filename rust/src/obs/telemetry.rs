@@ -1,0 +1,197 @@
+//! Per-attempt resource telemetry: a `/proc/<pid>` sampler.
+//!
+//! The runner's timeout poll loop already wakes up every few hundred
+//! microseconds to `try_wait` the child; this module piggybacks on
+//! those wakeups to read `/proc/<pid>/{stat,statm,io}` and accumulate
+//! four per-attempt resource measurements next to `wall_time`:
+//!
+//! * `cpu_secs` — user + system CPU time (utime + stime ticks / the
+//!   standard Linux `USER_HZ` of 100),
+//! * `max_rss_kb` — the largest resident set observed across samples,
+//! * `io_read_bytes` / `io_write_bytes` — storage-layer I/O counters
+//!   (`read_bytes`/`write_bytes` from `/proc/<pid>/io`).
+//!
+//! **Portability**: the sampler is strictly best-effort. Off Linux (no
+//! `/proc`), on read failure, on parse failure, or when the child exits
+//! before the first poll, the affected fields stay 0 and nothing else
+//! changes — the measurements are a bonus, never a dependency. Values
+//! are read from the live process, so the final datum is the *last
+//! successful sample* before the child was reaped; a task shorter than
+//! one poll interval records zeros.
+
+/// One attempt's sampled resource consumption (all zeros when the
+/// sampler never got a successful read — see module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceUsage {
+    /// User + system CPU seconds.
+    pub cpu_secs: f64,
+    /// Peak resident set size in KiB.
+    pub max_rss_kb: u64,
+    /// Bytes read from the storage layer.
+    pub io_read_bytes: u64,
+    /// Bytes written to the storage layer.
+    pub io_write_bytes: u64,
+}
+
+/// Linux `USER_HZ`: `/proc/<pid>/stat` utime/stime are in these ticks.
+/// Fixed at 100 on every Linux ABI; without libc we cannot ask
+/// `sysconf(_SC_CLK_TCK)`, and 100 is correct wherever `/proc` exists.
+const CLOCK_TICKS_PER_SEC: f64 = 100.0;
+
+/// Page size assumed for `/proc/<pid>/statm` resident pages. 4 KiB on
+/// every mainstream Linux target this crate builds for.
+const PAGE_KB: u64 = 4;
+
+/// Polls `/proc/<pid>` for one child process and accumulates a
+/// [`ResourceUsage`]. Construct after spawn, call [`sample`] from the
+/// wait loop, take the result with [`finish`] after reaping.
+///
+/// [`sample`]: ResourceSampler::sample
+/// [`finish`]: ResourceSampler::finish
+#[derive(Debug)]
+pub struct ResourceSampler {
+    /// `/proc/<pid>` for the sampled child; `None` when the first probe
+    /// found no readable proc entry (non-Linux) — every later sample is
+    /// then a no-op.
+    proc_dir: Option<std::path::PathBuf>,
+    usage: ResourceUsage,
+}
+
+impl ResourceSampler {
+    /// Attach to a live child process. Probes `/proc/<pid>/stat` once;
+    /// when unreadable the sampler permanently degrades to a no-op.
+    pub fn attach(pid: u32) -> ResourceSampler {
+        let dir = std::path::PathBuf::from(format!("/proc/{pid}"));
+        let proc_dir = if dir.join("stat").is_file() { Some(dir) } else { None };
+        ResourceSampler { proc_dir, usage: ResourceUsage::default() }
+    }
+
+    /// Take one sample (cheap: up to three small `/proc` reads). CPU and
+    /// I/O counters are monotone in the kernel, so keeping the latest
+    /// successful read is exact; RSS keeps the running maximum.
+    pub fn sample(&mut self) {
+        let Some(dir) = &self.proc_dir else { return };
+        if let Some(cpu) = read_cpu_secs(&dir.join("stat")) {
+            self.usage.cpu_secs = cpu;
+        }
+        if let Some(rss) = read_rss_kb(&dir.join("statm")) {
+            self.usage.max_rss_kb = self.usage.max_rss_kb.max(rss);
+        }
+        if let Some((r, w)) = read_io_bytes(&dir.join("io")) {
+            self.usage.io_read_bytes = r;
+            self.usage.io_write_bytes = w;
+        }
+    }
+
+    /// The accumulated usage (call after the child was reaped; takes a
+    /// final sample first in case the loop never polled).
+    pub fn finish(mut self) -> ResourceUsage {
+        self.sample();
+        self.usage
+    }
+}
+
+/// `utime + stime` seconds from a `/proc/<pid>/stat` line. The comm
+/// field `(...)` may itself contain spaces or parens, so fields are
+/// counted from after the *last* `)`: the first token after it is field
+/// 3 (`state`); `utime`/`stime` are fields 14/15 of the full line.
+fn read_cpu_secs(path: &std::path::Path) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let rest = &text[text.rfind(')')? + 1..];
+    let mut fields = rest.split_whitespace();
+    let utime: u64 = fields.nth(11)?.parse().ok()?;
+    let stime: u64 = fields.next()?.parse().ok()?;
+    Some((utime + stime) as f64 / CLOCK_TICKS_PER_SEC)
+}
+
+/// Resident set in KiB from `/proc/<pid>/statm` (field 2, in pages).
+fn read_rss_kb(path: &std::path::Path) -> Option<u64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let pages: u64 = text.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * PAGE_KB)
+}
+
+/// `(read_bytes, write_bytes)` from `/proc/<pid>/io`.
+fn read_io_bytes(path: &std::path::Path) -> Option<(u64, u64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let field = |name: &str| -> Option<u64> {
+        text.lines()
+            .find_map(|l| l.strip_prefix(name)?.strip_prefix(':'))
+            .and_then(|v| v.trim().parse().ok())
+    };
+    Some((field("read_bytes")?, field("write_bytes")?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("papas_telemetry").join(tag);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn stat_cpu_parses_past_hostile_comm_names() {
+        let d = tmp("stat");
+        let p = d.join("stat");
+        // comm contains spaces and a closing paren — fields must be
+        // counted from the *last* ')'
+        std::fs::write(
+            &p,
+            "1234 (my (we) ird) S 1 1 1 0 -1 4194304 100 0 0 0 250 50 0 0 \
+             20 0 1 0 12345 1000000 500 18446744073709551615",
+        )
+        .unwrap();
+        // utime=250 stime=50 ticks at 100 Hz → 3.0s
+        assert_eq!(read_cpu_secs(&p), Some(3.0));
+    }
+
+    #[test]
+    fn statm_and_io_parse() {
+        let d = tmp("statm_io");
+        std::fs::write(d.join("statm"), "2000 512 300 10 0 400 0\n").unwrap();
+        assert_eq!(read_rss_kb(&d.join("statm")), Some(2048));
+        std::fs::write(
+            d.join("io"),
+            "rchar: 999\nwchar: 888\nsyscr: 10\nsyscw: 5\n\
+             read_bytes: 4096\nwrite_bytes: 8192\ncancelled_write_bytes: 0\n",
+        )
+        .unwrap();
+        assert_eq!(read_io_bytes(&d.join("io")), Some((4096, 8192)));
+    }
+
+    #[test]
+    fn malformed_files_yield_none() {
+        let d = tmp("bad");
+        std::fs::write(d.join("stat"), "not a stat line").unwrap();
+        assert_eq!(read_cpu_secs(&d.join("stat")), None);
+        std::fs::write(d.join("statm"), "").unwrap();
+        assert_eq!(read_rss_kb(&d.join("statm")), None);
+        std::fs::write(d.join("io"), "rchar: 1\n").unwrap();
+        assert_eq!(read_io_bytes(&d.join("io")), None);
+        assert_eq!(read_cpu_secs(&d.join("ghost")), None);
+    }
+
+    #[test]
+    fn sampler_degrades_to_noop_without_proc_entry() {
+        // PID u32::MAX cannot exist — attach must not panic and finish
+        // must return zeros
+        let s = ResourceSampler::attach(u32::MAX);
+        let u = s.finish();
+        assert_eq!(u, ResourceUsage::default());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn sampler_reads_a_live_process() {
+        // sample our own process: RSS must be nonzero on Linux
+        let mut s = ResourceSampler::attach(std::process::id());
+        s.sample();
+        let u = s.finish();
+        assert!(u.max_rss_kb > 0, "{u:?}");
+    }
+}

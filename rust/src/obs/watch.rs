@@ -187,6 +187,10 @@ mod tests {
                 start: 0.0,
                 end: 2.0,
                 class: None,
+                cpu_secs: 0.0,
+                max_rss_kb: 0,
+                io_read_bytes: 0,
+                io_write_bytes: 0,
             },
         );
         fold(

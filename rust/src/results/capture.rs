@@ -22,8 +22,9 @@
 //!
 //! Extracted text types itself: numeric when it parses as f64, string
 //! otherwise ([`MetricValue::of_text`]). The built-in metrics
-//! (`wall_time`, `attempts`, `exit_code`, `exit_class`) come from the
-//! attempt log and need no declaration — declaring a capture under a
+//! (`wall_time`, `attempts`, `exit_code`, `exit_class`, and the sampled
+//! `cpu_secs`/`max_rss_kb`/`io_read_bytes`/`io_write_bytes`) come from
+//! the attempt log and need no declaration — declaring a capture under a
 //! built-in name is a validation error.
 //!
 //! Specs are compiled once per study ([`CaptureSet::compile`], carried on
@@ -374,6 +375,10 @@ impl CaptureEngine {
         values[3] = MetricValue::Str(
             rec.class.map(|c| c.label().to_string()).unwrap_or_else(|| "ok".into()),
         );
+        values[4] = MetricValue::Num(rec.cpu_secs);
+        values[5] = MetricValue::Num(rec.max_rss_kb as f64);
+        values[6] = MetricValue::Num(rec.io_read_bytes as f64);
+        values[7] = MetricValue::Num(rec.io_write_bytes as f64);
         if let Some(tc) = self.tasks.get(&rec.task_id) {
             for (slot, v) in tc
                 .columns
@@ -418,7 +423,12 @@ mod tests {
             error: None,
             worker: "w0".into(),
             stdout: stdout.into(),
+            stdout_truncated: false,
             run: 1,
+            cpu_secs: 0.75,
+            max_rss_kb: 2048,
+            io_read_bytes: 100,
+            io_write_bytes: 200,
         }
     }
 
@@ -512,7 +522,18 @@ mod tests {
         // builtins first, then the declared union without duplicates
         assert_eq!(
             eng.schema().metrics,
-            vec!["wall_time", "attempts", "exit_code", "exit_class", "m", "extra"]
+            vec![
+                "wall_time",
+                "attempts",
+                "exit_code",
+                "exit_class",
+                "cpu_secs",
+                "max_rss_kb",
+                "io_read_bytes",
+                "io_write_bytes",
+                "m",
+                "extra"
+            ]
         );
         let dir = std::env::temp_dir().join("papas_capture/engine");
         let _ = std::fs::remove_dir_all(&dir);
@@ -523,8 +544,13 @@ mod tests {
         assert_eq!(row.values[0], MetricValue::Num(1.25)); // wall_time
         assert_eq!(row.values[1], MetricValue::Num(2.0)); // attempts
         assert_eq!(row.values[3], MetricValue::Str("ok".into()));
-        assert_eq!(row.values[4], MetricValue::Num(7.0)); // m
-        assert_eq!(row.values[5], MetricValue::Missing); // extra: not task a's
+        // resource telemetry builtins from the attempt record
+        assert_eq!(row.values[4], MetricValue::Num(0.75)); // cpu_secs
+        assert_eq!(row.values[5], MetricValue::Num(2048.0)); // max_rss_kb
+        assert_eq!(row.values[6], MetricValue::Num(100.0)); // io_read_bytes
+        assert_eq!(row.values[7], MetricValue::Num(200.0)); // io_write_bytes
+        assert_eq!(row.values[8], MetricValue::Num(7.0)); // m
+        assert_eq!(row.values[9], MetricValue::Missing); // extra: not task a's
         // a failed attempt carries its class
         let mut fail = rec("b", 0, "m=1 x=2");
         fail.ok = false;
@@ -533,7 +559,7 @@ mod tests {
         let row = eng.row_for(&fail, vec![0], &dir);
         assert_eq!(row.values[2], MetricValue::Num(3.0));
         assert_eq!(row.values[3], MetricValue::Str("nonzero".into()));
-        assert_eq!(row.values[5], MetricValue::Num(2.0));
+        assert_eq!(row.values[9], MetricValue::Num(2.0));
     }
 
     #[test]

@@ -714,6 +714,10 @@ mod tests {
                 "attempts".into(),
                 "exit_code".into(),
                 "exit_class".into(),
+                "cpu_secs".into(),
+                "max_rss_kb".into(),
+                "io_read_bytes".into(),
+                "io_write_bytes".into(),
             ],
         };
         let mut table = ResultTable::new(schema);
@@ -734,6 +738,10 @@ mod tests {
                     MetricValue::Num(1.0),
                     MetricValue::Num(0.0),
                     MetricValue::Str("ok".into()),
+                    MetricValue::Num(0.0),
+                    MetricValue::Num(0.0),
+                    MetricValue::Num(0.0),
+                    MetricValue::Num(0.0),
                 ],
             });
         }

@@ -9,19 +9,30 @@
 //!   1M × n_axes small integers, and every row decodes back to its
 //!   `name → value` pairs through the shared [`crate::params::ValueTable`];
 //! * **metrics** — the built-in engine measurements ([`BUILTIN_METRICS`]:
-//!   `wall_time`, `attempts`, `exit_code`, `exit_class`), always present,
-//!   followed by the study's declared `capture:` metrics in declaration
-//!   order (union across tasks; a task that does not declare a metric
-//!   leaves it [`MetricValue::Missing`]).
+//!   `wall_time`, `attempts`, `exit_code`, `exit_class`, plus the sampled
+//!   resource telemetry `cpu_secs`, `max_rss_kb`, `io_read_bytes`,
+//!   `io_write_bytes`), always present, followed by the study's declared
+//!   `capture:` metrics in declaration order (union across tasks; a task
+//!   that does not declare a metric leaves it [`MetricValue::Missing`]).
 
 use crate::json::Json;
 use crate::util::error::{Error, Result};
 
 /// Metric columns every result row carries, in schema order, regardless
 /// of any `capture:` declaration. Sourced from the attempt log /
-/// `TaskResult`, not from task output.
-pub const BUILTIN_METRICS: &[&str] =
-    &["wall_time", "attempts", "exit_code", "exit_class"];
+/// `TaskResult`, not from task output. The last four are the `/proc`
+/// resource telemetry (0 when unsampled — off-Linux, builtins, or the
+/// blocking no-timeout path).
+pub const BUILTIN_METRICS: &[&str] = &[
+    "wall_time",
+    "attempts",
+    "exit_code",
+    "exit_class",
+    "cpu_secs",
+    "max_rss_kb",
+    "io_read_bytes",
+    "io_write_bytes",
+];
 
 /// True when `name` is one of the built-in metric columns (declared
 /// `capture:` metrics may not shadow these).
@@ -309,6 +320,10 @@ mod tests {
                 "attempts".into(),
                 "exit_code".into(),
                 "exit_class".into(),
+                "cpu_secs".into(),
+                "max_rss_kb".into(),
+                "io_read_bytes".into(),
+                "io_write_bytes".into(),
                 "gflops".into(),
             ],
         }
@@ -354,6 +369,10 @@ mod tests {
                 MetricValue::Num(1.0),
                 MetricValue::Num(0.0),
                 MetricValue::Str("ok".into()),
+                MetricValue::Num(0.25),
+                MetricValue::Num(2048.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
                 MetricValue::Missing,
             ],
         };
@@ -393,7 +412,7 @@ mod tests {
             instance: 0,
             task_id: "t".into(),
             digits: vec![1],
-            values: vec![MetricValue::Missing; 5],
+            values: vec![MetricValue::Missing; 9],
         };
         let j = row.to_json(&s);
         assert!(Row::from_json(&j, &s).is_err());

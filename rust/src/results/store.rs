@@ -630,6 +630,10 @@ mod tests {
                 "attempts".into(),
                 "exit_code".into(),
                 "exit_class".into(),
+                "cpu_secs".into(),
+                "max_rss_kb".into(),
+                "io_read_bytes".into(),
+                "io_write_bytes".into(),
                 "m".into(),
             ],
         }
@@ -646,6 +650,10 @@ mod tests {
                 MetricValue::Num(1.0),
                 MetricValue::Num(0.0),
                 MetricValue::Str("ok".into()),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
                 MetricValue::Num(m),
             ],
         }
@@ -682,7 +690,7 @@ mod tests {
         assert!(!dir.join(format!("{RESULTS_FILE}.tmp")).exists());
         let back = ResultTable::load(&dir, &s).unwrap();
         assert_eq!(back.len(), 2);
-        assert_eq!(back.value(4, 0), &MetricValue::Num(3.0));
+        assert_eq!(back.value(8, 0), &MetricValue::Num(3.0));
         assert_eq!(log_line_count(&tmp("compact-none")), None);
     }
 
@@ -698,7 +706,7 @@ mod tests {
         assert_eq!(t.instance(1), 1);
         assert_eq!(t.task_id(0), "t");
         assert_eq!(t.digit(0, 1), 1);
-        assert_eq!(t.value(4, 1), &MetricValue::Num(2.0));
+        assert_eq!(t.value(8, 1), &MetricValue::Num(2.0));
         assert_eq!(t.row(0), row(0, "t", [0, 0], 1.0));
     }
 
@@ -737,7 +745,7 @@ mod tests {
             ],
         );
         assert_eq!(t.len(), 2);
-        assert_eq!(t.value(4, 0), &MetricValue::Num(9.0));
+        assert_eq!(t.value(8, 0), &MetricValue::Num(9.0));
     }
 
     #[test]
@@ -753,8 +761,8 @@ mod tests {
         );
         // One row per run survives, ordered run-major.
         assert_eq!(t.len(), 2);
-        assert_eq!((t.run(0), t.value(4, 0)), (0, &MetricValue::Num(1.0)));
-        assert_eq!((t.run(1), t.value(4, 1)), (1, &MetricValue::Num(3.0)));
+        assert_eq!((t.run(0), t.value(8, 0)), (0, &MetricValue::Num(1.0)));
+        assert_eq!((t.run(1), t.value(8, 1)), (1, &MetricValue::Num(3.0)));
     }
 
     #[test]
@@ -772,7 +780,7 @@ mod tests {
         assert_eq!(back.run(0), 2);
         assert_eq!(back.task_id(1), "u");
         assert_eq!(back.digit(1, 0), 1);
-        assert_eq!(back.value(4, 1), &MetricValue::Num(2.5));
+        assert_eq!(back.value(8, 1), &MetricValue::Num(2.5));
         assert_eq!(back.schema(), &s);
     }
 
@@ -789,7 +797,7 @@ mod tests {
         let back = ResultTable::load(&dir, &s).unwrap();
         assert_eq!(back.len(), 2);
         assert_eq!((back.run(0), back.run(1)), (1, 1));
-        assert_eq!(back.value(4, 1), &MetricValue::Num(2.5));
+        assert_eq!(back.value(8, 1), &MetricValue::Num(2.5));
         // A snapshot written before the runs column reads as run 0.
         let text = std::fs::read_to_string(dir.join(COLUMNS_FILE)).unwrap();
         let mut j = json::parse(&text).unwrap();
@@ -818,13 +826,13 @@ mod tests {
             instance: 0,
             task_id: "x".into(),
             digits: vec![0],
-            values: vec![MetricValue::Missing; 5],
+            values: vec![MetricValue::Missing; 9],
         });
         foreign.save_columns(&dir).unwrap();
         crate::results::binfmt::save_bin(&foreign, &dir).unwrap();
         let t = ResultTable::load(&dir, &s).unwrap();
         assert_eq!(t.len(), 1);
-        assert_eq!(t.value(4, 0), &MetricValue::Num(4.0));
+        assert_eq!(t.value(8, 0), &MetricValue::Num(4.0));
     }
 
     #[test]
@@ -866,7 +874,7 @@ mod tests {
         }
         let t = ResultTable::load(&dir, &s).unwrap();
         assert_eq!(t.len(), 2, "equal-mtime snapshot masked the row log");
-        assert_eq!(t.value(4, 0), &MetricValue::Num(4.0));
+        assert_eq!(t.value(8, 0), &MetricValue::Num(4.0));
         assert_eq!(stored_row_count(&dir), Some(2));
     }
 
@@ -902,7 +910,7 @@ mod tests {
                 instance: 9,
                 task_id: "t".into(),
                 digits: vec![0],
-                values: vec![MetricValue::Missing; 5],
+                values: vec![MetricValue::Missing; 9],
             }
             .to_json(&s),
         );

@@ -155,6 +155,10 @@ mod tests {
                 "attempts".into(),
                 "exit_code".into(),
                 "exit_class".into(),
+                "cpu_secs".into(),
+                "max_rss_kb".into(),
+                "io_read_bytes".into(),
+                "io_write_bytes".into(),
                 "score".into(),
             ],
         }
@@ -181,6 +185,10 @@ mod tests {
                 MetricValue::Num(1.0),
                 MetricValue::Num(0.0),
                 MetricValue::Str(class.into()),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
                 score,
             ],
         }

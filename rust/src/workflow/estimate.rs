@@ -101,6 +101,10 @@ pub struct CostModel {
     global: Vec<Option<f64>>,
     /// task → p95 of observed wall times.
     p95: Vec<f64>,
+    /// task → mean of *sampled* `max_rss_kb` values (rows where the
+    /// `/proc` sampler recorded a nonzero RSS); `None` when no row of
+    /// the task carried telemetry. Feeds `papas doctor --mem-budget`.
+    rss_mean: Vec<Option<f64>>,
     /// Rows with a finite wall_time that entered the model.
     n_samples: usize,
 }
@@ -111,6 +115,7 @@ impl CostModel {
     pub fn from_table(table: &ResultTable) -> CostModel {
         let schema = table.schema();
         let wall = schema.metric_index("wall_time");
+        let rss = schema.metric_index("max_rss_kb");
         let n_axes = schema.n_axes;
 
         let mut task_ids: Vec<String> = Vec::new();
@@ -118,6 +123,7 @@ impl CostModel {
         let mut exact: HashMap<(u32, Vec<u32>), Acc> = HashMap::new();
         let mut marginal: HashMap<(u32, usize, u32), Acc> = HashMap::new();
         let mut global: Vec<Acc> = Vec::new();
+        let mut rss_acc: Vec<Acc> = Vec::new();
         let mut samples: Vec<Vec<f64>> = Vec::new();
         let mut n_samples = 0usize;
 
@@ -137,6 +143,7 @@ impl CostModel {
                         task_ids.push(name.to_string());
                         task_index.insert(name.to_string(), t);
                         global.push(Acc::default());
+                        rss_acc.push(Acc::default());
                         samples.push(Vec::new());
                         t
                     }
@@ -150,6 +157,17 @@ impl CostModel {
                 global[t as usize].add(secs);
                 samples[t as usize].push(secs);
                 n_samples += 1;
+                // RSS means fold only *sampled* rows: a 0 means the
+                // `/proc` sampler never ran (off-Linux, builtin, or the
+                // blocking path), and folding it would drag every mean
+                // toward a memory footprint no task actually has.
+                if let Some(r) = rss {
+                    if let Some(kb) = table.value(r, i).as_f64() {
+                        if kb > 0.0 && kb.is_finite() {
+                            rss_acc[t as usize].add(kb);
+                        }
+                    }
+                }
             }
         }
 
@@ -173,6 +191,7 @@ impl CostModel {
                 .collect(),
             global: global.into_iter().map(Acc::mean).collect(),
             p95,
+            rss_mean: rss_acc.into_iter().map(Acc::mean).collect(),
             n_samples,
         }
     }
@@ -186,6 +205,7 @@ impl CostModel {
             marginal: HashMap::new(),
             global: Vec::new(),
             p95: Vec::new(),
+            rss_mean: Vec::new(),
             n_samples: 0,
         }
     }
@@ -239,6 +259,15 @@ impl CostModel {
         } else {
             None
         }
+    }
+
+    /// Mean sampled `max_rss_kb` of the task's observed rows; `None`
+    /// when no row carried resource telemetry (`papas doctor` uses this
+    /// to predict the aggregate RSS of an admission window against
+    /// `--mem-budget`).
+    pub fn rss_mean(&self, task_id: &str) -> Option<f64> {
+        let &t = self.task_index.get(task_id)?;
+        self.rss_mean[t as usize]
     }
 }
 
@@ -316,8 +345,25 @@ mod tests {
                 MetricValue::Num(1.0),
                 MetricValue::Num(0.0),
                 MetricValue::Str("ok".into()),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
             ],
         }
+    }
+
+    /// `row` with a sampled `max_rss_kb` value.
+    fn row_rss(
+        space: &Space,
+        instance: u64,
+        task: &str,
+        wall: f64,
+        rss_kb: f64,
+    ) -> Row {
+        let mut r = row(space, 0, instance, task, wall);
+        r.values[5] = MetricValue::Num(rss_kb);
+        r
     }
 
     fn table(space: &Space, rows: Vec<Row>) -> ResultTable {
@@ -410,9 +456,31 @@ mod tests {
         m.task_index.insert("ghost".into(), 0);
         m.global.push(None);
         m.p95.push(f64::NAN);
+        m.rss_mean.push(None);
         assert_eq!(m.predict("ghost", &[0, 0]), Estimate::Unknown);
         assert_eq!(m.predict("ghost", &[0, 0]).value(), None);
         assert_eq!(m.timeout_hint("ghost", 4.0), None);
+        assert_eq!(m.rss_mean("ghost"), None);
+    }
+
+    #[test]
+    fn rss_means_fold_only_sampled_rows() {
+        let space = space_2x3();
+        let t = table(
+            &space,
+            vec![
+                row_rss(&space, 0, "job", 1.0, 1000.0),
+                row_rss(&space, 1, "job", 1.0, 3000.0),
+                // unsampled row (rss 0): must not drag the mean down
+                row(&space, 0, 2, "job", 1.0),
+                // a task with no telemetry at all
+                row(&space, 0, 3, "lean", 1.0),
+            ],
+        );
+        let m = CostModel::from_table(&t);
+        assert_eq!(m.rss_mean("job"), Some(2000.0));
+        assert_eq!(m.rss_mean("lean"), None);
+        assert_eq!(m.rss_mean("ghost"), None);
     }
 
     #[test]

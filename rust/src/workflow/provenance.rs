@@ -61,6 +61,19 @@ pub struct AttemptRecord {
     /// post-hoc by `papas harvest` carry identical provenance. Logs
     /// written before multi-run provenance read back as run 0.
     pub run: u32,
+    /// User + system CPU seconds sampled from `/proc` (0 when the
+    /// sampler had nothing — off-Linux, builtins, or pre-telemetry
+    /// logs).
+    pub cpu_secs: f64,
+    /// Peak resident set size in KiB sampled from `/proc` (0 when
+    /// unsampled).
+    pub max_rss_kb: u64,
+    /// Storage-layer bytes read, from `/proc/<pid>/io` (0 when
+    /// unsampled).
+    pub io_read_bytes: u64,
+    /// Storage-layer bytes written, from `/proc/<pid>/io` (0 when
+    /// unsampled).
+    pub io_write_bytes: u64,
 }
 
 impl AttemptRecord {
@@ -98,6 +111,16 @@ impl AttemptRecord {
                 Json::from(self.stdout_truncated),
             ),
             ("run".to_string(), Json::from(self.run as i64)),
+            ("cpu_secs".to_string(), Json::Num(self.cpu_secs)),
+            ("max_rss_kb".to_string(), Json::from(self.max_rss_kb as i64)),
+            (
+                "io_read_bytes".to_string(),
+                Json::from(self.io_read_bytes as i64),
+            ),
+            (
+                "io_write_bytes".to_string(),
+                Json::from(self.io_write_bytes as i64),
+            ),
         ])
     }
 
@@ -134,6 +157,18 @@ impl AttemptRecord {
                 .unwrap_or(false),
             // Absent on logs written before multi-run provenance.
             run: j.get("run").and_then(Json::as_i64).unwrap_or(0) as u32,
+            // Absent on logs written before resource telemetry.
+            cpu_secs: j.get("cpu_secs").and_then(Json::as_f64).unwrap_or(0.0),
+            max_rss_kb: j.get("max_rss_kb").and_then(Json::as_i64).unwrap_or(0)
+                as u64,
+            io_read_bytes: j
+                .get("io_read_bytes")
+                .and_then(Json::as_i64)
+                .unwrap_or(0) as u64,
+            io_write_bytes: j
+                .get("io_write_bytes")
+                .and_then(Json::as_i64)
+                .unwrap_or(0) as u64,
         })
     }
 }
@@ -443,6 +478,10 @@ mod tests {
             stdout: "partial output\n".into(),
             stdout_truncated: true,
             run: 2,
+            cpu_secs: 1.75,
+            max_rss_kb: 20480,
+            io_read_bytes: 4096,
+            io_write_bytes: 8192,
         };
         let ok = AttemptRecord {
             attempt: 2,
@@ -463,6 +502,12 @@ mod tests {
         assert_eq!(back[0].stdout, "partial output\n");
         assert!(back[0].stdout_truncated);
         assert_eq!(back[0].run, 2);
+        assert_eq!(back[0].cpu_secs, 1.75);
+        assert_eq!(back[0].max_rss_kb, 20480);
+        assert_eq!(
+            (back[0].io_read_bytes, back[0].io_write_bytes),
+            (4096, 8192)
+        );
         assert!(back[1].stdout.is_empty());
         assert!(!back[1].stdout_truncated);
     }
@@ -492,6 +537,10 @@ mod tests {
             stdout: String::new(),
             stdout_truncated: false,
             run: 0,
+            cpu_secs: 0.0,
+            max_rss_kb: 0,
+            io_read_bytes: 0,
+            io_write_bytes: 0,
         };
         log.append(&rec).unwrap();
         // simulate a crash mid-append: a truncated JSON fragment
@@ -528,6 +577,10 @@ mod tests {
             stdout: String::new(),
             stdout_truncated: false,
             run: 0,
+            cpu_secs: 0.0,
+            max_rss_kb: 0,
+            io_read_bytes: 0,
+            io_write_bytes: 0,
         };
         log.append(&rec).unwrap();
         assert_eq!(p.next_run_id().unwrap(), 1);
@@ -548,5 +601,9 @@ mod tests {
         let rec = AttemptRecord::from_json(&j).unwrap();
         assert_eq!(rec.run, 0);
         assert!(!rec.stdout_truncated);
+        // pre-telemetry logs read back as all-zero resources
+        assert_eq!(rec.cpu_secs, 0.0);
+        assert_eq!(rec.max_rss_kb, 0);
+        assert_eq!((rec.io_read_bytes, rec.io_write_bytes), (0, 0));
     }
 }

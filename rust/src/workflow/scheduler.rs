@@ -672,6 +672,10 @@ impl<'a> WorkflowScheduler<'a> {
                         stdout: result.stdout.clone(),
                         stdout_truncated: result.stdout_truncated,
                         run: self.run_id,
+                        cpu_secs: result.cpu_secs,
+                        max_rss_kb: result.max_rss_kb,
+                        io_read_bytes: result.io_read_bytes,
+                        io_write_bytes: result.io_write_bytes,
                     });
                 }
                 if let Some(tr) = &self.trace {
@@ -696,6 +700,10 @@ impl<'a> WorkflowScheduler<'a> {
                         start: (t_end - result.duration).max(0.0),
                         end: t_end,
                         class: result.class,
+                        cpu_secs: result.cpu_secs,
+                        max_rss_kb: result.max_rss_kb,
+                        io_read_bytes: result.io_read_bytes,
+                        io_write_bytes: result.io_write_bytes,
                     });
                 }
 
@@ -1233,6 +1241,10 @@ mod tests {
                     MetricValue::Num(1.0),
                     MetricValue::Num(0.0),
                     MetricValue::Str("ok".into()),
+                    MetricValue::Num(0.0),
+                    MetricValue::Num(0.0),
+                    MetricValue::Num(0.0),
+                    MetricValue::Num(0.0),
                 ],
             });
         }

@@ -1,0 +1,141 @@
+//! Golden end-to-end test of `papas doctor`'s diagnosis engine —
+//! hermetic: a diamond workflow (a → {b, c} → d) replayed through a
+//! [`ScriptedExecutor`] on a shared [`ScriptedClock`], traced, then
+//! folded into a [`Diagnosis`]. Every number below is hand-computed
+//! from the scripted durations, and two replays must render
+//! byte-identical `--format json` output.
+
+use papas::exec::{Script, ScriptedExecutor};
+use papas::obs::{self, diagnose, Diagnosis, ScriptedClock};
+use papas::study::Study;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Diamond DAG, one combination: a(1s) → b(4s) + c(2s) → d(1s).
+/// Critical path a→b→d, length 6; c carries 2 s of slack.
+const YAML: &str = "a:\n  command: seed\n  trace: true\n\
+                    b:\n  command: wide\n  after: a\n\
+                    c:\n  command: thin\n  after: a\n\
+                    d:\n  command: join\n  after: [b, c]\n";
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("papas_doctor_e2e").join(tag);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// One hermetic traced run on a single worker (the serial timeline:
+/// makespan is exactly the duration sum, 8 s) and its diagnosis.
+fn diagnose_replay(tag: &str) -> Diagnosis {
+    let dir = tmp(tag);
+    let path = dir.join("study.yaml");
+    std::fs::write(&path, YAML).unwrap();
+    let study = Study::from_file(&path)
+        .unwrap()
+        .with_db_root(dir.join(".papas"));
+    assert!(study.trace, "WDL trace: true must enable tracing");
+    let clock = Arc::new(ScriptedClock::new());
+    let script = Script::new()
+        .duration_on("a", 1.0)
+        .duration_on("b", 4.0)
+        .duration_on("c", 2.0)
+        .duration_on("d", 1.0)
+        .with_resources("b", 3.5, 2048, 1024, 512)
+        .with_clock(clock.clone());
+    let study = study.with_trace_clock(clock);
+    let exec = ScriptedExecutor::new(Arc::new(script), 1);
+    let report = study.run_with(&exec).unwrap();
+    assert_eq!(report.completed, 4);
+    let events =
+        obs::read_trace(&obs::trace_path(&study.db_root, 0)).unwrap();
+    let dag = study.instance_at_naive(0).unwrap().dag;
+    diagnose(&events, &dag)
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() < 1e-9
+}
+
+#[test]
+fn diamond_run_yields_the_hand_computed_diagnosis() {
+    let diag = diagnose_replay("gold");
+    assert_eq!(diag.workers, 1);
+    assert!(close(diag.makespan, 8.0), "makespan={}", diag.makespan);
+
+    // Critical path: a(1) → b(4) → d(1) = 6 s; c has 6 − 4 = 2 s slack.
+    assert_eq!(diag.instances.len(), 1);
+    let inst = &diag.instances[0];
+    assert_eq!(inst.critical_path, vec!["a", "b", "d"]);
+    assert!(close(inst.critical_len, 6.0), "len={}", inst.critical_len);
+    assert!(close(inst.slack["a"], 0.0));
+    assert!(close(inst.slack["b"], 0.0));
+    assert!(close(inst.slack["c"], 2.0), "slack c={}", inst.slack["c"]);
+    assert!(close(inst.slack["d"], 0.0));
+
+    // Attribution: 8 worker-seconds = 6 critical + 2 off-critical,
+    // nothing wasted, and the five buckets must sum exactly.
+    let at = &diag.attribution;
+    assert!(close(at.total_worker_secs, 8.0));
+    assert!(close(at.critical_compute, 6.0));
+    assert!(close(at.other_compute, 2.0));
+    assert!(close(at.retry_waste, 0.0));
+    assert!(close(at.scheduler_overhead, 0.0));
+    assert!(close(at.idle, 0.0));
+    let sum = at.critical_compute
+        + at.other_compute
+        + at.retry_waste
+        + at.scheduler_overhead
+        + at.idle;
+    assert!(
+        close(sum, at.total_worker_secs),
+        "buckets sum to {sum}, total is {}",
+        at.total_worker_secs
+    );
+
+    // Scripted resource telemetry flows into the per-task table.
+    let b = diag.tasks.iter().find(|t| t.task_id == "b").unwrap();
+    assert_eq!(b.n, 1);
+    assert_eq!(b.on_critical, 1);
+    assert!(close(b.mean_secs, 4.0));
+    assert!(close(b.mean_cpu_secs, 3.5), "cpu={}", b.mean_cpu_secs);
+    assert!(close(b.mean_rss_kb, 2048.0), "rss={}", b.mean_rss_kb);
+    let c = diag.tasks.iter().find(|t| t.task_id == "c").unwrap();
+    assert_eq!(c.on_critical, 0);
+    assert!(close(c.mean_rss_kb, 0.0), "c is unsampled");
+
+    // What-if: halving b on one worker replays 1+2+2+1 = 6 s, a 25%
+    // win over the 8 s serial baseline; halving c only saves 1 s.
+    let wb = diag.what_if.iter().find(|w| w.task_id == "b").unwrap();
+    assert!(close(wb.baseline, 8.0), "baseline={}", wb.baseline);
+    assert!(close(wb.scaled, 6.0), "scaled={}", wb.scaled);
+    assert!(close(wb.speedup_pct, 25.0), "pct={}", wb.speedup_pct);
+    let wc = diag.what_if.iter().find(|w| w.task_id == "c").unwrap();
+    assert!(close(wc.scaled, 7.0), "scaled={}", wc.scaled);
+}
+
+#[test]
+fn two_replays_render_byte_identical_json() {
+    let a = papas::json::to_string(&diagnose_replay("stable_a").to_json());
+    let b = papas::json::to_string(&diagnose_replay("stable_b").to_json());
+    assert_eq!(a, b, "doctor --format json must be byte-stable");
+    assert!(
+        a.contains("\"critical_path\":[\"a\",\"b\",\"d\"]"),
+        "{a}"
+    );
+    assert!(a.contains("\"workers\":1"), "{a}");
+}
+
+#[test]
+fn text_report_names_the_bottleneck_and_the_partition() {
+    let diag = diagnose_replay("text");
+    let text = diag.render_text();
+    assert!(text.contains("makespan 8.00 s on 1 workers"), "{text}");
+    assert!(text.contains("bottleneck attribution"), "{text}");
+    // 6 of 8 worker-seconds on the critical path, 2 off it.
+    assert!(text.contains("75.0%"), "{text}");
+    assert!(text.contains("25.0%"), "{text}");
+    assert!(text.contains("a -> b -> d"), "{text}");
+    assert!(text.contains("slack: c 2.00 s"), "{text}");
+    assert!(text.contains("what-if"), "{text}");
+}

@@ -163,6 +163,33 @@ fn untraced_runs_write_no_journal_and_no_metrics() {
 }
 
 #[test]
+fn dropping_a_sink_mid_run_flushes_buffered_events() {
+    let dir = tmp("drop_flush");
+    let path = obs::trace_path(&dir, 0);
+    let clock = Arc::new(ScriptedClock::new());
+    let sink = obs::TraceSink::create(&path, clock).unwrap();
+    sink.emit(&obs::TraceEvent::Header {
+        run: 0,
+        study: "drop".into(),
+        workers: 1,
+        n_instances: 1,
+        epoch_unix: 0.0,
+    });
+    sink.emit(&obs::TraceEvent::Dispatch {
+        key: "job#0".into(),
+        instance: 0,
+    });
+    // Simulate an interrupted run: the sink goes out of scope without
+    // the end-of-run flush. Drop must push the buffered lines to disk,
+    // or a killed run would journal nothing at all.
+    drop(sink);
+    let events = obs::read_trace(&path).unwrap();
+    assert_eq!(events.len(), 2, "Drop must flush buffered journal lines");
+    assert_eq!(events[0].expect_str("ev").unwrap(), "header");
+    assert_eq!(events[1].expect_str("ev").unwrap(), "dispatch");
+}
+
+#[test]
 fn trace_builder_journals_runs_under_successive_ids() {
     let study = study(
         "flag",

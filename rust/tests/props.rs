@@ -734,6 +734,10 @@ fn sweep_with_model(
                 MetricValue::Num(1.0),
                 MetricValue::Num(0.0),
                 MetricValue::Str("ok".into()),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
+                MetricValue::Num(0.0),
             ],
         });
     }

@@ -77,6 +77,10 @@ fn arb_fixture(g: &mut Gen) -> Fixture {
             MetricValue::Num(1.0),
             MetricValue::Num(0.0),
             MetricValue::Str("ok".into()),
+            MetricValue::Num(0.0),
+            MetricValue::Num(0.0),
+            MetricValue::Num(0.0),
+            MetricValue::Num(0.0),
             MetricValue::Missing,
         ];
         values[score_col] = match score {
